@@ -1,0 +1,171 @@
+//! PageRank two ways (§9.2.2 / Fig. 7 workload):
+//!
+//! 1. **Accelerated**: the rank update is the AOT-compiled Pallas kernel
+//!    (`artifacts/pagerank_step.hlo.txt`), driven from inside a Labyrinth
+//!    loop. The loop-invariant edge bag is tensorized once and cached on
+//!    the XLA service (§7 state reuse on a tensor operator).
+//! 2. **Pure dataflow**: the same fixpoint as join/reduceByKey operators —
+//!    the shape Flink/Spark programs use; validated against the reference.
+//!
+//!   make artifacts && cargo run --release --example pagerank -- [n] [iters] [workers]
+
+use labyrinth::prelude::*;
+use labyrinth::runtime::XlaCallSpec;
+use labyrinth::util::fmt_duration;
+use labyrinth::workload::pagerank_reference;
+
+fn build_graph(n: usize) -> Vec<(usize, usize)> {
+    // Ring + skip links + a few hubs: strongly connected, no danglings.
+    let mut edges = Vec::new();
+    for i in 0..n {
+        edges.push((i, (i + 1) % n));
+        edges.push((i, (i * 7 + 3) % n));
+        if i % 11 == 0 {
+            edges.push((i, 0));
+        }
+    }
+    edges
+}
+
+fn main() -> labyrinth::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().map(|s| s.parse().unwrap()).unwrap_or(512);
+    let iters: i64 = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(20);
+    let workers: usize = args.get(2).map(|s| s.parse().unwrap()).unwrap_or(4);
+
+    let edges = build_graph(n);
+    let reference = pagerank_reference(&edges, n, iters as usize);
+    let edge_vals: Vec<Value> = edges
+        .iter()
+        .map(|&(s, d)| Value::pair(Value::I64(s as i64), Value::I64(d as i64)))
+        .collect();
+    labyrinth::workload::registry::global().put("pr_edges", edge_vals);
+    let init: Vec<Value> = (0..n)
+        .map(|p| Value::pair(Value::I64(p as i64), Value::F64(1.0 / n as f64)))
+        .collect();
+
+    // ---- variant 1: accelerated (XLA artifact inside the loop) ----------
+    let accelerated = labyrinth::runtime::XlaService::global().available("pagerank_step")
+        && n == 512; // artifact is compiled for the static shape n=512
+    let mut results = Vec::new();
+    if accelerated {
+        let mut b = ProgramBuilder::new();
+        let edges_bag = b.named_source("pr_edges");
+        let r0 = b.bag_lit(init.clone());
+        let ranks = b.declare_bag("ranks", r0);
+        let zero = b.scalar_i64(0);
+        let i = b.declare_scalar("i", zero);
+        b.while_(
+            |b| b.scalar_lt_i64(i, iters),
+            |b| {
+                let next = b.xla_call(vec![edges_bag, ranks], XlaCallSpec::pagerank_step(n));
+                b.assign_bag(ranks, next);
+                let i2 = b.scalar_add_i64(i, 1);
+                b.assign_scalar(i, i2);
+            },
+        );
+        b.collect(ranks, "ranks");
+        let graph = labyrinth::compile(&b.finish())?;
+        let t = std::time::Instant::now();
+        let out = run(&graph, &ExecConfig { workers, ..Default::default() })?;
+        let wall = t.elapsed();
+        check(&out.collected("ranks"), &reference, 1e-3, "accelerated");
+        results.push(("labyrinth + pallas artifact", wall));
+    } else {
+        println!("(skipping accelerated variant: run `make artifacts` and use n=512)");
+    }
+
+    // ---- variant 2: pure dataflow fixpoint -------------------------------
+    // contribs = ranks join out-degree'd edges -> per-target shares;
+    // next = reduceByKey(+) with teleport. Expressed via the builder.
+    let mut outdeg = vec![0i64; n];
+    for &(s, _) in &edges {
+        outdeg[s] += 1;
+    }
+    let adj: Vec<Value> = edges
+        .iter()
+        .map(|&(s, d)| {
+            Value::pair(
+                Value::I64(s as i64),
+                Value::pair(Value::I64(d as i64), Value::F64(1.0 / outdeg[s] as f64)),
+            )
+        })
+        .collect();
+    labyrinth::workload::registry::global().put("pr_adj", adj);
+    let damping = 0.85;
+    let teleport = (1.0 - damping) / n as f64;
+
+    let mut b = ProgramBuilder::new();
+    let adj_bag = b.named_source("pr_adj");
+    let r0 = b.bag_lit(init);
+    let ranks = b.declare_bag("ranks", r0);
+    let zero = b.scalar_i64(0);
+    let i = b.declare_scalar("i", zero);
+    b.while_(
+        |b| b.scalar_lt_i64(i, iters),
+        |b| {
+            // join adjacency (build, invariant) with ranks (probe) on page.
+            let joined = b.join(adj_bag, ranks);
+            // (page, ((dst, w), rank)) -> (dst, damping * rank * w)
+            let contribs = b.map(
+                joined,
+                udf1(move |v| {
+                    let kv = v.val(); // ((dst, w), rank)
+                    let dst_w = kv.key();
+                    let rank = kv.val().as_f64();
+                    Value::pair(
+                        dst_w.key().clone(),
+                        Value::F64(damping * rank * dst_w.val().as_f64()),
+                    )
+                }),
+            );
+            let summed = b.reduce_by_key(
+                contribs,
+                udf2(|a, c| Value::F64(a.as_f64() + c.as_f64())),
+            );
+            // add teleport everywhere (pages always have in-links here).
+            let next = b.map(
+                summed,
+                udf1(move |v| {
+                    Value::pair(v.key().clone(), Value::F64(v.val().as_f64() + teleport))
+                }),
+            );
+            b.assign_bag(ranks, next);
+            let i2 = b.scalar_add_i64(i, 1);
+            b.assign_scalar(i, i2);
+        },
+    );
+    b.collect(ranks, "ranks");
+    let graph = labyrinth::compile(&b.finish())?;
+    let t = std::time::Instant::now();
+    let out = run(&graph, &ExecConfig { workers, ..Default::default() })?;
+    let wall = t.elapsed();
+    check(&out.collected("ranks"), &reference, 1e-6, "pure dataflow");
+    println!(
+        "join build-side reuses across steps: {}",
+        out.metrics.get("coord.state_reused")
+    );
+    results.push(("labyrinth pure dataflow", wall));
+
+    println!("\n== PageRank n={n}, {iters} iterations, {workers} workers ==");
+    for (name, wall) in results {
+        println!("{name:<28} {}", fmt_duration(wall));
+    }
+    Ok(())
+}
+
+fn check(got_bag: &[Value], want: &[f64], tol: f64, label: &str) {
+    let n = want.len();
+    assert_eq!(got_bag.len(), n, "{label}: rank count");
+    let mut got = vec![0.0; n];
+    for v in got_bag {
+        got[v.key().as_i64() as usize] = v.val().as_f64();
+    }
+    let max_err = got
+        .iter()
+        .zip(want)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_err < tol, "{label}: max rank error {max_err} > {tol}");
+    println!("{label}: matches reference (max err {max_err:.2e})");
+}

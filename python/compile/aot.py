@@ -1,0 +1,89 @@
+"""AOT exporter: lower the L2 models (wrapping L1 Pallas kernels) to HLO
+**text** artifacts the Rust runtime loads via `HloModuleProto::from_text_file`.
+
+Text — not `.serialize()` — is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the pinned xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts        # all artifacts
+    python -m compile.aot --only histogram --out-dir ...
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_specs():
+    """name -> (fn, example argument shapes)."""
+    n = shapes.PAGERANK_N
+    return {
+        "pagerank_step": (
+            model.pagerank_step_model,
+            (
+                jax.ShapeDtypeStruct((n, n), jnp.float32),
+                jax.ShapeDtypeStruct((n,), jnp.float32),
+            ),
+        ),
+        "histogram": (
+            model.histogram_model,
+            (jax.ShapeDtypeStruct((shapes.HIST_CAPACITY,), jnp.int32),),
+        ),
+        "incr": (
+            model.incr_model,
+            (jax.ShapeDtypeStruct((shapes.INCR_CAPACITY,), jnp.float32),),
+        ),
+    }
+
+
+def export(name, fn, args, out_dir):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"aot: wrote {path} ({len(text)} chars)")
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", action="append", help="export only these artifacts")
+    ap.add_argument("--list", action="store_true", help="list artifact names")
+    args = ap.parse_args(argv)
+
+    specs = artifact_specs()
+    if args.list:
+        print("\n".join(specs))
+        return 0
+    names = args.only or list(specs)
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name in names:
+        if name not in specs:
+            print(f"aot: unknown artifact {name!r} (have: {', '.join(specs)})")
+            return 1
+        fn, shapes_ = specs[name]
+        export(name, fn, shapes_, args.out_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: dense integer histogram (the Visit Count hot spot).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): instead of scalar
+scatter-adds (a GPU-atomics idiom), counting is expressed as a one-hot
+comparison tile contracted against ones — an MXU-friendly matmul shape.
+The id stream is tiled with ``BlockSpec`` into ``(chunk,)`` slices; each
+grid step materializes a ``(chunk, bins)`` one-hot tile in VMEM and
+accumulates into the single ``(bins,)`` output block (all grid steps map
+to output block 0, the standard Pallas reduction pattern).
+
+Out-of-range ids — including the ``-1`` padding the Rust bridge uses —
+match no bin and are counted nowhere.
+
+VMEM per grid step (f32): chunk * bins = 512 * 2048 ~= 4 MiB (defaults).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ids_ref, o_ref, *, bins, chunk):
+    step = pl.program_id(0)
+    ids = ids_ref[...]
+    one_hot = (
+        ids[:, None] == jax.lax.broadcasted_iota(jnp.int32, (chunk, bins), 1)
+    ).astype(jnp.float32)
+    # ones(1, chunk) @ one_hot(chunk, bins): counting on the MXU.
+    tile_counts = jnp.dot(
+        jnp.ones((chunk,), jnp.float32), one_hot, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = tile_counts
+
+    @pl.when(step != 0)
+    def _acc():
+        o_ref[...] += tile_counts
+
+
+def histogram(ids, *, bins, chunk=512, interpret=True):
+    """Count ids in [0, bins) into dense f32 bins."""
+    capacity = ids.shape[0]
+    if capacity % chunk != 0:
+        raise ValueError(f"capacity={capacity} must be a multiple of chunk={chunk}")
+    return pl.pallas_call(
+        functools.partial(_kernel, bins=bins, chunk=chunk),
+        grid=(capacity // chunk,),
+        in_specs=[pl.BlockSpec((chunk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((bins,), jnp.float32),
+        interpret=interpret,
+    )(ids)

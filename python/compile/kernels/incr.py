@@ -1,0 +1,26 @@
+"""L1 Pallas kernel: elementwise increment — the Fig. 5 microbench map
+(`bag.map(x => x + 1)`) as an AOT artifact, so the iteration-step-overhead
+experiment can also run its per-step compute through the PJRT path."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1.0
+
+
+def incr(x, *, block=128, interpret=True):
+    """x + 1 over a 1-D f32 vector, tiled into VPU-friendly blocks."""
+    n = x.shape[0]
+    if n % block != 0:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: one damped PageRank power-iteration step.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the step is tiled with
+``BlockSpec`` so each grid step holds one ``(block_rows, n)`` slab of the
+transition matrix in VMEM and produces a ``block_rows`` rank tile via an
+MXU matvec. Under ``interpret=True`` this executes as plain HLO, which is
+what the CPU PJRT plugin (and therefore the Rust runtime) runs; on a real
+TPU the same BlockSpec schedule drives the HBM->VMEM pipeline.
+
+VMEM footprint per grid step (f32):
+    block_rows * n + n + block_rows  floats
+    = 128 * 512 + 512 + 128  ~= 0.26 MiB   (default shapes)
+comfortably double-bufferable within the ~16 MiB VMEM budget; see
+EXPERIMENTS.md §Perf for the block-size sweep.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(m_ref, r_ref, o_ref, *, damping, n):
+    # One (block_rows, n) slab of M against the full rank vector: an MXU
+    # matvec accumulated in f32, plus the uniform teleport term.
+    o_ref[...] = damping * jnp.dot(
+        m_ref[...], r_ref[...], preferred_element_type=jnp.float32
+    ) + (1.0 - damping) / n
+
+
+def pagerank_step(m, r, *, damping=0.85, block_rows=128, interpret=True):
+    """rank' = damping * M @ rank + (1 - damping) / n, tiled over rows."""
+    n = r.shape[0]
+    if n % block_rows != 0:
+        raise ValueError(f"n={n} must be a multiple of block_rows={block_rows}")
+    return pl.pallas_call(
+        functools.partial(_kernel, damping=damping, n=n),
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(m, r)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness specification
+every kernel is tested against (pytest + hypothesis sweeps)."""
+
+import jax.numpy as jnp
+
+
+def pagerank_step_ref(m, r, damping=0.85):
+    """One damped power-iteration step: damping * M @ r + (1-d)/n.
+
+    ``m`` is the column-stochastic transition matrix (dangling columns
+    already uniform — the Rust bridge builds it that way).
+    """
+    n = r.shape[0]
+    return damping * (m @ r) + (1.0 - damping) / n
+
+
+def histogram_ref(ids, bins):
+    """Count int32 ids into ``bins`` dense f32 bins; out-of-range ids
+    (including the -1 padding the Rust bridge uses) are ignored."""
+    valid = (ids >= 0) & (ids < bins)
+    return jnp.where(
+        jnp.arange(bins)[None, :] == jnp.where(valid, ids, -1)[:, None], 1.0, 0.0
+    ).sum(axis=0)
+
+
+def incr_ref(x):
+    """Elementwise x + 1 (the paper's Fig. 5 microbench map UDF)."""
+    return x + 1.0

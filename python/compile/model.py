@@ -1,0 +1,44 @@
+"""L2: the JAX compute graphs exported as AOT artifacts. Each model wraps
+an L1 Pallas kernel (so the kernel lowers into the same HLO module) plus
+any surrounding jnp glue; `aot.py` lowers these once to HLO text and the
+Rust runtime executes them forever after.
+
+Build-time only — never imported on the request path.
+"""
+
+import jax.numpy as jnp
+
+from . import shapes
+from .kernels import histogram as histogram_kernel
+from .kernels import incr as incr_kernel
+from .kernels import pagerank as pagerank_kernel
+
+
+def pagerank_step_model(m, r):
+    """One damped PageRank step with L1-normalization guard.
+
+    The normalization keeps the rank vector a distribution even under f32
+    accumulation drift across hundreds of steps (the Rust inner loop can
+    run the artifact repeatedly without host-side renormalization).
+    """
+    nxt = pagerank_kernel.pagerank_step(
+        m,
+        r,
+        damping=shapes.PAGERANK_DAMPING,
+        block_rows=shapes.PAGERANK_BLOCK_ROWS,
+    )
+    return (nxt / jnp.sum(nxt),)
+
+
+def histogram_model(ids):
+    """Dense visit-count histogram over int32 page ids."""
+    return (
+        histogram_kernel.histogram(
+            ids, bins=shapes.HIST_BINS, chunk=shapes.HIST_CHUNK
+        ),
+    )
+
+
+def incr_model(x):
+    """Elementwise x + 1 (Fig. 5 microbench map)."""
+    return (incr_kernel.incr(x),)

@@ -1,0 +1,19 @@
+"""Static artifact shapes shared by the L1 kernels, the L2 models, the AOT
+exporter, and (by convention — see DESIGN.md §7) the Rust bridge.
+
+PJRT executables are compiled for fixed shapes; the Rust side pads bags to
+these capacities and truncates outputs.
+"""
+
+# PageRank: dense damped power-iteration step over an n x n transition matrix.
+PAGERANK_N = 512
+PAGERANK_BLOCK_ROWS = 128  # VMEM tile height for the Pallas kernel
+PAGERANK_DAMPING = 0.85
+
+# Visit-count histogram: count int32 page ids into dense bins.
+HIST_CAPACITY = 4096  # ids per artifact invocation (Rust chunks larger bags)
+HIST_BINS = 2048
+HIST_CHUNK = 512  # ids per Pallas grid step (one-hot tile height)
+
+# Elementwise increment (Fig. 5 microbench map as an artifact).
+INCR_CAPACITY = 256

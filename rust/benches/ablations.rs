@@ -1,0 +1,111 @@
+//! Design-choice ablations called out in DESIGN.md:
+//!
+//! 1. **Path-encoding cost** (§6.3.1): transmitting bag IDs as path
+//!    *lengths* with incremental block broadcasts is O(1) per block; the
+//!    naive alternative (full path attached to every bag ID) is O(n) per
+//!    bag and O(n²) total. We measure both encodings directly.
+//! 2. **Batch size**: element batching on the simulated network vs
+//!    per-element sends (the engine's hot-path knob).
+//! 3. **Condition-node decision latency**: per-step coordination cost of
+//!    the Labyrinth engine on an empty loop (the floor for Fig. 5).
+
+use labyrinth::bench_harness::{Bencher, Table};
+use labyrinth::coord::ExecPath;
+use labyrinth::exec::ExecConfig;
+use labyrinth::frontend::builder::ProgramBuilder;
+use labyrinth::programs;
+use std::time::Instant;
+
+fn main() {
+    let bench = Bencher::from_env(1, 5);
+
+    // ---- 1. path encoding ------------------------------------------------
+    let mut table = Table::new(
+        "Ablation 1: execution-path encoding (work to track n appends)",
+        "path length",
+        vec!["incremental O(1)/block".into(), "naive full-path/bag".into()],
+    );
+    for n in [100usize, 1_000, 10_000] {
+        let inc = bench.run(format!("incremental n={n}"), || {
+            let mut p = ExecPath::new(4);
+            p.append(0, &[0], false);
+            for i in 1..n {
+                // One block broadcast + one occurrence-index update.
+                p.append(i, &[1 + (i % 2)], false);
+            }
+            std::hint::black_box(p.len());
+        });
+        let naive = bench.run(format!("naive n={n}"), || {
+            // Naive: every new bag ID carries the whole path (clone).
+            let mut path: Vec<usize> = vec![0];
+            let mut total = 0usize;
+            for i in 1..n {
+                path.push(1 + (i % 2));
+                let bag_id: Vec<usize> = path.clone(); // shipped per bag
+                // Consume the whole id so the clone cannot be elided
+                // (a real system would serialize all of it).
+                total = total.wrapping_add(bag_id.iter().sum::<usize>());
+                std::hint::black_box(&bag_id);
+            }
+            std::hint::black_box(total);
+        });
+        table.push_row(n.to_string(), vec![Some(inc.median()), Some(naive.median())]);
+    }
+    table.print();
+
+    // ---- 2. batch size -----------------------------------------------------
+    let program = programs::visit_count(10, "abl_");
+    labyrinth::workload::VisitCountWorkload {
+        days: 10,
+        visits_per_day: 5_000,
+        num_pages: 500,
+        ..Default::default()
+    }
+    .register("abl_");
+    let graph = labyrinth::compile(&program).unwrap();
+    let mut table = Table::new(
+        "Ablation 2: element batch size (Visit Count, 4 workers)",
+        "batch",
+        vec!["labyrinth".into()],
+    );
+    for batch in [1usize, 16, 64, 256, 1024] {
+        let m = bench.run(format!("batch={batch}"), || {
+            labyrinth::exec::run(
+                &graph,
+                &ExecConfig { workers: 4, batch, ..Default::default() },
+            )
+            .unwrap();
+        });
+        table.push_row(batch.to_string(), vec![Some(m.median())]);
+    }
+    table.print();
+
+    // ---- 3. pure coordination floor ----------------------------------------
+    // An empty loop: only the lifted counter, condition node, decision
+    // round-trips, and Φ — the minimal per-step coordination cost.
+    let steps = 2_000i64;
+    let mut b = ProgramBuilder::new();
+    let zero = b.scalar_i64(0);
+    let i = b.declare_scalar("i", zero);
+    b.while_(
+        |b| b.scalar_lt_i64(i, steps),
+        |b| {
+            let i2 = b.scalar_add_i64(i, 1);
+            b.assign_scalar(i, i2);
+        },
+    );
+    let out = b.lift_scalar(i);
+    b.collect(out, "i");
+    let graph = labyrinth::compile(&b.finish()).unwrap();
+    let t = Instant::now();
+    let res = labyrinth::exec::run(&graph, &ExecConfig { workers: 4, ..Default::default() })
+        .unwrap();
+    let wall = t.elapsed();
+    println!(
+        "Ablation 3: empty-loop coordination floor: {steps} steps in {}, {:?}/step \
+         (path length {})",
+        labyrinth::util::fmt_duration(wall),
+        wall / steps as u32,
+        res.path_len
+    );
+}

@@ -1,0 +1,55 @@
+//! Fig. 4 — scheduling-overhead microbenchmark: the cost of launching one
+//! minimal dataflow job (a parallel collection only, no I/O) as a function
+//! of worker count, for the Spark-like and Flink-like scheduler models,
+//! vs Labyrinth's one-time job launch.
+//!
+//! Paper result: linear growth, reaching 254 ms (Spark) / 376 ms (Flink)
+//! at 25 workers. Our substrate uses µs-scale RPC latencies (DESIGN.md §2)
+//! so absolute numbers are ~1000× smaller; the *linearity* and the
+//! Spark-vs-Flink ordering are the reproduction targets.
+
+use labyrinth::bench_harness::{Bencher, Table};
+use labyrinth::sched::LatencyModel;
+
+fn main() {
+    let workers = [1usize, 2, 5, 10, 15, 20, 25];
+    let bench = Bencher::from_env(2, 9);
+    // The minimal job: one operator (the parallel collection).
+    let ops = 1;
+
+    let mut table = Table::new(
+        "Fig 4: per-job scheduling overhead (minimal job, 1 operator)",
+        "workers",
+        vec!["spark-like".into(), "flink-like".into()],
+    );
+    let spark = LatencyModel::spark_like();
+    let flink = LatencyModel::flink_like();
+    let mut samples = Vec::new();
+    for &w in &workers {
+        let ms = bench.run(format!("spark-like w={w}"), || {
+            spark.simulate_job_launch(ops, w);
+        });
+        let mf = bench.run(format!("flink-like w={w}"), || {
+            flink.simulate_job_launch(ops, w);
+        });
+        samples.push((w, ms.median(), mf.median()));
+        table.push_row(w.to_string(), vec![Some(ms.median()), Some(mf.median())]);
+    }
+    table.print();
+
+    // Linearity check (paper: "increased linearly"): compare the measured
+    // growth from 5 to 25 workers with the ideal 5x of the variable part.
+    let at = |w: usize| samples.iter().find(|(x, _, _)| *x == w).unwrap();
+    let (_, s5, f5) = at(5);
+    let (_, s25, f25) = at(25);
+    println!(
+        "growth 5->25 workers: spark {:.2}x, flink {:.2}x (variable part ideal: 5x)",
+        s25.as_secs_f64() / s5.as_secs_f64(),
+        f25.as_secs_f64() / f5.as_secs_f64()
+    );
+    println!(
+        "modelled at 25 workers: spark {:?}, flink {:?} (paper: 254 ms / 376 ms on real GbE)",
+        spark.job_launch_cost(ops, 25),
+        flink.job_launch_cost(ops, 25)
+    );
+}

@@ -1,0 +1,134 @@
+//! Fig. 5 — iteration-step-overhead microbenchmark (log-log in the paper):
+//! a loop of `bag.map(x => x + 1)` over a 200-element bag, with a pipeline
+//! breaker per step, under five implementations:
+//!
+//!   * separate jobs, Spark-like        (new job every step)
+//!   * separate jobs, Flink-like        (new job + collect-to-driver)
+//!   * fixpoint supersteps (Flink/Naiad in-dataflow iterate)
+//!   * Labyrinth                        (single cyclic job, §6 coordination)
+//!   * Labyrinth + XLA artifact map     (per-step compute through PJRT)
+//!
+//! Paper result: the separate-jobs lines sit ~2 orders of magnitude above
+//! the in-dataflow cluster (Flink-iterate ≈ Naiad ≈ TensorFlow ≈
+//! Labyrinth). The reproduction target is that gap and the near-constant
+//! per-step cost of the in-dataflow implementations.
+
+use labyrinth::baselines::{fixpoint, separate_jobs};
+use labyrinth::bench_harness::{Bencher, Table};
+use labyrinth::exec::{ExecConfig, ExecMode};
+use labyrinth::programs;
+use labyrinth::value::Value;
+use std::sync::Arc;
+use std::time::Duration;
+
+const WORKERS: usize = 4;
+const BAG: usize = 200;
+
+fn main() {
+    let steps_sweep: Vec<i64> = if std::env::var("LABY_BENCH_QUICK").is_ok() {
+        vec![10, 50, 100]
+    } else {
+        vec![10, 30, 100, 300, 1000]
+    };
+    let bench = Bencher::from_env(1, 5);
+
+    let series = vec![
+        "spark-sep".to_string(),
+        "flink-sep".to_string(),
+        "fixpoint-superstep".to_string(),
+        "labyrinth".to_string(),
+        "labyrinth-barrier".to_string(),
+    ];
+    let mut table = Table::new(
+        "Fig 5: time per run vs iteration steps (200-element bag, 4 workers)",
+        "steps",
+        series.clone(),
+    );
+
+    let mut per_step: Vec<(String, Duration, Duration)> = Vec::new();
+    let mut firsts: Vec<Vec<Duration>> = vec![Vec::new(); series.len()];
+
+    for &steps in &steps_sweep {
+        let program = programs::step_overhead_microbench(steps, BAG);
+        let mut cells = Vec::new();
+
+        // Separate jobs.
+        let m = bench.run(format!("spark-sep steps={steps}"), || {
+            let cfg = separate_jobs::SeparateJobsConfig::spark(WORKERS);
+            separate_jobs::run(&program, &cfg).unwrap();
+        });
+        cells.push(Some(m.median()));
+        firsts[0].push(m.median());
+        let m = bench.run(format!("flink-sep steps={steps}"), || {
+            let cfg = separate_jobs::SeparateJobsConfig::flink(WORKERS);
+            separate_jobs::run(&program, &cfg).unwrap();
+        });
+        cells.push(Some(m.median()));
+        firsts[1].push(m.median());
+
+        // Fixpoint supersteps (map + keyed keep-first as pipeline breaker).
+        let initial: Vec<Value> = (0..BAG as i64)
+            .map(|k| Value::pair(Value::I64(k % 64), Value::I64(k)))
+            .collect();
+        let spec = fixpoint::StepSpec {
+            scatter: Arc::new(|v: &Value, _| {
+                let Value::Pair(p) = v else { unreachable!() };
+                vec![Value::pair(p.0.clone(), Value::I64(p.1.as_i64() + 1))]
+            }),
+            combine: Some(labyrinth::frontend::Udf2::new("keep", |a, _b| a.clone())),
+        };
+        let m = bench.run(format!("fixpoint steps={steps}"), || {
+            fixpoint::Fixpoint::new(WORKERS).run(initial.clone(), steps as usize, &spec);
+        });
+        cells.push(Some(m.median()));
+        firsts[2].push(m.median());
+
+        // Labyrinth (single cyclic job).
+        let graph = labyrinth::compile(&program).unwrap();
+        let m = bench.run(format!("labyrinth steps={steps}"), || {
+            labyrinth::exec::run(
+                &graph,
+                &ExecConfig { workers: WORKERS, ..Default::default() },
+            )
+            .unwrap();
+        });
+        cells.push(Some(m.median()));
+        firsts[3].push(m.median());
+
+        let m = bench.run(format!("labyrinth-barrier steps={steps}"), || {
+            labyrinth::exec::run(
+                &graph,
+                &ExecConfig { workers: WORKERS, mode: ExecMode::Barrier, ..Default::default() },
+            )
+            .unwrap();
+        });
+        cells.push(Some(m.median()));
+        firsts[4].push(m.median());
+
+        table.push_row(steps.to_string(), cells);
+    }
+    table.print();
+
+    // Derived per-step overhead: slope between the smallest and largest
+    // sweep points (removes constant startup cost).
+    println!("== per-step overhead (slope between extremes) ==");
+    let lo = steps_sweep[0] as f64;
+    let hi = *steps_sweep.last().unwrap() as f64;
+    for (i, name) in series.iter().enumerate() {
+        let t_lo = firsts[i].first().unwrap().as_secs_f64();
+        let t_hi = firsts[i].last().unwrap().as_secs_f64();
+        let slope = ((t_hi - t_lo) / (hi - lo)).max(0.0);
+        per_step.push((
+            name.clone(),
+            Duration::from_secs_f64(slope),
+            Duration::from_secs_f64(t_hi),
+        ));
+        println!("{name:<22} {:>12}/step", labyrinth::util::fmt_duration(Duration::from_secs_f64(slope)));
+    }
+    let sep = per_step[0].1.as_secs_f64().min(per_step[1].1.as_secs_f64());
+    let laby = per_step[3].1.as_secs_f64().max(1e-9);
+    println!(
+        "separate-jobs / labyrinth per-step ratio: {:.0}x (paper: ~2 orders of magnitude)",
+        sep / laby
+    );
+}

@@ -1,0 +1,158 @@
+//! The `Bag` parallel-collection abstraction (§2.3 of the paper).
+//!
+//! A bag is an unordered multiset of [`Value`]s. During distributed
+//! execution bags only exist as *partitions* streaming through operator
+//! instances; this materialized form is used by sources, sinks, the
+//! single-threaded baseline, tests, and the tensor bridge.
+
+use crate::value::Value;
+use rustc_hash::FxHashMap;
+
+/// A materialized multiset of values.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Bag {
+    items: Vec<Value>,
+}
+
+impl Bag {
+    /// An empty bag.
+    pub fn new() -> Bag {
+        Bag { items: Vec::new() }
+    }
+
+    /// Build a bag from items.
+    pub fn from_vec(items: Vec<Value>) -> Bag {
+        Bag { items }
+    }
+
+    /// A one-element bag — the lifted form of a scalar (§5.2).
+    pub fn singleton(v: Value) -> Bag {
+        Bag { items: vec![v] }
+    }
+
+    /// Number of elements (with multiplicity).
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True if the bag holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Append an element.
+    pub fn push(&mut self, v: Value) {
+        self.items.push(v);
+    }
+
+    /// Borrow the backing items (unspecified order).
+    pub fn items(&self) -> &[Value] {
+        &self.items
+    }
+
+    /// Consume into the backing items (unspecified order).
+    pub fn into_items(self) -> Vec<Value> {
+        self.items
+    }
+
+    /// The single element of a singleton bag (lifted scalar).
+    ///
+    /// Errors if the bag does not contain exactly one element — a lifted
+    /// scalar must always be a one-element bag.
+    pub fn expect_singleton(&self) -> crate::Result<&Value> {
+        if self.items.len() == 1 {
+            Ok(&self.items[0])
+        } else {
+            Err(crate::Error::exec(format!(
+                "expected singleton bag, got {} elements",
+                self.items.len()
+            )))
+        }
+    }
+
+    /// Multiset equality: same elements with same multiplicities,
+    /// irrespective of internal order. This is the correctness notion used
+    /// by every cross-executor equivalence test.
+    pub fn multiset_eq(&self, other: &Bag) -> bool {
+        if self.items.len() != other.items.len() {
+            return false;
+        }
+        let mut counts: FxHashMap<&Value, i64> = FxHashMap::default();
+        for v in &self.items {
+            *counts.entry(v).or_insert(0) += 1;
+        }
+        for v in &other.items {
+            match counts.get_mut(v) {
+                Some(c) => *c -= 1,
+                None => return false,
+            }
+        }
+        counts.values().all(|&c| c == 0)
+    }
+
+    /// A canonically sorted copy (for diffing / display in tests).
+    pub fn sorted(&self) -> Vec<Value> {
+        let mut v = self.items.clone();
+        v.sort();
+        v
+    }
+}
+
+impl FromIterator<Value> for Bag {
+    fn from_iter<T: IntoIterator<Item = Value>>(iter: T) -> Self {
+        Bag { items: iter.into_iter().collect() }
+    }
+}
+
+impl IntoIterator for Bag {
+    type Item = Value;
+    type IntoIter = std::vec::IntoIter<Value>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.items.into_iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a Bag {
+    type Item = &'a Value;
+    type IntoIter = std::slice::Iter<'a, Value>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.items.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiset_eq_ignores_order() {
+        let a = Bag::from_vec(vec![Value::I64(1), Value::I64(2), Value::I64(2)]);
+        let b = Bag::from_vec(vec![Value::I64(2), Value::I64(1), Value::I64(2)]);
+        assert!(a.multiset_eq(&b));
+    }
+
+    #[test]
+    fn multiset_eq_respects_multiplicity() {
+        let a = Bag::from_vec(vec![Value::I64(1), Value::I64(2)]);
+        let b = Bag::from_vec(vec![Value::I64(1), Value::I64(1)]);
+        assert!(!a.multiset_eq(&b));
+        let c = Bag::from_vec(vec![Value::I64(1)]);
+        assert!(!a.multiset_eq(&c));
+    }
+
+    #[test]
+    fn singleton_roundtrip() {
+        let b = Bag::singleton(Value::I64(9));
+        assert_eq!(b.expect_singleton().unwrap(), &Value::I64(9));
+        assert!(Bag::new().expect_singleton().is_err());
+        assert!(Bag::from_vec(vec![Value::I64(1), Value::I64(2)])
+            .expect_singleton()
+            .is_err());
+    }
+
+    #[test]
+    fn from_iterator_collects() {
+        let b: Bag = (0..5).map(Value::I64).collect();
+        assert_eq!(b.len(), 5);
+    }
+}

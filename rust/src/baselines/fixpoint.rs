@@ -1,0 +1,210 @@
+//! In-dataflow **fixpoint** iteration (Flink `iterate` / Naiad-style):
+//! a single job whose loop executes as barrier-synchronized supersteps
+//! over persistent workers — no per-step scheduling, but limited to plain
+//! fixpoint loops (§3.2 footnote 3: "Flink allows for control flow inside
+//! dataflows only in the case of fixpoint iterations"; nested/general
+//! control flow still needs separate jobs, which is what Fig. 7 shows for
+//! the outer loop).
+//!
+//! Each superstep: (1) parallel *scatter* over hash partitions emitting
+//! keyed messages, (2) exchange by key, (3) parallel *combine* per key.
+//! The per-step cost is a thread barrier — the same order of magnitude as
+//! Labyrinth's coordination (Fig. 5's in-dataflow cluster of lines).
+
+use crate::frontend::Udf2;
+use crate::value::Value;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+/// A superstep specification.
+pub struct StepSpec {
+    /// Per-element scatter: emit keyed messages (`Pair(k, v)`), given the
+    /// element and the step index.
+    pub scatter: Arc<dyn Fn(&Value, usize) -> Vec<Value> + Send + Sync>,
+    /// Optional per-key combiner (None: messages pass through unchanged).
+    pub combine: Option<Udf2>,
+}
+
+/// Fixpoint executor over persistent worker threads.
+pub struct Fixpoint {
+    /// Worker (thread) count.
+    pub workers: usize,
+}
+
+impl Fixpoint {
+    /// Create with `workers` threads.
+    pub fn new(workers: usize) -> Fixpoint {
+        Fixpoint { workers: workers.max(1) }
+    }
+
+    /// Run `steps` supersteps from `initial`; returns the final dataset
+    /// and the number of barrier waits performed (for overhead metrics).
+    pub fn run(&self, initial: Vec<Value>, steps: usize, spec: &StepSpec) -> (Vec<Value>, usize) {
+        let w = self.workers;
+        // Hash-partition the initial dataset.
+        let mut parts: Vec<Vec<Value>> = vec![Vec::new(); w];
+        for v in initial {
+            parts[(v.key_hash() as usize) % w].push(v);
+        }
+        let parts = Arc::new(Mutex::new(parts));
+        let barrier = Arc::new(Barrier::new(w));
+        let barrier_waits = Arc::new(AtomicUsize::new(0));
+        // Exchange staging: [src worker][dst worker] -> messages.
+        let staging: Arc<Vec<Mutex<Vec<Vec<Value>>>>> =
+            Arc::new((0..w).map(|_| Mutex::new(vec![Vec::new(); w])).collect());
+
+        std::thread::scope(|s| {
+            for me in 0..w {
+                let parts = parts.clone();
+                let barrier = barrier.clone();
+                let staging = staging.clone();
+                let waits = barrier_waits.clone();
+                let scatter = spec.scatter.clone();
+                let combine = spec.combine.clone();
+                s.spawn(move || {
+                    for step in 0..steps {
+                        // Phase 1: scatter my partition into per-dst buffers.
+                        let my_part = { parts.lock().unwrap()[me].clone() };
+                        let mut outbox: Vec<Vec<Value>> = vec![Vec::new(); w];
+                        for v in &my_part {
+                            for m in scatter(v, step) {
+                                outbox[(m.key_hash() as usize) % w].push(m);
+                            }
+                        }
+                        *staging[me].lock().unwrap() = outbox;
+                        waits.fetch_add(1, Ordering::Relaxed);
+                        barrier.wait(); // superstep barrier (write visible)
+
+                        // Phase 2: gather my inbox from all senders.
+                        let mut inbox: Vec<Value> = Vec::new();
+                        for src in 0..w {
+                            let msgs = std::mem::take(&mut staging[src].lock().unwrap()[me]);
+                            inbox.extend(msgs);
+                        }
+                        // Phase 3: combine per key.
+                        let next = match &combine {
+                            None => inbox,
+                            Some(udf) => {
+                                let mut t = crate::ops::agg::ReduceByKeyT::new(udf.clone());
+                                crate::ops::run_once(&mut t, &[&inbox])
+                            }
+                        };
+                        parts.lock().unwrap()[me] = next;
+                        barrier.wait(); // everyone advances together
+                    }
+                });
+            }
+        });
+
+        let final_parts = Arc::try_unwrap(parts).unwrap().into_inner().unwrap();
+        (
+            final_parts.into_iter().flatten().collect(),
+            barrier_waits.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// PageRank via the fixpoint executor (the paper's Fig. 7 inner loop):
+/// damping 0.85, `iters` supersteps over `Pair(page, rank)` state.
+pub fn pagerank_fixpoint(
+    edges: &[(usize, usize)],
+    n: usize,
+    iters: usize,
+    workers: usize,
+) -> Vec<f64> {
+    let damping = 0.85;
+    // Adjacency + out-degrees, shared read-only by the scatter closure.
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for &(s, d) in edges {
+        adj[s].push(d);
+    }
+    let adj = Arc::new(adj);
+    let initial: Vec<Value> = (0..n)
+        .map(|p| Value::pair(Value::I64(p as i64), Value::F64(1.0 / n as f64)))
+        .collect();
+    let adj2 = adj.clone();
+    let spec = StepSpec {
+        scatter: Arc::new(move |v: &Value, _step| {
+            let (page, rank) = match v {
+                Value::Pair(p) => (p.0.as_i64() as usize, p.1.as_f64()),
+                _ => unreachable!(),
+            };
+            let outs = &adj2[page];
+            let mut msgs = Vec::with_capacity(outs.len() + 1);
+            // Keep the vertex alive with its base rank.
+            msgs.push(Value::pair(
+                Value::I64(page as i64),
+                Value::F64((1.0 - damping) / n as f64),
+            ));
+            if outs.is_empty() {
+                // Dangling mass spreads uniformly: approximate by sending
+                // to self (consistent with the Labyrinth dataflow version).
+                msgs.push(Value::pair(
+                    Value::I64(page as i64),
+                    Value::F64(damping * rank),
+                ));
+            } else {
+                let share = damping * rank / outs.len() as f64;
+                for &d in outs {
+                    msgs.push(Value::pair(Value::I64(d as i64), Value::F64(share)));
+                }
+            }
+            msgs
+        }),
+        combine: Some(Udf2::new("+", |a, b| Value::F64(a.as_f64() + b.as_f64()))),
+    };
+    let (final_, _) = Fixpoint::new(workers).run(initial, iters, &spec);
+    let mut ranks = vec![0.0; n];
+    for v in final_ {
+        if let Value::Pair(p) = v {
+            ranks[p.0.as_i64() as usize] = p.1.as_f64();
+        }
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_only_fixpoint_increments() {
+        // bag of pairs (k, v); each step v += 1 — the Fig. 5 microbench.
+        let initial: Vec<Value> =
+            (0..20).map(|k| Value::pair(Value::I64(k), Value::I64(0))).collect();
+        let spec = StepSpec {
+            scatter: Arc::new(|v: &Value, _| {
+                let Value::Pair(p) = v else { unreachable!() };
+                vec![Value::pair(p.0.clone(), Value::I64(p.1.as_i64() + 1))]
+            }),
+            combine: None,
+        };
+        let (out, waits) = Fixpoint::new(3).run(initial, 10, &spec);
+        assert_eq!(out.len(), 20);
+        for v in &out {
+            assert_eq!(v.val().as_i64(), 10);
+        }
+        assert_eq!(waits, 3 * 10);
+    }
+
+    #[test]
+    fn pagerank_matches_reference_without_danglings() {
+        // Strongly-connected graph: no dangling correction discrepancy.
+        let edges = vec![(0, 1), (1, 2), (2, 0), (0, 2), (2, 1)];
+        let got = pagerank_fixpoint(&edges, 3, 30, 2);
+        let want = crate::workload::pagerank_reference(&edges, 3, 30);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9, "{got:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_result() {
+        let edges = vec![(0, 1), (1, 0), (1, 2), (2, 0)];
+        let a = pagerank_fixpoint(&edges, 3, 15, 1);
+        let b = pagerank_fixpoint(&edges, 3, 15, 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+}

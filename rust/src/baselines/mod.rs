@@ -1,0 +1,35 @@
+//! Baseline executors reproducing the systems Labyrinth is evaluated
+//! against (§9): client-side control flow with one dataflow job per step
+//! (Spark/Flink batch style), in-dataflow *fixpoint-only* iteration
+//! (Flink iterate / Naiad style), and the single-threaded COST baseline
+//! [McSherry et al.]. All run the same IR over the same workloads as the
+//! Labyrinth engine, so cross-executor results are directly comparable
+//! (and `single_thread` doubles as the correctness oracle).
+
+pub mod fixpoint;
+pub mod separate_jobs;
+pub mod single_thread;
+
+use crate::value::Value;
+use rustc_hash::FxHashMap;
+use std::time::Duration;
+
+/// Output of a baseline run.
+#[derive(Debug, Default)]
+pub struct BaselineRun {
+    /// Collected bags by label (step order).
+    pub collected: FxHashMap<String, Vec<Value>>,
+    /// Total wall time.
+    pub elapsed: Duration,
+    /// Time spent in simulated job scheduling (separate-jobs only).
+    pub sched_time: Duration,
+    /// Number of dataflow jobs launched (separate-jobs only).
+    pub jobs_launched: usize,
+}
+
+impl BaselineRun {
+    /// Collected bag for a label.
+    pub fn collected(&self, label: &str) -> &[Value] {
+        self.collected.get(label).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}

@@ -1,0 +1,478 @@
+//! Separate-dataflow-jobs executor (§3.2): control flow runs in the
+//! *client*; every basic block that contains bag operations is submitted
+//! as a fresh dataflow job through the centralized-scheduler substrate,
+//! paying the per-job launch cost each time. Two styles:
+//!
+//! * **Spark-like** — datasets stay partitioned on the "cluster" between
+//!   jobs (`.cache()`; the user must know to persist, §3.2).
+//! * **Flink-like** — the paper's Flink batch setup has no cache: results
+//!   are collected to the driver after each job and re-scattered into the
+//!   next one, adding a copy per step (§9.1.2).
+//!
+//! No cross-job operator state exists, so a hash-join's build side is
+//! rebuilt every step (the missed optimization of §3.2.2 / Fig. 8).
+
+use super::BaselineRun;
+use crate::error::{Error, Result};
+use crate::frontend::{Program, Rhs, Terminator, VarId};
+use crate::sched::LatencyModel;
+use crate::value::Value;
+use rustc_hash::FxHashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Cross-job dataset persistence style.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PersistStyle {
+    /// Partitions stay on the cluster between jobs (Spark `.cache()`).
+    SparkCache,
+    /// Collect to the driver each job, re-scatter next job (Flink batch).
+    FlinkCollect,
+}
+
+/// Executor configuration.
+#[derive(Clone, Debug)]
+pub struct SeparateJobsConfig {
+    /// Simulated worker count.
+    pub workers: usize,
+    /// Scheduler latency model.
+    pub model: LatencyModel,
+    /// Persistence style.
+    pub persist: PersistStyle,
+    /// Safety bound on executed basic blocks.
+    pub max_blocks: usize,
+    /// Base directory for file I/O.
+    pub io_dir: std::path::PathBuf,
+}
+
+impl SeparateJobsConfig {
+    /// Spark-like defaults.
+    pub fn spark(workers: usize) -> SeparateJobsConfig {
+        SeparateJobsConfig {
+            workers,
+            model: LatencyModel::spark_like(),
+            persist: PersistStyle::SparkCache,
+            max_blocks: 10_000_000,
+            io_dir: std::path::PathBuf::from("."),
+        }
+    }
+    /// Flink-like defaults.
+    pub fn flink(workers: usize) -> SeparateJobsConfig {
+        SeparateJobsConfig {
+            workers,
+            model: LatencyModel::flink_like(),
+            persist: PersistStyle::FlinkCollect,
+            max_blocks: 10_000_000,
+            io_dir: std::path::PathBuf::from("."),
+        }
+    }
+}
+
+/// A partitioned (cached) dataset.
+type Partitions = Arc<Vec<Vec<Value>>>;
+
+#[derive(Clone, Debug)]
+enum Binding {
+    Scalar(Value),
+    /// Spark-like: resident partitioned dataset.
+    Cached(Partitions),
+    /// Flink-like: dataset held at the driver between jobs.
+    AtDriver(Arc<Vec<Value>>),
+}
+
+/// Run a program with client-side control flow + per-block jobs.
+pub fn run(program: &Program, cfg: &SeparateJobsConfig) -> Result<BaselineRun> {
+    let start = Instant::now();
+    let mut env: FxHashMap<VarId, Binding> = FxHashMap::default();
+    let mut out = BaselineRun::default();
+    let registry = crate::workload::registry::global();
+    let w = cfg.workers.max(1);
+
+    let mut block = program.entry;
+    let mut executed = 0usize;
+    loop {
+        executed += 1;
+        if executed > cfg.max_blocks {
+            return Err(Error::Baseline("block budget exceeded".into()));
+        }
+        let blk = &program.blocks[block];
+        let bag_ops = blk
+            .instrs
+            .iter()
+            .filter(|i| is_bag_op(&i.rhs))
+            .count();
+        if bag_ops > 0 {
+            // === submit one dataflow job for this step ===
+            out.jobs_launched += 1;
+            out.sched_time += cfg.model.simulate_job_launch(bag_ops, w);
+        }
+        for instr in &blk.instrs {
+            let b = eval(&instr.rhs, &mut env, &registry, cfg, &mut out, w)?;
+            env.insert(instr.var, b);
+        }
+        if bag_ops > 0 && cfg.persist == PersistStyle::FlinkCollect {
+            // Flink batch: ship every dataset produced by this job back to
+            // the driver (the paper "collected the bag to the driver at
+            // each step", §9.1.2).
+            for instr in &blk.instrs {
+                if let Some(Binding::Cached(parts)) = env.get(&instr.var) {
+                    let gathered: Vec<Value> =
+                        parts.iter().flat_map(|p| p.iter().cloned()).collect();
+                    env.insert(instr.var, Binding::AtDriver(Arc::new(gathered)));
+                }
+            }
+        }
+        match &blk.term {
+            Terminator::End => break,
+            Terminator::Jump(t) => block = *t,
+            Terminator::Branch { cond, then_b, else_b } => {
+                let v = match env.get(cond) {
+                    Some(Binding::Scalar(v)) => v.clone(),
+                    other => {
+                        return Err(Error::Baseline(format!("branch on non-scalar {other:?}")))
+                    }
+                };
+                block = if v.as_bool() { *then_b } else { *else_b };
+            }
+        }
+    }
+    out.elapsed = start.elapsed();
+    Ok(out)
+}
+
+fn is_bag_op(rhs: &Rhs) -> bool {
+    !matches!(
+        rhs,
+        Rhs::Const(_) | Rhs::Copy(_) | Rhs::ScalarUn { .. } | Rhs::ScalarBin { .. }
+    )
+}
+
+/// Materialize a binding as partitions for the next job (re-scattering
+/// driver-resident data, which is where Flink-style pays its copy).
+fn partitions_of(b: &Binding, w: usize) -> Result<Partitions> {
+    match b {
+        Binding::Cached(p) => Ok(p.clone()),
+        Binding::AtDriver(items) => Ok(Arc::new(scatter(items, w))),
+        Binding::Scalar(v) => Err(Error::Baseline(format!("expected bag, got scalar {v:?}"))),
+    }
+}
+
+fn scatter(items: &[Value], w: usize) -> Vec<Vec<Value>> {
+    let mut parts = vec![Vec::with_capacity(items.len() / w + 1); w];
+    for (i, v) in items.iter().enumerate() {
+        parts[i % w].push(v.clone());
+    }
+    parts
+}
+
+fn hash_repartition(parts: &[Vec<Value>], w: usize) -> Vec<Vec<Value>> {
+    let mut out = vec![Vec::new(); w];
+    for p in parts {
+        for v in p {
+            out[(v.key_hash() as usize) % w].push(v.clone());
+        }
+    }
+    out
+}
+
+/// Run `f` over partitions in parallel (one thread per worker).
+fn par_map_partitions(
+    parts: &[Vec<Value>],
+    f: impl Fn(&[Value]) -> Vec<Value> + Sync,
+) -> Vec<Vec<Value>> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = parts
+            .iter()
+            .map(|p| {
+                let f = &f;
+                s.spawn(move || f(p))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("partition thread")).collect()
+    })
+}
+
+fn eval(
+    rhs: &Rhs,
+    env: &mut FxHashMap<VarId, Binding>,
+    registry: &crate::workload::registry::Registry,
+    cfg: &SeparateJobsConfig,
+    out: &mut BaselineRun,
+    w: usize,
+) -> Result<Binding> {
+    let getb = |env: &FxHashMap<VarId, Binding>, v: &VarId| -> Result<Partitions> {
+        partitions_of(
+            env.get(v).ok_or_else(|| Error::Baseline(format!("unbound var {v}")))?,
+            w,
+        )
+    };
+    let gets = |env: &FxHashMap<VarId, Binding>, v: &VarId| -> Result<Value> {
+        match env.get(v) {
+            Some(Binding::Scalar(x)) => Ok(x.clone()),
+            other => Err(Error::Baseline(format!("expected scalar, got {other:?}"))),
+        }
+    };
+    Ok(match rhs {
+        Rhs::Const(v) => Binding::Scalar(v.clone()),
+        Rhs::Copy(v) => env
+            .get(v)
+            .cloned()
+            .ok_or_else(|| Error::Baseline(format!("copy of unbound {v}")))?,
+        Rhs::ScalarUn { input, udf } => Binding::Scalar(udf.call(&gets(env, input)?)),
+        Rhs::ScalarBin { left, right, udf } => {
+            Binding::Scalar(udf.call(&gets(env, left)?, &gets(env, right)?))
+        }
+        Rhs::BagLit(items) => Binding::Cached(Arc::new(scatter(items, w))),
+        Rhs::NamedSource(name) => {
+            let data = registry
+                .get(name)
+                .ok_or_else(|| Error::Baseline(format!("named source '{name}' missing")))?;
+            Binding::Cached(Arc::new(scatter(&data, w)))
+        }
+        Rhs::ReadFile { name } => {
+            let fname = gets(env, name)?;
+            if let Some(data) = registry.get(fname.as_str()) {
+                Binding::Cached(Arc::new(scatter(&data, w)))
+            } else {
+                let text = std::fs::read_to_string(cfg.io_dir.join(fname.as_str()))?;
+                let items: Vec<Value> = text.lines().map(Value::str).collect();
+                Binding::Cached(Arc::new(scatter(&items, w)))
+            }
+        }
+        Rhs::WriteFile { data, name } => {
+            let parts = getb(env, data)?;
+            let fname = gets(env, name)?;
+            let path = cfg.io_dir.join(fname.as_str());
+            if let Some(p) = path.parent() {
+                let _ = std::fs::create_dir_all(p);
+            }
+            let mut s = String::new();
+            for p in parts.iter() {
+                for v in p {
+                    s.push_str(&format!("{v}\n"));
+                }
+            }
+            std::fs::write(path, s)?;
+            Binding::Scalar(Value::Unit)
+        }
+        Rhs::Collect { input, label } => {
+            let parts = getb(env, input)?;
+            out.collected
+                .entry(label.clone())
+                .or_default()
+                .extend(parts.iter().flat_map(|p| p.iter().cloned()));
+            Binding::Scalar(Value::Unit)
+        }
+        Rhs::Map { input, udf } => {
+            let parts = getb(env, input)?;
+            let udf = udf.clone();
+            Binding::Cached(Arc::new(par_map_partitions(&parts, |p| {
+                p.iter().map(|v| udf.call(v)).collect()
+            })))
+        }
+        Rhs::Filter { input, udf } => {
+            let parts = getb(env, input)?;
+            let udf = udf.clone();
+            Binding::Cached(Arc::new(par_map_partitions(&parts, |p| {
+                p.iter().filter(|v| udf.call(v).as_bool()).cloned().collect()
+            })))
+        }
+        Rhs::FlatMap { input, udf } => {
+            let parts = getb(env, input)?;
+            let udf = udf.clone();
+            Binding::Cached(Arc::new(par_map_partitions(&parts, |p| {
+                p.iter().flat_map(|v| udf.call(v)).collect()
+            })))
+        }
+        Rhs::Join { left, right } => {
+            // Shuffle both sides, then per-partition hash join. The build
+            // table is rebuilt EVERY job — no cross-job operator state
+            // (§3.2.2).
+            let l = hash_repartition(&getb(env, left)?, w);
+            let r = hash_repartition(&getb(env, right)?, w);
+            let joined: Vec<Vec<Value>> = std::thread::scope(|s| {
+                let handles: Vec<_> = l
+                    .iter()
+                    .zip(r.iter())
+                    .map(|(lp, rp)| {
+                        s.spawn(move || {
+                            let mut j = crate::ops::join::HashJoinT::new();
+                            crate::ops::run_once(&mut j, &[lp, rp])
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("join thread")).collect()
+            });
+            Binding::Cached(Arc::new(joined))
+        }
+        Rhs::ReduceByKey { input, udf } => {
+            let parts = hash_repartition(&getb(env, input)?, w);
+            let udf = udf.clone();
+            Binding::Cached(Arc::new(par_map_partitions(&parts, |p| {
+                let mut t = crate::ops::agg::ReduceByKeyT::new(udf.clone());
+                crate::ops::run_once(&mut t, &[p])
+            })))
+        }
+        Rhs::Distinct { input } => {
+            let parts = hash_repartition(&getb(env, input)?, w);
+            Binding::Cached(Arc::new(par_map_partitions(&parts, |p| {
+                let mut t = crate::ops::agg::DistinctT::new();
+                crate::ops::run_once(&mut t, &[p])
+            })))
+        }
+        Rhs::Reduce { input, udf } => {
+            let parts = getb(env, input)?;
+            // Parallel partial reduce, then driver-side final combine.
+            let udf2 = udf.clone();
+            let partials = par_map_partitions(&parts, |p| {
+                let mut t = crate::ops::agg::ReduceT::new(udf2.clone());
+                crate::ops::run_once(&mut t, &[p])
+            });
+            let mut acc: Option<Value> = None;
+            for p in partials.iter().flat_map(|p| p.iter()) {
+                acc = Some(match acc.take() {
+                    Some(a) => udf.call(&a, p),
+                    None => p.clone(),
+                });
+            }
+            Binding::Scalar(acc.ok_or_else(|| Error::Baseline("reduce of empty bag".into()))?)
+        }
+        Rhs::Count { input } => {
+            let parts = getb(env, input)?;
+            Binding::Scalar(Value::I64(parts.iter().map(|p| p.len() as i64).sum()))
+        }
+        Rhs::Union { left, right } => {
+            let l = getb(env, left)?;
+            let r = getb(env, right)?;
+            let merged: Vec<Vec<Value>> = l
+                .iter()
+                .zip(r.iter())
+                .map(|(a, b)| a.iter().chain(b.iter()).cloned().collect())
+                .collect();
+            Binding::Cached(Arc::new(merged))
+        }
+        Rhs::Cross { left, right } => {
+            // Capture desugaring can cross a bag with a scalar (§5.2).
+            let flat = |env: &FxHashMap<VarId, Binding>, v: &VarId| -> Result<Vec<Value>> {
+                match env.get(v) {
+                    Some(Binding::Scalar(x)) => Ok(vec![x.clone()]),
+                    Some(_) => {
+                        Ok(getb(env, v)?.iter().flatten().cloned().collect::<Vec<Value>>())
+                    }
+                    None => Err(Error::Baseline(format!("unbound var {v}"))),
+                }
+            };
+            let l: Vec<Value> = flat(env, left)?;
+            let r: Vec<Value> = flat(env, right)?;
+            let mut res = Vec::with_capacity(l.len() * r.len());
+            for a in &l {
+                for b in &r {
+                    res.push(Value::pair(a.clone(), b.clone()));
+                }
+            }
+            Binding::Cached(Arc::new(scatter(&res, w)))
+        }
+        Rhs::XlaCall { inputs, spec } => {
+            let mut t = crate::ops::xla::XlaCallT::new(spec.clone());
+            let gathered: Vec<Vec<Value>> = inputs
+                .iter()
+                .map(|v| {
+                    getb(env, v).map(|p| p.iter().flatten().cloned().collect::<Vec<Value>>())
+                })
+                .collect::<Result<_>>()?;
+            let slices: Vec<&[Value]> = gathered.iter().map(|g| g.as_slice()).collect();
+            let res = crate::ops::run_once(&mut t, &slices);
+            Binding::Cached(Arc::new(scatter(&res, w)))
+        }
+        Rhs::Phi(_) => return Err(Error::Baseline("Φ in pre-SSA program".into())),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_lower;
+
+    fn quick_model() -> LatencyModel {
+        LatencyModel {
+            job_setup: std::time::Duration::from_micros(5),
+            rpc_dispatch: std::time::Duration::from_micros(1),
+            result_fetch: std::time::Duration::from_micros(2),
+            tasks_per_slot: 1,
+        }
+    }
+
+    fn run_src(src: &str, persist: PersistStyle) -> BaselineRun {
+        let p = parse_and_lower(src).unwrap();
+        let cfg = SeparateJobsConfig {
+            workers: 3,
+            model: quick_model(),
+            persist,
+            max_blocks: 100_000,
+            io_dir: std::path::PathBuf::from("."),
+        };
+        run(&p, &cfg).unwrap()
+    }
+
+    #[test]
+    fn one_job_per_step() {
+        let out = run_src(
+            "d = 1; b = bag(1, 2); while (d <= 5) { b = b.map(|x| x + 1); d = d + 1; } collect(b, \"b\");",
+            PersistStyle::SparkCache,
+        );
+        // initial block (bag lit) + 5 loop bodies + final collect block.
+        assert_eq!(out.jobs_launched, 7);
+        let mut got = out.collected("b").to_vec();
+        got.sort();
+        assert_eq!(got, vec![Value::I64(6), Value::I64(7)]);
+        assert!(out.sched_time > std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn flink_collect_matches_spark_cache_results() {
+        let src = r#"
+            a = bag(1, 2, 3, 4).map(|x| pair(x % 2, x));
+            c = a.reduceByKey(|p, q| p + q);
+            collect(c, "c");
+        "#;
+        let a = run_src(src, PersistStyle::SparkCache);
+        let b = run_src(src, PersistStyle::FlinkCollect);
+        let mut av = a.collected("c").to_vec();
+        let mut bv = b.collected("c").to_vec();
+        av.sort();
+        bv.sort();
+        assert_eq!(av, bv);
+    }
+
+    #[test]
+    fn scalar_only_blocks_launch_no_job() {
+        let out = run_src(
+            "d = 1; while (d <= 100) { d = d + 1; } collect(bag(1), \"x\");",
+            PersistStyle::SparkCache,
+        );
+        // Loop header/body are scalar-only: no jobs. Entry has no bag ops
+        // either; only the final collect block launches.
+        assert_eq!(out.jobs_launched, 1);
+    }
+
+    #[test]
+    fn join_rebuilt_each_step_still_correct() {
+        let out = run_src(
+            r#"
+            attrs = bag(1, 2).map(|x| pair(x, x * 10));
+            d = 1;
+            while (d <= 2) {
+                v = bag(1, 2, 3).map(|x| pair(x, d));
+                j = v.join(attrs);
+                collect(j.map(|p| fst(snd(p))), "j");
+                d = d + 1;
+            }
+            "#,
+            PersistStyle::SparkCache,
+        );
+        let got = out.collected("j");
+        assert_eq!(got.len(), 4);
+        let sum: i64 = got.iter().map(|v| v.as_i64()).sum();
+        assert_eq!(sum, 2 * 30);
+    }
+}

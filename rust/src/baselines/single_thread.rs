@@ -1,0 +1,339 @@
+//! Single-threaded direct interpreter of the imperative IR — both the
+//! paper's COST baseline (the hand-written C++/STL implementation of
+//! §9.2.1, sort-based joins and aggregations, no framework overhead) and
+//! the *specification* of program semantics (§6.3.1's non-parallel
+//! execution): every other executor is tested against its output.
+
+use super::BaselineRun;
+use crate::error::{Error, Result};
+use crate::frontend::{Program, Rhs, Terminator, VarId};
+use crate::value::Value;
+use rustc_hash::FxHashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A binding: scalar or materialized bag.
+#[derive(Clone, Debug)]
+enum Binding {
+    Scalar(Value),
+    Bag(Arc<Vec<Value>>),
+}
+
+/// Interpreter configuration.
+#[derive(Clone, Debug)]
+pub struct SingleThreadConfig {
+    /// Safety bound on executed basic blocks.
+    pub max_blocks: usize,
+    /// Base directory for file I/O.
+    pub io_dir: std::path::PathBuf,
+}
+
+impl Default for SingleThreadConfig {
+    fn default() -> Self {
+        SingleThreadConfig { max_blocks: 10_000_000, io_dir: std::path::PathBuf::from(".") }
+    }
+}
+
+/// Run a program single-threaded.
+pub fn run(program: &Program, cfg: &SingleThreadConfig) -> Result<BaselineRun> {
+    let start = Instant::now();
+    let mut env: FxHashMap<VarId, Binding> = FxHashMap::default();
+    let mut out = BaselineRun::default();
+    let registry = crate::workload::registry::global();
+
+    let mut block = program.entry;
+    let mut executed = 0usize;
+    loop {
+        executed += 1;
+        if executed > cfg.max_blocks {
+            return Err(Error::Baseline(format!(
+                "exceeded {} blocks — non-terminating program?",
+                cfg.max_blocks
+            )));
+        }
+        for instr in &program.blocks[block].instrs {
+            let bind = eval_rhs(&instr.rhs, &env, &registry, cfg, &mut out)?;
+            env.insert(instr.var, bind);
+        }
+        match &program.blocks[block].term {
+            Terminator::End => break,
+            Terminator::Jump(t) => block = *t,
+            Terminator::Branch { cond, then_b, else_b } => {
+                let v = scalar(&env, *cond)?;
+                block = if v.as_bool() { *then_b } else { *else_b };
+            }
+        }
+    }
+    out.elapsed = start.elapsed();
+    Ok(out)
+}
+
+fn scalar(env: &FxHashMap<VarId, Binding>, v: VarId) -> Result<Value> {
+    match env.get(&v) {
+        Some(Binding::Scalar(x)) => Ok(x.clone()),
+        other => Err(Error::Baseline(format!("expected scalar for var {v}, got {other:?}"))),
+    }
+}
+
+fn bag(env: &FxHashMap<VarId, Binding>, v: VarId) -> Result<Arc<Vec<Value>>> {
+    match env.get(&v) {
+        Some(Binding::Bag(b)) => Ok(b.clone()),
+        other => Err(Error::Baseline(format!("expected bag for var {v}, got {other:?}"))),
+    }
+}
+
+fn bag_or_lifted(env: &FxHashMap<VarId, Binding>, v: VarId) -> Result<Arc<Vec<Value>>> {
+    match env.get(&v) {
+        Some(Binding::Bag(b)) => Ok(b.clone()),
+        Some(Binding::Scalar(x)) => Ok(Arc::new(vec![x.clone()])),
+        None => Err(Error::Baseline(format!("unbound var {v}"))),
+    }
+}
+
+fn kv(v: &Value) -> (Value, Value) {
+    match v {
+        Value::Pair(p) => (p.0.clone(), p.1.clone()),
+        other => (other.clone(), Value::Unit),
+    }
+}
+
+fn eval_rhs(
+    rhs: &Rhs,
+    env: &FxHashMap<VarId, Binding>,
+    registry: &crate::workload::registry::Registry,
+    cfg: &SingleThreadConfig,
+    out: &mut BaselineRun,
+) -> Result<Binding> {
+    Ok(match rhs {
+        Rhs::Const(v) => Binding::Scalar(v.clone()),
+        Rhs::Copy(v) => env
+            .get(v)
+            .cloned()
+            .ok_or_else(|| Error::Baseline(format!("copy of unbound var {v}")))?,
+        Rhs::ScalarUn { input, udf } => Binding::Scalar(udf.call(&scalar(env, *input)?)),
+        Rhs::ScalarBin { left, right, udf } => {
+            Binding::Scalar(udf.call(&scalar(env, *left)?, &scalar(env, *right)?))
+        }
+        Rhs::BagLit(items) => Binding::Bag(Arc::new(items.clone())),
+        Rhs::NamedSource(name) => Binding::Bag(
+            registry
+                .get(name)
+                .ok_or_else(|| Error::Baseline(format!("named source '{name}' missing")))?,
+        ),
+        Rhs::ReadFile { name } => {
+            let fname = scalar(env, *name)?;
+            if let Some(data) = registry.get(fname.as_str()) {
+                Binding::Bag(data)
+            } else {
+                let path = cfg.io_dir.join(fname.as_str());
+                let text = std::fs::read_to_string(&path)?;
+                Binding::Bag(Arc::new(text.lines().map(Value::str).collect()))
+            }
+        }
+        Rhs::WriteFile { data, name } => {
+            let fname = scalar(env, *name)?;
+            let path = cfg.io_dir.join(fname.as_str());
+            if let Some(p) = path.parent() {
+                let _ = std::fs::create_dir_all(p);
+            }
+            let mut s = String::new();
+            for v in bag(env, *data)?.iter() {
+                s.push_str(&format!("{v}\n"));
+            }
+            std::fs::write(path, s)?;
+            Binding::Scalar(Value::Unit)
+        }
+        Rhs::Collect { input, label } => {
+            let b = bag(env, *input)?;
+            out.collected.entry(label.clone()).or_default().extend(b.iter().cloned());
+            Binding::Scalar(Value::Unit)
+        }
+        Rhs::Map { input, udf } => {
+            Binding::Bag(Arc::new(bag(env, *input)?.iter().map(|v| udf.call(v)).collect()))
+        }
+        Rhs::Filter { input, udf } => Binding::Bag(Arc::new(
+            bag(env, *input)?.iter().filter(|v| udf.call(v).as_bool()).cloned().collect(),
+        )),
+        Rhs::FlatMap { input, udf } => Binding::Bag(Arc::new(
+            bag(env, *input)?.iter().flat_map(|v| udf.call(v)).collect(),
+        )),
+        Rhs::Join { left, right } => {
+            // Sort-merge join — like the paper's single-threaded C++ (§9.2.1).
+            let mut l: Vec<(Value, Value)> = bag(env, *left)?.iter().map(kv).collect();
+            let mut r: Vec<(Value, Value)> = bag(env, *right)?.iter().map(kv).collect();
+            l.sort_by(|a, b| a.0.cmp(&b.0));
+            r.sort_by(|a, b| a.0.cmp(&b.0));
+            let mut res = Vec::new();
+            let (mut i, mut j) = (0, 0);
+            while i < l.len() && j < r.len() {
+                match l[i].0.cmp(&r[j].0) {
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                    std::cmp::Ordering::Equal => {
+                        let key = l[i].0.clone();
+                        let i_end = l[i..].iter().take_while(|x| x.0 == key).count() + i;
+                        let j_end = r[j..].iter().take_while(|x| x.0 == key).count() + j;
+                        for li in i..i_end {
+                            for rj in j..j_end {
+                                res.push(Value::pair(
+                                    key.clone(),
+                                    Value::pair(l[li].1.clone(), r[rj].1.clone()),
+                                ));
+                            }
+                        }
+                        i = i_end;
+                        j = j_end;
+                    }
+                }
+            }
+            Binding::Bag(Arc::new(res))
+        }
+        Rhs::ReduceByKey { input, udf } => {
+            // Sort-based grouping (COST-style).
+            let mut items: Vec<(Value, Value)> = bag(env, *input)?.iter().map(kv).collect();
+            items.sort_by(|a, b| a.0.cmp(&b.0));
+            let mut res: Vec<Value> = Vec::new();
+            let mut cur: Option<(Value, Value)> = None;
+            for (k, v) in items {
+                match &mut cur {
+                    Some((ck, acc)) if *ck == k => *acc = udf.call(acc, &v),
+                    _ => {
+                        if let Some((ck, acc)) = cur.take() {
+                            res.push(Value::pair(ck, acc));
+                        }
+                        cur = Some((k, v));
+                    }
+                }
+            }
+            if let Some((ck, acc)) = cur {
+                res.push(Value::pair(ck, acc));
+            }
+            Binding::Bag(Arc::new(res))
+        }
+        Rhs::Reduce { input, udf } => {
+            let b = bag(env, *input)?;
+            let mut it = b.iter();
+            let first = it
+                .next()
+                .ok_or_else(|| Error::Baseline("reduce of empty bag".into()))?
+                .clone();
+            Binding::Scalar(it.fold(first, |acc, v| udf.call(&acc, v)))
+        }
+        Rhs::Count { input } => Binding::Scalar(Value::I64(bag(env, *input)?.len() as i64)),
+        Rhs::Distinct { input } => {
+            let mut items: Vec<Value> = bag(env, *input)?.as_ref().clone();
+            items.sort();
+            items.dedup();
+            Binding::Bag(Arc::new(items))
+        }
+        Rhs::Union { left, right } => {
+            let mut items = bag(env, *left)?.as_ref().clone();
+            items.extend(bag(env, *right)?.iter().cloned());
+            Binding::Bag(Arc::new(items))
+        }
+        Rhs::Cross { left, right } => {
+            // Capture desugaring can cross a bag with a *scalar* (lifted
+            // to a one-element bag only later, §5.2): accept both.
+            let l = bag_or_lifted(env, *left)?;
+            let r = bag_or_lifted(env, *right)?;
+            let mut res = Vec::with_capacity(l.len() * r.len());
+            for a in l.iter() {
+                for b in r.iter() {
+                    res.push(Value::pair(a.clone(), b.clone()));
+                }
+            }
+            Binding::Bag(Arc::new(res))
+        }
+        Rhs::XlaCall { inputs, spec } => {
+            let mut t = crate::ops::xla::XlaCallT::new(spec.clone());
+            let in_bags: Vec<Arc<Vec<Value>>> =
+                inputs.iter().map(|v| bag(env, *v)).collect::<Result<_>>()?;
+            let slices: Vec<&[Value]> = in_bags.iter().map(|b| b.as_slice()).collect();
+            Binding::Bag(Arc::new(crate::ops::run_once(&mut t, &slices)))
+        }
+        Rhs::Phi(_) => {
+            return Err(Error::Baseline(
+                "Φ in pre-SSA program — the single-threaded baseline interprets the \
+                 imperative IR, not SSA"
+                    .into(),
+            ))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_lower;
+
+    fn run_src(src: &str) -> BaselineRun {
+        run(&parse_and_lower(src).unwrap(), &SingleThreadConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn loop_semantics_match_imperative_expectation() {
+        let out = run_src(
+            "d = 1; s = 0; while (d <= 10) { s = s + d; d = d + 1; } collect(bag(1).map(|x| x * s), \"s\");",
+        );
+        assert_eq!(out.collected("s"), &[Value::I64(55)]);
+    }
+
+    #[test]
+    fn visit_count_program_runs() {
+        let w = crate::workload::VisitCountWorkload {
+            days: 3,
+            visits_per_day: 500,
+            num_pages: 20,
+            ..Default::default()
+        };
+        w.register("st_");
+        let src = r#"
+            day = 1;
+            yesterday = bag();
+            while (day <= 3) {
+                visits = source("st_visits1");
+                counts = visits.map(|x| pair(x, 1)).reduceByKey(|a, b| a + b);
+                if (day != 1) {
+                    diffs = counts.join(yesterday)
+                        .map(|p| abs(fst(snd(p)) - snd(snd(p))));
+                    total = diffs.reduce(|a, b| a + b);
+                    collect(bag(0).map(|z| z + total), "totals");
+                }
+                yesterday = counts;
+                day = day + 1;
+            }
+        "#;
+        let out = run_src(src);
+        // Same file every day -> identical counts -> diffs are all zero.
+        assert_eq!(out.collected("totals"), &[Value::I64(0), Value::I64(0)]);
+    }
+
+    #[test]
+    fn sort_merge_join_handles_duplicates() {
+        let out = run_src(
+            r#"
+            a = bag(1, 1, 2).map(|x| pair(x, 10));
+            b = bag(1, 2, 2).map(|x| pair(x, 20));
+            j = a.joinBuild(b);
+            n = j.count();
+            collect(bag(0).map(|z| z + n), "n");
+            "#,
+        );
+        // key 1: 2x1 matches; key 2: 1x2 matches -> 4 total.
+        assert_eq!(out.collected("n"), &[Value::I64(4)]);
+    }
+
+    #[test]
+    fn if_branch_untaken_has_no_side_effects() {
+        let out = run_src("x = 1; if (x != 1) { collect(bag(9), \"never\"); }");
+        assert!(out.collected("never").is_empty());
+    }
+
+    #[test]
+    fn nonterminating_loop_detected() {
+        let p = parse_and_lower("d = 1; while (d >= 0) { d = d + 1; } collect(bag(1), \"x\");")
+            .unwrap();
+        let cfg = SingleThreadConfig { max_blocks: 1000, ..Default::default() };
+        assert!(run(&p, &cfg).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Minimal benchmarking harness (criterion is unavailable offline; see
+//! DESIGN.md §2). Every `cargo bench` target (`rust/benches/*.rs`,
+//! `harness = false`) uses this module to time closures with warmup,
+//! report median / mean / p95, and print the paper-style result tables.
+
+use crate::util::fmt_duration;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Label (e.g. "labyrinth w=25").
+    pub label: String,
+    /// Per-repetition wall times, sorted ascending.
+    pub samples: Vec<Duration>,
+}
+
+impl Measurement {
+    /// Median sample.
+    pub fn median(&self) -> Duration {
+        self.samples[self.samples.len() / 2]
+    }
+    /// Arithmetic mean.
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+    /// 95th percentile (nearest-rank).
+    pub fn p95(&self) -> Duration {
+        let idx = ((self.samples.len() as f64) * 0.95).ceil() as usize;
+        self.samples[idx.saturating_sub(1).min(self.samples.len() - 1)]
+    }
+    /// Minimum sample.
+    pub fn min(&self) -> Duration {
+        self.samples[0]
+    }
+}
+
+/// Benchmark runner: `warmup` untimed runs then `reps` timed runs.
+pub struct Bencher {
+    warmup: usize,
+    reps: usize,
+}
+
+impl Bencher {
+    /// Create a runner with explicit warmup/repetition counts.
+    pub fn new(warmup: usize, reps: usize) -> Bencher {
+        Bencher { warmup, reps: reps.max(1) }
+    }
+
+    /// Quick-mode heuristic: honor `LABY_BENCH_QUICK=1` to slash rep counts
+    /// (used in CI / `make bench-quick`).
+    pub fn from_env(warmup: usize, reps: usize) -> Bencher {
+        if std::env::var("LABY_BENCH_QUICK").ok().as_deref() == Some("1") {
+            Bencher::new(warmup.min(1), (reps / 3).max(1))
+        } else {
+            Bencher::new(warmup, reps)
+        }
+    }
+
+    /// Time `f` (which should perform one full run of the workload).
+    pub fn run(&self, label: impl Into<String>, mut f: impl FnMut()) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let m = Measurement { label: label.into(), samples };
+        eprintln!(
+            "  {:<38} median {:>10}  mean {:>10}  p95 {:>10}  (n={})",
+            m.label,
+            fmt_duration(m.median()),
+            fmt_duration(m.mean()),
+            fmt_duration(m.p95()),
+            m.samples.len()
+        );
+        m
+    }
+}
+
+/// A paper-style results table: one row per x-value (e.g. worker count),
+/// one column per series (e.g. system), cells are median durations.
+pub struct Table {
+    /// Table title, printed as a header.
+    pub title: String,
+    /// Name of the x-axis (first column header).
+    pub x_name: String,
+    /// Series names (column headers).
+    pub series: Vec<String>,
+    /// Rows: (x, cells aligned with `series`; None = not run).
+    pub rows: Vec<(String, Vec<Option<Duration>>)>,
+}
+
+impl Table {
+    /// Create an empty table.
+    pub fn new(
+        title: impl Into<String>,
+        x_name: impl Into<String>,
+        series: Vec<String>,
+    ) -> Table {
+        Table { title: title.into(), x_name: x_name.into(), series, rows: Vec::new() }
+    }
+
+    /// Append a row.
+    pub fn push_row(&mut self, x: impl Into<String>, cells: Vec<Option<Duration>>) {
+        assert_eq!(cells.len(), self.series.len());
+        self.rows.push((x.into(), cells));
+    }
+
+    /// Render as an aligned ASCII table (the benches print these; the
+    /// harness in EXPERIMENTS.md copies them verbatim).
+    pub fn render(&self) -> String {
+        let mut widths = vec![self.x_name.len()];
+        widths.extend(self.series.iter().map(|s| s.len().max(10)));
+        for (x, cells) in &self.rows {
+            widths[0] = widths[0].max(x.len());
+            for (i, c) in cells.iter().enumerate() {
+                let s = c.map(fmt_duration).unwrap_or_else(|| "-".into());
+                widths[i + 1] = widths[i + 1].max(s.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&crate::util::pad(&self.x_name, widths[0]));
+        for (i, s) in self.series.iter().enumerate() {
+            out.push_str("  ");
+            out.push_str(&crate::util::pad(s, widths[i + 1]));
+        }
+        out.push('\n');
+        for (x, cells) in &self.rows {
+            out.push_str(&crate::util::pad(x, widths[0]));
+            for (i, c) in cells.iter().enumerate() {
+                let s = c.map(fmt_duration).unwrap_or_else(|| "-".into());
+                out.push_str("  ");
+                out.push_str(&crate::util::pad(&s, widths[i + 1]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout (captured by `cargo bench | tee bench_output.txt`).
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_stats() {
+        let m = Measurement {
+            label: "t".into(),
+            samples: (1..=100).map(Duration::from_millis).collect(),
+        };
+        assert_eq!(m.median(), Duration::from_millis(51));
+        assert_eq!(m.p95(), Duration::from_millis(95));
+        assert_eq!(m.min(), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn bencher_runs_expected_reps() {
+        let mut count = 0;
+        let b = Bencher::new(2, 5);
+        let m = b.run("x", || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(m.samples.len(), 5);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = Table::new("T", "workers", vec!["a".into(), "b".into()]);
+        t.push_row("1", vec![Some(Duration::from_millis(3)), None]);
+        t.push_row("25", vec![Some(Duration::from_micros(14)), Some(Duration::from_secs(1))]);
+        let r = t.render();
+        assert!(r.contains("workers"));
+        assert!(r.contains("3.000ms"));
+        assert!(r.contains("1.000s"));
+        assert!(r.contains('-'));
+    }
+}

@@ -1,0 +1,178 @@
+//! Dominator tree (Cooper–Harvey–Kennedy) and dominance frontiers —
+//! the machinery behind Φ-insertion in SSA construction.
+
+use super::Cfg;
+use crate::frontend::BlockId;
+
+/// Immediate-dominator tree plus dominance frontiers.
+#[derive(Clone, Debug)]
+pub struct DomTree {
+    /// `idom[b]` — immediate dominator of `b` (entry's idom is itself);
+    /// `usize::MAX` for unreachable blocks.
+    pub idom: Vec<BlockId>,
+    /// Dominance frontier per block.
+    pub frontier: Vec<Vec<BlockId>>,
+    /// Children in the dominator tree.
+    pub children: Vec<Vec<BlockId>>,
+}
+
+/// Compute dominators with the Cooper–Harvey–Kennedy iterative algorithm.
+pub fn dominators(cfg: &Cfg) -> DomTree {
+    let n = cfg.num_blocks();
+    let undef = usize::MAX;
+    let mut idom = vec![undef; n];
+    idom[cfg.program.entry] = cfg.program.entry;
+
+    let intersect = |idom: &[usize], rpo_pos: &[usize], mut a: usize, mut b: usize| -> usize {
+        while a != b {
+            while rpo_pos[a] > rpo_pos[b] {
+                a = idom[a];
+            }
+            while rpo_pos[b] > rpo_pos[a] {
+                b = idom[b];
+            }
+        }
+        a
+    };
+
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &b in &cfg.rpo {
+            if b == cfg.program.entry {
+                continue;
+            }
+            // First processed predecessor.
+            let mut new_idom = undef;
+            for &p in &cfg.preds[b] {
+                if idom[p] != undef {
+                    new_idom = if new_idom == undef {
+                        p
+                    } else {
+                        intersect(&idom, &cfg.rpo_pos, new_idom, p)
+                    };
+                }
+            }
+            if new_idom != undef && idom[b] != new_idom {
+                idom[b] = new_idom;
+                changed = true;
+            }
+        }
+    }
+
+    // Dominance frontiers (Cytron et al. via CHK formulation).
+    let mut frontier = vec![Vec::new(); n];
+    for &b in &cfg.rpo {
+        if cfg.preds[b].len() >= 2 {
+            for &p in &cfg.preds[b] {
+                if idom[p] == usize::MAX {
+                    continue;
+                }
+                let mut runner = p;
+                while runner != idom[b] {
+                    if !frontier[runner].contains(&b) {
+                        frontier[runner].push(b);
+                    }
+                    runner = idom[runner];
+                }
+            }
+        }
+    }
+
+    let mut children = vec![Vec::new(); n];
+    for &b in &cfg.rpo {
+        if b != cfg.program.entry && idom[b] != undef {
+            children[idom[b]].push(b);
+        }
+    }
+
+    DomTree { idom, frontier, children }
+}
+
+impl DomTree {
+    /// Does `a` dominate `b`? (Both must be reachable.)
+    pub fn dominates(&self, a: BlockId, b: BlockId) -> bool {
+        let mut cur = b;
+        loop {
+            if cur == a {
+                return true;
+            }
+            let next = self.idom[cur];
+            if next == cur || next == usize::MAX {
+                return false;
+            }
+            cur = next;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::cfg_from_shape;
+    use super::*;
+
+    /// Diamond: 0 -> {1,2} -> 3.
+    #[test]
+    fn diamond_frontiers() {
+        let cfg = cfg_from_shape(0, &[&[1, 2], &[3], &[3], &[]]);
+        let dt = dominators(&cfg);
+        assert_eq!(dt.idom[1], 0);
+        assert_eq!(dt.idom[2], 0);
+        assert_eq!(dt.idom[3], 0);
+        assert_eq!(dt.frontier[1], vec![3]);
+        assert_eq!(dt.frontier[2], vec![3]);
+        assert!(dt.frontier[0].is_empty());
+        assert!(dt.dominates(0, 3));
+        assert!(!dt.dominates(1, 3));
+    }
+
+    /// While loop: 0 -> 1(header) -> {2(body), 3(after)}; 2 -> 1.
+    #[test]
+    fn loop_header_in_own_frontier_of_body() {
+        let cfg = cfg_from_shape(0, &[&[1], &[2, 3], &[1], &[]]);
+        let dt = dominators(&cfg);
+        assert_eq!(dt.idom[1], 0);
+        assert_eq!(dt.idom[2], 1);
+        assert_eq!(dt.idom[3], 1);
+        // The back edge puts the header in the body's frontier — and in the
+        // header's own frontier (it doesn't strictly dominate itself).
+        assert_eq!(dt.frontier[2], vec![1]);
+        assert!(dt.frontier[1].contains(&1));
+    }
+
+    /// Nested loops: 0 -> 1 -> {2,5}; 2 -> 3 -> {2-ish...}
+    #[test]
+    fn nested_loop_frontiers() {
+        // 0 entry; 1 outer header {2 body, 5 exit}; 2 inner header {3 inner
+        // body, 4 outer latch}; 3 -> 2; 4 -> 1.
+        let cfg = cfg_from_shape(0, &[&[1], &[2, 5], &[3, 4], &[2], &[1], &[]]);
+        let dt = dominators(&cfg);
+        assert_eq!(dt.idom[2], 1);
+        assert_eq!(dt.idom[3], 2);
+        assert_eq!(dt.idom[4], 2);
+        assert!(dt.frontier[3].contains(&2));
+        assert!(dt.frontier[4].contains(&1));
+        assert!(dt.frontier[2].contains(&2)); // inner header via back edge
+        assert!(dt.frontier[2].contains(&1)); // outer header via latch path
+    }
+
+    #[test]
+    fn straight_line_has_empty_frontiers() {
+        let cfg = cfg_from_shape(0, &[&[1], &[2], &[]]);
+        let dt = dominators(&cfg);
+        for f in &dt.frontier {
+            assert!(f.is_empty());
+        }
+        assert!(dt.dominates(0, 2));
+        assert!(dt.dominates(1, 2));
+    }
+
+    #[test]
+    fn children_form_tree() {
+        let cfg = cfg_from_shape(0, &[&[1, 2], &[3], &[3], &[]]);
+        let dt = dominators(&cfg);
+        let mut kids = dt.children[0].clone();
+        kids.sort();
+        assert_eq!(kids, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,132 @@
+//! Natural-loop detection. Used for loop-invariant analysis (the static
+//! side of §7's build-side reuse), plan diagnostics, and the pipelining
+//! ablation reports.
+
+use super::dom::DomTree;
+use super::Cfg;
+use crate::frontend::BlockId;
+
+/// One natural loop.
+#[derive(Clone, Debug)]
+pub struct NaturalLoop {
+    /// The loop header (target of the back edge).
+    pub header: BlockId,
+    /// Source of the back edge (the latch).
+    pub latch: BlockId,
+    /// All blocks in the loop body, including the header.
+    pub body: Vec<BlockId>,
+}
+
+/// Loop nesting information.
+#[derive(Clone, Debug, Default)]
+pub struct LoopInfo {
+    /// All natural loops (one per back edge), unordered.
+    pub loops: Vec<NaturalLoop>,
+    /// Loop-nesting depth per block (0 = not in any loop).
+    pub depth: Vec<usize>,
+}
+
+/// Find natural loops: for each back edge `latch -> header` (where the
+/// header dominates the latch), collect the blocks that can reach the
+/// latch without passing through the header.
+pub fn find_loops(cfg: &Cfg, dom: &DomTree) -> LoopInfo {
+    let n = cfg.num_blocks();
+    let mut loops = Vec::new();
+    for &b in &cfg.rpo {
+        for &s in &cfg.succs[b] {
+            if dom.dominates(s, b) {
+                // Back edge b -> s.
+                let header = s;
+                let latch = b;
+                let mut in_body = vec![false; n];
+                in_body[header] = true;
+                let mut stack = vec![latch];
+                while let Some(x) = stack.pop() {
+                    if in_body[x] {
+                        continue;
+                    }
+                    in_body[x] = true;
+                    for &p in &cfg.preds[x] {
+                        if !in_body[p] {
+                            stack.push(p);
+                        }
+                    }
+                }
+                let body: Vec<BlockId> = (0..n).filter(|&x| in_body[x]).collect();
+                loops.push(NaturalLoop { header, latch, body });
+            }
+        }
+    }
+    let mut depth = vec![0usize; n];
+    for l in &loops {
+        for &b in &l.body {
+            depth[b] += 1;
+        }
+    }
+    LoopInfo { loops, depth }
+}
+
+impl LoopInfo {
+    /// Is `b` inside any loop?
+    pub fn in_loop(&self, b: BlockId) -> bool {
+        self.depth[b] > 0
+    }
+
+    /// The innermost loop containing `b` (smallest body), if any.
+    pub fn innermost(&self, b: BlockId) -> Option<&NaturalLoop> {
+        self.loops
+            .iter()
+            .filter(|l| l.body.contains(&b))
+            .min_by_key(|l| l.body.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dom::dominators;
+    use super::super::testutil::cfg_from_shape;
+    use super::*;
+
+    #[test]
+    fn simple_while_loop_found() {
+        // 0 -> 1(header) -> {2(body), 3}; 2 -> 1.
+        let cfg = cfg_from_shape(0, &[&[1], &[2, 3], &[1], &[]]);
+        let li = find_loops(&cfg, &dominators(&cfg));
+        assert_eq!(li.loops.len(), 1);
+        let l = &li.loops[0];
+        assert_eq!(l.header, 1);
+        assert_eq!(l.latch, 2);
+        assert_eq!(l.body, vec![1, 2]);
+        assert_eq!(li.depth, vec![0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn nested_loops_have_depth_two() {
+        // 0; 1 outer hdr {2, 5}; 2 inner hdr {3, 4}; 3 -> 2; 4 -> 1; 5 end.
+        let cfg = cfg_from_shape(0, &[&[1], &[2, 5], &[3, 4], &[2], &[1], &[]]);
+        let li = find_loops(&cfg, &dominators(&cfg));
+        assert_eq!(li.loops.len(), 2);
+        assert_eq!(li.depth[3], 2);
+        assert_eq!(li.depth[4], 1);
+        assert_eq!(li.depth[5], 0);
+        let inner = li.innermost(3).unwrap();
+        assert_eq!(inner.header, 2);
+    }
+
+    #[test]
+    fn if_statement_is_not_a_loop() {
+        let cfg = cfg_from_shape(0, &[&[1, 2], &[3], &[3], &[]]);
+        let li = find_loops(&cfg, &dominators(&cfg));
+        assert!(li.loops.is_empty());
+        assert!(!li.in_loop(1));
+    }
+
+    #[test]
+    fn loop_with_if_inside_includes_branches() {
+        // 0; 1 hdr {2, 6}; 2 {3, 4} if; 3 -> 5; 4 -> 5; 5 latch -> 1; 6 end.
+        let cfg = cfg_from_shape(0, &[&[1], &[2, 6], &[3, 4], &[5], &[5], &[1], &[]]);
+        let li = find_loops(&cfg, &dominators(&cfg));
+        assert_eq!(li.loops.len(), 1);
+        assert_eq!(li.loops[0].body, vec![1, 2, 3, 4, 5]);
+    }
+}

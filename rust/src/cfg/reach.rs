@@ -1,0 +1,146 @@
+//! CFG reachability queries used by the coordination protocol:
+//!
+//! * §6.3.4 — a producer may discard a retained conditional-output bag
+//!   "once the execution path reaches a basic block from which every path
+//!   to b2 goes through b1" — i.e. when `b2` is *not* reachable while
+//!   avoiding `b1`.
+//! * §6.3.3 — same machinery decides when consumer-side input buffers
+//!   (and reusable operator state, §7) can be dropped early.
+//!
+//! The runtime combines these static tables with exact dynamic checks on
+//! the evolving execution path (see `coord::tracker`).
+
+use super::Cfg;
+use crate::frontend::BlockId;
+
+/// Is there a walk `from ⇝ target` of length ≥ 0 that never *enters*
+/// `avoid`? (`from == target` counts as reaching, unless `target == avoid`.)
+pub fn can_reach_avoiding(
+    cfg: &Cfg,
+    from: BlockId,
+    target: BlockId,
+    avoid: Option<BlockId>,
+) -> bool {
+    if Some(target) == avoid {
+        return false;
+    }
+    if Some(from) == avoid {
+        return false;
+    }
+    let n = cfg.num_blocks();
+    let mut seen = vec![false; n];
+    let mut stack = vec![from];
+    seen[from] = true;
+    while let Some(b) = stack.pop() {
+        if b == target {
+            return true;
+        }
+        for &s in &cfg.succs[b] {
+            if Some(s) != avoid && !seen[s] {
+                seen[s] = true;
+                stack.push(s);
+            }
+        }
+    }
+    false
+}
+
+/// For a conditional edge `b1 → b2`: the per-block table
+/// `dead_from[x] == true` iff a retained output bag is provably dead once
+/// the execution path stands at `x` — no continuation from `x` can reach
+/// the consumer block `b2` without first passing the producer block `b1`
+/// (where the bag would be superseded by a newer one).
+///
+/// The *next step* out of `x` matters, not `x` itself: the caller applies
+/// this after having already checked whether `x` is the send (`b2`) or
+/// supersede (`b1`) block.
+pub fn dead_from_table(cfg: &Cfg, b1: BlockId, b2: BlockId) -> Vec<bool> {
+    let n = cfg.num_blocks();
+    (0..n)
+        .map(|x| {
+            // From x, explore successors while avoiding b1; if b2 is never
+            // met, the bag is dead.
+            let mut seen = vec![false; n];
+            let mut stack: Vec<BlockId> = cfg.succs[x]
+                .iter()
+                .copied()
+                .filter(|&s| s != b1)
+                .collect();
+            for &s in &stack {
+                seen[s] = true;
+            }
+            let mut reached = false;
+            while let Some(b) = stack.pop() {
+                if b == b2 {
+                    reached = true;
+                    break;
+                }
+                for &s in &cfg.succs[b] {
+                    if s != b1 && !seen[s] {
+                        seen[s] = true;
+                        stack.push(s);
+                    }
+                }
+            }
+            !reached
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::cfg_from_shape;
+    use super::*;
+
+    /// Loop: 0 -> 1(hdr) -> {2(body), 3(exit)}; 2 -> 1.
+    #[test]
+    fn reach_avoiding_in_loop() {
+        let cfg = cfg_from_shape(0, &[&[1], &[2, 3], &[1], &[]]);
+        assert!(can_reach_avoiding(&cfg, 0, 3, None));
+        assert!(can_reach_avoiding(&cfg, 2, 3, None));
+        // Cannot reach the exit while avoiding the header.
+        assert!(!can_reach_avoiding(&cfg, 2, 3, Some(1)));
+        // from == target reaches trivially.
+        assert!(can_reach_avoiding(&cfg, 2, 2, None));
+        // ... unless avoided.
+        assert!(!can_reach_avoiding(&cfg, 2, 2, Some(2)));
+    }
+
+    /// Invariant-producer case: producer in pre-loop block 0, consumer in
+    /// body 2. The bag is only dead at the exit (3), because 0 never recurs
+    /// but 2 stays reachable while looping.
+    #[test]
+    fn invariant_edge_dead_only_at_exit() {
+        let cfg = cfg_from_shape(0, &[&[1], &[2, 3], &[1], &[]]);
+        let dead = dead_from_table(&cfg, 0, 2);
+        assert!(!dead[0]);
+        assert!(!dead[1]);
+        assert!(!dead[2]);
+        assert!(dead[3]);
+    }
+
+    /// Loop-carried edge: producer in body (2), consumer Φ in header (1).
+    /// From the exit block the bag is dead; from inside it is not.
+    #[test]
+    fn carried_edge_dead_at_exit() {
+        let cfg = cfg_from_shape(0, &[&[1], &[2, 3], &[1], &[]]);
+        let dead = dead_from_table(&cfg, 2, 1);
+        assert!(dead[3]);
+        assert!(!dead[2]);
+        // From the header: reaching the Φ again (next header occurrence)
+        // requires going through the body (2 = b1), superseding the bag.
+        assert!(dead[1]);
+    }
+
+    /// Diamond: 0 -> {1, 2} -> 3; edge from then-branch 1 to merge 3.
+    #[test]
+    fn if_branch_edge_dead_after_merge_when_unreachable() {
+        let cfg = cfg_from_shape(0, &[&[1, 2], &[3], &[3], &[]]);
+        let dead = dead_from_table(&cfg, 1, 3);
+        // At the merge itself, nothing can re-reach 3 (no loop): dead.
+        assert!(dead[3]);
+        // From 1, the merge is ahead: not dead.
+        assert!(!dead[1]);
+        assert!(!dead[0]);
+    }
+}

@@ -1,0 +1,168 @@
+//! Configuration: an INI-style config file (`[section] key = value`) plus
+//! `--key value` CLI overrides. Handwritten because serde/toml are
+//! unavailable offline (DESIGN.md §2).
+
+use crate::error::{Error, Result};
+use rustc_hash::FxHashMap;
+use std::path::Path;
+
+/// A parsed configuration: flat `section.key → value` map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: FxHashMap<String, String>,
+}
+
+impl Config {
+    /// Empty config.
+    pub fn new() -> Config {
+        Config::default()
+    }
+
+    /// Parse INI-style text: `[section]` headers, `key = value` lines,
+    /// `#`/`;` comments. Keys outside a section are top-level.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if line.starts_with('[') {
+                let end = line.find(']').ok_or_else(|| {
+                    Error::Config(format!("line {}: unterminated section header", lineno + 1))
+                })?;
+                section = line[1..end].trim().to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected 'key = value'", lineno + 1))
+            })?;
+            let key = line[..eq].trim();
+            let mut value = line[eq + 1..].trim().to_string();
+            if value.starts_with('"') && value.ends_with('"') && value.len() >= 2 {
+                value = value[1..value.len() - 1].to_string();
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            cfg.values.insert(full, value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Set a value (CLI override).
+    pub fn set(&mut self, key: impl Into<String>, value: impl Into<String>) {
+        self.values.insert(key.into(), value.into());
+    }
+
+    /// Get a raw string value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Get with a default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed getter: usize.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("{key}: expected integer, got {s:?}"))),
+        }
+    }
+
+    /// Typed getter: u64.
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("{key}: expected integer, got {s:?}"))),
+        }
+    }
+
+    /// Typed getter: f64.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("{key}: expected float, got {s:?}"))),
+        }
+    }
+
+    /// Typed getter: bool (`true/false/1/0/yes/no`).
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => match s.to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" | "on" => Ok(true),
+                "false" | "0" | "no" | "off" => Ok(false),
+                other => Err(Error::Config(format!("{key}: expected bool, got {other:?}"))),
+            },
+        }
+    }
+
+    /// All keys (sorted) — used by `labyrinth config --dump`.
+    pub fn keys(&self) -> Vec<String> {
+        let mut k: Vec<String> = self.values.keys().cloned().collect();
+        k.sort();
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let cfg = Config::parse(
+            "# comment\nworkers = 4\n[exec]\nmode = \"pipelined\"\nbatch = 256\n; other\n[sched]\nrpc_us = 120\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("workers"), Some("4"));
+        assert_eq!(cfg.get("exec.mode"), Some("pipelined"));
+        assert_eq!(cfg.get_usize("exec.batch", 0).unwrap(), 256);
+        assert_eq!(cfg.get_u64("sched.rpc_us", 0).unwrap(), 120);
+    }
+
+    #[test]
+    fn typed_getters_use_defaults() {
+        let cfg = Config::new();
+        assert_eq!(cfg.get_usize("missing", 7).unwrap(), 7);
+        assert!(cfg.get_bool("missing", true).unwrap());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let cfg = Config::parse("x = abc").unwrap();
+        assert!(cfg.get_usize("x", 0).is_err());
+        assert!(cfg.get_bool("x", false).is_err());
+    }
+
+    #[test]
+    fn overrides_replace() {
+        let mut cfg = Config::parse("a = 1").unwrap();
+        cfg.set("a", "2");
+        assert_eq!(cfg.get("a"), Some("2"));
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(Config::parse("[nope").is_err());
+        assert!(Config::parse("keyonly").is_err());
+    }
+}

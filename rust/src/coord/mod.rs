@@ -1,0 +1,273 @@
+//! The control-flow coordination protocol (§6.3), as *pure* functions and
+//! state machines over the execution path. The physical engine (`exec`)
+//! wires these to threads and channels; keeping the logic pure makes the
+//! paper's trickiest algorithms directly unit- and property-testable.
+//!
+//! Key concepts:
+//! * **Execution path** — the walk on the CFG taken so far (sequence of
+//!   basic blocks). Condition nodes extend it via the driver; every
+//!   operator instance observes the same sequence (§6.3.1).
+//! * **Bag identifier** — `(node, path prefix)`; transmitted as the prefix
+//!   *length* only (`u32`), since all parties share the path (O(1) per
+//!   block instead of O(n), §6.3.1).
+//! * **Output bag choice** (§6.3.2) — a node computes one output bag per
+//!   occurrence of its basic block in the path.
+//! * **Input bag choice** (§6.3.3) — longest prefix of the output bag's
+//!   path ending in the input's block; Φ-nodes pick the input whose
+//!   prefix is longest.
+//! * **Conditional output** (§6.3.4) — send a retained bag when the
+//!   consumer's block appears before the producer's block recurs (for
+//!   Φ-targets, before any *sibling input's* block appears).
+
+pub mod path;
+
+pub use path::ExecPath;
+
+use crate::frontend::BlockId;
+
+/// §6.3.3 — the required input bag for an output bag with path prefix
+/// `out_len`: the longest prefix of `path[..out_len]` that ends with
+/// `src_block`, returned as its length. `None` if the block never occurs
+/// in the prefix (possible only for Φ inputs on the not-taken side).
+pub fn required_input_len(path: &[BlockId], out_len: u32, src_block: BlockId) -> Option<u32> {
+    debug_assert!(out_len as usize <= path.len());
+    path[..out_len as usize]
+        .iter()
+        .rposition(|&b| b == src_block)
+        .map(|i| (i + 1) as u32)
+}
+
+/// §6.3.3 Φ special case — choose among the Φ's inputs the one with the
+/// longest prefix. Returns `(input index, required bag length)`.
+///
+/// SSA verification guarantees pairwise-distinct input blocks, so there is
+/// a unique maximum among the inputs that occur at all.
+///
+/// `own_block`: the Φ's own basic block. An input *defined in the Φ's own
+/// block* is a self-argument (`continue` creates these: the value is
+/// unchanged along that path) and selects the Φ's own PREVIOUS output bag
+/// — the longest **proper** prefix ending with the block.
+pub fn choose_phi_input(
+    path: &[BlockId],
+    out_len: u32,
+    input_blocks: &[BlockId],
+    own_block: BlockId,
+) -> Option<(usize, u32)> {
+    let mut best: Option<(usize, u32)> = None;
+    for (i, &b) in input_blocks.iter().enumerate() {
+        let limit = if b == own_block { out_len - 1 } else { out_len };
+        if let Some(len) = required_input_len(path, limit, b) {
+            if best.map(|(_, bl)| len > bl).unwrap_or(true) {
+                best = Some((i, len));
+            }
+        }
+    }
+    best
+}
+
+/// Decision state of a conditional-output watcher (§6.3.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendDecision {
+    /// Not yet determined.
+    Undecided,
+    /// Send the bag to the consumer (the consumer's block appeared first).
+    Send,
+    /// The bag will never be consumed on this edge; discard the partition.
+    Dead,
+}
+
+/// Watches the execution path *after* a produced bag and decides whether
+/// the bag must be sent on one conditional output edge.
+///
+/// * `target_block` — the consumer's block (b2);
+/// * `blockers` — blocks whose appearance kills the bag: the producer's
+///   own block (a newer bag supersedes this one), plus — when the consumer
+///   is a Φ — the defining blocks of the Φ's *other* inputs (the Φ will
+///   prefer the sibling's newer bag).
+#[derive(Clone, Debug)]
+pub struct OutWatcher {
+    /// Path length of the bag being watched (observations start after it).
+    pub bag_len: u32,
+    /// Consumer block b2.
+    pub target_block: BlockId,
+    /// Superseding blocks.
+    pub blockers: Vec<BlockId>,
+    state: SendDecision,
+}
+
+impl OutWatcher {
+    /// Create an undecided watcher.
+    pub fn new(bag_len: u32, target_block: BlockId, blockers: Vec<BlockId>) -> OutWatcher {
+        OutWatcher { bag_len, target_block, blockers, state: SendDecision::Undecided }
+    }
+
+    /// Current state.
+    pub fn state(&self) -> SendDecision {
+        self.state
+    }
+
+    /// Observe the path block at 1-based position `pos` (`pos > bag_len`
+    /// observations only; earlier positions are ignored). Returns the
+    /// (possibly updated) state.
+    pub fn on_block(&mut self, pos: u32, block: BlockId) -> SendDecision {
+        if self.state != SendDecision::Undecided || pos <= self.bag_len {
+            return self.state;
+        }
+        if block == self.target_block {
+            self.state = SendDecision::Send;
+        } else if self.blockers.contains(&block) {
+            self.state = SendDecision::Dead;
+        }
+        self.state
+    }
+
+    /// The path is final: anything undecided will never be consumed.
+    pub fn on_final(&mut self) -> SendDecision {
+        if self.state == SendDecision::Undecided {
+            self.state = SendDecision::Dead;
+        }
+        self.state
+    }
+}
+
+/// Consumer-side buffer GC (§6.3.3 "decide when to discard"): a buffered
+/// input bag with id length `bag_len` on an edge is dead once
+///
+/// 1. a *superseding* block occurrence exists at position `j > bag_len`
+///    (`supersede_blocks` = the input's own block, plus sibling input
+///    blocks for Φ consumers), **and**
+/// 2. every output bag that could still choose it — those with positions
+///    `< j` — has already been completed (`min_pending_out`, `None` if no
+///    output bag is pending).
+///
+/// Or unconditionally once the path is final and nothing pending remains
+/// (`min_pending_out == None`).
+pub fn input_bag_dead(
+    bag_len: u32,
+    supersede_at: Option<u32>,
+    min_pending_out: Option<u32>,
+    path_final: bool,
+) -> bool {
+    let _ = bag_len;
+    match (supersede_at, min_pending_out) {
+        (Some(_), None) => true,
+        (Some(j), Some(p)) => p >= j,
+        (None, None) => path_final,
+        (None, Some(_)) => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Block naming convention for tests: numbers are block ids.
+
+    #[test]
+    fn required_input_len_picks_latest_occurrence() {
+        // path: E H B H B H A  (E=0, H=1, B=2, A=3)
+        let path = [0, 1, 2, 1, 2, 1, 3];
+        // Output at the 3rd H (len 6): input from B -> latest B is pos 5.
+        assert_eq!(required_input_len(&path, 6, 2), Some(5));
+        // Input from E -> pos 1.
+        assert_eq!(required_input_len(&path, 6, 0), Some(1));
+        // Block never occurring.
+        assert_eq!(required_input_len(&path, 6, 9), None);
+        // Same-block input: the prefix itself.
+        assert_eq!(required_input_len(&path, 6, 1), Some(6));
+    }
+
+    #[test]
+    fn phi_chooses_loop_back_after_first_step() {
+        // Paper Fig. 3: Φ(day_1 from E, day_3 from B) at header H.
+        let path = [0, 1, 2, 1, 2, 1, 3];
+        // First H (len 2): only E has occurred.
+        assert_eq!(choose_phi_input(&path, 2, &[0, 2], 1), Some((0, 1)));
+        // Second H (len 4): B at pos 3 beats E at pos 1.
+        assert_eq!(choose_phi_input(&path, 4, &[0, 2], 1), Some((1, 3)));
+        // Third H (len 6): B at pos 5.
+        assert_eq!(choose_phi_input(&path, 6, &[0, 2], 1), Some((1, 5)));
+    }
+
+    #[test]
+    fn phi_listing3b_interleaving() {
+        // Listing 3b: while { if then B(x1,y1) else C(x2,y2); D: Φ }.
+        // Blocks: A=0 (header+cond), B=1, C=2, D=3. Path ABDACD.
+        let path = [0, 1, 3, 0, 2, 3];
+        // First D (len 3): x-Φ inputs from B and C -> B (pos 2).
+        assert_eq!(choose_phi_input(&path, 3, &[1, 2], 3), Some((0, 2)));
+        // Second D (len 6): C at pos 5 wins.
+        assert_eq!(choose_phi_input(&path, 6, &[1, 2], 3), Some((1, 5)));
+    }
+
+    #[test]
+    fn phi_self_argument_selects_previous_own_bag() {
+        // `continue` pattern: Φ at header H(1) with args from E(0), latch
+        // M(2), and ITSELF (continue path carries the value unchanged).
+        // Path: E H B M H B T H   (B=3 body, T=4 continue-then block)
+        let path = [0, 1, 3, 2, 1, 3, 4, 1];
+        // 2nd H (len 5): latch M at pos 4 wins over self (prev H at 2).
+        assert_eq!(choose_phi_input(&path, 5, &[0, 2, 1], 1), Some((1, 4)));
+        // 3rd H (len 8): continue taken — no M since pos 4; self-arg picks
+        // the Φ's own bag from the 2nd H (pos 5), NOT the current one.
+        assert_eq!(choose_phi_input(&path, 8, &[0, 2, 1], 1), Some((2, 5)));
+        // 1st H (len 2): only the initial value exists.
+        assert_eq!(choose_phi_input(&path, 2, &[0, 2, 1], 1), Some((0, 1)));
+    }
+
+    #[test]
+    fn watcher_sends_when_target_first() {
+        // Producer in body B(2), consumer Φ in header H(1).
+        // Bag produced at B (len 3 of path E H B); H appended at pos 4.
+        let mut w = OutWatcher::new(3, 1, vec![2]);
+        assert_eq!(w.on_block(4, 1), SendDecision::Send);
+    }
+
+    #[test]
+    fn watcher_dies_when_producer_recurs_first() {
+        // Same edge; suppose (hypothetically) B recurs before H.
+        let mut w = OutWatcher::new(3, 1, vec![2]);
+        assert_eq!(w.on_block(4, 2), SendDecision::Dead);
+    }
+
+    #[test]
+    fn watcher_ignores_stale_positions_and_stays_decided() {
+        let mut w = OutWatcher::new(3, 1, vec![2]);
+        assert_eq!(w.on_block(2, 1), SendDecision::Undecided); // pos <= bag_len
+        assert_eq!(w.on_block(4, 5), SendDecision::Undecided); // unrelated block
+        assert_eq!(w.on_block(5, 1), SendDecision::Send);
+        assert_eq!(w.on_block(6, 2), SendDecision::Send); // latched
+    }
+
+    #[test]
+    fn watcher_phi_sibling_blocks_kill() {
+        // Listing 3b: x1 produced in B (len 2 of path A B); Φ in D(3);
+        // sibling x2 defined in C(2). Path continues A C D:
+        let mut w = OutWatcher::new(2, 3, vec![1, 2]);
+        assert_eq!(w.on_block(3, 0), SendDecision::Undecided); // A
+        assert_eq!(w.on_block(4, 2), SendDecision::Dead); // C kills it
+    }
+
+    #[test]
+    fn watcher_final_kills_undecided() {
+        let mut w = OutWatcher::new(2, 3, vec![1]);
+        assert_eq!(w.on_final(), SendDecision::Dead);
+        // Already-sent watchers stay sent.
+        let mut w2 = OutWatcher::new(2, 3, vec![1]);
+        w2.on_block(3, 3);
+        assert_eq!(w2.on_final(), SendDecision::Send);
+    }
+
+    #[test]
+    fn input_gc_rules() {
+        // Superseded at 5, everything before completed: dead.
+        assert!(input_bag_dead(2, Some(5), None, false));
+        assert!(input_bag_dead(2, Some(5), Some(6), false));
+        // An output at position 4 may still use the bag: alive.
+        assert!(!input_bag_dead(2, Some(5), Some(4), false));
+        // Not superseded: alive until the path is final and drained.
+        assert!(!input_bag_dead(2, None, Some(4), false));
+        assert!(!input_bag_dead(2, None, None, false));
+        assert!(input_bag_dead(2, None, None, true));
+    }
+}

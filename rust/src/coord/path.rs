@@ -1,0 +1,136 @@
+//! The execution path (§6.3.1): the worker-local replica of the global
+//! walk on the CFG, maintained from condition-node broadcasts, with
+//! per-block occurrence indexes for O(log k) supersession queries.
+
+use crate::frontend::BlockId;
+
+/// Worker-local execution path replica.
+#[derive(Clone, Debug, Default)]
+pub struct ExecPath {
+    blocks: Vec<BlockId>,
+    /// occurrences[b] = sorted 1-based positions where block b occurs.
+    occurrences: Vec<Vec<u32>>,
+    finalized: bool,
+}
+
+impl ExecPath {
+    /// Empty path over a CFG with `num_blocks` blocks.
+    pub fn new(num_blocks: usize) -> ExecPath {
+        ExecPath { blocks: Vec::new(), occurrences: vec![Vec::new(); num_blocks], finalized: false }
+    }
+
+    /// Append broadcast blocks starting at 0-based position `start`
+    /// (idempotent across duplicate delivery; positions must line up).
+    pub fn append(&mut self, start: usize, blocks: &[BlockId], final_: bool) {
+        assert!(
+            start <= self.blocks.len(),
+            "append gap: path len {} but broadcast starts at {start}",
+            self.blocks.len()
+        );
+        for (k, &b) in blocks.iter().enumerate() {
+            let pos = start + k;
+            if pos < self.blocks.len() {
+                assert_eq!(self.blocks[pos], b, "conflicting path broadcast at {pos}");
+                continue;
+            }
+            self.blocks.push(b);
+            self.occurrences[b].push((pos + 1) as u32);
+        }
+        if final_ {
+            self.finalized = true;
+        }
+    }
+
+    /// Current length.
+    pub fn len(&self) -> u32 {
+        self.blocks.len() as u32
+    }
+
+    /// True when no blocks have been appended yet.
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Whether the walk is complete (terminal block appended).
+    pub fn is_final(&self) -> bool {
+        self.finalized
+    }
+
+    /// The blocks as a slice.
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    /// Block at 1-based position.
+    pub fn at(&self, pos: u32) -> BlockId {
+        self.blocks[(pos - 1) as usize]
+    }
+
+    /// 1-based positions of a block's occurrences.
+    pub fn occurrences(&self, block: BlockId) -> &[u32] {
+        &self.occurrences[block]
+    }
+
+    /// First occurrence of `block` strictly after position `after`
+    /// (1-based), if any.
+    pub fn next_occurrence_after(&self, block: BlockId, after: u32) -> Option<u32> {
+        let occ = &self.occurrences[block];
+        match occ.binary_search(&(after + 1)) {
+            Ok(i) => Some(occ[i]),
+            Err(i) => occ.get(i).copied(),
+        }
+    }
+
+    /// Earliest occurrence strictly after `after` among several blocks.
+    pub fn next_occurrence_of_any(&self, blocks: &[BlockId], after: u32) -> Option<u32> {
+        blocks
+            .iter()
+            .filter_map(|&b| self.next_occurrence_after(b, after))
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_tracks_occurrences() {
+        let mut p = ExecPath::new(4);
+        p.append(0, &[0, 1], false);
+        p.append(2, &[2, 1], false);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.occurrences(1), &[2, 4]);
+        assert_eq!(p.at(3), 2);
+        assert!(!p.is_final());
+        p.append(4, &[3], true);
+        assert!(p.is_final());
+    }
+
+    #[test]
+    fn duplicate_delivery_is_idempotent() {
+        let mut p = ExecPath::new(3);
+        p.append(0, &[0, 1], false);
+        p.append(0, &[0, 1, 2], false);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.occurrences(0), &[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "append gap")]
+    fn gap_panics() {
+        let mut p = ExecPath::new(3);
+        p.append(1, &[1], false);
+    }
+
+    #[test]
+    fn next_occurrence_queries() {
+        let mut p = ExecPath::new(4);
+        p.append(0, &[0, 1, 2, 1, 2, 1, 3], false);
+        assert_eq!(p.next_occurrence_after(1, 2), Some(4));
+        assert_eq!(p.next_occurrence_after(1, 6), None);
+        assert_eq!(p.next_occurrence_after(3, 0), Some(7));
+        assert_eq!(p.next_occurrence_of_any(&[2, 3], 5), Some(7));
+        assert_eq!(p.next_occurrence_of_any(&[0], 1), None);
+    }
+}

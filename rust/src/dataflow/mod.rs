@@ -1,0 +1,443 @@
+//! SSA → logical dataflow graph (§5.3): one dataflow node per SSA
+//! variable, one edge per variable reference, condition nodes for branch
+//! variables, conditional output edges for cross-block references, and
+//! Φ-nodes translated like any other transformation.
+
+pub mod dot;
+
+use crate::cfg::Cfg;
+use crate::error::{Error, Result};
+use crate::frontend::{BlockId, Rhs, Terminator, VarId};
+use crate::ssa::SsaProgram;
+use rustc_hash::FxHashMap;
+
+/// Index of a dataflow node.
+pub type NodeId = usize;
+
+/// Parallelism class of a node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Par {
+    /// One physical instance (lifted scalars, global sinks/aggregates).
+    One,
+    /// One physical instance per worker.
+    All,
+}
+
+/// How elements are routed from the instances of a source node to the
+/// instances of a target node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Instance `i` → instance `i` (same parallelism, partition-preserving).
+    Forward,
+    /// Hash of `Value::key()` selects the target instance (co-partitions
+    /// keyed operations).
+    HashKey,
+    /// Every source instance sends everything to every target instance.
+    Broadcast,
+    /// Everything goes to target instance 0.
+    Gather,
+}
+
+/// One logical input of a node.
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    /// Producing node.
+    pub src: NodeId,
+    /// Basic block of the producing node (b1 in §6.3.3).
+    pub src_block: BlockId,
+    /// Element routing.
+    pub route: Route,
+    /// True iff the edge crosses basic blocks — a *conditional output
+    /// edge* (§5.3): whether a given bag is sent is decided by the
+    /// execution path (§6.3.4).
+    pub conditional: bool,
+}
+
+/// Condition-node role (§5.3): the boolean variable of a `Branch`
+/// terminator. After its singleton output bag closes, the runtime appends
+/// the decided chain of basic blocks to the execution path.
+#[derive(Clone, Debug)]
+pub struct CondSpec {
+    /// Chain appended when the condition is true (§6.3.1 auto-append of
+    /// single-successor blocks).
+    pub then_chain: Vec<BlockId>,
+    /// Chain appended when the condition is false.
+    pub else_chain: Vec<BlockId>,
+}
+
+/// A logical dataflow node (one SSA variable).
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Node id (dense).
+    pub id: NodeId,
+    /// SSA variable name (diagnostics).
+    pub name: String,
+    /// SSA variable this node computes.
+    pub var: VarId,
+    /// Basic block of the defining assignment.
+    pub block: BlockId,
+    /// The operation (the SSA right-hand side; `ops::make` instantiates the
+    /// transformation).
+    pub op: Rhs,
+    /// Parallelism class.
+    pub par: Par,
+    /// Logical inputs, in operator-argument order.
+    pub inputs: Vec<InputSpec>,
+    /// Condition-node role, if this variable drives a branch.
+    pub cond: Option<CondSpec>,
+    /// Whether this node's output holds a lifted scalar (singleton bag).
+    pub singleton: bool,
+}
+
+/// The compiled logical dataflow job.
+#[derive(Clone, Debug)]
+pub struct DataflowGraph {
+    /// Nodes, topologically unordered (ids are dense).
+    pub nodes: Vec<Node>,
+    /// Map SSA var → node id.
+    pub node_of_var: FxHashMap<VarId, NodeId>,
+    /// The CFG (shared shape with the SSA program).
+    pub cfg: Cfg,
+    /// Blocks appended to the execution path at job start:
+    /// `chain(entry)` (§6.3.1).
+    pub entry_chain: Vec<BlockId>,
+    /// Human-readable listing of the source SSA (diagnostics).
+    pub ssa_listing: String,
+}
+
+impl DataflowGraph {
+    /// Downstream consumers of a node: `(consumer, input index)`.
+    pub fn consumers(&self, n: NodeId) -> Vec<(NodeId, usize)> {
+        let mut out = Vec::new();
+        for node in &self.nodes {
+            for (i, inp) in node.inputs.iter().enumerate() {
+                if inp.src == n {
+                    out.push((node.id, i));
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of logical nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Condition nodes in the graph.
+    pub fn condition_nodes(&self) -> Vec<NodeId> {
+        self.nodes.iter().filter(|n| n.cond.is_some()).map(|n| n.id).collect()
+    }
+
+    /// For a Φ node, the defining blocks of the *other* inputs (the §6.3.4
+    /// blockers when deciding whether to send a bag to this Φ on edge
+    /// `input_idx`).
+    pub fn phi_sibling_blocks(&self, node: NodeId, input_idx: usize) -> Vec<BlockId> {
+        let n = &self.nodes[node];
+        if !matches!(n.op, Rhs::Phi(_)) {
+            return Vec::new();
+        }
+        n.inputs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != input_idx)
+            .map(|(_, inp)| inp.src_block)
+            .collect()
+    }
+}
+
+/// Per-operation input routing requirement.
+fn input_requirements(op: &Rhs) -> Vec<Req> {
+    use Req::*;
+    match op {
+        Rhs::Join { .. } => vec![Key, Key],
+        Rhs::ReduceByKey { .. } | Rhs::Distinct { .. } => vec![Key],
+        Rhs::ReadFile { .. } => vec![Bcast],
+        Rhs::WriteFile { .. } => vec![Any, Bcast],
+        Rhs::XlaCall { inputs, .. } => vec![Any; inputs.len()],
+        Rhs::Phi(args) => vec![Any; args.len()],
+        Rhs::Union { .. } => vec![Any, Any],
+        // Distributed cross: keep the left side partitioned, broadcast the
+        // right side (which is a lifted scalar in §5.2 lifting and in
+        // captured-scalar lambda desugaring).
+        Rhs::Cross { .. } => vec![Any, Bcast],
+        Rhs::Collect { .. }
+        | Rhs::Map { .. }
+        | Rhs::Filter { .. }
+        | Rhs::FlatMap { .. }
+        | Rhs::Reduce { .. }
+        | Rhs::Count { .. } => vec![Any],
+        Rhs::Const(_) | Rhs::BagLit(_) | Rhs::NamedSource(_) => vec![],
+        Rhs::Copy(_) | Rhs::ScalarUn { .. } | Rhs::ScalarBin { .. } => {
+            unreachable!("removed before dataflow build")
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Req {
+    Key,
+    Bcast,
+    Any,
+}
+
+fn resolve_route(req: Req, src_par: Par, dst_par: Par) -> Route {
+    match req {
+        Req::Key => Route::HashKey,
+        Req::Bcast => Route::Broadcast,
+        Req::Any => match (src_par, dst_par) {
+            (Par::One, Par::One) => Route::Forward,
+            (Par::All, Par::All) => Route::Forward,
+            (Par::One, Par::All) => Route::HashKey,
+            (Par::All, Par::One) => Route::Gather,
+        },
+    }
+}
+
+/// Does this op produce a singleton (lifted-scalar) bag when its inputs
+/// are singletons? Used by the parallelism-inference fixpoint.
+fn singleton_out(op: &Rhs, input_singleton: &[bool]) -> bool {
+    match op {
+        Rhs::BagLit(items) => items.len() == 1,
+        Rhs::Reduce { .. } | Rhs::Count { .. } => true,
+        Rhs::WriteFile { .. } | Rhs::Collect { .. } => true, // Unit singleton
+        Rhs::Map { .. } | Rhs::Filter { .. } => input_singleton[0],
+        Rhs::Cross { .. } => input_singleton.iter().all(|&s| s),
+        Rhs::Phi(_) => input_singleton.iter().all(|&s| s),
+        _ => false,
+    }
+}
+
+/// Build the logical dataflow graph from lifted SSA.
+pub fn build(ssa: &SsaProgram) -> Result<DataflowGraph> {
+    let cfg = ssa.cfg.clone();
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut node_of_var: FxHashMap<VarId, NodeId> = FxHashMap::default();
+
+    // Pass 1: create nodes (inputs resolved in pass 2 so forward references
+    // from Φ back-edges work).
+    for (bi, block) in ssa.blocks.iter().enumerate() {
+        if !cfg.reachable(bi) {
+            continue;
+        }
+        for instr in &block.instrs {
+            let id = nodes.len();
+            node_of_var.insert(instr.var, id);
+            nodes.push(Node {
+                id,
+                name: ssa.vars[instr.var].name.clone(),
+                var: instr.var,
+                block: bi,
+                op: instr.rhs.clone(),
+                par: Par::All, // refined below
+                inputs: Vec::new(),
+                cond: None,
+                singleton: false,
+            });
+        }
+    }
+
+    // Pass 2: edges (one per variable reference, §5.3).
+    for nid in 0..nodes.len() {
+        let op = nodes[nid].op.clone();
+        let input_vars: Vec<VarId> = op.input_vars();
+        let mut inputs = Vec::with_capacity(input_vars.len());
+        for v in &input_vars {
+            let src = *node_of_var.get(v).ok_or_else(|| {
+                Error::Dataflow(format!(
+                    "node '{}' references variable '{}' with no dataflow node",
+                    nodes[nid].name, ssa.vars[*v].name
+                ))
+            })?;
+            let src_block = nodes[src].block;
+            inputs.push(InputSpec {
+                src,
+                src_block,
+                route: Route::Forward, // refined below
+                conditional: src_block != nodes[nid].block,
+            });
+        }
+        nodes[nid].inputs = inputs;
+    }
+
+    // Pass 3: singleton-ness fixpoint (optimistic start, monotone AND).
+    let mut singleton = vec![true; nodes.len()];
+    loop {
+        let mut changed = false;
+        for n in &nodes {
+            let ins: Vec<bool> = n.inputs.iter().map(|i| singleton[i.src]).collect();
+            let s = singleton_out(&n.op, &ins);
+            if s != singleton[n.id] {
+                singleton[n.id] = s;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    for n in &mut nodes {
+        n.singleton = singleton[n.id];
+        n.par = match &n.op {
+            _ if singleton[n.id] => Par::One,
+            Rhs::Reduce { .. }
+            | Rhs::Count { .. }
+            | Rhs::WriteFile { .. }
+            | Rhs::Collect { .. }
+            | Rhs::XlaCall { .. } => Par::One,
+            _ => Par::All,
+        };
+    }
+
+    // Pass 4: routes.
+    for nid in 0..nodes.len() {
+        let reqs = input_requirements(&nodes[nid].op);
+        if reqs.len() != nodes[nid].inputs.len() {
+            return Err(Error::Dataflow(format!(
+                "node '{}' arity mismatch: {} inputs vs {} requirements",
+                nodes[nid].name,
+                nodes[nid].inputs.len(),
+                reqs.len()
+            )));
+        }
+        for (i, req) in reqs.iter().enumerate() {
+            let src_par = nodes[nodes[nid].inputs[i].src].par;
+            let dst_par = nodes[nid].par;
+            nodes[nid].inputs[i].route = resolve_route(*req, src_par, dst_par);
+        }
+    }
+
+    // Pass 5: condition nodes (§5.3) — the variable of each Branch.
+    for (bi, block) in ssa.blocks.iter().enumerate() {
+        if !cfg.reachable(bi) {
+            continue;
+        }
+        if let Terminator::Branch { cond, then_b, else_b } = block.term {
+            let nid = *node_of_var.get(&cond).ok_or_else(|| {
+                Error::Dataflow(format!("branch condition var {cond} has no node"))
+            })?;
+            if nodes[nid].block != bi {
+                return Err(Error::Dataflow(format!(
+                    "condition node '{}' not in branching block",
+                    nodes[nid].name
+                )));
+            }
+            nodes[nid].cond = Some(CondSpec {
+                then_chain: cfg.chain(then_b),
+                else_chain: cfg.chain(else_b),
+            });
+        }
+    }
+
+    let entry_chain = cfg.chain(cfg.program.entry);
+    Ok(DataflowGraph {
+        nodes,
+        node_of_var,
+        cfg,
+        entry_chain,
+        ssa_listing: ssa.listing(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_lower;
+
+    fn graph(src: &str) -> DataflowGraph {
+        crate::compile(&parse_and_lower(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn node_per_variable_edge_per_reference() {
+        let g = graph("a = bag(1, 2); b = a.map(|x| x + 1); collect(b, \"out\");");
+        // bagLit, map, collect
+        assert_eq!(g.num_nodes(), 3);
+        let map = g.nodes.iter().find(|n| matches!(n.op, Rhs::Map { .. })).unwrap();
+        assert_eq!(map.inputs.len(), 1);
+        assert!(!map.inputs[0].conditional, "same-block edge is unconditional");
+    }
+
+    #[test]
+    fn loop_creates_condition_node_and_phi() {
+        let g = graph("d = 1; while (d <= 3) { d = d + 1; } collect(bag(1), \"x\");");
+        let conds = g.condition_nodes();
+        assert_eq!(conds.len(), 1);
+        let cond = &g.nodes[conds[0]];
+        let spec = cond.cond.as_ref().unwrap();
+        assert!(!spec.then_chain.is_empty());
+        assert!(!spec.else_chain.is_empty());
+        // Phi node exists and has conditional inputs (cross-block).
+        let phi = g.nodes.iter().find(|n| matches!(n.op, Rhs::Phi(_))).unwrap();
+        assert_eq!(phi.inputs.len(), 2);
+        assert!(phi.inputs.iter().all(|i| i.conditional));
+        // Loop counter nodes are singletons with Par::One.
+        assert_eq!(phi.par, Par::One);
+        assert!(phi.singleton);
+    }
+
+    #[test]
+    fn cross_block_edges_are_conditional() {
+        let g = graph(
+            "attrs = bag(1, 2); d = 1; while (d <= 3) { v = attrs.map(|x| x + 1); collect(v, \"v\"); d = d + 1; }",
+        );
+        // attrs (entry block) -> map (loop body): conditional edge.
+        let map = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Rhs::Map { .. }) && !n.singleton)
+            .unwrap();
+        assert!(map.inputs[0].conditional);
+    }
+
+    #[test]
+    fn join_inputs_hash_routed() {
+        let g = graph(
+            "a = bag(1).map(|x| pair(x, x)); b = bag(1).map(|x| pair(x, x)); j = a.join(b); collect(j, \"j\");",
+        );
+        let join = g.nodes.iter().find(|n| matches!(n.op, Rhs::Join { .. })).unwrap();
+        assert_eq!(join.inputs.len(), 2);
+        for i in &join.inputs {
+            assert_eq!(i.route, Route::HashKey);
+        }
+        assert_eq!(join.par, Par::All);
+    }
+
+    #[test]
+    fn bag_phi_is_parallel() {
+        let g = graph(
+            "y = bag(); d = 1; while (d <= 3) { c = bag(1, 2).map(|x| pair(x, 1)); y = c; d = d + 1; } collect(y, \"y\");",
+        );
+        let phi = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Rhs::Phi(_)) && !n.singleton)
+            .expect("bag phi");
+        assert_eq!(phi.par, Par::All);
+    }
+
+    #[test]
+    fn entry_chain_starts_at_entry() {
+        let g = graph("a = bag(1); collect(a, \"x\");");
+        assert_eq!(g.entry_chain, vec![g.cfg.program.entry]);
+    }
+
+    #[test]
+    fn phi_sibling_blocks_reported() {
+        let g = graph("d = 1; while (d <= 3) { d = d + 1; } collect(bag(1), \"x\");");
+        let phi = g.nodes.iter().find(|n| matches!(n.op, Rhs::Phi(_))).unwrap();
+        let sib0 = g.phi_sibling_blocks(phi.id, 0);
+        let sib1 = g.phi_sibling_blocks(phi.id, 1);
+        assert_eq!(sib0.len(), 1);
+        assert_eq!(sib1.len(), 1);
+        assert_ne!(sib0[0], sib1[0]);
+    }
+
+    #[test]
+    fn consumers_inverse_of_inputs() {
+        let g = graph("a = bag(1, 2); b = a.map(|x| x + 1); c = a.filter(|x| x > 0); collect(b, \"b\"); collect(c, \"c\");");
+        let src = g.nodes.iter().find(|n| matches!(n.op, Rhs::BagLit(ref v) if v.len() == 2)).unwrap();
+        let cons = g.consumers(src.id);
+        assert_eq!(cons.len(), 2);
+    }
+}

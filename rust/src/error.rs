@@ -1,0 +1,88 @@
+//! Error types for the whole Labyrinth stack.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Errors raised by the compiler pipeline, the coordination runtime, the
+/// executors, and the PJRT bridge.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Lexer error with 1-based line/column.
+    #[error("lex error at {line}:{col}: {msg}")]
+    Lex { line: usize, col: usize, msg: String },
+
+    /// Parser error with 1-based line/column.
+    #[error("parse error at {line}:{col}: {msg}")]
+    Parse { line: usize, col: usize, msg: String },
+
+    /// Semantic / type error in a LabyLang program.
+    #[error("type error: {0}")]
+    Type(String),
+
+    /// Malformed IR detected while building the CFG or SSA.
+    #[error("ir error: {0}")]
+    Ir(String),
+
+    /// SSA verification failure (internal compiler invariant).
+    #[error("ssa verification failed: {0}")]
+    SsaVerify(String),
+
+    /// Dataflow graph construction failure.
+    #[error("dataflow build error: {0}")]
+    Dataflow(String),
+
+    /// Coordination-protocol invariant violation at runtime.
+    #[error("coordination error: {0}")]
+    Coordination(String),
+
+    /// Execution engine failure (worker panic, channel breakage, ...).
+    #[error("execution error: {0}")]
+    Exec(String),
+
+    /// Errors from the baseline executors.
+    #[error("baseline error: {0}")]
+    Baseline(String),
+
+    /// Configuration file / CLI parsing problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// PJRT / XLA artifact problems.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Underlying I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand constructor for coordination-invariant failures.
+    pub fn coord(msg: impl Into<String>) -> Error {
+        Error::Coordination(msg.into())
+    }
+    /// Shorthand constructor for execution failures.
+    pub fn exec(msg: impl Into<String>) -> Error {
+        Error::Exec(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_location() {
+        let e = Error::Parse { line: 3, col: 7, msg: "expected ')'".into() };
+        assert_eq!(e.to_string(), "parse error at 3:7: expected ')'");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("nope"));
+    }
+}

@@ -1,0 +1,248 @@
+//! The driver (leader): spawns workers, relays condition-node decisions as
+//! execution-path broadcasts (§6.3.1), tracks completion for barrier mode
+//! and termination, and gathers `collect` outputs.
+//!
+//! Centralizing the path *relay* in the driver (the paper broadcasts from
+//! condition nodes directly) keeps the global block order trivially
+//! consistent; the cost per decision is one extra hop and remains O(1)
+//! per appended block.
+
+use super::message::{DriverMsg, WorkerMsg};
+use super::plan::ExecPlan;
+use super::{ExecConfig, ExecMode, RunOutput};
+use crate::coord::ExecPath;
+use crate::error::{Error, Result};
+use crate::frontend::{BlockId, Terminator};
+use crate::metrics::Metrics;
+use rustc_hash::FxHashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Hard stall limit: if no driver message arrives for this long, the run
+/// is declared deadlocked (a coordination bug) instead of hanging forever.
+const STALL_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Execute a physical plan.
+pub fn run_plan(plan: Arc<ExecPlan>, cfg: &ExecConfig) -> Result<RunOutput> {
+    // Optional scheduler substrate: Labyrinth schedules ONCE per program
+    // (vs once per step for the separate-jobs baselines — Fig. 4/5).
+    let sched_overhead = match &cfg.sched {
+        Some(m) => m.simulate_job_launch(plan.graph.num_nodes(), cfg.workers),
+        None => Duration::ZERO,
+    };
+
+    let metrics = Arc::new(Metrics::new());
+    let start = Instant::now();
+
+    let mut worker_txs: Vec<Sender<WorkerMsg>> = Vec::with_capacity(plan.workers);
+    let mut worker_rxs = Vec::with_capacity(plan.workers);
+    for _ in 0..plan.workers {
+        let (tx, rx) = channel::<WorkerMsg>();
+        worker_txs.push(tx);
+        worker_rxs.push(rx);
+    }
+    let (driver_tx, driver_rx) = channel::<DriverMsg>();
+
+    let shared = Arc::new(super::worker::WorkerShared {
+        plan: plan.clone(),
+        workers: worker_txs.clone(),
+        driver: driver_tx.clone(),
+        batch: cfg.batch,
+        reuse: cfg.reuse_state,
+        counters: Arc::new(super::worker::EngineCounters::new(&metrics)),
+        metrics: metrics.clone(),
+        report_bag_done: cfg.mode == ExecMode::Barrier,
+        io_dir: cfg.io_dir.clone(),
+    });
+
+    let mut handles = Vec::with_capacity(plan.workers);
+    for (w, rx) in worker_rxs.into_iter().enumerate() {
+        let shared = shared.clone();
+        let dtx = driver_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                super::worker::run_worker(w, shared, rx);
+            }));
+            if let Err(p) = result {
+                let msg = p
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "worker panic".into());
+                let _ = dtx.send(DriverMsg::Panic { msg: format!("worker {w}: {msg}") });
+            }
+        }));
+    }
+    drop(driver_tx);
+
+    // Driver state.
+    let graph = &plan.graph;
+    let mut path = ExecPath::new(graph.cfg.num_blocks());
+    let mut done_at: Vec<usize> = Vec::new(); // completions per path position
+    let mut frontier: usize = 0; // positions [0, frontier) fully complete
+    let mut pending_decision: Option<(Vec<BlockId>, bool)> = None;
+    let mut dones = 0usize;
+    let mut done_who: Vec<(usize, usize)> = Vec::new();
+    let mut collected: FxHashMap<String, Vec<Value_>> = FxHashMap::default();
+    let mut outputs: Vec<(String, u32, Vec<Value_>)> = Vec::new();
+    type Value_ = crate::value::Value;
+
+    let chain_is_final = |chain: &[BlockId]| -> bool {
+        matches!(
+            graph.cfg.program.blocks[*chain.last().expect("empty chain")].term,
+            Terminator::End
+        )
+    };
+
+    let broadcast = |path: &mut ExecPath,
+                     done_at: &mut Vec<usize>,
+                     blocks: &[BlockId],
+                     final_: bool,
+                     txs: &[Sender<WorkerMsg>]| {
+        let start_pos = path.len() as usize;
+        path.append(start_pos, blocks, final_);
+        done_at.resize(path.len() as usize, 0);
+        for tx in txs {
+            let _ = tx.send(WorkerMsg::Append {
+                start: start_pos,
+                blocks: blocks.to_vec(),
+                final_,
+            });
+        }
+    };
+
+    // Kick off with the entry chain.
+    {
+        let entry = graph.entry_chain.clone();
+        let final_ = chain_is_final(&entry);
+        broadcast(&mut path, &mut done_at, &entry, final_, &worker_txs);
+        metrics.add("driver.appends", entry.len() as u64);
+    }
+
+    let advance_frontier =
+        |frontier: &mut usize, done_at: &[usize], path: &ExecPath, plan: &ExecPlan| {
+            while *frontier < done_at.len() {
+                let block = path.at((*frontier + 1) as u32);
+                if done_at[*frontier] >= plan.insts_per_block[block] {
+                    *frontier += 1;
+                } else {
+                    break;
+                }
+            }
+        };
+
+    let mut error: Option<Error> = None;
+    loop {
+        let msg = match driver_rx.recv_timeout(STALL_TIMEOUT) {
+            Ok(m) => m,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                let done_ref = &done_who;
+                let stuck: Vec<String> = graph
+                    .nodes
+                    .iter()
+                    .flat_map(|n| {
+                        (0..plan.num_insts[n.id]).filter_map(move |i| {
+                            if done_ref.contains(&(n.id, i)) {
+                                None
+                            } else {
+                                Some(format!("{}[{i}]", n.name))
+                            }
+                        })
+                    })
+                    .collect();
+                error = Some(Error::coord(format!(
+                    "driver stalled: path len {}, {dones}/{} instances done; stuck: {}",
+                    path.len(),
+                    plan.total_instances,
+                    stuck.join(", ")
+                )));
+                break;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                error = Some(Error::exec("all workers disconnected"));
+                break;
+            }
+        };
+        match msg {
+            DriverMsg::Decision { node, bag_len, value } => {
+                debug_assert_eq!(
+                    bag_len,
+                    path.len(),
+                    "decision for stale path position (node {node})"
+                );
+                let spec = graph.nodes[node]
+                    .cond
+                    .as_ref()
+                    .expect("decision from non-condition node");
+                let chain =
+                    if value { spec.then_chain.clone() } else { spec.else_chain.clone() };
+                let final_ = chain_is_final(&chain);
+                metrics.add("driver.decisions", 1);
+                metrics.add("driver.appends", chain.len() as u64);
+                match cfg.mode {
+                    ExecMode::Pipelined => {
+                        broadcast(&mut path, &mut done_at, &chain, final_, &worker_txs)
+                    }
+                    ExecMode::Barrier => {
+                        // Withhold until every bag of the current prefix is
+                        // complete (per-step synchronization barrier).
+                        advance_frontier(&mut frontier, &done_at, &path, &plan);
+                        if frontier >= path.len() as usize {
+                            broadcast(&mut path, &mut done_at, &chain, final_, &worker_txs);
+                        } else {
+                            pending_decision = Some((chain, final_));
+                        }
+                    }
+                }
+            }
+            DriverMsg::BagDone { node: _, inst: _, bag_len } => {
+                let idx = (bag_len - 1) as usize;
+                done_at[idx] += 1;
+                metrics.add("driver.bag_dones", 1);
+                if cfg.mode == ExecMode::Barrier {
+                    advance_frontier(&mut frontier, &done_at, &path, &plan);
+                    if frontier >= path.len() as usize {
+                        if let Some((chain, final_)) = pending_decision.take() {
+                            broadcast(&mut path, &mut done_at, &chain, final_, &worker_txs);
+                        }
+                    }
+                }
+            }
+            DriverMsg::Output { label, bag_len, items } => {
+                collected.entry(label.clone()).or_default().extend(items.iter().cloned());
+                outputs.push((label, bag_len, items));
+            }
+            DriverMsg::Done { node, inst } => {
+                done_who.push((node, inst));
+                dones += 1;
+                if dones >= plan.total_instances {
+                    break;
+                }
+            }
+            DriverMsg::Panic { msg } => {
+                error = Some(Error::exec(msg));
+                break;
+            }
+        }
+    }
+
+    for tx in &worker_txs {
+        let _ = tx.send(WorkerMsg::Shutdown);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    if let Some(e) = error {
+        return Err(e);
+    }
+
+    Ok(RunOutput {
+        collected,
+        outputs,
+        elapsed: start.elapsed(),
+        sched_overhead,
+        metrics,
+        path_len: path.len() as usize,
+    })
+}

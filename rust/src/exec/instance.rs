@@ -1,0 +1,697 @@
+//! One physical operator instance: the §6.1 transformation wrapped with
+//! the §6.3 coordination state machine — output-bag selection, input-bag
+//! selection (Φ-aware), conditional-output watchers, input-buffer GC, and
+//! §7 state reuse.
+
+use super::message::{DriverMsg, WorkerMsg};
+use super::plan::ExecPlan;
+use crate::coord::{
+    choose_phi_input, required_input_len, ExecPath, OutWatcher, SendDecision,
+};
+use crate::dataflow::{NodeId, Route};
+use crate::frontend::Rhs;
+use crate::ops::{Transformation, VecCollector};
+use crate::value::Value;
+use rustc_hash::FxHashMap;
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+
+/// Shared per-event environment handed from the worker to instances.
+pub struct Env<'a> {
+    /// Worker-local replica of the execution path.
+    pub path: &'a ExecPath,
+    /// Senders to every worker (indexed by worker id).
+    pub workers: &'a [Sender<WorkerMsg>],
+    /// Sender to the driver.
+    pub driver: &'a Sender<DriverMsg>,
+    /// Shared plan.
+    pub plan: &'a ExecPlan,
+    /// Data-batch size for element sends.
+    pub batch: usize,
+    /// §7 state reuse enabled? (Fig. 8 ablation switch.)
+    pub reuse: bool,
+    /// Pre-resolved hot-path counters (see `worker::EngineCounters`).
+    pub counters: &'a super::worker::EngineCounters,
+    /// Report per-bag completions to the driver (barrier mode only).
+    pub report_bag_done: bool,
+}
+
+use std::sync::atomic::Ordering;
+
+struct InBuf {
+    items: Vec<Value>,
+    closes: usize,
+}
+
+struct ActiveIn {
+    required: u32,
+    fed: usize,
+    closed_delivered: bool,
+    reused: bool,
+}
+
+struct CurOut {
+    len: u32,
+    /// Per logical input: `None` = inactive (Φ non-chosen edge).
+    active: Vec<Option<ActiveIn>>,
+    cond_value: Option<bool>,
+    collect_items: Vec<Value>,
+}
+
+struct Retained {
+    items: Vec<Value>,
+    computing: bool,
+    /// Per conditional out-edge index: watcher + sent flag.
+    watchers: Vec<(usize, OutWatcher, bool)>,
+}
+
+/// A physical operator instance.
+pub struct Instance {
+    /// Logical node id.
+    pub node: NodeId,
+    /// Instance index within the node.
+    pub inst: usize,
+    transform: Box<dyn Transformation>,
+    pending_out: VecDeque<u32>,
+    cur: Option<CurOut>,
+    bufs: Vec<FxHashMap<u32, InBuf>>,
+    prev_req: Vec<Option<u32>>,
+    retained: FxHashMap<u32, Retained>,
+    send_bufs: Vec<Vec<Vec<Value>>>,
+    staging: VecCollector,
+    done_sent: bool,
+    is_phi: bool,
+    is_cond: bool,
+    collect_label: Option<String>,
+}
+
+impl Instance {
+    /// Create the instance for `(node, inst)`.
+    pub fn new(plan: &ExecPlan, node: NodeId, inst: usize, io_dir: &std::path::Path) -> Instance {
+        let n = &plan.graph.nodes[node];
+        let ctx = crate::ops::MakeCtx {
+            inst,
+            insts: plan.num_insts[node],
+            registry: crate::workload::registry::global(),
+            io_dir: io_dir.to_path_buf(),
+        };
+        let transform = crate::ops::make(&n.op, &ctx)
+            .unwrap_or_else(|e| panic!("instantiating {}: {e}", n.name));
+        let n_inputs = n.inputs.len();
+        let send_bufs = plan.out_edges[node]
+            .iter()
+            .map(|oe| vec![Vec::new(); oe.dst_insts])
+            .collect();
+        Instance {
+            node,
+            inst,
+            transform,
+            pending_out: VecDeque::new(),
+            cur: None,
+            bufs: (0..n_inputs).map(|_| FxHashMap::default()).collect(),
+            prev_req: vec![None; n_inputs],
+            retained: FxHashMap::default(),
+            send_bufs,
+            staging: VecCollector::default(),
+            done_sent: false,
+            is_phi: matches!(n.op, Rhs::Phi(_)),
+            is_cond: n.cond.is_some(),
+            collect_label: match &n.op {
+                Rhs::Collect { label, .. } => Some(label.clone()),
+                _ => None,
+            },
+        }
+    }
+
+    // ---- event entry points (called by the worker loop) -----------------
+
+    /// A data batch arrived on `input` for bag `bag_len` (possibly also
+    /// carrying the producer's close marker).
+    pub fn on_data(
+        &mut self,
+        input: usize,
+        bag_len: u32,
+        items: Box<[Value]>,
+        close: bool,
+        env: &mut Env,
+    ) {
+        let buf = self.bufs[input].entry(bag_len).or_insert_with(|| InBuf {
+            items: Vec::new(),
+            closes: 0,
+        });
+        buf.items.extend(items.into_vec());
+        if close {
+            buf.closes += 1;
+        }
+        self.try_advance(env);
+    }
+
+    /// A close marker arrived on `input` for bag `bag_len`.
+    pub fn on_close(&mut self, input: usize, bag_len: u32, env: &mut Env) {
+        let buf = self.bufs[input].entry(bag_len).or_insert_with(|| InBuf {
+            items: Vec::new(),
+            closes: 0,
+        });
+        buf.closes += 1;
+        debug_assert!(
+            buf.closes <= env.plan.in_edges[self.node][input].expected_closes,
+            "too many closes on node {} input {input} bag {bag_len}",
+            self.node
+        );
+        self.try_advance(env);
+    }
+
+    /// The execution path grew by `blocks` starting at 0-based `start`.
+    pub fn on_append(&mut self, start: usize, blocks: &[crate::frontend::BlockId], env: &mut Env) {
+        let my_block = env.plan.graph.nodes[self.node].block;
+        for (k, &b) in blocks.iter().enumerate() {
+            let pos = (start + k + 1) as u32; // 1-based
+            if b == my_block {
+                self.pending_out.push_back(pos);
+            }
+            // §6.3.4: update conditional-output watchers.
+            self.process_watchers(|w| w.on_block(pos, b), env);
+        }
+        if env.path.is_final() {
+            self.process_watchers(|w| w.on_final(), env);
+        }
+        self.gc_inputs(env);
+        self.try_advance(env);
+    }
+
+    /// Idle hook: re-check progress and completion (used at startup).
+    pub fn poke(&mut self, env: &mut Env) {
+        self.try_advance(env);
+    }
+
+    // ---- coordination core ----------------------------------------------
+
+    fn process_watchers(&mut self, mut f: impl FnMut(&mut OutWatcher) -> SendDecision, env: &mut Env) {
+        // 1. Update watcher states; collect newly-latched sends of
+        //    finished (non-computing) bags.
+        let mut to_send: Vec<(u32, usize, Vec<Value>)> = Vec::new();
+        for (&len, r) in self.retained.iter_mut() {
+            let computing = r.computing;
+            for (edge_idx, w, sent) in r.watchers.iter_mut() {
+                let st = f(w);
+                if st == SendDecision::Send && !*sent && !computing {
+                    *sent = true;
+                    to_send.push((len, *edge_idx, r.items.clone()));
+                }
+            }
+        }
+        // 2. Transmit.
+        for (len, edge_idx, items) in to_send {
+            self.transmit_retained(len, edge_idx, &items, env);
+        }
+        // 3. Sweep fully-resolved retained bags.
+        let before = self.retained.len();
+        self.retained.retain(|_, r| {
+            r.computing
+                || r.watchers.iter().any(|(_, w, sent)| match w.state() {
+                    SendDecision::Undecided => true,
+                    SendDecision::Send => !*sent,
+                    SendDecision::Dead => false,
+                })
+        });
+        env.counters.retained_dropped.fetch_add((before - self.retained.len()) as u64, Ordering::Relaxed);
+    }
+
+    fn try_advance(&mut self, env: &mut Env) {
+        loop {
+            if self.cur.is_none() {
+                let Some(&len) = self.pending_out.front() else { break };
+                self.start_bag(len, env);
+                self.pending_out.pop_front();
+            }
+            if self.feed(env) {
+                self.finish_bag(env);
+                self.gc_inputs(env);
+                continue;
+            }
+            break;
+        }
+        self.maybe_done(env);
+    }
+
+    fn start_bag(&mut self, len: u32, env: &mut Env) {
+        let n = &env.plan.graph.nodes[self.node];
+        debug_assert_eq!(env.path.at(len), n.block, "output bag at foreign block");
+        self.transform.open_out_bag();
+
+        // §6.3.4: retained entry with one watcher per conditional out-edge.
+        let cond_edges: Vec<usize> = env.plan.out_edges[self.node]
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.conditional)
+            .map(|(i, _)| i)
+            .collect();
+        if !cond_edges.is_empty() {
+            let mut watchers: Vec<(usize, OutWatcher, bool)> = cond_edges
+                .iter()
+                .map(|&i| {
+                    let oe = &env.plan.out_edges[self.node][i];
+                    (i, OutWatcher::new(len, oe.target_block, oe.blockers.clone()), false)
+                })
+                .collect();
+            // The path may already extend beyond this bag (control flow can
+            // run ahead of slow data operators — that is loop pipelining):
+            // replay the positions the watchers have missed. Latched sends
+            // fire at finish_bag (the bag is still computing).
+            for (_, w, _) in watchers.iter_mut() {
+                for pos in (len + 1)..=env.path.len() {
+                    w.on_block(pos, env.path.at(pos));
+                }
+                if env.path.is_final() {
+                    w.on_final();
+                }
+            }
+            self.retained.insert(len, Retained { items: Vec::new(), computing: true, watchers });
+        }
+
+        // §6.3.3: choose input bags.
+        let n_inputs = n.inputs.len();
+        let mut active: Vec<Option<ActiveIn>> = (0..n_inputs).map(|_| None).collect();
+        if self.is_phi {
+            let blocks: Vec<_> = env.plan.in_edges[self.node]
+                .iter()
+                .map(|ie| ie.src_block)
+                .collect();
+            let (idx, req) = choose_phi_input(env.path.blocks(), len, &blocks, n.block)
+                .unwrap_or_else(|| panic!("Φ node {} has no available input at len {len}", n.name));
+            active[idx] = Some(ActiveIn {
+                required: req,
+                fed: 0,
+                closed_delivered: false,
+                reused: false,
+            });
+        } else {
+            for i in 0..n_inputs {
+                let src_block = env.plan.in_edges[self.node][i].src_block;
+                let req = required_input_len(env.path.blocks(), len, src_block)
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "node {} input {i} (block {src_block}) unavailable at len {len}",
+                            n.name
+                        )
+                    });
+                let keeps = self.transform.keeps_input_state(i);
+                let mut reused = false;
+                if keeps {
+                    if env.reuse && self.prev_req[i] == Some(req) {
+                        reused = true;
+                        env.counters.state_reused.fetch_add(1, Ordering::Relaxed);
+                    } else if self.prev_req[i].is_some() {
+                        self.transform.drop_state(i);
+                        env.counters.state_dropped.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                self.prev_req[i] = Some(req);
+                active[i] = Some(ActiveIn { required: req, fed: 0, closed_delivered: reused, reused });
+            }
+        }
+        self.cur = Some(CurOut { len, active, cond_value: None, collect_items: Vec::new() });
+
+        // Sources generate immediately.
+        if n_inputs == 0 {
+            self.transform.generate(&mut self.staging);
+            self.route_staging(env);
+        }
+        env.counters.bags_started.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Feed buffered input to the transformation. Returns true when the
+    /// output bag is complete.
+    fn feed(&mut self, env: &mut Env) -> bool {
+        let Some(cur) = &mut self.cur else { return false };
+        let len = cur.len;
+        let mut all_done = true;
+        for i in 0..self.bufs.len() {
+            let Some(a) = &mut cur.active[i] else { continue };
+            if a.reused {
+                continue;
+            }
+            if let Some(buf) = self.bufs[i].get(&a.required) {
+                // Feed new items.
+                while a.fed < buf.items.len() {
+                    let v = buf.items[a.fed].clone();
+                    a.fed += 1;
+                    self.transform.push_in_element(i, &v, &mut self.staging);
+                }
+                let expected = env.plan.in_edges[self.node][i].expected_closes;
+                if buf.closes >= expected && !a.closed_delivered {
+                    a.closed_delivered = true;
+                    self.transform.close_in_bag(i, &mut self.staging);
+                }
+            }
+            if !a.closed_delivered {
+                all_done = false;
+            }
+        }
+        // Route whatever was emitted so far (pipelining).
+        let _ = len;
+        self.route_staging(env);
+        all_done
+    }
+
+    fn finish_bag(&mut self, env: &mut Env) {
+        self.transform.close_out_bag(&mut self.staging);
+        self.route_staging(env);
+        let cur = self.cur.take().expect("finish without current bag");
+        let len = cur.len;
+
+        // Flush unconditional sends, piggybacking close markers on the
+        // final batch per destination; destinations with no buffered data
+        // get a bare Close.
+        for ei in 0..self.send_bufs.len() {
+            let oe = env.plan.out_edges[self.node][ei].clone();
+            if oe.conditional {
+                continue;
+            }
+            for dst in close_targets(oe.route, self.inst, oe.dst_insts) {
+                if !self.flush_one(ei, dst, len, true, env) {
+                    let _ =
+                        env.workers[env.plan.worker_of(oe.dst_node, dst)].send(WorkerMsg::Close {
+                            node: oe.dst_node,
+                            input: oe.dst_input,
+                            dst_inst: dst,
+                            bag_len: len,
+                        });
+                }
+            }
+        }
+
+        // Retained entry: computation finished; transmit any already-latched
+        // sends (§6.3.4 decisions can arrive while the bag is computing).
+        let mut latched: Vec<(usize, Vec<Value>)> = Vec::new();
+        let mut resolved = false;
+        if let Some(r) = self.retained.get_mut(&len) {
+            r.computing = false;
+            for (e, w, sent) in r.watchers.iter_mut() {
+                if w.state() == SendDecision::Send && !*sent {
+                    *sent = true;
+                    latched.push((*e, r.items.clone()));
+                }
+            }
+            resolved = r.watchers.iter().all(|(_, w, sent)| match w.state() {
+                SendDecision::Send => *sent,
+                SendDecision::Dead => true,
+                SendDecision::Undecided => false,
+            });
+        }
+        for (e, items) in latched {
+            self.transmit_retained(len, e, &items, env);
+        }
+        if resolved {
+            self.retained.remove(&len);
+        }
+
+        // Condition node: report the decision (§5.3 / §6.3.1).
+        if self.is_cond {
+            let value = cur
+                .cond_value
+                .unwrap_or_else(|| panic!("condition node produced no boolean"));
+            let _ = env.driver.send(DriverMsg::Decision { node: self.node, bag_len: len, value });
+        }
+        // Collect sink: ship the bag to the driver.
+        if let Some(label) = &self.collect_label {
+            let _ = env.driver.send(DriverMsg::Output {
+                label: label.clone(),
+                bag_len: len,
+                items: cur.collect_items,
+            });
+        }
+        if env.report_bag_done {
+            let _ = env.driver.send(DriverMsg::BagDone {
+                node: self.node,
+                inst: self.inst,
+                bag_len: len,
+            });
+        }
+        env.counters.bags_completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    // ---- emission routing -------------------------------------------------
+
+    fn route_staging(&mut self, env: &mut Env) {
+        if self.staging.items.is_empty() {
+            return;
+        }
+        let items = std::mem::take(&mut self.staging.items);
+        let cur = self.cur.as_mut().expect("emission outside a bag");
+        let len = cur.len;
+        if self.is_cond {
+            for v in &items {
+                debug_assert!(cur.cond_value.is_none(), "condition bag not a singleton");
+                cur.cond_value = Some(v.as_bool());
+            }
+        }
+        if self.collect_label.is_some() {
+            cur.collect_items.extend(items.iter().cloned());
+        }
+        let has_conditional = self.retained.contains_key(&len);
+        let out_edges = &env.plan.out_edges[self.node];
+        for v in items {
+            for (ei, oe) in out_edges.iter().enumerate() {
+                if oe.conditional {
+                    continue;
+                }
+                let dst = route_target(oe.route, &v, self.inst, oe.dst_insts);
+                match dst {
+                    Target::One(d) => self.send_bufs[ei][d].push(v.clone()),
+                    Target::All => {
+                        for d in 0..oe.dst_insts {
+                            self.send_bufs[ei][d].push(v.clone());
+                        }
+                    }
+                }
+            }
+            if has_conditional {
+                self.retained.get_mut(&len).unwrap().items.push(v);
+            }
+        }
+        // Flush large buffers eagerly (pipelined transfer).
+        self.flush_large_send_bufs(len, env);
+    }
+
+    fn flush_large_send_bufs(&mut self, len: u32, env: &mut Env) {
+        for ei in 0..self.send_bufs.len() {
+            for d in 0..self.send_bufs[ei].len() {
+                if self.send_bufs[ei][d].len() >= env.batch {
+                    self.flush_one(ei, d, len, false, env);
+                }
+            }
+        }
+    }
+
+
+
+    /// Flush one (edge, dst) buffer; returns true if a batch was sent.
+    /// `close`: piggyback the producer's close marker on the batch.
+    fn flush_one(&mut self, ei: usize, d: usize, len: u32, close: bool, env: &mut Env) -> bool {
+        if self.send_bufs[ei][d].is_empty() {
+            return false;
+        }
+        let oe = &env.plan.out_edges[self.node][ei];
+        let items: Box<[Value]> = std::mem::take(&mut self.send_bufs[ei][d]).into_boxed_slice();
+        env.counters.batches_sent.fetch_add(1, Ordering::Relaxed);
+        env.counters.elements_sent.fetch_add(items.len() as u64, Ordering::Relaxed);
+        let _ = env.workers[env.plan.worker_of(oe.dst_node, d)].send(WorkerMsg::Data {
+            node: oe.dst_node,
+            input: oe.dst_input,
+            dst_inst: d,
+            bag_len: len,
+            items,
+            close,
+        });
+        true
+    }
+
+    fn transmit_retained(&mut self, len: u32, edge_idx: usize, items: &[Value], env: &mut Env) {
+        let oe = &env.plan.out_edges[self.node][edge_idx];
+        env.counters.conditional_sends.fetch_add(1, Ordering::Relaxed);
+        // Partition and send the full bag, then close.
+        let mut per_dst: Vec<Vec<Value>> = vec![Vec::new(); oe.dst_insts];
+        for v in items {
+            match route_target(oe.route, v, self.inst, oe.dst_insts) {
+                Target::One(d) => per_dst[d].push(v.clone()),
+                Target::All => {
+                    for dst in per_dst.iter_mut() {
+                        dst.push(v.clone());
+                    }
+                }
+            }
+        }
+        let close_to = close_targets(oe.route, self.inst, oe.dst_insts);
+        for d in close_to {
+            let batch = std::mem::take(&mut per_dst[d]);
+            if batch.is_empty() {
+                let _ = env.workers[env.plan.worker_of(oe.dst_node, d)].send(WorkerMsg::Close {
+                    node: oe.dst_node,
+                    input: oe.dst_input,
+                    dst_inst: d,
+                    bag_len: len,
+                });
+            } else {
+                env.counters.elements_sent.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                let _ = env.workers[env.plan.worker_of(oe.dst_node, d)].send(WorkerMsg::Data {
+                    node: oe.dst_node,
+                    input: oe.dst_input,
+                    dst_inst: d,
+                    bag_len: len,
+                    items: batch.into_boxed_slice(),
+                    close: true,
+                });
+            }
+        }
+    }
+
+    // ---- GC and completion ------------------------------------------------
+
+    /// Consumer-side buffer GC (§6.3.3). A buffered bag with id `len` on
+    /// edge `i` is superseded once any supersede block (the input's own
+    /// block; for Φ consumers also the sibling blocks) occurs at some
+    /// `j > len`: every output at a position `> j` selects a candidate
+    /// with prefix ≥ j instead. The bag therefore stays needed only by
+    /// outputs at positions `< j` — plus, exactly at `j`, a Φ
+    /// *self-argument* (the output at `j` reads the Φ's own PREVIOUS bag).
+    /// With in-order output processing this gives an O(1)-per-bag rule on
+    /// `min_pending` (the earliest uncompleted output position):
+    ///
+    /// * `min_pending < j`  → keep (still selectable);
+    /// * `min_pending == j` → exact §6.3.3 selection test at `j`;
+    /// * `min_pending > j` or none pending → dead.
+    ///
+    /// (An earlier version scanned ALL pending outputs per buffered bag —
+    /// O(pending²) when the control path runs far ahead of slow data
+    /// operators under pipelining; see EXPERIMENTS.md §Perf #5.)
+    fn gc_inputs(&mut self, env: &mut Env) {
+        let path_final = env.path.is_final();
+        let own_block = env.plan.graph.nodes[self.node].block;
+        let min_pending: Option<u32> = self
+            .cur
+            .as_ref()
+            .map(|c| c.len)
+            .or_else(|| self.pending_out.front().copied());
+        let phi_blocks: Vec<crate::frontend::BlockId> = if self.is_phi {
+            env.plan.in_edges[self.node].iter().map(|e| e.src_block).collect()
+        } else {
+            Vec::new()
+        };
+        let is_phi = self.is_phi;
+        for i in 0..self.bufs.len() {
+            let ie = &env.plan.in_edges[self.node][i];
+            let src_block = ie.src_block;
+            let supersede = &ie.supersede_blocks;
+            let path = env.path;
+            let keeps = self.transform.keeps_input_state(i) && env.reuse;
+            let prev = self.prev_req[i];
+            let phi_blocks = &phi_blocks;
+            self.bufs[i].retain(|&len, _| {
+                // Keep the bag backing reused operator state (its `closes`
+                // entry anchors the §7 reuse bookkeeping).
+                if keeps && prev == Some(len) && !path_final {
+                    return true;
+                }
+                let needed_at = |p: u32| -> bool {
+                    if is_phi {
+                        choose_phi_input(path.blocks(), p, phi_blocks, own_block)
+                            .map(|(e, l)| e == i && l == len)
+                            .unwrap_or(false)
+                    } else {
+                        required_input_len(path.blocks(), p, src_block) == Some(len)
+                    }
+                };
+                match (path.next_occurrence_of_any(supersede, len), min_pending) {
+                    (None, Some(_)) => true,         // still the latest candidate
+                    (None, None) => !path_final,     // may serve future outputs
+                    (Some(_), None) => false,        // all selectable outputs done
+                    (Some(j), Some(mp)) => {
+                        if mp < j {
+                            true
+                        } else if mp == j {
+                            needed_at(j) // Φ self-argument boundary case
+                        } else {
+                            false
+                        }
+                    }
+                }
+            });
+        }
+    }
+
+    fn maybe_done(&mut self, env: &mut Env) {
+        if self.done_sent || !env.path.is_final() {
+            return;
+        }
+        if self.cur.is_none() && self.pending_out.is_empty() {
+            // All watchers resolved at finalization; drop leftovers.
+            self.retained.clear();
+            for b in &mut self.bufs {
+                b.clear();
+            }
+            self.done_sent = true;
+            let _ = env.driver.send(DriverMsg::Done { node: self.node, inst: self.inst });
+        }
+    }
+}
+
+enum Target {
+    One(usize),
+    All,
+}
+
+fn route_target(route: Route, v: &Value, self_inst: usize, dst_insts: usize) -> Target {
+    match route {
+        Route::Forward => Target::One(self_inst.min(dst_insts - 1)),
+        Route::HashKey => Target::One((v.key_hash() as usize) % dst_insts),
+        Route::Broadcast => Target::All,
+        Route::Gather => Target::One(0),
+    }
+}
+
+fn close_targets(route: Route, self_inst: usize, dst_insts: usize) -> Vec<usize> {
+    match route {
+        Route::Forward => vec![self_inst.min(dst_insts - 1)],
+        Route::Gather => vec![0],
+        Route::HashKey | Route::Broadcast => (0..dst_insts).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_targets() {
+        assert!(matches!(
+            route_target(Route::Forward, &Value::I64(1), 2, 4),
+            Target::One(2)
+        ));
+        assert!(matches!(
+            route_target(Route::Gather, &Value::I64(1), 2, 1),
+            Target::One(0)
+        ));
+        assert!(matches!(route_target(Route::Broadcast, &Value::I64(1), 0, 3), Target::All));
+        let Target::One(d) = route_target(Route::HashKey, &Value::I64(42), 0, 3) else {
+            panic!()
+        };
+        assert!(d < 3);
+    }
+
+    #[test]
+    fn close_target_sets() {
+        assert_eq!(close_targets(Route::Forward, 2, 4), vec![2]);
+        assert_eq!(close_targets(Route::Gather, 2, 1), vec![0]);
+        assert_eq!(close_targets(Route::HashKey, 0, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn hash_routing_is_consistent_per_key() {
+        let a = Value::pair(Value::I64(7), Value::I64(1));
+        let b = Value::pair(Value::I64(7), Value::I64(2));
+        let Target::One(da) = route_target(Route::HashKey, &a, 0, 5) else { panic!() };
+        let Target::One(db) = route_target(Route::HashKey, &b, 0, 5) else { panic!() };
+        assert_eq!(da, db, "same key must co-partition");
+    }
+}

@@ -1,0 +1,94 @@
+//! Messages of the simulated cluster: worker-bound data/control and
+//! driver-bound coordination reports.
+
+use crate::dataflow::NodeId;
+use crate::frontend::BlockId;
+use crate::value::Value;
+
+/// Messages delivered to worker threads.
+#[derive(Debug)]
+pub enum WorkerMsg {
+    /// A batch of elements of one input bag partition, optionally also
+    /// carrying this producer instance's close marker (piggybacked to
+    /// halve hot-path message count — see EXPERIMENTS.md §Perf).
+    Data {
+        /// Target logical node.
+        node: NodeId,
+        /// Target logical input index.
+        input: usize,
+        /// Target physical instance.
+        dst_inst: usize,
+        /// Bag id: length of the execution-path prefix at creation.
+        bag_len: u32,
+        /// The elements.
+        items: Box<[Value]>,
+        /// True: this batch is the producer instance's last for the bag.
+        close: bool,
+    },
+    /// One producer instance finished its partition of one input bag.
+    Close {
+        /// Target logical node.
+        node: NodeId,
+        /// Target logical input index.
+        input: usize,
+        /// Target physical instance.
+        dst_inst: usize,
+        /// Bag id (path-prefix length).
+        bag_len: u32,
+    },
+    /// Execution-path extension broadcast (§6.3.1), relayed by the driver.
+    Append {
+        /// 0-based start position of `blocks` within the global path.
+        start: usize,
+        /// The appended chain.
+        blocks: Vec<BlockId>,
+        /// True when the chain ends at a terminal block.
+        final_: bool,
+    },
+    /// Stop the worker loop.
+    Shutdown,
+}
+
+/// Messages delivered to the driver.
+#[derive(Debug)]
+pub enum DriverMsg {
+    /// A condition node evaluated its singleton boolean bag (§5.3).
+    Decision {
+        /// The condition node.
+        node: NodeId,
+        /// Bag id — must equal the current path length.
+        bag_len: u32,
+        /// The boolean.
+        value: bool,
+    },
+    /// An instance completed one output bag (barrier mode + metrics).
+    BagDone {
+        /// Node.
+        node: NodeId,
+        /// Instance.
+        inst: usize,
+        /// Bag id.
+        bag_len: u32,
+    },
+    /// A `collect` sink delivered a bag to the driver.
+    Output {
+        /// Collect label.
+        label: String,
+        /// Bag id.
+        bag_len: u32,
+        /// Elements.
+        items: Vec<Value>,
+    },
+    /// An instance has finished all work (path final, no pending bags).
+    Done {
+        /// Node.
+        node: NodeId,
+        /// Instance.
+        inst: usize,
+    },
+    /// A worker thread panicked.
+    Panic {
+        /// Panic payload rendered to a string.
+        msg: String,
+    },
+}

@@ -1,0 +1,230 @@
+//! Physical execution plan: the logical dataflow graph annotated with
+//! instance counts, output-edge metadata, and §6.3 coordination constants,
+//! shared read-only by all workers.
+
+use crate::dataflow::{DataflowGraph, NodeId, Par, Route};
+use crate::frontend::{BlockId, Rhs};
+use std::sync::Arc;
+
+/// One output edge of a node, precomputed for the send path.
+#[derive(Clone, Debug)]
+pub struct OutEdgeMeta {
+    /// Consumer node.
+    pub dst_node: NodeId,
+    /// Consumer's logical input index.
+    pub dst_input: usize,
+    /// Consumer's instance count.
+    pub dst_insts: usize,
+    /// Element routing.
+    pub route: Route,
+    /// Cross-block edge (conditional output, §6.3.4)?
+    pub conditional: bool,
+    /// Consumer's block (b2).
+    pub target_block: BlockId,
+    /// §6.3.4 blockers: producer's block, plus sibling-input blocks when
+    /// the consumer is a Φ.
+    pub blockers: Vec<BlockId>,
+}
+
+/// One input edge of a node, precomputed for the receive path.
+#[derive(Clone, Debug)]
+pub struct InEdgeMeta {
+    /// Producer node.
+    pub src_node: NodeId,
+    /// Producer's block (b1 of §6.3.3).
+    pub src_block: BlockId,
+    /// Producer's instance count.
+    pub src_insts: usize,
+    /// Element routing.
+    pub route: Route,
+    /// Number of `Close` markers that complete one bag partition.
+    pub expected_closes: usize,
+    /// Blocks whose recurrence supersedes a buffered bag on this edge
+    /// (consumer-side GC, §6.3.3): the producer's block, plus sibling
+    /// input blocks when this node is a Φ.
+    pub supersede_blocks: Vec<BlockId>,
+}
+
+/// The physical plan.
+pub struct ExecPlan {
+    /// Logical graph.
+    pub graph: Arc<DataflowGraph>,
+    /// Worker count the plan was instantiated for.
+    pub workers: usize,
+    /// Physical instances per node.
+    pub num_insts: Vec<usize>,
+    /// Output edges per node.
+    pub out_edges: Vec<Vec<OutEdgeMeta>>,
+    /// Input edges per node (parallel to `node.inputs`).
+    pub in_edges: Vec<Vec<InEdgeMeta>>,
+    /// Total physical instances (driver's Done target).
+    pub total_instances: usize,
+    /// Per block: total instances of nodes in that block (barrier mode).
+    pub insts_per_block: Vec<usize>,
+}
+
+impl ExecPlan {
+    /// Build the plan for `workers` workers.
+    pub fn new(graph: Arc<DataflowGraph>, workers: usize) -> ExecPlan {
+        let workers = workers.max(1);
+        let num_insts: Vec<usize> = graph
+            .nodes
+            .iter()
+            .map(|n| match n.par {
+                Par::One => 1,
+                Par::All => workers,
+            })
+            .collect();
+
+        let mut out_edges: Vec<Vec<OutEdgeMeta>> = vec![Vec::new(); graph.nodes.len()];
+        let mut in_edges: Vec<Vec<InEdgeMeta>> = vec![Vec::new(); graph.nodes.len()];
+        for node in &graph.nodes {
+            let is_phi = matches!(node.op, Rhs::Phi(_));
+            for (i, inp) in node.inputs.iter().enumerate() {
+                let mut blockers = vec![node.inputs[i].src_block];
+                let mut supersede = vec![inp.src_block];
+                if is_phi {
+                    for s in graph.phi_sibling_blocks(node.id, i) {
+                        blockers.push(s);
+                        supersede.push(s);
+                    }
+                }
+                // Producer's own block is always a §6.3.4 blocker: a newer
+                // bag supersedes. (It is blockers[0] == src_block already.)
+                out_edges[inp.src].push(OutEdgeMeta {
+                    dst_node: node.id,
+                    dst_input: i,
+                    dst_insts: num_insts[node.id],
+                    route: inp.route,
+                    conditional: inp.conditional,
+                    target_block: node.block,
+                    blockers,
+                });
+                let expected_closes = match inp.route {
+                    Route::Forward => 1,
+                    _ => num_insts[inp.src],
+                };
+                in_edges[node.id].push(InEdgeMeta {
+                    src_node: inp.src,
+                    src_block: inp.src_block,
+                    src_insts: num_insts[inp.src],
+                    route: inp.route,
+                    expected_closes,
+                    supersede_blocks: supersede,
+                });
+            }
+        }
+
+        let total_instances = num_insts.iter().sum();
+        let mut insts_per_block = vec![0usize; graph.cfg.num_blocks()];
+        for n in &graph.nodes {
+            insts_per_block[n.block] += num_insts[n.id];
+        }
+
+        ExecPlan {
+            graph,
+            workers,
+            num_insts,
+            out_edges,
+            in_edges,
+            total_instances,
+            insts_per_block,
+        }
+    }
+
+    /// Which worker hosts instance `inst` of `node`.
+    pub fn worker_of(&self, node: NodeId, inst: usize) -> usize {
+        if self.num_insts[node] == 1 {
+            0
+        } else {
+            inst
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_lower;
+
+    fn plan(src: &str, workers: usize) -> ExecPlan {
+        let g = crate::compile(&parse_and_lower(src).unwrap()).unwrap();
+        ExecPlan::new(Arc::new(g), workers)
+    }
+
+    #[test]
+    fn instance_counts_respect_parallelism() {
+        let p = plan(
+            "a = bag(1, 2, 3).map(|x| pair(x, 1)); b = a.reduceByKey(|x, y| x + y); n = b.count(); writeFile(b, \"o\" + str(n));",
+            4,
+        );
+        // map & reduceByKey: 4 instances; count/collect sinks: 1.
+        let g = &p.graph;
+        for n in &g.nodes {
+            match &n.op {
+                // Lifted-scalar maps are singletons (Par::One).
+                Rhs::Map { .. } if !n.singleton => {
+                    assert_eq!(p.num_insts[n.id], 4, "{}", n.name)
+                }
+                Rhs::ReduceByKey { .. } => {
+                    assert_eq!(p.num_insts[n.id], 4, "{}", n.name)
+                }
+                Rhs::BagLit(items) if items.len() > 1 => {
+                    assert_eq!(p.num_insts[n.id], 4, "{}", n.name)
+                }
+                Rhs::Count { .. } | Rhs::Collect { .. } => {
+                    assert_eq!(p.num_insts[n.id], 1, "{}", n.name)
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(p.total_instances, p.num_insts.iter().sum::<usize>());
+    }
+
+    #[test]
+    fn forward_edges_expect_one_close() {
+        let p = plan("a = bag(1, 2); b = a.map(|x| x + 1); collect(b, \"o\");", 3);
+        let g = &p.graph;
+        let map = g.nodes.iter().find(|n| matches!(n.op, Rhs::Map { .. })).unwrap();
+        let ie = &p.in_edges[map.id][0];
+        assert_eq!(ie.route, Route::Forward);
+        assert_eq!(ie.expected_closes, 1);
+        // collect gathers from 3 map instances.
+        let col = g.nodes.iter().find(|n| matches!(n.op, Rhs::Collect { .. })).unwrap();
+        let ce = &p.in_edges[col.id][0];
+        assert_eq!(ce.route, Route::Gather);
+        assert_eq!(ce.expected_closes, 3);
+    }
+
+    #[test]
+    fn phi_edges_carry_sibling_blockers() {
+        let p = plan("d = 1; while (d <= 3) { d = d + 1; } collect(bag(1), \"x\");", 2);
+        let g = &p.graph;
+        let phi = g.nodes.iter().find(|n| matches!(n.op, Rhs::Phi(_))).unwrap();
+        for ie in &p.in_edges[phi.id] {
+            assert_eq!(ie.supersede_blocks.len(), 2, "own block + sibling");
+        }
+        // The producers' out-edges to the phi carry both blockers too.
+        let mut phi_edges = 0;
+        for n in &g.nodes {
+            for oe in &p.out_edges[n.id] {
+                if oe.dst_node == phi.id {
+                    phi_edges += 1;
+                    assert_eq!(oe.blockers.len(), 2);
+                    assert!(oe.conditional);
+                }
+            }
+        }
+        assert_eq!(phi_edges, 2);
+    }
+
+    #[test]
+    fn worker_of_pins_singletons_to_zero() {
+        let p = plan("a = bag(1, 2); n = a.count(); writeFile(a, \"o\" + str(n));", 4);
+        let g = &p.graph;
+        let cnt = g.nodes.iter().find(|n| matches!(n.op, Rhs::Count { .. })).unwrap();
+        assert_eq!(p.worker_of(cnt.id, 0), 0);
+        let src = g.nodes.iter().find(|n| matches!(n.op, Rhs::BagLit(_))).unwrap();
+        assert_eq!(p.worker_of(src.id, 3), 3);
+    }
+}

@@ -1,0 +1,152 @@
+//! Worker thread: hosts one physical instance of every logical node
+//! assigned to it, maintains the local execution-path replica, and runs
+//! the event loop over its message queue.
+
+use super::instance::{Env, Instance};
+use super::message::{DriverMsg, WorkerMsg};
+use super::plan::ExecPlan;
+use crate::coord::ExecPath;
+use crate::metrics::Metrics;
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// Hot-path counters, resolved from [`Metrics`] once per run (the generic
+/// `Metrics::add` locks a map and formats a key — too slow per element).
+pub struct EngineCounters {
+    /// Output bags opened.
+    pub bags_started: Arc<AtomicU64>,
+    /// Output bags completed.
+    pub bags_completed: Arc<AtomicU64>,
+    /// Data batches sent.
+    pub batches_sent: Arc<AtomicU64>,
+    /// Elements sent (all edges).
+    pub elements_sent: Arc<AtomicU64>,
+    /// §7 build-side reuses.
+    pub state_reused: Arc<AtomicU64>,
+    /// §7 drop_state calls.
+    pub state_dropped: Arc<AtomicU64>,
+    /// Conditional-output transmissions (§6.3.4).
+    pub conditional_sends: Arc<AtomicU64>,
+    /// Retained bags discarded (§6.3.4).
+    pub retained_dropped: Arc<AtomicU64>,
+}
+
+impl EngineCounters {
+    /// Resolve all handles.
+    pub fn new(m: &Metrics) -> EngineCounters {
+        EngineCounters {
+            bags_started: m.counter("coord.bags_started"),
+            bags_completed: m.counter("coord.bags_completed"),
+            batches_sent: m.counter("exec.batches_sent"),
+            elements_sent: m.counter("exec.elements_sent"),
+            state_reused: m.counter("coord.state_reused"),
+            state_dropped: m.counter("coord.state_dropped"),
+            conditional_sends: m.counter("coord.conditional_sends"),
+            retained_dropped: m.counter("coord.retained_dropped"),
+        }
+    }
+}
+
+/// Parameters shared by all workers of a run.
+pub struct WorkerShared {
+    /// The physical plan.
+    pub plan: Arc<ExecPlan>,
+    /// Senders to all workers.
+    pub workers: Vec<Sender<WorkerMsg>>,
+    /// Sender to the driver.
+    pub driver: Sender<DriverMsg>,
+    /// Data batch size.
+    pub batch: usize,
+    /// §7 state reuse switch.
+    pub reuse: bool,
+    /// Metrics sink.
+    pub metrics: Arc<Metrics>,
+    /// Pre-resolved hot-path counters.
+    pub counters: Arc<EngineCounters>,
+    /// Report per-bag completions to the driver (barrier mode only — the
+    /// pipelined driver never reads them).
+    pub report_bag_done: bool,
+    /// I/O base directory.
+    pub io_dir: std::path::PathBuf,
+}
+
+/// Run one worker until `Shutdown`. Instances hosted: instance `w` of
+/// every `Par::All` node, instance 0 of `Par::One` nodes when `w == 0`.
+pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) {
+    let plan = shared.plan.clone();
+    let mut path = ExecPath::new(plan.graph.cfg.num_blocks());
+    // node id -> hosted instance (if any).
+    let mut instances: Vec<Option<Instance>> = plan
+        .graph
+        .nodes
+        .iter()
+        .map(|n| {
+            let insts = plan.num_insts[n.id];
+            if w < insts {
+                Some(Instance::new(&plan, n.id, w, &shared.io_dir))
+            } else {
+                None
+            }
+        })
+        .collect();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Shutdown => break,
+            WorkerMsg::Append { start, blocks, final_ } => {
+                path.append(start, &blocks, final_);
+                for node in 0..instances.len() {
+                    if let Some(inst) = instances[node].as_mut() {
+                        let mut env = Env {
+                            path: &path,
+                            workers: &shared.workers,
+                            driver: &shared.driver,
+                            plan: &plan,
+                            batch: shared.batch,
+                            reuse: shared.reuse,
+                            counters: &shared.counters,
+                            report_bag_done: shared.report_bag_done,
+                        };
+                        inst.on_append(start, &blocks, &mut env);
+                    }
+                }
+            }
+            WorkerMsg::Data { node, input, dst_inst, bag_len, items, close } => {
+                debug_assert_eq!(plan.worker_of(node, dst_inst), w);
+                let inst = instances[node]
+                    .as_mut()
+                    .unwrap_or_else(|| panic!("worker {w} has no instance of node {node}"));
+                debug_assert_eq!(inst.inst, dst_inst);
+                let mut env = Env {
+                    path: &path,
+                    workers: &shared.workers,
+                    driver: &shared.driver,
+                    plan: &plan,
+                    batch: shared.batch,
+                    reuse: shared.reuse,
+                    counters: &shared.counters,
+                    report_bag_done: shared.report_bag_done,
+                };
+                inst.on_data(input, bag_len, items, close, &mut env);
+            }
+            WorkerMsg::Close { node, input, dst_inst, bag_len } => {
+                debug_assert_eq!(plan.worker_of(node, dst_inst), w);
+                let inst = instances[node]
+                    .as_mut()
+                    .unwrap_or_else(|| panic!("worker {w} has no instance of node {node}"));
+                let mut env = Env {
+                    path: &path,
+                    workers: &shared.workers,
+                    driver: &shared.driver,
+                    plan: &plan,
+                    batch: shared.batch,
+                    reuse: shared.reuse,
+                    counters: &shared.counters,
+                    report_bag_done: shared.report_bag_done,
+                };
+                inst.on_close(input, bag_len, &mut env);
+            }
+        }
+    }
+}

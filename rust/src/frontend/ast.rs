@@ -1,0 +1,91 @@
+//! LabyLang abstract syntax tree.
+
+/// Binary operators over scalars (and `+` over strings for concat).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    /// Addition / string concatenation.
+    Add,
+    /// Subtraction.
+    Sub,
+    /// Multiplication.
+    Mul,
+    /// Division.
+    Div,
+    /// Remainder.
+    Rem,
+    /// Equality.
+    Eq,
+    /// Inequality.
+    Ne,
+    /// Less-than.
+    Lt,
+    /// Less-or-equal.
+    Le,
+    /// Greater-than.
+    Gt,
+    /// Greater-or-equal.
+    Ge,
+    /// Logical and (strict — both sides evaluated).
+    And,
+    /// Logical or (strict).
+    Or,
+}
+
+/// Unary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    /// Numeric negation.
+    Neg,
+    /// Logical not.
+    Not,
+}
+
+/// Expressions.
+#[derive(Clone, Debug)]
+pub enum Expr {
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// String literal.
+    Str(String),
+    /// Boolean literal.
+    Bool(bool),
+    /// Variable (or lambda parameter) reference.
+    Var(String),
+    /// Binary operation.
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    /// Unary operation.
+    Un(UnOp, Box<Expr>),
+    /// Free-function call: `readFile(e)`, `pair(a,b)`, `abs(x)`, ...
+    Call(String, Vec<Expr>),
+    /// Method call on a bag: `b.map(|x| ...)`, `b.join(other)`, ...
+    Method(Box<Expr>, String, Vec<Expr>),
+    /// Lambda `|p1, p2| body` — only valid as an operator argument.
+    Lambda(Vec<String>, Box<Expr>),
+}
+
+/// Statements.
+#[derive(Clone, Debug)]
+pub enum Stmt {
+    /// `x = expr;`
+    Assign(String, Expr),
+    /// `while (cond) { body }`
+    While(Expr, Vec<Stmt>),
+    /// `if (cond) { then } else { els }`
+    If(Expr, Vec<Stmt>, Vec<Stmt>),
+    /// Expression statement (side-effecting call like `writeFile(...)`).
+    ExprStmt(Expr),
+    /// `break;` — jump past the innermost loop (unstructured control flow;
+    /// SSA + the execution-path protocol handle it unchanged, §2.2).
+    Break,
+    /// `continue;` — jump to the innermost loop header.
+    Continue,
+}
+
+/// A parsed program.
+#[derive(Clone, Debug, Default)]
+pub struct Ast {
+    /// Top-level statements.
+    pub stmts: Vec<Stmt>,
+}

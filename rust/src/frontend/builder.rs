@@ -1,0 +1,409 @@
+//! Programmatic construction of imperative Labyrinth programs from Rust —
+//! the "embedded DSL" frontend. Used by benches, tests, and examples that
+//! need native-closure UDFs instead of LabyLang lambdas.
+//!
+//! The builder models the *imperative* (pre-SSA) language: variables are
+//! mutable, `assign_*` re-assigns them, and `while_` / `if_` create real
+//! control flow that the compiler pipeline lowers through SSA exactly like
+//! parsed LabyLang programs.
+
+use super::{BlockId, Instr, Program, Rhs, Terminator, Ty, Udf1, Udf2, UdfN, VarId};
+use crate::value::Value;
+
+/// Handle to a scalar-typed variable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScalarHandle(pub(crate) VarId);
+
+/// Handle to a bag-typed variable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BagHandle(pub(crate) VarId);
+
+/// Convenience constructor for unary UDFs.
+pub fn udf1(f: impl Fn(&Value) -> Value + Send + Sync + 'static) -> Udf1 {
+    Udf1::new("native", f)
+}
+
+/// Convenience constructor for binary UDFs.
+pub fn udf2(f: impl Fn(&Value, &Value) -> Value + Send + Sync + 'static) -> Udf2 {
+    Udf2::new("native", f)
+}
+
+/// Imperative program builder.
+pub struct ProgramBuilder {
+    prog: Program,
+    cur: BlockId,
+    finished: bool,
+}
+
+impl Default for ProgramBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ProgramBuilder {
+    /// Start an empty program.
+    pub fn new() -> ProgramBuilder {
+        let mut prog = Program::default();
+        let entry = prog.new_block();
+        prog.entry = entry;
+        ProgramBuilder { prog, cur: entry, finished: false }
+    }
+
+    fn emit(&mut self, name: &str, ty: Ty, rhs: Rhs) -> VarId {
+        let var = self.prog.new_var(name, ty);
+        self.prog.blocks[self.cur].instrs.push(Instr { var, rhs });
+        var
+    }
+
+    // ---- sources -------------------------------------------------------
+
+    /// Scalar i64 constant.
+    pub fn scalar_i64(&mut self, v: i64) -> ScalarHandle {
+        ScalarHandle(self.emit("c", Ty::Scalar, Rhs::Const(Value::I64(v))))
+    }
+
+    /// Scalar f64 constant.
+    pub fn scalar_f64(&mut self, v: f64) -> ScalarHandle {
+        ScalarHandle(self.emit("c", Ty::Scalar, Rhs::Const(Value::F64(v))))
+    }
+
+    /// Scalar string constant.
+    pub fn scalar_str(&mut self, v: impl Into<String>) -> ScalarHandle {
+        ScalarHandle(self.emit("c", Ty::Scalar, Rhs::Const(Value::str(v.into()))))
+    }
+
+    /// Arbitrary scalar constant.
+    pub fn scalar_const(&mut self, v: Value) -> ScalarHandle {
+        ScalarHandle(self.emit("c", Ty::Scalar, Rhs::Const(v)))
+    }
+
+    /// Literal bag source.
+    pub fn bag_lit(&mut self, items: Vec<Value>) -> BagHandle {
+        BagHandle(self.emit("lit", Ty::Bag, Rhs::BagLit(items)))
+    }
+
+    /// In-memory named source (see [`crate::workload::registry`]).
+    pub fn named_source(&mut self, name: impl Into<String>) -> BagHandle {
+        BagHandle(self.emit("src", Ty::Bag, Rhs::NamedSource(name.into())))
+    }
+
+    /// Read a file (one `Str` element per line) named by a scalar.
+    pub fn read_file(&mut self, name: ScalarHandle) -> BagHandle {
+        BagHandle(self.emit("read", Ty::Bag, Rhs::ReadFile { name: name.0 }))
+    }
+
+    // ---- mutable variables ---------------------------------------------
+
+    /// Declare a named mutable scalar initialized from `init`.
+    pub fn declare_scalar(&mut self, name: &str, init: ScalarHandle) -> ScalarHandle {
+        ScalarHandle(self.emit(name, Ty::Scalar, Rhs::Copy(init.0)))
+    }
+
+    /// Declare a named mutable bag initialized from `init`.
+    pub fn declare_bag(&mut self, name: &str, init: BagHandle) -> BagHandle {
+        BagHandle(self.emit(name, Ty::Bag, Rhs::Copy(init.0)))
+    }
+
+    /// Re-assign a mutable scalar (pre-SSA mutation).
+    pub fn assign_scalar(&mut self, var: ScalarHandle, value: ScalarHandle) {
+        self.prog.blocks[self.cur]
+            .instrs
+            .push(Instr { var: var.0, rhs: Rhs::Copy(value.0) });
+    }
+
+    /// Re-assign a mutable bag (pre-SSA mutation).
+    pub fn assign_bag(&mut self, var: BagHandle, value: BagHandle) {
+        self.prog.blocks[self.cur]
+            .instrs
+            .push(Instr { var: var.0, rhs: Rhs::Copy(value.0) });
+    }
+
+    // ---- bag operations --------------------------------------------------
+
+    /// Element-wise map.
+    pub fn map(&mut self, input: BagHandle, udf: Udf1) -> BagHandle {
+        BagHandle(self.emit("map", Ty::Bag, Rhs::Map { input: input.0, udf }))
+    }
+
+    /// Filter by predicate.
+    pub fn filter(&mut self, input: BagHandle, udf: Udf1) -> BagHandle {
+        BagHandle(self.emit("filter", Ty::Bag, Rhs::Filter { input: input.0, udf }))
+    }
+
+    /// One-to-many map.
+    pub fn flat_map(&mut self, input: BagHandle, udf: UdfN) -> BagHandle {
+        BagHandle(self.emit("flatMap", Ty::Bag, Rhs::FlatMap { input: input.0, udf }))
+    }
+
+    /// Hash equi-join on `Value::key()`; `build` is the stateful build side
+    /// (reused across steps when loop-invariant, §7).
+    pub fn join(&mut self, build: BagHandle, probe: BagHandle) -> BagHandle {
+        BagHandle(self.emit("join", Ty::Bag, Rhs::Join { left: build.0, right: probe.0 }))
+    }
+
+    /// Per-key reduction over `Pair(k, v)` elements.
+    pub fn reduce_by_key(&mut self, input: BagHandle, udf: Udf2) -> BagHandle {
+        BagHandle(self.emit("rbk", Ty::Bag, Rhs::ReduceByKey { input: input.0, udf }))
+    }
+
+    /// Full reduction to a scalar.
+    pub fn reduce(&mut self, input: BagHandle, udf: Udf2) -> ScalarHandle {
+        ScalarHandle(self.emit("reduce", Ty::Scalar, Rhs::Reduce { input: input.0, udf }))
+    }
+
+    /// Element count as a scalar.
+    pub fn count(&mut self, input: BagHandle) -> ScalarHandle {
+        ScalarHandle(self.emit("count", Ty::Scalar, Rhs::Count { input: input.0 }))
+    }
+
+    /// Duplicate elimination.
+    pub fn distinct(&mut self, input: BagHandle) -> BagHandle {
+        BagHandle(self.emit("distinct", Ty::Bag, Rhs::Distinct { input: input.0 }))
+    }
+
+    /// Multiset union.
+    pub fn union(&mut self, left: BagHandle, right: BagHandle) -> BagHandle {
+        BagHandle(self.emit("union", Ty::Bag, Rhs::Union { left: left.0, right: right.0 }))
+    }
+
+    /// Cartesian product.
+    pub fn cross(&mut self, left: BagHandle, right: BagHandle) -> BagHandle {
+        BagHandle(self.emit("cross", Ty::Bag, Rhs::Cross { left: left.0, right: right.0 }))
+    }
+
+    /// Write a bag to a file named by a scalar.
+    pub fn write_file(&mut self, data: BagHandle, name: ScalarHandle) {
+        self.emit("write", Ty::Scalar, Rhs::WriteFile { data: data.0, name: name.0 });
+    }
+
+    /// Deliver a bag to the driver under `label`.
+    pub fn collect(&mut self, input: BagHandle, label: impl Into<String>) {
+        self.emit(
+            "collect",
+            Ty::Scalar,
+            Rhs::Collect { input: input.0, label: label.into() },
+        );
+    }
+
+    /// Invoke an AOT-compiled XLA artifact (see [`crate::runtime`]).
+    pub fn xla_call(
+        &mut self,
+        inputs: Vec<BagHandle>,
+        spec: crate::runtime::XlaCallSpec,
+    ) -> BagHandle {
+        BagHandle(self.emit(
+            "xla",
+            Ty::Bag,
+            Rhs::XlaCall { inputs: inputs.into_iter().map(|b| b.0).collect(), spec },
+        ))
+    }
+
+    // ---- scalar operations ----------------------------------------------
+
+    /// Apply a unary function to a scalar (lifted to `map`, §5.2).
+    pub fn scalar_un(&mut self, input: ScalarHandle, udf: Udf1) -> ScalarHandle {
+        ScalarHandle(self.emit("s", Ty::Scalar, Rhs::ScalarUn { input: input.0, udf }))
+    }
+
+    /// Apply a binary function to scalars (lifted to `cross`+`map`, §5.2).
+    pub fn scalar_bin(&mut self, l: ScalarHandle, r: ScalarHandle, udf: Udf2) -> ScalarHandle {
+        ScalarHandle(self.emit(
+            "s",
+            Ty::Scalar,
+            Rhs::ScalarBin { left: l.0, right: r.0, udf },
+        ))
+    }
+
+    /// `l + r` over i64 scalars.
+    pub fn scalar_add_i64(&mut self, l: ScalarHandle, r: i64) -> ScalarHandle {
+        let rc = self.scalar_i64(r);
+        self.scalar_bin(l, rc, udf2(|a, b| Value::I64(a.as_i64() + b.as_i64())))
+    }
+
+    /// `l <= r` over i64 scalars.
+    pub fn scalar_le_i64(&mut self, l: ScalarHandle, r: i64) -> ScalarHandle {
+        let rc = self.scalar_i64(r);
+        self.scalar_bin(l, rc, udf2(|a, b| Value::Bool(a.as_i64() <= b.as_i64())))
+    }
+
+    /// `l < r` over i64 scalars.
+    pub fn scalar_lt_i64(&mut self, l: ScalarHandle, r: i64) -> ScalarHandle {
+        let rc = self.scalar_i64(r);
+        self.scalar_bin(l, rc, udf2(|a, b| Value::Bool(a.as_i64() < b.as_i64())))
+    }
+
+    /// `l != r` over i64 scalars.
+    pub fn scalar_ne_i64(&mut self, l: ScalarHandle, r: i64) -> ScalarHandle {
+        let rc = self.scalar_i64(r);
+        self.scalar_bin(l, rc, udf2(|a, b| Value::Bool(a.as_i64() != b.as_i64())))
+    }
+
+    /// String concatenation `prefix + str(x)`.
+    pub fn scalar_concat(&mut self, prefix: &str, x: ScalarHandle) -> ScalarHandle {
+        let p = prefix.to_string();
+        self.scalar_un(x, Udf1::new("concat", move |v: &Value| Value::str(format!("{p}{v}"))))
+    }
+
+    /// Lift a scalar into a one-element bag (§5.2 made explicit): a unit
+    /// bag crossed with the scalar, then projected. Useful to `collect`
+    /// scalar results.
+    pub fn lift_scalar(&mut self, s: ScalarHandle) -> BagHandle {
+        let unit = self.bag_lit(vec![Value::Unit]);
+        let crossed = BagHandle(self.emit(
+            "lift",
+            Ty::Bag,
+            Rhs::Cross { left: unit.0, right: s.0 },
+        ));
+        self.map(crossed, Udf1::new("snd", |v: &Value| v.val().clone()))
+    }
+
+    // ---- control flow ----------------------------------------------------
+
+    /// `while (cond) { body }`. `cond` builds the condition *inside the
+    /// header block* and returns the condition variable; `body` builds the
+    /// loop body. Mutable variables assigned inside the body become loop
+    /// variables through SSA Φ-insertion.
+    pub fn while_(
+        &mut self,
+        cond: impl FnOnce(&mut ProgramBuilder) -> ScalarHandle,
+        body: impl FnOnce(&mut ProgramBuilder),
+    ) {
+        let header = self.prog.new_block();
+        let body_b = self.prog.new_block();
+        let after = self.prog.new_block();
+        self.prog.blocks[self.cur].term = Terminator::Jump(header);
+        self.cur = header;
+        let cond_var = cond(self);
+        let cond_var = self.materialize_cond(cond_var);
+        self.prog.blocks[self.cur].term =
+            Terminator::Branch { cond: cond_var.0, then_b: body_b, else_b: after };
+        self.cur = body_b;
+        body(self);
+        self.prog.blocks[self.cur].term = Terminator::Jump(header);
+        self.cur = after;
+    }
+
+    /// `if (cond) { then_f() } else { else_f() }`. The condition must have
+    /// been computed in the current block (or it is re-materialized here).
+    pub fn if_(
+        &mut self,
+        cond: ScalarHandle,
+        then_f: impl FnOnce(&mut ProgramBuilder),
+        else_f: impl FnOnce(&mut ProgramBuilder),
+    ) {
+        let cond = self.materialize_cond(cond);
+        let then_b = self.prog.new_block();
+        let else_b = self.prog.new_block();
+        let merge = self.prog.new_block();
+        self.prog.blocks[self.cur].term =
+            Terminator::Branch { cond: cond.0, then_b, else_b };
+        self.cur = then_b;
+        then_f(self);
+        self.prog.blocks[self.cur].term = Terminator::Jump(merge);
+        self.cur = else_b;
+        else_f(self);
+        self.prog.blocks[self.cur].term = Terminator::Jump(merge);
+        self.cur = merge;
+    }
+
+    /// `if` without `else`.
+    pub fn if_then(&mut self, cond: ScalarHandle, then_f: impl FnOnce(&mut ProgramBuilder)) {
+        let cond = self.materialize_cond(cond);
+        let then_b = self.prog.new_block();
+        let merge = self.prog.new_block();
+        self.prog.blocks[self.cur].term =
+            Terminator::Branch { cond: cond.0, then_b, else_b: merge };
+        self.cur = then_b;
+        then_f(self);
+        self.prog.blocks[self.cur].term = Terminator::Jump(merge);
+        self.cur = merge;
+    }
+
+    fn materialize_cond(&mut self, v: ScalarHandle) -> ScalarHandle {
+        let defined_here = self.prog.blocks[self.cur].instrs.iter().any(|i| i.var == v.0);
+        if defined_here {
+            v
+        } else {
+            self.scalar_un(v, Udf1::new("id", |x: &Value| x.clone()))
+        }
+    }
+
+    /// Finish and return the IR program.
+    pub fn finish(mut self) -> Program {
+        assert!(!self.finished);
+        self.finished = true;
+        self.prog.blocks[self.cur].term = Terminator::End;
+        self.prog
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straightline_builds_one_block() {
+        let mut b = ProgramBuilder::new();
+        let bag = b.bag_lit(vec![Value::I64(1), Value::I64(2)]);
+        let mapped = b.map(bag, udf1(|v| Value::I64(v.as_i64() * 2)));
+        b.collect(mapped, "out");
+        let p = b.finish();
+        assert_eq!(p.blocks.len(), 1);
+        assert_eq!(p.blocks[0].instrs.len(), 3);
+    }
+
+    #[test]
+    fn while_produces_four_blocks() {
+        let mut b = ProgramBuilder::new();
+        let one = b.scalar_i64(0);
+        let i = b.declare_scalar("i", one);
+        b.while_(
+            |b| b.scalar_lt_i64(i, 3),
+            |b| {
+                let next = b.scalar_add_i64(i, 1);
+                b.assign_scalar(i, next);
+            },
+        );
+        let p = b.finish();
+        assert_eq!(p.blocks.len(), 4);
+        // Condition is defined in the header (branching block).
+        let header = match p.blocks[p.entry].term {
+            Terminator::Jump(h) => h,
+            ref o => panic!("{o:?}"),
+        };
+        match &p.blocks[header].term {
+            Terminator::Branch { cond, .. } => {
+                assert!(p.blocks[header].instrs.iter().any(|ins| ins.var == *cond));
+            }
+            o => panic!("{o:?}"),
+        }
+    }
+
+    #[test]
+    fn if_materializes_cond_in_current_block() {
+        let mut b = ProgramBuilder::new();
+        let x = b.scalar_i64(1);
+        let c = b.scalar_ne_i64(x, 1);
+        b.while_(
+            |b| b.scalar_lt_i64(x, 3),
+            |b| {
+                // `c` was defined in the entry block; using it as an if
+                // condition inside the loop must re-materialize it here.
+                b.if_then(c, |_| {});
+            },
+        );
+        let p = b.finish();
+        // Find the branch inside the loop body and check its condition is
+        // defined in the same block.
+        let mut found = false;
+        for blk in &p.blocks {
+            if let Terminator::Branch { cond, .. } = &blk.term {
+                if blk.instrs.iter().any(|i| i.var == *cond) {
+                    found = true;
+                }
+            }
+        }
+        assert!(found);
+    }
+}

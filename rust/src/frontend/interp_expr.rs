@@ -1,0 +1,245 @@
+//! Compilation of LabyLang *lambda* expressions into executable UDF
+//! closures. Lambdas are closed: they may reference only their parameters
+//! and literals (the lowerer rejects captures — a captured dataset would be
+//! a hidden dataflow edge).
+
+use super::ast::{BinOp, Expr, UnOp};
+use crate::error::{Error, Result};
+use crate::value::Value;
+use std::sync::Arc;
+
+/// Evaluate a closed expression with parameters bound to `env`.
+pub fn eval(e: &Expr, params: &[String], env: &[Value]) -> Value {
+    match e {
+        Expr::Int(v) => Value::I64(*v),
+        Expr::Float(v) => Value::F64(*v),
+        Expr::Str(s) => Value::str(s.clone()),
+        Expr::Bool(b) => Value::Bool(*b),
+        Expr::Var(name) => {
+            let idx = params
+                .iter()
+                .position(|p| p == name)
+                .unwrap_or_else(|| panic!("unbound lambda variable {name}"));
+            env[idx].clone()
+        }
+        Expr::Un(op, x) => {
+            let v = eval(x, params, env);
+            match op {
+                UnOp::Neg => match v {
+                    Value::I64(i) => Value::I64(-i),
+                    Value::F64(f) => Value::F64(-f),
+                    other => panic!("neg on {other:?}"),
+                },
+                UnOp::Not => Value::Bool(!v.as_bool()),
+            }
+        }
+        Expr::Bin(op, l, r) => {
+            let a = eval(l, params, env);
+            let b = eval(r, params, env);
+            bin(*op, &a, &b)
+        }
+        Expr::Call(name, args) => {
+            let vals: Vec<Value> = args.iter().map(|a| eval(a, params, env)).collect();
+            builtin(name, &vals)
+        }
+        Expr::Method(..) | Expr::Lambda(..) => {
+            panic!("bag operations are not allowed inside lambdas")
+        }
+    }
+}
+
+/// Apply a scalar binary operator.
+pub fn bin(op: BinOp, a: &Value, b: &Value) -> Value {
+    use BinOp::*;
+    match op {
+        Add => match (a, b) {
+            (Value::I64(x), Value::I64(y)) => Value::I64(x + y),
+            (Value::Str(_), _) | (_, Value::Str(_)) => Value::str(format!("{a}{b}")),
+            _ => Value::F64(a.as_f64() + b.as_f64()),
+        },
+        Sub => match (a, b) {
+            (Value::I64(x), Value::I64(y)) => Value::I64(x - y),
+            _ => Value::F64(a.as_f64() - b.as_f64()),
+        },
+        Mul => match (a, b) {
+            (Value::I64(x), Value::I64(y)) => Value::I64(x * y),
+            _ => Value::F64(a.as_f64() * b.as_f64()),
+        },
+        Div => match (a, b) {
+            (Value::I64(x), Value::I64(y)) => Value::I64(x / y),
+            _ => Value::F64(a.as_f64() / b.as_f64()),
+        },
+        Rem => Value::I64(a.as_i64() % b.as_i64()),
+        Eq => Value::Bool(a == b),
+        Ne => Value::Bool(a != b),
+        Lt => Value::Bool(a < b),
+        Le => Value::Bool(a <= b),
+        Gt => Value::Bool(a > b),
+        Ge => Value::Bool(a >= b),
+        And => Value::Bool(a.as_bool() && b.as_bool()),
+        Or => Value::Bool(a.as_bool() || b.as_bool()),
+    }
+}
+
+/// Scalar builtins usable inside lambdas (and on lifted scalars).
+pub fn builtin(name: &str, args: &[Value]) -> Value {
+    match (name, args) {
+        ("pair", [a, b]) => Value::pair(a.clone(), b.clone()),
+        ("tuple", _) => Value::tuple(args.to_vec()),
+        ("fst", [Value::Pair(p)]) => p.0.clone(),
+        ("snd", [Value::Pair(p)]) => p.1.clone(),
+        ("nth", [Value::Tuple(t), Value::I64(i)]) => t[*i as usize].clone(),
+        ("abs", [Value::I64(v)]) => Value::I64(v.abs()),
+        ("abs", [Value::F64(v)]) => Value::F64(v.abs()),
+        ("min", [a, b]) => if a <= b { a.clone() } else { b.clone() },
+        ("max", [a, b]) => if a >= b { a.clone() } else { b.clone() },
+        ("str", [v]) => Value::str(v.to_string()),
+        ("int", [Value::Str(s)]) => Value::I64(
+            s.trim().parse::<i64>().unwrap_or_else(|_| panic!("int() on non-integer {s:?}")),
+        ),
+        ("int", [Value::F64(f)]) => Value::I64(*f as i64),
+        ("int", [Value::I64(v)]) => Value::I64(*v),
+        ("float", [v]) => Value::F64(v.as_f64()),
+        ("hash", [v]) => Value::I64(v.key_hash() as i64),
+        ("field", [Value::Str(s), Value::I64(i)]) => Value::str(
+            s.split_whitespace()
+                .nth(*i as usize)
+                .unwrap_or_else(|| panic!("field({i}) missing in {s:?}")),
+        ),
+        ("len", [Value::Str(s)]) => Value::I64(s.chars().count() as i64),
+        (other, _) => panic!("unknown builtin {other}({} args)", args.len()),
+    }
+}
+
+/// Validate that a lambda body references only its parameters and known
+/// builtins; returns the set of referenced names for diagnostics.
+pub fn check_closed(e: &Expr, params: &[String]) -> Result<()> {
+    match e {
+        Expr::Var(name) => {
+            if params.iter().any(|p| p == name) {
+                Ok(())
+            } else {
+                Err(Error::Type(format!(
+                    "lambda refers to '{name}', which is not a parameter; \
+                     lambdas must be closed (captures would hide dataflow edges)"
+                )))
+            }
+        }
+        Expr::Int(_) | Expr::Float(_) | Expr::Str(_) | Expr::Bool(_) => Ok(()),
+        Expr::Un(_, x) => check_closed(x, params),
+        Expr::Bin(_, l, r) => {
+            check_closed(l, params)?;
+            check_closed(r, params)
+        }
+        Expr::Call(name, args) => {
+            const BUILTINS: &[&str] = &[
+                "pair", "tuple", "fst", "snd", "nth", "abs", "min", "max", "str", "int",
+                "float", "hash", "field", "len",
+            ];
+            if !BUILTINS.contains(&name.as_str()) {
+                return Err(Error::Type(format!("unknown builtin '{name}' inside lambda")));
+            }
+            for a in args {
+                check_closed(a, params)?;
+            }
+            Ok(())
+        }
+        Expr::Method(..) => Err(Error::Type(
+            "bag operations are not allowed inside lambdas".into(),
+        )),
+        Expr::Lambda(..) => Err(Error::Type("nested lambdas are not supported".into())),
+    }
+}
+
+/// Compile a 1-parameter lambda into a [`super::Udf1`].
+pub fn compile_udf1(params: Vec<String>, body: Expr, name: String) -> Result<super::Udf1> {
+    if params.len() != 1 {
+        return Err(Error::Type(format!("expected 1-parameter lambda, got {}", params.len())));
+    }
+    check_closed(&body, &params)?;
+    let body = Arc::new(body);
+    let params = Arc::new(params);
+    Ok(super::Udf1::new(name, move |v: &Value| {
+        eval(&body, &params, std::slice::from_ref(v))
+    }))
+}
+
+/// Compile a 2-parameter lambda into a [`super::Udf2`].
+pub fn compile_udf2(params: Vec<String>, body: Expr, name: String) -> Result<super::Udf2> {
+    if params.len() != 2 {
+        return Err(Error::Type(format!("expected 2-parameter lambda, got {}", params.len())));
+    }
+    check_closed(&body, &params)?;
+    let body = Arc::new(body);
+    let params = Arc::new(params);
+    Ok(super::Udf2::new(name, move |a: &Value, b: &Value| {
+        eval(&body, &params, &[a.clone(), b.clone()])
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::lexer::lex;
+    use crate::frontend::parser;
+
+    fn lambda(src: &str) -> (Vec<String>, Expr) {
+        // Parse `x = <src>;` and pull out the lambda.
+        let ast = parser::parse(&lex(&format!("x = {src};")).unwrap()).unwrap();
+        match &ast.stmts[0] {
+            crate::frontend::ast::Stmt::Assign(_, Expr::Lambda(ps, body)) => {
+                (ps.clone(), (**body).clone())
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn udf1_evaluates() {
+        let (ps, body) = lambda("|x| pair(x, 1)");
+        let f = compile_udf1(ps, body, "kv".into()).unwrap();
+        assert_eq!(f.call(&Value::I64(7)), Value::pair(Value::I64(7), Value::I64(1)));
+    }
+
+    #[test]
+    fn udf2_evaluates() {
+        let (ps, body) = lambda("|a, b| a + b");
+        let f = compile_udf2(ps, body, "sum".into()).unwrap();
+        assert_eq!(f.call(&Value::I64(2), &Value::I64(3)), Value::I64(5));
+    }
+
+    #[test]
+    fn captures_rejected() {
+        let (ps, body) = lambda("|x| x + y");
+        assert!(compile_udf1(ps, body, "bad".into()).is_err());
+    }
+
+    #[test]
+    fn string_concat_via_plus() {
+        assert_eq!(
+            bin(BinOp::Add, &Value::str("log"), &Value::I64(3)),
+            Value::str("log3")
+        );
+    }
+
+    #[test]
+    fn builtins_cover_pairs() {
+        let p = builtin("pair", &[Value::I64(1), Value::str("a")]);
+        assert_eq!(builtin("fst", &[p.clone()]), Value::I64(1));
+        assert_eq!(builtin("snd", &[p]), Value::str("a"));
+        assert_eq!(builtin("abs", &[Value::I64(-4)]), Value::I64(4));
+        assert_eq!(builtin("int", &[Value::str(" 42 ")]), Value::I64(42));
+    }
+
+    #[test]
+    fn comparison_operators() {
+        assert_eq!(bin(BinOp::Le, &Value::I64(2), &Value::I64(2)), Value::Bool(true));
+        assert_eq!(bin(BinOp::Ne, &Value::I64(2), &Value::I64(3)), Value::Bool(true));
+        assert_eq!(bin(BinOp::Lt, &Value::F64(1.5), &Value::F64(2.5)), Value::Bool(true));
+    }
+
+    #[test]
+    fn mixed_arith_widens_to_float() {
+        assert_eq!(bin(BinOp::Mul, &Value::I64(2), &Value::F64(0.5)), Value::F64(1.0));
+    }
+}

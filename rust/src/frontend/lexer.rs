@@ -1,0 +1,349 @@
+//! LabyLang lexer: hand-written, produces position-tagged tokens.
+
+use crate::error::{Error, Result};
+
+/// Token kinds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword candidate.
+    Ident(String),
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// String literal (escapes resolved).
+    Str(String),
+    /// `while`
+    While,
+    /// `if`
+    If,
+    /// `else`
+    Else,
+    /// `break`
+    Break,
+    /// `continue`
+    Continue,
+    /// `true`
+    True,
+    /// `false`
+    False,
+    /// `=`
+    Assign,
+    /// `==`
+    Eq,
+    /// `!=`
+    Ne,
+    /// `<`
+    Lt,
+    /// `<=`
+    Le,
+    /// `>`
+    Gt,
+    /// `>=`
+    Ge,
+    /// `+`
+    Plus,
+    /// `-`
+    Minus,
+    /// `*`
+    Star,
+    /// `/`
+    Slash,
+    /// `%`
+    Percent,
+    /// `!`
+    Bang,
+    /// `&&`
+    AndAnd,
+    /// `||`
+    OrOr,
+    /// `(`
+    LParen,
+    /// `)`
+    RParen,
+    /// `{`
+    LBrace,
+    /// `}`
+    RBrace,
+    /// `,`
+    Comma,
+    /// `;`
+    Semi,
+    /// `.`
+    Dot,
+    /// `|` (lambda delimiter)
+    Pipe,
+    /// `=>` (unused, reserved)
+    FatArrow,
+    /// End of input sentinel.
+    Eof,
+}
+
+/// A token with its 1-based source position.
+#[derive(Clone, Debug)]
+pub struct Token {
+    /// Kind + payload.
+    pub tok: Tok,
+    /// 1-based line.
+    pub line: usize,
+    /// 1-based column.
+    pub col: usize,
+}
+
+/// Tokenize LabyLang source. `//` line comments and `/* */` block comments
+/// are skipped.
+pub fn lex(src: &str) -> Result<Vec<Token>> {
+    let mut out = Vec::new();
+    let bytes: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    let (mut line, mut col) = (1usize, 1usize);
+    macro_rules! err {
+        ($($arg:tt)*) => {
+            return Err(Error::Lex { line, col, msg: format!($($arg)*) })
+        };
+    }
+    macro_rules! push {
+        ($t:expr, $l:expr, $c:expr) => {
+            out.push(Token { tok: $t, line: $l, col: $c })
+        };
+    }
+    while i < bytes.len() {
+        let c = bytes[i];
+        let (tl, tc) = (line, col);
+        let adv = |i: &mut usize, line: &mut usize, col: &mut usize, n: usize| {
+            for k in 0..n {
+                if bytes[*i + k] == '\n' {
+                    *line += 1;
+                    *col = 1;
+                } else {
+                    *col += 1;
+                }
+            }
+            *i += n;
+        };
+        match c {
+            ' ' | '\t' | '\r' | '\n' => adv(&mut i, &mut line, &mut col, 1),
+            '/' if i + 1 < bytes.len() && bytes[i + 1] == '/' => {
+                while i < bytes.len() && bytes[i] != '\n' {
+                    adv(&mut i, &mut line, &mut col, 1);
+                }
+            }
+            '/' if i + 1 < bytes.len() && bytes[i + 1] == '*' => {
+                adv(&mut i, &mut line, &mut col, 2);
+                loop {
+                    if i + 1 >= bytes.len() {
+                        err!("unterminated block comment");
+                    }
+                    if bytes[i] == '*' && bytes[i + 1] == '/' {
+                        adv(&mut i, &mut line, &mut col, 2);
+                        break;
+                    }
+                    adv(&mut i, &mut line, &mut col, 1);
+                }
+            }
+            '"' => {
+                adv(&mut i, &mut line, &mut col, 1);
+                let mut s = String::new();
+                loop {
+                    if i >= bytes.len() {
+                        err!("unterminated string literal");
+                    }
+                    match bytes[i] {
+                        '"' => {
+                            adv(&mut i, &mut line, &mut col, 1);
+                            break;
+                        }
+                        '\\' => {
+                            if i + 1 >= bytes.len() {
+                                err!("dangling escape");
+                            }
+                            let e = bytes[i + 1];
+                            s.push(match e {
+                                'n' => '\n',
+                                't' => '\t',
+                                '\\' => '\\',
+                                '"' => '"',
+                                other => err!("unknown escape '\\{other}'"),
+                            });
+                            adv(&mut i, &mut line, &mut col, 2);
+                        }
+                        ch => {
+                            s.push(ch);
+                            adv(&mut i, &mut line, &mut col, 1);
+                        }
+                    }
+                }
+                push!(Tok::Str(s), tl, tc);
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < bytes.len() && bytes[i].is_ascii_digit() {
+                    adv(&mut i, &mut line, &mut col, 1);
+                }
+                let mut is_float = false;
+                if i + 1 < bytes.len() && bytes[i] == '.' && bytes[i + 1].is_ascii_digit() {
+                    is_float = true;
+                    adv(&mut i, &mut line, &mut col, 1);
+                    while i < bytes.len() && bytes[i].is_ascii_digit() {
+                        adv(&mut i, &mut line, &mut col, 1);
+                    }
+                }
+                let text: String = bytes[start..i].iter().collect();
+                if is_float {
+                    match text.parse::<f64>() {
+                        Ok(v) => push!(Tok::Float(v), tl, tc),
+                        Err(_) => err!("bad float literal {text}"),
+                    }
+                } else {
+                    match text.parse::<i64>() {
+                        Ok(v) => push!(Tok::Int(v), tl, tc),
+                        Err(_) => err!("bad int literal {text}"),
+                    }
+                }
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == '_') {
+                    adv(&mut i, &mut line, &mut col, 1);
+                }
+                let word: String = bytes[start..i].iter().collect();
+                let tok = match word.as_str() {
+                    "while" => Tok::While,
+                    "if" => Tok::If,
+                    "else" => Tok::Else,
+                    "break" => Tok::Break,
+                    "continue" => Tok::Continue,
+                    "true" => Tok::True,
+                    "false" => Tok::False,
+                    _ => Tok::Ident(word),
+                };
+                push!(tok, tl, tc);
+            }
+            _ => {
+                let two: String = bytes[i..(i + 2).min(bytes.len())].iter().collect();
+                let (tok, n) = match two.as_str() {
+                    "==" => (Tok::Eq, 2),
+                    "!=" => (Tok::Ne, 2),
+                    "<=" => (Tok::Le, 2),
+                    ">=" => (Tok::Ge, 2),
+                    "&&" => (Tok::AndAnd, 2),
+                    "||" => (Tok::OrOr, 2),
+                    "=>" => (Tok::FatArrow, 2),
+                    _ => match c {
+                        '=' => (Tok::Assign, 1),
+                        '<' => (Tok::Lt, 1),
+                        '>' => (Tok::Gt, 1),
+                        '+' => (Tok::Plus, 1),
+                        '-' => (Tok::Minus, 1),
+                        '*' => (Tok::Star, 1),
+                        '/' => (Tok::Slash, 1),
+                        '%' => (Tok::Percent, 1),
+                        '!' => (Tok::Bang, 1),
+                        '(' => (Tok::LParen, 1),
+                        ')' => (Tok::RParen, 1),
+                        '{' => (Tok::LBrace, 1),
+                        '}' => (Tok::RBrace, 1),
+                        ',' => (Tok::Comma, 1),
+                        ';' => (Tok::Semi, 1),
+                        '.' => (Tok::Dot, 1),
+                        '|' => (Tok::Pipe, 1),
+                        other => err!("unexpected character '{other}'"),
+                    },
+                };
+                adv(&mut i, &mut line, &mut col, n);
+                push!(tok, tl, tc);
+            }
+        }
+    }
+    out.push(Token { tok: Tok::Eof, line, col });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn lexes_assignment() {
+        assert_eq!(
+            kinds("day = 1;"),
+            vec![Tok::Ident("day".into()), Tok::Assign, Tok::Int(1), Tok::Semi, Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn lexes_two_char_operators() {
+        assert_eq!(
+            kinds("a <= b == c != d && e || f"),
+            vec![
+                Tok::Ident("a".into()),
+                Tok::Le,
+                Tok::Ident("b".into()),
+                Tok::Eq,
+                Tok::Ident("c".into()),
+                Tok::Ne,
+                Tok::Ident("d".into()),
+                Tok::AndAnd,
+                Tok::Ident("e".into()),
+                Tok::OrOr,
+                Tok::Ident("f".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_strings_with_escapes() {
+        assert_eq!(kinds(r#""a\nb""#), vec![Tok::Str("a\nb".into()), Tok::Eof]);
+    }
+
+    #[test]
+    fn skips_comments() {
+        assert_eq!(
+            kinds("x = 1; // c\n/* block\ncomment */ y = 2;"),
+            vec![
+                Tok::Ident("x".into()),
+                Tok::Assign,
+                Tok::Int(1),
+                Tok::Semi,
+                Tok::Ident("y".into()),
+                Tok::Assign,
+                Tok::Int(2),
+                Tok::Semi,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn float_vs_method_dot() {
+        assert_eq!(kinds("1.5"), vec![Tok::Float(1.5), Tok::Eof]);
+        assert_eq!(
+            kinds("b.map"),
+            vec![Tok::Ident("b".into()), Tok::Dot, Tok::Ident("map".into()), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn keywords_recognized() {
+        assert_eq!(
+            kinds("while if else true false"),
+            vec![Tok::While, Tok::If, Tok::Else, Tok::True, Tok::False, Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn error_position_reported() {
+        let e = lex("x = @").unwrap_err();
+        assert!(e.to_string().contains("1:5"), "{e}");
+    }
+
+    #[test]
+    fn unterminated_string_errors() {
+        assert!(lex("\"abc").is_err());
+    }
+}

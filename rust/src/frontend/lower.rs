@@ -1,0 +1,778 @@
+//! Lowering: LabyLang AST → pre-SSA three-address IR over basic blocks.
+//!
+//! Responsibilities:
+//! - flatten nested expressions so every intermediate value is assigned to
+//!   a variable (the paper's §5.1 IR assumption);
+//! - build the CFG skeleton for `while` / `if` (header/body/after blocks);
+//! - type every variable as `Bag` or `Scalar` and reject inconsistent use;
+//! - compile lambda arguments into executable UDFs.
+
+use super::ast::{Ast, Expr, Stmt, UnOp};
+use super::interp_expr;
+use super::{BlockId, Instr, Program, Rhs, Terminator, Ty, Udf1, Udf2, UdfN, VarId};
+use crate::error::{Error, Result};
+use crate::value::Value;
+use rustc_hash::FxHashMap;
+
+struct Lowerer {
+    prog: Program,
+    scope: FxHashMap<String, VarId>,
+    cur: BlockId,
+    tmp_count: usize,
+    /// Innermost-first stack of (header, after) blocks for break/continue.
+    loop_stack: Vec<(BlockId, BlockId)>,
+}
+
+/// Lower a parsed AST into the pre-SSA IR.
+pub fn lower(ast: &Ast) -> Result<Program> {
+    let mut lw = Lowerer {
+        prog: Program::default(),
+        scope: FxHashMap::default(),
+        cur: 0,
+        tmp_count: 0,
+        loop_stack: Vec::new(),
+    };
+    let entry = lw.prog.new_block();
+    lw.prog.entry = entry;
+    lw.cur = entry;
+    lw.stmts(&ast.stmts)?;
+    lw.prog.blocks[lw.cur].term = Terminator::End;
+    Ok(lw.prog)
+}
+
+impl Lowerer {
+    fn fresh_tmp(&mut self, ty: Ty) -> VarId {
+        self.tmp_count += 1;
+        self.prog.new_var(format!("t{}", self.tmp_count), ty)
+    }
+
+    fn emit(&mut self, var: VarId, rhs: Rhs) {
+        self.prog.blocks[self.cur].instrs.push(Instr { var, rhs });
+    }
+
+    fn emit_tmp(&mut self, rhs: Rhs, ty: Ty) -> VarId {
+        let v = self.fresh_tmp(ty);
+        self.emit(v, rhs);
+        v
+    }
+
+    fn stmts(&mut self, stmts: &[Stmt]) -> Result<()> {
+        for s in stmts {
+            self.stmt(s)?;
+        }
+        Ok(())
+    }
+
+    fn stmt(&mut self, s: &Stmt) -> Result<()> {
+        match s {
+            Stmt::Assign(name, expr) => {
+                let (tmp, ty) = self.expr(expr)?;
+                match self.scope.get(name) {
+                    Some(&var) => {
+                        let declared = self.prog.vars[var].ty;
+                        if declared != ty {
+                            return Err(Error::Type(format!(
+                                "variable '{name}' was {declared:?} but is re-assigned as {ty:?}"
+                            )));
+                        }
+                        self.emit(var, Rhs::Copy(tmp));
+                    }
+                    None => {
+                        // First assignment declares the variable. Retarget
+                        // the just-emitted temp when it is in this block to
+                        // avoid a copy.
+                        let var = self.prog.new_var(name.clone(), ty);
+                        self.scope.insert(name.clone(), var);
+                        let retargeted = {
+                            let blk = &mut self.prog.blocks[self.cur];
+                            match blk.instrs.last_mut() {
+                                Some(last) if last.var == tmp => {
+                                    last.var = var;
+                                    true
+                                }
+                                _ => false,
+                            }
+                        };
+                        if !retargeted {
+                            self.emit(var, Rhs::Copy(tmp));
+                        }
+                    }
+                }
+                Ok(())
+            }
+            Stmt::While(cond, body) => {
+                let header = self.prog.new_block();
+                let body_b = self.prog.new_block();
+                let after = self.prog.new_block();
+                self.prog.blocks[self.cur].term = Terminator::Jump(header);
+                // Condition instructions live in the header block; the
+                // condition variable's dataflow node becomes the loop's
+                // condition node (§5.3).
+                self.cur = header;
+                let (cond_var, cond_ty) = self.expr(cond)?;
+                if cond_ty != Ty::Scalar {
+                    return Err(Error::Type("while-condition must be a scalar".into()));
+                }
+                let cond_var = self.materialize_cond(cond_var);
+                self.prog.blocks[self.cur].term =
+                    Terminator::Branch { cond: cond_var, then_b: body_b, else_b: after };
+                self.cur = body_b;
+                self.loop_stack.push((header, after));
+                self.stmts(body)?;
+                self.loop_stack.pop();
+                self.prog.blocks[self.cur].term = Terminator::Jump(header);
+                self.cur = after;
+                Ok(())
+            }
+            Stmt::If(cond, then_s, else_s) => {
+                let (cond_var, cond_ty) = self.expr(cond)?;
+                if cond_ty != Ty::Scalar {
+                    return Err(Error::Type("if-condition must be a scalar".into()));
+                }
+                let cond_var = self.materialize_cond(cond_var);
+                let then_b = self.prog.new_block();
+                let merge = self.prog.new_block();
+                let else_b = if else_s.is_empty() { merge } else { self.prog.new_block() };
+                self.prog.blocks[self.cur].term =
+                    Terminator::Branch { cond: cond_var, then_b, else_b };
+                self.cur = then_b;
+                self.stmts(then_s)?;
+                self.prog.blocks[self.cur].term = Terminator::Jump(merge);
+                if !else_s.is_empty() {
+                    self.cur = else_b;
+                    self.stmts(else_s)?;
+                    self.prog.blocks[self.cur].term = Terminator::Jump(merge);
+                }
+                self.cur = merge;
+                Ok(())
+            }
+            Stmt::ExprStmt(e) => {
+                self.expr(e)?;
+                Ok(())
+            }
+            Stmt::Break | Stmt::Continue => {
+                let &(header, after) = self.loop_stack.last().ok_or_else(|| {
+                    Error::Type(format!("{s:?} outside of a loop"))
+                })?;
+                let target = if matches!(s, Stmt::Break) { after } else { header };
+                self.prog.blocks[self.cur].term = Terminator::Jump(target);
+                // Statements after break/continue in this block are
+                // unreachable; park them in a fresh dead block (the CFG
+                // treats unreachable blocks as absent).
+                let dead = self.prog.new_block();
+                self.cur = dead;
+                Ok(())
+            }
+        }
+    }
+
+    /// A branch terminator references a *variable* (the paper requires the
+    /// boolean condition to be a plain variable reference, §5.3). If the
+    /// condition expression lowered to a variable defined in another block
+    /// (plain `Var` reference), re-materialize it in this block through an
+    /// identity scalar op so that the condition node lives in the block of
+    /// the branch.
+    fn materialize_cond(&mut self, v: VarId) -> VarId {
+        let defined_here = self.prog.blocks[self.cur].instrs.iter().any(|i| i.var == v);
+        if defined_here {
+            v
+        } else {
+            self.emit_tmp(
+                Rhs::ScalarUn { input: v, udf: Udf1::new("id", |x: &Value| x.clone()) },
+                Ty::Scalar,
+            )
+        }
+    }
+
+    fn lookup(&self, name: &str) -> Result<VarId> {
+        self.scope
+            .get(name)
+            .copied()
+            .ok_or_else(|| Error::Type(format!("use of undefined variable '{name}'")))
+    }
+
+    fn expr(&mut self, e: &Expr) -> Result<(VarId, Ty)> {
+        match e {
+            Expr::Int(v) => Ok((self.emit_tmp(Rhs::Const(Value::I64(*v)), Ty::Scalar), Ty::Scalar)),
+            Expr::Float(v) => {
+                Ok((self.emit_tmp(Rhs::Const(Value::F64(*v)), Ty::Scalar), Ty::Scalar))
+            }
+            Expr::Str(s) => {
+                Ok((self.emit_tmp(Rhs::Const(Value::str(s.clone())), Ty::Scalar), Ty::Scalar))
+            }
+            Expr::Bool(b) => {
+                Ok((self.emit_tmp(Rhs::Const(Value::Bool(*b)), Ty::Scalar), Ty::Scalar))
+            }
+            Expr::Var(name) => {
+                let v = self.lookup(name)?;
+                Ok((v, self.prog.vars[v].ty))
+            }
+            Expr::Un(op, x) => {
+                let (xv, ty) = self.expr(x)?;
+                if ty != Ty::Scalar {
+                    return Err(Error::Type(format!("unary {op:?} needs a scalar")));
+                }
+                let op = *op;
+                let udf = Udf1::new(format!("{op:?}"), move |v: &Value| match op {
+                    UnOp::Neg => match v {
+                        Value::I64(i) => Value::I64(-i),
+                        Value::F64(f) => Value::F64(-f),
+                        other => panic!("neg on {other:?}"),
+                    },
+                    UnOp::Not => Value::Bool(!v.as_bool()),
+                });
+                Ok((self.emit_tmp(Rhs::ScalarUn { input: xv, udf }, Ty::Scalar), Ty::Scalar))
+            }
+            Expr::Bin(op, l, r) => {
+                let (lv, lt) = self.expr(l)?;
+                let (rv, rt) = self.expr(r)?;
+                if lt != Ty::Scalar || rt != Ty::Scalar {
+                    return Err(Error::Type(format!(
+                        "operator {op:?} needs scalars (bags use .map/.join/...)"
+                    )));
+                }
+                let op = *op;
+                let udf = Udf2::new(format!("{op:?}"), move |a: &Value, b: &Value| {
+                    interp_expr::bin(op, a, b)
+                });
+                Ok((
+                    self.emit_tmp(Rhs::ScalarBin { left: lv, right: rv, udf }, Ty::Scalar),
+                    Ty::Scalar,
+                ))
+            }
+            Expr::Lambda(..) => {
+                Err(Error::Type("lambda is only valid as an operator argument".into()))
+            }
+            Expr::Call(name, args) => self.call(name, args),
+            Expr::Method(recv, name, args) => self.method(recv, name, args),
+        }
+    }
+
+    /// Free variables of a lambda body that are bound in the enclosing
+    /// scope as *scalars* (captured scalars — e.g. the loop counter in
+    /// `visits.map(|x| x + day)`).
+    fn captured_scalars(&self, body: &Expr, params: &[String]) -> Result<Vec<String>> {
+        let mut caps = Vec::new();
+        collect_free(body, params, &mut caps);
+        let mut out = Vec::new();
+        for name in caps {
+            match self.scope.get(&name) {
+                Some(&v) if self.prog.vars[v].ty == Ty::Scalar => {
+                    if !out.contains(&name) {
+                        out.push(name);
+                    }
+                }
+                Some(_) => {
+                    return Err(Error::Type(format!(
+                        "lambda captures bag '{name}'; only scalars can be captured \
+                         (bags must flow through explicit operators)"
+                    )))
+                }
+                None => {} // let compile_udf report the unbound name
+            }
+        }
+        Ok(out)
+    }
+
+    /// Captured-scalar desugaring (the §5.2 lifting discipline applied to
+    /// closures): `b.map(|x| f(x, s))` with captured scalar `s` becomes
+    ///
+    /// ```text
+    /// t  = b cross s        -- one Pair(x, s) element per x (s broadcast)
+    /// r  = t.map(|p| f(fst(p), snd(p)))
+    /// ```
+    ///
+    /// Multiple captures nest pairs left-to-right. Returns the crossed
+    /// input variable and the rewritten lambda body + parameter.
+    fn desugar_captures(
+        &mut self,
+        input: VarId,
+        params: &[String],
+        body: &Expr,
+        caps: &[String],
+    ) -> Result<(VarId, String, Expr)> {
+        debug_assert_eq!(params.len(), 1);
+        let mut cur = input;
+        for name in caps {
+            let sv = self.scope[name];
+            cur = self.emit_tmp(Rhs::Cross { left: cur, right: sv }, Ty::Bag);
+        }
+        // Access paths: innermost pair component is the original element.
+        let p = "·p".to_string(); // not lexable: cannot collide with user names
+        let mut elem_access = Expr::Var(p.clone());
+        let mut subst: Vec<(String, Expr)> = Vec::new();
+        for (i, name) in caps.iter().enumerate().rev() {
+            // caps[i] is at depth (len-1-i) of fst-nesting, then one snd.
+            let mut acc = Expr::Var(p.clone());
+            for _ in 0..(caps.len() - 1 - i) {
+                acc = Expr::Call("fst".into(), vec![acc]);
+            }
+            subst.push((name.clone(), Expr::Call("snd".into(), vec![acc])));
+        }
+        for _ in 0..caps.len() {
+            elem_access = Expr::Call("fst".into(), vec![elem_access]);
+        }
+        subst.push((params[0].clone(), elem_access));
+        let new_body = substitute(body, &subst);
+        Ok((cur, p, new_body))
+    }
+
+    fn lambda2(&mut self, e: &Expr, op: &str) -> Result<Udf2> {
+        match e {
+            Expr::Lambda(ps, body) => {
+                if !self.captured_scalars(body, ps)?.is_empty() {
+                    return Err(Error::Type(format!(
+                        "{op} combiner lambdas cannot capture outer variables \
+                         (combiners must be associative element functions)"
+                    )));
+                }
+                interp_expr::compile_udf2(ps.clone(), (**body).clone(), format!("{op}λ"))
+            }
+            _ => Err(Error::Type(format!("{op} expects a 2-parameter lambda"))),
+        }
+    }
+
+    fn expect_bag(&mut self, e: &Expr, op: &str) -> Result<VarId> {
+        let (v, ty) = self.expr(e)?;
+        if ty != Ty::Bag {
+            return Err(Error::Type(format!("{op} expects a bag operand")));
+        }
+        Ok(v)
+    }
+
+    fn expect_scalar(&mut self, e: &Expr, op: &str) -> Result<VarId> {
+        let (v, ty) = self.expr(e)?;
+        if ty != Ty::Scalar {
+            return Err(Error::Type(format!("{op} expects a scalar operand")));
+        }
+        Ok(v)
+    }
+
+    fn call(&mut self, name: &str, args: &[Expr]) -> Result<(VarId, Ty)> {
+        match (name, args.len()) {
+            ("readFile", 1) => {
+                let n = self.expect_scalar(&args[0], "readFile")?;
+                Ok((self.emit_tmp(Rhs::ReadFile { name: n }, Ty::Bag), Ty::Bag))
+            }
+            ("writeFile", 2) => {
+                let d = self.expect_bag(&args[0], "writeFile")?;
+                let n = self.expect_scalar(&args[1], "writeFile")?;
+                Ok((
+                    self.emit_tmp(Rhs::WriteFile { data: d, name: n }, Ty::Scalar),
+                    Ty::Scalar,
+                ))
+            }
+            ("collect", 2) => {
+                let d = self.expect_bag(&args[0], "collect")?;
+                let label = match &args[1] {
+                    Expr::Str(s) => s.clone(),
+                    _ => return Err(Error::Type("collect label must be a string literal".into())),
+                };
+                Ok((
+                    self.emit_tmp(Rhs::Collect { input: d, label }, Ty::Scalar),
+                    Ty::Scalar,
+                ))
+            }
+            ("source", 1) => {
+                let n = match &args[0] {
+                    Expr::Str(s) => s.clone(),
+                    _ => return Err(Error::Type("source name must be a string literal".into())),
+                };
+                Ok((self.emit_tmp(Rhs::NamedSource(n), Ty::Bag), Ty::Bag))
+            }
+            ("bag", _) => {
+                let mut vals = Vec::with_capacity(args.len());
+                for a in args {
+                    match a {
+                        Expr::Int(v) => vals.push(Value::I64(*v)),
+                        Expr::Float(v) => vals.push(Value::F64(*v)),
+                        Expr::Str(s) => vals.push(Value::str(s.clone())),
+                        Expr::Bool(b) => vals.push(Value::Bool(*b)),
+                        _ => {
+                            return Err(Error::Type(
+                                "bag(...) takes literal elements only".into(),
+                            ))
+                        }
+                    }
+                }
+                Ok((self.emit_tmp(Rhs::BagLit(vals), Ty::Bag), Ty::Bag))
+            }
+            ("range", 2) => match (&args[0], &args[1]) {
+                (Expr::Int(lo), Expr::Int(hi)) => {
+                    let vals = (*lo..*hi).map(Value::I64).collect();
+                    Ok((self.emit_tmp(Rhs::BagLit(vals), Ty::Bag), Ty::Bag))
+                }
+                _ => Err(Error::Type("range(lo, hi) takes integer literals".into())),
+            },
+            // Scalar builtins lift to ScalarUn / ScalarBin (§5.2).
+            (b, 1) => {
+                let x = self.expect_scalar(&args[0], b)?;
+                let bname = b.to_string();
+                let udf = Udf1::new(bname.clone(), move |v: &Value| {
+                    interp_expr::builtin(&bname, std::slice::from_ref(v))
+                });
+                Ok((self.emit_tmp(Rhs::ScalarUn { input: x, udf }, Ty::Scalar), Ty::Scalar))
+            }
+            (b, 2) => {
+                let x = self.expect_scalar(&args[0], b)?;
+                let y = self.expect_scalar(&args[1], b)?;
+                let bname = b.to_string();
+                let udf = Udf2::new(bname.clone(), move |a: &Value, v: &Value| {
+                    interp_expr::builtin(&bname, &[a.clone(), v.clone()])
+                });
+                Ok((
+                    self.emit_tmp(Rhs::ScalarBin { left: x, right: y, udf }, Ty::Scalar),
+                    Ty::Scalar,
+                ))
+            }
+            (other, n) => Err(Error::Type(format!("unknown function {other}/{n}"))),
+        }
+    }
+
+    /// Resolve a unary lambda argument, desugaring captured scalars: the
+    /// returned input variable is the (possibly crossed) bag and the UDF
+    /// operates on its elements. `unwrap_depth` is the number of `fst`
+    /// applications that recover the original element from a crossed one.
+    fn unary_lambda_input(
+        &mut self,
+        input: VarId,
+        arg: &Expr,
+        op: &str,
+    ) -> Result<(VarId, Udf1, usize)> {
+        let Expr::Lambda(ps, body) = arg else {
+            return Err(Error::Type(format!("{op} expects a 1-parameter lambda")));
+        };
+        if ps.len() != 1 {
+            return Err(Error::Type(format!("{op} lambda takes exactly 1 parameter")));
+        }
+        let caps = self.captured_scalars(body, ps)?;
+        if caps.is_empty() {
+            let udf = interp_expr::compile_udf1(ps.clone(), (**body).clone(), format!("{op}λ"))?;
+            return Ok((input, udf, 0));
+        }
+        let (crossed, param, new_body) = self.desugar_captures(input, ps, body, &caps)?;
+        let udf = interp_expr::compile_udf1(
+            vec![param],
+            new_body,
+            format!("{op}λ+{}cap", caps.len()),
+        )?;
+        Ok((crossed, udf, caps.len()))
+    }
+
+    fn method(&mut self, recv: &Expr, name: &str, args: &[Expr]) -> Result<(VarId, Ty)> {
+        let input = self.expect_bag(recv, name)?;
+        match (name, args.len()) {
+            ("map", 1) => {
+                let (input, udf, _) = self.unary_lambda_input(input, &args[0], "map")?;
+                Ok((self.emit_tmp(Rhs::Map { input, udf }, Ty::Bag), Ty::Bag))
+            }
+            ("filter", 1) => {
+                let (cin, udf, depth) = self.unary_lambda_input(input, &args[0], "filter")?;
+                let filtered = self.emit_tmp(Rhs::Filter { input: cin, udf }, Ty::Bag);
+                if depth == 0 {
+                    Ok((filtered, Ty::Bag))
+                } else {
+                    // Unwrap the crossed pairs back to the original element.
+                    let unwrap = Udf1::new("uncross", move |v: &Value| {
+                        let mut cur = v.clone();
+                        for _ in 0..depth {
+                            cur = match cur {
+                                Value::Pair(p) => p.0.clone(),
+                                other => panic!("expected crossed pair, got {other:?}"),
+                            };
+                        }
+                        cur
+                    });
+                    Ok((
+                        self.emit_tmp(Rhs::Map { input: filtered, udf: unwrap }, Ty::Bag),
+                        Ty::Bag,
+                    ))
+                }
+            }
+            ("flatMap", 1) => {
+                let (input, udf1, _) = self.unary_lambda_input(input, &args[0], "flatMap")?;
+                let name = udf1.name.clone();
+                let udf = UdfN::new(name.to_string(), move |v: &Value| match udf1.call(v) {
+                    Value::Tuple(t) => t.to_vec(),
+                    single => vec![single],
+                });
+                Ok((self.emit_tmp(Rhs::FlatMap { input, udf }, Ty::Bag), Ty::Bag))
+            }
+            ("join", 1) => {
+                let right = self.expect_bag(&args[0], "join")?;
+                // Receiver is the probe side; the argument (typically the
+                // smaller / loop-invariant dataset) is the build side.
+                Ok((self.emit_tmp(Rhs::Join { left: right, right: input }, Ty::Bag), Ty::Bag))
+            }
+            ("joinBuild", 1) => {
+                // Receiver is the build side (kept in state across steps
+                // when loop-invariant, §7).
+                let right = self.expect_bag(&args[0], "joinBuild")?;
+                Ok((self.emit_tmp(Rhs::Join { left: input, right }, Ty::Bag), Ty::Bag))
+            }
+            ("reduceByKey", 1) => {
+                let udf = self.lambda2(&args[0], "reduceByKey")?;
+                Ok((self.emit_tmp(Rhs::ReduceByKey { input, udf }, Ty::Bag), Ty::Bag))
+            }
+            ("reduce", 1) => {
+                let udf = self.lambda2(&args[0], "reduce")?;
+                Ok((self.emit_tmp(Rhs::Reduce { input, udf }, Ty::Scalar), Ty::Scalar))
+            }
+            ("count", 0) => {
+                Ok((self.emit_tmp(Rhs::Count { input }, Ty::Scalar), Ty::Scalar))
+            }
+            ("distinct", 0) => {
+                Ok((self.emit_tmp(Rhs::Distinct { input }, Ty::Bag), Ty::Bag))
+            }
+            ("union", 1) => {
+                let right = self.expect_bag(&args[0], "union")?;
+                Ok((self.emit_tmp(Rhs::Union { left: input, right }, Ty::Bag), Ty::Bag))
+            }
+            ("cross", 1) => {
+                let right = self.expect_bag(&args[0], "cross")?;
+                Ok((self.emit_tmp(Rhs::Cross { left: input, right }, Ty::Bag), Ty::Bag))
+            }
+            (other, n) => Err(Error::Type(format!("unknown bag method {other}/{n}"))),
+        }
+    }
+}
+
+/// Collect free variable names of `e` (those not in `params`).
+fn collect_free(e: &Expr, params: &[String], out: &mut Vec<String>) {
+    match e {
+        Expr::Var(name) => {
+            if !params.iter().any(|p| p == name) {
+                out.push(name.clone());
+            }
+        }
+        Expr::Int(_) | Expr::Float(_) | Expr::Str(_) | Expr::Bool(_) => {}
+        Expr::Un(_, x) => collect_free(x, params, out),
+        Expr::Bin(_, l, r) => {
+            collect_free(l, params, out);
+            collect_free(r, params, out);
+        }
+        Expr::Call(_, args) => {
+            for a in args {
+                collect_free(a, params, out);
+            }
+        }
+        Expr::Method(recv, _, args) => {
+            collect_free(recv, params, out);
+            for a in args {
+                collect_free(a, params, out);
+            }
+        }
+        Expr::Lambda(ps, body) => {
+            let mut inner: Vec<String> = params.to_vec();
+            inner.extend(ps.iter().cloned());
+            collect_free(body, &inner, out);
+        }
+    }
+}
+
+/// Substitute variables by expressions (capture desugaring rewrite).
+fn substitute(e: &Expr, subst: &[(String, Expr)]) -> Expr {
+    match e {
+        Expr::Var(name) => subst
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, rep)| rep.clone())
+            .unwrap_or_else(|| e.clone()),
+        Expr::Int(_) | Expr::Float(_) | Expr::Str(_) | Expr::Bool(_) => e.clone(),
+        Expr::Un(op, x) => Expr::Un(*op, Box::new(substitute(x, subst))),
+        Expr::Bin(op, l, r) => Expr::Bin(
+            *op,
+            Box::new(substitute(l, subst)),
+            Box::new(substitute(r, subst)),
+        ),
+        Expr::Call(n, args) => {
+            Expr::Call(n.clone(), args.iter().map(|a| substitute(a, subst)).collect())
+        }
+        Expr::Method(recv, n, args) => Expr::Method(
+            Box::new(substitute(recv, subst)),
+            n.clone(),
+            args.iter().map(|a| substitute(a, subst)).collect(),
+        ),
+        Expr::Lambda(ps, body) => {
+            let filtered: Vec<(String, Expr)> = subst
+                .iter()
+                .filter(|(n, _)| !ps.contains(n))
+                .cloned()
+                .collect();
+            Expr::Lambda(ps.clone(), Box::new(substitute(body, &filtered)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_lower;
+
+    #[test]
+    fn lowers_straightline() {
+        let p = parse_and_lower("x = 1; y = x + 2;").unwrap();
+        assert_eq!(p.blocks.len(), 1);
+        let names: Vec<_> = p.blocks[0]
+            .instrs
+            .iter()
+            .map(|i| p.vars[i.var].name.clone())
+            .collect();
+        assert!(names.contains(&"x".to_string()));
+        assert!(names.contains(&"y".to_string()));
+    }
+
+    #[test]
+    fn while_creates_header_body_after() {
+        let p = parse_and_lower("d = 1; while (d <= 3) { d = d + 1; }").unwrap();
+        // entry, header, body, after
+        assert_eq!(p.blocks.len(), 4);
+        let header = match p.blocks[p.entry].term {
+            Terminator::Jump(h) => h,
+            ref other => panic!("{other:?}"),
+        };
+        match p.blocks[header].term {
+            Terminator::Branch { cond, .. } => {
+                // condition defined in the header block itself
+                assert!(p.blocks[header].instrs.iter().any(|i| i.var == cond));
+            }
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn if_without_else_branches_to_merge() {
+        let p = parse_and_lower("x = 1; if (x != 1) { x = 2; }").unwrap();
+        let entry = &p.blocks[p.entry];
+        match entry.term {
+            Terminator::Branch { then_b, else_b, .. } => {
+                assert_ne!(then_b, else_b);
+                // else edge goes straight to the merge block
+                assert!(matches!(p.blocks[then_b].term, Terminator::Jump(m) if m == else_b));
+            }
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn captured_scalar_desugars_to_cross() {
+        let p = parse_and_lower(
+            "d = 7; v = bag(1, 2).map(|x| x + d); collect(v, \"v\");",
+        )
+        .unwrap();
+        let listing = p.listing();
+        assert!(listing.contains("cross"), "{listing}");
+        // The rewritten lambda applies to pairs: evaluate it by hand.
+        let map_udf = p
+            .blocks
+            .iter()
+            .flat_map(|b| &b.instrs)
+            .filter_map(|i| match &i.rhs {
+                Rhs::Map { udf, .. } if udf.name.contains("cap") => Some(udf.clone()),
+                _ => None,
+            })
+            .next()
+            .expect("desugared map");
+        let out = map_udf.call(&Value::pair(Value::I64(1), Value::I64(7)));
+        assert_eq!(out, Value::I64(8));
+    }
+
+    #[test]
+    fn captured_filter_unwraps_elements() {
+        let p = parse_and_lower(
+            "t = 2; v = bag(1, 2, 3).filter(|x| x > t); collect(v, \"v\");",
+        )
+        .unwrap();
+        // filter is followed by an unwrap map.
+        let l = p.listing();
+        assert!(l.contains("filter"), "{l}");
+        assert!(l.contains("uncross"), "{l}");
+    }
+
+    #[test]
+    fn two_captures_nest_pairs() {
+        let p = parse_and_lower(
+            "a = 1; b = 2; v = bag(10).map(|x| x + a * b); collect(v, \"v\");",
+        )
+        .unwrap();
+        let map_udf = p
+            .blocks
+            .iter()
+            .flat_map(|bk| &bk.instrs)
+            .filter_map(|i| match &i.rhs {
+                Rhs::Map { udf, .. } if udf.name.contains("2cap") => Some(udf.clone()),
+                _ => None,
+            })
+            .next()
+            .expect("desugared map with 2 captures");
+        // Crossed value shape: Pair(Pair(x, a), b).
+        let v = Value::pair(
+            Value::pair(Value::I64(10), Value::I64(1)),
+            Value::I64(2),
+        );
+        assert_eq!(map_udf.call(&v), Value::I64(12));
+    }
+
+    #[test]
+    fn bag_capture_rejected() {
+        let err = parse_and_lower(
+            "big = bag(1, 2); v = bag(3).map(|x| x + big); collect(v, \"v\");",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("captures bag"), "{err}");
+    }
+
+    #[test]
+    fn combiner_capture_rejected() {
+        let err = parse_and_lower(
+            "s = 1; v = bag(1, 2).map(|x| pair(x, x)).reduceByKey(|a, b| a + b + s); collect(v, \"v\");",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("cannot capture"), "{err}");
+    }
+
+    #[test]
+    fn bag_scalar_mix_rejected() {
+        let err = parse_and_lower("v = bag(1, 2); y = v + 1;").unwrap_err();
+        assert!(err.to_string().contains("scalar"), "{err}");
+    }
+
+    #[test]
+    fn variable_type_is_stable() {
+        let err = parse_and_lower("x = 1; x = bag(1);").unwrap_err();
+        assert!(err.to_string().contains("re-assigned"), "{err}");
+    }
+
+    #[test]
+    fn undefined_variable_rejected() {
+        let err = parse_and_lower("y = x + 1;").unwrap_err();
+        assert!(err.to_string().contains("undefined"), "{err}");
+    }
+
+    #[test]
+    fn visit_count_program_lowers() {
+        let src = r#"
+            attrs = source("pageAttributes");
+            day = 1;
+            yesterday = bag();
+            while (day <= 5) {
+                visits = source("visits");
+                joined = visits.map(|x| pair(x, x)).join(attrs);
+                counts = joined.map(|p| pair(fst(p), 1)).reduceByKey(|a, b| a + b);
+                if (day != 1) {
+                    diffs = counts.join(yesterday)
+                        .map(|p| abs(fst(snd(p)) - snd(snd(p))));
+                    total = diffs.reduce(|a, b| a + b);
+                    collect(diffs, "diffs");
+                }
+                yesterday = counts;
+                day = day + 1;
+            }
+        "#;
+        let p = parse_and_lower(src).unwrap();
+        assert!(p.blocks.len() >= 6, "blocks: {}", p.blocks.len());
+        let listing = p.listing();
+        assert!(listing.contains("join"), "{listing}");
+        assert!(listing.contains("reduceByKey"), "{listing}");
+    }
+}

@@ -1,0 +1,524 @@
+//! Frontend: LabyLang (an external imperative analytics DSL) and a Rust
+//! builder API, both producing the same pre-SSA three-address IR.
+//!
+//! The IR follows the paper's assumptions (§5.1): every intermediate value
+//! is assigned to a variable; right-hand sides are single primitive bag
+//! operations (or scalar operations, which the lifting pass of §5.2 turns
+//! into bag operations); control flow is explicit as basic blocks with
+//! `Jump` / `Branch` / `End` terminators.
+
+pub mod ast;
+pub mod builder;
+pub mod interp_expr;
+pub mod lexer;
+pub mod lower;
+pub mod parser;
+
+use crate::value::Value;
+use std::fmt;
+use std::sync::Arc;
+
+/// Index of a basic block.
+pub type BlockId = usize;
+/// Index of an IR variable.
+pub type VarId = usize;
+
+/// A unary element function (map/filter UDFs, lifted scalar functions).
+#[derive(Clone)]
+pub struct Udf1 {
+    /// Debug name (shown in plans and DOT dumps).
+    pub name: Arc<str>,
+    /// The function itself.
+    pub f: Arc<dyn Fn(&Value) -> Value + Send + Sync>,
+}
+
+/// A binary element function (reduce combiners, lifted binary scalars).
+#[derive(Clone)]
+pub struct Udf2 {
+    /// Debug name.
+    pub name: Arc<str>,
+    /// The function itself.
+    pub f: Arc<dyn Fn(&Value, &Value) -> Value + Send + Sync>,
+}
+
+/// A unary function producing multiple elements (flatMap UDFs).
+#[derive(Clone)]
+pub struct UdfN {
+    /// Debug name.
+    pub name: Arc<str>,
+    /// The function itself.
+    pub f: Arc<dyn Fn(&Value) -> Vec<Value> + Send + Sync>,
+}
+
+impl Udf1 {
+    /// Wrap a closure with a debug name.
+    pub fn new(name: impl Into<String>, f: impl Fn(&Value) -> Value + Send + Sync + 'static) -> Udf1 {
+        Udf1 { name: Arc::from(name.into().as_str()), f: Arc::new(f) }
+    }
+    /// Apply.
+    pub fn call(&self, v: &Value) -> Value {
+        (self.f)(v)
+    }
+}
+impl Udf2 {
+    /// Wrap a closure with a debug name.
+    pub fn new(
+        name: impl Into<String>,
+        f: impl Fn(&Value, &Value) -> Value + Send + Sync + 'static,
+    ) -> Udf2 {
+        Udf2 { name: Arc::from(name.into().as_str()), f: Arc::new(f) }
+    }
+    /// Apply.
+    pub fn call(&self, a: &Value, b: &Value) -> Value {
+        (self.f)(a, b)
+    }
+}
+impl UdfN {
+    /// Wrap a closure with a debug name.
+    pub fn new(
+        name: impl Into<String>,
+        f: impl Fn(&Value) -> Vec<Value> + Send + Sync + 'static,
+    ) -> UdfN {
+        UdfN { name: Arc::from(name.into().as_str()), f: Arc::new(f) }
+    }
+    /// Apply.
+    pub fn call(&self, v: &Value) -> Vec<Value> {
+        (self.f)(v)
+    }
+}
+
+impl fmt::Debug for Udf1 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "udf1<{}>", self.name)
+    }
+}
+impl fmt::Debug for Udf2 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "udf2<{}>", self.name)
+    }
+}
+impl fmt::Debug for UdfN {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "udfN<{}>", self.name)
+    }
+}
+
+/// Coarse IR types: parallel bags vs (to-be-lifted) scalars (§5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ty {
+    /// A parallel collection.
+    Bag,
+    /// A non-bag value (loop counters, condition booleans, file names...).
+    Scalar,
+}
+
+/// Metadata for one IR variable.
+#[derive(Clone, Debug)]
+pub struct VarInfo {
+    /// Source-level or generated name.
+    pub name: String,
+    /// Bag or scalar.
+    pub ty: Ty,
+}
+
+/// Right-hand side of an assignment: exactly one primitive operation, with
+/// variable references only (§5.1 "intermediate representation").
+#[derive(Clone, Debug)]
+pub enum Rhs {
+    /// A scalar constant.
+    Const(Value),
+    /// A literal bag source.
+    BagLit(Vec<Value>),
+    /// A synthetic in-memory source: `workload::registry` bag by name.
+    /// Used by benches to avoid disk I/O noise.
+    NamedSource(String),
+    /// Read a text file (one element per line) named by a scalar variable.
+    ReadFile {
+        /// Scalar string variable holding the file name.
+        name: VarId,
+    },
+    /// Write a bag to a file named by a scalar variable. Produces `Unit`.
+    WriteFile {
+        /// The bag to write.
+        data: VarId,
+        /// Scalar string variable holding the file name.
+        name: VarId,
+    },
+    /// Deliver a bag to the driver under `label`. Produces `Unit`.
+    Collect {
+        /// The bag to collect.
+        input: VarId,
+        /// Output label.
+        label: String,
+    },
+    /// Element-wise transformation.
+    Map {
+        /// Input bag.
+        input: VarId,
+        /// Per-element function.
+        udf: Udf1,
+    },
+    /// Keep elements where `udf` returns `Bool(true)`.
+    Filter {
+        /// Input bag.
+        input: VarId,
+        /// Predicate.
+        udf: Udf1,
+    },
+    /// Element-wise one-to-many transformation.
+    FlatMap {
+        /// Input bag.
+        input: VarId,
+        /// Per-element expansion.
+        udf: UdfN,
+    },
+    /// Hash equi-join on `Value::key()`; emits `Pair(key, Pair(lv, rv))`.
+    /// The LEFT input is the build side (kept in operator state across
+    /// steps when loop-invariant — §7).
+    Join {
+        /// Build-side input.
+        left: VarId,
+        /// Probe-side input.
+        right: VarId,
+    },
+    /// Per-key reduction of pair values: `Pair(k, v)` elements combined by
+    /// `udf` over `v`.
+    ReduceByKey {
+        /// Input bag of pairs.
+        input: VarId,
+        /// Value combiner.
+        udf: Udf2,
+    },
+    /// Full reduction to a single (scalar) value; empty input is an error.
+    Reduce {
+        /// Input bag.
+        input: VarId,
+        /// Combiner.
+        udf: Udf2,
+    },
+    /// Number of elements, as a scalar i64.
+    Count {
+        /// Input bag.
+        input: VarId,
+    },
+    /// Duplicate elimination.
+    Distinct {
+        /// Input bag.
+        input: VarId,
+    },
+    /// Multiset union.
+    Union {
+        /// Left input.
+        left: VarId,
+        /// Right input.
+        right: VarId,
+    },
+    /// Cartesian product; emits `Pair(l, r)`. (Used by §5.2 lifting of
+    /// binary scalar functions; general cross of big bags is supported but
+    /// expensive.)
+    Cross {
+        /// Left input.
+        left: VarId,
+        /// Right input.
+        right: VarId,
+    },
+    /// A unary scalar computation (lifted to `Map` by §5.2).
+    ScalarUn {
+        /// Scalar input.
+        input: VarId,
+        /// Function.
+        udf: Udf1,
+    },
+    /// A binary scalar computation (lifted to `Cross`+`Map` by §5.2).
+    ScalarBin {
+        /// Left scalar input.
+        left: VarId,
+        /// Right scalar input.
+        right: VarId,
+        /// Function.
+        udf: Udf2,
+    },
+    /// Plain copy `a = b` (removed by copy propagation before SSA).
+    Copy(VarId),
+    /// Invoke an AOT-compiled XLA artifact on the input bag(s); see
+    /// [`crate::runtime`]. The call spec describes the bag⇄tensor bridge.
+    XlaCall {
+        /// Input bags/scalars, in artifact parameter order.
+        inputs: Vec<VarId>,
+        /// Bridge description.
+        spec: crate::runtime::XlaCallSpec,
+    },
+    /// SSA Φ-function — introduced by the SSA pass only; each argument is
+    /// (defining block of the argument at Φ-insertion time, variable).
+    Phi(Vec<(BlockId, VarId)>),
+}
+
+impl Rhs {
+    /// All variables referenced by this RHS.
+    pub fn input_vars(&self) -> Vec<VarId> {
+        match self {
+            Rhs::Const(_) | Rhs::BagLit(_) | Rhs::NamedSource(_) => vec![],
+            Rhs::ReadFile { name } => vec![*name],
+            Rhs::WriteFile { data, name } => vec![*data, *name],
+            Rhs::Collect { input, .. }
+            | Rhs::Map { input, .. }
+            | Rhs::Filter { input, .. }
+            | Rhs::FlatMap { input, .. }
+            | Rhs::ReduceByKey { input, .. }
+            | Rhs::Reduce { input, .. }
+            | Rhs::Count { input }
+            | Rhs::Distinct { input }
+            | Rhs::ScalarUn { input, .. } => vec![*input],
+            Rhs::Join { left, right }
+            | Rhs::Union { left, right }
+            | Rhs::Cross { left, right }
+            | Rhs::ScalarBin { left, right, .. } => vec![*left, *right],
+            Rhs::Copy(v) => vec![*v],
+            Rhs::XlaCall { inputs, .. } => inputs.clone(),
+            Rhs::Phi(args) => args.iter().map(|(_, v)| *v).collect(),
+        }
+    }
+
+    /// Rewrite variable references through `f` (used by SSA renaming and
+    /// copy propagation).
+    pub fn map_inputs(&mut self, mut f: impl FnMut(VarId) -> VarId) {
+        match self {
+            Rhs::Const(_) | Rhs::BagLit(_) | Rhs::NamedSource(_) => {}
+            Rhs::ReadFile { name } => *name = f(*name),
+            Rhs::WriteFile { data, name } => {
+                *data = f(*data);
+                *name = f(*name);
+            }
+            Rhs::Collect { input, .. }
+            | Rhs::Map { input, .. }
+            | Rhs::Filter { input, .. }
+            | Rhs::FlatMap { input, .. }
+            | Rhs::ReduceByKey { input, .. }
+            | Rhs::Reduce { input, .. }
+            | Rhs::Count { input }
+            | Rhs::Distinct { input }
+            | Rhs::ScalarUn { input, .. } => *input = f(*input),
+            Rhs::Join { left, right }
+            | Rhs::Union { left, right }
+            | Rhs::Cross { left, right }
+            | Rhs::ScalarBin { left, right, .. } => {
+                *left = f(*left);
+                *right = f(*right);
+            }
+            Rhs::Copy(v) => *v = f(*v),
+            Rhs::XlaCall { inputs, .. } => {
+                for v in inputs {
+                    *v = f(*v);
+                }
+            }
+            Rhs::Phi(args) => {
+                for (_, v) in args {
+                    *v = f(*v);
+                }
+            }
+        }
+    }
+
+    /// Short operation mnemonic for plans/DOT.
+    pub fn mnemonic(&self) -> String {
+        match self {
+            Rhs::Const(v) => format!("const {v:?}"),
+            Rhs::BagLit(vs) => format!("bagLit[{}]", vs.len()),
+            Rhs::NamedSource(n) => format!("source<{n}>"),
+            Rhs::ReadFile { .. } => "readFile".into(),
+            Rhs::WriteFile { .. } => "writeFile".into(),
+            Rhs::Collect { label, .. } => format!("collect<{label}>"),
+            Rhs::Map { udf, .. } => format!("map<{}>", udf.name),
+            Rhs::Filter { udf, .. } => format!("filter<{}>", udf.name),
+            Rhs::FlatMap { udf, .. } => format!("flatMap<{}>", udf.name),
+            Rhs::Join { .. } => "join".into(),
+            Rhs::ReduceByKey { udf, .. } => format!("reduceByKey<{}>", udf.name),
+            Rhs::Reduce { udf, .. } => format!("reduce<{}>", udf.name),
+            Rhs::Count { .. } => "count".into(),
+            Rhs::Distinct { .. } => "distinct".into(),
+            Rhs::Union { .. } => "union".into(),
+            Rhs::Cross { .. } => "cross".into(),
+            Rhs::ScalarUn { udf, .. } => format!("scalar<{}>", udf.name),
+            Rhs::ScalarBin { udf, .. } => format!("scalar<{}>", udf.name),
+            Rhs::Copy(_) => "copy".into(),
+            Rhs::XlaCall { spec, .. } => format!("xla<{}>", spec.artifact),
+            Rhs::Phi(_) => "Φ".into(),
+        }
+    }
+
+    /// The result type of this operation, given the variable table.
+    pub fn result_ty(&self, vars: &[VarInfo]) -> Ty {
+        match self {
+            Rhs::Const(_) | Rhs::ScalarUn { .. } | Rhs::ScalarBin { .. } => Ty::Scalar,
+            Rhs::Reduce { .. } | Rhs::Count { .. } => Ty::Scalar,
+            Rhs::WriteFile { .. } | Rhs::Collect { .. } => Ty::Scalar, // Unit
+            Rhs::Copy(v) => vars[*v].ty,
+            Rhs::Phi(args) => args.first().map(|(_, v)| vars[*v].ty).unwrap_or(Ty::Bag),
+            _ => Ty::Bag,
+        }
+    }
+}
+
+/// One assignment statement: `var := rhs`.
+#[derive(Clone, Debug)]
+pub struct Instr {
+    /// Target variable.
+    pub var: VarId,
+    /// Operation.
+    pub rhs: Rhs,
+}
+
+/// Basic-block terminator.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Terminator {
+    /// Unconditional jump.
+    Jump(BlockId),
+    /// Two-way branch on a scalar boolean variable. That variable's
+    /// dataflow node becomes a *condition node* (§5.3).
+    Branch {
+        /// Scalar boolean variable.
+        cond: VarId,
+        /// Successor when true.
+        then_b: BlockId,
+        /// Successor when false.
+        else_b: BlockId,
+    },
+    /// Program end.
+    End,
+}
+
+impl Terminator {
+    /// Successor block ids.
+    pub fn successors(&self) -> Vec<BlockId> {
+        match self {
+            Terminator::Jump(b) => vec![*b],
+            Terminator::Branch { then_b, else_b, .. } => vec![*then_b, *else_b],
+            Terminator::End => vec![],
+        }
+    }
+}
+
+/// A basic block: straight-line assignments plus a terminator.
+#[derive(Clone, Debug, Default)]
+pub struct Block {
+    /// Assignments, in order.
+    pub instrs: Vec<Instr>,
+    /// Terminator (defaults to `End`).
+    pub term: Terminator,
+}
+
+impl Default for Terminator {
+    fn default() -> Self {
+        Terminator::End
+    }
+}
+
+/// A pre-SSA program: a CFG of three-address basic blocks over mutable
+/// variables. Produced by the LabyLang lowerer or the builder API.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    /// Basic blocks, indexed by [`BlockId`].
+    pub blocks: Vec<Block>,
+    /// Entry block.
+    pub entry: BlockId,
+    /// Variable table.
+    pub vars: Vec<VarInfo>,
+}
+
+impl Program {
+    /// Allocate a fresh variable.
+    pub fn new_var(&mut self, name: impl Into<String>, ty: Ty) -> VarId {
+        self.vars.push(VarInfo { name: name.into(), ty });
+        self.vars.len() - 1
+    }
+
+    /// Allocate a fresh (empty) block.
+    pub fn new_block(&mut self) -> BlockId {
+        self.blocks.push(Block::default());
+        self.blocks.len() - 1
+    }
+
+    /// Render a readable listing (for `labyrinth compile --dump-ir`).
+    pub fn listing(&self) -> String {
+        let mut out = String::new();
+        for (bi, b) in self.blocks.iter().enumerate() {
+            out.push_str(&format!(
+                "bb{}{}:\n",
+                bi,
+                if bi == self.entry { " (entry)" } else { "" }
+            ));
+            for i in &b.instrs {
+                let ins = i
+                    .rhs
+                    .input_vars()
+                    .iter()
+                    .map(|v| self.vars[*v].name.clone())
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                out.push_str(&format!(
+                    "  {} = {}({})\n",
+                    self.vars[i.var].name,
+                    i.rhs.mnemonic(),
+                    ins
+                ));
+            }
+            match &b.term {
+                Terminator::Jump(t) => out.push_str(&format!("  jump bb{t}\n")),
+                Terminator::Branch { cond, then_b, else_b } => out.push_str(&format!(
+                    "  branch {} ? bb{} : bb{}\n",
+                    self.vars[*cond].name, then_b, else_b
+                )),
+                Terminator::End => out.push_str("  end\n"),
+            }
+        }
+        out
+    }
+}
+
+/// Parse LabyLang source and lower it to the pre-SSA IR.
+pub fn parse_and_lower(src: &str) -> crate::Result<Program> {
+    let tokens = lexer::lex(src)?;
+    let ast = parser::parse(&tokens)?;
+    lower::lower(&ast)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_listing_smoke() {
+        let mut p = Program::default();
+        let b0 = p.new_block();
+        p.entry = b0;
+        let v = p.new_var("x", Ty::Scalar);
+        p.blocks[b0].instrs.push(Instr { var: v, rhs: Rhs::Const(Value::I64(1)) });
+        p.blocks[b0].term = Terminator::End;
+        let l = p.listing();
+        assert!(l.contains("x = const 1()"));
+        assert!(l.contains("end"));
+    }
+
+    #[test]
+    fn rhs_input_vars_cover_binary_ops() {
+        let r = Rhs::Join { left: 3, right: 5 };
+        assert_eq!(r.input_vars(), vec![3, 5]);
+        let mut r2 = Rhs::ScalarBin {
+            left: 1,
+            right: 2,
+            udf: Udf2::new("+", |a, b| Value::I64(a.as_i64() + b.as_i64())),
+        };
+        r2.map_inputs(|v| v + 10);
+        assert_eq!(r2.input_vars(), vec![11, 12]);
+    }
+
+    #[test]
+    fn terminator_successors() {
+        assert_eq!(Terminator::Jump(3).successors(), vec![3]);
+        assert_eq!(
+            Terminator::Branch { cond: 0, then_b: 1, else_b: 2 }.successors(),
+            vec![1, 2]
+        );
+        assert!(Terminator::End.successors().is_empty());
+    }
+}

@@ -1,0 +1,372 @@
+//! LabyLang recursive-descent parser.
+
+use super::ast::{Ast, BinOp, Expr, Stmt, UnOp};
+use super::lexer::{Tok, Token};
+use crate::error::{Error, Result};
+
+struct Parser<'a> {
+    toks: &'a [Token],
+    pos: usize,
+}
+
+/// Parse a token stream into an AST.
+pub fn parse(toks: &[Token]) -> Result<Ast> {
+    let mut p = Parser { toks, pos: 0 };
+    let mut stmts = Vec::new();
+    while !p.at(&Tok::Eof) {
+        stmts.push(p.stmt()?);
+    }
+    Ok(Ast { stmts })
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+    fn peek2(&self) -> &Tok {
+        &self.toks[(self.pos + 1).min(self.toks.len() - 1)].tok
+    }
+    fn at(&self, t: &Tok) -> bool {
+        self.peek() == t
+    }
+    fn bump(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+    fn err(&self, msg: impl Into<String>) -> Error {
+        let t = &self.toks[self.pos];
+        Error::Parse { line: t.line, col: t.col, msg: msg.into() }
+    }
+    fn expect(&mut self, t: Tok, what: &str) -> Result<()> {
+        if self.at(&t) {
+            self.bump();
+            Ok(())
+        } else {
+            Err(self.err(format!("expected {what}, found {:?}", self.peek())))
+        }
+    }
+    fn ident(&mut self) -> Result<String> {
+        match self.peek().clone() {
+            Tok::Ident(s) => {
+                self.bump();
+                Ok(s)
+            }
+            other => Err(self.err(format!("expected identifier, found {other:?}"))),
+        }
+    }
+
+    fn block(&mut self) -> Result<Vec<Stmt>> {
+        self.expect(Tok::LBrace, "'{'")?;
+        let mut stmts = Vec::new();
+        while !self.at(&Tok::RBrace) {
+            if self.at(&Tok::Eof) {
+                return Err(self.err("unterminated block"));
+            }
+            stmts.push(self.stmt()?);
+        }
+        self.bump();
+        Ok(stmts)
+    }
+
+    fn stmt(&mut self) -> Result<Stmt> {
+        match self.peek().clone() {
+            Tok::While => {
+                self.bump();
+                self.expect(Tok::LParen, "'('")?;
+                let cond = self.expr()?;
+                self.expect(Tok::RParen, "')'")?;
+                let body = self.block()?;
+                Ok(Stmt::While(cond, body))
+            }
+            Tok::If => {
+                self.bump();
+                self.expect(Tok::LParen, "'('")?;
+                let cond = self.expr()?;
+                self.expect(Tok::RParen, "')'")?;
+                let then_b = self.block()?;
+                let else_b = if self.at(&Tok::Else) {
+                    self.bump();
+                    self.block()?
+                } else {
+                    Vec::new()
+                };
+                Ok(Stmt::If(cond, then_b, else_b))
+            }
+            Tok::Break => {
+                self.bump();
+                self.expect(Tok::Semi, "';'")?;
+                Ok(Stmt::Break)
+            }
+            Tok::Continue => {
+                self.bump();
+                self.expect(Tok::Semi, "';'")?;
+                Ok(Stmt::Continue)
+            }
+            Tok::Ident(name) if *self.peek2() == Tok::Assign => {
+                self.bump();
+                self.bump();
+                let e = self.expr()?;
+                self.expect(Tok::Semi, "';'")?;
+                Ok(Stmt::Assign(name, e))
+            }
+            _ => {
+                let e = self.expr()?;
+                self.expect(Tok::Semi, "';'")?;
+                Ok(Stmt::ExprStmt(e))
+            }
+        }
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.and_expr()?;
+        while self.at(&Tok::OrOr) {
+            self.bump();
+            let rhs = self.and_expr()?;
+            lhs = Expr::Bin(BinOp::Or, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.cmp_expr()?;
+        while self.at(&Tok::AndAnd) {
+            self.bump();
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Bin(BinOp::And, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr> {
+        let lhs = self.add_expr()?;
+        let op = match self.peek() {
+            Tok::Eq => Some(BinOp::Eq),
+            Tok::Ne => Some(BinOp::Ne),
+            Tok::Lt => Some(BinOp::Lt),
+            Tok::Le => Some(BinOp::Le),
+            Tok::Gt => Some(BinOp::Gt),
+            Tok::Ge => Some(BinOp::Ge),
+            _ => None,
+        };
+        if let Some(op) = op {
+            self.bump();
+            let rhs = self.add_expr()?;
+            Ok(Expr::Bin(op, Box::new(lhs), Box::new(rhs)))
+        } else {
+            Ok(lhs)
+        }
+    }
+
+    fn add_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.unary()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::Percent => BinOp::Rem,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.unary()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn unary(&mut self) -> Result<Expr> {
+        match self.peek() {
+            Tok::Minus => {
+                self.bump();
+                Ok(Expr::Un(UnOp::Neg, Box::new(self.unary()?)))
+            }
+            Tok::Bang => {
+                self.bump();
+                Ok(Expr::Un(UnOp::Not, Box::new(self.unary()?)))
+            }
+            _ => self.postfix(),
+        }
+    }
+
+    fn postfix(&mut self) -> Result<Expr> {
+        let mut e = self.primary()?;
+        while self.at(&Tok::Dot) {
+            self.bump();
+            let name = self.ident()?;
+            self.expect(Tok::LParen, "'(' after method name")?;
+            let args = self.args()?;
+            e = Expr::Method(Box::new(e), name, args);
+        }
+        Ok(e)
+    }
+
+    fn args(&mut self) -> Result<Vec<Expr>> {
+        let mut args = Vec::new();
+        if !self.at(&Tok::RParen) {
+            loop {
+                args.push(self.expr()?);
+                if self.at(&Tok::Comma) {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.expect(Tok::RParen, "')'")?;
+        Ok(args)
+    }
+
+    fn primary(&mut self) -> Result<Expr> {
+        match self.peek().clone() {
+            Tok::Int(v) => {
+                self.bump();
+                Ok(Expr::Int(v))
+            }
+            Tok::Float(v) => {
+                self.bump();
+                Ok(Expr::Float(v))
+            }
+            Tok::Str(s) => {
+                self.bump();
+                Ok(Expr::Str(s))
+            }
+            Tok::True => {
+                self.bump();
+                Ok(Expr::Bool(true))
+            }
+            Tok::False => {
+                self.bump();
+                Ok(Expr::Bool(false))
+            }
+            Tok::Pipe => {
+                self.bump();
+                let mut params = Vec::new();
+                if !self.at(&Tok::Pipe) {
+                    loop {
+                        params.push(self.ident()?);
+                        if self.at(&Tok::Comma) {
+                            self.bump();
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                self.expect(Tok::Pipe, "'|' closing lambda params")?;
+                let body = self.expr()?;
+                Ok(Expr::Lambda(params, Box::new(body)))
+            }
+            Tok::LParen => {
+                self.bump();
+                let e = self.expr()?;
+                self.expect(Tok::RParen, "')'")?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                self.bump();
+                if self.at(&Tok::LParen) {
+                    self.bump();
+                    let args = self.args()?;
+                    Ok(Expr::Call(name, args))
+                } else {
+                    Ok(Expr::Var(name))
+                }
+            }
+            other => Err(self.err(format!("expected expression, found {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::lexer::lex;
+
+    fn parse_src(src: &str) -> Ast {
+        parse(&lex(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn parses_assignment_chain() {
+        let ast = parse_src("x = 1; y = x + 2 * 3;");
+        assert_eq!(ast.stmts.len(), 2);
+        match &ast.stmts[1] {
+            Stmt::Assign(n, Expr::Bin(BinOp::Add, _, rhs)) => {
+                assert_eq!(n, "y");
+                assert!(matches!(**rhs, Expr::Bin(BinOp::Mul, _, _)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_while_if() {
+        let ast = parse_src("while (d <= 365) { if (d != 1) { x = 2; } else { x = 3; } d = d + 1; }");
+        match &ast.stmts[0] {
+            Stmt::While(cond, body) => {
+                assert!(matches!(cond, Expr::Bin(BinOp::Le, _, _)));
+                assert_eq!(body.len(), 2);
+                assert!(matches!(&body[0], Stmt::If(_, t, e) if t.len() == 1 && e.len() == 1));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_method_chain_with_lambda() {
+        let ast = parse_src(r#"c = v.map(|x| pair(x, 1)).reduceByKey(|a, b| a + b);"#);
+        match &ast.stmts[0] {
+            Stmt::Assign(_, Expr::Method(recv, name, args)) => {
+                assert_eq!(name, "reduceByKey");
+                assert!(matches!(args[0], Expr::Lambda(ref ps, _) if ps.len() == 2));
+                assert!(matches!(**recv, Expr::Method(_, ref n, _) if n == "map"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_expr_stmt_call() {
+        let ast = parse_src(r#"writeFile(diffs, "out" + day);"#);
+        assert!(matches!(&ast.stmts[0], Stmt::ExprStmt(Expr::Call(n, args)) if n == "writeFile" && args.len() == 2));
+    }
+
+    #[test]
+    fn reports_error_position() {
+        let toks = lex("x = ;").unwrap();
+        let e = parse(&toks).unwrap_err();
+        assert!(e.to_string().contains("1:5"), "{e}");
+    }
+
+    #[test]
+    fn unary_ops_bind_tightly() {
+        let ast = parse_src("x = -a + !b;");
+        match &ast.stmts[0] {
+            Stmt::Assign(_, Expr::Bin(BinOp::Add, l, r)) => {
+                assert!(matches!(**l, Expr::Un(UnOp::Neg, _)));
+                assert!(matches!(**r, Expr::Un(UnOp::Not, _)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

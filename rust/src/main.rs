@@ -1,0 +1,310 @@
+//! `labyrinth` — the leader entrypoint / CLI.
+//!
+//! ```text
+//! labyrinth run <program.laby> [--workers N] [--mode pipelined|barrier]
+//!               [--executor labyrinth|spark|flink|single] [--no-reuse]
+//!               [--io-dir DIR] [--config FILE] [--sched] [--metrics]
+//! labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot]
+//! labyrinth generate visitcount --days N --visits M --pages P --out DIR
+//! labyrinth config --dump [--config FILE]
+//! ```
+//!
+//! Argument parsing is handwritten (clap is unavailable offline; see
+//! DESIGN.md §2). Config-file values are overridden by CLI flags.
+
+use labyrinth::baselines::{self, separate_jobs};
+use labyrinth::config::Config;
+use labyrinth::exec::{ExecConfig, ExecMode};
+use labyrinth::Result;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("labyrinth: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Pull `--key value` / `--flag` options out of the argument list.
+struct Opts {
+    positional: Vec<String>,
+    options: Vec<(String, Option<String>)>,
+}
+
+const VALUE_OPTS: &[&str] = &[
+    "--workers", "--mode", "--executor", "--io-dir", "--config", "--dump", "--days",
+    "--visits", "--pages", "--out", "--batch", "--scale",
+];
+const FLAG_OPTS: &[&str] = &["--no-reuse", "--metrics", "--sched", "--dump-plan"];
+
+fn parse_opts(args: &[String]) -> Result<Opts> {
+    let mut positional = Vec::new();
+    let mut options = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if VALUE_OPTS.contains(&a.as_str()) {
+            let v = args.get(i + 1).ok_or_else(|| {
+                labyrinth::Error::Config(format!("option {a} needs a value"))
+            })?;
+            options.push((a.clone(), Some(v.clone())));
+            i += 2;
+        } else if FLAG_OPTS.contains(&a.as_str()) {
+            options.push((a.clone(), None));
+            i += 1;
+        } else if a.starts_with("--") {
+            return Err(labyrinth::Error::Config(format!("unknown option {a}")));
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok(Opts { positional, options })
+}
+
+impl Opts {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.options
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+    fn has(&self, key: &str) -> bool {
+        self.options.iter().any(|(k, _)| k == key)
+    }
+}
+
+/// Merge config file + CLI into one [`Config`] namespace.
+fn load_config(opts: &Opts) -> Result<Config> {
+    let mut cfg = match opts.get("--config") {
+        Some(path) => Config::load(path)?,
+        None => Config::new(),
+    };
+    for (k, v) in &opts.options {
+        if let Some(v) = v {
+            cfg.set(format!("cli.{}", k.trim_start_matches("--")), v.clone());
+        }
+    }
+    Ok(cfg)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let opts = parse_opts(&args[1..])?;
+    match cmd.as_str() {
+        "run" => cmd_run(&opts),
+        "compile" => cmd_compile(&opts),
+        "generate" => cmd_generate(&opts),
+        "config" => cmd_config(&opts),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(labyrinth::Error::Config(format!("unknown command '{other}'"))),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "labyrinth — imperative control flow compiled to a single cyclic dataflow\n\
+         \n\
+         USAGE:\n\
+         \x20 labyrinth run <program.laby> [--workers N] [--mode pipelined|barrier]\n\
+         \x20            [--executor labyrinth|spark|flink|single] [--no-reuse]\n\
+         \x20            [--io-dir DIR] [--config FILE] [--sched] [--metrics]\n\
+         \x20 labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot]\n\
+         \x20 labyrinth generate visitcount --days N [--visits M] [--pages P] --out DIR\n\
+         \x20 labyrinth config --dump [--config FILE]"
+    );
+}
+
+fn read_program(opts: &Opts) -> Result<labyrinth::frontend::Program> {
+    let path = opts
+        .positional
+        .first()
+        .ok_or_else(|| labyrinth::Error::Config("expected a <program.laby> path".into()))?;
+    let src = std::fs::read_to_string(path)?;
+    labyrinth::frontend::parse_and_lower(&src)
+}
+
+fn cmd_run(opts: &Opts) -> Result<()> {
+    let cfg = load_config(opts)?;
+    let program = read_program(opts)?;
+    let workers = cfg.get_usize("cli.workers", cfg.get_usize("exec.workers", 2)?)?;
+    let io_dir = std::path::PathBuf::from(
+        cfg.get("cli.io-dir").or(cfg.get("exec.io_dir")).unwrap_or("."),
+    );
+    let executor = cfg.get_or("cli.executor", &cfg.get_or("exec.executor", "labyrinth"));
+    let t0 = std::time::Instant::now();
+
+    match executor.as_str() {
+        "labyrinth" => {
+            let mode = match cfg.get_or("cli.mode", &cfg.get_or("exec.mode", "pipelined")).as_str()
+            {
+                "barrier" => ExecMode::Barrier,
+                _ => ExecMode::Pipelined,
+            };
+            let graph = labyrinth::compile(&program)?;
+            let run_cfg = ExecConfig {
+                workers,
+                mode,
+                batch: cfg.get_usize("cli.batch", cfg.get_usize("exec.batch", 256)?)?,
+                reuse_state: !opts.has("--no-reuse"),
+                io_dir,
+                sched: opts.has("--sched").then(labyrinth::sched::LatencyModel::flink_like),
+            };
+            let out = labyrinth::exec::run(&graph, &run_cfg)?;
+            report_collected(out.collected.iter().map(|(k, v)| (k.as_str(), v.as_slice())));
+            println!(
+                "ok: {} control-flow steps, {} in dataflow ({} job scheduling)",
+                out.path_len,
+                labyrinth::util::fmt_duration(out.elapsed),
+                labyrinth::util::fmt_duration(out.sched_overhead),
+            );
+            if opts.has("--metrics") {
+                print!("{}", out.metrics.report());
+            }
+        }
+        "spark" | "flink" => {
+            let mut scfg = if executor == "spark" {
+                separate_jobs::SeparateJobsConfig::spark(workers)
+            } else {
+                separate_jobs::SeparateJobsConfig::flink(workers)
+            };
+            scfg.io_dir = io_dir;
+            let out = separate_jobs::run(&program, &scfg)?;
+            report_collected(out.collected.iter().map(|(k, v)| (k.as_str(), v.as_slice())));
+            println!(
+                "ok: {} jobs launched, {} total ({} scheduling)",
+                out.jobs_launched,
+                labyrinth::util::fmt_duration(out.elapsed),
+                labyrinth::util::fmt_duration(out.sched_time),
+            );
+        }
+        "single" => {
+            let scfg = baselines::single_thread::SingleThreadConfig {
+                io_dir,
+                ..Default::default()
+            };
+            let out = baselines::single_thread::run(&program, &scfg)?;
+            report_collected(out.collected.iter().map(|(k, v)| (k.as_str(), v.as_slice())));
+            println!("ok: single-threaded in {}", labyrinth::util::fmt_duration(out.elapsed));
+        }
+        other => {
+            return Err(labyrinth::Error::Config(format!(
+                "unknown executor '{other}' (labyrinth|spark|flink|single)"
+            )))
+        }
+    }
+    println!("total wall time {}", labyrinth::util::fmt_duration(t0.elapsed()));
+    Ok(())
+}
+
+fn report_collected<'a>(collected: impl Iterator<Item = (&'a str, &'a [labyrinth::Value])>) {
+    let mut entries: Vec<_> = collected.collect();
+    entries.sort_by_key(|(k, _)| k.to_string());
+    for (label, items) in entries {
+        let preview: Vec<String> = items.iter().take(8).map(|v| format!("{v:?}")).collect();
+        println!(
+            "collected '{label}': {} elements [{}{}]",
+            items.len(),
+            preview.join(", "),
+            if items.len() > 8 { ", …" } else { "" }
+        );
+    }
+}
+
+fn cmd_compile(opts: &Opts) -> Result<()> {
+    let program = read_program(opts)?;
+    let dump = opts.get("--dump").unwrap_or("dataflow");
+    match dump {
+        "ir" => print!("{}", program.listing()),
+        "ssa" => {
+            let cfg = labyrinth::cfg::Cfg::from_program(&program)?;
+            let ssa = labyrinth::ssa::construct(&cfg)?;
+            print!("{}", ssa.listing());
+        }
+        "dataflow" => {
+            let graph = labyrinth::compile(&program)?;
+            println!("-- SSA --\n{}", graph.ssa_listing);
+            println!("-- dataflow: {} nodes --", graph.num_nodes());
+            for n in &graph.nodes {
+                let ins: Vec<String> = n
+                    .inputs
+                    .iter()
+                    .map(|i| {
+                        format!(
+                            "{}{}",
+                            graph.nodes[i.src].name,
+                            if i.conditional { "*" } else { "" }
+                        )
+                    })
+                    .collect();
+                println!(
+                    "  [{}] {} := {}({})  block=bb{} par={:?}{}",
+                    n.id,
+                    n.name,
+                    n.op.mnemonic(),
+                    ins.join(", "),
+                    n.block,
+                    n.par,
+                    if n.cond.is_some() { " [condition]" } else { "" }
+                );
+            }
+        }
+        "dot" => {
+            let graph = labyrinth::compile(&program)?;
+            print!("{}", labyrinth::dataflow::dot::to_dot(&graph));
+        }
+        other => {
+            return Err(labyrinth::Error::Config(format!(
+                "unknown dump '{other}' (ir|ssa|dataflow|dot)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_generate(opts: &Opts) -> Result<()> {
+    let what = opts
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| labyrinth::Error::Config("generate what? (visitcount)".into()))?;
+    let out = opts
+        .get("--out")
+        .ok_or_else(|| labyrinth::Error::Config("--out DIR required".into()))?;
+    match what {
+        "visitcount" => {
+            let w = labyrinth::workload::VisitCountWorkload {
+                days: opts.get("--days").map(|s| s.parse().unwrap()).unwrap_or(10),
+                visits_per_day: opts.get("--visits").map(|s| s.parse().unwrap()).unwrap_or(10_000),
+                num_pages: opts.get("--pages").map(|s| s.parse().unwrap()).unwrap_or(1_000),
+                ..Default::default()
+            };
+            w.write_files(std::path::Path::new(out))?;
+            println!(
+                "generated {} day logs + pageAttributes under {out} ({} visits/day, {} pages)",
+                w.days, w.visits_per_day, w.num_pages
+            );
+            Ok(())
+        }
+        other => Err(labyrinth::Error::Config(format!("unknown workload '{other}'"))),
+    }
+}
+
+fn cmd_config(opts: &Opts) -> Result<()> {
+    let cfg = load_config(opts)?;
+    for k in cfg.keys() {
+        println!("{k} = {}", cfg.get(&k).unwrap_or(""));
+    }
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Execution metrics: counters and timers collected by the engine and the
+//! baselines, reported by the CLI and recorded in EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A shareable metrics sink. All counters are lock-free; the name map is
+/// append-mostly and guarded by a mutex.
+#[derive(Default, Debug)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<AtomicU64>>>,
+}
+
+impl Metrics {
+    /// Create an empty sink.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Get (or create) the counter handle for `name`.
+    pub fn counter(&self, name: &str) -> std::sync::Arc<AtomicU64> {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Add `v` to counter `name`.
+    pub fn add(&self, name: &str, v: u64) {
+        self.counter(name).fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds under `name` (sum) and bump
+    /// `name.count`, enabling mean computation at report time.
+    pub fn record_time(&self, name: &str, d: Duration) {
+        self.add(&format!("{name}.ns"), d.as_nanos() as u64);
+        self.add(&format!("{name}.count"), 1);
+    }
+
+    /// Snapshot all counters.
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Value of a single counter (0 if absent).
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Render a human-readable report.
+    pub fn report(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::new();
+        for (k, v) in &snap {
+            if let Some(base) = k.strip_suffix(".ns") {
+                let count = snap.get(&format!("{base}.count")).copied().unwrap_or(0);
+                if count > 0 {
+                    out.push_str(&format!(
+                        "{base}: total {} over {count} events (mean {})\n",
+                        crate::util::fmt_duration(Duration::from_nanos(*v)),
+                        crate::util::fmt_duration(Duration::from_nanos(v / count)),
+                    ));
+                    continue;
+                }
+            }
+            if k.ends_with(".count") && snap.contains_key(&format!(
+                "{}.ns",
+                k.trim_end_matches(".count")
+            )) {
+                continue; // folded into the .ns line above
+            }
+            out.push_str(&format!("{k}: {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.add("msgs", 3);
+        m.add("msgs", 4);
+        assert_eq!(m.get("msgs"), 7);
+        assert_eq!(m.get("absent"), 0);
+    }
+
+    #[test]
+    fn timing_report_contains_mean() {
+        let m = Metrics::new();
+        m.record_time("step", Duration::from_micros(10));
+        m.record_time("step", Duration::from_micros(30));
+        let rep = m.report();
+        assert!(rep.contains("step"), "{rep}");
+        assert!(rep.contains("2 events"), "{rep}");
+        assert!(rep.contains("20.00µs"), "{rep}");
+    }
+
+    #[test]
+    fn counter_handles_are_shared() {
+        let m = Metrics::new();
+        let c = m.counter("x");
+        c.fetch_add(5, Ordering::Relaxed);
+        assert_eq!(m.get("x"), 5);
+    }
+}

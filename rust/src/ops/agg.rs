@@ -1,0 +1,206 @@
+//! Aggregations: reduceByKey, reduce, count, distinct. These are the
+//! pipeline breakers (§9.1.2): they can only emit once their input bag is
+//! complete (except `distinct`, which emits on first sight).
+
+use super::{Collector, Transformation};
+use crate::frontend::Udf2;
+use crate::value::Value;
+use rustc_hash::{FxHashMap, FxHashSet};
+
+/// `reduceByKey`: combine `Pair(k, v)` values per key; emits
+/// `Pair(k, acc)` at close (the grouped-aggregation example from §6.1).
+pub struct ReduceByKeyT {
+    udf: Udf2,
+    acc: FxHashMap<Value, Value>,
+}
+
+impl ReduceByKeyT {
+    /// Create from a combiner.
+    pub fn new(udf: Udf2) -> ReduceByKeyT {
+        ReduceByKeyT { udf, acc: FxHashMap::default() }
+    }
+}
+
+impl Transformation for ReduceByKeyT {
+    fn open_out_bag(&mut self) {
+        self.acc.clear();
+    }
+    fn push_in_element(&mut self, _input: usize, v: &Value, _out: &mut dyn Collector) {
+        let (k, pv) = match v {
+            Value::Pair(p) => (p.0.clone(), p.1.clone()),
+            other => panic!("reduceByKey expects pairs, got {other:?}"),
+        };
+        match self.acc.get_mut(&k) {
+            Some(a) => *a = self.udf.call(a, &pv),
+            None => {
+                self.acc.insert(k, pv);
+            }
+        }
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, out: &mut dyn Collector) {
+        for (k, a) in self.acc.drain() {
+            out.emit(Value::pair(k, a));
+        }
+    }
+}
+
+/// `reduce`: full aggregation to (at most) one element, emitted at close.
+/// An empty input emits nothing — the lifted-scalar consumer will fail
+/// loudly rather than fabricate a value.
+pub struct ReduceT {
+    udf: Udf2,
+    acc: Option<Value>,
+}
+
+impl ReduceT {
+    /// Create from a combiner.
+    pub fn new(udf: Udf2) -> ReduceT {
+        ReduceT { udf, acc: None }
+    }
+}
+
+impl Transformation for ReduceT {
+    fn open_out_bag(&mut self) {
+        self.acc = None;
+    }
+    fn push_in_element(&mut self, _input: usize, v: &Value, _out: &mut dyn Collector) {
+        self.acc = Some(match self.acc.take() {
+            Some(a) => self.udf.call(&a, v),
+            None => v.clone(),
+        });
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, out: &mut dyn Collector) {
+        if let Some(a) = self.acc.take() {
+            out.emit(a);
+        }
+    }
+}
+
+/// `count`: number of elements, as a one-element `I64` bag.
+pub struct CountT {
+    n: i64,
+}
+
+impl CountT {
+    /// Create a zeroed counter.
+    pub fn new() -> CountT {
+        CountT { n: 0 }
+    }
+}
+
+impl Default for CountT {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transformation for CountT {
+    fn open_out_bag(&mut self) {
+        self.n = 0;
+    }
+    fn push_in_element(&mut self, _input: usize, _v: &Value, _out: &mut dyn Collector) {
+        self.n += 1;
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, out: &mut dyn Collector) {
+        out.emit(Value::I64(self.n));
+    }
+}
+
+/// `distinct`: emit each element on first occurrence (pipelined; relies on
+/// hash partitioning to co-locate duplicates).
+pub struct DistinctT {
+    seen: FxHashSet<Value>,
+}
+
+impl DistinctT {
+    /// Create an empty set.
+    pub fn new() -> DistinctT {
+        DistinctT { seen: FxHashSet::default() }
+    }
+}
+
+impl Default for DistinctT {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transformation for DistinctT {
+    fn open_out_bag(&mut self) {
+        self.seen.clear();
+    }
+    fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
+        if self.seen.insert(v.clone()) {
+            out.emit(v.clone());
+        }
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::run_once;
+
+    fn kv(k: i64, v: i64) -> Value {
+        Value::pair(Value::I64(k), Value::I64(v))
+    }
+
+    fn sum_udf() -> Udf2 {
+        Udf2::new("+", |a, b| Value::I64(a.as_i64() + b.as_i64()))
+    }
+
+    #[test]
+    fn reduce_by_key_sums_per_key() {
+        let mut t = ReduceByKeyT::new(sum_udf());
+        let mut out = run_once(&mut t, &[&[kv(1, 1), kv(2, 5), kv(1, 2)]]);
+        out.sort();
+        assert_eq!(out, vec![kv(1, 3), kv(2, 5)]);
+    }
+
+    #[test]
+    fn reduce_folds_all() {
+        let mut t = ReduceT::new(sum_udf());
+        let out = run_once(&mut t, &[&[Value::I64(1), Value::I64(2), Value::I64(3)]]);
+        assert_eq!(out, vec![Value::I64(6)]);
+    }
+
+    #[test]
+    fn reduce_of_empty_emits_nothing() {
+        let mut t = ReduceT::new(sum_udf());
+        let out = run_once(&mut t, &[&[]]);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn count_counts() {
+        let mut t = CountT::new();
+        let out = run_once(&mut t, &[&[Value::I64(9), Value::I64(9)]]);
+        assert_eq!(out, vec![Value::I64(2)]);
+        // Bags are computed one at a time; counter resets.
+        let out2 = run_once(&mut t, &[&[]]);
+        assert_eq!(out2, vec![Value::I64(0)]);
+    }
+
+    #[test]
+    fn distinct_deduplicates() {
+        let mut t = DistinctT::new();
+        let out = run_once(
+            &mut t,
+            &[&[Value::I64(1), Value::I64(1), Value::I64(2), Value::I64(1)]],
+        );
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn state_resets_between_bags() {
+        let mut t = ReduceByKeyT::new(sum_udf());
+        let _ = run_once(&mut t, &[&[kv(1, 10)]]);
+        let out = run_once(&mut t, &[&[kv(1, 1)]]);
+        assert_eq!(out, vec![kv(1, 1)]);
+    }
+}

@@ -1,0 +1,269 @@
+//! Element-wise and structural transformations: map, filter, flatMap,
+//! union, cross, Φ, and the pass-through used by collect sinks.
+
+use super::{Collector, Transformation};
+use crate::frontend::{Udf1, UdfN};
+use crate::value::Value;
+
+/// `map`: apply a UDF to every element (fully pipelined).
+pub struct MapT {
+    udf: Udf1,
+}
+
+impl MapT {
+    /// Create from a UDF.
+    pub fn new(udf: Udf1) -> MapT {
+        MapT { udf }
+    }
+}
+
+impl Transformation for MapT {
+    fn open_out_bag(&mut self) {}
+    fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
+        out.emit(self.udf.call(v));
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+}
+
+/// `filter`: keep elements whose predicate returns `Bool(true)`.
+pub struct FilterT {
+    udf: Udf1,
+}
+
+impl FilterT {
+    /// Create from a predicate UDF.
+    pub fn new(udf: Udf1) -> FilterT {
+        FilterT { udf }
+    }
+}
+
+impl Transformation for FilterT {
+    fn open_out_bag(&mut self) {}
+    fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
+        if self.udf.call(v).as_bool() {
+            out.emit(v.clone());
+        }
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+}
+
+/// `flatMap`: one-to-many map (fully pipelined).
+pub struct FlatMapT {
+    udf: UdfN,
+}
+
+impl FlatMapT {
+    /// Create from an expansion UDF.
+    pub fn new(udf: UdfN) -> FlatMapT {
+        FlatMapT { udf }
+    }
+}
+
+impl Transformation for FlatMapT {
+    fn open_out_bag(&mut self) {}
+    fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
+        for x in self.udf.call(v) {
+            out.emit(x);
+        }
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+}
+
+/// `union`: multiset union — pass through both inputs.
+pub struct UnionT;
+
+impl Transformation for UnionT {
+    fn open_out_bag(&mut self) {}
+    fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
+        out.emit(v.clone());
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+}
+
+/// Φ-node: for each output bag the runtime feeds exactly one input (the
+/// one selected by §6.3.3's longest-prefix rule); elements pass through.
+pub struct PhiT;
+
+impl Transformation for PhiT {
+    fn open_out_bag(&mut self) {}
+    fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
+        out.emit(v.clone());
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+}
+
+/// Pass-through for `collect` sinks (the engine captures the emitted bag
+/// and forwards it to the driver).
+pub struct PassThroughT;
+
+impl Transformation for PassThroughT {
+    fn open_out_bag(&mut self) {}
+    fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
+        out.emit(v.clone());
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+}
+
+/// `cross`: Cartesian product, emitting `Pair(left, right)`. Primarily the
+/// lifted form of binary scalar functions (§5.2), where both inputs are
+/// one-element bags. The left input is retained across output bags when
+/// loop-invariant (`keeps_input_state`).
+pub struct CrossT {
+    left: Vec<Value>,
+    right: Vec<Value>,
+    left_closed: bool,
+}
+
+impl CrossT {
+    /// Create an empty cross.
+    pub fn new() -> CrossT {
+        CrossT { left: Vec::new(), right: Vec::new(), left_closed: false }
+    }
+}
+
+impl Default for CrossT {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transformation for CrossT {
+    fn open_out_bag(&mut self) {
+        self.right.clear();
+    }
+    fn push_in_element(&mut self, input: usize, v: &Value, out: &mut dyn Collector) {
+        if input == 0 {
+            self.left.push(v.clone());
+        } else if self.left_closed {
+            // Left side complete: stream right elements against it.
+            for l in &self.left {
+                out.emit(Value::pair(l.clone(), v.clone()));
+            }
+        } else {
+            self.right.push(v.clone());
+        }
+    }
+    fn close_in_bag(&mut self, input: usize, out: &mut dyn Collector) {
+        if input == 0 {
+            self.left_closed = true;
+            for r in std::mem::take(&mut self.right) {
+                for l in &self.left {
+                    out.emit(Value::pair(l.clone(), r.clone()));
+                }
+            }
+        }
+    }
+    fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+    fn drop_state(&mut self, input: usize) {
+        if input == 0 {
+            self.left.clear();
+            self.left_closed = false;
+        }
+    }
+    fn keeps_input_state(&self, input: usize) -> bool {
+        input == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::Udf1;
+    use crate::ops::run_once;
+
+    fn i(v: i64) -> Value {
+        Value::I64(v)
+    }
+
+    #[test]
+    fn map_applies_udf() {
+        let mut t = MapT::new(Udf1::new("x+1", |v: &Value| i(v.as_i64() + 1)));
+        let out = run_once(&mut t, &[&[i(1), i(2)]]);
+        assert_eq!(out, vec![i(2), i(3)]);
+    }
+
+    #[test]
+    fn filter_keeps_matching() {
+        let mut t = FilterT::new(Udf1::new("even", |v: &Value| {
+            Value::Bool(v.as_i64() % 2 == 0)
+        }));
+        let out = run_once(&mut t, &[&[i(1), i(2), i(3), i(4)]]);
+        assert_eq!(out, vec![i(2), i(4)]);
+    }
+
+    #[test]
+    fn flat_map_expands() {
+        let mut t = FlatMapT::new(crate::frontend::UdfN::new("dup", |v: &Value| {
+            vec![v.clone(), v.clone()]
+        }));
+        let out = run_once(&mut t, &[&[i(7)]]);
+        assert_eq!(out, vec![i(7), i(7)]);
+    }
+
+    #[test]
+    fn union_merges_inputs() {
+        let mut t = UnionT;
+        let out = run_once(&mut t, &[&[i(1)], &[i(2), i(3)]]);
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn cross_emits_all_pairs() {
+        let mut t = CrossT::new();
+        let out = run_once(&mut t, &[&[i(1), i(2)], &[i(10)]]);
+        assert_eq!(out.len(), 2);
+        assert!(out.contains(&Value::pair(i(1), i(10))));
+        assert!(out.contains(&Value::pair(i(2), i(10))));
+    }
+
+    #[test]
+    fn cross_right_before_left_close_buffers() {
+        // Right elements arriving before the left side closes must still
+        // produce the full product.
+        let mut t = CrossT::new();
+        let mut out = crate::ops::VecCollector::default();
+        t.open_out_bag();
+        t.push_in_element(1, &i(10), &mut out);
+        t.push_in_element(0, &i(1), &mut out);
+        t.close_in_bag(0, &mut out);
+        t.push_in_element(1, &i(20), &mut out);
+        t.close_in_bag(1, &mut out);
+        t.close_out_bag(&mut out);
+        assert_eq!(out.items.len(), 2);
+    }
+
+    #[test]
+    fn cross_reuses_left_until_drop_state() {
+        let mut t = CrossT::new();
+        let first = run_once(&mut t, &[&[i(5)], &[i(1)]]);
+        assert_eq!(first, vec![Value::pair(i(5), i(1))]);
+        // Second bag: left NOT re-fed (runtime contract for kept state).
+        let mut out = crate::ops::VecCollector::default();
+        t.open_out_bag();
+        t.push_in_element(1, &i(2), &mut out);
+        t.close_in_bag(1, &mut out);
+        t.close_out_bag(&mut out);
+        assert_eq!(out.items, vec![Value::pair(i(5), i(2))]);
+        // After drop_state the left is gone.
+        t.drop_state(0);
+        let mut out2 = crate::ops::VecCollector::default();
+        t.open_out_bag();
+        t.push_in_element(1, &i(3), &mut out2);
+        t.close_in_bag(1, &mut out2);
+        t.close_out_bag(&mut out2);
+        assert!(out2.items.is_empty());
+    }
+
+    #[test]
+    fn phi_passes_through() {
+        let mut t = PhiT;
+        let out = run_once(&mut t, &[&[i(42)]]);
+        assert_eq!(out, vec![i(42)]);
+    }
+}

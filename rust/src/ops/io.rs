@@ -1,0 +1,260 @@
+//! Sources and sinks: literal bags, named in-memory sources, and file I/O.
+//! Parallel sources partition their elements round-robin over the node's
+//! physical instances.
+
+use super::{Collector, MakeCtx, Transformation};
+use crate::value::Value;
+use std::io::{BufRead, Write};
+
+/// Literal bag source: instance `i` of `n` emits elements `i, i+n, ...`.
+pub struct BagLitT {
+    items: Vec<Value>,
+    inst: usize,
+    insts: usize,
+}
+
+impl BagLitT {
+    /// Create for one physical instance.
+    pub fn new(items: Vec<Value>, ctx: &MakeCtx) -> BagLitT {
+        BagLitT { items, inst: ctx.inst, insts: ctx.insts }
+    }
+}
+
+impl Transformation for BagLitT {
+    fn open_out_bag(&mut self) {}
+    fn push_in_element(&mut self, _input: usize, _v: &Value, _out: &mut dyn Collector) {
+        unreachable!("source has no inputs")
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+    fn generate(&mut self, out: &mut dyn Collector) {
+        for (i, v) in self.items.iter().enumerate() {
+            if i % self.insts == self.inst {
+                out.emit(v.clone());
+            }
+        }
+    }
+}
+
+/// Named in-memory source, resolved through the workload registry (used by
+/// benches/examples to avoid disk I/O noise).
+pub struct NamedSourceT {
+    name: String,
+    inst: usize,
+    insts: usize,
+    registry: std::sync::Arc<crate::workload::registry::Registry>,
+}
+
+impl NamedSourceT {
+    /// Create for one physical instance.
+    pub fn new(name: String, ctx: &MakeCtx) -> NamedSourceT {
+        NamedSourceT {
+            name,
+            inst: ctx.inst,
+            insts: ctx.insts,
+            registry: ctx.registry.clone(),
+        }
+    }
+}
+
+impl Transformation for NamedSourceT {
+    fn open_out_bag(&mut self) {}
+    fn push_in_element(&mut self, _input: usize, _v: &Value, _out: &mut dyn Collector) {
+        unreachable!("source has no inputs")
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+    fn generate(&mut self, out: &mut dyn Collector) {
+        let data = self
+            .registry
+            .get(&self.name)
+            .unwrap_or_else(|| panic!("named source '{}' not registered", self.name));
+        for (i, v) in data.iter().enumerate() {
+            if i % self.insts == self.inst {
+                out.emit(v.clone());
+            }
+        }
+    }
+}
+
+/// `readFile`: input 0 is the (broadcast) singleton file name; each
+/// instance emits its round-robin share of the lines as `Str` values.
+/// The file name can change per iteration step — exactly the paper's
+/// Visit Count pattern (`"pageVisitLog" + day`).
+pub struct ReadFileT {
+    inst: usize,
+    insts: usize,
+    io_dir: std::path::PathBuf,
+    registry: std::sync::Arc<crate::workload::registry::Registry>,
+    name: Option<String>,
+}
+
+impl ReadFileT {
+    /// Create for one physical instance.
+    pub fn new(ctx: &MakeCtx) -> ReadFileT {
+        ReadFileT {
+            inst: ctx.inst,
+            insts: ctx.insts,
+            io_dir: ctx.io_dir.clone(),
+            registry: ctx.registry.clone(),
+            name: None,
+        }
+    }
+}
+
+impl Transformation for ReadFileT {
+    fn open_out_bag(&mut self) {
+        self.name = None;
+    }
+    fn push_in_element(&mut self, _input: usize, v: &Value, _out: &mut dyn Collector) {
+        self.name = Some(v.as_str().to_string());
+    }
+    fn close_in_bag(&mut self, _input: usize, out: &mut dyn Collector) {
+        let name = self.name.clone().expect("readFile got no file name");
+        // Names resolve against the in-memory registry first (benches use
+        // this to exercise the dynamic-name path without disk noise).
+        if let Some(data) = self.registry.get(&name) {
+            for (i, v) in data.iter().enumerate() {
+                if i % self.insts == self.inst {
+                    out.emit(v.clone());
+                }
+            }
+            return;
+        }
+        let path = self.io_dir.join(&name);
+        let f = std::fs::File::open(&path)
+            .unwrap_or_else(|e| panic!("readFile({}): {e}", path.display()));
+        let reader = std::io::BufReader::new(f);
+        for (i, line) in reader.lines().enumerate() {
+            if i % self.insts == self.inst {
+                out.emit(Value::str(line.expect("readFile line")));
+            }
+        }
+    }
+    fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+}
+
+/// `writeFile`: input 0 is the (gathered) data, input 1 the singleton file
+/// name. Writes one element per line at close; emits `Unit`.
+pub struct WriteFileT {
+    io_dir: std::path::PathBuf,
+    name: Option<String>,
+    data: Vec<Value>,
+    data_closed: bool,
+}
+
+impl WriteFileT {
+    /// Create for the single sink instance.
+    pub fn new(ctx: &MakeCtx) -> WriteFileT {
+        WriteFileT { io_dir: ctx.io_dir.clone(), name: None, data: Vec::new(), data_closed: false }
+    }
+}
+
+impl Transformation for WriteFileT {
+    fn open_out_bag(&mut self) {
+        self.name = None;
+        self.data.clear();
+        self.data_closed = false;
+    }
+    fn push_in_element(&mut self, input: usize, v: &Value, _out: &mut dyn Collector) {
+        if input == 0 {
+            self.data.push(v.clone());
+        } else {
+            self.name = Some(v.as_str().to_string());
+        }
+    }
+    fn close_in_bag(&mut self, input: usize, _out: &mut dyn Collector) {
+        if input == 0 {
+            self.data_closed = true;
+        }
+    }
+    fn close_out_bag(&mut self, out: &mut dyn Collector) {
+        let name = self.name.clone().expect("writeFile got no file name");
+        let path = self.io_dir.join(&name);
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&path)
+                .unwrap_or_else(|e| panic!("writeFile({}): {e}", path.display())),
+        );
+        for v in &self.data {
+            writeln!(f, "{v}").expect("writeFile line");
+        }
+        f.flush().expect("writeFile flush");
+        out.emit(Value::Unit);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{run_once, VecCollector};
+
+    #[test]
+    fn bag_lit_partitions_round_robin() {
+        let items: Vec<Value> = (0..10).map(Value::I64).collect();
+        let mut total = 0;
+        for inst in 0..3 {
+            let ctx = MakeCtx { inst, insts: 3, ..Default::default() };
+            let mut t = BagLitT::new(items.clone(), &ctx);
+            let out = run_once(&mut t, &[]);
+            total += out.len();
+            for v in &out {
+                assert_eq!(v.as_i64() as usize % 3, inst);
+            }
+        }
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn named_source_resolves_registry() {
+        let reg = crate::workload::registry::global();
+        reg.put("io_test_src", vec![Value::I64(1), Value::I64(2)]);
+        let ctx = MakeCtx::default();
+        let mut t = NamedSourceT::new("io_test_src".into(), &ctx);
+        let out = run_once(&mut t, &[]);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("laby_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ctx = MakeCtx { io_dir: dir.clone(), ..Default::default() };
+
+        // Write.
+        let mut w = WriteFileT::new(&ctx);
+        let mut out = VecCollector::default();
+        w.open_out_bag();
+        w.push_in_element(1, &Value::str("roundtrip.txt"), &mut out);
+        w.close_in_bag(1, &mut out);
+        w.push_in_element(0, &Value::I64(7), &mut out);
+        w.push_in_element(0, &Value::I64(8), &mut out);
+        w.close_in_bag(0, &mut out);
+        w.close_out_bag(&mut out);
+        assert_eq!(out.items, vec![Value::Unit]);
+
+        // Read back.
+        let mut r = ReadFileT::new(&ctx);
+        let out = run_once(&mut r, &[&[Value::str("roundtrip.txt")]]);
+        assert_eq!(out.len(), 2);
+        assert!(out.contains(&Value::str("7")));
+        assert!(out.contains(&Value::str("8")));
+    }
+
+    #[test]
+    fn read_file_partitions_lines() {
+        let dir = std::env::temp_dir().join("laby_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("lines.txt"), "a\nb\nc\nd\n").unwrap();
+        let mut seen = Vec::new();
+        for inst in 0..2 {
+            let ctx = MakeCtx { inst, insts: 2, io_dir: dir.clone(), ..Default::default() };
+            let mut r = ReadFileT::new(&ctx);
+            let out = run_once(&mut r, &[&[Value::str("lines.txt")]]);
+            seen.extend(out);
+        }
+        assert_eq!(seen.len(), 4);
+    }
+}

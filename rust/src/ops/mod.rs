@@ -1,0 +1,191 @@
+//! The bag-transformation interface (§6.1) and its implementations.
+//!
+//! Transformations are *control-flow oblivious*: they compute one output
+//! bag at a time from the input bags the runtime feeds them. All control
+//! flow — which bags to compute, which input bags to use, where to send
+//! outputs — is the coordination runtime's job (`coord`, `exec`).
+//!
+//! The interface mirrors the paper:
+//! * `open_out_bag` — start computing a new output bag (reset per-bag
+//!   state);
+//! * `push_in_element(input, v, out)` — one element of the current input
+//!   bag on logical input `input`;
+//! * `close_in_bag(input, out)` — no more elements on that input;
+//! * `close_out_bag(out)` — all inputs closed; emit any finals;
+//! * `drop_state(input)` — §7 extension: the runtime announces that the
+//!   bag on `input` *will change* for the next output bag, so state built
+//!   for it (e.g. a hash-join build table) must be dropped. Absent this
+//!   call, a transformation with `keeps_input_state(input) == true` may
+//!   assume the same input bag is reused and will NOT be re-pushed.
+
+pub mod agg;
+pub mod basic;
+pub mod io;
+pub mod join;
+pub mod xla;
+
+use crate::error::Result;
+use crate::frontend::Rhs;
+use crate::value::Value;
+use std::sync::Arc;
+
+/// Output collector handed to transformations (§6.1: `Emit`; bag closing
+/// is driven by the runtime, which knows when all inputs are done).
+pub trait Collector {
+    /// Emit one element of the current output bag.
+    fn emit(&mut self, v: Value);
+}
+
+/// A growable vector collector (tests, single-threaded baseline, and the
+/// engine's per-bag staging buffer).
+#[derive(Default, Debug)]
+pub struct VecCollector {
+    /// Collected elements.
+    pub items: Vec<Value>,
+}
+
+impl Collector for VecCollector {
+    fn emit(&mut self, v: Value) {
+        self.items.push(v);
+    }
+}
+
+/// A bag-transformation (one physical instance's compute logic).
+pub trait Transformation: Send {
+    /// Start a new output bag.
+    fn open_out_bag(&mut self);
+    /// Receive one input element on logical input `input`.
+    fn push_in_element(&mut self, input: usize, v: &Value, out: &mut dyn Collector);
+    /// The current bag on logical input `input` is complete.
+    fn close_in_bag(&mut self, input: usize, out: &mut dyn Collector);
+    /// All inputs are complete: emit any remaining output.
+    fn close_out_bag(&mut self, out: &mut dyn Collector);
+    /// §7: the bag on `input` will differ for the next output bag.
+    fn drop_state(&mut self, _input: usize) {}
+    /// §7: true if this transformation retains per-input state across
+    /// output bags (so the runtime may skip re-pushing an unchanged input).
+    fn keeps_input_state(&self, _input: usize) -> bool {
+        false
+    }
+    /// 0-input sources generate their output here (called between open and
+    /// close by the runtime).
+    fn generate(&mut self, _out: &mut dyn Collector) {}
+}
+
+/// Instance context given to the factory: which physical instance this is
+/// and how many exist (sources partition their data by it).
+#[derive(Clone)]
+pub struct MakeCtx {
+    /// This instance's index within the logical node.
+    pub inst: usize,
+    /// Number of physical instances of the logical node.
+    pub insts: usize,
+    /// Named in-memory datasets (see [`crate::workload::registry`]).
+    pub registry: Arc<crate::workload::registry::Registry>,
+    /// Base directory for `readFile` / `writeFile` paths.
+    pub io_dir: std::path::PathBuf,
+}
+
+impl Default for MakeCtx {
+    fn default() -> Self {
+        MakeCtx {
+            inst: 0,
+            insts: 1,
+            registry: crate::workload::registry::global(),
+            io_dir: std::path::PathBuf::from("."),
+        }
+    }
+}
+
+/// Instantiate the transformation for a logical operation.
+pub fn make(op: &Rhs, ctx: &MakeCtx) -> Result<Box<dyn Transformation>> {
+    Ok(match op {
+        Rhs::BagLit(items) => Box::new(io::BagLitT::new(items.clone(), ctx)),
+        Rhs::NamedSource(name) => Box::new(io::NamedSourceT::new(name.clone(), ctx)),
+        Rhs::ReadFile { .. } => Box::new(io::ReadFileT::new(ctx)),
+        Rhs::WriteFile { .. } => Box::new(io::WriteFileT::new(ctx)),
+        Rhs::Collect { .. } => Box::new(basic::PassThroughT),
+        Rhs::Map { udf, .. } => Box::new(basic::MapT::new(udf.clone())),
+        Rhs::Filter { udf, .. } => Box::new(basic::FilterT::new(udf.clone())),
+        Rhs::FlatMap { udf, .. } => Box::new(basic::FlatMapT::new(udf.clone())),
+        Rhs::Join { .. } => Box::new(join::HashJoinT::new()),
+        Rhs::ReduceByKey { udf, .. } => Box::new(agg::ReduceByKeyT::new(udf.clone())),
+        Rhs::Reduce { udf, .. } => Box::new(agg::ReduceT::new(udf.clone())),
+        Rhs::Count { .. } => Box::new(agg::CountT::new()),
+        Rhs::Distinct { .. } => Box::new(agg::DistinctT::new()),
+        Rhs::Union { .. } => Box::new(basic::UnionT),
+        Rhs::Cross { .. } => Box::new(basic::CrossT::new()),
+        Rhs::Phi(_) => Box::new(basic::PhiT),
+        Rhs::XlaCall { spec, .. } => Box::new(xla::XlaCallT::new(spec.clone())),
+        Rhs::Const(_) | Rhs::Copy(_) | Rhs::ScalarUn { .. } | Rhs::ScalarBin { .. } => {
+            return Err(crate::Error::Dataflow(format!(
+                "operation {} should have been removed by SSA/lifting",
+                op.mnemonic()
+            )))
+        }
+    })
+}
+
+/// Test/baseline helper: run a transformation over fully materialized
+/// input bags and return the output bag.
+pub fn run_once(t: &mut dyn Transformation, inputs: &[&[Value]]) -> Vec<Value> {
+    let mut out = VecCollector::default();
+    t.open_out_bag();
+    if inputs.is_empty() {
+        t.generate(&mut out);
+    } else {
+        for (i, bag) in inputs.iter().enumerate() {
+            for v in bag.iter() {
+                t.push_in_element(i, v, &mut out);
+            }
+            t.close_in_bag(i, &mut out);
+        }
+    }
+    t.close_out_bag(&mut out);
+    out.items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{Udf1, UdfN};
+
+    #[test]
+    fn factory_covers_all_runtime_ops() {
+        let ctx = MakeCtx::default();
+        let ops: Vec<Rhs> = vec![
+            Rhs::BagLit(vec![Value::I64(1)]),
+            Rhs::NamedSource("x".into()),
+            Rhs::ReadFile { name: 0 },
+            Rhs::WriteFile { data: 0, name: 1 },
+            Rhs::Collect { input: 0, label: "l".into() },
+            Rhs::Map { input: 0, udf: Udf1::new("id", |v: &Value| v.clone()) },
+            Rhs::Filter { input: 0, udf: Udf1::new("t", |_| Value::Bool(true)) },
+            Rhs::FlatMap { input: 0, udf: UdfN::new("one", |v: &Value| vec![v.clone()]) },
+            Rhs::Join { left: 0, right: 1 },
+            Rhs::ReduceByKey {
+                input: 0,
+                udf: crate::frontend::Udf2::new("+", |a, b| {
+                    Value::I64(a.as_i64() + b.as_i64())
+                }),
+            },
+            Rhs::Reduce {
+                input: 0,
+                udf: crate::frontend::Udf2::new("+", |a, b| {
+                    Value::I64(a.as_i64() + b.as_i64())
+                }),
+            },
+            Rhs::Count { input: 0 },
+            Rhs::Distinct { input: 0 },
+            Rhs::Union { left: 0, right: 1 },
+            Rhs::Cross { left: 0, right: 1 },
+            Rhs::Phi(vec![(0, 0), (1, 1)]),
+        ];
+        for op in &ops {
+            assert!(make(op, &ctx).is_ok(), "{}", op.mnemonic());
+        }
+        // Compiled-away ops are rejected.
+        assert!(make(&Rhs::Const(Value::I64(1)), &ctx).is_err());
+        assert!(make(&Rhs::Copy(0), &ctx).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Accelerated operators: dataflow transformations whose compute is an
+//! AOT-compiled XLA artifact (JAX + Pallas, lowered once at build time —
+//! see `python/compile/`). Execution goes through the
+//! [`crate::runtime::XlaService`] thread; the bag⇄tensor bridge is
+//! described by [`crate::runtime::XlaCallSpec`].
+//!
+//! The `PageRankStep` bridge shows §7 state reuse on a *tensor* operator:
+//! the loop-invariant edge bag is tensorized into the dense transition
+//! matrix exactly once, cached device-side under a service cache key, and
+//! reused across iteration steps.
+
+use super::{Collector, Transformation};
+use crate::bag::Bag;
+use crate::runtime::bridge::{self, BridgeKind, DenseMatrix};
+use crate::runtime::service::{fresh_cache_key, Operand, TensorData, XlaService};
+use crate::runtime::XlaCallSpec;
+use crate::value::Value;
+
+/// Transformation that buffers its input bag(s) and runs the artifact at
+/// close.
+pub struct XlaCallT {
+    spec: XlaCallSpec,
+    inputs: Vec<Vec<Value>>,
+    /// Service-side cache key of the tensorized loop-invariant input.
+    matrix_key: Option<u64>,
+}
+
+impl XlaCallT {
+    /// Create from a call spec (artifact compiles lazily on first use).
+    pub fn new(spec: XlaCallSpec) -> XlaCallT {
+        let arity = spec.arity();
+        XlaCallT { spec, inputs: vec![Vec::new(); arity], matrix_key: None }
+    }
+
+    fn execute(&mut self, out: &mut dyn Collector) {
+        let svc = XlaService::global();
+        match self.spec.bridge.clone() {
+            BridgeKind::HistogramI64 { capacity, bins } => {
+                let ids = Bag::from_vec(std::mem::take(&mut self.inputs[0]));
+                let mut counts = vec![0f32; bins];
+                for chunk in bridge::ids_to_chunks(&ids, capacity).expect("ids") {
+                    let res = svc
+                        .execute(
+                            &self.spec.artifact,
+                            vec![Operand::Inline {
+                                data: TensorData::I32(chunk),
+                                dims: vec![capacity as i64],
+                            }],
+                        )
+                        .unwrap_or_else(|e| panic!("histogram exec: {e}"));
+                    for (c, x) in counts.iter_mut().zip(res) {
+                        *c += x;
+                    }
+                }
+                for v in bridge::counts_to_pairs(&counts) {
+                    out.emit(v);
+                }
+            }
+            BridgeKind::PageRankStep { n } => {
+                let m_operand = match self.matrix_key {
+                    Some(key) => Operand::Cached { key },
+                    None => {
+                        let edges = Bag::from_vec(std::mem::take(&mut self.inputs[0]));
+                        let m = DenseMatrix::from_edges(&edges, n).expect("edges");
+                        let key = fresh_cache_key();
+                        self.matrix_key = Some(key);
+                        Operand::CacheAndUse {
+                            key,
+                            data: TensorData::F32(m.data),
+                            dims: vec![n as i64, n as i64],
+                        }
+                    }
+                };
+                let ranks = Bag::from_vec(std::mem::take(&mut self.inputs[1]));
+                let r = bridge::ranks_to_vec(&ranks, n).expect("ranks");
+                let res = svc
+                    .execute(
+                        &self.spec.artifact,
+                        vec![
+                            m_operand,
+                            Operand::Inline { data: TensorData::F32(r), dims: vec![n as i64] },
+                        ],
+                    )
+                    .unwrap_or_else(|e| panic!("pagerank exec: {e}"));
+                for v in bridge::vec_to_ranks(&res) {
+                    out.emit(v);
+                }
+            }
+            BridgeKind::MapF64 { capacity } => {
+                let items = std::mem::take(&mut self.inputs[0]);
+                let mut idx = 0;
+                while idx < items.len() {
+                    let end = (idx + capacity).min(items.len());
+                    let mut chunk = vec![0f32; capacity];
+                    for (k, v) in items[idx..end].iter().enumerate() {
+                        chunk[k] = v.as_f64() as f32;
+                    }
+                    let res = svc
+                        .execute(
+                            &self.spec.artifact,
+                            vec![Operand::Inline {
+                                data: TensorData::F32(chunk),
+                                dims: vec![capacity as i64],
+                            }],
+                        )
+                        .unwrap_or_else(|e| panic!("map exec: {e}"));
+                    for x in &res[..end - idx] {
+                        out.emit(Value::F64(*x as f64));
+                    }
+                    idx = end;
+                }
+            }
+        }
+    }
+}
+
+impl Drop for XlaCallT {
+    fn drop(&mut self) {
+        if let Some(key) = self.matrix_key {
+            XlaService::global().drop_cached(key);
+        }
+    }
+}
+
+impl Transformation for XlaCallT {
+    fn open_out_bag(&mut self) {
+        for (i, buf) in self.inputs.iter_mut().enumerate() {
+            // Keep the loop-invariant input 0 of PageRankStep.
+            if !(i == 0 && matches!(self.spec.bridge, BridgeKind::PageRankStep { .. })) {
+                buf.clear();
+            }
+        }
+    }
+    fn push_in_element(&mut self, input: usize, v: &Value, _out: &mut dyn Collector) {
+        self.inputs[input].push(v.clone());
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, out: &mut dyn Collector) {
+        self.execute(out);
+    }
+    fn drop_state(&mut self, input: usize) {
+        if input == 0 && matches!(self.spec.bridge, BridgeKind::PageRankStep { .. }) {
+            if let Some(key) = self.matrix_key.take() {
+                XlaService::global().drop_cached(key);
+            }
+            self.inputs[0].clear();
+        }
+    }
+    fn keeps_input_state(&self, input: usize) -> bool {
+        input == 0 && matches!(self.spec.bridge, BridgeKind::PageRankStep { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arity_matches_bridge() {
+        let t = XlaCallT::new(XlaCallSpec::pagerank_step(8));
+        assert_eq!(t.inputs.len(), 2);
+        assert!(t.keeps_input_state(0));
+        assert!(!t.keeps_input_state(1));
+        let t2 = XlaCallT::new(XlaCallSpec::histogram(8, 4));
+        assert_eq!(t2.inputs.len(), 1);
+        assert!(!t2.keeps_input_state(0));
+    }
+
+    // Execution tests live in rust/tests/runtime_artifacts.rs (they need
+    // `make artifacts` to have produced the HLO files).
+}

@@ -1,0 +1,252 @@
+//! Bag ⇄ tensor bridge: how a dataflow operator marshals its input bag(s)
+//! into the fixed-shape tensors of an AOT artifact and back.
+//!
+//! Artifacts are compiled for static shapes (see DESIGN.md §7); bags are
+//! padded to capacity (with neutral padding values the kernels ignore) and
+//! outputs are truncated back. Inputs larger than the artifact capacity are
+//! processed in chunks where semantics allow (histogram), otherwise
+//! rejected with a clear error so callers fall back to the pure-Rust
+//! operator.
+
+use crate::bag::Bag;
+use crate::error::{Error, Result};
+use crate::value::Value;
+
+/// Which bag⇄tensor bridge an [`XlaCallSpec`] uses.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BridgeKind {
+    /// Input 0: bag of `I64` ids in `[0, bins)`. Output: bag of
+    /// `Pair(bin, count)` for non-zero bins. Ids are chunked through the
+    /// artifact's `capacity`-sized input; counts accumulate across chunks.
+    /// Padding id is `-1` (the kernel counts only ids in range).
+    HistogramI64 {
+        /// Artifact input length.
+        capacity: usize,
+        /// Number of count bins (artifact output length).
+        bins: usize,
+    },
+    /// Input 0 (loop-invariant build side): bag of `Pair(src, dst)` edges
+    /// over pages `[0, n)`, tensorized ONCE into a dense column-stochastic
+    /// transition matrix and kept in operator state across iteration steps
+    /// (§7 build-side reuse applied to a tensor operator).
+    /// Input 1: bag of `Pair(page, rank)`. Output: bag of `Pair(page,
+    /// rank')` after one damped PageRank step.
+    PageRankStep {
+        /// Number of pages (matrix dimension).
+        n: usize,
+    },
+    /// Input 0: bag of numeric values; the artifact applies an elementwise
+    /// function to a `capacity`-length vector. Values are chunked; order is
+    /// not preserved (bags are unordered).
+    MapF64 {
+        /// Artifact input length.
+        capacity: usize,
+    },
+}
+
+/// Full description of an accelerated operator call.
+#[derive(Clone, Debug, PartialEq)]
+pub struct XlaCallSpec {
+    /// Artifact name (file stem in the artifact directory).
+    pub artifact: String,
+    /// Marshalling strategy.
+    pub bridge: BridgeKind,
+}
+
+impl XlaCallSpec {
+    /// Histogram spec matching `python/compile/kernels/histogram.py`.
+    pub fn histogram(capacity: usize, bins: usize) -> XlaCallSpec {
+        XlaCallSpec { artifact: "histogram".into(), bridge: BridgeKind::HistogramI64 { capacity, bins } }
+    }
+    /// PageRank-step spec matching `python/compile/kernels/pagerank.py`.
+    pub fn pagerank_step(n: usize) -> XlaCallSpec {
+        XlaCallSpec { artifact: "pagerank_step".into(), bridge: BridgeKind::PageRankStep { n } }
+    }
+    /// Elementwise-increment spec matching `python/compile/kernels/incr.py`.
+    pub fn incr(capacity: usize) -> XlaCallSpec {
+        XlaCallSpec { artifact: "incr".into(), bridge: BridgeKind::MapF64 { capacity } }
+    }
+
+    /// Number of bag inputs this call consumes.
+    pub fn arity(&self) -> usize {
+        match self.bridge {
+            BridgeKind::PageRankStep { .. } => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// Tensorized loop-invariant state for [`BridgeKind::PageRankStep`].
+pub struct DenseMatrix {
+    /// Row-major `n × n` data.
+    pub data: Vec<f32>,
+    /// Dimension.
+    pub n: usize,
+}
+
+impl DenseMatrix {
+    /// Build the damped column-stochastic PageRank transition matrix from
+    /// an edge bag. Dangling pages distribute uniformly.
+    pub fn from_edges(edges: &Bag, n: usize) -> Result<DenseMatrix> {
+        let mut out_deg = vec![0u32; n];
+        let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(edges.len());
+        for e in edges {
+            let (s, d) = match e {
+                Value::Pair(p) => (p.0.as_i64() as usize, p.1.as_i64() as usize),
+                other => {
+                    return Err(Error::Xla(format!("pagerank edge must be a pair, got {other:?}")))
+                }
+            };
+            if s >= n || d >= n {
+                return Err(Error::Xla(format!("edge ({s},{d}) out of range for n={n}")));
+            }
+            out_deg[s] += 1;
+            pairs.push((s, d));
+        }
+        // M[d][s] = 1/outdeg(s); dangling column s = 1/n.
+        let mut data = vec![0f32; n * n];
+        for s in 0..n {
+            if out_deg[s] == 0 {
+                let w = 1.0 / n as f32;
+                for d in 0..n {
+                    data[d * n + s] = w;
+                }
+            }
+        }
+        for (s, d) in pairs {
+            data[d * n + s] += 1.0 / out_deg[s] as f32;
+        }
+        Ok(DenseMatrix { data, n })
+    }
+}
+
+/// Marshal an i64 bag into padded `capacity`-length i32 chunks
+/// (padding = -1, which the histogram kernel ignores).
+pub fn ids_to_chunks(bag: &Bag, capacity: usize) -> Result<Vec<Vec<i32>>> {
+    let mut chunks = Vec::new();
+    let items = bag.items();
+    let mut idx = 0;
+    while idx < items.len() || (idx == 0 && items.is_empty()) {
+        let mut chunk = vec![-1i32; capacity];
+        let end = (idx + capacity).min(items.len());
+        for (k, v) in items[idx..end].iter().enumerate() {
+            chunk[k] = v.as_i64() as i32;
+        }
+        chunks.push(chunk);
+        if items.is_empty() {
+            break;
+        }
+        idx = end;
+    }
+    Ok(chunks)
+}
+
+/// Marshal a rank bag (`Pair(page, rank)`) into a dense f32 vector.
+pub fn ranks_to_vec(bag: &Bag, n: usize) -> Result<Vec<f32>> {
+    let mut v = vec![0f32; n];
+    for e in bag {
+        match e {
+            Value::Pair(p) => {
+                let i = p.0.as_i64() as usize;
+                if i >= n {
+                    return Err(Error::Xla(format!("rank index {i} out of range n={n}")));
+                }
+                v[i] = p.1.as_f64() as f32;
+            }
+            other => return Err(Error::Xla(format!("rank element must be a pair, got {other:?}"))),
+        }
+    }
+    Ok(v)
+}
+
+/// Unmarshal a dense f32 vector back into a `Pair(idx, F64)` bag.
+pub fn vec_to_ranks(v: &[f32]) -> Vec<Value> {
+    v.iter()
+        .enumerate()
+        .map(|(i, &r)| Value::pair(Value::I64(i as i64), Value::F64(r as f64)))
+        .collect()
+}
+
+/// Unmarshal histogram counts into `Pair(bin, count)` for non-zero bins.
+pub fn counts_to_pairs(counts: &[f32]) -> Vec<Value> {
+    counts
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c != 0.0)
+        .map(|(b, &c)| Value::pair(Value::I64(b as i64), Value::I64(c as i64)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_matrix_is_column_stochastic() {
+        // 0 -> 1, 0 -> 2, 1 -> 0; page 2 dangling.
+        let edges = Bag::from_vec(vec![
+            Value::pair(Value::I64(0), Value::I64(1)),
+            Value::pair(Value::I64(0), Value::I64(2)),
+            Value::pair(Value::I64(1), Value::I64(0)),
+        ]);
+        let m = DenseMatrix::from_edges(&edges, 3).unwrap();
+        for s in 0..3 {
+            let col_sum: f32 = (0..3).map(|d| m.data[d * 3 + s]).sum();
+            assert!((col_sum - 1.0).abs() < 1e-6, "col {s} sums to {col_sum}");
+        }
+        assert!((m.data[3 + 0] - 0.5).abs() < 1e-6); // M[1][0] = 1/2
+    }
+
+    #[test]
+    fn edge_out_of_range_rejected() {
+        let edges = Bag::from_vec(vec![Value::pair(Value::I64(5), Value::I64(0))]);
+        assert!(DenseMatrix::from_edges(&edges, 3).is_err());
+    }
+
+    #[test]
+    fn ranks_roundtrip() {
+        let bag = Bag::from_vec(vec![
+            Value::pair(Value::I64(1), Value::F64(0.25)),
+            Value::pair(Value::I64(0), Value::F64(0.75)),
+        ]);
+        let v = ranks_to_vec(&bag, 2).unwrap();
+        assert_eq!(v, vec![0.75, 0.25]);
+        let back = vec_to_ranks(&v);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0], Value::pair(Value::I64(0), Value::F64(0.75)));
+    }
+
+    #[test]
+    fn counts_skip_zero_bins() {
+        let pairs = counts_to_pairs(&[0.0, 2.0, 0.0, 1.0]);
+        assert_eq!(
+            pairs,
+            vec![
+                Value::pair(Value::I64(1), Value::I64(2)),
+                Value::pair(Value::I64(3), Value::I64(1)),
+            ]
+        );
+    }
+
+    #[test]
+    fn spec_arity() {
+        assert_eq!(XlaCallSpec::histogram(8, 4).arity(), 1);
+        assert_eq!(XlaCallSpec::pagerank_step(16).arity(), 2);
+    }
+
+    #[test]
+    fn ids_chunking_pads_with_minus_one() {
+        let bag = Bag::from_vec((0..5).map(Value::I64).collect());
+        let chunks = ids_to_chunks(&bag, 4).unwrap();
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0], vec![0, 1, 2, 3]);
+        assert_eq!(chunks[1], vec![4, -1, -1, -1]);
+    }
+
+    #[test]
+    fn empty_bag_yields_one_padded_chunk() {
+        let chunks = ids_to_chunks(&Bag::new(), 3).unwrap();
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0], vec![-1, -1, -1]);
+    }
+}

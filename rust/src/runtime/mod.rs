@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT-compiled XLA artifacts (HLO **text**, produced
+//! once by `python/compile/aot.py` from JAX + Pallas kernels) and execute
+//! them from dataflow operators. Python never runs on this path.
+//!
+//! Interchange is HLO text, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! All PJRT objects live on a dedicated [`service::XlaService`] thread
+//! (the crate's handles are not `Send`); operators marshal host tensors
+//! over channels, with loop-invariant operands cached device-side.
+
+pub mod bridge;
+pub mod service;
+
+pub use bridge::{BridgeKind, XlaCallSpec};
+pub use service::{Operand, TensorData, XlaService};

@@ -1,0 +1,251 @@
+//! The XLA service thread. The `xla` crate's PJRT handles are neither
+//! `Send` nor `Sync` (they wrap `Rc` + raw pointers), so all PJRT state —
+//! client, compiled executables, cached device literals — lives on ONE
+//! dedicated thread, and dataflow operators talk to it through channels.
+//! This mirrors a real deployment where the accelerator is driven by a
+//! single runtime thread per device.
+
+use crate::error::{Error, Result};
+use once_cell::sync::OnceCell;
+use rustc_hash::FxHashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+/// Tensor payload crossing the channel (host data; `Send`).
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    /// f32 data.
+    F32(Vec<f32>),
+    /// i32 data.
+    I32(Vec<i32>),
+}
+
+/// One executable operand.
+#[derive(Clone, Debug)]
+pub enum Operand {
+    /// Send the tensor inline.
+    Inline {
+        /// Data.
+        data: TensorData,
+        /// Dimensions.
+        dims: Vec<i64>,
+    },
+    /// Use a literal previously cached on the service thread (loop-
+    /// invariant operands, e.g. the PageRank transition matrix — §7 state
+    /// reuse across the channel boundary).
+    Cached {
+        /// Cache key.
+        key: u64,
+    },
+    /// Cache the tensor under `key`, then use it.
+    CacheAndUse {
+        /// Cache key.
+        key: u64,
+        /// Data.
+        data: TensorData,
+        /// Dimensions.
+        dims: Vec<i64>,
+    },
+}
+
+enum Request {
+    Execute {
+        artifact: String,
+        operands: Vec<Operand>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    DropCached {
+        key: u64,
+    },
+    /// Is the artifact file present (without compiling)?
+    Probe {
+        artifact: String,
+        reply: Sender<bool>,
+    },
+}
+
+/// Handle to the service thread.
+pub struct XlaService {
+    tx: Mutex<Sender<Request>>,
+}
+
+impl XlaService {
+    /// The process-global service (artifact dir: `$LABY_ARTIFACT_DIR` or
+    /// `artifacts/`, resolved on the service thread at startup).
+    pub fn global() -> &'static XlaService {
+        static SVC: OnceCell<XlaService> = OnceCell::new();
+        SVC.get_or_init(|| {
+            let dir = std::env::var("LABY_ARTIFACT_DIR").unwrap_or_else(|_| "artifacts".into());
+            XlaService::spawn(dir)
+        })
+    }
+
+    /// Spawn a service thread over an artifact directory.
+    pub fn spawn(dir: String) -> XlaService {
+        let (tx, rx) = channel::<Request>();
+        std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || service_main(dir, rx))
+            .expect("spawn xla service");
+        XlaService { tx: Mutex::new(tx) }
+    }
+
+    /// Execute an artifact; blocks for the reply.
+    pub fn execute(&self, artifact: &str, operands: Vec<Operand>) -> Result<Vec<f32>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Execute { artifact: artifact.to_string(), operands, reply: rtx })
+            .map_err(|_| Error::Xla("xla service thread gone".into()))?;
+        rrx.recv().map_err(|_| Error::Xla("xla service dropped reply".into()))?
+    }
+
+    /// Drop a cached literal.
+    pub fn drop_cached(&self, key: u64) {
+        let _ = self.tx.lock().unwrap().send(Request::DropCached { key });
+    }
+
+    /// Check that an artifact file exists.
+    pub fn available(&self, artifact: &str) -> bool {
+        let (rtx, rrx) = channel();
+        if self
+            .tx
+            .lock()
+            .unwrap()
+            .send(Request::Probe { artifact: artifact.to_string(), reply: rtx })
+            .is_err()
+        {
+            return false;
+        }
+        rrx.recv().unwrap_or(false)
+    }
+}
+
+/// Allocate a process-unique cache key.
+pub fn fresh_cache_key() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+// ---- service thread internals (PJRT objects never leave this fn) -------
+
+fn make_literal(data: &TensorData, dims: &[i64]) -> Result<xla::Literal> {
+    let lit = match data {
+        TensorData::F32(v) => xla::Literal::vec1(v),
+        TensorData::I32(v) => xla::Literal::vec1(v),
+    };
+    lit.reshape(dims).map_err(|e| Error::Xla(format!("reshape{dims:?}: {e:?}")))
+}
+
+fn service_main(dir: String, rx: std::sync::mpsc::Receiver<Request>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Answer every request with the construction error.
+            while let Ok(req) = rx.recv() {
+                if let Request::Execute { reply, .. } = req {
+                    let _ = reply.send(Err(Error::Xla(format!("PjRtClient::cpu: {e:?}"))));
+                }
+            }
+            return;
+        }
+    };
+    let mut executables: FxHashMap<String, xla::PjRtLoadedExecutable> = FxHashMap::default();
+    let mut cache: FxHashMap<u64, xla::Literal> = FxHashMap::default();
+    let path_of = |name: &str| format!("{dir}/{name}.hlo.txt");
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Probe { artifact, reply } => {
+                let _ = reply.send(std::path::Path::new(&path_of(&artifact)).exists());
+            }
+            Request::DropCached { key } => {
+                cache.remove(&key);
+            }
+            Request::Execute { artifact, operands, reply } => {
+                let result = (|| -> Result<Vec<f32>> {
+                    if !executables.contains_key(&artifact) {
+                        let path = path_of(&artifact);
+                        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                            Error::Xla(format!(
+                                "load {path}: {e:?} (run `make artifacts` first)"
+                            ))
+                        })?;
+                        let comp = xla::XlaComputation::from_proto(&proto);
+                        let exe = client
+                            .compile(&comp)
+                            .map_err(|e| Error::Xla(format!("compile {artifact}: {e:?}")))?;
+                        executables.insert(artifact.clone(), exe);
+                    }
+                    let exe = executables.get(&artifact).unwrap();
+                    let mut lits: Vec<xla::Literal> = Vec::with_capacity(operands.len());
+                    for op in &operands {
+                        match op {
+                            Operand::Inline { data, dims } => lits.push(make_literal(data, dims)?),
+                            Operand::Cached { key } => {
+                                let lit = cache.get(key).ok_or_else(|| {
+                                    Error::Xla(format!("cache key {key} missing"))
+                                })?;
+                                // Literal is not Clone-cheap; re-register by
+                                // copying the backing data via reshape(id).
+                                let shape = lit
+                                    .array_shape()
+                                    .map_err(|e| Error::Xla(format!("shape: {e:?}")))?;
+                                let dims: Vec<i64> = shape.dims().to_vec();
+                                lits.push(
+                                    lit.reshape(&dims)
+                                        .map_err(|e| Error::Xla(format!("copy: {e:?}")))?,
+                                );
+                            }
+                            Operand::CacheAndUse { key, data, dims } => {
+                                let lit = make_literal(data, dims)?;
+                                let lit2 = lit
+                                    .reshape(dims)
+                                    .map_err(|e| Error::Xla(format!("copy: {e:?}")))?;
+                                cache.insert(*key, lit);
+                                lits.push(lit2);
+                            }
+                        }
+                    }
+                    let bufs = exe
+                        .execute::<xla::Literal>(&lits)
+                        .map_err(|e| Error::Xla(format!("execute {artifact}: {e:?}")))?;
+                    let lit = bufs[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| Error::Xla(format!("fetch {artifact}: {e:?}")))?;
+                    // aot.py lowers with return_tuple=True.
+                    let out = lit
+                        .to_tuple1()
+                        .map_err(|e| Error::Xla(format!("tuple {artifact}: {e:?}")))?;
+                    out.to_vec::<f32>()
+                        .map_err(|e| Error::Xla(format!("to_vec {artifact}: {e:?}")))
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_yields_clean_error() {
+        let svc = XlaService::spawn("/nonexistent-artifacts".into());
+        assert!(!svc.available("nope"));
+        let err = svc
+            .execute("nope", vec![Operand::Inline { data: TensorData::F32(vec![1.0]), dims: vec![1] }])
+            .unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn cache_keys_are_unique() {
+        let a = fresh_cache_key();
+        let b = fresh_cache_key();
+        assert_ne!(a, b);
+    }
+}

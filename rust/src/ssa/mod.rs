@@ -1,0 +1,489 @@
+//! SSA construction (§4.1 "Compiling to SSA"): pruned-SSA Φ insertion via
+//! iterated dominance frontiers, variable renaming over the dominator
+//! tree, plus cleanup passes (copy propagation, Φ simplification, dead
+//! code elimination) and an SSA verifier.
+
+pub mod lift;
+pub mod passes;
+pub mod verify;
+
+use crate::cfg::{dom, Cfg};
+use crate::error::{Error, Result};
+use crate::frontend::{Block, BlockId, Instr, Rhs, Terminator, Ty, VarId, VarInfo};
+use rustc_hash::{FxHashMap, FxHashSet};
+
+/// A program in SSA form. Blocks start with Φ instructions
+/// (`Rhs::Phi(args)` with `(predecessor block, ssa var)` arguments),
+/// followed by ordinary instructions.
+#[derive(Clone, Debug)]
+pub struct SsaProgram {
+    /// Basic blocks (instruction targets are SSA variables).
+    pub blocks: Vec<Block>,
+    /// Entry block.
+    pub entry: BlockId,
+    /// SSA variable table.
+    pub vars: Vec<VarInfo>,
+    /// Defining block of each SSA variable.
+    pub def_block: Vec<BlockId>,
+    /// The CFG this SSA was built over (shapes are identical).
+    pub cfg: Cfg,
+}
+
+impl SsaProgram {
+    /// Render a readable listing (mirrors Fig. 3a of the paper).
+    pub fn listing(&self) -> String {
+        let mut out = String::new();
+        for (bi, b) in self.blocks.iter().enumerate() {
+            out.push_str(&format!(
+                "bb{}{}:\n",
+                bi,
+                if bi == self.entry { " (entry)" } else { "" }
+            ));
+            for i in &b.instrs {
+                match &i.rhs {
+                    Rhs::Phi(args) => {
+                        let a = args
+                            .iter()
+                            .map(|(p, v)| format!("{}@bb{}", self.vars[*v].name, p))
+                            .collect::<Vec<_>>()
+                            .join(", ");
+                        out.push_str(&format!("  {} = Φ({a})\n", self.vars[i.var].name));
+                    }
+                    rhs => {
+                        let ins = rhs
+                            .input_vars()
+                            .iter()
+                            .map(|v| self.vars[*v].name.clone())
+                            .collect::<Vec<_>>()
+                            .join(", ");
+                        out.push_str(&format!(
+                            "  {} = {}({})\n",
+                            self.vars[i.var].name,
+                            rhs.mnemonic(),
+                            ins
+                        ));
+                    }
+                }
+            }
+            match &b.term {
+                Terminator::Jump(t) => out.push_str(&format!("  jump bb{t}\n")),
+                Terminator::Branch { cond, then_b, else_b } => out.push_str(&format!(
+                    "  branch {} ? bb{} : bb{}\n",
+                    self.vars[*cond].name, then_b, else_b
+                )),
+                Terminator::End => out.push_str("  end\n"),
+            }
+        }
+        out
+    }
+
+    /// Find the (unique) defining instruction of an SSA variable.
+    pub fn def_instr(&self, v: VarId) -> Option<&Instr> {
+        self.blocks[self.def_block[v]].instrs.iter().find(|i| i.var == v)
+    }
+}
+
+/// Per-block liveness of the *original* (pre-SSA) variables: `live_in[b]`
+/// contains variables whose value may be read before being overwritten on
+/// some path from the start of `b`. Used for pruned SSA (no Φs for dead
+/// variables, and — critically for the dataflow translation — no
+/// undefined-input Φs for variables like `visits` that are reassigned
+/// every iteration before use).
+fn live_in_sets(cfg: &Cfg) -> Vec<FxHashSet<VarId>> {
+    let n = cfg.num_blocks();
+    let mut gen_: Vec<FxHashSet<VarId>> = vec![FxHashSet::default(); n];
+    let mut kill: Vec<FxHashSet<VarId>> = vec![FxHashSet::default(); n];
+    for (b, blk) in cfg.program.blocks.iter().enumerate() {
+        for i in &blk.instrs {
+            for u in i.rhs.input_vars() {
+                if !kill[b].contains(&u) {
+                    gen_[b].insert(u);
+                }
+            }
+            kill[b].insert(i.var);
+        }
+        if let Terminator::Branch { cond, .. } = blk.term {
+            if !kill[b].contains(&cond) {
+                gen_[b].insert(cond);
+            }
+        }
+    }
+    let mut live_in: Vec<FxHashSet<VarId>> = vec![FxHashSet::default(); n];
+    let mut changed = true;
+    while changed {
+        changed = false;
+        // Backward: iterate post-order (reverse of rpo).
+        for &b in cfg.rpo.iter().rev() {
+            let mut live_out: FxHashSet<VarId> = FxHashSet::default();
+            for &s in &cfg.succs[b] {
+                live_out.extend(live_in[s].iter().copied());
+            }
+            let mut new_in = gen_[b].clone();
+            for v in live_out {
+                if !kill[b].contains(&v) {
+                    new_in.insert(v);
+                }
+            }
+            if new_in.len() != live_in[b].len() {
+                live_in[b] = new_in;
+                changed = true;
+            }
+        }
+    }
+    live_in
+}
+
+/// Construct pruned SSA from a validated CFG, then run cleanup passes
+/// (copy propagation, Φ simplification, DCE) and verify the result.
+pub fn construct(cfg: &Cfg) -> Result<SsaProgram> {
+    let ssa = construct_raw(cfg)?;
+    let ssa = passes::copy_propagate(ssa);
+    let ssa = passes::simplify_phis(ssa);
+    let ssa = passes::dedupe_phi_args(ssa);
+    let ssa = passes::dead_code_eliminate(ssa);
+    verify::verify(&ssa)?;
+    Ok(ssa)
+}
+
+/// Φ insertion + renaming, without cleanup.
+pub fn construct_raw(cfg: &Cfg) -> Result<SsaProgram> {
+    let dt = dom::dominators(cfg);
+    let live_in = live_in_sets(cfg);
+    let nblocks = cfg.num_blocks();
+    let orig_vars = &cfg.program.vars;
+
+    // --- Φ insertion (iterated dominance frontier, pruned by liveness) ---
+    // phi_for[b] = ordered list of original variables needing a Φ at b.
+    let mut phi_for: Vec<Vec<VarId>> = vec![Vec::new(); nblocks];
+    let mut def_blocks: FxHashMap<VarId, FxHashSet<BlockId>> = FxHashMap::default();
+    for (b, blk) in cfg.program.blocks.iter().enumerate() {
+        if !cfg.reachable(b) {
+            continue;
+        }
+        for i in &blk.instrs {
+            def_blocks.entry(i.var).or_default().insert(b);
+        }
+    }
+    for (&v, defs) in def_blocks.iter() {
+        if defs.len() < 2 {
+            continue;
+        }
+        let mut has_phi: FxHashSet<BlockId> = FxHashSet::default();
+        let mut work: Vec<BlockId> = defs.iter().copied().collect();
+        while let Some(x) = work.pop() {
+            for &y in &dt.frontier[x] {
+                if !has_phi.contains(&y) && live_in[y].contains(&v) {
+                    has_phi.insert(y);
+                    phi_for[y].push(v);
+                    if !defs.contains(&y) {
+                        work.push(y);
+                    }
+                }
+            }
+        }
+    }
+    for phis in &mut phi_for {
+        phis.sort();
+    }
+
+    // --- Renaming over the dominator tree ---
+    struct Renamer<'a> {
+        cfg: &'a Cfg,
+        dt: &'a dom::DomTree,
+        phi_for: &'a [Vec<VarId>],
+        stacks: Vec<Vec<VarId>>, // per original var: stack of SSA vars
+        version: Vec<usize>,     // per original var: next version number
+        new_vars: Vec<VarInfo>,
+        def_block: Vec<BlockId>,
+        // Output blocks: instrs rewritten; Φs are placed first.
+        out_blocks: Vec<Block>,
+        // For each block: the Φ targets (SSA var per phi_for entry).
+        phi_targets: Vec<Vec<VarId>>,
+        // Collected Φ args: (block, phi_index) -> Vec<(pred, ssa var)>.
+        phi_args: FxHashMap<(BlockId, usize), Vec<(BlockId, VarId)>>,
+    }
+
+    impl<'a> Renamer<'a> {
+        fn fresh(&mut self, orig: VarId, ty: Ty, block: BlockId) -> VarId {
+            let ver = self.version[orig];
+            self.version[orig] += 1;
+            let name = if ver == 0 {
+                self.cfg.program.vars[orig].name.clone()
+            } else {
+                format!("{}_{}", self.cfg.program.vars[orig].name, ver)
+            };
+            self.new_vars.push(VarInfo { name, ty });
+            self.def_block.push(block);
+            self.new_vars.len() - 1
+        }
+
+        fn top(&self, orig: VarId) -> Result<VarId> {
+            self.stacks[orig].last().copied().ok_or_else(|| {
+                Error::Ir(format!(
+                    "variable '{}' may be used before assignment",
+                    self.cfg.program.vars[orig].name
+                ))
+            })
+        }
+
+        fn rename_block(&mut self, b: BlockId) -> Result<()> {
+            let mut pushed: Vec<VarId> = Vec::new();
+
+            // Φ targets first.
+            for &orig in &self.phi_for[b] {
+                let ty = self.cfg.program.vars[orig].ty;
+                let nv = self.fresh(orig, ty, b);
+                self.stacks[orig].push(nv);
+                pushed.push(orig);
+                self.phi_targets[b].push(nv);
+            }
+
+            // Ordinary instructions.
+            let mut new_instrs: Vec<Instr> = Vec::new();
+            for instr in &self.cfg.program.blocks[b].instrs {
+                let mut rhs = instr.rhs.clone();
+                // Resolve uses against current stacks.
+                let mut err: Option<Error> = None;
+                rhs.map_inputs(|u| match self.top(u) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        err = Some(e);
+                        u
+                    }
+                });
+                if let Some(e) = err {
+                    return Err(e);
+                }
+                let ty = self.cfg.program.vars[instr.var].ty;
+                let nv = self.fresh(instr.var, ty, b);
+                self.stacks[instr.var].push(nv);
+                pushed.push(instr.var);
+                new_instrs.push(Instr { var: nv, rhs });
+            }
+
+            // Terminator.
+            let term = match self.cfg.program.blocks[b].term.clone() {
+                Terminator::Branch { cond, then_b, else_b } => {
+                    Terminator::Branch { cond: self.top(cond)?, then_b, else_b }
+                }
+                t => t,
+            };
+            self.out_blocks[b] = Block { instrs: new_instrs, term };
+
+            // Fill successor Φ arguments.
+            for &s in &self.cfg.succs[b] {
+                for (pi, &orig) in self.phi_for[s].iter().enumerate() {
+                    let arg = self.top(orig)?;
+                    self.phi_args.entry((s, pi)).or_default().push((b, arg));
+                }
+            }
+
+            // Recurse into dominator-tree children.
+            for &c in &self.dt.children[b] {
+                self.rename_block(c)?;
+            }
+
+            for orig in pushed.into_iter().rev() {
+                self.stacks[orig].pop();
+            }
+            Ok(())
+        }
+    }
+
+    let mut r = Renamer {
+        cfg,
+        dt: &dt,
+        phi_for: &phi_for,
+        stacks: vec![Vec::new(); orig_vars.len()],
+        version: vec![0; orig_vars.len()],
+        new_vars: Vec::new(),
+        def_block: Vec::new(),
+        out_blocks: vec![Block::default(); nblocks],
+        phi_targets: vec![Vec::new(); nblocks],
+        phi_args: FxHashMap::default(),
+    };
+    r.rename_block(cfg.program.entry)?;
+
+    // Materialize Φ instructions at block starts.
+    let mut blocks = r.out_blocks;
+    for b in (0..nblocks).rev() {
+        for (pi, &target) in r.phi_targets[b].iter().enumerate().rev() {
+            let args = r.phi_args.remove(&(b, pi)).unwrap_or_default();
+            if args.len() < 2 {
+                return Err(Error::Ir(format!(
+                    "Φ for '{}' at bb{b} has {} argument(s); program has a \
+                     maybe-undefined variable on some path",
+                    r.new_vars[target].name,
+                    args.len()
+                )));
+            }
+            blocks[b].instrs.insert(0, Instr { var: target, rhs: Rhs::Phi(args) });
+        }
+    }
+
+    Ok(SsaProgram {
+        blocks,
+        entry: cfg.program.entry,
+        vars: r.new_vars,
+        def_block: r.def_block,
+        cfg: cfg.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_lower;
+
+    fn ssa_of(src: &str) -> SsaProgram {
+        let p = parse_and_lower(src).unwrap();
+        let cfg = Cfg::from_program(&p).unwrap();
+        construct(&cfg).unwrap()
+    }
+
+    #[test]
+    fn straightline_renames_reassignment() {
+        // Listing 1a of the paper: a=1; b=a+a; a=b+2; c=a*3. After SSA (+
+        // copy propagation), every variable is assigned exactly once and
+        // the two writes to `a` end up in distinct SSA variables.
+        let ssa = ssa_of("a = 1; b = a + a; a = b + 2; c = a * 3; writeFile(bag(1), \"o\" + str(c));");
+        let listing = ssa.listing();
+        let mut targets: Vec<crate::frontend::VarId> = Vec::new();
+        for b in &ssa.blocks {
+            for i in &b.instrs {
+                assert!(!targets.contains(&i.var), "double assignment:\n{listing}");
+                targets.push(i.var);
+            }
+        }
+        // The reassigned `a` keeps only one instruction under its name.
+        let a_defs = ssa
+            .blocks
+            .iter()
+            .flat_map(|b| &b.instrs)
+            .filter(|i| ssa.vars[i.var].name == "a")
+            .count();
+        assert_eq!(a_defs, 1, "{listing}");
+        // No Φ in straight-line code.
+        assert!(!listing.contains("Φ"), "{listing}");
+    }
+
+    #[test]
+    fn loop_counter_gets_phi_in_header() {
+        let ssa = ssa_of("d = 1; while (d <= 3) { d = d + 1; } collect(bag(1), \"out\");");
+        let listing = ssa.listing();
+        assert!(listing.contains("Φ"), "{listing}");
+        // The Φ must be in the loop header: find the block with a branch.
+        let header = ssa
+            .blocks
+            .iter()
+            .position(|b| matches!(b.term, Terminator::Branch { .. }))
+            .unwrap();
+        assert!(
+            ssa.blocks[header].instrs.iter().any(|i| matches!(i.rhs, Rhs::Phi(_))),
+            "{listing}"
+        );
+    }
+
+    #[test]
+    fn if_merge_gets_phi() {
+        let ssa = ssa_of(
+            "x = 1; c = bag(1); if (x != 1) { x = 2; } else { x = 3; } y = x + 1; writeFile(c, \"o\" + str(y));",
+        );
+        let phi = ssa
+            .blocks
+            .iter()
+            .flat_map(|b| &b.instrs)
+            .find(|i| matches!(i.rhs, Rhs::Phi(_)))
+            .expect("phi expected");
+        match &phi.rhs {
+            Rhs::Phi(args) => assert_eq!(args.len(), 2),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn pruned_ssa_no_phi_for_loop_local() {
+        // `v` is reassigned at the start of every iteration before use:
+        // pruned SSA must NOT create a Φ for it (it is not live into the
+        // header), otherwise the dataflow would contain an undefined input.
+        let ssa = ssa_of(
+            "d = 1; while (d <= 3) { v = bag(1, 2); c = v.count(); d = d + c; } collect(bag(0), \"z\");",
+        );
+        let header = ssa
+            .blocks
+            .iter()
+            .position(|b| matches!(b.term, Terminator::Branch { .. }))
+            .unwrap();
+        let phis = ssa.blocks[header]
+            .instrs
+            .iter()
+            .filter(|i| matches!(i.rhs, Rhs::Phi(_)))
+            .count();
+        // Only `d` needs a Φ.
+        assert_eq!(phis, 1, "{}", ssa.listing());
+    }
+
+    #[test]
+    fn use_before_assignment_rejected() {
+        let p = parse_and_lower(
+            "d = 1; if (d != 1) { x = 2; } y = x + 1; collect(bag(1), \"x\");",
+        );
+        // `x` is only defined on one path; SSA construction must reject.
+        let cfg = Cfg::from_program(&p.unwrap()).unwrap();
+        assert!(construct(&cfg).is_err());
+    }
+
+    #[test]
+    fn nested_loops_phi_at_both_headers() {
+        let ssa = ssa_of(
+            "i = 0; s = 0; while (i < 3) { j = 0; while (j < 2) { s = s + 1; j = j + 1; } i = i + 1; } collect(bag(1), \"s\");",
+        );
+        let phi_blocks: Vec<usize> = ssa
+            .blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.instrs.iter().any(|i| matches!(i.rhs, Rhs::Phi(_))))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(phi_blocks.len(), 2, "{}", ssa.listing());
+        // s needs Φs at both headers; i only at the outer one; j only inner.
+    }
+
+    #[test]
+    fn visit_count_ssa_matches_paper_structure() {
+        let src = r#"
+            attrs = source("pageAttributes");
+            day = 1;
+            yesterday = bag();
+            while (day <= 5) {
+                visits = source("visits").join(attrs);
+                counts = visits.map(|p| pair(fst(p), 1)).reduceByKey(|a, b| a + b);
+                if (day != 1) {
+                    diffs = counts.join(yesterday).map(|p| snd(p));
+                    collect(diffs, "diffs");
+                }
+                yesterday = counts;
+                day = day + 1;
+            }
+        "#;
+        let ssa = ssa_of(src);
+        let listing = ssa.listing();
+        // Paper Fig. 3a: Φs for day and yesterdayCounts in the loop header.
+        let header = ssa
+            .blocks
+            .iter()
+            .position(|b| {
+                matches!(b.term, Terminator::Branch { .. })
+                    && b.instrs.iter().any(|i| matches!(i.rhs, Rhs::Phi(_)))
+            })
+            .unwrap_or_else(|| panic!("no header with phis:\n{listing}"));
+        let phis = ssa.blocks[header]
+            .instrs
+            .iter()
+            .filter(|i| matches!(i.rhs, Rhs::Phi(_)))
+            .count();
+        assert_eq!(phis, 2, "{listing}");
+        // attrs must NOT have a Φ (loop-invariant).
+        assert!(!listing.contains("attrs_1"), "{listing}");
+    }
+}

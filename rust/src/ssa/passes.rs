@@ -1,0 +1,227 @@
+//! SSA cleanup passes: copy propagation, Φ simplification, and dead code
+//! elimination. These keep the generated dataflow graphs free of identity
+//! nodes (every `Rhs::Copy` the frontends emit for `a = b` assignments
+//! disappears here rather than becoming a dataflow operator).
+
+use super::SsaProgram;
+use crate::frontend::{Rhs, Terminator, VarId};
+
+/// Replace uses of copy targets with their sources and drop the copies.
+/// Chains of copies resolve transitively.
+pub fn copy_propagate(mut ssa: SsaProgram) -> SsaProgram {
+    let nvars = ssa.vars.len();
+    // Resolve the copy-of chain for each variable.
+    let mut alias: Vec<VarId> = (0..nvars).collect();
+    for b in &ssa.blocks {
+        for i in &b.instrs {
+            if let Rhs::Copy(src) = i.rhs {
+                alias[i.var] = src;
+            }
+        }
+    }
+    let resolve = |alias: &[VarId], mut v: VarId| -> VarId {
+        let mut steps = 0;
+        while alias[v] != v {
+            v = alias[v];
+            steps += 1;
+            assert!(steps <= nvars, "copy cycle");
+        }
+        v
+    };
+    let resolved: Vec<VarId> = (0..nvars).map(|v| resolve(&alias, v)).collect();
+
+    for b in &mut ssa.blocks {
+        b.instrs.retain(|i| !matches!(i.rhs, Rhs::Copy(_)));
+        for i in &mut b.instrs {
+            i.rhs.map_inputs(|u| resolved[u]);
+        }
+        if let Terminator::Branch { cond, .. } = &mut b.term {
+            *cond = resolved[*cond];
+        }
+    }
+    ssa
+}
+
+/// Replace `x = Φ(y, y, ... y)` (all arguments identical) by rewriting
+/// uses of `x` to `y` and dropping the Φ. Iterates to a fixpoint (Φs can
+/// collapse transitively).
+pub fn simplify_phis(mut ssa: SsaProgram) -> SsaProgram {
+    loop {
+        let nvars = ssa.vars.len();
+        let mut alias: Vec<VarId> = (0..nvars).collect();
+        let mut any = false;
+        for b in &ssa.blocks {
+            for i in &b.instrs {
+                if let Rhs::Phi(args) = &i.rhs {
+                    let first = args[0].1;
+                    if args.iter().all(|&(_, v)| v == first) && first != i.var {
+                        alias[i.var] = first;
+                        any = true;
+                    }
+                }
+            }
+        }
+        if !any {
+            return ssa;
+        }
+        let resolve = |alias: &[VarId], mut v: VarId| -> VarId {
+            let mut steps = 0;
+            while alias[v] != v {
+                v = alias[v];
+                steps += 1;
+                assert!(steps <= nvars, "phi alias cycle");
+            }
+            v
+        };
+        let resolved: Vec<VarId> = (0..nvars).map(|v| resolve(&alias, v)).collect();
+        for b in &mut ssa.blocks {
+            b.instrs.retain(|i| resolved[i.var] == i.var || !matches!(i.rhs, Rhs::Phi(_)));
+            for i in &mut b.instrs {
+                i.rhs.map_inputs(|u| resolved[u]);
+            }
+            if let Terminator::Branch { cond, .. } = &mut b.term {
+                *cond = resolved[*cond];
+            }
+        }
+    }
+}
+
+/// Merge Φ arguments that carry the SAME SSA variable from different
+/// predecessors (created by `break`/`continue`, where several incoming
+/// edges propagate one definition). A Φ argument is a *dataflow input*
+/// (§5.3): one variable = one edge, regardless of how many CFG
+/// predecessors deliver it. The §6.3.3 longest-prefix selection is
+/// per-definition, so the merged edge behaves identically.
+pub fn dedupe_phi_args(mut ssa: SsaProgram) -> SsaProgram {
+    for b in &mut ssa.blocks {
+        for i in &mut b.instrs {
+            if let Rhs::Phi(args) = &mut i.rhs {
+                let mut seen: Vec<VarId> = Vec::new();
+                args.retain(|&(_, v)| {
+                    if seen.contains(&v) {
+                        false
+                    } else {
+                        seen.push(v);
+                        true
+                    }
+                });
+            }
+        }
+    }
+    ssa
+}
+
+/// Remove pure instructions whose results are never used. Side-effecting
+/// operations (`writeFile`, `collect`) and branch conditions are roots.
+/// Works backwards to a fixpoint so dead chains disappear entirely.
+pub fn dead_code_eliminate(mut ssa: SsaProgram) -> SsaProgram {
+    let nvars = ssa.vars.len();
+    let mut live = vec![false; nvars];
+    let mut work: Vec<VarId> = Vec::new();
+    for b in &ssa.blocks {
+        for i in &b.instrs {
+            if matches!(i.rhs, Rhs::WriteFile { .. } | Rhs::Collect { .. }) {
+                if !live[i.var] {
+                    live[i.var] = true;
+                    work.push(i.var);
+                }
+            }
+        }
+        if let Terminator::Branch { cond, .. } = b.term {
+            if !live[cond] {
+                live[cond] = true;
+                work.push(cond);
+            }
+        }
+    }
+    // Index defs.
+    let mut def_rhs: Vec<Option<&Rhs>> = vec![None; nvars];
+    for b in &ssa.blocks {
+        for i in &b.instrs {
+            def_rhs[i.var] = Some(&i.rhs);
+        }
+    }
+    while let Some(v) = work.pop() {
+        if let Some(rhs) = def_rhs[v] {
+            for u in rhs.input_vars() {
+                if !live[u] {
+                    live[u] = true;
+                    work.push(u);
+                }
+            }
+        }
+    }
+    drop(def_rhs);
+    for b in &mut ssa.blocks {
+        b.instrs.retain(|i| live[i.var]);
+    }
+    ssa
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cfg::Cfg;
+    use crate::frontend::{parse_and_lower, Rhs};
+    use crate::ssa;
+
+    fn ssa_of(src: &str) -> ssa::SsaProgram {
+        let p = parse_and_lower(src).unwrap();
+        let cfg = Cfg::from_program(&p).unwrap();
+        ssa::construct(&cfg).unwrap()
+    }
+
+    #[test]
+    fn copies_are_eliminated() {
+        let s = ssa_of("a = bag(1, 2); b = a; collect(b, \"x\");");
+        for blk in &s.blocks {
+            for i in &blk.instrs {
+                assert!(!matches!(i.rhs, Rhs::Copy(_)), "{}", s.listing());
+            }
+        }
+        // collect consumes the bag literal directly.
+        let collect = s
+            .blocks
+            .iter()
+            .flat_map(|b| &b.instrs)
+            .find(|i| matches!(i.rhs, Rhs::Collect { .. }))
+            .unwrap();
+        let input = collect.rhs.input_vars()[0];
+        assert!(matches!(s.def_instr(input).unwrap().rhs, Rhs::BagLit(_)));
+    }
+
+    #[test]
+    fn dead_code_removed() {
+        let s = ssa_of("a = bag(1); dead = a.map(|x| x + 1); collect(a, \"out\");");
+        let maps = s
+            .blocks
+            .iter()
+            .flat_map(|b| &b.instrs)
+            .filter(|i| matches!(i.rhs, Rhs::Map { .. }))
+            .count();
+        assert_eq!(maps, 0, "{}", s.listing());
+    }
+
+    #[test]
+    fn condition_chain_survives_dce() {
+        let s = ssa_of("d = 1; while (d <= 3) { d = d + 1; } collect(bag(1), \"x\");");
+        // The loop counter arithmetic feeds the condition; it must survive.
+        let has_scalar_ops = s
+            .blocks
+            .iter()
+            .flat_map(|b| &b.instrs)
+            .any(|i| matches!(i.rhs, Rhs::ScalarBin { .. }));
+        assert!(has_scalar_ops, "{}", s.listing());
+    }
+
+    #[test]
+    fn side_effects_are_roots() {
+        let s = ssa_of("a = bag(1); writeFile(a, \"f\");");
+        let writes = s
+            .blocks
+            .iter()
+            .flat_map(|b| &b.instrs)
+            .filter(|i| matches!(i.rhs, Rhs::WriteFile { .. }))
+            .count();
+        assert_eq!(writes, 1);
+    }
+}

@@ -1,0 +1,195 @@
+//! SSA verifier: checks the invariants the dataflow translation (§5.3)
+//! and the coordination protocol (§6.3) rely on.
+
+use super::SsaProgram;
+use crate::cfg::dom;
+use crate::error::{Error, Result};
+use crate::frontend::{Rhs, Terminator, VarId};
+use rustc_hash::FxHashMap;
+
+/// Verify:
+/// 1. every variable is assigned exactly once;
+/// 2. every ordinary use is dominated by its definition;
+/// 3. Φ arguments come from distinct predecessor blocks covering all
+///    predecessors, and each argument's definition dominates its
+///    predecessor block;
+/// 4. Φ arguments have pairwise-distinct *defining* blocks (§6.3.3's
+///    longest-prefix input selection requires this to disambiguate);
+/// 5. branch conditions are defined in the branching block.
+pub fn verify(ssa: &SsaProgram) -> Result<()> {
+    let dt = dom::dominators(&ssa.cfg);
+
+    // 1. single assignment + def table.
+    let mut def_at: FxHashMap<VarId, usize> = FxHashMap::default();
+    for (bi, b) in ssa.blocks.iter().enumerate() {
+        for i in &b.instrs {
+            if def_at.insert(i.var, bi).is_some() {
+                return Err(Error::SsaVerify(format!(
+                    "variable '{}' assigned more than once",
+                    ssa.vars[i.var].name
+                )));
+            }
+            if ssa.def_block[i.var] != bi {
+                return Err(Error::SsaVerify(format!(
+                    "def_block table stale for '{}'",
+                    ssa.vars[i.var].name
+                )));
+            }
+        }
+    }
+
+    let defined = |v: VarId| -> Result<usize> {
+        def_at.get(&v).copied().ok_or_else(|| {
+            Error::SsaVerify(format!("use of undefined variable '{}'", ssa.vars[v].name))
+        })
+    };
+
+    for (bi, b) in ssa.blocks.iter().enumerate() {
+        let mut seen_non_phi = false;
+        for (pos, i) in b.instrs.iter().enumerate() {
+            match &i.rhs {
+                Rhs::Phi(args) => {
+                    if seen_non_phi {
+                        return Err(Error::SsaVerify(format!(
+                            "Φ for '{}' appears after ordinary instructions in bb{bi}",
+                            ssa.vars[i.var].name
+                        )));
+                    }
+                    // 3a. every arg comes in through an actual predecessor
+                    //     it dominates (args may be deduped by variable, so
+                    //     one arg can cover several predecessors).
+                    for &(p, v) in args {
+                        if !ssa.cfg.preds[bi].contains(&p) {
+                            return Err(Error::SsaVerify(format!(
+                                "Φ for '{}' at bb{bi} has arg from non-pred bb{p}",
+                                ssa.vars[i.var].name
+                            )));
+                        }
+                        let db = defined(v)?;
+                        if !dt.dominates(db, p) {
+                            return Err(Error::SsaVerify(format!(
+                                "Φ arg '{}' (def bb{db}) does not dominate pred bb{p}",
+                                ssa.vars[v].name
+                            )));
+                        }
+                    }
+                    // 3b. coverage: every predecessor is reached by some
+                    //     argument's definition.
+                    for &p in &ssa.cfg.preds[bi] {
+                        let covered = args.iter().any(|&(_, v)| {
+                            def_at.get(&v).map(|&db| dt.dominates(db, p)).unwrap_or(false)
+                        });
+                        if !covered {
+                            return Err(Error::SsaVerify(format!(
+                                "Φ for '{}' at bb{bi}: predecessor bb{p} carries no value",
+                                ssa.vars[i.var].name
+                            )));
+                        }
+                    }
+                    // 4. distinct variables with distinct defining blocks —
+                    //    the §6.3.3 longest-prefix rule disambiguates by
+                    //    definition block.
+                    let mut vars_seen: Vec<VarId> = Vec::new();
+                    let mut def_blocks: Vec<usize> = Vec::new();
+                    for &(_, v) in args {
+                        if vars_seen.contains(&v) {
+                            return Err(Error::SsaVerify(format!(
+                                "Φ for '{}' at bb{bi} repeats argument '{}' (dedupe pass missing)",
+                                ssa.vars[i.var].name, ssa.vars[v].name
+                            )));
+                        }
+                        vars_seen.push(v);
+                        def_blocks.push(defined(v)?);
+                    }
+                    let len = def_blocks.len();
+                    def_blocks.sort();
+                    def_blocks.dedup();
+                    if def_blocks.len() != len {
+                        return Err(Error::SsaVerify(format!(
+                            "Φ for '{}' at bb{bi} has two distinct arguments defined \
+                             in the same block; the execution-path input selection \
+                             of §6.3.3 cannot disambiguate them",
+                            ssa.vars[i.var].name
+                        )));
+                    }
+                }
+                rhs => {
+                    seen_non_phi = true;
+                    for u in rhs.input_vars() {
+                        let db = defined(u)?;
+                        // 2. def dominates use: same block earlier, or a
+                        // strictly dominating block.
+                        let ok = if db == bi {
+                            b.instrs[..pos].iter().any(|x| x.var == u)
+                        } else {
+                            dt.dominates(db, bi)
+                        };
+                        if !ok {
+                            return Err(Error::SsaVerify(format!(
+                                "use of '{}' in bb{bi} not dominated by its def in bb{db}",
+                                ssa.vars[u].name
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+        // 5. branch condition local.
+        if let Terminator::Branch { cond, .. } = b.term {
+            let db = defined(cond)?;
+            if db != bi {
+                return Err(Error::SsaVerify(format!(
+                    "branch condition '{}' of bb{bi} defined in bb{db}; condition \
+                     nodes must live in the deciding block (§5.3)",
+                    ssa.vars[cond].name
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cfg::Cfg;
+    use crate::frontend::parse_and_lower;
+    use crate::ssa;
+
+    #[test]
+    fn well_formed_programs_verify() {
+        for src in [
+            "a = 1; b = a + 1; collect(bag(1), \"x\");",
+            "d = 1; while (d <= 3) { d = d + 1; } collect(bag(1), \"x\");",
+            "x = 1; if (x != 1) { x = 2; } else { x = 3; } y = x; collect(bag(1), \"x\");",
+            "i = 0; while (i < 2) { j = 0; while (j < 2) { j = j + 1; } i = i + 1; } collect(bag(1), \"x\");",
+        ] {
+            let p = parse_and_lower(src).unwrap();
+            let cfg = Cfg::from_program(&p).unwrap();
+            ssa::construct(&cfg).unwrap_or_else(|e| panic!("{src}: {e}"));
+        }
+    }
+
+    #[test]
+    fn verifier_rejects_double_assignment() {
+        let src = "d = 1; while (d <= 3) { d = d + 1; } collect(bag(1), \"x\");";
+        let p = parse_and_lower(src).unwrap();
+        let cfg = Cfg::from_program(&p).unwrap();
+        let mut s = ssa::construct(&cfg).unwrap();
+        // Corrupt: duplicate an instruction.
+        let dup = s.blocks[s.entry].instrs[0].clone();
+        s.blocks[s.entry].instrs.push(dup);
+        assert!(ssa::verify::verify(&s).is_err());
+    }
+
+    #[test]
+    fn verifier_rejects_stale_def_block() {
+        let src = "a = 1; b = a + 1; collect(bag(1), \"x\");";
+        let p = parse_and_lower(src).unwrap();
+        let cfg = Cfg::from_program(&p).unwrap();
+        let mut s = ssa::construct(&cfg).unwrap();
+        let live_var = s.blocks[s.entry].instrs[0].var;
+        s.def_block[live_var] = 999;
+        // Either stale table or undefined-use error; must not verify.
+        assert!(ssa::verify::verify(&s).is_err());
+    }
+}

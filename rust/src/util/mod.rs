@@ -1,0 +1,48 @@
+//! Small utility substrates built in-repo because the offline crate
+//! registry lacks `rand`, `proptest`, and friends (see DESIGN.md §2).
+
+pub mod quickcheck;
+pub mod rng;
+
+/// Format a `std::time::Duration` compactly for tables (`1.23ms`, `456µs`).
+pub fn fmt_duration(d: std::time::Duration) -> String {
+    let ns = d.as_nanos();
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", d.as_secs_f64())
+    } else if ns >= 1_000_000 {
+        format!("{:.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Left-pad a string to `w` chars (ASCII table helper).
+pub fn pad(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s.to_string()
+    } else {
+        format!("{}{}", " ".repeat(w - s.len()), s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn duration_formats() {
+        assert_eq!(fmt_duration(Duration::from_nanos(12)), "12ns");
+        assert_eq!(fmt_duration(Duration::from_micros(12)), "12.00µs");
+        assert_eq!(fmt_duration(Duration::from_millis(12)), "12.000ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000s");
+    }
+
+    #[test]
+    fn pad_left() {
+        assert_eq!(pad("ab", 4), "  ab");
+        assert_eq!(pad("abcd", 2), "abcd");
+    }
+}

@@ -1,0 +1,235 @@
+//! Minimal property-based testing framework (in-repo `proptest` substitute
+//! — the offline registry has no proptest/quickcheck; see DESIGN.md §2).
+//!
+//! Supports: seeded generators, configurable case counts, and greedy
+//! shrinking via user-provided simplification steps. Used by the
+//! coordinator-invariant tests in `rust/tests/coordination_properties.rs`
+//! and by unit tests across the compiler.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libxla rpath in this sandbox)
+//! use labyrinth::util::quickcheck::{forall, Config, Gen};
+//! forall(Config::default().cases(64), Gen::vec_i64(0, 100, 0..20), |xs| {
+//!     let mut ys = xs.clone();
+//!     ys.sort();
+//!     ys.len() == xs.len()
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+
+/// Property-run configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases to generate.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+    /// Max shrink attempts after a failure.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, seed: 0x1AB, max_shrink: 500 }
+    }
+}
+
+impl Config {
+    /// Set the case count.
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    /// Set the base seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// A generator: produces a value from a PRNG and can propose shrinks.
+pub struct Gen<T> {
+    generate: Box<dyn Fn(&mut Rng) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    /// Build from a generation function (no shrinking).
+    pub fn new(f: impl Fn(&mut Rng) -> T + 'static) -> Gen<T> {
+        Gen { generate: Box::new(f), shrink: Box::new(|_| Vec::new()) }
+    }
+
+    /// Attach a shrinker: returns candidate *simpler* values.
+    pub fn with_shrink(mut self, f: impl Fn(&T) -> Vec<T> + 'static) -> Gen<T> {
+        self.shrink = Box::new(f);
+        self
+    }
+
+    /// Map the generated value (loses shrinking).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        let g = self.generate;
+        Gen::new(move |r| f(g(r)))
+    }
+
+    /// Generate one value.
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.generate)(rng)
+    }
+}
+
+impl Gen<i64> {
+    /// Uniform i64 in `[lo, hi)`, shrinking towards `lo`.
+    pub fn i64_range(lo: i64, hi: i64) -> Gen<i64> {
+        Gen::new(move |r| r.gen_i64(lo, hi)).with_shrink(move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                out.push(lo + (v - lo) / 2);
+                out.push(v - 1);
+            }
+            out.dedup();
+            out
+        })
+    }
+}
+
+impl Gen<Vec<i64>> {
+    /// Vector of i64 with length in `len`, elements in `[lo, hi)`.
+    /// Shrinks by halving the vector and shrinking elements towards `lo`.
+    pub fn vec_i64(lo: i64, hi: i64, len: std::ops::Range<usize>) -> Gen<Vec<i64>> {
+        let (lmin, lmax) = (len.start, len.end.max(len.start + 1));
+        Gen::new(move |r| {
+            let n = lmin + r.gen_range((lmax - lmin) as u64) as usize;
+            (0..n).map(|_| r.gen_i64(lo, hi)).collect()
+        })
+        .with_shrink(move |v: &Vec<i64>| {
+            let mut out = Vec::new();
+            if v.len() > lmin {
+                out.push(v[..v.len() / 2.max(lmin)].to_vec());
+                let mut w = v.clone();
+                w.pop();
+                out.push(w);
+            }
+            for i in 0..v.len().min(4) {
+                if v[i] > lo {
+                    let mut w = v.clone();
+                    w[i] = lo;
+                    out.push(w);
+                }
+            }
+            out
+        })
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    /// All cases passed.
+    Ok,
+    /// A counterexample (possibly shrunk) was found.
+    Falsified {
+        /// The minimal failing input found.
+        input: T,
+        /// Seed of the failing case, for reproduction.
+        seed: u64,
+        /// Number of successful shrink steps applied.
+        shrinks: usize,
+    },
+}
+
+/// Run `prop` on `cfg.cases` random inputs; on failure, shrink greedily.
+/// Returns the outcome instead of panicking (callers assert).
+pub fn check<T: Clone + Debug + 'static>(
+    cfg: Config,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) -> PropResult<T> {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen.sample(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Shrink.
+        let mut best = input;
+        let mut shrinks = 0;
+        let mut budget = cfg.max_shrink;
+        'outer: loop {
+            for cand in (gen.shrink)(&best) {
+                if budget == 0 {
+                    break 'outer;
+                }
+                budget -= 1;
+                if !prop(&cand) {
+                    best = cand;
+                    shrinks += 1;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        return PropResult::Falsified { input: best, seed, shrinks };
+    }
+    PropResult::Ok
+}
+
+/// Like [`check`] but panics with a reproducible report on failure.
+pub fn forall<T: Clone + Debug + 'static>(cfg: Config, gen: Gen<T>, prop: impl Fn(&T) -> bool) {
+    match check(cfg, gen, prop) {
+        PropResult::Ok => {}
+        PropResult::Falsified { input, seed, shrinks } => {
+            panic!("property falsified (seed={seed}, {shrinks} shrinks): {input:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(Config::default().cases(50), Gen::i64_range(0, 100), |&v| v >= 0 && v < 100);
+    }
+
+    #[test]
+    fn failing_property_is_found_and_shrunk() {
+        let res = check(Config::default().cases(200), Gen::i64_range(0, 1000), |&v| v < 500);
+        match res {
+            PropResult::Falsified { input, .. } => {
+                // Greedy shrinking should land near the boundary.
+                assert!(input >= 500, "shrunk input {input}");
+                assert!(input <= 750, "shrink did not reduce: {input}");
+            }
+            PropResult::Ok => panic!("property should fail"),
+        }
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        let g = Gen::vec_i64(5, 10, 2..6);
+        let mut r = Rng::new(1);
+        for _ in 0..100 {
+            let v = g.sample(&mut r);
+            assert!((2..6).contains(&v.len()));
+            assert!(v.iter().all(|&x| (5..10).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        let res = check(
+            Config::default().cases(100),
+            Gen::vec_i64(0, 100, 0..30),
+            |v: &Vec<i64>| v.len() < 10,
+        );
+        match res {
+            PropResult::Falsified { input, .. } => assert!(input.len() >= 10 && input.len() <= 16),
+            PropResult::Ok => panic!("should fail"),
+        }
+    }
+}

@@ -1,0 +1,330 @@
+//! Dynamic element values flowing through Labyrinth dataflows.
+//!
+//! Labyrinth programs are written in a dynamically-typed analytics DSL
+//! (LabyLang) or via the builder API; the elements of parallel `Bag`s are
+//! represented uniformly by [`Value`]. `Value` is hashable and totally
+//! ordered (floats compare/hash by their bit pattern under a total order),
+//! so any value can be used as a partitioning or grouping key.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+/// A dynamically typed value: bag elements, scalars lifted into singleton
+/// bags (§5.2 of the paper), and composite pairs/tuples.
+#[derive(Clone)]
+pub enum Value {
+    /// The unit value (used by side-effecting statements like `writeFile`).
+    Unit,
+    /// A boolean — condition variables evaluate to singleton `Bool` bags.
+    Bool(bool),
+    /// A 64-bit signed integer.
+    I64(i64),
+    /// A 64-bit float. Ordered/hashed by total-order bit pattern.
+    F64(f64),
+    /// An immutable string (cheaply cloneable).
+    Str(Arc<str>),
+    /// A pair; by convention the *first* component is the key of keyed
+    /// operations (`join`, `reduceByKey`) and of hash partitioning.
+    Pair(Arc<(Value, Value)>),
+    /// An N-ary tuple for wider records.
+    Tuple(Arc<Vec<Value>>),
+}
+
+impl Value {
+    /// Build a string value.
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(Arc::from(s.into().as_str()))
+    }
+
+    /// Build a pair value.
+    pub fn pair(a: Value, b: Value) -> Value {
+        Value::Pair(Arc::new((a, b)))
+    }
+
+    /// Build a tuple value.
+    pub fn tuple(vs: Vec<Value>) -> Value {
+        Value::Tuple(Arc::new(vs))
+    }
+
+    /// The key used by keyed operations and hash partitioning: the first
+    /// component of a pair/tuple, or the value itself otherwise.
+    pub fn key(&self) -> &Value {
+        match self {
+            Value::Pair(p) => &p.0,
+            Value::Tuple(t) if !t.is_empty() => &t[0],
+            other => other,
+        }
+    }
+
+    /// The non-key payload of a pair (panics on other shapes).
+    pub fn val(&self) -> &Value {
+        match self {
+            Value::Pair(p) => &p.1,
+            other => panic!("Value::val on non-pair {other:?}"),
+        }
+    }
+
+    /// Extract an `i64`, panicking with context otherwise.
+    pub fn as_i64(&self) -> i64 {
+        match self {
+            Value::I64(v) => *v,
+            Value::Bool(b) => *b as i64,
+            other => panic!("expected I64, got {other:?}"),
+        }
+    }
+
+    /// Extract an `f64` (integers widen), panicking otherwise.
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            Value::F64(v) => *v,
+            Value::I64(v) => *v as f64,
+            other => panic!("expected F64, got {other:?}"),
+        }
+    }
+
+    /// Extract a `bool`, panicking otherwise.
+    pub fn as_bool(&self) -> bool {
+        match self {
+            Value::Bool(b) => *b,
+            other => panic!("expected Bool, got {other:?}"),
+        }
+    }
+
+    /// Extract a string slice, panicking otherwise.
+    pub fn as_str(&self) -> &str {
+        match self {
+            Value::Str(s) => s,
+            other => panic!("expected Str, got {other:?}"),
+        }
+    }
+
+    /// Stable 64-bit hash of the partitioning key (FxHash).
+    pub fn key_hash(&self) -> u64 {
+        let mut h = rustc_hash::FxHasher::default();
+        self.key().hash(&mut h);
+        h.finish()
+    }
+
+    /// A short type tag for error messages.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Unit => "unit",
+            Value::Bool(_) => "bool",
+            Value::I64(_) => "i64",
+            Value::F64(_) => "f64",
+            Value::Str(_) => "str",
+            Value::Pair(_) => "pair",
+            Value::Tuple(_) => "tuple",
+        }
+    }
+
+    fn discriminant_rank(&self) -> u8 {
+        match self {
+            Value::Unit => 0,
+            Value::Bool(_) => 1,
+            Value::I64(_) => 2,
+            Value::F64(_) => 3,
+            Value::Str(_) => 4,
+            Value::Pair(_) => 5,
+            Value::Tuple(_) => 6,
+        }
+    }
+}
+
+impl PartialEq for Value {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Value {}
+
+impl Ord for Value {
+    fn cmp(&self, other: &Self) -> Ordering {
+        use Value::*;
+        match (self, other) {
+            (Unit, Unit) => Ordering::Equal,
+            (Bool(a), Bool(b)) => a.cmp(b),
+            (I64(a), I64(b)) => a.cmp(b),
+            // Total order over floats via IEEE-754 total-ordering trick.
+            (F64(a), F64(b)) => {
+                let ta = a.to_bits() as i64;
+                let tb = b.to_bits() as i64;
+                let ta = ta ^ (((ta >> 63) as u64) >> 1) as i64;
+                let tb = tb ^ (((tb >> 63) as u64) >> 1) as i64;
+                ta.cmp(&tb)
+            }
+            (Str(a), Str(b)) => a.cmp(b),
+            (Pair(a), Pair(b)) => a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)),
+            (Tuple(a), Tuple(b)) => a.cmp(b),
+            (a, b) => a.discriminant_rank().cmp(&b.discriminant_rank()),
+        }
+    }
+}
+impl PartialOrd for Value {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Hash for Value {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        state.write_u8(self.discriminant_rank());
+        match self {
+            Value::Unit => {}
+            Value::Bool(b) => b.hash(state),
+            Value::I64(v) => v.hash(state),
+            Value::F64(v) => v.to_bits().hash(state),
+            Value::Str(s) => s.hash(state),
+            Value::Pair(p) => {
+                p.0.hash(state);
+                p.1.hash(state);
+            }
+            Value::Tuple(t) => {
+                for v in t.iter() {
+                    v.hash(state);
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Unit => write!(f, "()"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::I64(v) => write!(f, "{v}"),
+            Value::F64(v) => write!(f, "{v}"),
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Pair(p) => write!(f, "({:?}, {:?})", p.0, p.1),
+            Value::Tuple(t) => {
+                write!(f, "(")?;
+                for (i, v) in t.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v:?}")?;
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            other => write!(f, "{other:?}"),
+        }
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::I64(v)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::F64(v)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::str(v)
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::str(v)
+    }
+}
+impl From<(Value, Value)> for Value {
+    fn from((a, b): (Value, Value)) -> Self {
+        Value::pair(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::hash_map::DefaultHasher;
+
+    fn h(v: &Value) -> u64 {
+        let mut s = DefaultHasher::new();
+        v.hash(&mut s);
+        s.finish()
+    }
+
+    #[test]
+    fn key_of_pair_is_first_component() {
+        let v = Value::pair(Value::I64(7), Value::str("x"));
+        assert_eq!(v.key(), &Value::I64(7));
+        assert_eq!(v.val(), &Value::str("x"));
+    }
+
+    #[test]
+    fn key_of_scalar_is_itself() {
+        let v = Value::I64(3);
+        assert_eq!(v.key(), &v);
+    }
+
+    #[test]
+    fn float_total_order_handles_nan_and_signed_zero() {
+        let nan = Value::F64(f64::NAN);
+        let one = Value::F64(1.0);
+        let neg = Value::F64(-1.0);
+        assert_eq!(nan.cmp(&nan), Ordering::Equal);
+        assert_eq!(neg.cmp(&one), Ordering::Less);
+        // NaN (positive payload) sorts above all finite values.
+        assert_eq!(one.cmp(&nan), Ordering::Less);
+        // -0.0 < +0.0 under total order but they hash differently; that is
+        // fine for grouping as long as equality is consistent with hashing.
+        let z = Value::F64(0.0);
+        let nz = Value::F64(-0.0);
+        assert_ne!(z, nz);
+        assert_ne!(h(&z), h(&nz));
+    }
+
+    #[test]
+    fn hash_consistent_with_eq() {
+        let a = Value::pair(Value::I64(1), Value::str("a"));
+        let b = Value::pair(Value::I64(1), Value::str("a"));
+        assert_eq!(a, b);
+        assert_eq!(h(&a), h(&b));
+    }
+
+    #[test]
+    fn cross_type_ordering_is_by_rank() {
+        assert!(Value::Bool(true) < Value::I64(0));
+        assert!(Value::I64(i64::MAX) < Value::F64(f64::NEG_INFINITY));
+        assert!(Value::F64(1e300) < Value::str(""));
+    }
+
+    #[test]
+    fn tuple_key_is_first_field() {
+        let t = Value::tuple(vec![Value::str("k"), Value::I64(1), Value::I64(2)]);
+        assert_eq!(t.key(), &Value::str("k"));
+    }
+
+    #[test]
+    fn display_strings_unquoted() {
+        assert_eq!(Value::str("abc").to_string(), "abc");
+        assert_eq!(format!("{:?}", Value::str("abc")), "\"abc\"");
+    }
+
+    #[test]
+    fn key_hash_matches_between_identical_keys() {
+        let a = Value::pair(Value::I64(42), Value::F64(0.5));
+        let b = Value::pair(Value::I64(42), Value::str("other"));
+        assert_eq!(a.key_hash(), b.key_hash());
+    }
+}

@@ -1,0 +1,215 @@
+//! Synthetic workload generators for the paper's evaluation programs
+//! (DESIGN.md §2: the original 19 GB page-visit logs and 26-node cluster
+//! are unavailable; these generators produce scaled-down datasets with the
+//! same shape) plus the named-source registry that feeds benches without
+//! disk I/O.
+
+pub mod registry;
+
+use crate::util::rng::Rng;
+use crate::value::Value;
+
+/// Parameters for the Visit Count workload (§3.1 / §9.2.1).
+#[derive(Clone, Debug)]
+pub struct VisitCountWorkload {
+    /// Number of days (the paper uses 100 in §9.2.1).
+    pub days: usize,
+    /// Page-visit log entries per day.
+    pub visits_per_day: usize,
+    /// Number of distinct pages.
+    pub num_pages: usize,
+    /// Zipf skew of page popularity.
+    pub skew: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for VisitCountWorkload {
+    fn default() -> Self {
+        VisitCountWorkload {
+            days: 10,
+            visits_per_day: 10_000,
+            num_pages: 1_000,
+            skew: 1.05,
+            seed: 42,
+        }
+    }
+}
+
+impl VisitCountWorkload {
+    /// Generate the visit log for one day: a bag of `I64` page ids.
+    pub fn day_visits(&self, day: usize) -> Vec<Value> {
+        let mut rng = Rng::new(self.seed ^ (day as u64).wrapping_mul(0x9E37_79B9));
+        (0..self.visits_per_day)
+            .map(|_| Value::I64(rng.gen_zipf(self.num_pages as u64, self.skew) as i64))
+            .collect()
+    }
+
+    /// Generate the page-attributes table: `Pair(pageId, typeId)` with
+    /// `typeId` in `[0, 4)` (the paper filters one page type, §3.1).
+    pub fn page_attributes(&self) -> Vec<Value> {
+        let mut rng = Rng::new(self.seed ^ 0xA77);
+        (0..self.num_pages)
+            .map(|p| Value::pair(Value::I64(p as i64), Value::I64(rng.gen_i64(0, 4))))
+            .collect()
+    }
+
+    /// Register all day logs and the attribute table as named sources:
+    /// `"{prefix}visits{day}"` (day is 1-based) and `"{prefix}attrs"`.
+    pub fn register(&self, prefix: &str) {
+        let reg = registry::global();
+        for day in 1..=self.days {
+            reg.put(format!("{prefix}visits{day}"), self.day_visits(day));
+        }
+        reg.put(format!("{prefix}attrs"), self.page_attributes());
+    }
+
+    /// Write the logs as files under `dir` (one id per line) for the
+    /// end-to-end `readFile` example.
+    pub fn write_files(&self, dir: &std::path::Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for day in 1..=self.days {
+            let mut s = String::new();
+            for v in self.day_visits(day) {
+                s.push_str(&format!("{}\n", v.as_i64()));
+            }
+            std::fs::write(dir.join(format!("pageVisitLog{day}")), s)?;
+        }
+        let mut s = String::new();
+        for v in self.page_attributes() {
+            if let Value::Pair(p) = v {
+                s.push_str(&format!("{} {}\n", p.0, p.1));
+            }
+        }
+        std::fs::write(dir.join("pageAttributes"), s)?;
+        Ok(())
+    }
+}
+
+/// Parameters for the PageRank workload (§9.2.2): per-day page-transition
+/// graphs.
+#[derive(Clone, Debug)]
+pub struct PageRankWorkload {
+    /// Number of days (outer loop).
+    pub days: usize,
+    /// Pages (graph vertices).
+    pub num_pages: usize,
+    /// Transitions (edges) per day.
+    pub edges_per_day: usize,
+    /// Zipf skew of transition targets.
+    pub skew: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for PageRankWorkload {
+    fn default() -> Self {
+        PageRankWorkload { days: 3, num_pages: 500, edges_per_day: 5_000, skew: 1.0, seed: 7 }
+    }
+}
+
+impl PageRankWorkload {
+    /// Generate one day's transition bag: `Pair(src, dst)`.
+    pub fn day_edges(&self, day: usize) -> Vec<Value> {
+        let mut rng = Rng::new(self.seed ^ (day as u64).wrapping_mul(0xDEAD_BEEF));
+        (0..self.edges_per_day)
+            .map(|_| {
+                let s = rng.gen_range(self.num_pages as u64) as i64;
+                let d = rng.gen_zipf(self.num_pages as u64, self.skew) as i64;
+                Value::pair(Value::I64(s), Value::I64(d))
+            })
+            .collect()
+    }
+
+    /// Register per-day edge bags as `"{prefix}edges{day}"` (1-based).
+    pub fn register(&self, prefix: &str) {
+        let reg = registry::global();
+        for day in 1..=self.days {
+            reg.put(format!("{prefix}edges{day}"), self.day_edges(day));
+        }
+    }
+}
+
+/// Reference single-threaded PageRank (power iteration with damping 0.85)
+/// over an edge list — the oracle for kernel and dataflow validation.
+pub fn pagerank_reference(edges: &[(usize, usize)], n: usize, iters: usize) -> Vec<f64> {
+    let damping = 0.85;
+    let mut out_deg = vec![0usize; n];
+    for &(s, _) in edges {
+        out_deg[s] += 1;
+    }
+    let mut rank = vec![1.0 / n as f64; n];
+    for _ in 0..iters {
+        let mut next = vec![(1.0 - damping) / n as f64; n];
+        let mut dangling = 0.0;
+        for (s, &d) in out_deg.iter().enumerate() {
+            if d == 0 {
+                dangling += rank[s];
+            }
+        }
+        for v in next.iter_mut() {
+            *v += damping * dangling / n as f64;
+        }
+        for &(s, d) in edges {
+            next[d] += damping * rank[s] / out_deg[s] as f64;
+        }
+        rank = next;
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn visit_logs_are_deterministic_and_in_range() {
+        let w = VisitCountWorkload { days: 2, visits_per_day: 100, num_pages: 10, ..Default::default() };
+        let a = w.day_visits(1);
+        let b = w.day_visits(1);
+        assert_eq!(a, b);
+        assert_ne!(a, w.day_visits(2));
+        for v in &a {
+            assert!((0..10).contains(&v.as_i64()));
+        }
+    }
+
+    #[test]
+    fn attributes_cover_every_page_once() {
+        let w = VisitCountWorkload { num_pages: 50, ..Default::default() };
+        let attrs = w.page_attributes();
+        assert_eq!(attrs.len(), 50);
+        let mut pages: Vec<i64> = attrs.iter().map(|v| v.key().as_i64()).collect();
+        pages.sort();
+        assert_eq!(pages, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn register_names_resolvable() {
+        let w = VisitCountWorkload { days: 2, visits_per_day: 10, ..Default::default() };
+        w.register("t_");
+        let reg = registry::global();
+        assert!(reg.get("t_visits1").is_some());
+        assert!(reg.get("t_visits2").is_some());
+        assert!(reg.get("t_attrs").is_some());
+        assert!(reg.get("t_visits3").is_none());
+    }
+
+    #[test]
+    fn pagerank_reference_sums_to_one() {
+        let edges = vec![(0, 1), (1, 2), (2, 0), (0, 2)];
+        let r = pagerank_reference(&edges, 3, 50);
+        let sum: f64 = r.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "{sum}");
+        // Node 2 has two in-edges; it should outrank node 1.
+        assert!(r[2] > r[1]);
+    }
+
+    #[test]
+    fn pagerank_handles_dangling_nodes() {
+        let edges = vec![(0, 1)]; // node 1 dangling
+        let r = pagerank_reference(&edges, 2, 100);
+        let sum: f64 = r.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+}

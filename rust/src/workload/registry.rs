@@ -1,0 +1,72 @@
+//! Named in-memory dataset registry backing `source("name")` /
+//! `Rhs::NamedSource`. Shared by all executors so every implementation of
+//! an experiment reads identical data.
+
+use crate::value::Value;
+use once_cell::sync::Lazy;
+use rustc_hash::FxHashMap;
+use std::sync::{Arc, Mutex};
+
+/// Thread-safe name → dataset map.
+#[derive(Default)]
+pub struct Registry {
+    map: Mutex<FxHashMap<String, Arc<Vec<Value>>>>,
+}
+
+impl Registry {
+    /// Create an empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Insert (or replace) a dataset.
+    pub fn put(&self, name: impl Into<String>, items: Vec<Value>) {
+        self.map.lock().unwrap().insert(name.into(), Arc::new(items));
+    }
+
+    /// Fetch a dataset.
+    pub fn get(&self, name: &str) -> Option<Arc<Vec<Value>>> {
+        self.map.lock().unwrap().get(name).cloned()
+    }
+
+    /// Remove datasets whose names start with `prefix` (bench cleanup).
+    pub fn clear_prefix(&self, prefix: &str) {
+        self.map.lock().unwrap().retain(|k, _| !k.starts_with(prefix));
+    }
+}
+
+/// The process-global registry.
+pub fn global() -> Arc<Registry> {
+    static GLOBAL: Lazy<Arc<Registry>> = Lazy::new(|| Arc::new(Registry::new()));
+    GLOBAL.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let r = Registry::new();
+        r.put("a", vec![Value::I64(1)]);
+        assert_eq!(r.get("a").unwrap().len(), 1);
+        assert!(r.get("b").is_none());
+    }
+
+    #[test]
+    fn clear_prefix_scopes_cleanup() {
+        let r = Registry::new();
+        r.put("x_1", vec![]);
+        r.put("x_2", vec![]);
+        r.put("y_1", vec![]);
+        r.clear_prefix("x_");
+        assert!(r.get("x_1").is_none());
+        assert!(r.get("y_1").is_some());
+    }
+
+    #[test]
+    fn global_is_shared() {
+        global().put("registry_shared_test", vec![Value::I64(9)]);
+        assert!(global().get("registry_shared_test").is_some());
+    }
+}

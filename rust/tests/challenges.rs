@@ -1,0 +1,142 @@
+//! The two coordination challenges of §6.2, as executable programs
+//! (Listing 3a and 3b of the paper), validated against the single-threaded
+//! specification executor.
+
+use labyrinth::baselines::single_thread;
+use labyrinth::exec::{run, ExecConfig, ExecMode};
+use labyrinth::frontend::parse_and_lower;
+use labyrinth::value::Value;
+
+fn multiset(mut v: Vec<Value>) -> Vec<Value> {
+    v.sort();
+    v
+}
+
+fn check_against_oracle(src: &str, labels: &[&str], workers: &[usize]) {
+    let program = parse_and_lower(src).unwrap();
+    let oracle = single_thread::run(&program, &Default::default()).unwrap();
+    let graph = labyrinth::compile(&program).unwrap();
+    for &w in workers {
+        for mode in [ExecMode::Pipelined, ExecMode::Barrier] {
+            let out = run(
+                &graph,
+                &ExecConfig { workers: w, mode, ..Default::default() },
+            )
+            .unwrap_or_else(|e| panic!("workers={w} mode={mode:?}: {e}"));
+            for label in labels {
+                assert_eq!(
+                    multiset(out.collected(label).to_vec()),
+                    multiset(oracle.collected(label).to_vec()),
+                    "label '{label}' mismatch at workers={w} mode={mode:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Listing 3a: `z = f(x, y)` where `x` is produced once per OUTER step and
+/// `y` once per INNER step — input-bag matching is not one-to-one; the
+/// runtime must reuse x's bag for every inner step (Challenge 1).
+#[test]
+fn listing_3a_nested_loop_bag_matching() {
+    let src = r#"
+        i = 0;
+        while (i < 3) {
+            x = bag(10, 20).map(|v| v + i * 100);
+            j = 0;
+            while (j < 2) {
+                y = bag(1, 2).map(|v| v + j * 7);
+                z = x.cross(y);
+                collect(z, "z");
+                j = j + 1;
+            }
+            i = i + 1;
+        }
+    "#;
+    check_against_oracle(src, &["z"], &[1, 2, 4]);
+}
+
+/// Listing 3a with a keyed binary operator: x joins y across loop depths.
+#[test]
+fn listing_3a_with_join() {
+    let src = r#"
+        i = 0;
+        while (i < 3) {
+            x = bag(1, 2, 3).map(|v| pair(v, v * 10 + i));
+            j = 0;
+            while (j < 2) {
+                y = bag(2, 3, 4).map(|v| pair(v, j));
+                z = y.join(x).map(|p| pair(fst(p), fst(snd(p)) + snd(snd(p))));
+                collect(z, "z");
+                j = j + 1;
+            }
+            i = i + 1;
+        }
+    "#;
+    check_against_oracle(src, &["z"], &[1, 3]);
+}
+
+/// Listing 3b: Φs after an if-else inside a loop. First-come-first-served
+/// input selection would pair x-bags with wrong y-bags across steps
+/// (path ABDACD); the execution-path rule must keep them aligned
+/// (Challenge 2).
+#[test]
+fn listing_3b_phi_alignment_across_branches() {
+    let src = r#"
+        i = 0;
+        acc = bag();
+        while (i < 6) {
+            x = bag(0);
+            y = bag(0);
+            if (i % 2 == 0) {
+                x = bag(1).map(|v| v + i * 10);
+                y = bag(2).map(|v| v + i * 10);
+            } else {
+                x = bag(3).map(|v| v + i * 1000);
+                y = bag(4).map(|v| v + i * 1000);
+            }
+            z = x.union(y);
+            collect(z, "z");
+            i = i + 1;
+        }
+    "#;
+    check_against_oracle(src, &["z"], &[1, 2, 4]);
+}
+
+/// Listing 3b variant where the branches are data-dependent (the decision
+/// is computed from bag data, so the path truly can't be predicted).
+#[test]
+fn listing_3b_data_dependent_branching() {
+    let src = r#"
+        i = 0;
+        carry = bag(5, 6, 7);
+        while (i < 5) {
+            n = carry.reduce(|a, b| a + b);
+            if (n % 2 == 0) {
+                carry = carry.map(|v| v + 1);
+            } else {
+                carry = carry.map(|v| v * 2);
+            }
+            collect(carry, "trace");
+            i = i + 1;
+        }
+    "#;
+    check_against_oracle(src, &["trace"], &[1, 3]);
+}
+
+/// The invariant-bag case of Challenge 1 (§3.2.2): the consumer keeps the
+/// build-side bag across MANY output bags while the path loops.
+#[test]
+fn invariant_bag_reused_across_many_steps() {
+    let src = r#"
+        lookup = bag(0, 1, 2, 3, 4).map(|v| pair(v, v * 111));
+        i = 0;
+        while (i < 8) {
+            probe = bag(0, 1, 2, 3, 4).map(|v| pair((v + i) % 5, i));
+            z = probe.join(lookup).map(|p| fst(snd(p)));
+            collect(z, "z");
+            i = i + 1;
+        }
+    "#;
+    check_against_oracle(src, &["z"], &[1, 2, 4]);
+}

@@ -1,0 +1,202 @@
+//! Property-based tests of the §6.3 coordination primitives, using the
+//! in-repo quickcheck substitute (`labyrinth::util::quickcheck`): random
+//! CFG walks are checked against brute-force specifications of input-bag
+//! selection, Φ choice, conditional-output decisions, and buffer GC.
+
+use labyrinth::coord::{
+    choose_phi_input, input_bag_dead, required_input_len, ExecPath, OutWatcher, SendDecision,
+};
+use labyrinth::util::quickcheck::{forall, Config, Gen};
+use labyrinth::util::rng::Rng;
+
+/// Random walk on the canonical loop CFG:
+/// 0 entry -> 1 header -> {2 body, 3 exit}; body -> {4 then, 5 else} -> 6
+/// merge -> 1. A walk is a path-shaped block sequence.
+fn random_walk(r: &mut Rng) -> Vec<usize> {
+    let mut walk = vec![0usize, 1];
+    let iters = r.gen_range(6);
+    for _ in 0..iters {
+        walk.push(2);
+        if r.gen_bool(0.5) {
+            walk.push(4);
+        } else {
+            walk.push(5);
+        }
+        walk.push(6);
+        walk.push(1);
+    }
+    walk.push(3);
+    walk
+}
+
+fn walk_gen() -> Gen<Vec<i64>> {
+    Gen::new(|r: &mut Rng| random_walk(r).into_iter().map(|b| b as i64).collect())
+}
+
+fn to_blocks(w: &[i64]) -> Vec<usize> {
+    w.iter().map(|&b| b as usize).collect()
+}
+
+#[test]
+fn required_input_len_is_latest_occurrence() {
+    forall(Config::default().cases(200), walk_gen(), |w| {
+        let path = to_blocks(w);
+        let mut r = Rng::new(w.len() as u64);
+        let out_len = 1 + r.gen_range(path.len() as u64) as u32;
+        let src = path[r.gen_range(path.len() as u64) as usize];
+        match required_input_len(&path, out_len, src) {
+            None => !path[..out_len as usize].contains(&src),
+            Some(len) => {
+                // Spec: the largest i <= out_len with path[i-1] == src.
+                let spec = (1..=out_len)
+                    .rev()
+                    .find(|&i| path[(i - 1) as usize] == src)
+                    .unwrap();
+                len == spec
+            }
+        }
+    });
+}
+
+#[test]
+fn phi_choice_picks_globally_latest_input_block() {
+    // Φ at merge block 6 with inputs defined in 4 (then) and 5 (else).
+    forall(Config::default().cases(200), walk_gen(), |w| {
+        let path = to_blocks(w);
+        // Every occurrence of 6 is an output bag of the Φ.
+        for (i, &b) in path.iter().enumerate() {
+            if b != 6 {
+                continue;
+            }
+            let out_len = (i + 1) as u32;
+            let Some((chosen, len)) = choose_phi_input(&path, out_len, &[4, 5], 6) else {
+                return false;
+            };
+            // Spec: whichever of blocks 4/5 occurred LAST before out_len —
+            // which is exactly the branch taken in this iteration.
+            let last4 = path[..i].iter().rposition(|&x| x == 4);
+            let last5 = path[..i].iter().rposition(|&x| x == 5);
+            let want = match (last4, last5) {
+                (Some(a), Some(b)) => {
+                    if a > b {
+                        (0, (a + 1) as u32)
+                    } else {
+                        (1, (b + 1) as u32)
+                    }
+                }
+                (Some(a), None) => (0, (a + 1) as u32),
+                (None, Some(b)) => (1, (b + 1) as u32),
+                (None, None) => return false,
+            };
+            if (chosen, len) != want {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn watcher_matches_bruteforce_first_hit() {
+    forall(Config::default().cases(300), walk_gen(), |w| {
+        let path = to_blocks(w);
+        let mut r = Rng::new(w.iter().sum::<i64>() as u64);
+        let bag_len = 1 + r.gen_range(path.len() as u64 - 1) as u32;
+        let target = path[r.gen_range(path.len() as u64) as usize];
+        let blocker = path[r.gen_range(path.len() as u64) as usize];
+        if target == blocker {
+            return true; // ill-formed edge; the planner never builds this
+        }
+        let mut watcher = OutWatcher::new(bag_len, target, vec![blocker]);
+        for (i, &b) in path.iter().enumerate() {
+            watcher.on_block((i + 1) as u32, b);
+        }
+        let got = watcher.on_final();
+        // Brute force: the first position after bag_len hitting either.
+        let spec = path
+            .iter()
+            .enumerate()
+            .skip(bag_len as usize)
+            .find(|(_, &b)| b == target || b == blocker)
+            .map(|(_, &b)| {
+                if b == target {
+                    SendDecision::Send
+                } else {
+                    SendDecision::Dead
+                }
+            })
+            .unwrap_or(SendDecision::Dead);
+        got == spec
+    });
+}
+
+/// GC safety: a buffered input bag is never discarded while some
+/// not-yet-completed output bag would still select it via the
+/// longest-prefix rule.
+#[test]
+fn input_gc_never_kills_needed_bags() {
+    forall(Config::default().cases(300), walk_gen(), |w| {
+        let path = to_blocks(w);
+        let mut ep = ExecPath::new(7);
+        ep.append(0, &path, true);
+        let mut r = Rng::new(w.len() as u64 ^ 0xbeef);
+        // Consumer at merge block 6; producer at (4 or 5); Φ siblings {4,5}.
+        let my_block = 6usize;
+        let src_block = if r.gen_bool(0.5) { 4 } else { 5 };
+        let supersede = vec![4usize, 5];
+        // Pick a random buffered bag: some occurrence of src_block.
+        let occs: Vec<u32> = ep.occurrences(src_block).to_vec();
+        let Some(&bag_len) = occs.first() else { return true };
+        // Progress: outputs processed in order; pick a cut.
+        let outs: Vec<u32> = ep.occurrences(my_block).to_vec();
+        let cut = r.gen_range(outs.len() as u64 + 1) as usize;
+        let min_pending = outs.get(cut).copied();
+
+        let supersede_at = ep.next_occurrence_of_any(&supersede, bag_len);
+        let dead = input_bag_dead(bag_len, supersede_at, min_pending, true);
+        if !dead {
+            return true; // keeping longer is always safe
+        }
+        // If declared dead, NO remaining output may require bag_len.
+        for &out in &outs[cut..] {
+            if let Some((_, need)) = choose_phi_input(ep.blocks(), out, &[4, 5], 6) {
+                if need == bag_len {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn exec_path_occurrence_index_matches_linear_scan() {
+    forall(Config::default().cases(200), walk_gen(), |w| {
+        let path = to_blocks(w);
+        let mut ep = ExecPath::new(7);
+        // Append in random-sized chunks to exercise the broadcast path.
+        let mut r = Rng::new(0x5eed ^ w.len() as u64);
+        let mut i = 0;
+        while i < path.len() {
+            let n = 1 + r.gen_range(3) as usize;
+            let end = (i + n).min(path.len());
+            ep.append(i, &path[i..end], end == path.len());
+            i = end;
+        }
+        for block in 0..7usize {
+            for after in 0..path.len() as u32 {
+                let got = ep.next_occurrence_after(block, after);
+                let spec = path
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, &b)| ((idx + 1) as u32, b))
+                    .find(|&(pos, b)| pos > after && b == block)
+                    .map(|(pos, _)| pos);
+                if got != spec {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}

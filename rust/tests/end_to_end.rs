@@ -1,0 +1,337 @@
+//! End-to-end integration: the paper's evaluation programs through the
+//! whole stack (LabyLang/builder → SSA → dataflow → engine) across worker
+//! counts and modes, always validated against the single-threaded
+//! specification executor.
+
+use labyrinth::baselines::single_thread;
+use labyrinth::exec::{run, ExecConfig, ExecMode};
+use labyrinth::programs;
+use labyrinth::value::Value;
+use labyrinth::workload::{PageRankWorkload, VisitCountWorkload};
+
+fn multiset(mut v: Vec<Value>) -> Vec<Value> {
+    v.sort();
+    v
+}
+
+#[test]
+fn visit_count_all_executors_agree() {
+    let w = VisitCountWorkload {
+        days: 6,
+        visits_per_day: 3_000,
+        num_pages: 128,
+        ..Default::default()
+    };
+    w.register("e2e_vc_");
+    let program = programs::visit_count(6, "e2e_vc_");
+    let oracle = single_thread::run(&program, &Default::default()).unwrap();
+    let want = multiset(oracle.collected("daily_diffs").to_vec());
+    assert_eq!(want.len(), 5);
+
+    let graph = labyrinth::compile(&program).unwrap();
+    for workers in [1, 2, 5] {
+        for mode in [ExecMode::Pipelined, ExecMode::Barrier] {
+            let out =
+                run(&graph, &ExecConfig { workers, mode, ..Default::default() }).unwrap();
+            assert_eq!(
+                multiset(out.collected("daily_diffs").to_vec()),
+                want,
+                "workers={workers} mode={mode:?}"
+            );
+        }
+    }
+
+    // Separate-jobs executors agree too.
+    for cfg in [
+        labyrinth::baselines::separate_jobs::SeparateJobsConfig::spark(3),
+        labyrinth::baselines::separate_jobs::SeparateJobsConfig::flink(3),
+    ] {
+        let out = labyrinth::baselines::separate_jobs::run(&program, &cfg).unwrap();
+        assert_eq!(multiset(out.collected("daily_diffs").to_vec()), want);
+    }
+}
+
+#[test]
+fn visit_count_with_invariant_join_reuse_and_noreuse_agree() {
+    let w = VisitCountWorkload {
+        days: 5,
+        visits_per_day: 2_000,
+        num_pages: 200,
+        ..Default::default()
+    };
+    w.register("e2e_vj_");
+    let program = programs::visit_count_with_join(5, "e2e_vj_");
+    let oracle = single_thread::run(&program, &Default::default()).unwrap();
+    let want = multiset(oracle.collected("daily_diffs").to_vec());
+
+    let graph = labyrinth::compile(&program).unwrap();
+    let reuse = run(&graph, &ExecConfig { workers: 3, ..Default::default() }).unwrap();
+    assert_eq!(multiset(reuse.collected("daily_diffs").to_vec()), want);
+    assert!(
+        reuse.metrics.get("coord.state_reused") > 0,
+        "invariant build side should be reused"
+    );
+
+    let noreuse = run(
+        &graph,
+        &ExecConfig { workers: 3, reuse_state: false, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(multiset(noreuse.collected("daily_diffs").to_vec()), want);
+    assert_eq!(noreuse.metrics.get("coord.state_reused"), 0);
+}
+
+#[test]
+fn nested_pagerank_agrees_with_oracle() {
+    let w = PageRankWorkload {
+        days: 2,
+        num_pages: 60,
+        edges_per_day: 600,
+        ..Default::default()
+    };
+    for day in 1..=2 {
+        let edges = w.day_edges(day);
+        let pairs: Vec<(usize, usize)> = edges
+            .iter()
+            .map(|v| (v.key().as_i64() as usize, v.val().as_i64() as usize))
+            .collect();
+        let mut outdeg = vec![0usize; 60];
+        for &(s, _) in &pairs {
+            outdeg[s] += 1;
+        }
+        let adj: Vec<Value> = pairs
+            .iter()
+            .map(|&(s, d)| {
+                Value::pair(
+                    Value::I64(s as i64),
+                    Value::pair(Value::I64(d as i64), Value::F64(1.0 / outdeg[s] as f64)),
+                )
+            })
+            .collect();
+        labyrinth::workload::registry::global().put(format!("e2e_pr_adj{day}"), adj);
+    }
+    let program = programs::pagerank_nested(2, 8, 60, "e2e_pr_");
+    let oracle = single_thread::run(&program, &Default::default()).unwrap();
+    let graph = labyrinth::compile(&program).unwrap();
+    let out = run(&graph, &ExecConfig { workers: 3, ..Default::default() }).unwrap();
+
+    // Ranks are floats: compare per (day-order, page) with tolerance.
+    let want = oracle.collected("ranks");
+    let got = out.collected("ranks");
+    assert_eq!(got.len(), want.len());
+    let to_map = |vals: &[Value]| {
+        let mut m = std::collections::BTreeMap::new();
+        for v in vals {
+            *m.entry(v.key().as_i64()).or_insert(0.0) += v.val().as_f64();
+        }
+        m
+    };
+    let (wm, gm) = (to_map(want), to_map(got));
+    for (k, wv) in &wm {
+        let gv = gm.get(k).copied().unwrap_or(f64::NAN);
+        assert!((gv - wv).abs() < 1e-9, "page {k}: {gv} vs {wv}");
+    }
+}
+
+#[test]
+fn laby_source_files_compile_and_run() {
+    // The shipped example programs parse, compile, and (quickstart) run.
+    let quickstart = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/programs/quickstart.laby"),
+    )
+    .unwrap();
+    let program = labyrinth::frontend::parse_and_lower(&quickstart).unwrap();
+    let graph = labyrinth::compile(&program).unwrap();
+    let out = run(&graph, &ExecConfig { workers: 2, ..Default::default() }).unwrap();
+    assert_eq!(out.collected("rounds"), &[Value::I64(8)]);
+
+    let vc = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("examples/programs/visit_count.laby"),
+    )
+    .unwrap();
+    let program = labyrinth::frontend::parse_and_lower(&vc).unwrap();
+    labyrinth::compile(&program).unwrap(); // compiles; running needs files
+}
+
+#[test]
+fn write_file_inside_loop_writes_per_step_files() {
+    let dir = std::env::temp_dir().join("laby_e2e_write");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = r#"
+        d = 1;
+        while (d <= 3) {
+            out = bag(1, 2).map(|v| v * d);
+            writeFile(out, "step" + str(d));
+            d = d + 1;
+        }
+    "#;
+    let program = labyrinth::frontend::parse_and_lower(src).unwrap();
+    let graph = labyrinth::compile(&program).unwrap();
+    run(
+        &graph,
+        &ExecConfig { workers: 2, io_dir: dir.clone(), ..Default::default() },
+    )
+    .unwrap();
+    for d in 1..=3 {
+        let content = std::fs::read_to_string(dir.join(format!("step{d}"))).unwrap();
+        let mut nums: Vec<i64> =
+            content.lines().map(|l| l.parse().unwrap()).collect();
+        nums.sort();
+        assert_eq!(nums, vec![d, 2 * d]);
+    }
+}
+
+#[test]
+fn empty_loop_zero_iterations() {
+    // Loop body never executes; the Φ must select the initial bags.
+    let src = r#"
+        x = bag(9, 9);
+        d = 100;
+        while (d <= 3) {
+            x = x.map(|v| v + 1);
+            d = d + 1;
+        }
+        collect(x, "x");
+    "#;
+    let program = labyrinth::frontend::parse_and_lower(src).unwrap();
+    let graph = labyrinth::compile(&program).unwrap();
+    let out = run(&graph, &ExecConfig { workers: 2, ..Default::default() }).unwrap();
+    assert_eq!(multiset(out.collected("x").to_vec()), vec![Value::I64(9), Value::I64(9)]);
+}
+
+#[test]
+fn deeply_nested_control_flow() {
+    let src = r#"
+        i = 0;
+        total = 0;
+        while (i < 3) {
+            j = 0;
+            while (j < 3) {
+                if ((i + j) % 2 == 0) {
+                    if (i == j) {
+                        total = total + 100;
+                    } else {
+                        total = total + 10;
+                    }
+                } else {
+                    total = total + 1;
+                }
+                j = j + 1;
+            }
+            i = i + 1;
+        }
+        out = bag(0).map(|z| z + total);
+        collect(out, "total");
+    "#;
+    let program = labyrinth::frontend::parse_and_lower(src).unwrap();
+    let oracle = single_thread::run(&program, &Default::default()).unwrap();
+    let graph = labyrinth::compile(&program).unwrap();
+    let out = run(&graph, &ExecConfig { workers: 2, ..Default::default() }).unwrap();
+    assert_eq!(out.collected("total"), oracle.collected("total"));
+    // i==j even: (0,0),(1,1),(2,2) -> 300; other even sums: (0,2),(2,0) -> 20;
+    // odd sums: 4 cells -> 4. Total 324.
+    assert_eq!(out.collected("total"), &[Value::I64(324)]);
+}
+
+#[test]
+fn break_exits_loop_early() {
+    // Unstructured control flow (§2.2): SSA + the execution-path protocol
+    // handle break without special cases.
+    let src = r#"
+        i = 0;
+        acc = bag();
+        while (i < 100) {
+            cur = bag(1, 2, 3).map(|v| v + i * 10);
+            acc = acc.union(cur);
+            if (i == 3) {
+                break;
+            }
+            i = i + 1;
+        }
+        collect(acc, "acc");
+        out = bag(0).map(|z| z + i);
+        collect(out, "i");
+    "#;
+    let program = labyrinth::frontend::parse_and_lower(src).unwrap();
+    let oracle = single_thread::run(&program, &Default::default()).unwrap();
+    assert_eq!(oracle.collected("i"), &[Value::I64(3)]);
+    assert_eq!(oracle.collected("acc").len(), 12); // 4 iterations x 3
+    let graph = labyrinth::compile(&program).unwrap();
+    for workers in [1, 3] {
+        let out = run(&graph, &ExecConfig { workers, ..Default::default() }).unwrap();
+        assert_eq!(
+            multiset(out.collected("acc").to_vec()),
+            multiset(oracle.collected("acc").to_vec()),
+            "workers={workers}"
+        );
+        assert_eq!(out.collected("i"), oracle.collected("i"));
+    }
+}
+
+#[test]
+fn continue_skips_rest_of_body() {
+    let src = r#"
+        i = 0;
+        acc = bag();
+        while (i < 6) {
+            i = i + 1;
+            if (i % 2 == 0) {
+                continue;
+            }
+            acc = acc.union(bag(0).map(|v| v + i));
+        }
+        collect(acc, "odds");
+    "#;
+    let program = labyrinth::frontend::parse_and_lower(src).unwrap();
+    let oracle = single_thread::run(&program, &Default::default()).unwrap();
+    assert_eq!(
+        multiset(oracle.collected("odds").to_vec()),
+        vec![Value::I64(1), Value::I64(3), Value::I64(5)]
+    );
+    let graph = labyrinth::compile(&program).unwrap();
+    for workers in [1, 2] {
+        for mode in [ExecMode::Pipelined, ExecMode::Barrier] {
+            let out =
+                run(&graph, &ExecConfig { workers, mode, ..Default::default() }).unwrap();
+            assert_eq!(
+                multiset(out.collected("odds").to_vec()),
+                multiset(oracle.collected("odds").to_vec())
+            );
+        }
+    }
+}
+
+#[test]
+fn break_in_nested_loop_only_exits_inner() {
+    let src = r#"
+        i = 0;
+        total = 0;
+        while (i < 3) {
+            j = 0;
+            while (j < 10) {
+                if (j == 2) {
+                    break;
+                }
+                total = total + 1;
+                j = j + 1;
+            }
+            i = i + 1;
+        }
+        out = bag(0).map(|z| z + total);
+        collect(out, "total");
+    "#;
+    let program = labyrinth::frontend::parse_and_lower(src).unwrap();
+    let oracle = single_thread::run(&program, &Default::default()).unwrap();
+    assert_eq!(oracle.collected("total"), &[Value::I64(6)]); // 3 outer x 2
+    let graph = labyrinth::compile(&program).unwrap();
+    let out = run(&graph, &ExecConfig { workers: 2, ..Default::default() }).unwrap();
+    assert_eq!(out.collected("total"), oracle.collected("total"));
+}
+
+#[test]
+fn break_outside_loop_rejected() {
+    let err = labyrinth::frontend::parse_and_lower("break;").unwrap_err();
+    assert!(err.to_string().contains("outside of a loop"), "{err}");
+}
