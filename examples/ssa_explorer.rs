@@ -49,8 +49,9 @@ fn main() -> labyrinth::Result<()> {
     let ssa = labyrinth::ssa::construct(&cfg)?;
     println!("\n==== 3. SSA (paper Fig. 3a) ====\n{}", ssa.listing());
 
-    let graph = labyrinth::compile(&program)?;
-    println!("==== 4. dataflow (paper Fig. 3b) ====");
+    let (graph, explain) =
+        labyrinth::compile_with(&program, &labyrinth::opt::OptConfig::default())?;
+    println!("==== 4. dataflow (paper Fig. 3b, after opt:: passes) ====");
     println!(
         "{} nodes, {} condition node(s), entry chain {:?}",
         graph.num_nodes(),
@@ -64,17 +65,25 @@ fn main() -> labyrinth::Result<()> {
             .map(|i| if i.conditional { "cond" } else { "same-block" })
             .collect();
         println!(
-            "  {} [{}] bb{} par={:?} inputs={:?}{}",
+            "  {} [{}] bb{} par={:?} inputs={:?}{}{}",
             n.name,
             n.op.mnemonic(),
             n.block,
             n.par,
             conds,
-            if n.cond.is_some() { "  <- CONDITION NODE" } else { "" }
+            if n.cond.is_some() { "  <- CONDITION NODE" } else { "" },
+            match n.hoisted_from {
+                Some(b) => format!("  <- HOISTED from bb{b}"),
+                None => String::new(),
+            }
         );
     }
 
-    println!("\n==== 5. graphviz (pipe to `dot -Tsvg`) ====");
+    println!("\n==== 5. optimizer explain ====");
+    print!("{}", explain.render());
+
+    println!("\n==== 6. graphviz (pipe to `dot -Tsvg`; hoisted preambles are \
+              clustered, fused chains green) ====");
     print!("{}", labyrinth::dataflow::dot::to_dot(&graph));
     Ok(())
 }

@@ -8,12 +8,17 @@
 //!    per-element sends (the engine's hot-path knob).
 //! 3. **Condition-node decision latency**: per-step coordination cost of
 //!    the Labyrinth engine on an empty loop (the floor for Fig. 5).
+//! 4. **Optimizer passes** (`opt::`): each pass toggled off against the
+//!    full pipeline — hoisting on the in-loop invariant-join workload,
+//!    fusion on a map/filter-chain microbenchmark.
 
 use labyrinth::bench_harness::{Bencher, Table};
 use labyrinth::coord::ExecPath;
 use labyrinth::exec::ExecConfig;
-use labyrinth::frontend::builder::ProgramBuilder;
+use labyrinth::frontend::builder::{udf1, udf2, ProgramBuilder};
+use labyrinth::opt::OptConfig;
 use labyrinth::programs;
+use labyrinth::value::Value;
 use std::time::Instant;
 
 fn main() {
@@ -108,4 +113,82 @@ fn main() {
         wall / steps as u32,
         res.path_len
     );
+
+    // ---- 4a. optimizer passes on the invariant-join workload ---------------
+    // The in-loop Fig. 8 program: hoisting is the pass that matters here
+    // (it re-enables the §7 build-side reuse); fuse/dce ride along.
+    let w = labyrinth::workload::VisitCountWorkload {
+        days: 10,
+        visits_per_day: 1_000,
+        num_pages: 4_000,
+        ..Default::default()
+    };
+    w.register("abl4_");
+    let in_loop = programs::visit_count_with_join_in_loop(10, "abl4_");
+    let axes: Vec<(&str, OptConfig)> = vec![
+        ("all-on", OptConfig::default()),
+        ("no-hoist", OptConfig { hoist: false, ..OptConfig::default() }),
+        ("no-fuse", OptConfig { fuse: false, ..OptConfig::default() }),
+        ("no-dce", OptConfig { dce: false, ..OptConfig::default() }),
+        ("none", OptConfig::none()),
+    ];
+    let mut table = Table::new(
+        "Ablation 4a: optimizer passes (in-loop invariant join, 4 workers)",
+        "passes",
+        vec!["labyrinth".into()],
+    );
+    for (label, ocfg) in &axes {
+        let (graph, _) = labyrinth::compile_with(&in_loop, ocfg).unwrap();
+        let m = bench.run(format!("opt={label}"), || {
+            labyrinth::exec::run(
+                &graph,
+                &ExecConfig { workers: 4, ..Default::default() },
+            )
+            .unwrap();
+        });
+        table.push_row(label.to_string(), vec![Some(m.median())]);
+    }
+    table.print();
+
+    // ---- 4b. fusion on a map/filter chain ----------------------------------
+    // A hot element-wise pipeline: 6 chained per-element operators over a
+    // large bag. Fusion collapses the chain into one physical operator;
+    // the delta is pure per-element dispatch + per-bag coordination.
+    let elems = 200_000i64;
+    let mut b = ProgramBuilder::new();
+    let src = b.bag_lit((0..elems).map(Value::I64).collect());
+    let chain0 = b.map(src, udf1(|v| Value::I64(v.as_i64() + 1)));
+    let chain1 = b.map(chain0, udf1(|v| Value::I64(v.as_i64() * 3)));
+    let chain2 = b.filter(chain1, udf1(|v| Value::Bool(v.as_i64() % 7 != 0)));
+    let chain3 = b.map(chain2, udf1(|v| Value::I64(v.as_i64() - 2)));
+    let chain4 = b.filter(chain3, udf1(|v| Value::Bool(v.as_i64() % 2 == 0)));
+    let chain5 = b.map(chain4, udf1(|v| Value::pair(Value::I64(v.as_i64() % 1024), v.clone())));
+    let reduced = b.reduce_by_key(chain5, udf2(|a, c| Value::I64(a.as_i64() + c.as_i64())));
+    let n = b.count(reduced);
+    let out = b.lift_scalar(n);
+    b.collect(out, "n");
+    let chain_prog = b.finish();
+    let mut table = Table::new(
+        "Ablation 4b: element-wise chain fusion (6-op chain, 200k elements, 4 workers)",
+        "fusion",
+        vec!["labyrinth".into()],
+    );
+    for (label, ocfg) in [
+        ("fused", OptConfig::default()),
+        ("unfused", OptConfig { fuse: false, ..OptConfig::default() }),
+    ] {
+        let (graph, report) = labyrinth::compile_with(&chain_prog, &ocfg).unwrap();
+        if label == "fused" {
+            assert!(report.fused_chains > 0, "chain must fuse:\n{}", report.render());
+        }
+        let m = bench.run(format!("chain {label}"), || {
+            labyrinth::exec::run(
+                &graph,
+                &ExecConfig { workers: 4, ..Default::default() },
+            )
+            .unwrap();
+        });
+        table.push_row(label.to_string(), vec![Some(m.median())]);
+    }
+    table.print();
 }

@@ -1,10 +1,17 @@
 //! Fig. 8 — loop-invariant hoisting: Visit Count WITH the invariant
-//! attribute join, sweeping the data scale at fixed workers. Four lines:
+//! attribute join, sweeping the data scale at fixed workers. Six lines:
 //!
-//!   * labyrinth          — §7 build-side reuse ON (build the attrs hash
-//!                          table once, probe it every step)
-//!   * laby-noreuse       — reuse OFF (rebuild per step, like §9.4's ablation)
-//!   * flink-sep / spark-sep — separate jobs rebuild the table per step by
+//!   * labyrinth          — hand-hoisted program (attrs outside the loop),
+//!                          §7 build-side reuse ON
+//!   * laby-hoist         — attrs written INSIDE the loop, the `opt::hoist`
+//!                          pass lifts it into the loop preamble; must
+//!                          match (or beat) the hand-hoisted line
+//!   * laby-noopt         — same in-loop program with the optimizer OFF:
+//!                          the build side recomputes and the hash table
+//!                          rebuilds every step
+//!   * laby-noreuse       — hand-hoisted program, runtime reuse OFF
+//!                          (rebuild per step, like §9.4's ablation)
+//!   * flink-sep / spark-sep — separate jobs rebuild per step by
 //!                          construction
 //!
 //! Paper result (log-log): ~3× speedup at the largest scale; negligible at
@@ -13,6 +20,7 @@
 use labyrinth::baselines::separate_jobs;
 use labyrinth::bench_harness::{Bencher, Table};
 use labyrinth::exec::ExecConfig;
+use labyrinth::opt::OptConfig;
 use labyrinth::programs;
 use labyrinth::workload::VisitCountWorkload;
 
@@ -24,10 +32,12 @@ fn main() {
     let days = 10;
     let bench = Bencher::from_env(1, 5);
     let mut table = Table::new(
-        "Fig 8: loop-invariant hash-join reuse vs data scale (4 workers)",
+        "Fig 8: loop-invariant hoisting + hash-join reuse vs data scale (4 workers)",
         "scale",
         vec![
             "labyrinth".into(),
+            "laby-hoist".into(),
+            "laby-noopt".into(),
             "laby-noreuse".into(),
             "flink-sep".into(),
             "spark-sep".into(),
@@ -47,10 +57,31 @@ fn main() {
         w.register(&prefix);
         let program = programs::visit_count_with_join(days as i64, &prefix);
         let graph = labyrinth::compile(&program).unwrap();
+        // The pass-driven path: the same workload with the invariant
+        // source written inside the loop, hoisted by the compiler.
+        let in_loop = programs::visit_count_with_join_in_loop(days as i64, &prefix);
+        let (hoisted_graph, report) =
+            labyrinth::compile_with(&in_loop, &OptConfig::default()).unwrap();
+        assert!(report.hoisted > 0, "hoisting pass must fire:\n{}", report.render());
+        let (raw_graph, _) = labyrinth::compile_with(&in_loop, &OptConfig::none()).unwrap();
 
         let reuse = bench.run(format!("labyrinth scale={scale}"), || {
             labyrinth::exec::run(
                 &graph,
+                &ExecConfig { workers: WORKERS, ..Default::default() },
+            )
+            .unwrap();
+        });
+        let hoist = bench.run(format!("laby-hoist scale={scale}"), || {
+            labyrinth::exec::run(
+                &hoisted_graph,
+                &ExecConfig { workers: WORKERS, ..Default::default() },
+            )
+            .unwrap();
+        });
+        let noopt = bench.run(format!("laby-noopt scale={scale}"), || {
+            labyrinth::exec::run(
+                &raw_graph,
                 &ExecConfig { workers: WORKERS, ..Default::default() },
             )
             .unwrap();
@@ -74,6 +105,8 @@ fn main() {
             format!("x{scale}"),
             vec![
                 Some(reuse.median()),
+                Some(hoist.median()),
+                Some(noopt.median()),
                 Some(noreuse.median()),
                 Some(flink.median()),
                 Some(spark.median()),
@@ -83,5 +116,8 @@ fn main() {
         labyrinth::workload::registry::global().clear_prefix(&prefix);
     }
     table.print();
-    println!("(paper: reuse ~3x at the largest scale, negligible at the smallest)");
+    println!(
+        "(paper: reuse ~3x at the largest scale; laby-hoist = compiler-hoisted in-loop \
+         program, expected to track the hand-hoisted labyrinth line)"
+    );
 }

@@ -384,6 +384,18 @@ fn eval(
             let res = crate::ops::run_once(&mut t, &slices);
             Binding::Cached(Arc::new(scatter(&res, w)))
         }
+        Rhs::Fused { input, stages } => {
+            // Produced only by `opt::fuse`; supported for completeness.
+            let parts = getb(env, input)?;
+            let stages = stages.clone();
+            Binding::Cached(Arc::new(par_map_partitions(&parts, move |p| {
+                let mut res = Vec::new();
+                for v in p {
+                    crate::ops::fused::apply_stages(&stages, v, &mut |x| res.push(x));
+                }
+                res
+            })))
+        }
         Rhs::Phi(_) => return Err(Error::Baseline("Φ in pre-SSA program".into())),
     })
 }

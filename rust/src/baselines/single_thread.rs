@@ -251,6 +251,16 @@ fn eval_rhs(
             let slices: Vec<&[Value]> = in_bags.iter().map(|b| b.as_slice()).collect();
             Binding::Bag(Arc::new(crate::ops::run_once(&mut t, &slices)))
         }
+        Rhs::Fused { input, stages } => {
+            // Only `opt::fuse` emits Fused, and the baselines interpret the
+            // pre-optimizer IR — but the semantics are well-defined, so
+            // support it anyway (differential tests may feed either form).
+            let mut res = Vec::new();
+            for v in bag(env, *input)?.iter() {
+                crate::ops::fused::apply_stages(stages, v, &mut |x| res.push(x));
+            }
+            Binding::Bag(Arc::new(res))
+        }
         Rhs::Phi(_) => {
             return Err(Error::Baseline(
                 "Φ in pre-SSA program — the single-threaded baseline interprets the \

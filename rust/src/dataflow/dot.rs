@@ -1,10 +1,35 @@
 //! Graphviz DOT export of logical dataflow graphs — mirrors Fig. 3b of the
 //! paper: basic blocks as dotted clusters, condition nodes colored,
-//! conditional edges dashed, Φ-nodes with inverted colors.
+//! conditional edges dashed, Φ-nodes with inverted colors. Optimizer
+//! results are visually distinct: nodes hoisted by `opt::hoist` sit in a
+//! nested "hoisted preamble" cluster inside their preamble block, and
+//! fused chains from `opt::fuse` are filled green with their stage count.
 
-use super::{DataflowGraph, Par};
+use super::{DataflowGraph, Node, Par};
 use crate::frontend::Rhs;
 use std::fmt::Write as _;
+
+fn node_attrs(n: &Node) -> Vec<String> {
+    let mut attrs = vec![format!("label=\"{}\\n{}\"", n.name, n.op.mnemonic())];
+    if matches!(n.op, Rhs::Phi(_)) {
+        attrs.push("style=filled".into());
+        attrs.push("fillcolor=black".into());
+        attrs.push("fontcolor=white".into());
+    } else if n.cond.is_some() {
+        attrs.push("style=filled".into());
+        attrs.push("fillcolor=orange".into());
+    } else if matches!(n.op, Rhs::Fused { .. }) {
+        attrs.push("style=filled".into());
+        attrs.push("fillcolor=palegreen".into());
+    } else if n.hoisted_from.is_some() {
+        attrs.push("style=filled".into());
+        attrs.push("fillcolor=lightblue".into());
+    }
+    if n.par == Par::All {
+        attrs.push("penwidth=2".into());
+    }
+    attrs
+}
 
 /// Render the dataflow graph as DOT.
 pub fn to_dot(g: &DataflowGraph) -> String {
@@ -22,21 +47,30 @@ pub fn to_dot(g: &DataflowGraph) -> String {
         }
         let _ = writeln!(s, "  subgraph cluster_bb{bi} {{");
         let _ = writeln!(s, "    label=\"bb{bi}\"; style=dotted;");
-        for &id in ids {
+        let (hoisted, resident): (Vec<&usize>, Vec<&usize>) =
+            ids.iter().partition(|&&id| g.nodes[id].hoisted_from.is_some());
+        for &id in resident {
             let n = &g.nodes[id];
-            let mut attrs = vec![format!("label=\"{}\\n{}\"", n.name, n.op.mnemonic())];
-            if matches!(n.op, Rhs::Phi(_)) {
-                attrs.push("style=filled".into());
-                attrs.push("fillcolor=black".into());
-                attrs.push("fontcolor=white".into());
-            } else if n.cond.is_some() {
-                attrs.push("style=filled".into());
-                attrs.push("fillcolor=orange".into());
+            let _ = writeln!(s, "    n{id} [{}];", node_attrs(n).join(", "));
+        }
+        if !hoisted.is_empty() {
+            // Nested cluster: the loop preamble region executed once per
+            // loop entry, before the loop's first step.
+            let _ = writeln!(s, "    subgraph cluster_bb{bi}_preamble {{");
+            let _ = writeln!(
+                s,
+                "      label=\"hoisted preamble\"; style=filled; color=lightgrey;"
+            );
+            for &id in hoisted {
+                let n = &g.nodes[id];
+                let mut attrs = node_attrs(n);
+                attrs.push(format!(
+                    "tooltip=\"hoisted from bb{}\"",
+                    n.hoisted_from.expect("partitioned on hoisted_from")
+                ));
+                let _ = writeln!(s, "      n{id} [{}];", attrs.join(", "));
             }
-            if n.par == Par::All {
-                attrs.push("penwidth=2".into());
-            }
-            let _ = writeln!(s, "    n{id} [{}];", attrs.join(", "));
+            let _ = writeln!(s, "    }}");
         }
         let _ = writeln!(s, "  }}");
     }
@@ -71,5 +105,34 @@ mod tests {
         assert!(dot.contains("style=dashed"), "{dot}");
         assert!(dot.contains("fillcolor=orange"), "{dot}");
         assert!(dot.contains("fillcolor=black"), "{dot}");
+    }
+
+    #[test]
+    fn hoisted_nodes_render_in_preamble_cluster() {
+        let g = crate::compile(
+            &parse_and_lower(
+                "d = 1; while (d <= 3) { v = bag(1, 2).map(|x| x * 10); collect(v, \"v\"); d = d + 1; }",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let dot = super::to_dot(&g);
+        assert!(dot.contains("hoisted preamble"), "{dot}");
+        assert!(dot.contains("fillcolor=lightblue"), "{dot}");
+        assert!(dot.contains("hoisted from bb"), "{dot}");
+    }
+
+    #[test]
+    fn fused_chains_render_green() {
+        let g = crate::compile(
+            &parse_and_lower(
+                "a = bag(1, 2, 3); b = a.map(|x| x + 1).filter(|x| x > 1).map(|x| x * 2); collect(b, \"b\");",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let dot = super::to_dot(&g);
+        assert!(dot.contains("fillcolor=palegreen"), "{dot}");
+        assert!(dot.contains("fused[3]"), "{dot}");
     }
 }

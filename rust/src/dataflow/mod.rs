@@ -87,6 +87,10 @@ pub struct Node {
     pub cond: Option<CondSpec>,
     /// Whether this node's output holds a lifted scalar (singleton bag).
     pub singleton: bool,
+    /// The block this node lived in before `opt::hoist` moved it into a
+    /// loop preamble (`None` = never hoisted). Kept for diagnostics and
+    /// the DOT rendering of hoisted preambles.
+    pub hoisted_from: Option<BlockId>,
 }
 
 /// The compiled logical dataflow job.
@@ -103,6 +107,10 @@ pub struct DataflowGraph {
     pub entry_chain: Vec<BlockId>,
     /// Human-readable listing of the source SSA (diagnostics).
     pub ssa_listing: String,
+    /// Optimizer summary counters (`opt.*` keys, filled by
+    /// `opt::optimize`); the engine copies them into the run's metrics so
+    /// per-pass effects are visible next to runtime counters.
+    pub opt_summary: Vec<(String, u64)>,
 }
 
 impl DataflowGraph {
@@ -165,6 +173,7 @@ fn input_requirements(op: &Rhs) -> Vec<Req> {
         | Rhs::Map { .. }
         | Rhs::Filter { .. }
         | Rhs::FlatMap { .. }
+        | Rhs::Fused { .. }
         | Rhs::Reduce { .. }
         | Rhs::Count { .. } => vec![Any],
         Rhs::Const(_) | Rhs::BagLit(_) | Rhs::NamedSource(_) => vec![],
@@ -202,6 +211,10 @@ fn singleton_out(op: &Rhs, input_singleton: &[bool]) -> bool {
         Rhs::Reduce { .. } | Rhs::Count { .. } => true,
         Rhs::WriteFile { .. } | Rhs::Collect { .. } => true, // Unit singleton
         Rhs::Map { .. } | Rhs::Filter { .. } => input_singleton[0],
+        // A fused chain without flatMap stages never grows the bag.
+        Rhs::Fused { stages, .. } => {
+            stages.iter().all(|s| !s.expands()) && input_singleton[0]
+        }
         Rhs::Cross { .. } => input_singleton.iter().all(|&s| s),
         Rhs::Phi(_) => input_singleton.iter().all(|&s| s),
         _ => false,
@@ -233,6 +246,7 @@ pub fn build(ssa: &SsaProgram) -> Result<DataflowGraph> {
                 inputs: Vec::new(),
                 cond: None,
                 singleton: false,
+                hoisted_from: None,
             });
         }
     }
@@ -336,6 +350,7 @@ pub fn build(ssa: &SsaProgram) -> Result<DataflowGraph> {
         cfg,
         entry_chain,
         ssa_listing: ssa.listing(),
+        opt_summary: Vec::new(),
     })
 }
 
@@ -344,8 +359,12 @@ mod tests {
     use super::*;
     use crate::frontend::parse_and_lower;
 
+    // These tests assert the RAW translation of §5.3; the optimizer may
+    // legally restructure (hoist/fuse), so build without it.
     fn graph(src: &str) -> DataflowGraph {
-        crate::compile(&parse_and_lower(src).unwrap()).unwrap()
+        crate::compile_with(&parse_and_lower(src).unwrap(), &crate::opt::OptConfig::none())
+            .unwrap()
+            .0
     }
 
     #[test]

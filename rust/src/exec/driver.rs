@@ -33,6 +33,12 @@ pub fn run_plan(plan: Arc<ExecPlan>, cfg: &ExecConfig) -> Result<RunOutput> {
     };
 
     let metrics = Arc::new(Metrics::new());
+    // Surface the compile-time optimizer summary next to the runtime
+    // counters (`opt.*` keys from `opt::optimize`).
+    for (k, v) in &plan.graph.opt_summary {
+        metrics.add(k, *v);
+    }
+    metrics.add("exec.hoisted_nodes", plan.hoisted.iter().filter(|&&h| h).count() as u64);
     let start = Instant::now();
 
     let mut worker_txs: Vec<Sender<WorkerMsg>> = Vec::with_capacity(plan.workers);

@@ -581,6 +581,15 @@ impl Instance {
         let is_phi = self.is_phi;
         for i in 0..self.bufs.len() {
             let ie = &env.plan.in_edges[self.node][i];
+            // Invariant edge (producer outside every loop — e.g. a node
+            // hoisted into a loop preamble): the single bag it carries is
+            // never superseded, so the §6.3.3 retain-scan is pure
+            // overhead. Pin the buffer; `maybe_done` reclaims it at the
+            // end of the run.
+            if ie.invariant && !self.bufs[i].is_empty() {
+                env.counters.invariant_gc_skips.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
             let src_block = ie.src_block;
             let supersede = &ie.supersede_blocks;
             let path = env.path;

@@ -43,6 +43,12 @@ pub struct InEdgeMeta {
     /// (consumer-side GC, §6.3.3): the producer's block, plus sibling
     /// input blocks when this node is a Φ.
     pub supersede_blocks: Vec<BlockId>,
+    /// The producer's block is outside every loop (and this consumer is
+    /// not a Φ): at most ONE bag ever travels this edge, it is never
+    /// superseded, and the consumer pins its buffer until the path is
+    /// final. `opt::hoist` manufactures these edges; the engine skips the
+    /// §6.3.3 GC scan for them (see `Instance::gc_inputs`).
+    pub invariant: bool,
 }
 
 /// The physical plan.
@@ -61,6 +67,10 @@ pub struct ExecPlan {
     pub total_instances: usize,
     /// Per block: total instances of nodes in that block (barrier mode).
     pub insts_per_block: Vec<usize>,
+    /// Per node: was it moved into a loop preamble by `opt::hoist`?
+    /// (Scheduled before the loop's first step via its preamble block's
+    /// position in the execution path.)
+    pub hoisted: Vec<bool>,
 }
 
 impl ExecPlan {
@@ -75,6 +85,13 @@ impl ExecPlan {
                 Par::All => workers,
             })
             .collect();
+
+        // Loop depth per block: an edge whose producer block sits outside
+        // every loop carries at most one bag for the whole run.
+        let loop_depth = {
+            let dt = crate::cfg::dom::dominators(&graph.cfg);
+            crate::cfg::loops::find_loops(&graph.cfg, &dt).depth
+        };
 
         let mut out_edges: Vec<Vec<OutEdgeMeta>> = vec![Vec::new(); graph.nodes.len()];
         let mut in_edges: Vec<Vec<InEdgeMeta>> = vec![Vec::new(); graph.nodes.len()];
@@ -111,6 +128,7 @@ impl ExecPlan {
                     route: inp.route,
                     expected_closes,
                     supersede_blocks: supersede,
+                    invariant: loop_depth[inp.src_block] == 0 && !is_phi,
                 });
             }
         }
@@ -121,6 +139,7 @@ impl ExecPlan {
             insts_per_block[n.block] += num_insts[n.id];
         }
 
+        let hoisted = graph.nodes.iter().map(|n| n.hoisted_from.is_some()).collect();
         ExecPlan {
             graph,
             workers,
@@ -129,6 +148,7 @@ impl ExecPlan {
             in_edges,
             total_instances,
             insts_per_block,
+            hoisted,
         }
     }
 
@@ -216,6 +236,26 @@ mod tests {
             }
         }
         assert_eq!(phi_edges, 2);
+    }
+
+    #[test]
+    fn hoisted_plan_marks_invariant_edges() {
+        // compile() runs the optimizer: the invariant bag+map chain is
+        // hoisted into the loop preamble, so the collect inside the loop
+        // reads over a pinned invariant edge.
+        let p = plan(
+            "d = 1; while (d <= 3) { v = bag(1, 2).map(|x| x * 10); collect(v, \"v\"); d = d + 1; }",
+            2,
+        );
+        assert!(p.hoisted.iter().any(|&h| h), "optimizer hoisted the invariant chain");
+        let g = &p.graph;
+        let col = g.nodes.iter().find(|n| matches!(n.op, Rhs::Collect { .. })).unwrap();
+        assert!(p.in_edges[col.id][0].invariant, "collect reads a preamble bag");
+        // Φ edges are never invariant (their buffers turn over per step).
+        let phi = g.nodes.iter().find(|n| matches!(n.op, Rhs::Phi(_))).unwrap();
+        for e in &p.in_edges[phi.id] {
+            assert!(!e.invariant);
+        }
     }
 
     #[test]

@@ -30,6 +30,8 @@ pub struct EngineCounters {
     pub conditional_sends: Arc<AtomicU64>,
     /// Retained bags discarded (§6.3.4).
     pub retained_dropped: Arc<AtomicU64>,
+    /// GC scans skipped on pinned invariant edges (loop preamble bags).
+    pub invariant_gc_skips: Arc<AtomicU64>,
 }
 
 impl EngineCounters {
@@ -44,6 +46,7 @@ impl EngineCounters {
             state_dropped: m.counter("coord.state_dropped"),
             conditional_sends: m.counter("coord.conditional_sends"),
             retained_dropped: m.counter("coord.retained_dropped"),
+            invariant_gc_skips: m.counter("coord.invariant_gc_skips"),
         }
     }
 }

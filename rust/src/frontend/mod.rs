@@ -103,6 +103,51 @@ impl fmt::Debug for UdfN {
     }
 }
 
+/// One stage of a fused element-wise chain. Produced only by the
+/// `opt::fuse` pass (never by the frontends): a maximal pipeline of
+/// map/filter/flatMap operators collapsed into a single physical operator
+/// to cut per-element dispatch and per-bag coordination.
+#[derive(Clone)]
+pub enum FusedStage {
+    /// One-to-one element transform.
+    Map(Udf1),
+    /// Keep elements whose predicate returns `Bool(true)`.
+    Filter(Udf1),
+    /// One-to-many element transform.
+    FlatMap(UdfN),
+}
+
+impl FusedStage {
+    /// Debug name of the stage's UDF.
+    pub fn name(&self) -> &str {
+        match self {
+            FusedStage::Map(u) | FusedStage::Filter(u) => &u.name,
+            FusedStage::FlatMap(u) => &u.name,
+        }
+    }
+
+    /// Short mnemonic (`map<f>` / `filter<p>` / `flatMap<g>`).
+    pub fn mnemonic(&self) -> String {
+        match self {
+            FusedStage::Map(u) => format!("map<{}>", u.name),
+            FusedStage::Filter(u) => format!("filter<{}>", u.name),
+            FusedStage::FlatMap(u) => format!("flatMap<{}>", u.name),
+        }
+    }
+
+    /// A flatMap stage can expand one element into many; map/filter never
+    /// grow the bag (used by singleton inference).
+    pub fn expands(&self) -> bool {
+        matches!(self, FusedStage::FlatMap(_))
+    }
+}
+
+impl fmt::Debug for FusedStage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.mnemonic())
+    }
+}
+
 /// Coarse IR types: parallel bags vs (to-be-lifted) scalars (§5.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Ty {
@@ -248,6 +293,15 @@ pub enum Rhs {
         /// Bridge description.
         spec: crate::runtime::XlaCallSpec,
     },
+    /// A fused chain of element-wise stages — introduced by the `opt::fuse`
+    /// pass only (the frontends never emit it). Elements of `input` are
+    /// pushed through every stage in order inside one physical operator.
+    Fused {
+        /// Input bag (the first stage's input).
+        input: VarId,
+        /// Pipeline stages, in application order.
+        stages: Vec<FusedStage>,
+    },
     /// SSA Φ-function — introduced by the SSA pass only; each argument is
     /// (defining block of the argument at Φ-insertion time, variable).
     Phi(Vec<(BlockId, VarId)>),
@@ -268,6 +322,7 @@ impl Rhs {
             | Rhs::Reduce { input, .. }
             | Rhs::Count { input }
             | Rhs::Distinct { input }
+            | Rhs::Fused { input, .. }
             | Rhs::ScalarUn { input, .. } => vec![*input],
             Rhs::Join { left, right }
             | Rhs::Union { left, right }
@@ -297,6 +352,7 @@ impl Rhs {
             | Rhs::Reduce { input, .. }
             | Rhs::Count { input }
             | Rhs::Distinct { input }
+            | Rhs::Fused { input, .. }
             | Rhs::ScalarUn { input, .. } => *input = f(*input),
             Rhs::Join { left, right }
             | Rhs::Union { left, right }
@@ -342,6 +398,11 @@ impl Rhs {
             Rhs::ScalarBin { udf, .. } => format!("scalar<{}>", udf.name),
             Rhs::Copy(_) => "copy".into(),
             Rhs::XlaCall { spec, .. } => format!("xla<{}>", spec.artifact),
+            Rhs::Fused { stages, .. } => format!(
+                "fused[{}]<{}>",
+                stages.len(),
+                stages.iter().map(|s| s.name().to_string()).collect::<Vec<_>>().join(";")
+            ),
             Rhs::Phi(_) => "Φ".into(),
         }
     }

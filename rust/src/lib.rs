@@ -23,6 +23,11 @@
 //!        ▼
 //!  non-bag lifting (§5.2)  ──▶  logical dataflow graph (§5.3)
 //!        ▼
+//!  opt:: plan optimizer — pass manager over the dataflow graph
+//!        (loop-invariant hoisting into loop preambles, element-wise
+//!        operator fusion, dead-operator elimination; §7's
+//!        cross-iteration optimizations as compiler passes)
+//!        ▼
 //!  executors:
 //!    · exec::            Labyrinth engine — single cyclic job, bag-ID
 //!                        coordination (§6), pipelined or barrier mode
@@ -50,6 +55,7 @@ pub mod error;
 pub mod exec;
 pub mod frontend;
 pub mod metrics;
+pub mod opt;
 pub mod ops;
 pub mod programs;
 pub mod runtime;
@@ -71,16 +77,31 @@ pub mod prelude {
     pub use crate::{compile, compile_source};
 }
 
-/// Compile an IR [`frontend::Program`] all the way to a logical
-/// [`dataflow::DataflowGraph`] (CFG → SSA → lifting → dataflow).
+/// Compile an IR [`frontend::Program`] all the way to an optimized
+/// logical [`dataflow::DataflowGraph`]
+/// (CFG → SSA → lifting → dataflow → [`opt::optimize`] with the default
+/// pass pipeline). Use [`compile_with`] to control the optimizer or read
+/// its explain report.
 pub fn compile(program: &frontend::Program) -> Result<dataflow::DataflowGraph> {
+    Ok(compile_with(program, &opt::OptConfig::default())?.0)
+}
+
+/// Compile with an explicit optimizer configuration; returns the graph
+/// and the optimizer's [`opt::ExplainReport`]
+/// (`OptConfig::none()` yields the raw §5.3 translation).
+pub fn compile_with(
+    program: &frontend::Program,
+    opt_cfg: &opt::OptConfig,
+) -> Result<(dataflow::DataflowGraph, opt::ExplainReport)> {
     let cfg = cfg::Cfg::from_program(program)?;
     let ssa = ssa::construct(&cfg)?;
     let lifted = ssa::lift::lift(ssa)?;
-    dataflow::build(&lifted)
+    let mut graph = dataflow::build(&lifted)?;
+    let report = opt::optimize(&mut graph, opt_cfg)?;
+    Ok((graph, report))
 }
 
-/// Compile LabyLang source text to a logical dataflow graph.
+/// Compile LabyLang source text to an optimized logical dataflow graph.
 pub fn compile_source(src: &str) -> Result<dataflow::DataflowGraph> {
     let program = frontend::parse_and_lower(src)?;
     compile(&program)

@@ -3,8 +3,9 @@
 //! ```text
 //! labyrinth run <program.laby> [--workers N] [--mode pipelined|barrier]
 //!               [--executor labyrinth|spark|flink|single] [--no-reuse]
+//!               [--no-opt] [--no-hoist] [--no-fuse] [--no-dce] [--explain]
 //!               [--io-dir DIR] [--config FILE] [--sched] [--metrics]
-//! labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot]
+//! labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]
 //! labyrinth generate visitcount --days N --visits M --pages P --out DIR
 //! labyrinth config --dump [--config FILE]
 //! ```
@@ -39,7 +40,11 @@ const VALUE_OPTS: &[&str] = &[
     "--workers", "--mode", "--executor", "--io-dir", "--config", "--dump", "--days",
     "--visits", "--pages", "--out", "--batch", "--scale",
 ];
-const FLAG_OPTS: &[&str] = &["--no-reuse", "--metrics", "--sched", "--dump-plan"];
+const FLAG_OPTS: &[&str] = &[
+    "--no-reuse", "--metrics", "--sched", "--dump-plan",
+    // Optimizer toggles (config keys opt.hoist / opt.fuse / opt.dce).
+    "--no-opt", "--no-hoist", "--no-fuse", "--no-dce", "--explain",
+];
 
 fn parse_opts(args: &[String]) -> Result<Opts> {
     let mut positional = Vec::new();
@@ -119,11 +124,32 @@ fn print_usage() {
          USAGE:\n\
          \x20 labyrinth run <program.laby> [--workers N] [--mode pipelined|barrier]\n\
          \x20            [--executor labyrinth|spark|flink|single] [--no-reuse]\n\
+         \x20            [--no-opt] [--no-hoist] [--no-fuse] [--no-dce] [--explain]\n\
          \x20            [--io-dir DIR] [--config FILE] [--sched] [--metrics]\n\
-         \x20 labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot]\n\
+         \x20 labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]\n\
          \x20 labyrinth generate visitcount --days N [--visits M] [--pages P] --out DIR\n\
          \x20 labyrinth config --dump [--config FILE]"
     );
+}
+
+/// Optimizer configuration: config file `opt.*` keys overridden by CLI
+/// flags (`--no-opt` disables every pass; `--no-hoist` / `--no-fuse` /
+/// `--no-dce` disable one each).
+fn opt_config(opts: &Opts, cfg: &Config) -> Result<labyrinth::opt::OptConfig> {
+    let mut ocfg = labyrinth::opt::OptConfig::from_config(cfg)?;
+    if opts.has("--no-opt") {
+        ocfg = labyrinth::opt::OptConfig::none();
+    }
+    if opts.has("--no-hoist") {
+        ocfg.hoist = false;
+    }
+    if opts.has("--no-fuse") {
+        ocfg.fuse = false;
+    }
+    if opts.has("--no-dce") {
+        ocfg.dce = false;
+    }
+    Ok(ocfg)
 }
 
 fn read_program(opts: &Opts) -> Result<labyrinth::frontend::Program> {
@@ -152,7 +178,10 @@ fn cmd_run(opts: &Opts) -> Result<()> {
                 "barrier" => ExecMode::Barrier,
                 _ => ExecMode::Pipelined,
             };
-            let graph = labyrinth::compile(&program)?;
+            let (graph, explain) = labyrinth::compile_with(&program, &opt_config(opts, &cfg)?)?;
+            if opts.has("--explain") {
+                print!("{}", explain.render());
+            }
             let run_cfg = ExecConfig {
                 workers,
                 mode,
@@ -223,6 +252,7 @@ fn report_collected<'a>(collected: impl Iterator<Item = (&'a str, &'a [labyrinth
 }
 
 fn cmd_compile(opts: &Opts) -> Result<()> {
+    let cfg = load_config(opts)?;
     let program = read_program(opts)?;
     let dump = opts.get("--dump").unwrap_or("dataflow");
     match dump {
@@ -232,8 +262,15 @@ fn cmd_compile(opts: &Opts) -> Result<()> {
             let ssa = labyrinth::ssa::construct(&cfg)?;
             print!("{}", ssa.listing());
         }
+        "opt" => {
+            let (_, explain) = labyrinth::compile_with(&program, &opt_config(opts, &cfg)?)?;
+            print!("{}", explain.render());
+        }
         "dataflow" => {
-            let graph = labyrinth::compile(&program)?;
+            let (graph, explain) = labyrinth::compile_with(&program, &opt_config(opts, &cfg)?)?;
+            if opts.has("--explain") {
+                print!("{}", explain.render());
+            }
             println!("-- SSA --\n{}", graph.ssa_listing);
             println!("-- dataflow: {} nodes --", graph.num_nodes());
             for n in &graph.nodes {
@@ -261,12 +298,12 @@ fn cmd_compile(opts: &Opts) -> Result<()> {
             }
         }
         "dot" => {
-            let graph = labyrinth::compile(&program)?;
+            let (graph, _) = labyrinth::compile_with(&program, &opt_config(opts, &cfg)?)?;
             print!("{}", labyrinth::dataflow::dot::to_dot(&graph));
         }
         other => {
             return Err(labyrinth::Error::Config(format!(
-                "unknown dump '{other}' (ir|ssa|dataflow|dot)"
+                "unknown dump '{other}' (ir|ssa|dataflow|dot|opt)"
             )))
         }
     }

@@ -1,0 +1,111 @@
+//! The fused element-wise operator produced by `opt::fuse`: a maximal
+//! linear chain of map/filter/flatMap stages executed inside one physical
+//! operator instance. Each input element runs through the whole pipeline
+//! before the next is touched, so fusing a k-stage chain removes k-1
+//! per-element dispatches, k-1 intermediate bags per step, and all the
+//! coordination messages (closes, conditional-output watchers) the
+//! intermediate nodes would have cost.
+
+use super::{Collector, Transformation};
+use crate::frontend::FusedStage;
+use crate::value::Value;
+
+/// Run `v` through `stages[idx..]`, handing survivors to `emit`.
+fn run_stages(stages: &[FusedStage], idx: usize, v: &Value, emit: &mut dyn FnMut(Value)) {
+    let Some(stage) = stages.get(idx) else {
+        emit(v.clone());
+        return;
+    };
+    match stage {
+        FusedStage::Map(udf) => run_stages(stages, idx + 1, &udf.call(v), emit),
+        FusedStage::Filter(udf) => {
+            if udf.call(v).as_bool() {
+                run_stages(stages, idx + 1, v, emit);
+            }
+        }
+        FusedStage::FlatMap(udf) => {
+            for x in udf.call(v) {
+                run_stages(stages, idx + 1, &x, emit);
+            }
+        }
+    }
+}
+
+/// Apply a full stage pipeline to one element (shared with the baseline
+/// interpreters so every executor agrees on fused semantics).
+pub fn apply_stages(stages: &[FusedStage], v: &Value, emit: &mut dyn FnMut(Value)) {
+    run_stages(stages, 0, v, emit);
+}
+
+/// Fused chain transformation (fully pipelined, stateless).
+pub struct FusedT {
+    stages: Vec<FusedStage>,
+}
+
+impl FusedT {
+    /// Create from the chain's stages, in application order.
+    pub fn new(stages: Vec<FusedStage>) -> FusedT {
+        FusedT { stages }
+    }
+}
+
+impl Transformation for FusedT {
+    fn open_out_bag(&mut self) {}
+    fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
+        run_stages(&self.stages, 0, v, &mut |x| out.emit(x));
+    }
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{Udf1, UdfN};
+    use crate::ops::run_once;
+
+    fn i(v: i64) -> Value {
+        Value::I64(v)
+    }
+
+    fn chain() -> Vec<FusedStage> {
+        vec![
+            FusedStage::Map(Udf1::new("x+1", |v: &Value| i(v.as_i64() + 1))),
+            FusedStage::Filter(Udf1::new("even", |v: &Value| Value::Bool(v.as_i64() % 2 == 0))),
+            FusedStage::Map(Udf1::new("x*10", |v: &Value| i(v.as_i64() * 10))),
+        ]
+    }
+
+    #[test]
+    fn fused_chain_matches_sequential_application() {
+        let mut t = FusedT::new(chain());
+        let out = run_once(&mut t, &[&[i(1), i(2), i(3), i(4)]]);
+        // +1 -> [2,3,4,5]; keep even -> [2,4]; *10 -> [20,40].
+        assert_eq!(out, vec![i(20), i(40)]);
+    }
+
+    #[test]
+    fn flat_map_stage_expands_through_later_stages() {
+        let stages = vec![
+            FusedStage::FlatMap(UdfN::new("dup", |v: &Value| vec![v.clone(), v.clone()])),
+            FusedStage::Map(Udf1::new("x+1", |v: &Value| i(v.as_i64() + 1))),
+        ];
+        let mut t = FusedT::new(stages);
+        let out = run_once(&mut t, &[&[i(7)]]);
+        assert_eq!(out, vec![i(8), i(8)]);
+    }
+
+    #[test]
+    fn empty_stage_list_is_identity() {
+        let mut t = FusedT::new(Vec::new());
+        let out = run_once(&mut t, &[&[i(5)]]);
+        assert_eq!(out, vec![i(5)]);
+    }
+
+    #[test]
+    fn apply_stages_helper_agrees_with_operator() {
+        let mut got = Vec::new();
+        apply_stages(&chain(), &i(3), &mut |x| got.push(x));
+        assert_eq!(got, vec![i(40)]);
+    }
+}

@@ -20,6 +20,7 @@
 
 pub mod agg;
 pub mod basic;
+pub mod fused;
 pub mod io;
 pub mod join;
 pub mod xla;
@@ -116,6 +117,7 @@ pub fn make(op: &Rhs, ctx: &MakeCtx) -> Result<Box<dyn Transformation>> {
         Rhs::Union { .. } => Box::new(basic::UnionT),
         Rhs::Cross { .. } => Box::new(basic::CrossT::new()),
         Rhs::Phi(_) => Box::new(basic::PhiT),
+        Rhs::Fused { stages, .. } => Box::new(fused::FusedT::new(stages.clone())),
         Rhs::XlaCall { spec, .. } => Box::new(xla::XlaCallT::new(spec.clone())),
         Rhs::Const(_) | Rhs::Copy(_) | Rhs::ScalarUn { .. } | Rhs::ScalarBin { .. } => {
             return Err(crate::Error::Dataflow(format!(
@@ -180,6 +182,12 @@ mod tests {
             Rhs::Union { left: 0, right: 1 },
             Rhs::Cross { left: 0, right: 1 },
             Rhs::Phi(vec![(0, 0), (1, 1)]),
+            Rhs::Fused {
+                input: 0,
+                stages: vec![crate::frontend::FusedStage::Map(Udf1::new("id", |v: &Value| {
+                    v.clone()
+                }))],
+            },
         ];
         for op in &ops {
             assert!(make(op, &ctx).is_ok(), "{}", op.mnemonic());

@@ -1,0 +1,251 @@
+//! Shared plan analysis for the optimizer passes: loop structure (from
+//! `cfg::loops`), per-node consumer lists, per-node loop-invariance (a
+//! fixpoint over input edges), and output liveness (reachability to a
+//! sink / condition node / Φ).
+//!
+//! Recomputed by the pass manager before every pass run — passes mutate
+//! the graph (moving, merging, and removing nodes), so ids and blocks are
+//! only valid for the graph snapshot the analysis was computed from.
+
+use crate::cfg::dom::{self, DomTree};
+use crate::cfg::loops::{self, LoopInfo, NaturalLoop};
+use crate::dataflow::{DataflowGraph, Node, NodeId};
+use crate::frontend::{BlockId, Rhs};
+
+/// Analysis results shared by all optimizer passes.
+pub struct PlanAnalysis {
+    /// Dominator tree of the CFG.
+    pub dom: DomTree,
+    /// Natural loops and per-block nesting depth.
+    pub loops: LoopInfo,
+    /// `consumers[n]` = downstream `(consumer, input index)` pairs
+    /// (the inverse of `Node::inputs`, precomputed once).
+    pub consumers: Vec<Vec<(NodeId, usize)>>,
+    /// `live[n]`: the node's output reaches a sink (`collect`/`writeFile`),
+    /// a condition node, or a Φ. Dead nodes compute bags nobody reads.
+    pub live: Vec<bool>,
+}
+
+/// Is this node a liveness root? Sinks and side effects, condition nodes
+/// (they drive control flow), and Φs (they carry loop state).
+pub fn is_root(n: &Node) -> bool {
+    n.cond.is_some()
+        || matches!(n.op, Rhs::Collect { .. } | Rhs::WriteFile { .. } | Rhs::Phi(_))
+}
+
+/// Can this operation be moved out of a loop when its inputs are
+/// invariant? Pure bag transformations only: sinks (`collect`,
+/// `writeFile`) execute per iteration by definition, Φ/condition nodes
+/// anchor the coordination protocol, `reduce` errors on empty input and
+/// `readFile` touches the filesystem — hoisting would *speculate* those
+/// even when the loop runs zero iterations.
+///
+/// **Deliberate speculation contract:** `NamedSource` and `XlaCall` ARE
+/// hoistable even though a hoisted instance executes once per loop
+/// *entry* — including entries where the loop then runs zero iterations.
+/// This mirrors the paper's Flink setting, where a job's source operators
+/// are materialized at job launch regardless of the control flow actually
+/// taken, and it is what makes the Fig. 8 pass-driven hoisting fire. The
+/// visible difference: a zero-trip loop over an *unregistered* source
+/// name panics under the default optimizer where the raw translation
+/// would not (`--no-hoist` / `opt.hoist = off` restores lazy behavior).
+/// UDFs are likewise assumed total. See ROADMAP "Cost model for hoisting".
+pub fn is_hoistable_op(op: &Rhs) -> bool {
+    matches!(
+        op,
+        Rhs::BagLit(_)
+            | Rhs::NamedSource(_)
+            | Rhs::Map { .. }
+            | Rhs::Filter { .. }
+            | Rhs::FlatMap { .. }
+            | Rhs::Fused { .. }
+            | Rhs::Join { .. }
+            | Rhs::ReduceByKey { .. }
+            | Rhs::Count { .. }
+            | Rhs::Distinct { .. }
+            | Rhs::Union { .. }
+            | Rhs::Cross { .. }
+            | Rhs::XlaCall { .. }
+    )
+}
+
+impl PlanAnalysis {
+    /// Compute the analysis for the current graph.
+    pub fn compute(g: &DataflowGraph) -> PlanAnalysis {
+        let dt = dom::dominators(&g.cfg);
+        let li = loops::find_loops(&g.cfg, &dt);
+
+        let mut consumers: Vec<Vec<(NodeId, usize)>> = vec![Vec::new(); g.nodes.len()];
+        for n in &g.nodes {
+            for (i, inp) in n.inputs.iter().enumerate() {
+                consumers[inp.src].push((n.id, i));
+            }
+        }
+
+        // Liveness: backward closure from the roots through input edges.
+        let mut live = vec![false; g.nodes.len()];
+        let mut work: Vec<NodeId> = Vec::new();
+        for n in &g.nodes {
+            if is_root(n) {
+                live[n.id] = true;
+                work.push(n.id);
+            }
+        }
+        while let Some(v) = work.pop() {
+            for inp in &g.nodes[v].inputs {
+                if !live[inp.src] {
+                    live[inp.src] = true;
+                    work.push(inp.src);
+                }
+            }
+        }
+
+        PlanAnalysis { dom: dt, loops: li, consumers, live }
+    }
+
+    /// The loop's *preamble anchor*: the unique predecessor of the header
+    /// outside the loop body. Hoisted nodes are moved into this block, so
+    /// they compute exactly once per loop *entry* (once per enclosing-loop
+    /// iteration when loops nest). `None` when the entry edge is not
+    /// unique — such loops are skipped.
+    pub fn preheader(&self, g: &DataflowGraph, l: &NaturalLoop) -> Option<BlockId> {
+        let outside: Vec<BlockId> = g.cfg.preds[l.header]
+            .iter()
+            .copied()
+            .filter(|&p| l.body.binary_search(&p).is_err())
+            .collect();
+        match outside.as_slice() {
+            [p] => Some(*p),
+            _ => None,
+        }
+    }
+
+    /// Nodes of loop `l` that are invariant *and* safely hoistable:
+    /// a fixpoint over input edges starting from nodes all of whose inputs
+    /// are defined outside the loop body. Excludes Φ/condition/sink nodes
+    /// (see [`is_hoistable_op`]), nodes that feed a Φ directly (the
+    /// coordination protocol requires Φ inputs to keep their defining
+    /// blocks — SSA guarantees them pairwise distinct), and nodes in
+    /// blocks that do NOT dominate the latch: an if-guarded block inside
+    /// the loop may never execute, and hoisting would speculate its
+    /// operators (a guarded `source(..)` of an unregistered name must
+    /// keep panicking only when the guard is taken).
+    pub fn invariant_hoistable(&self, g: &DataflowGraph, l: &NaturalLoop) -> Vec<NodeId> {
+        let in_body = |b: BlockId| l.body.binary_search(&b).is_ok();
+        let candidate = |n: &Node| -> bool {
+            in_body(n.block)
+                && self.dom.dominates(n.block, l.latch)
+                && n.cond.is_none()
+                && is_hoistable_op(&n.op)
+                && self.consumers[n.id]
+                    .iter()
+                    .all(|&(c, _)| !matches!(g.nodes[c].op, Rhs::Phi(_)))
+        };
+        let mut invariant = vec![false; g.nodes.len()];
+        loop {
+            let mut changed = false;
+            for n in &g.nodes {
+                if invariant[n.id] || !candidate(n) {
+                    continue;
+                }
+                let ok = n
+                    .inputs
+                    .iter()
+                    .all(|i| !in_body(g.nodes[i.src].block) || invariant[i.src]);
+                if ok {
+                    invariant[n.id] = true;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        (0..g.nodes.len()).filter(|&i| invariant[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_lower;
+    use crate::opt::OptConfig;
+
+    fn raw_graph(src: &str) -> DataflowGraph {
+        crate::compile_with(&parse_and_lower(src).unwrap(), &OptConfig::none())
+            .unwrap()
+            .0
+    }
+
+    #[test]
+    fn consumers_match_graph_inverse() {
+        let g = raw_graph("a = bag(1, 2); b = a.map(|x| x + 1); collect(b, \"b\");");
+        let a = PlanAnalysis::compute(&g);
+        for n in &g.nodes {
+            assert_eq!(a.consumers[n.id], g.consumers(n.id), "{}", n.name);
+        }
+    }
+
+    #[test]
+    fn everything_reaching_collect_is_live() {
+        let g = raw_graph("a = bag(1, 2); b = a.map(|x| x + 1); collect(b, \"b\");");
+        let a = PlanAnalysis::compute(&g);
+        assert!(a.live.iter().all(|&l| l), "straightline collect chain is fully live");
+    }
+
+    #[test]
+    fn loop_invariant_map_found_with_preheader() {
+        // `attrs`-in-loop pattern: the source and its keying map depend on
+        // nothing loop-varying — both are invariant; the join is not (its
+        // probe side varies with d).
+        let g = raw_graph(
+            r#"
+            d = 1;
+            while (d <= 3) {
+                attrs = source("x").map(|v| pair(v, v));
+                probe = bag(1, 2).map(|v| pair(v + d, d));
+                j = probe.join(attrs);
+                collect(j, "j");
+                d = d + 1;
+            }
+            "#,
+        );
+        let a = PlanAnalysis::compute(&g);
+        assert_eq!(a.loops.loops.len(), 1);
+        let l = &a.loops.loops[0];
+        assert!(a.preheader(&g, l).is_some());
+        let inv = a.invariant_hoistable(&g, l);
+        let names: Vec<&str> = inv.iter().map(|&i| g.nodes[i].name.as_str()).collect();
+        assert!(
+            inv.iter().any(|&i| matches!(g.nodes[i].op, Rhs::NamedSource(_))),
+            "source is invariant: {names:?}"
+        );
+        // The keying map over the source is invariant too.
+        assert!(
+            inv.iter().any(|&i| matches!(g.nodes[i].op, Rhs::Map { .. })
+                && g.nodes[i].inputs.iter().all(|e| inv.contains(&e.src))),
+            "map over source is invariant: {names:?}"
+        );
+        // The join depends on the loop-varying probe side.
+        for &i in &inv {
+            assert!(!matches!(g.nodes[i].op, Rhs::Join { .. }), "join must not be invariant");
+        }
+    }
+
+    #[test]
+    fn phi_fed_nodes_are_not_hoistable() {
+        // `y = c` makes the bag literal's map chain feed the loop Φ.
+        let g = raw_graph(
+            "y = bag(); d = 1; while (d <= 3) { c = bag(1, 2).map(|x| pair(x, 1)); y = c; d = d + 1; } collect(y, \"y\");",
+        );
+        let a = PlanAnalysis::compute(&g);
+        let l = &a.loops.loops[0];
+        let inv = a.invariant_hoistable(&g, l);
+        for &i in &inv {
+            let feeds_phi = a.consumers[i]
+                .iter()
+                .any(|&(c, _)| matches!(g.nodes[c].op, Rhs::Phi(_)));
+            assert!(!feeds_phi, "{} feeds a Φ and must stay", g.nodes[i].name);
+        }
+    }
+}

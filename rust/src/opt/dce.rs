@@ -1,0 +1,110 @@
+//! Dead-operator elimination: drop dataflow nodes whose outputs reach no
+//! sink (`collect`/`writeFile`), condition node, or Φ. Such nodes compute
+//! bags nobody observes — every step they cost output-bag bookkeeping,
+//! close markers, and (worst) retained conditional-output buffers.
+//!
+//! The SSA-level DCE already prunes most dead *variables*; this pass is
+//! the graph-level safety net that catches operators orphaned by later
+//! graph rewrites (and keeps the optimizer closed under composition).
+
+use super::analysis::PlanAnalysis;
+use super::{compact, Pass, PassOutcome};
+use crate::dataflow::DataflowGraph;
+use crate::error::Result;
+
+/// The dead-operator elimination pass.
+pub struct DcePass;
+
+impl Pass for DcePass {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+
+    fn run(&self, g: &mut DataflowGraph, a: &PlanAnalysis) -> Result<PassOutcome> {
+        let mut out = PassOutcome::default();
+        if a.live.iter().all(|&l| l) {
+            return Ok(out);
+        }
+        for n in &g.nodes {
+            if !a.live[n.id] {
+                out.details.push(format!("{} [{}] bb{}", n.name, n.op.mnemonic(), n.block));
+                out.changed += 1;
+            }
+        }
+        compact(g, &a.live);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{InputSpec, Node, Par, Route};
+    use crate::frontend::{parse_and_lower, Rhs, Udf1};
+    use crate::opt::{verify_integrity, OptConfig};
+    use crate::value::Value;
+
+    #[test]
+    fn live_graph_is_untouched() {
+        let p = parse_and_lower("a = bag(1, 2); b = a.map(|x| x + 1); collect(b, \"b\");").unwrap();
+        let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        let before = g.num_nodes();
+        let a = PlanAnalysis::compute(&g);
+        let out = DcePass.run(&mut g, &a).unwrap();
+        assert_eq!(out.changed, 0);
+        assert_eq!(g.num_nodes(), before);
+    }
+
+    #[test]
+    fn orphaned_operator_chain_is_removed() {
+        // SSA DCE never sees these: graft a dead map chain onto the built
+        // graph, the way a (hypothetical buggy or future) rewrite might
+        // leave operators behind.
+        let p = parse_and_lower("a = bag(1, 2); b = a.map(|x| x + 1); collect(b, \"b\");").unwrap();
+        let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        let src = g.nodes.iter().find(|n| matches!(n.op, Rhs::BagLit(_))).unwrap();
+        let (src_id, src_var, src_block) = (src.id, src.var, src.block);
+        let dead_var = g.node_of_var.len() + 100; // fresh var id
+        let id = g.nodes.len();
+        g.nodes.push(Node {
+            id,
+            name: "dead".into(),
+            var: dead_var,
+            block: src_block,
+            op: Rhs::Map { input: src_var, udf: Udf1::new("id", |v: &Value| v.clone()) },
+            par: Par::All,
+            inputs: vec![InputSpec {
+                src: src_id,
+                src_block,
+                route: Route::Forward,
+                conditional: false,
+            }],
+            cond: None,
+            singleton: false,
+            hoisted_from: None,
+        });
+        g.node_of_var.insert(dead_var, id);
+        verify_integrity(&g).unwrap();
+
+        let before = g.num_nodes();
+        let a = PlanAnalysis::compute(&g);
+        let out = DcePass.run(&mut g, &a).unwrap();
+        verify_integrity(&g).unwrap();
+        assert_eq!(out.changed, 1, "{:?}", out.details);
+        assert_eq!(g.num_nodes(), before - 1);
+        assert!(!g.nodes.iter().any(|n| n.name == "dead"));
+    }
+
+    #[test]
+    fn phi_and_condition_nodes_are_roots() {
+        let p = parse_and_lower(
+            "d = 1; while (d <= 3) { d = d + 1; } collect(bag(1), \"x\");",
+        )
+        .unwrap();
+        let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        let before = g.num_nodes();
+        let a = PlanAnalysis::compute(&g);
+        DcePass.run(&mut g, &a).unwrap();
+        assert_eq!(g.num_nodes(), before, "the loop-control machinery is all live");
+    }
+}

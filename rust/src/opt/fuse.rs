@@ -1,0 +1,223 @@
+//! Operator fusion: collapse maximal linear chains of pipelineable
+//! element-wise operators into one fused physical operator
+//! ([`crate::ops::fused::FusedT`]).
+//!
+//! A chain `a.map(f).filter(p).map(g)` costs, per iteration step, three
+//! output bags (three opens/closes, three sets of coordination messages)
+//! and a channel batch hop per stage. Fused, it is ONE node: one bag, one
+//! set of closes, and per element a single dispatch through all stages.
+//!
+//! An edge `u -> v` is fusable when:
+//! * both ends are element-wise (`map`/`filter`/`flatMap`, or an already
+//!   fused chain) and not condition nodes,
+//! * `v` is `u`'s only consumer and `u` is `v`'s only input,
+//! * the edge stays inside one basic block (non-conditional) and routes
+//!   `Forward` (same parallelism, partition-preserving).
+
+use super::analysis::PlanAnalysis;
+use super::{compact, Pass, PassOutcome};
+use crate::dataflow::{DataflowGraph, Node, NodeId, Route};
+use crate::error::Result;
+use crate::frontend::{FusedStage, Rhs};
+
+/// The fusion pass.
+pub struct FusePass;
+
+fn elementwise(n: &Node) -> bool {
+    n.cond.is_none()
+        && n.inputs.len() == 1
+        && matches!(
+            n.op,
+            Rhs::Map { .. } | Rhs::Filter { .. } | Rhs::FlatMap { .. } | Rhs::Fused { .. }
+        )
+}
+
+/// The stages a node contributes to a fused chain (already-fused nodes
+/// splice their stages, so repeated rounds stay flat).
+fn stages_of(op: &Rhs) -> Vec<FusedStage> {
+    match op {
+        Rhs::Map { udf, .. } => vec![FusedStage::Map(udf.clone())],
+        Rhs::Filter { udf, .. } => vec![FusedStage::Filter(udf.clone())],
+        Rhs::FlatMap { udf, .. } => vec![FusedStage::FlatMap(udf.clone())],
+        Rhs::Fused { stages, .. } => stages.clone(),
+        other => unreachable!("non-elementwise op in chain: {}", other.mnemonic()),
+    }
+}
+
+fn fusable_edge(g: &DataflowGraph, up: NodeId, down: &Node) -> bool {
+    let e = &down.inputs[0];
+    e.src == up && !e.conditional && e.route == Route::Forward && g.nodes[up].block == down.block
+}
+
+impl Pass for FusePass {
+    fn name(&self) -> &'static str {
+        "fuse"
+    }
+
+    fn run(&self, g: &mut DataflowGraph, a: &PlanAnalysis) -> Result<PassOutcome> {
+        let mut out = PassOutcome::default();
+        let n = g.nodes.len();
+        let mut removed = vec![false; n];
+        for f in 0..n {
+            if removed[f] || !elementwise(&g.nodes[f]) {
+                continue;
+            }
+            // Chain head: the producer is not itself fusable into `f`.
+            let p = g.nodes[f].inputs[0].src;
+            let head = !(elementwise(&g.nodes[p])
+                && a.consumers[p].len() == 1
+                && fusable_edge(g, p, &g.nodes[f]));
+            if !head {
+                continue;
+            }
+            // Extend the maximal chain downstream of `f`.
+            let mut chain = vec![f];
+            let mut cur = f;
+            loop {
+                let [(c, _)] = a.consumers[cur].as_slice() else { break };
+                let cn = &g.nodes[*c];
+                if !elementwise(cn) || !fusable_edge(g, cur, cn) {
+                    break;
+                }
+                chain.push(*c);
+                cur = *c;
+            }
+            if chain.len() < 2 {
+                continue;
+            }
+            // Replace the tail in place (its id/var stay valid for every
+            // downstream consumer); the other members are merged away.
+            let stages: Vec<FusedStage> =
+                chain.iter().flat_map(|&id| stages_of(&g.nodes[id].op)).collect();
+            let head_id = chain[0];
+            let input_var = g.nodes[head_id].op.input_vars()[0];
+            let head_inputs = g.nodes[head_id].inputs.clone();
+            let head_hoisted = g.nodes[head_id].hoisted_from;
+            out.details.push(format!(
+                "{} (bb{}, {} stages): {}",
+                g.nodes[*chain.last().unwrap()].name,
+                g.nodes[head_id].block,
+                stages.len(),
+                chain.iter().map(|&id| g.nodes[id].name.clone()).collect::<Vec<_>>().join(" -> ")
+            ));
+            let tail = *chain.last().unwrap();
+            let t = &mut g.nodes[tail];
+            t.op = Rhs::Fused { input: input_var, stages };
+            t.inputs = head_inputs;
+            t.hoisted_from = t.hoisted_from.or(head_hoisted);
+            for &id in &chain[..chain.len() - 1] {
+                removed[id] = true;
+                out.changed += 1;
+            }
+        }
+        if out.changed > 0 {
+            let keep: Vec<bool> = removed.iter().map(|&r| !r).collect();
+            compact(g, &keep);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_lower;
+    use crate::opt::{verify_integrity, OptConfig};
+
+    fn fused_graph(src: &str) -> (DataflowGraph, PassOutcome) {
+        let p = parse_and_lower(src).unwrap();
+        let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        let a = PlanAnalysis::compute(&g);
+        let out = FusePass.run(&mut g, &a).unwrap();
+        verify_integrity(&g).unwrap();
+        (g, out)
+    }
+
+    #[test]
+    fn linear_chain_collapses_to_one_node() {
+        let (g, out) = fused_graph(
+            "a = bag(1, 2, 3); b = a.map(|x| x + 1).filter(|x| x > 2).map(|x| x * 10); collect(b, \"b\");",
+        );
+        assert_eq!(out.changed, 2, "{:?}", out.details);
+        assert_eq!(out.details.len(), 1);
+        let fused = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Rhs::Fused { .. }))
+            .expect("fused node");
+        let Rhs::Fused { ref stages, .. } = fused.op else { unreachable!() };
+        assert_eq!(stages.len(), 3);
+        // bagLit + fused + collect.
+        assert_eq!(g.num_nodes(), 3);
+        let col = g.nodes.iter().find(|n| matches!(n.op, Rhs::Collect { .. })).unwrap();
+        assert_eq!(col.inputs[0].src, fused.id);
+    }
+
+    #[test]
+    fn shared_intermediate_blocks_fusion() {
+        // `b` has two consumers — the chain must break there.
+        let (g, _) = fused_graph(
+            "a = bag(1, 2); b = a.map(|x| x + 1); c = b.map(|x| x * 2); collect(b, \"b\"); collect(c, \"c\");",
+        );
+        assert!(
+            !g.nodes.iter().any(|n| matches!(n.op, Rhs::Fused { .. })),
+            "no chain should fuse across a shared intermediate"
+        );
+    }
+
+    #[test]
+    fn condition_nodes_are_never_fused() {
+        let (g, _) = fused_graph(
+            "d = 1; while (d <= 3) { d = d + 1; } collect(bag(1), \"x\");",
+        );
+        for n in &g.nodes {
+            if matches!(n.op, Rhs::Fused { .. }) {
+                assert!(n.cond.is_none());
+            }
+        }
+        assert_eq!(g.condition_nodes().len(), 1, "condition node survives fusion");
+    }
+
+    #[test]
+    fn fused_graph_executes_like_the_oracle() {
+        let src = "a = bag(1, 2, 3, 4, 5); b = a.map(|x| x + 1).filter(|x| x % 2 == 0).map(|x| x * 10); collect(b, \"b\");";
+        let program = parse_and_lower(src).unwrap();
+        let oracle = crate::baselines::single_thread::run(&program, &Default::default()).unwrap();
+        let (g, out) = {
+            let (mut g, _) = crate::compile_with(&program, &OptConfig::none()).unwrap();
+            let a = PlanAnalysis::compute(&g);
+            let out = FusePass.run(&mut g, &a).unwrap();
+            (g, out)
+        };
+        assert!(out.changed > 0);
+        let run = crate::exec::run(&g, &crate::exec::ExecConfig::default()).unwrap();
+        let mut got = run.collected("b").to_vec();
+        let mut want = oracle.collected("b").to_vec();
+        got.sort();
+        want.sort();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn repeated_fusion_splices_stages_flat() {
+        let src = "a = bag(1, 2); b = a.map(|x| x + 1).map(|x| x + 2).map(|x| x + 3).map(|x| x + 4); collect(b, \"b\");";
+        let p = parse_and_lower(src).unwrap();
+        let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        // Two consecutive runs: the second must find nothing left to do.
+        let a = PlanAnalysis::compute(&g);
+        FusePass.run(&mut g, &a).unwrap();
+        let a2 = PlanAnalysis::compute(&g);
+        let again = FusePass.run(&mut g, &a2).unwrap();
+        assert_eq!(again.changed, 0);
+        let Rhs::Fused { ref stages, .. } = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Rhs::Fused { .. }))
+            .unwrap()
+            .op
+        else {
+            unreachable!()
+        };
+        assert_eq!(stages.len(), 4, "stages stay flat, not nested");
+    }
+}

@@ -1,0 +1,169 @@
+//! Loop-invariant hoisting: move nodes whose inputs are all invariant
+//! w.r.t. an enclosing natural loop out of the cycle into the loop's
+//! preamble block (the unique out-of-loop predecessor of the header), so
+//! they compute **once per loop entry** instead of once per iteration.
+//!
+//! Coordination stays sound without new machinery because bag identity is
+//! `(node, path prefix)` (§6.3.1): after the move, every in-loop consumer
+//! resolves the *same* preamble bag via the §6.3.3 longest-prefix rule,
+//! the conditional-output watcher ships it into the loop exactly once,
+//! and the consumer-side buffer serves all later iterations locally. It
+//! also *generalizes* the §7 build-side reuse: a hoisted build side keeps
+//! a step-independent bag identity, so the join's hash table survives
+//! every step without the runtime having to special-case joins.
+//!
+//! Loops are processed innermost-first; a node invariant w.r.t. several
+//! nested loops migrates outward across pass-manager rounds (the preamble
+//! of an inner loop is the outer loop's body).
+
+use super::analysis::PlanAnalysis;
+use super::{refresh_edges, Pass, PassOutcome};
+use crate::dataflow::DataflowGraph;
+use crate::error::Result;
+
+/// The hoisting pass.
+pub struct HoistPass;
+
+impl Pass for HoistPass {
+    fn name(&self) -> &'static str {
+        "hoist"
+    }
+
+    fn run(&self, g: &mut DataflowGraph, a: &PlanAnalysis) -> Result<PassOutcome> {
+        let mut out = PassOutcome::default();
+        // Innermost loops first (smallest body): nodes escape one nesting
+        // level per iteration of this ordering, and what lands in an inner
+        // preamble is immediately considered by the enclosing loop.
+        let mut order: Vec<usize> = (0..a.loops.loops.len()).collect();
+        order.sort_by_key(|&i| a.loops.loops[i].body.len());
+        for &li in &order {
+            let l = &a.loops.loops[li];
+            let Some(pre) = a.preheader(g, l) else {
+                continue; // no unique entry edge — skip this loop
+            };
+            for nid in a.invariant_hoistable(g, l) {
+                let n = &mut g.nodes[nid];
+                out.details.push(format!(
+                    "{} [{}] bb{} -> bb{pre} (loop hdr bb{})",
+                    n.name,
+                    n.op.mnemonic(),
+                    n.block,
+                    l.header
+                ));
+                if n.hoisted_from.is_none() {
+                    n.hoisted_from = Some(n.block);
+                }
+                n.block = pre;
+                out.changed += 1;
+            }
+        }
+        if out.changed > 0 {
+            refresh_edges(g);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{parse_and_lower, Rhs};
+    use crate::opt::{verify_integrity, OptConfig};
+
+    fn hoisted_graph(src: &str) -> (DataflowGraph, PassOutcome) {
+        let p = parse_and_lower(src).unwrap();
+        let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        let a = PlanAnalysis::compute(&g);
+        let out = HoistPass.run(&mut g, &a).unwrap();
+        verify_integrity(&g).unwrap();
+        (g, out)
+    }
+
+    #[test]
+    fn invariant_chain_moves_to_preamble() {
+        let (g, out) = hoisted_graph(
+            "d = 1; while (d <= 3) { v = bag(1, 2).map(|x| x * 10); collect(v, \"v\"); d = d + 1; }",
+        );
+        assert!(out.changed >= 2, "bag literal + map should hoist: {:?}", out.details);
+        let map = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Rhs::Map { .. }) && !n.singleton)
+            .unwrap();
+        let from = map.hoisted_from.expect("map marked hoisted");
+        assert_ne!(map.block, from, "block actually changed");
+        // The preamble block is outside every loop.
+        let a = PlanAnalysis::compute(&g);
+        assert_eq!(a.loops.depth[map.block], 0, "preamble is outside the loop");
+        // The collect stayed in the loop and now reads cross-block.
+        let col = g.nodes.iter().find(|n| matches!(n.op, Rhs::Collect { .. })).unwrap();
+        assert!(col.hoisted_from.is_none());
+        assert!(col.inputs[0].conditional);
+        assert_eq!(col.inputs[0].src_block, map.block);
+    }
+
+    #[test]
+    fn condition_and_phi_nodes_never_move() {
+        let (g, _) = hoisted_graph(
+            "d = 1; while (d <= 3) { v = bag(9).map(|x| x + 1); collect(v, \"v\"); d = d + 1; }",
+        );
+        for n in &g.nodes {
+            if n.cond.is_some() || matches!(n.op, Rhs::Phi(_)) {
+                assert!(n.hoisted_from.is_none(), "{} must not move", n.name);
+            }
+        }
+    }
+
+    #[test]
+    fn varying_nodes_stay_in_the_loop() {
+        let (g, _) = hoisted_graph(
+            "d = 1; while (d <= 3) { v = bag(1, 2).map(|x| x + d); collect(v, \"v\"); d = d + 1; }",
+        );
+        // The capture of `d` desugars into a cross with the loop counter;
+        // the cross and everything downstream of it must stay put.
+        for n in &g.nodes {
+            if matches!(n.op, Rhs::Cross { .. }) && n.hoisted_from.is_some() {
+                // A cross is only hoistable when BOTH sides are invariant.
+                let a = PlanAnalysis::compute(&g);
+                for inp in &n.inputs {
+                    assert_eq!(a.loops.depth[g.nodes[inp.src].block], 0, "{}", n.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn straightline_program_is_untouched() {
+        let (g, out) = hoisted_graph("a = bag(1, 2); b = a.map(|x| x + 1); collect(b, \"b\");");
+        assert_eq!(out.changed, 0);
+        assert!(g.nodes.iter().all(|n| n.hoisted_from.is_none()));
+    }
+
+    #[test]
+    fn nested_loops_hoist_across_rounds() {
+        // bag(5) is invariant w.r.t. BOTH loops; one HoistPass run moves it
+        // out of the inner loop, and because loops are processed
+        // innermost-first the same run carries it out of the outer loop.
+        let src = r#"
+            i = 0;
+            while (i < 2) {
+                j = 0;
+                while (j < 2) {
+                    z = bag(5).map(|v| v * 2);
+                    collect(z, "z");
+                    j = j + 1;
+                }
+                i = i + 1;
+            }
+        "#;
+        let (g, out) = hoisted_graph(src);
+        assert!(out.changed > 0, "{:?}", out.details);
+        let a = PlanAnalysis::compute(&g);
+        let map = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Rhs::Map { .. }) && n.hoisted_from.is_some())
+            .expect("hoisted map");
+        assert_eq!(a.loops.depth[map.block], 0, "escaped both loops");
+    }
+}

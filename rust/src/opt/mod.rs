@@ -1,0 +1,414 @@
+//! The dataflow plan optimizer: a pass manager over [`DataflowGraph`]
+//! running graph-level rewrites between `dataflow::build` and the
+//! executors. This is where the paper's "optimizations across iteration
+//! steps" (§7) live as *compiler transformations* instead of runtime
+//! special cases:
+//!
+//! * [`hoist`] — **loop-invariant hoisting**: nodes whose inputs are all
+//!   invariant w.r.t. an enclosing loop move out of the cycle into the
+//!   loop's preamble block, so they compute once per loop entry instead of
+//!   once per iteration. This generalizes the join-only build-side reuse:
+//!   any invariant chain (sources, maps, joins of invariants, ...) leaves
+//!   the loop, and the §7 runtime reuse then fires automatically because
+//!   the build side's bag identity becomes step-independent.
+//! * [`fuse`] — **operator fusion**: maximal linear chains of pipelineable
+//!   element-wise operators (map/filter/flatMap, same block, same
+//!   parallelism, `Route::Forward`) collapse into one fused physical
+//!   operator ([`crate::ops::fused`]), cutting per-element dispatch and
+//!   per-bag coordination messages on the hot path.
+//! * [`dce`] — **dead-operator elimination**: nodes whose outputs reach no
+//!   sink, condition node, or Φ are dropped.
+//!
+//! Passes share a [`analysis::PlanAnalysis`] (loop membership, invariance
+//! fixpoint, liveness) and run in rounds until a fixpoint, each pass
+//! independently toggleable via [`OptConfig`] (`opt.hoist` / `opt.fuse` /
+//! `opt.dce` config keys). The manager verifies graph integrity after
+//! every pass and reports an [`ExplainReport`] that the engine surfaces
+//! through `metrics` and `dataflow::dot` renders as clustered subgraphs.
+
+pub mod analysis;
+pub mod dce;
+pub mod fuse;
+pub mod hoist;
+
+use crate::dataflow::DataflowGraph;
+use crate::error::{Error, Result};
+use analysis::PlanAnalysis;
+use rustc_hash::FxHashMap;
+
+/// Which passes run. All default to on; each is independently toggleable
+/// (config keys `opt.hoist`, `opt.fuse`, `opt.dce`, `opt.max_rounds`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OptConfig {
+    /// Loop-invariant hoisting.
+    pub hoist: bool,
+    /// Element-wise operator fusion.
+    pub fuse: bool,
+    /// Dead-operator elimination.
+    pub dce: bool,
+    /// Maximum pass-manager rounds (each round runs every enabled pass
+    /// once; rounds stop early when nothing changes).
+    pub max_rounds: usize,
+}
+
+impl Default for OptConfig {
+    fn default() -> Self {
+        OptConfig { hoist: true, fuse: true, dce: true, max_rounds: 3 }
+    }
+}
+
+impl OptConfig {
+    /// Everything off — `compile_with(p, &OptConfig::none())` returns the
+    /// raw §5.3 translation. Keeps the default `max_rounds`, so
+    /// re-enabling a single pass via struct update
+    /// (`OptConfig { fuse: true, ..OptConfig::none() }`) actually runs it.
+    pub fn none() -> OptConfig {
+        OptConfig { hoist: false, fuse: false, dce: false, ..OptConfig::default() }
+    }
+
+    /// Read the `opt.*` section of a [`crate::config::Config`] (missing
+    /// keys keep the defaults).
+    pub fn from_config(cfg: &crate::config::Config) -> Result<OptConfig> {
+        let d = OptConfig::default();
+        Ok(OptConfig {
+            hoist: cfg.get_bool("opt.hoist", d.hoist)?,
+            fuse: cfg.get_bool("opt.fuse", d.fuse)?,
+            dce: cfg.get_bool("opt.dce", d.dce)?,
+            max_rounds: cfg.get_usize("opt.max_rounds", d.max_rounds)?,
+        })
+    }
+}
+
+/// What one pass run did.
+pub struct PassOutcome {
+    /// Number of nodes affected (hoisted / eliminated-by-fusion / removed).
+    pub changed: usize,
+    /// Human-readable one-liners (one per hoisted node / fused chain /
+    /// removed node).
+    pub details: Vec<String>,
+}
+
+/// A graph-rewriting pass.
+pub trait Pass {
+    /// Pass name (stable; used in reports and metrics keys).
+    fn name(&self) -> &'static str;
+    /// Rewrite the graph; the analysis matches the graph at entry.
+    fn run(&self, g: &mut DataflowGraph, a: &PlanAnalysis) -> Result<PassOutcome>;
+}
+
+/// Statistics of one pass invocation.
+pub struct PassStats {
+    /// Pass name.
+    pub pass: &'static str,
+    /// 1-based round number.
+    pub round: usize,
+    /// Nodes affected.
+    pub changed: usize,
+    /// Node count after the pass.
+    pub nodes_after: usize,
+    /// Per-change descriptions.
+    pub details: Vec<String>,
+}
+
+/// The optimizer's explain report: per-pass node counts and what was
+/// hoisted/fused/removed.
+#[derive(Default)]
+pub struct ExplainReport {
+    /// Node count before optimization.
+    pub nodes_before: usize,
+    /// Node count after optimization.
+    pub nodes_after: usize,
+    /// Rounds executed.
+    pub rounds: usize,
+    /// Distinct nodes sitting in loop preambles after optimization (a
+    /// node hoisted out of nested loops moves more than once but counts
+    /// once; matches the engine's `exec.hoisted_nodes`).
+    pub hoisted: usize,
+    /// Fused chains created.
+    pub fused_chains: usize,
+    /// Nodes eliminated by fusion (chain members merged away).
+    pub fused_away: usize,
+    /// Nodes removed by dead-operator elimination.
+    pub dce_removed: usize,
+    /// Per-pass statistics, in execution order.
+    pub passes: Vec<PassStats>,
+}
+
+impl Default for PassOutcome {
+    fn default() -> Self {
+        PassOutcome { changed: 0, details: Vec::new() }
+    }
+}
+
+impl ExplainReport {
+    /// Summary counters recorded into run metrics (`opt.*`).
+    pub fn summary(&self) -> Vec<(String, u64)> {
+        vec![
+            ("opt.nodes_before".into(), self.nodes_before as u64),
+            ("opt.nodes_after".into(), self.nodes_after as u64),
+            ("opt.rounds".into(), self.rounds as u64),
+            ("opt.hoisted".into(), self.hoisted as u64),
+            ("opt.fused_chains".into(), self.fused_chains as u64),
+            ("opt.fused_away".into(), self.fused_away as u64),
+            ("opt.dce_removed".into(), self.dce_removed as u64),
+        ]
+    }
+
+    /// Render a human-readable report (CLI `--explain`).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "optimizer: {} -> {} nodes in {} round(s) \
+             ({} hoisted, {} chains fused [{} nodes away], {} dead removed)\n",
+            self.nodes_before,
+            self.nodes_after,
+            self.rounds,
+            self.hoisted,
+            self.fused_chains,
+            self.fused_away,
+            self.dce_removed,
+        ));
+        for p in &self.passes {
+            s.push_str(&format!(
+                "  round {} {:<6} changed {:>3}  nodes {}\n",
+                p.round, p.pass, p.changed, p.nodes_after
+            ));
+            for d in &p.details {
+                s.push_str(&format!("    - {d}\n"));
+            }
+        }
+        s
+    }
+}
+
+/// The pass manager: runs the enabled passes in rounds until a fixpoint
+/// (or `max_rounds`), recomputing the shared analysis before each pass and
+/// verifying graph integrity after each pass.
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+    max_rounds: usize,
+}
+
+impl PassManager {
+    /// Build the manager for a configuration.
+    pub fn from_config(cfg: &OptConfig) -> PassManager {
+        let mut passes: Vec<Box<dyn Pass>> = Vec::new();
+        if cfg.hoist {
+            passes.push(Box::new(hoist::HoistPass));
+        }
+        if cfg.fuse {
+            passes.push(Box::new(fuse::FusePass));
+        }
+        if cfg.dce {
+            passes.push(Box::new(dce::DcePass));
+        }
+        PassManager { passes, max_rounds: cfg.max_rounds }
+    }
+
+    /// Run the pipeline on a graph.
+    pub fn run(&self, g: &mut DataflowGraph) -> Result<ExplainReport> {
+        let mut report = ExplainReport { nodes_before: g.num_nodes(), ..Default::default() };
+        for round in 1..=self.max_rounds {
+            if self.passes.is_empty() {
+                break;
+            }
+            let mut round_changed = 0usize;
+            for pass in &self.passes {
+                let a = PlanAnalysis::compute(g);
+                let out = pass.run(g, &a)?;
+                verify_integrity(g).map_err(|e| {
+                    Error::Dataflow(format!("opt pass '{}' broke the graph: {e}", pass.name()))
+                })?;
+                round_changed += out.changed;
+                match pass.name() {
+                    "fuse" => {
+                        report.fused_chains += out.details.len();
+                        report.fused_away += out.changed;
+                    }
+                    "dce" => report.dce_removed += out.changed,
+                    _ => {}
+                }
+                report.passes.push(PassStats {
+                    pass: pass.name(),
+                    round,
+                    changed: out.changed,
+                    nodes_after: g.num_nodes(),
+                    details: out.details,
+                });
+            }
+            report.rounds = round;
+            if round_changed == 0 {
+                break;
+            }
+        }
+        report.nodes_after = g.num_nodes();
+        report.hoisted = g.nodes.iter().filter(|n| n.hoisted_from.is_some()).count();
+        g.opt_summary = report.summary();
+        Ok(report)
+    }
+}
+
+/// Optimize a graph in place; returns the explain report. Runs by default
+/// inside [`crate::compile`].
+pub fn optimize(g: &mut DataflowGraph, cfg: &OptConfig) -> Result<ExplainReport> {
+    PassManager::from_config(cfg).run(g)
+}
+
+/// Recompute `src_block` / `conditional` on every edge from the current
+/// node blocks (used after a pass moves nodes between blocks).
+pub(crate) fn refresh_edges(g: &mut DataflowGraph) {
+    for i in 0..g.nodes.len() {
+        let nb = g.nodes[i].block;
+        for k in 0..g.nodes[i].inputs.len() {
+            let src = g.nodes[i].inputs[k].src;
+            let sb = g.nodes[src].block;
+            let inp = &mut g.nodes[i].inputs[k];
+            inp.src_block = sb;
+            inp.conditional = sb != nb;
+        }
+    }
+}
+
+/// Drop the nodes where `keep[id]` is false, compacting ids and rebuilding
+/// `node_of_var`. Panics (via the integrity check that follows every
+/// pass) if a kept node references a dropped one.
+pub(crate) fn compact(g: &mut DataflowGraph, keep: &[bool]) {
+    debug_assert_eq!(keep.len(), g.nodes.len());
+    let mut old2new = vec![usize::MAX; keep.len()];
+    let mut new_nodes = Vec::with_capacity(keep.iter().filter(|&&k| k).count());
+    for (old, node) in g.nodes.drain(..).enumerate() {
+        if keep[old] {
+            old2new[old] = new_nodes.len();
+            new_nodes.push(node);
+        }
+    }
+    for n in &mut new_nodes {
+        n.id = old2new[n.id];
+        for inp in &mut n.inputs {
+            inp.src = old2new[inp.src];
+        }
+    }
+    g.nodes = new_nodes;
+    g.node_of_var = g.nodes.iter().map(|n| (n.var, n.id)).collect::<FxHashMap<_, _>>();
+}
+
+/// Structural invariants every pass must preserve. Cheap (O(V+E)) and run
+/// after each pass, so a buggy rewrite fails compilation loudly instead of
+/// deadlocking the coordination protocol at runtime.
+pub fn verify_integrity(g: &DataflowGraph) -> Result<()> {
+    let n = g.nodes.len();
+    for (i, node) in g.nodes.iter().enumerate() {
+        if node.id != i {
+            return Err(Error::Dataflow(format!("node id {} at index {i}", node.id)));
+        }
+        let vars = node.op.input_vars();
+        if vars.len() != node.inputs.len() {
+            return Err(Error::Dataflow(format!(
+                "node '{}': {} edges but op references {} vars",
+                node.name,
+                node.inputs.len(),
+                vars.len()
+            )));
+        }
+        for (k, inp) in node.inputs.iter().enumerate() {
+            if inp.src >= n {
+                return Err(Error::Dataflow(format!(
+                    "node '{}' input {k} references missing node {}",
+                    node.name, inp.src
+                )));
+            }
+            if g.nodes[inp.src].var != vars[k] {
+                return Err(Error::Dataflow(format!(
+                    "node '{}' input {k}: edge source disagrees with op variable",
+                    node.name
+                )));
+            }
+            if inp.src_block != g.nodes[inp.src].block {
+                return Err(Error::Dataflow(format!(
+                    "node '{}' input {k}: stale src_block",
+                    node.name
+                )));
+            }
+            if inp.conditional != (inp.src_block != node.block) {
+                return Err(Error::Dataflow(format!(
+                    "node '{}' input {k}: stale conditional flag",
+                    node.name
+                )));
+            }
+        }
+        if node.cond.is_some() && node.hoisted_from.is_some() {
+            return Err(Error::Dataflow(format!(
+                "condition node '{}' was hoisted out of its branching block",
+                node.name
+            )));
+        }
+        match g.node_of_var.get(&node.var) {
+            Some(&id) if id == node.id => {}
+            other => {
+                return Err(Error::Dataflow(format!(
+                    "node_of_var for '{}' is {other:?}, want {}",
+                    node.name, node.id
+                )))
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_lower;
+
+    #[test]
+    fn config_defaults_and_toggles() {
+        let d = OptConfig::default();
+        assert!(d.hoist && d.fuse && d.dce);
+        let n = OptConfig::none();
+        assert!(!n.hoist && !n.fuse && !n.dce);
+        let cfg = crate::config::Config::parse("[opt]\nhoist = off\nmax_rounds = 7\n").unwrap();
+        let o = OptConfig::from_config(&cfg).unwrap();
+        assert!(!o.hoist);
+        assert!(o.fuse && o.dce);
+        assert_eq!(o.max_rounds, 7);
+    }
+
+    #[test]
+    fn optimize_none_is_identity() {
+        let p = parse_and_lower(
+            "d = 1; while (d <= 3) { c = bag(7).map(|x| x + 1).map(|x| x * 2); collect(c, \"c\"); d = d + 1; }",
+        )
+        .unwrap();
+        let (raw, rep) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        assert_eq!(rep.nodes_before, rep.nodes_after);
+        assert_eq!(rep.hoisted + rep.fused_chains + rep.dce_removed, 0);
+        assert!(raw.nodes.iter().all(|n| n.hoisted_from.is_none()));
+    }
+
+    #[test]
+    fn default_pipeline_hoists_and_fuses_and_reports() {
+        let p = parse_and_lower(
+            "d = 1; while (d <= 3) { c = bag(7, 8).map(|x| x + 1).map(|x| x * 2); collect(c, \"c\"); d = d + 1; }",
+        )
+        .unwrap();
+        let (g, rep) = crate::compile_with(&p, &OptConfig::default()).unwrap();
+        assert!(rep.hoisted > 0, "invariant chain should hoist:\n{}", rep.render());
+        assert!(rep.fused_chains > 0, "map.map should fuse:\n{}", rep.render());
+        assert!(rep.nodes_after < rep.nodes_before, "{}", rep.render());
+        assert!(!g.opt_summary.is_empty());
+        assert!(rep.render().contains("optimizer:"));
+        verify_integrity(&g).unwrap();
+    }
+
+    #[test]
+    fn compact_remaps_edges_and_vars() {
+        let p = parse_and_lower("a = bag(1, 2); b = a.map(|x| x + 1); collect(b, \"b\");").unwrap();
+        let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        // Append nothing to remove: keep-all compaction is a no-op.
+        let keep = vec![true; g.nodes.len()];
+        let before = g.nodes.len();
+        compact(&mut g, &keep);
+        assert_eq!(g.nodes.len(), before);
+        verify_integrity(&g).unwrap();
+    }
+}

@@ -124,6 +124,80 @@ impl Gen<Vec<i64>> {
     }
 }
 
+/// Generate a random-but-well-formed LabyLang program from a seed. The
+/// family covers: loops with data-dependent trip counts, if/else over
+/// loop parity and bag aggregates, loop-carried bags, invariant joins
+/// (`lookup` — hoisting fodder), element-wise map/filter chains (fusion
+/// fodder), keyed aggregation, scalar capture desugaring, and
+/// unstructured control flow (`break`/`continue`).
+///
+/// Shared by the differential tests (`baseline_equivalence.rs`) and the
+/// optimizer-semantics property test (`opt_semantics.rs`).
+pub fn random_laby_program(seed: u64) -> String {
+    let mut r = Rng::new(seed);
+    let steps = 2 + r.gen_range(5); // 2..=6
+    let lit: Vec<String> = (0..(3 + r.gen_range(5)))
+        .map(|_| r.gen_range(50).to_string())
+        .collect();
+    let lit = lit.join(", ");
+    let branch_kind = r.gen_range(3);
+    let use_join = r.gen_bool(0.5);
+    let use_carry = r.gen_bool(0.7);
+    let use_chain = r.gen_bool(0.5);
+    let mulk = 1 + r.gen_range(4);
+
+    let mut body = String::new();
+    body.push_str(&format!("    cur = bag({lit}).map(|v| v + i * {mulk});\n"));
+    if use_chain {
+        // A fusible element-wise chain, partly loop-invariant.
+        body.push_str(
+            "    inv = bag(3, 1, 4, 1, 5).map(|v| v + 1).filter(|v| v % 2 == 0).map(|v| v * 3);\n     cur = cur.union(inv);\n",
+        );
+    }
+    if use_join {
+        body.push_str(
+            "    kv = cur.map(|v| pair(v % 7, v));\n     j = kv.join(lookup).map(|p| fst(snd(p)) + snd(snd(p)));\n     collect(j, \"joined\");\n",
+        );
+    }
+    match branch_kind {
+        0 => body.push_str(
+            "    if (i % 2 == 0) { acc = acc.union(cur); } else { acc = cur; }\n",
+        ),
+        1 => body.push_str(
+            "    n = cur.reduce(|a, b| a + b);\n    if (n % 3 == 0) { acc = cur.map(|v| v + 1); }\n",
+        ),
+        _ => body.push_str("    acc = acc.union(cur.filter(|v| v % 2 == 0));\n"),
+    }
+    // Unstructured control flow: early exits and skips.
+    if r.gen_bool(0.3) {
+        body.push_str("    if (i == 4) { i = i + 1; continue; }\n");
+    }
+    if r.gen_bool(0.3) {
+        let cut = 2 + r.gen_range(3);
+        body.push_str(&format!("    if (i >= {cut}) {{ break; }}\n"));
+    }
+    if use_carry {
+        body.push_str(
+            "    counts = cur.map(|v| pair(v % 5, 1)).reduceByKey(|a, b| a + b);\n     collect(counts, \"counts\");\n",
+        );
+    }
+
+    format!(
+        r#"
+lookup = bag(0, 1, 2, 3, 4, 5, 6).map(|v| pair(v, v * 100));
+acc = bag();
+i = 0;
+while (i < {steps}) {{
+{body}    i = i + 1;
+}}
+collect(acc, "acc");
+"#
+    )
+}
+
+/// The collect labels [`random_laby_program`] may emit.
+pub const RANDOM_PROGRAM_LABELS: &[&str] = &["acc", "joined", "counts"];
+
 /// Outcome of a property run.
 #[derive(Debug)]
 pub enum PropResult<T> {

@@ -6,69 +6,8 @@
 use labyrinth::baselines::{separate_jobs, single_thread};
 use labyrinth::exec::{run, ExecConfig, ExecMode};
 use labyrinth::frontend::parse_and_lower;
-use labyrinth::util::rng::Rng;
+use labyrinth::util::quickcheck::{random_laby_program as random_program, RANDOM_PROGRAM_LABELS};
 use labyrinth::value::Value;
-
-/// Generate a random-but-well-formed LabyLang program from a seed. The
-/// family covers: loops with data-dependent trip counts, if/else over
-/// loop parity and bag aggregates, loop-carried bags, invariant joins,
-/// keyed aggregation, and scalar capture desugaring.
-fn random_program(seed: u64) -> String {
-    let mut r = Rng::new(seed);
-    let steps = 2 + r.gen_range(5); // 2..=6
-    let lit: Vec<String> = (0..(3 + r.gen_range(5)))
-        .map(|_| r.gen_range(50).to_string())
-        .collect();
-    let lit = lit.join(", ");
-    let branch_kind = r.gen_range(3);
-    let use_join = r.gen_bool(0.5);
-    let use_carry = r.gen_bool(0.7);
-    let mulk = 1 + r.gen_range(4);
-
-    let mut body = String::new();
-    body.push_str(&format!(
-        "    cur = bag({lit}).map(|v| v + i * {mulk});\n"
-    ));
-    if use_join {
-        body.push_str(
-            "    kv = cur.map(|v| pair(v % 7, v));\n     j = kv.join(lookup).map(|p| fst(snd(p)) + snd(snd(p)));\n     collect(j, \"joined\");\n",
-        );
-    }
-    match branch_kind {
-        0 => body.push_str(
-            "    if (i % 2 == 0) { acc = acc.union(cur); } else { acc = cur; }\n",
-        ),
-        1 => body.push_str(
-            "    n = cur.reduce(|a, b| a + b);\n    if (n % 3 == 0) { acc = cur.map(|v| v + 1); }\n",
-        ),
-        _ => body.push_str("    acc = acc.union(cur.filter(|v| v % 2 == 0));\n"),
-    }
-    // Unstructured control flow: early exits and skips.
-    if r.gen_bool(0.3) {
-        body.push_str("    if (i == 4) { i = i + 1; continue; }\n");
-    }
-    if r.gen_bool(0.3) {
-        let cut = 2 + r.gen_range(3);
-        body.push_str(&format!("    if (i >= {cut}) {{ break; }}\n"));
-    }
-    if use_carry {
-        body.push_str(
-            "    counts = cur.map(|v| pair(v % 5, 1)).reduceByKey(|a, b| a + b);\n     collect(counts, \"counts\");\n",
-        );
-    }
-
-    format!(
-        r#"
-lookup = bag(0, 1, 2, 3, 4, 5, 6).map(|v| pair(v, v * 100));
-acc = bag();
-i = 0;
-while (i < {steps}) {{
-{body}    i = i + 1;
-}}
-collect(acc, "acc");
-"#
-    )
-}
 
 fn multiset(mut v: Vec<Value>) -> Vec<Value> {
     v.sort();
@@ -77,7 +16,7 @@ fn multiset(mut v: Vec<Value>) -> Vec<Value> {
 
 #[test]
 fn random_programs_agree_across_all_executors() {
-    let labels = ["acc", "joined", "counts"];
+    let labels = RANDOM_PROGRAM_LABELS;
     for seed in 0..24u64 {
         let src = random_program(seed);
         let program = parse_and_lower(&src)
@@ -95,7 +34,7 @@ fn random_programs_agree_across_all_executors() {
                     &ExecConfig { workers, mode, ..Default::default() },
                 )
                 .unwrap_or_else(|e| panic!("seed {seed} w={workers} {mode:?}: {e}\n{src}"));
-                for label in &labels {
+                for label in labels {
                     assert_eq!(
                         multiset(out.collected(label).to_vec()),
                         multiset(oracle.collected(label).to_vec()),
@@ -112,7 +51,7 @@ fn random_programs_agree_across_all_executors() {
         ] {
             let out = separate_jobs::run(&program, &cfg)
                 .unwrap_or_else(|e| panic!("seed {seed} separate-jobs: {e}\n{src}"));
-            for label in &labels {
+            for label in labels {
                 assert_eq!(
                     multiset(out.collected(label).to_vec()),
                     multiset(oracle.collected(label).to_vec()),
@@ -135,7 +74,7 @@ fn reuse_toggle_never_changes_results() {
             &ExecConfig { workers: 2, reuse_state: false, ..Default::default() },
         )
         .unwrap();
-        for label in ["acc", "joined", "counts"] {
+        for label in RANDOM_PROGRAM_LABELS {
             assert_eq!(
                 multiset(a.collected(label).to_vec()),
                 multiset(b.collected(label).to_vec()),
