@@ -10,7 +10,10 @@
 //!    the Labyrinth engine on an empty loop (the floor for Fig. 5).
 //! 4. **Optimizer passes** (`opt::`): each pass toggled off against the
 //!    full pipeline — hoisting on the in-loop invariant-join workload,
-//!    fusion on a map/filter-chain microbenchmark.
+//!    fusion on a map/filter-chain microbenchmark, predicate pushdown on
+//!    a selective post-join filter, and cost-driven build-side selection
+//!    on a join whose program picked the pathological (large, varying)
+//!    build side.
 
 use labyrinth::bench_harness::{Bencher, Table};
 use labyrinth::coord::ExecPath;
@@ -191,4 +194,92 @@ fn main() {
         table.push_row(label.to_string(), vec![Some(m.median())]);
     }
     table.print();
+
+    // ---- 4c. predicate pushdown below an in-loop join ----------------------
+    // A selective filter (1/13) above the join: pushed below, the probe
+    // side shrinks before it is hashed and shipped every iteration.
+    let registry = labyrinth::workload::registry::global();
+    registry.put("abl_pd_facts", (0..50_000i64).map(Value::I64).collect());
+    registry.put("abl_pd_dim", (0..4_000i64).map(Value::I64).collect());
+    let pd_src = r#"
+        dim = source("abl_pd_dim").map(|v| pair(v % 512, v));
+        i = 0;
+        while (i < 10) {
+            facts = source("abl_pd_facts").map(|v| pair(v % 512, v + i));
+            j = facts.join(dim);
+            hot = j.filter(|p| snd(snd(p)) % 13 == 0);
+            agg = hot.map(|p| pair(fst(p), 1)).reduceByKey(|a, b| a + b);
+            collect(agg, "agg");
+            i = i + 1;
+        }
+    "#;
+    let pd_prog = labyrinth::frontend::parse_and_lower(pd_src).unwrap();
+    let mut table = Table::new(
+        "Ablation 4c: predicate pushdown (selective post-join filter, 4 workers)",
+        "pushdown",
+        vec!["labyrinth".into()],
+    );
+    for (label, ocfg) in [
+        ("pushed", OptConfig::default()),
+        ("unpushed", OptConfig { pushdown: false, ..OptConfig::default() }),
+    ] {
+        let (graph, report) = labyrinth::compile_with(&pd_prog, &ocfg).unwrap();
+        if label == "pushed" {
+            assert!(report.pushed_filters > 0, "filter must push:\n{}", report.render());
+        }
+        let m = bench.run(format!("pushdown {label}"), || {
+            labyrinth::exec::run(
+                &graph,
+                &ExecConfig { workers: 4, ..Default::default() },
+            )
+            .unwrap();
+        });
+        table.push_row(label.to_string(), vec![Some(m.median())]);
+    }
+    table.print();
+    registry.clear_prefix("abl_pd_");
+
+    // ---- 4d. join build-side selection -------------------------------------
+    // The program builds on the large, loop-varying side (`joinBuild`
+    // makes the receiver the build side); the cost model should flip the
+    // build to the small invariant dimension table, re-enabling the §7
+    // cross-step hash-table reuse.
+    registry.put("abl_js_facts", (0..50_000i64).map(Value::I64).collect());
+    registry.put("abl_js_dim", (0..4_000i64).map(Value::I64).collect());
+    let js_src = r#"
+        dim = source("abl_js_dim").map(|v| pair(v % 256, v));
+        i = 0;
+        while (i < 10) {
+            facts = source("abl_js_facts").map(|v| pair(v % 256, v + i));
+            j = facts.joinBuild(dim);
+            agg = j.map(|p| pair(fst(p), 1)).reduceByKey(|a, b| a + b);
+            collect(agg, "agg");
+            i = i + 1;
+        }
+    "#;
+    let js_prog = labyrinth::frontend::parse_and_lower(js_src).unwrap();
+    let mut table = Table::new(
+        "Ablation 4d: cost-driven join build-side selection (4 workers)",
+        "join sides",
+        vec!["labyrinth".into()],
+    );
+    for (label, ocfg) in [
+        ("cost-chosen", OptConfig::default()),
+        ("as-written", OptConfig { join_sides: false, ..OptConfig::default() }),
+    ] {
+        let (graph, report) = labyrinth::compile_with(&js_prog, &ocfg).unwrap();
+        if label == "cost-chosen" {
+            assert!(report.join_flips > 0, "build side must flip:\n{}", report.render());
+        }
+        let m = bench.run(format!("joinside {label}"), || {
+            labyrinth::exec::run(
+                &graph,
+                &ExecConfig { workers: 4, ..Default::default() },
+            )
+            .unwrap();
+        });
+        table.push_row(label.to_string(), vec![Some(m.median())]);
+    }
+    table.print();
+    registry.clear_prefix("abl_js_");
 }

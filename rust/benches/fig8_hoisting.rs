@@ -14,13 +14,28 @@
 //!   * flink-sep / spark-sep — separate jobs rebuild per step by
 //!                          construction
 //!
+//! Plus the speculation ablation on a ZERO-TRIP variant of the same
+//! program (`days = 0` — the loop never runs):
+//!
+//!   * ztrip-gated        — default optimizer: the `opt::cost` trip
+//!                          estimate is Exact(0), the speculative source
+//!                          chain stays in the loop, and the run pays
+//!                          nothing for it
+//!   * ztrip-spec         — `opt.speculate = always` (the old always-on
+//!                          contract): the hoisted source materializes
+//!                          the full attrs dataset at loop entry even
+//!                          though no iteration ever consumes it
+//!
 //! Paper result (log-log): ~3× speedup at the largest scale; negligible at
-//! the smallest scales where per-step overhead dominates.
+//! the smallest scales where per-step overhead dominates. The gated-hoist
+//! line must match laby-hoist (the gate clears easily at 10 trips), while
+//! ztrip-gated must not scale with the attrs size the way ztrip-spec does.
 
 use labyrinth::baselines::separate_jobs;
 use labyrinth::bench_harness::{Bencher, Table};
 use labyrinth::exec::ExecConfig;
-use labyrinth::opt::OptConfig;
+use labyrinth::frontend::Rhs;
+use labyrinth::opt::{OptConfig, Speculate};
 use labyrinth::programs;
 use labyrinth::workload::VisitCountWorkload;
 
@@ -39,6 +54,8 @@ fn main() {
             "laby-hoist".into(),
             "laby-noopt".into(),
             "laby-noreuse".into(),
+            "ztrip-gated".into(),
+            "ztrip-spec".into(),
             "flink-sep".into(),
             "spark-sep".into(),
         ],
@@ -64,6 +81,24 @@ fn main() {
             labyrinth::compile_with(&in_loop, &OptConfig::default()).unwrap();
         assert!(report.hoisted > 0, "hoisting pass must fire:\n{}", report.render());
         let (raw_graph, _) = labyrinth::compile_with(&in_loop, &OptConfig::none()).unwrap();
+        // Zero-trip variant: same program shape, loop bound 0. The cost
+        // gate must keep the speculative attrs chain in the (dead) loop;
+        // `speculate = always` restores the old behavior for comparison.
+        let ztrip = programs::visit_count_with_join_in_loop(0, &prefix);
+        let (zt_gated_graph, zt_report) =
+            labyrinth::compile_with(&ztrip, &OptConfig::default()).unwrap();
+        assert!(
+            zt_gated_graph.nodes.iter().all(
+                |n| !(matches!(n.op, Rhs::NamedSource(_)) && n.hoisted_from.is_some())
+            ),
+            "gate must keep the zero-trip source lazy:\n{}",
+            zt_report.render()
+        );
+        let (zt_spec_graph, _) = labyrinth::compile_with(
+            &ztrip,
+            &OptConfig { speculate: Speculate::Always, ..OptConfig::default() },
+        )
+        .unwrap();
 
         let reuse = bench.run(format!("labyrinth scale={scale}"), || {
             labyrinth::exec::run(
@@ -93,6 +128,20 @@ fn main() {
             )
             .unwrap();
         });
+        let zt_gated = bench.run(format!("ztrip-gated scale={scale}"), || {
+            labyrinth::exec::run(
+                &zt_gated_graph,
+                &ExecConfig { workers: WORKERS, ..Default::default() },
+            )
+            .unwrap();
+        });
+        let zt_spec = bench.run(format!("ztrip-spec scale={scale}"), || {
+            labyrinth::exec::run(
+                &zt_spec_graph,
+                &ExecConfig { workers: WORKERS, ..Default::default() },
+            )
+            .unwrap();
+        });
         let flink = bench.run(format!("flink-sep scale={scale}"), || {
             separate_jobs::run(&program, &separate_jobs::SeparateJobsConfig::flink(WORKERS))
                 .unwrap();
@@ -108,6 +157,8 @@ fn main() {
                 Some(hoist.median()),
                 Some(noopt.median()),
                 Some(noreuse.median()),
+                Some(zt_gated.median()),
+                Some(zt_spec.median()),
                 Some(flink.median()),
                 Some(spark.median()),
             ],
@@ -118,6 +169,8 @@ fn main() {
     table.print();
     println!(
         "(paper: reuse ~3x at the largest scale; laby-hoist = compiler-hoisted in-loop \
-         program, expected to track the hand-hoisted labyrinth line)"
+         program, expected to track the hand-hoisted labyrinth line; ztrip-gated = \
+         zero-trip loop under the default cost gate, expected flat vs scale, while \
+         ztrip-spec pays the speculated attrs materialization)"
     );
 }

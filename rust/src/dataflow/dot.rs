@@ -2,15 +2,22 @@
 //! paper: basic blocks as dotted clusters, condition nodes colored,
 //! conditional edges dashed, Φ-nodes with inverted colors. Optimizer
 //! results are visually distinct: nodes hoisted by `opt::hoist` sit in a
-//! nested "hoisted preamble" cluster inside their preamble block, and
-//! fused chains from `opt::fuse` are filled green with their stage count.
+//! nested "hoisted preamble" cluster inside their preamble block, fused
+//! chains from `opt::fuse` are filled green with their stage count, every
+//! node label carries the `opt::cost` row estimate (`~Nr`), and joins
+//! whose build side `opt::joinside` flipped are tagged `build=right`.
+//! See `docs/dot.md` for the full legend.
 
 use super::{DataflowGraph, Node, Par};
 use crate::frontend::Rhs;
 use std::fmt::Write as _;
 
-fn node_attrs(n: &Node) -> Vec<String> {
-    let mut attrs = vec![format!("label=\"{}\\n{}\"", n.name, n.op.mnemonic())];
+fn node_attrs(n: &Node, rows: f64) -> Vec<String> {
+    let mut label = format!("{}\\n{}\\n~{}r", n.name, n.op.mnemonic(), rows.round() as u64);
+    if matches!(n.op, Rhs::Join { .. }) && n.build_side == Some(1) {
+        label.push_str("\\nbuild=right");
+    }
+    let mut attrs = vec![format!("label=\"{label}\"")];
     if matches!(n.op, Rhs::Phi(_)) {
         attrs.push("style=filled".into());
         attrs.push("fillcolor=black".into());
@@ -33,6 +40,9 @@ fn node_attrs(n: &Node) -> Vec<String> {
 
 /// Render the dataflow graph as DOT.
 pub fn to_dot(g: &DataflowGraph) -> String {
+    // Row estimates for the `~Nr` label suffix (default cost parameters —
+    // this is a diagnostic rendering, not the optimizer's own analysis).
+    let rows = crate::opt::cost::estimate_rows(g, &crate::opt::cost::CostParams::default());
     let mut s = String::new();
     let _ = writeln!(s, "digraph labyrinth {{");
     let _ = writeln!(s, "  rankdir=TB; node [shape=box, fontname=\"monospace\"];");
@@ -51,7 +61,7 @@ pub fn to_dot(g: &DataflowGraph) -> String {
             ids.iter().partition(|&&id| g.nodes[id].hoisted_from.is_some());
         for &id in resident {
             let n = &g.nodes[id];
-            let _ = writeln!(s, "    n{id} [{}];", node_attrs(n).join(", "));
+            let _ = writeln!(s, "    n{id} [{}];", node_attrs(n, rows[id]).join(", "));
         }
         if !hoisted.is_empty() {
             // Nested cluster: the loop preamble region executed once per
@@ -63,7 +73,7 @@ pub fn to_dot(g: &DataflowGraph) -> String {
             );
             for &id in hoisted {
                 let n = &g.nodes[id];
-                let mut attrs = node_attrs(n);
+                let mut attrs = node_attrs(n, rows[id]);
                 attrs.push(format!(
                     "tooltip=\"hoisted from bb{}\"",
                     n.hoisted_from.expect("partitioned on hoisted_from")
@@ -120,6 +130,38 @@ mod tests {
         assert!(dot.contains("hoisted preamble"), "{dot}");
         assert!(dot.contains("fillcolor=lightblue"), "{dot}");
         assert!(dot.contains("hoisted from bb"), "{dot}");
+    }
+
+    #[test]
+    fn row_estimates_annotate_every_node() {
+        let g = crate::compile(
+            &parse_and_lower("a = bag(1, 2, 3); collect(a, \"a\");").unwrap(),
+        )
+        .unwrap();
+        let dot = super::to_dot(&g);
+        assert!(dot.contains("~3r"), "source size hint rendered:\n{dot}");
+    }
+
+    #[test]
+    fn flipped_join_build_side_is_tagged() {
+        crate::workload::registry::global().put(
+            "dot_big",
+            (0..64).map(crate::value::Value::I64).collect(),
+        );
+        crate::workload::registry::global().put(
+            "dot_small",
+            (0..4).map(crate::value::Value::I64).collect(),
+        );
+        let g = crate::compile(
+            &parse_and_lower(
+                "big = source(\"dot_big\").map(|v| pair(v % 4, v)); small = source(\"dot_small\").map(|v| pair(v % 4, v)); j = big.joinBuild(small); collect(j, \"j\");",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let dot = super::to_dot(&g);
+        assert!(dot.contains("build=right"), "{dot}");
+        crate::workload::registry::global().clear_prefix("dot_");
     }
 
     #[test]

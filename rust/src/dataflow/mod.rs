@@ -91,6 +91,17 @@ pub struct Node {
     /// loop preamble (`None` = never hoisted). Kept for diagnostics and
     /// the DOT rendering of hoisted preambles.
     pub hoisted_from: Option<BlockId>,
+    /// Known output size for source nodes (`bag(...)` literal length,
+    /// registered dataset size for `source("name")`), filled by [`build`]
+    /// and consumed by the `opt::cost` cardinality model. `None` when the
+    /// size is unknowable at compile time (e.g. `readFile`).
+    pub size_hint: Option<usize>,
+    /// For `Rhs::Join` nodes: which logical input the hash join should use
+    /// as its build side (`None` / `Some(0)` = left, the §5.3 default;
+    /// `Some(1)` = right). Set by the `opt::joinside` pass from the cost
+    /// model; honored by [`crate::exec::ExecPlan`] / `ops::join`. Output
+    /// pair order is unaffected — this is a physical-plan choice only.
+    pub build_side: Option<usize>,
 }
 
 /// The compiled logical dataflow job.
@@ -236,6 +247,16 @@ pub fn build(ssa: &SsaProgram) -> Result<DataflowGraph> {
         for instr in &block.instrs {
             let id = nodes.len();
             node_of_var.insert(instr.var, id);
+            // Source size hints for the cost model: literal lengths are
+            // exact; named sources resolve against the registry (benches
+            // register datasets before compiling), else unknown.
+            let size_hint = match &instr.rhs {
+                Rhs::BagLit(items) => Some(items.len()),
+                Rhs::NamedSource(name) => {
+                    crate::workload::registry::global().get(name).map(|d| d.len())
+                }
+                _ => None,
+            };
             nodes.push(Node {
                 id,
                 name: ssa.vars[instr.var].name.clone(),
@@ -247,6 +268,8 @@ pub fn build(ssa: &SsaProgram) -> Result<DataflowGraph> {
                 cond: None,
                 singleton: false,
                 hoisted_from: None,
+                size_hint,
+                build_side: None,
             });
         }
     }

@@ -95,7 +95,7 @@ impl Instance {
             registry: crate::workload::registry::global(),
             io_dir: io_dir.to_path_buf(),
         };
-        let transform = crate::ops::make(&n.op, &ctx)
+        let transform = crate::ops::make_with_join_build(&n.op, plan.join_build[node], &ctx)
             .unwrap_or_else(|e| panic!("instantiating {}: {e}", n.name));
         let n_inputs = n.inputs.len();
         let send_bufs = plan.out_edges[node]

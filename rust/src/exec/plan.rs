@@ -71,6 +71,10 @@ pub struct ExecPlan {
     /// (Scheduled before the loop's first step via its preamble block's
     /// position in the execution path.)
     pub hoisted: Vec<bool>,
+    /// Per node: which logical input is the hash-join build side (0 for
+    /// non-joins and unannotated joins; 1 when `opt::joinside` flipped
+    /// it). `Instance::new` hands this to `ops::join::HashJoinT`.
+    pub join_build: Vec<usize>,
 }
 
 impl ExecPlan {
@@ -140,6 +144,14 @@ impl ExecPlan {
         }
 
         let hoisted = graph.nodes.iter().map(|n| n.hoisted_from.is_some()).collect();
+        let join_build = graph
+            .nodes
+            .iter()
+            .map(|n| match n.op {
+                Rhs::Join { .. } => n.build_side.unwrap_or(0),
+                _ => 0,
+            })
+            .collect();
         ExecPlan {
             graph,
             workers,
@@ -149,6 +161,7 @@ impl ExecPlan {
             total_instances,
             insts_per_block,
             hoisted,
+            join_build,
         }
     }
 

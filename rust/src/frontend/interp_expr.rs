@@ -89,6 +89,16 @@ pub fn builtin(name: &str, args: &[Value]) -> Value {
         ("fst", [Value::Pair(p)]) => p.0.clone(),
         ("snd", [Value::Pair(p)]) => p.1.clone(),
         ("nth", [Value::Tuple(t), Value::I64(i)]) => t[*i as usize].clone(),
+        // `key` / `payload` mirror the shape handling of keyed operators
+        // (`ops::join::key_and_payload`): the first pair component is the
+        // key, anything non-pair keys on the whole value with a Unit
+        // payload. Emitted by `opt::pushdown` when it moves a predicate
+        // below a join (the pushed predicate sees one side's elements, not
+        // the joined pairs); also available to user lambdas.
+        ("key", [Value::Pair(p)]) => p.0.clone(),
+        ("key", [v]) => v.clone(),
+        ("payload", [Value::Pair(p)]) => p.1.clone(),
+        ("payload", [_]) => Value::Unit,
         ("abs", [Value::I64(v)]) => Value::I64(v.abs()),
         ("abs", [Value::F64(v)]) => Value::F64(v.abs()),
         ("min", [a, b]) => if a <= b { a.clone() } else { b.clone() },
@@ -133,8 +143,8 @@ pub fn check_closed(e: &Expr, params: &[String]) -> Result<()> {
         }
         Expr::Call(name, args) => {
             const BUILTINS: &[&str] = &[
-                "pair", "tuple", "fst", "snd", "nth", "abs", "min", "max", "str", "int",
-                "float", "hash", "field", "len",
+                "pair", "tuple", "fst", "snd", "key", "payload", "nth", "abs", "min",
+                "max", "str", "int", "float", "hash", "field", "len",
             ];
             if !BUILTINS.contains(&name.as_str()) {
                 return Err(Error::Type(format!("unknown builtin '{name}' inside lambda")));
@@ -151,17 +161,22 @@ pub fn check_closed(e: &Expr, params: &[String]) -> Result<()> {
     }
 }
 
-/// Compile a 1-parameter lambda into a [`super::Udf1`].
+/// Compile a 1-parameter lambda into a [`super::Udf1`]. The source
+/// expression rides along on the UDF (`Udf1::expr`) so structural
+/// optimizer rewrites (predicate pushdown) can inspect it.
 pub fn compile_udf1(params: Vec<String>, body: Expr, name: String) -> Result<super::Udf1> {
     if params.len() != 1 {
         return Err(Error::Type(format!("expected 1-parameter lambda, got {}", params.len())));
     }
     check_closed(&body, &params)?;
+    let expr_params = params.clone();
+    let expr_body = body.clone();
     let body = Arc::new(body);
     let params = Arc::new(params);
     Ok(super::Udf1::new(name, move |v: &Value| {
         eval(&body, &params, std::slice::from_ref(v))
-    }))
+    })
+    .with_expr(expr_params, expr_body))
 }
 
 /// Compile a 2-parameter lambda into a [`super::Udf2`].

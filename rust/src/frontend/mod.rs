@@ -30,6 +30,12 @@ pub struct Udf1 {
     pub name: Arc<str>,
     /// The function itself.
     pub f: Arc<dyn Fn(&Value) -> Value + Send + Sync>,
+    /// The LabyLang lambda this closure was compiled from, when it came
+    /// from the parser (`(params, body)`). Rust-builder UDFs are opaque
+    /// closures and carry `None`. The `opt::pushdown` pass inspects and
+    /// rewrites this to move predicates below joins / keyed aggregations;
+    /// everything else ignores it.
+    pub expr: Option<Arc<(Vec<String>, ast::Expr)>>,
 }
 
 /// A binary element function (reduce combiners, lifted binary scalars).
@@ -53,7 +59,13 @@ pub struct UdfN {
 impl Udf1 {
     /// Wrap a closure with a debug name.
     pub fn new(name: impl Into<String>, f: impl Fn(&Value) -> Value + Send + Sync + 'static) -> Udf1 {
-        Udf1 { name: Arc::from(name.into().as_str()), f: Arc::new(f) }
+        Udf1 { name: Arc::from(name.into().as_str()), f: Arc::new(f), expr: None }
+    }
+    /// Attach the lambda expression this UDF was compiled from (parser
+    /// path only; enables structural rewrites like predicate pushdown).
+    pub fn with_expr(mut self, params: Vec<String>, body: ast::Expr) -> Udf1 {
+        self.expr = Some(Arc::new((params, body)));
+        self
     }
     /// Apply.
     pub fn call(&self, v: &Value) -> Value {

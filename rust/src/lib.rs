@@ -24,9 +24,11 @@
 //!  non-bag lifting (§5.2)  ──▶  logical dataflow graph (§5.3)
 //!        ▼
 //!  opt:: plan optimizer — pass manager over the dataflow graph
-//!        (loop-invariant hoisting into loop preambles, element-wise
-//!        operator fusion, dead-operator elimination; §7's
-//!        cross-iteration optimizations as compiler passes)
+//!        (predicate pushdown, cost-gated loop-invariant hoisting into
+//!        loop preambles, hash-join build-side selection, element-wise
+//!        operator fusion, dead-operator elimination — §7's
+//!        cross-iteration optimizations as compiler passes, driven by
+//!        the opt::cost cardinality/trip-count model)
 //!        ▼
 //!  executors:
 //!    · exec::            Labyrinth engine — single cyclic job, bag-ID
@@ -82,6 +84,20 @@ pub mod prelude {
 /// (CFG → SSA → lifting → dataflow → [`opt::optimize`] with the default
 /// pass pipeline). Use [`compile_with`] to control the optimizer or read
 /// its explain report.
+///
+/// ```
+/// use labyrinth::frontend::parse_and_lower;
+///
+/// let program = parse_and_lower(
+///     "a = bag(1, 2, 3); b = a.map(|x| x * 10); collect(b, \"b\");",
+/// )?;
+/// let graph = labyrinth::compile(&program)?;
+/// let out = labyrinth::exec::run(&graph, &Default::default())?;
+/// let mut b = out.collected("b").to_vec();
+/// b.sort();
+/// assert_eq!(b, vec![10, 20, 30].into_iter().map(labyrinth::Value::I64).collect::<Vec<_>>());
+/// # Ok::<(), labyrinth::Error>(())
+/// ```
 pub fn compile(program: &frontend::Program) -> Result<dataflow::DataflowGraph> {
     Ok(compile_with(program, &opt::OptConfig::default())?.0)
 }

@@ -3,8 +3,9 @@
 //! ```text
 //! labyrinth run <program.laby> [--workers N] [--mode pipelined|barrier]
 //!               [--executor labyrinth|spark|flink|single] [--no-reuse]
-//!               [--no-opt] [--no-hoist] [--no-fuse] [--no-dce] [--explain]
-//!               [--io-dir DIR] [--config FILE] [--sched] [--metrics]
+//!               [--no-opt] [--no-hoist] [--no-fuse] [--no-dce]
+//!               [--no-pushdown] [--no-join-sides] [--speculate auto|always|never]
+//!               [--explain] [--io-dir DIR] [--config FILE] [--sched] [--metrics]
 //! labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]
 //! labyrinth generate visitcount --days N --visits M --pages P --out DIR
 //! labyrinth config --dump [--config FILE]
@@ -39,11 +40,15 @@ struct Opts {
 const VALUE_OPTS: &[&str] = &[
     "--workers", "--mode", "--executor", "--io-dir", "--config", "--dump", "--days",
     "--visits", "--pages", "--out", "--batch", "--scale",
+    // Speculative-hoist policy (config key opt.speculate): auto|always|never.
+    "--speculate",
 ];
 const FLAG_OPTS: &[&str] = &[
     "--no-reuse", "--metrics", "--sched", "--dump-plan",
-    // Optimizer toggles (config keys opt.hoist / opt.fuse / opt.dce).
-    "--no-opt", "--no-hoist", "--no-fuse", "--no-dce", "--explain",
+    // Optimizer toggles (config keys opt.hoist / opt.fuse / opt.dce /
+    // opt.pushdown / opt.join_sides).
+    "--no-opt", "--no-hoist", "--no-fuse", "--no-dce", "--no-pushdown",
+    "--no-join-sides", "--explain",
 ];
 
 fn parse_opts(args: &[String]) -> Result<Opts> {
@@ -124,8 +129,9 @@ fn print_usage() {
          USAGE:\n\
          \x20 labyrinth run <program.laby> [--workers N] [--mode pipelined|barrier]\n\
          \x20            [--executor labyrinth|spark|flink|single] [--no-reuse]\n\
-         \x20            [--no-opt] [--no-hoist] [--no-fuse] [--no-dce] [--explain]\n\
-         \x20            [--io-dir DIR] [--config FILE] [--sched] [--metrics]\n\
+         \x20            [--no-opt] [--no-hoist] [--no-fuse] [--no-dce]\n\
+         \x20            [--no-pushdown] [--no-join-sides] [--speculate auto|always|never]\n\
+         \x20            [--explain] [--io-dir DIR] [--config FILE] [--sched] [--metrics]\n\
          \x20 labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]\n\
          \x20 labyrinth generate visitcount --days N [--visits M] [--pages P] --out DIR\n\
          \x20 labyrinth config --dump [--config FILE]"
@@ -134,7 +140,8 @@ fn print_usage() {
 
 /// Optimizer configuration: config file `opt.*` keys overridden by CLI
 /// flags (`--no-opt` disables every pass; `--no-hoist` / `--no-fuse` /
-/// `--no-dce` disable one each).
+/// `--no-dce` / `--no-pushdown` / `--no-join-sides` disable one each;
+/// `--speculate auto|always|never` sets the hoist speculation policy).
 fn opt_config(opts: &Opts, cfg: &Config) -> Result<labyrinth::opt::OptConfig> {
     let mut ocfg = labyrinth::opt::OptConfig::from_config(cfg)?;
     if opts.has("--no-opt") {
@@ -148,6 +155,15 @@ fn opt_config(opts: &Opts, cfg: &Config) -> Result<labyrinth::opt::OptConfig> {
     }
     if opts.has("--no-dce") {
         ocfg.dce = false;
+    }
+    if opts.has("--no-pushdown") {
+        ocfg.pushdown = false;
+    }
+    if opts.has("--no-join-sides") {
+        ocfg.join_sides = false;
+    }
+    if let Some(s) = opts.get("--speculate") {
+        ocfg.speculate = labyrinth::opt::Speculate::parse(s)?;
     }
     Ok(ocfg)
 }

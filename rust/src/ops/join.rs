@@ -1,12 +1,16 @@
 //! Hash equi-join with build-side state reuse across iteration steps (§7).
 //!
-//! Input 0 is the build side, input 1 the probe side. Elements are
-//! `Pair(key, value)`; output elements are `Pair(key, Pair(build_value,
-//! probe_value))`. Non-pair elements join on the whole value with a `Unit`
-//! payload.
+//! By default input 0 (the logical left) is the build side and input 1
+//! the probe side; the `opt::joinside` pass can flip that choice through
+//! [`HashJoinT::with_build`] when the cost model says the right side is
+//! cheaper to build. Elements are `Pair(key, value)`; output elements are
+//! always `Pair(key, Pair(left_value, right_value))` *regardless of which
+//! side builds* — build-side selection is a physical-plan decision and
+//! must be invisible to program semantics. Non-pair elements join on the
+//! whole value with a `Unit` payload.
 //!
 //! When the build input is loop-invariant, the runtime omits re-pushing it
-//! for subsequent output bags (`keeps_input_state(0) == true`) and the
+//! for subsequent output bags (`keeps_input_state(build) == true`) and the
 //! hash table built once is probed by every iteration step — the paper's
 //! headline optimization over Spark-style per-step jobs (§3.2.2, Fig. 8).
 
@@ -14,7 +18,11 @@ use super::{Collector, Transformation};
 use crate::value::Value;
 use rustc_hash::FxHashMap;
 
-fn key_and_payload(v: &Value) -> (Value, Value) {
+/// Split an element into its join key and payload: pairs key on their
+/// first component, anything else keys on the whole value with a `Unit`
+/// payload. (The `key` / `payload` lambda builtins mirror this, which is
+/// what makes `opt::pushdown`'s predicate rewrites exact.)
+pub fn key_and_payload(v: &Value) -> (Value, Value) {
     match v {
         Value::Pair(p) => (p.0.clone(), p.1.clone()),
         other => (other.clone(), Value::Unit),
@@ -28,18 +36,27 @@ pub struct HashJoinT {
     build_done: bool,
     /// Probe elements that arrived before the build side closed.
     pending_probe: Vec<Value>,
+    /// Which logical input builds the hash table (0 = left, 1 = right).
+    build: usize,
     /// Number of probes served from a retained (reused) build table —
     /// reported by the engine's metrics to validate Fig. 8.
     pub reuse_probes: u64,
 }
 
 impl HashJoinT {
-    /// Create an empty join.
+    /// Create an empty join with the default (left) build side.
     pub fn new() -> HashJoinT {
+        HashJoinT::with_build(0)
+    }
+
+    /// Create an empty join building on logical input `build` (0 or 1).
+    pub fn with_build(build: usize) -> HashJoinT {
+        assert!(build <= 1, "join has two inputs");
         HashJoinT {
             table: FxHashMap::default(),
             build_done: false,
             pending_probe: Vec::new(),
+            build,
             reuse_probes: 0,
         }
     }
@@ -48,7 +65,13 @@ impl HashJoinT {
         let (k, pv) = key_and_payload(v);
         if let Some(matches) = self.table.get(&k) {
             for bv in matches {
-                out.emit(Value::pair(k.clone(), Value::pair(bv.clone(), pv.clone())));
+                // Emit in (left, right) order whichever side built.
+                let (lv, rv) = if self.build == 0 {
+                    (bv.clone(), pv.clone())
+                } else {
+                    (pv.clone(), bv.clone())
+                };
+                out.emit(Value::pair(k.clone(), Value::pair(lv, rv)));
             }
         }
     }
@@ -69,7 +92,7 @@ impl Transformation for HashJoinT {
     }
 
     fn push_in_element(&mut self, input: usize, v: &Value, out: &mut dyn Collector) {
-        if input == 0 {
+        if input == self.build {
             let (k, bv) = key_and_payload(v);
             self.table.entry(k).or_default().push(bv);
         } else if self.build_done {
@@ -80,7 +103,7 @@ impl Transformation for HashJoinT {
     }
 
     fn close_in_bag(&mut self, input: usize, out: &mut dyn Collector) {
-        if input == 0 {
+        if input == self.build {
             self.build_done = true;
             for v in std::mem::take(&mut self.pending_probe) {
                 self.probe(&v, out);
@@ -99,14 +122,14 @@ impl Transformation for HashJoinT {
     }
 
     fn drop_state(&mut self, input: usize) {
-        if input == 0 {
+        if input == self.build {
             self.table.clear();
             self.build_done = false;
         }
     }
 
     fn keeps_input_state(&self, input: usize) -> bool {
-        input == 0
+        input == self.build
     }
 }
 
@@ -175,6 +198,53 @@ mod tests {
         j.drop_state(0);
         let out = run_once(&mut j, &[&[], &[kv(1, 100)]]);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn flipped_build_side_preserves_pair_order() {
+        // Same inputs through both physical choices → identical output.
+        let mut left_build = HashJoinT::new();
+        let a = run_once(&mut left_build, &[&[kv(1, 10), kv(2, 20)], &[kv(1, 100)]]);
+        let mut right_build = HashJoinT::with_build(1);
+        let b = run_once(&mut right_build, &[&[kv(1, 10), kv(2, 20)], &[kv(1, 100)]]);
+        let mut a = a;
+        let mut b = b;
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+        assert_eq!(
+            a,
+            vec![Value::pair(
+                Value::I64(1),
+                Value::pair(Value::I64(10), Value::I64(100))
+            )]
+        );
+    }
+
+    #[test]
+    fn flipped_build_side_reuses_right_state() {
+        let mut j = HashJoinT::with_build(1);
+        // Build = input 1; probe = input 0.
+        let out1 = run_once(&mut j, &[&[kv(1, 10)], &[kv(1, 100)]]);
+        assert_eq!(out1.len(), 1);
+        assert!(j.keeps_input_state(1));
+        assert!(!j.keeps_input_state(0));
+        // Next bag: only the probe (left) side is re-pushed.
+        let mut out2 = VecCollector::default();
+        j.open_out_bag();
+        j.push_in_element(0, &kv(1, 20), &mut out2);
+        j.close_in_bag(0, &mut out2);
+        j.close_out_bag(&mut out2);
+        assert_eq!(out2.items.len(), 1);
+        assert_eq!(
+            out2.items[0],
+            Value::pair(Value::I64(1), Value::pair(Value::I64(20), Value::I64(100)))
+        );
+        assert_eq!(j.reuse_probes, 1);
+        // Announcing a new build bag drops the table.
+        j.drop_state(1);
+        let out3 = run_once(&mut j, &[&[kv(1, 30)], &[]]);
+        assert!(out3.is_empty());
     }
 
     #[test]

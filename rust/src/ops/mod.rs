@@ -98,6 +98,21 @@ impl Default for MakeCtx {
     }
 }
 
+/// Instantiate the transformation for a logical operation, honoring the
+/// plan's choice of hash-join build input (`opt::joinside` annotation;
+/// 0 — the left input — is the §5.3 default). The single entry point for
+/// operator construction on the engine's path.
+pub fn make_with_join_build(
+    op: &Rhs,
+    join_build: usize,
+    ctx: &MakeCtx,
+) -> Result<Box<dyn Transformation>> {
+    match op {
+        Rhs::Join { .. } => Ok(Box::new(join::HashJoinT::with_build(join_build))),
+        _ => make(op, ctx),
+    }
+}
+
 /// Instantiate the transformation for a logical operation.
 pub fn make(op: &Rhs, ctx: &MakeCtx) -> Result<Box<dyn Transformation>> {
     Ok(match op {
@@ -195,5 +210,32 @@ mod tests {
         // Compiled-away ops are rejected.
         assert!(make(&Rhs::Const(Value::I64(1)), &ctx).is_err());
         assert!(make(&Rhs::Copy(0), &ctx).is_err());
+    }
+
+    #[test]
+    fn factory_honors_join_build_side() {
+        let ctx = MakeCtx::default();
+        // Build on input 1: the right element (input 1) is buffered, the
+        // left (input 0) probes — output keeps (left, right) order.
+        let mut t =
+            make_with_join_build(&Rhs::Join { left: 0, right: 1 }, 1, &ctx).unwrap();
+        assert!(t.keeps_input_state(1));
+        assert!(!t.keeps_input_state(0));
+        let out = run_once(
+            t.as_mut(),
+            &[
+                &[Value::pair(Value::I64(1), Value::str("L"))],
+                &[Value::pair(Value::I64(1), Value::str("R"))],
+            ],
+        );
+        assert_eq!(
+            out,
+            vec![Value::pair(
+                Value::I64(1),
+                Value::pair(Value::str("L"), Value::str("R"))
+            )]
+        );
+        // Non-joins pass through to the plain factory.
+        assert!(make_with_join_build(&Rhs::Count { input: 0 }, 0, &ctx).is_ok());
     }
 }

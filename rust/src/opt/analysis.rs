@@ -1,12 +1,14 @@
 //! Shared plan analysis for the optimizer passes: loop structure (from
 //! `cfg::loops`), per-node consumer lists, per-node loop-invariance (a
-//! fixpoint over input edges), and output liveness (reachability to a
-//! sink / condition node / Φ).
+//! fixpoint over input edges), output liveness (reachability to a
+//! sink / condition node / Φ), and the [`super::cost`] estimates
+//! (per-node rows, per-loop trip counts).
 //!
 //! Recomputed by the pass manager before every pass run — passes mutate
 //! the graph (moving, merging, and removing nodes), so ids and blocks are
 //! only valid for the graph snapshot the analysis was computed from.
 
+use super::cost::{self, CostEstimates, CostParams, TripCount};
 use crate::cfg::dom::{self, DomTree};
 use crate::cfg::loops::{self, LoopInfo, NaturalLoop};
 use crate::dataflow::{DataflowGraph, Node, NodeId};
@@ -24,6 +26,8 @@ pub struct PlanAnalysis {
     /// `live[n]`: the node's output reaches a sink (`collect`/`writeFile`),
     /// a condition node, or a Φ. Dead nodes compute bags nobody reads.
     pub live: Vec<bool>,
+    /// Cardinality / trip-count estimates (`opt::cost`).
+    pub cost: CostEstimates,
 }
 
 /// Is this node a liveness root? Sinks and side effects, condition nodes
@@ -40,16 +44,22 @@ pub fn is_root(n: &Node) -> bool {
 /// `readFile` touches the filesystem — hoisting would *speculate* those
 /// even when the loop runs zero iterations.
 ///
-/// **Deliberate speculation contract:** `NamedSource` and `XlaCall` ARE
-/// hoistable even though a hoisted instance executes once per loop
-/// *entry* — including entries where the loop then runs zero iterations.
-/// This mirrors the paper's Flink setting, where a job's source operators
-/// are materialized at job launch regardless of the control flow actually
-/// taken, and it is what makes the Fig. 8 pass-driven hoisting fire. The
-/// visible difference: a zero-trip loop over an *unregistered* source
-/// name panics under the default optimizer where the raw translation
-/// would not (`--no-hoist` / `opt.hoist = off` restores lazy behavior).
-/// UDFs are likewise assumed total. See ROADMAP "Cost model for hoisting".
+/// **Cost-gated speculation:** `NamedSource` and `XlaCall` are listed as
+/// hoistable here, but a hoisted instance executes once per loop *entry*
+/// — including entries where the loop then runs zero iterations — so
+/// hoisting them is *speculation* ([`is_speculative_op`]). The hoist pass
+/// therefore gates them through the `opt::cost` model
+/// ([`PlanAnalysis::invariant_hoistable_gated`]): they move only when the
+/// loop's estimated trip count × the chain's estimated rows clears the
+/// configured threshold (`opt.speculate_threshold`), with a `speculate`
+/// knob (`opt.speculate = auto|always|never`) to force either extreme.
+/// Under the default `auto`, a provably zero-trip loop never speculates —
+/// in particular, a zero-trip loop over an *unregistered* source name
+/// runs clean instead of panicking at loop entry — while the Fig. 8
+/// workload (many trips over a large invariant source) still hoists.
+/// `always` restores the old always-on contract (the paper's Flink
+/// setting, where a job's sources materialize at launch regardless of the
+/// control flow taken). UDFs are assumed total.
 pub fn is_hoistable_op(op: &Rhs) -> bool {
     matches!(
         op,
@@ -69,9 +79,46 @@ pub fn is_hoistable_op(op: &Rhs) -> bool {
     )
 }
 
+/// Ops whose hoisting *speculates* observable work (or a panic): their
+/// chains are what [`PlanAnalysis::invariant_hoistable_gated`] cost-gates.
+/// Everything else hoistable is a pure in-memory transformation whose
+/// per-entry cost is negligible and which cannot fail on its own.
+pub fn is_speculative_op(op: &Rhs) -> bool {
+    matches!(op, Rhs::NamedSource(_) | Rhs::XlaCall { .. })
+}
+
 impl PlanAnalysis {
-    /// Compute the analysis for the current graph.
+    /// Compute the analysis for the current graph (default
+    /// [`CostParams`]).
     pub fn compute(g: &DataflowGraph) -> PlanAnalysis {
+        PlanAnalysis::compute_with(g, &CostParams::default())
+    }
+
+    /// Compute the analysis with explicit cost-model parameters.
+    pub fn compute_with(g: &DataflowGraph, params: &CostParams) -> PlanAnalysis {
+        PlanAnalysis::compute_inner(g, params, None)
+    }
+
+    /// Like [`compute_with`](Self::compute_with), but reuse previously
+    /// simulated trip counts instead of re-running the scalar-chain
+    /// simulation. Trip estimates are CFG-level and the optimizer passes
+    /// never change the CFG (or program semantics), so the pass manager
+    /// simulates once per `optimize` run and hands the result to every
+    /// per-pass analysis; row estimates are still recomputed (rewrites
+    /// legitimately change them).
+    pub fn compute_with_trips(
+        g: &DataflowGraph,
+        params: &CostParams,
+        trips: Vec<TripCount>,
+    ) -> PlanAnalysis {
+        PlanAnalysis::compute_inner(g, params, Some(trips))
+    }
+
+    fn compute_inner(
+        g: &DataflowGraph,
+        params: &CostParams,
+        trips: Option<Vec<TripCount>>,
+    ) -> PlanAnalysis {
         let dt = dom::dominators(&g.cfg);
         let li = loops::find_loops(&g.cfg, &dt);
 
@@ -100,7 +147,11 @@ impl PlanAnalysis {
             }
         }
 
-        PlanAnalysis { dom: dt, loops: li, consumers, live }
+        let est = match trips {
+            Some(trips) => CostEstimates { rows: cost::estimate_rows(g, params), trips },
+            None => cost::estimate(g, &li, params),
+        };
+        PlanAnalysis { dom: dt, loops: li, consumers, live, cost: est }
     }
 
     /// The loop's *preamble anchor*: the unique predecessor of the header
@@ -131,12 +182,25 @@ impl PlanAnalysis {
     /// operators (a guarded `source(..)` of an unregistered name must
     /// keep panicking only when the guard is taken).
     pub fn invariant_hoistable(&self, g: &DataflowGraph, l: &NaturalLoop) -> Vec<NodeId> {
+        self.invariant_hoistable_allowing(g, l, |_| true)
+    }
+
+    /// [`invariant_hoistable`](Self::invariant_hoistable) restricted to
+    /// nodes passing `allow` (speculation gating): a node failing `allow`
+    /// stays in the loop, and so does everything that depends on it.
+    fn invariant_hoistable_allowing(
+        &self,
+        g: &DataflowGraph,
+        l: &NaturalLoop,
+        allow: impl Fn(&Node) -> bool,
+    ) -> Vec<NodeId> {
         let in_body = |b: BlockId| l.body.binary_search(&b).is_ok();
         let candidate = |n: &Node| -> bool {
             in_body(n.block)
                 && self.dom.dominates(n.block, l.latch)
                 && n.cond.is_none()
                 && is_hoistable_op(&n.op)
+                && allow(n)
                 && self.consumers[n.id]
                     .iter()
                     .all(|&(c, _)| !matches!(g.nodes[c].op, Rhs::Phi(_)))
@@ -162,6 +226,66 @@ impl PlanAnalysis {
             }
         }
         (0..g.nodes.len()).filter(|&i| invariant[i]).collect()
+    }
+
+    /// The cost-gated hoist set for loop index `li` (see
+    /// [`is_hoistable_op`] for the speculation contract). Returns the
+    /// hoistable node ids and how many nodes the gate kept in the loop
+    /// (the difference against the ungated set — gated speculative
+    /// sources plus their dependent chains).
+    ///
+    /// `speculate` selects the policy; under [`super::Speculate::Auto`] a
+    /// speculative node `s` hoists only when
+    /// `trips × rows(s) ≥ threshold`, where `trips` is the loop's
+    /// [`TripCount`] estimate (`default_trips` when unknown) and
+    /// `rows(s)` the cost model's output-row estimate — a proxy for the
+    /// per-iteration work the hoist saves. Additionally, a source that
+    /// would *panic* if executed (a `NamedSource` with no compile-time
+    /// size hint, i.e. unregistered) never hoists out of a loop whose
+    /// trip count is not certainly positive — so a loop that happens to
+    /// run zero times at runtime cannot panic on speculated work under
+    /// the default configuration, whether its bound is static or
+    /// data-dependent.
+    pub fn invariant_hoistable_gated(
+        &self,
+        g: &DataflowGraph,
+        li: usize,
+        speculate: super::Speculate,
+        threshold: f64,
+        default_trips: u64,
+    ) -> (Vec<NodeId>, usize) {
+        let l = &self.loops.loops[li];
+        let full = self.invariant_hoistable_allowing(g, l, |_| true);
+        let gated = match speculate {
+            super::Speculate::Always => return (full, 0),
+            super::Speculate::Never => {
+                self.invariant_hoistable_allowing(g, l, |n| !is_speculative_op(&n.op))
+            }
+            super::Speculate::Auto => {
+                let est = self.cost.trips.get(li).copied().unwrap_or(TripCount::Unknown);
+                let trips = est.or_default(default_trips) as f64;
+                // With an Exact(n ≥ 1) estimate the loop certainly runs,
+                // so the body would execute the chain anyway and hoisting
+                // cannot introduce a failure the program didn't have. An
+                // Unknown bound might be zero at runtime, so a source that
+                // would PANIC if executed (unregistered — no size hint at
+                // compile time) must stay lazy; registered sources merely
+                // risk wasted work and go through the threshold test.
+                let certain = matches!(est, TripCount::Exact(n) if n > 0);
+                self.invariant_hoistable_allowing(g, l, |n| {
+                    if !is_speculative_op(&n.op) {
+                        return true;
+                    }
+                    if !certain && matches!(n.op, Rhs::NamedSource(_)) && n.size_hint.is_none()
+                    {
+                        return false;
+                    }
+                    trips * self.cost.rows[n.id] >= threshold
+                })
+            }
+        };
+        let skipped = full.len() - gated.len();
+        (gated, skipped)
     }
 }
 

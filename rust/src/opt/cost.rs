@@ -1,0 +1,417 @@
+//! `opt::cost` — a lightweight cost/cardinality model for the plan
+//! optimizer. Two estimates, both shared through
+//! [`super::analysis::PlanAnalysis`]:
+//!
+//! * **Per-node row estimates** ([`estimate_rows`]): propagated from
+//!   source sizes (`Node::size_hint`, the workload registry) through
+//!   textbook selectivity defaults (filters keep [`CostParams::filter_selectivity`]
+//!   of their input, flatMaps expand by [`CostParams::flatmap_expansion`],
+//!   keyed aggregations keep [`CostParams::key_ratio`] distinct keys, ...).
+//!   Singleton (lifted-scalar) nodes are pinned to 1 row. Used by the
+//!   join build-side chooser and the speculative-hoist gate, and rendered
+//!   into DOT dumps.
+//! * **Loop trip-count estimates** ([`estimate_trips`]): derived from the
+//!   *condition structure* of each natural loop. Lifted scalar control
+//!   chains (loop counters, their update maps, the condition's comparison)
+//!   are closed singleton dataflows over constants, so the model simply
+//!   **simulates** them — evaluating the same UDFs the runtime would — up
+//!   to a cap. `while (d <= 3)` with `d = 1; d = d + 1` yields
+//!   `Exact(3)`; `d = 9; while (d < 3)` yields `Exact(0)` (the zero-trip
+//!   case that makes speculation a pure loss); conditions that depend on
+//!   bag data (counts, reductions, file contents) yield `Unknown` and the
+//!   consumer falls back to a configured default.
+//!
+//! The simulation executes (a bounded prefix of) the same scalar-UDF
+//! sequence the runtime itself would execute — the header condition
+//! always evaluates at least once at runtime — so it cannot observe
+//! behavior the program would not exhibit, and the pass manager runs it
+//! once per `optimize` call. The contract this leans on: scalar control
+//! UDFs are **pure and total**, the same assumption the rest of the
+//! optimizer makes (a side-effecting loop-counter closure from the
+//! builder API would observe up to `sim_trip_cap` compile-time calls).
+//! UDF panics during simulation are caught and degrade the estimate to
+//! `Unknown`.
+
+use crate::cfg::loops::{LoopInfo, NaturalLoop};
+use crate::dataflow::{DataflowGraph, NodeId};
+use crate::frontend::{BlockId, FusedStage, Rhs};
+use crate::value::Value;
+use rustc_hash::{FxHashMap, FxHashSet};
+
+/// Tuning knobs of the cardinality model. Deliberately few and coarse —
+/// the passes that consume the estimates only need relative order of
+/// magnitude, not accuracy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostParams {
+    /// Fraction of rows a `filter` keeps.
+    pub filter_selectivity: f64,
+    /// Output-per-input factor of a `flatMap`.
+    pub flatmap_expansion: f64,
+    /// Scale on `max(|L|, |R|)` for equi-join output size (≈ foreign-key
+    /// join).
+    pub join_selectivity: f64,
+    /// Distinct-key fraction for `reduceByKey` / `distinct`.
+    pub key_ratio: f64,
+    /// Rows assumed for sources of unknown size (`readFile`, unregistered
+    /// `source(..)` names).
+    pub default_source_rows: f64,
+    /// Iteration cap for the trip-count simulation; loops that run longer
+    /// report [`TripCount::Unknown`]. Kept small because the pass manager
+    /// recomputes the analysis before every pass run — the consumers only
+    /// need `Exact(0)` vs an order of magnitude, and beyond the cap the
+    /// `default_trips` fallback is just as good.
+    pub sim_trip_cap: u64,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams {
+            filter_selectivity: 0.25,
+            flatmap_expansion: 4.0,
+            join_selectivity: 1.0,
+            key_ratio: 0.25,
+            default_source_rows: 1024.0,
+            sim_trip_cap: 4096,
+        }
+    }
+}
+
+/// A loop trip-count estimate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TripCount {
+    /// The control chain is closed over constants and was simulated to
+    /// completion: the loop runs exactly this many iterations per entry.
+    Exact(u64),
+    /// Data-dependent (or pathologically long) control — no estimate.
+    Unknown,
+}
+
+impl TripCount {
+    /// Collapse to a number, substituting `default` for [`TripCount::Unknown`].
+    pub fn or_default(self, default: u64) -> u64 {
+        match self {
+            TripCount::Exact(n) => n,
+            TripCount::Unknown => default,
+        }
+    }
+}
+
+/// The computed estimates, shared by all passes through `PlanAnalysis`.
+#[derive(Clone, Debug)]
+pub struct CostEstimates {
+    /// Estimated output rows per node (indexed by [`NodeId`]).
+    pub rows: Vec<f64>,
+    /// Trip estimate per natural loop (parallel to `LoopInfo::loops`).
+    pub trips: Vec<TripCount>,
+}
+
+/// Compute both estimates for a graph.
+pub fn estimate(g: &DataflowGraph, loops: &LoopInfo, p: &CostParams) -> CostEstimates {
+    CostEstimates {
+        rows: estimate_rows(g, p),
+        trips: loops.loops.iter().map(|l| estimate_trips(g, l, p.sim_trip_cap)).collect(),
+    }
+}
+
+/// Estimated output rows per node: a bounded fixpoint from the sources
+/// (Φ cycles are iterated a few sweeps and clamped, which is plenty for
+/// an order-of-magnitude signal).
+pub fn estimate_rows(g: &DataflowGraph, p: &CostParams) -> Vec<f64> {
+    const SWEEPS: usize = 8;
+    const CLAMP: f64 = 1e12;
+    let mut rows = vec![0.0f64; g.nodes.len()];
+    for _ in 0..SWEEPS {
+        let mut changed = false;
+        for n in &g.nodes {
+            let r = |i: usize| rows[n.inputs[i].src];
+            let est = if n.singleton {
+                1.0
+            } else {
+                match &n.op {
+                    Rhs::BagLit(items) => items.len() as f64,
+                    Rhs::NamedSource(_) | Rhs::ReadFile { .. } => n
+                        .size_hint
+                        .map(|s| s as f64)
+                        .unwrap_or(p.default_source_rows),
+                    Rhs::Map { .. } | Rhs::XlaCall { .. } | Rhs::Collect { .. } => {
+                        if n.inputs.is_empty() {
+                            1.0
+                        } else {
+                            (0..n.inputs.len()).map(r).fold(0.0, f64::max)
+                        }
+                    }
+                    Rhs::Filter { .. } => r(0) * p.filter_selectivity,
+                    Rhs::FlatMap { .. } => r(0) * p.flatmap_expansion,
+                    Rhs::Fused { stages, .. } => stages.iter().fold(r(0), |acc, s| match s {
+                        FusedStage::Map(_) => acc,
+                        FusedStage::Filter(_) => acc * p.filter_selectivity,
+                        FusedStage::FlatMap(_) => acc * p.flatmap_expansion,
+                    }),
+                    Rhs::Join { .. } => p.join_selectivity * r(0).max(r(1)),
+                    Rhs::ReduceByKey { .. } | Rhs::Distinct { .. } => r(0) * p.key_ratio,
+                    Rhs::Union { .. } => r(0) + r(1),
+                    Rhs::Cross { .. } => r(0) * r(1),
+                    Rhs::Phi(_) => (0..n.inputs.len()).map(r).fold(0.0, f64::max),
+                    Rhs::Reduce { .. } | Rhs::Count { .. } | Rhs::WriteFile { .. } => 1.0,
+                    Rhs::Const(_)
+                    | Rhs::Copy(_)
+                    | Rhs::ScalarUn { .. }
+                    | Rhs::ScalarBin { .. } => 1.0,
+                }
+            };
+            let est = est.min(CLAMP);
+            if (est - rows[n.id]).abs() > 1e-9 {
+                rows[n.id] = est;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    rows
+}
+
+/// Estimate how many iterations loop `l` runs per entry by simulating its
+/// lifted scalar control chain (see the module docs). UDF panics during
+/// simulation are caught and reported as [`TripCount::Unknown`].
+pub fn estimate_trips(g: &DataflowGraph, l: &NaturalLoop, cap: u64) -> TripCount {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| simulate_trips(g, l, cap)))
+        .unwrap_or(TripCount::Unknown)
+}
+
+/// The scalar-chain evaluator backing [`estimate_trips`]: evaluates the
+/// closed singleton subgraph (literal constants, lifted scalar maps,
+/// crosses, tracked header Φs) and bails with `None` on anything else.
+struct ScalarSim<'a> {
+    g: &'a DataflowGraph,
+    /// Current value of each tracked loop-header Φ.
+    phi_env: FxHashMap<NodeId, Value>,
+    /// Per-iteration memo (cleared when the Φs advance).
+    memo: FxHashMap<NodeId, Value>,
+    /// Cycle guard.
+    visiting: FxHashSet<NodeId>,
+}
+
+impl ScalarSim<'_> {
+    fn eval(&mut self, id: NodeId) -> Option<Value> {
+        if let Some(v) = self.phi_env.get(&id) {
+            return Some(v.clone());
+        }
+        if let Some(v) = self.memo.get(&id) {
+            return Some(v.clone());
+        }
+        if !self.visiting.insert(id) {
+            return None; // cycle through an untracked Φ
+        }
+        let g = self.g;
+        let n = &g.nodes[id];
+        let v = match &n.op {
+            Rhs::BagLit(items) if items.len() == 1 => Some(items[0].clone()),
+            Rhs::Map { udf, .. } => self.eval(n.inputs[0].src).map(|x| udf.call(&x)),
+            Rhs::Cross { .. } => {
+                let a = self.eval(n.inputs[0].src);
+                let b = self.eval(n.inputs[1].src);
+                match (a, b) {
+                    (Some(a), Some(b)) => Some(Value::pair(a, b)),
+                    _ => None,
+                }
+            }
+            Rhs::Fused { stages, .. } => {
+                let mut cur = self.eval(n.inputs[0].src);
+                for s in stages {
+                    cur = match (cur, s) {
+                        (Some(x), FusedStage::Map(u)) => Some(u.call(&x)),
+                        _ => None,
+                    };
+                }
+                cur
+            }
+            _ => None, // bag-derived / data-dependent: not simulatable
+        };
+        self.visiting.remove(&id);
+        if let Some(v) = &v {
+            self.memo.insert(id, v.clone());
+        }
+        v
+    }
+}
+
+fn simulate_trips(g: &DataflowGraph, l: &NaturalLoop, cap: u64) -> TripCount {
+    let in_body = |b: BlockId| l.body.binary_search(&b).is_ok();
+
+    // The header's condition node decides whether an iteration runs.
+    let Some(cond) = g
+        .nodes
+        .iter()
+        .find(|n| n.block == l.header && n.cond.is_some())
+    else {
+        return TripCount::Unknown;
+    };
+    let spec = cond.cond.as_ref().expect("checked above");
+    let then_enters = spec.then_chain.first().map(|&b| in_body(b)).unwrap_or(false);
+    let else_enters = spec.else_chain.first().map(|&b| in_body(b)).unwrap_or(false);
+    let continue_on = match (then_enters, else_enters) {
+        (true, false) => true,
+        (false, true) => false,
+        _ => return TripCount::Unknown, // irregular shape
+    };
+
+    // Header Φs with a unique entry argument and a unique back-edge
+    // argument are trackable loop state; anything the condition slice
+    // needs beyond these makes the simulation bail.
+    let mut sim = ScalarSim {
+        g,
+        phi_env: FxHashMap::default(),
+        memo: FxHashMap::default(),
+        visiting: FxHashSet::default(),
+    };
+    let mut latches: Vec<(NodeId, NodeId)> = Vec::new(); // (phi, back-edge src)
+    for n in &g.nodes {
+        if n.block != l.header || !matches!(n.op, Rhs::Phi(_)) {
+            continue;
+        }
+        let entry: Vec<NodeId> = n
+            .inputs
+            .iter()
+            .filter(|i| !in_body(i.src_block))
+            .map(|i| i.src)
+            .collect();
+        let latch: Vec<NodeId> = n
+            .inputs
+            .iter()
+            .filter(|i| in_body(i.src_block))
+            .map(|i| i.src)
+            .collect();
+        let ([e], [b]) = (entry.as_slice(), latch.as_slice()) else {
+            continue; // untracked: the slice bails if it needs this Φ
+        };
+        if let Some(v) = sim.eval(*e) {
+            sim.phi_env.insert(n.id, v);
+            latches.push((n.id, *b));
+        }
+    }
+
+    let cond_id = cond.id;
+    let mut trips = 0u64;
+    loop {
+        sim.memo.clear();
+        let Some(Value::Bool(cv)) = sim.eval(cond_id) else {
+            return TripCount::Unknown;
+        };
+        if cv != continue_on {
+            return TripCount::Exact(trips);
+        }
+        trips += 1;
+        if trips >= cap {
+            return TripCount::Unknown;
+        }
+        // Advance all tracked Φs simultaneously.
+        let mut next = Vec::with_capacity(latches.len());
+        for &(phi, src) in &latches {
+            match sim.eval(src) {
+                Some(v) => next.push((phi, v)),
+                None => return TripCount::Unknown,
+            }
+        }
+        for (phi, v) in next {
+            sim.phi_env.insert(phi, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::{dom, loops};
+    use crate::frontend::parse_and_lower;
+    use crate::opt::OptConfig;
+
+    fn raw(src: &str) -> DataflowGraph {
+        crate::compile_with(&parse_and_lower(src).unwrap(), &OptConfig::none())
+            .unwrap()
+            .0
+    }
+
+    fn trips_of(src: &str) -> Vec<TripCount> {
+        let g = raw(src);
+        let dt = dom::dominators(&g.cfg);
+        let li = loops::find_loops(&g.cfg, &dt);
+        li.loops
+            .iter()
+            .map(|l| estimate_trips(&g, l, CostParams::default().sim_trip_cap))
+            .collect()
+    }
+
+    #[test]
+    fn counter_loop_trips_are_exact() {
+        let t = trips_of("d = 1; while (d <= 3) { d = d + 1; } collect(bag(1), \"x\");");
+        assert_eq!(t, vec![TripCount::Exact(3)]);
+    }
+
+    #[test]
+    fn zero_trip_loop_is_detected() {
+        let t = trips_of("d = 9; while (d < 3) { d = d + 1; } collect(bag(1), \"x\");");
+        assert_eq!(t, vec![TripCount::Exact(0)]);
+    }
+
+    #[test]
+    fn data_dependent_condition_is_unknown() {
+        // The bound comes from a bag reduction — not simulatable.
+        let t = trips_of(
+            "n = bag(5, 6).reduce(|a, b| a + b); d = 1; while (d <= n) { d = d + 1; } collect(bag(1), \"x\");",
+        );
+        assert_eq!(t, vec![TripCount::Unknown]);
+    }
+
+    #[test]
+    fn nested_counter_loops_both_exact() {
+        let t = trips_of(
+            "i = 0; while (i < 2) { j = 0; while (j < 5) { j = j + 1; } i = i + 1; } collect(bag(1), \"x\");",
+        );
+        let mut t = t;
+        t.sort_by_key(|c| match c {
+            TripCount::Exact(n) => *n,
+            TripCount::Unknown => u64::MAX,
+        });
+        assert_eq!(t, vec![TripCount::Exact(2), TripCount::Exact(5)]);
+    }
+
+    #[test]
+    fn rows_follow_source_sizes_and_selectivities() {
+        let g = raw(
+            "a = bag(1, 2, 3, 4); b = a.filter(|x| x > 1); c = a.union(a); collect(b, \"b\"); collect(c, \"c\");",
+        );
+        let p = CostParams::default();
+        let rows = estimate_rows(&g, &p);
+        let lit = g.nodes.iter().find(|n| matches!(n.op, Rhs::BagLit(ref v) if v.len() == 4)).unwrap();
+        assert!((rows[lit.id] - 4.0).abs() < 1e-9);
+        let f = g.nodes.iter().find(|n| matches!(n.op, Rhs::Filter { .. })).unwrap();
+        assert!((rows[f.id] - 4.0 * p.filter_selectivity).abs() < 1e-9);
+        let u = g.nodes.iter().find(|n| matches!(n.op, Rhs::Union { .. })).unwrap();
+        assert!((rows[u.id] - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registered_source_rows_use_registry_size() {
+        let reg = crate::workload::registry::global();
+        reg.put("cost_test_src", (0..37).map(Value::I64).collect());
+        let g = raw("s = source(\"cost_test_src\"); collect(s, \"s\");");
+        let rows = estimate_rows(&g, &CostParams::default());
+        let s = g.nodes.iter().find(|n| matches!(n.op, Rhs::NamedSource(_))).unwrap();
+        assert_eq!(s.size_hint, Some(37));
+        assert!((rows[s.id] - 37.0).abs() < 1e-9);
+        reg.clear_prefix("cost_test_src");
+    }
+
+    #[test]
+    fn singletons_are_one_row() {
+        let g = raw("n = bag(1, 2, 3).count(); collect(bag(0).map(|x| x + 1), \"x\");");
+        let rows = estimate_rows(&g, &CostParams::default());
+        for n in &g.nodes {
+            if n.singleton {
+                assert!((rows[n.id] - 1.0).abs() < 1e-9, "{}", n.name);
+            }
+        }
+    }
+}

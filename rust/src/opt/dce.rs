@@ -82,6 +82,8 @@ mod tests {
             cond: None,
             singleton: false,
             hoisted_from: None,
+            size_hint: None,
+            build_side: None,
         });
         g.node_of_var.insert(dead_var, id);
         verify_integrity(&g).unwrap();

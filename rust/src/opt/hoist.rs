@@ -17,12 +17,37 @@
 //! of an inner loop is the outer loop's body).
 
 use super::analysis::PlanAnalysis;
-use super::{refresh_edges, Pass, PassOutcome};
+use super::{refresh_edges, Pass, PassOutcome, Speculate};
 use crate::dataflow::DataflowGraph;
 use crate::error::Result;
 
-/// The hoisting pass.
-pub struct HoistPass;
+/// The hoisting pass. Speculative chains (`NamedSource` / `XlaCall`, see
+/// [`super::analysis::is_speculative_op`]) are gated through the cost
+/// model: with [`Speculate::Auto`] they hoist only when the enclosing
+/// loop's estimated trip count × the chain's estimated rows clears
+/// `threshold`, so a provably zero-trip loop never pays (or panics for)
+/// speculated work.
+pub struct HoistPass {
+    /// Speculation policy (`opt.speculate`).
+    pub speculate: Speculate,
+    /// Minimum `trips × rows` for a speculative hoist
+    /// (`opt.speculate_threshold`).
+    pub threshold: f64,
+    /// Trip-count fallback when the loop bound is data-dependent
+    /// (`opt.default_trips`).
+    pub default_trips: u64,
+}
+
+impl Default for HoistPass {
+    fn default() -> Self {
+        let d = super::OptConfig::default();
+        HoistPass {
+            speculate: d.speculate,
+            threshold: d.speculate_threshold,
+            default_trips: d.default_trips,
+        }
+    }
+}
 
 impl Pass for HoistPass {
     fn name(&self) -> &'static str {
@@ -41,7 +66,21 @@ impl Pass for HoistPass {
             let Some(pre) = a.preheader(g, l) else {
                 continue; // no unique entry edge — skip this loop
             };
-            for nid in a.invariant_hoistable(g, l) {
+            let (hoistable, gated) = a.invariant_hoistable_gated(
+                g,
+                li,
+                self.speculate,
+                self.threshold,
+                self.default_trips,
+            );
+            if gated > 0 {
+                out.skipped += gated;
+                out.details.push(format!(
+                    "{gated} node(s) kept in loop hdr bb{}: speculative chain below cost gate",
+                    l.header
+                ));
+            }
+            for nid in hoistable {
                 let n = &mut g.nodes[nid];
                 out.details.push(format!(
                     "{} [{}] bb{} -> bb{pre} (loop hdr bb{})",
@@ -74,7 +113,7 @@ mod tests {
         let p = parse_and_lower(src).unwrap();
         let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
         let a = PlanAnalysis::compute(&g);
-        let out = HoistPass.run(&mut g, &a).unwrap();
+        let out = HoistPass::default().run(&mut g, &a).unwrap();
         verify_integrity(&g).unwrap();
         (g, out)
     }
@@ -137,6 +176,64 @@ mod tests {
         let (g, out) = hoisted_graph("a = bag(1, 2); b = a.map(|x| x + 1); collect(b, \"b\");");
         assert_eq!(out.changed, 0);
         assert!(g.nodes.iter().all(|n| n.hoisted_from.is_none()));
+    }
+
+    #[test]
+    fn zero_trip_loop_gates_speculative_source() {
+        // The loop provably never runs: the source (and its dependent
+        // chain) must stay in the body under the default Auto gate...
+        let src = "d = 9; while (d < 3) { v = source(\"hoist_gate_unregistered\").map(|x| x + 1); collect(v, \"v\"); d = d + 1; } collect(bag(1), \"ok\");";
+        let (g, out) = hoisted_graph(src);
+        assert!(out.skipped > 0, "gate should report skips: {:?}", out.details);
+        for n in &g.nodes {
+            if matches!(n.op, Rhs::NamedSource(_)) {
+                assert!(n.hoisted_from.is_none(), "zero-trip source must not hoist");
+            }
+        }
+        // ...while `always` restores the old speculation contract.
+        let p = parse_and_lower(src).unwrap();
+        let (mut g2, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        let a = PlanAnalysis::compute(&g2);
+        let always = HoistPass { speculate: crate::opt::Speculate::Always, ..HoistPass::default() };
+        always.run(&mut g2, &a).unwrap();
+        assert!(
+            g2.nodes
+                .iter()
+                .any(|n| matches!(n.op, Rhs::NamedSource(_)) && n.hoisted_from.is_some()),
+            "speculate=always hoists regardless of trip count"
+        );
+    }
+
+    #[test]
+    fn unknown_trip_loop_keeps_unregistered_source_lazy() {
+        // The bound is data-dependent (count of an empty bag → 0 at
+        // runtime), so the trip estimate is Unknown. An UNREGISTERED
+        // source would panic if speculated — it must stay in the loop
+        // even though the default-trips threshold test would pass.
+        let (g, _) = hoisted_graph(
+            "n = bag().count(); d = 0; while (d < n) { v = source(\"hoist_gate_unknown\").map(|x| x + 1); collect(v, \"v\"); d = d + 1; } collect(bag(1), \"ok\");",
+        );
+        for n in &g.nodes {
+            if matches!(n.op, Rhs::NamedSource(_)) {
+                assert!(n.hoisted_from.is_none(), "unknown-trip unregistered source must not hoist");
+            }
+        }
+    }
+
+    #[test]
+    fn positive_trip_loop_still_hoists_sources() {
+        crate::workload::registry::global()
+            .put("hoist_gate_registered", vec![crate::value::Value::I64(1), crate::value::Value::I64(2)]);
+        let (g, _) = hoisted_graph(
+            "d = 1; while (d <= 3) { v = source(\"hoist_gate_registered\").map(|x| x + 1); collect(v, \"v\"); d = d + 1; }",
+        );
+        assert!(
+            g.nodes
+                .iter()
+                .any(|n| matches!(n.op, Rhs::NamedSource(_)) && n.hoisted_from.is_some()),
+            "3-trip loop over a 2-row source clears the default gate"
+        );
+        crate::workload::registry::global().clear_prefix("hoist_gate_registered");
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Join build-side selection: pick which input of each hash join becomes
+//! the build side, from the `opt::cost` model. The logical left input is
+//! the §5.3 default; this pass annotates `Node::build_side` when the
+//! estimates say the other side is cheaper to build, `ExecPlan` copies
+//! the annotation, and `ops::join::HashJoinT` honors it (output pair
+//! order is unchanged, so the choice is invisible to program semantics).
+//!
+//! The cost of building on side `s` for a join executing inside a loop
+//! with `T` estimated trips is
+//!
+//! ```text
+//! cost(s) = BUILD_WEIGHT · rows(s) · (invariant(s) ? 1 : T)   (build)
+//!         + rows(other)  · T                                  (probe)
+//! ```
+//!
+//! Building is weighted heavier than probing (hash-table inserts +
+//! per-step retention beat streaming), and a loop-invariant build side is
+//! paid once per loop entry thanks to `opt::hoist` + the §7 runtime
+//! reuse, while a loop-varying build side rebuilds every iteration. This
+//! makes the pass prefer (a) the invariant side when one exists — keeping
+//! the Fig. 8 cross-step hash-table reuse alive — and (b) the smaller
+//! side outside loops, the classic textbook rule. A flip needs a clear
+//! margin (`MARGIN`) so near-ties never oscillate.
+
+use super::analysis::PlanAnalysis;
+use super::{Pass, PassOutcome};
+use crate::dataflow::DataflowGraph;
+use crate::error::Result;
+use crate::frontend::Rhs;
+
+/// Relative cost advantage required before flipping away from the
+/// current choice (hysteresis for estimate noise).
+const MARGIN: f64 = 0.9;
+
+/// Hash-table build cost per row, relative to streaming a probe row.
+const BUILD_WEIGHT: f64 = 2.0;
+
+/// The build-side selection pass.
+pub struct JoinSidePass {
+    /// Trip-count fallback for data-dependent loops
+    /// (`opt.default_trips`).
+    pub default_trips: u64,
+}
+
+impl Default for JoinSidePass {
+    fn default() -> Self {
+        JoinSidePass { default_trips: super::OptConfig::default().default_trips }
+    }
+}
+
+impl Pass for JoinSidePass {
+    fn name(&self) -> &'static str {
+        "joinside"
+    }
+
+    fn run(&self, g: &mut DataflowGraph, a: &PlanAnalysis) -> Result<PassOutcome> {
+        let mut out = PassOutcome::default();
+        for id in 0..g.nodes.len() {
+            if !matches!(g.nodes[id].op, Rhs::Join { .. }) {
+                continue;
+            }
+            let n = &g.nodes[id];
+            // Innermost loop the join executes in (smallest body wins).
+            let enclosing = a
+                .loops
+                .loops
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.body.binary_search(&n.block).is_ok())
+                .min_by_key(|(_, l)| l.body.len());
+            let trips = match enclosing {
+                None => 1.0,
+                Some((li, _)) => a
+                    .cost
+                    .trips
+                    .get(li)
+                    .copied()
+                    .unwrap_or(super::cost::TripCount::Unknown)
+                    .or_default(self.default_trips)
+                    .max(1) as f64,
+            };
+            let invariant = |side: usize| -> bool {
+                match enclosing {
+                    None => true,
+                    Some((_, l)) => l.body.binary_search(&n.inputs[side].src_block).is_err(),
+                }
+            };
+            let rows = |side: usize| a.cost.rows[n.inputs[side].src];
+            let cost = |side: usize| -> f64 {
+                let build = BUILD_WEIGHT * rows(side) * if invariant(side) { 1.0 } else { trips };
+                let probe = rows(1 - side) * trips;
+                build + probe
+            };
+            let current = n.build_side.unwrap_or(0);
+            let flipped = 1 - current;
+            let desired = if cost(flipped) < MARGIN * cost(current) { flipped } else { current };
+            if desired == current {
+                continue;
+            }
+            let detail = format!(
+                "{}: build side {} -> {} (rows l≈{:.0} r≈{:.0}, trips≈{:.0})",
+                n.name,
+                if current == 0 { "left" } else { "right" },
+                if desired == 0 { "left" } else { "right" },
+                rows(0),
+                rows(1),
+                trips,
+            );
+            out.details.push(detail);
+            out.changed += 1;
+            g.nodes[id].build_side = Some(desired);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::single_thread;
+    use crate::exec::{run, ExecConfig, ExecPlan};
+    use crate::frontend::parse_and_lower;
+    use crate::opt::{verify_integrity, OptConfig};
+    use crate::value::Value;
+    use std::sync::Arc;
+
+    fn selected(src: &str) -> (DataflowGraph, PassOutcome) {
+        let p = parse_and_lower(src).unwrap();
+        let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        let a = PlanAnalysis::compute(&g);
+        let out = JoinSidePass::default().run(&mut g, &a).unwrap();
+        verify_integrity(&g).unwrap();
+        (g, out)
+    }
+
+    fn put(name: &str, n: i64) {
+        crate::workload::registry::global()
+            .put(name, (0..n).map(Value::I64).collect());
+    }
+
+    #[test]
+    fn big_build_side_flips_to_small() {
+        put("js_big", 512);
+        put("js_small", 8);
+        // joinBuild: the receiver (big) is the build side — pathological.
+        let (g, out) = selected(
+            "big = source(\"js_big\").map(|v| pair(v % 8, v)); small = source(\"js_small\").map(|v| pair(v % 8, v)); j = big.joinBuild(small); collect(j, \"j\");",
+        );
+        assert_eq!(out.changed, 1, "{:?}", out.details);
+        let join = g.nodes.iter().find(|n| matches!(n.op, Rhs::Join { .. })).unwrap();
+        assert_eq!(join.build_side, Some(1), "build moves to the small right side");
+        // The exec plan copies the annotation.
+        let plan = ExecPlan::new(Arc::new(g.clone()), 2);
+        assert_eq!(plan.join_build[join.id], 1);
+        crate::workload::registry::global().clear_prefix("js_");
+    }
+
+    #[test]
+    fn small_build_side_is_kept() {
+        put("js2_big", 512);
+        put("js2_small", 8);
+        // join: the argument (small) is already the build side.
+        let (g, out) = selected(
+            "big = source(\"js2_big\").map(|v| pair(v % 8, v)); small = source(\"js2_small\").map(|v| pair(v % 8, v)); j = big.join(small); collect(j, \"j\");",
+        );
+        assert_eq!(out.changed, 0, "{:?}", out.details);
+        let join = g.nodes.iter().find(|n| matches!(n.op, Rhs::Join { .. })).unwrap();
+        assert_eq!(join.build_side, None);
+        crate::workload::registry::global().clear_prefix("js2_");
+    }
+
+    #[test]
+    fn invariant_side_preferred_inside_loops() {
+        // Inside a 10-trip loop the invariant (even slightly larger)
+        // side stays the build: rebuilding the varying side every step
+        // would beat it only at implausible size ratios.
+        put("js3_dim", 64);
+        let (g, out) = selected(
+            r#"
+            dim = source("js3_dim").map(|v| pair(v % 8, v));
+            i = 0;
+            while (i < 10) {
+                probe = bag(1, 2, 3, 4, 5, 6, 7, 8).map(|v| pair((v + i) % 8, v));
+                j = probe.join(dim);
+                collect(j, "j");
+                i = i + 1;
+            }
+            "#,
+        );
+        assert_eq!(out.changed, 0, "{:?}", out.details);
+        let join = g.nodes.iter().find(|n| matches!(n.op, Rhs::Join { .. })).unwrap();
+        assert_eq!(join.build_side, None, "invariant dim stays the build side");
+        crate::workload::registry::global().clear_prefix("js3_");
+    }
+
+    #[test]
+    fn decision_is_stable_across_reruns() {
+        put("js4_big", 512);
+        put("js4_small", 8);
+        let p = parse_and_lower(
+            "big = source(\"js4_big\").map(|v| pair(v % 8, v)); small = source(\"js4_small\").map(|v| pair(v % 8, v)); j = big.joinBuild(small); collect(j, \"j\");",
+        )
+        .unwrap();
+        let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        let a = PlanAnalysis::compute(&g);
+        let first = JoinSidePass::default().run(&mut g, &a).unwrap();
+        assert_eq!(first.changed, 1);
+        let a2 = PlanAnalysis::compute(&g);
+        let second = JoinSidePass::default().run(&mut g, &a2).unwrap();
+        assert_eq!(second.changed, 0, "no oscillation: {:?}", second.details);
+        crate::workload::registry::global().clear_prefix("js4_");
+    }
+
+    #[test]
+    fn flipped_build_side_matches_oracle() {
+        put("js5_big", 64);
+        put("js5_small", 4);
+        let src = "big = source(\"js5_big\").map(|v| pair(v % 4, v)); small = source(\"js5_small\").map(|v| pair(v % 4, v * 10)); j = big.joinBuild(small); collect(j, \"j\");";
+        let program = parse_and_lower(src).unwrap();
+        let oracle = single_thread::run(&program, &Default::default()).unwrap();
+        let (g, out) = selected(src);
+        assert_eq!(out.changed, 1);
+        let res = run(&g, &ExecConfig::default()).unwrap();
+        let mut got = res.collected("j").to_vec();
+        let mut want = oracle.collected("j").to_vec();
+        got.sort();
+        want.sort();
+        assert_eq!(got, want, "pair order must survive the flip");
+        crate::workload::registry::global().clear_prefix("js5_");
+    }
+}

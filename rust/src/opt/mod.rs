@@ -18,27 +18,71 @@
 //!   per-bag coordination messages on the hot path.
 //! * [`dce`] — **dead-operator elimination**: nodes whose outputs reach no
 //!   sink, condition node, or Φ are dropped.
+//! * [`pushdown`] — **predicate pushdown**: a `filter` whose LabyLang
+//!   predicate reads only one side of a `join` (or only the key of a
+//!   `reduceByKey`, or anything above a `distinct`) moves below that
+//!   operator, dropping rows before the keyed shuffle / hash table.
+//! * [`joinside`] — **join build-side selection**: the [`cost`] model
+//!   picks the cheaper hash-join build side (smaller estimated rows,
+//!   strongly preferring a loop-invariant side so the §7 cross-step
+//!   build reuse keeps firing); `ExecPlan`/`ops::join` honor the choice.
 //!
 //! Passes share a [`analysis::PlanAnalysis`] (loop membership, invariance
-//! fixpoint, liveness) and run in rounds until a fixpoint, each pass
-//! independently toggleable via [`OptConfig`] (`opt.hoist` / `opt.fuse` /
-//! `opt.dce` config keys). The manager verifies graph integrity after
-//! every pass and reports an [`ExplainReport`] that the engine surfaces
-//! through `metrics` and `dataflow::dot` renders as clustered subgraphs.
+//! fixpoint, liveness, and the [`cost`] row/trip estimates) and run in
+//! rounds until a fixpoint, each pass independently toggleable via
+//! [`OptConfig`] (`opt.pushdown` / `opt.hoist` / `opt.join_sides` /
+//! `opt.fuse` / `opt.dce` config keys; speculative hoisting is governed
+//! by `opt.speculate`). The manager verifies graph integrity after every
+//! pass and reports an [`ExplainReport`] that the engine surfaces through
+//! `metrics` and `dataflow::dot` renders as clustered subgraphs.
 
 pub mod analysis;
+pub mod cost;
 pub mod dce;
 pub mod fuse;
 pub mod hoist;
+pub mod joinside;
+pub mod pushdown;
 
 use crate::dataflow::DataflowGraph;
 use crate::error::{Error, Result};
 use analysis::PlanAnalysis;
 use rustc_hash::FxHashMap;
 
-/// Which passes run. All default to on; each is independently toggleable
-/// (config keys `opt.hoist`, `opt.fuse`, `opt.dce`, `opt.max_rounds`).
+/// Speculation policy for hoisting `NamedSource` / `XlaCall` chains out
+/// of loops (config key `opt.speculate`, CLI `--speculate`). See
+/// [`analysis::is_hoistable_op`] for the contract.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Speculate {
+    /// Cost-gated (default): hoist when estimated
+    /// `trips × rows ≥ opt.speculate_threshold`.
+    Auto,
+    /// Always hoist (the pre-cost-model contract; mirrors Flink's
+    /// materialize-sources-at-launch behavior).
+    Always,
+    /// Never hoist speculative chains (fully lazy sources).
+    Never,
+}
+
+impl Speculate {
+    /// Parse a config/CLI value.
+    pub fn parse(s: &str) -> Result<Speculate> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(Speculate::Auto),
+            "always" => Ok(Speculate::Always),
+            "never" => Ok(Speculate::Never),
+            other => Err(Error::Config(format!(
+                "opt.speculate: expected auto|always|never, got {other:?}"
+            ))),
+        }
+    }
+}
+
+/// Which passes run. All default to on; each is independently toggleable
+/// (config keys `opt.pushdown`, `opt.hoist`, `opt.join_sides`,
+/// `opt.fuse`, `opt.dce`, `opt.max_rounds`, plus the speculation knobs
+/// `opt.speculate`, `opt.speculate_threshold`, `opt.default_trips`).
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct OptConfig {
     /// Loop-invariant hoisting.
     pub hoist: bool,
@@ -46,6 +90,18 @@ pub struct OptConfig {
     pub fuse: bool,
     /// Dead-operator elimination.
     pub dce: bool,
+    /// Predicate pushdown below join / reduceByKey / distinct.
+    pub pushdown: bool,
+    /// Cost-based hash-join build-side selection.
+    pub join_sides: bool,
+    /// Speculative-hoist policy (gates `NamedSource`/`XlaCall` chains).
+    pub speculate: Speculate,
+    /// Minimum estimated `trips × rows` for a speculative hoist under
+    /// [`Speculate::Auto`].
+    pub speculate_threshold: f64,
+    /// Trip-count assumed for loops whose bound the cost model cannot
+    /// derive (data-dependent conditions).
+    pub default_trips: u64,
     /// Maximum pass-manager rounds (each round runs every enabled pass
     /// once; rounds stop early when nothing changes).
     pub max_rounds: usize,
@@ -53,27 +109,54 @@ pub struct OptConfig {
 
 impl Default for OptConfig {
     fn default() -> Self {
-        OptConfig { hoist: true, fuse: true, dce: true, max_rounds: 3 }
+        OptConfig {
+            hoist: true,
+            fuse: true,
+            dce: true,
+            pushdown: true,
+            join_sides: true,
+            speculate: Speculate::Auto,
+            speculate_threshold: 1.0,
+            default_trips: 4,
+            max_rounds: 3,
+        }
     }
 }
 
 impl OptConfig {
     /// Everything off — `compile_with(p, &OptConfig::none())` returns the
-    /// raw §5.3 translation. Keeps the default `max_rounds`, so
-    /// re-enabling a single pass via struct update
+    /// raw §5.3 translation. Keeps the default `max_rounds` and cost
+    /// knobs, so re-enabling a single pass via struct update
     /// (`OptConfig { fuse: true, ..OptConfig::none() }`) actually runs it.
     pub fn none() -> OptConfig {
-        OptConfig { hoist: false, fuse: false, dce: false, ..OptConfig::default() }
+        OptConfig {
+            hoist: false,
+            fuse: false,
+            dce: false,
+            pushdown: false,
+            join_sides: false,
+            ..OptConfig::default()
+        }
     }
 
     /// Read the `opt.*` section of a [`crate::config::Config`] (missing
     /// keys keep the defaults).
     pub fn from_config(cfg: &crate::config::Config) -> Result<OptConfig> {
         let d = OptConfig::default();
+        let speculate = match cfg.get("opt.speculate") {
+            None => d.speculate,
+            Some(s) => Speculate::parse(s)?,
+        };
         Ok(OptConfig {
             hoist: cfg.get_bool("opt.hoist", d.hoist)?,
             fuse: cfg.get_bool("opt.fuse", d.fuse)?,
             dce: cfg.get_bool("opt.dce", d.dce)?,
+            pushdown: cfg.get_bool("opt.pushdown", d.pushdown)?,
+            join_sides: cfg.get_bool("opt.join_sides", d.join_sides)?,
+            speculate,
+            speculate_threshold: cfg
+                .get_f64("opt.speculate_threshold", d.speculate_threshold)?,
+            default_trips: cfg.get_u64("opt.default_trips", d.default_trips)?,
             max_rounds: cfg.get_usize("opt.max_rounds", d.max_rounds)?,
         })
     }
@@ -81,10 +164,14 @@ impl OptConfig {
 
 /// What one pass run did.
 pub struct PassOutcome {
-    /// Number of nodes affected (hoisted / eliminated-by-fusion / removed).
+    /// Number of nodes affected (hoisted / eliminated-by-fusion / removed
+    /// / filters pushed / build sides flipped).
     pub changed: usize,
+    /// Work a cost gate declined (currently: speculative hoists kept in
+    /// their loop).
+    pub skipped: usize,
     /// Human-readable one-liners (one per hoisted node / fused chain /
-    /// removed node).
+    /// removed node / pushed filter / flipped join).
     pub details: Vec<String>,
 }
 
@@ -130,13 +217,20 @@ pub struct ExplainReport {
     pub fused_away: usize,
     /// Nodes removed by dead-operator elimination.
     pub dce_removed: usize,
+    /// Filters moved below a join / reduceByKey / distinct.
+    pub pushed_filters: usize,
+    /// Hash joins whose build side the cost model flipped.
+    pub join_flips: usize,
+    /// Speculative nodes the hoist cost gate kept in their loop (as of
+    /// the last hoist run — a state count, not a sum of per-round events).
+    pub hoist_gated: usize,
     /// Per-pass statistics, in execution order.
     pub passes: Vec<PassStats>,
 }
 
 impl Default for PassOutcome {
     fn default() -> Self {
-        PassOutcome { changed: 0, details: Vec::new() }
+        PassOutcome { changed: 0, skipped: 0, details: Vec::new() }
     }
 }
 
@@ -151,6 +245,9 @@ impl ExplainReport {
             ("opt.fused_chains".into(), self.fused_chains as u64),
             ("opt.fused_away".into(), self.fused_away as u64),
             ("opt.dce_removed".into(), self.dce_removed as u64),
+            ("opt.pushdown_filters".into(), self.pushed_filters as u64),
+            ("opt.join_flips".into(), self.join_flips as u64),
+            ("opt.hoist_gated_skips".into(), self.hoist_gated as u64),
         ]
     }
 
@@ -159,14 +256,18 @@ impl ExplainReport {
         let mut s = String::new();
         s.push_str(&format!(
             "optimizer: {} -> {} nodes in {} round(s) \
-             ({} hoisted, {} chains fused [{} nodes away], {} dead removed)\n",
+             ({} hoisted [{} gate-skipped], {} chains fused [{} nodes away], \
+             {} dead removed, {} filters pushed, {} join sides flipped)\n",
             self.nodes_before,
             self.nodes_after,
             self.rounds,
             self.hoisted,
+            self.hoist_gated,
             self.fused_chains,
             self.fused_away,
             self.dce_removed,
+            self.pushed_filters,
+            self.join_flips,
         ));
         for p in &self.passes {
             s.push_str(&format!(
@@ -190,11 +291,25 @@ pub struct PassManager {
 }
 
 impl PassManager {
-    /// Build the manager for a configuration.
+    /// Build the manager for a configuration. Pass order within a round:
+    /// pushdown first (filters shrink the row estimates every later
+    /// decision uses), then hoisting (moves invariant chains — including
+    /// freshly pushed filters — into preambles), then build-side
+    /// selection (so it sees post-hoist invariance), then fusion and DCE.
     pub fn from_config(cfg: &OptConfig) -> PassManager {
         let mut passes: Vec<Box<dyn Pass>> = Vec::new();
+        if cfg.pushdown {
+            passes.push(Box::new(pushdown::PushdownPass));
+        }
         if cfg.hoist {
-            passes.push(Box::new(hoist::HoistPass));
+            passes.push(Box::new(hoist::HoistPass {
+                speculate: cfg.speculate,
+                threshold: cfg.speculate_threshold,
+                default_trips: cfg.default_trips,
+            }));
+        }
+        if cfg.join_sides {
+            passes.push(Box::new(joinside::JoinSidePass { default_trips: cfg.default_trips }));
         }
         if cfg.fuse {
             passes.push(Box::new(fuse::FusePass));
@@ -208,13 +323,26 @@ impl PassManager {
     /// Run the pipeline on a graph.
     pub fn run(&self, g: &mut DataflowGraph) -> Result<ExplainReport> {
         let mut report = ExplainReport { nodes_before: g.num_nodes(), ..Default::default() };
+        // Loop trip estimates are CFG-level and invariant under the
+        // graph rewrites (passes preserve semantics and never touch the
+        // CFG), so run the scalar-chain simulation ONCE per optimize run
+        // — not before every pass — and share the result. With no passes
+        // enabled, nothing (including UDF evaluation) runs at all.
+        let params = cost::CostParams::default();
+        let trips: Vec<cost::TripCount> = if self.passes.is_empty() {
+            Vec::new()
+        } else {
+            let dt = crate::cfg::dom::dominators(&g.cfg);
+            let li = crate::cfg::loops::find_loops(&g.cfg, &dt);
+            li.loops.iter().map(|l| cost::estimate_trips(g, l, params.sim_trip_cap)).collect()
+        };
         for round in 1..=self.max_rounds {
             if self.passes.is_empty() {
                 break;
             }
             let mut round_changed = 0usize;
             for pass in &self.passes {
-                let a = PlanAnalysis::compute(g);
+                let a = PlanAnalysis::compute_with_trips(g, &params, trips.clone());
                 let out = pass.run(g, &a)?;
                 verify_integrity(g).map_err(|e| {
                     Error::Dataflow(format!("opt pass '{}' broke the graph: {e}", pass.name()))
@@ -226,6 +354,12 @@ impl PassManager {
                         report.fused_away += out.changed;
                     }
                     "dce" => report.dce_removed += out.changed,
+                    "pushdown" => report.pushed_filters += out.changed,
+                    "joinside" => report.join_flips += out.changed,
+                    // Gate skips describe the graph state, not events: a
+                    // chain kept in its loop is re-skipped every round, so
+                    // take the latest run's count instead of summing.
+                    "hoist" => report.hoist_gated = out.skipped,
                     _ => {}
                 }
                 report.passes.push(PassStats {
@@ -363,14 +497,30 @@ mod tests {
     #[test]
     fn config_defaults_and_toggles() {
         let d = OptConfig::default();
-        assert!(d.hoist && d.fuse && d.dce);
+        assert!(d.hoist && d.fuse && d.dce && d.pushdown && d.join_sides);
+        assert_eq!(d.speculate, Speculate::Auto);
         let n = OptConfig::none();
-        assert!(!n.hoist && !n.fuse && !n.dce);
-        let cfg = crate::config::Config::parse("[opt]\nhoist = off\nmax_rounds = 7\n").unwrap();
+        assert!(!n.hoist && !n.fuse && !n.dce && !n.pushdown && !n.join_sides);
+        let cfg = crate::config::Config::parse(
+            "[opt]\nhoist = off\nmax_rounds = 7\npushdown = off\nspeculate = never\nspeculate_threshold = 64\ndefault_trips = 9\n",
+        )
+        .unwrap();
         let o = OptConfig::from_config(&cfg).unwrap();
         assert!(!o.hoist);
-        assert!(o.fuse && o.dce);
+        assert!(o.fuse && o.dce && o.join_sides);
+        assert!(!o.pushdown);
+        assert_eq!(o.speculate, Speculate::Never);
+        assert_eq!(o.speculate_threshold, 64.0);
+        assert_eq!(o.default_trips, 9);
         assert_eq!(o.max_rounds, 7);
+    }
+
+    #[test]
+    fn speculate_parses_and_rejects() {
+        assert_eq!(Speculate::parse("auto").unwrap(), Speculate::Auto);
+        assert_eq!(Speculate::parse("ALWAYS").unwrap(), Speculate::Always);
+        assert_eq!(Speculate::parse("never").unwrap(), Speculate::Never);
+        assert!(Speculate::parse("sometimes").is_err());
     }
 
     #[test]

@@ -1,0 +1,644 @@
+//! Predicate pushdown: move a `filter` *below* the operator it consumes —
+//! before a `join` (onto the side(s) its predicate actually reads),
+//! before a `reduceByKey` (when the predicate only reads the group key),
+//! and before a `distinct` (always — dedup commutes with any element
+//! predicate) — so rows are dropped before the expensive keyed shuffle /
+//! hash table instead of after it.
+//!
+//! Join and reduceByKey rewrites are *structural*: they inspect the
+//! LabyLang lambda carried on the predicate ([`Udf1::expr`]) and classify
+//! every use of the parameter as a projection of the joined pair
+//! `pair(k, pair(left, right))`:
+//!
+//! * `fst(p)` — the key (available on both inputs),
+//! * `fst(snd(p))` — the left (build) payload,
+//! * `snd(snd(p))` — the right (probe) payload,
+//! * anything else touching `p` — the whole element (not pushable).
+//!
+//! A predicate reading only `{key, left}` moves to the left input, only
+//! `{key, right}` to the right input, and key-only predicates are cloned
+//! onto *both* inputs. Projections are rewritten with the `key` /
+//! `payload` builtins, which mirror the join's own element-shape handling
+//! (`ops::join::key_and_payload`), so the rewrite is exact for every
+//! value shape: for any input element `y` and any joined output `o`
+//! produced from it, `key(y) = fst(o)` and `payload(y)` is that side's
+//! payload — the pushed predicate accepts `y` iff the original accepted
+//! every `o` derived from it. Equi-join keys match across sides, so
+//! filtering one side on a key predicate already filters the output
+//! exactly; filtering both sides just drops dead probe/build work.
+//!
+//! Rust-builder UDFs are opaque closures (`expr == None`) and are never
+//! pushed through joins/aggregations; the `distinct` rewrite needs no
+//! expression (the predicate moves verbatim) and fires for both
+//! frontends.
+//!
+//! Pushing is *speculative evaluation*: below the join, the predicate
+//! runs on input elements that would never have produced a join output
+//! (non-matching keys), so it must not be able to fail on them.
+//! Division/remainder with a non-literal divisor and the partial
+//! builtins — `nth`, `int`, `field`, and `fst`/`snd`/`len` applied to
+//! anything but the recognized projections — are therefore rejected
+//! (`x / snd(snd(p))` could divide by zero, `fst(snd(snd(p)))` could hit
+//! a non-pair payload, on an element the original program never
+//! touched); beyond that, predicates are assumed total over their
+//! side's element domain — the same contract
+//! [`super::analysis::is_hoistable_op`] states for hoisted UDFs.
+//!
+//! Rewrites only fire when the filter sits in the *same basic block* as
+//! its producer and is the producer's only consumer — same block keeps
+//! the §6.3.3 input-bag selection of every downstream consumer literally
+//! identical after the filter node is deleted, and sole-consumership
+//! keeps the producer's (now filtered) output unobserved by anyone else.
+
+use super::analysis::PlanAnalysis;
+use super::{compact, refresh_edges, Pass, PassOutcome};
+use crate::dataflow::{DataflowGraph, InputSpec, Node, NodeId, Route};
+use crate::error::Result;
+use crate::frontend::ast::{BinOp, Expr};
+use crate::frontend::{interp_expr, Rhs, Udf1};
+
+/// The predicate-pushdown pass.
+pub struct PushdownPass;
+
+/// Which projection of the joined pair a parameter use reads.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Proj {
+    /// `fst(p)` — the join key.
+    Key,
+    /// `fst(snd(p))` — the left payload.
+    Left,
+    /// `snd(snd(p))` — the right payload.
+    Right,
+}
+
+/// Match `e` as one of the recognized projections of `param`. `key(p)`
+/// counts as a key projection too — on a join output, `key` is exactly
+/// `fst` — which is what lets a key predicate this pass itself pushed
+/// cascade through the next join upstream. (`payload(p)` of a join
+/// output is the whole `(left, right)` pair, so it deliberately stays
+/// unrecognized and classifies as a whole-element use.)
+fn as_proj(e: &Expr, param: &str) -> Option<Proj> {
+    let Expr::Call(f, args) = e else { return None };
+    if args.len() != 1 {
+        return None;
+    }
+    match (f.as_str(), &args[0]) {
+        ("fst", Expr::Var(v)) | ("key", Expr::Var(v)) if v == param => Some(Proj::Key),
+        ("fst", Expr::Call(g, inner)) if g == "snd" && inner.len() == 1 => match &inner[0] {
+            Expr::Var(v) if v == param => Some(Proj::Left),
+            _ => None,
+        },
+        ("snd", Expr::Call(g, inner)) if g == "snd" && inner.len() == 1 => match &inner[0] {
+            Expr::Var(v) if v == param => Some(Proj::Right),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Collected parameter uses of a predicate body.
+#[derive(Default)]
+struct Uses {
+    key: bool,
+    left: bool,
+    right: bool,
+    /// The parameter escapes the recognized projections.
+    whole: bool,
+}
+
+/// Reject predicates whose evaluation can fail *by value or shape* on
+/// elements the original program never evaluated them on (see the module
+/// docs): division/remainder is allowed only with a non-zero literal
+/// divisor, and the partial builtins — `nth` (index range), `int`
+/// (parse), `field` (missing field), plus `fst`/`snd`/`len` on anything
+/// *other than* a recognized param projection (which the rewrite turns
+/// into the shape-total `key`/`payload`) — are rejected: a non-matching
+/// element may carry a payload shape the surviving elements never have.
+/// Plain arithmetic/comparison stays under the documented
+/// totality-over-the-domain assumption.
+fn is_push_total(e: &Expr, param: &str) -> bool {
+    if as_proj(e, param).is_some() {
+        return true; // rewritten to key()/payload(): total for any shape
+    }
+    match e {
+        Expr::Bin(op, l, r) => {
+            let divisor_ok = match op {
+                BinOp::Div | BinOp::Rem => {
+                    matches!(**r, Expr::Int(n) if n != 0)
+                        || matches!(**r, Expr::Float(f) if f != 0.0)
+                }
+                _ => true,
+            };
+            divisor_ok && is_push_total(l, param) && is_push_total(r, param)
+        }
+        Expr::Un(_, x) => is_push_total(x, param),
+        Expr::Call(f, args) => {
+            !matches!(f.as_str(), "nth" | "int" | "field" | "fst" | "snd" | "len")
+                && args.iter().all(|a| is_push_total(a, param))
+        }
+        Expr::Int(_) | Expr::Float(_) | Expr::Str(_) | Expr::Bool(_) | Expr::Var(_) => true,
+        Expr::Method(..) | Expr::Lambda(..) => false,
+    }
+}
+
+fn scan(e: &Expr, param: &str, uses: &mut Uses) {
+    if let Some(p) = as_proj(e, param) {
+        match p {
+            Proj::Key => uses.key = true,
+            Proj::Left => uses.left = true,
+            Proj::Right => uses.right = true,
+        }
+        return;
+    }
+    match e {
+        Expr::Var(v) => {
+            if v == param {
+                uses.whole = true;
+            }
+        }
+        Expr::Int(_) | Expr::Float(_) | Expr::Str(_) | Expr::Bool(_) => {}
+        Expr::Un(_, x) => scan(x, param, uses),
+        Expr::Bin(_, l, r) => {
+            scan(l, param, uses);
+            scan(r, param, uses);
+        }
+        Expr::Call(_, args) => {
+            for a in args {
+                scan(a, param, uses);
+            }
+        }
+        // check_closed rejects these inside lambdas; treat defensively.
+        Expr::Method(..) | Expr::Lambda(..) => uses.whole = true,
+    }
+}
+
+/// Rewrite the predicate body for evaluation against one side's elements:
+/// `fst(p) → key(p)` and the target side's payload projection →
+/// `payload(p)`. Callers guarantee (via `scan`) that no other parameter
+/// uses exist.
+fn rewrite(e: &Expr, param: &str, target: Proj) -> Expr {
+    if let Some(p) = as_proj(e, param) {
+        if p == Proj::Key {
+            return Expr::Call("key".into(), vec![Expr::Var(param.to_string())]);
+        }
+        if p == target {
+            return Expr::Call("payload".into(), vec![Expr::Var(param.to_string())]);
+        }
+    }
+    match e {
+        Expr::Un(op, x) => Expr::Un(*op, Box::new(rewrite(x, param, target))),
+        Expr::Bin(op, l, r) => Expr::Bin(
+            *op,
+            Box::new(rewrite(l, param, target)),
+            Box::new(rewrite(r, param, target)),
+        ),
+        Expr::Call(f, args) => Expr::Call(
+            f.clone(),
+            args.iter().map(|a| rewrite(a, param, target)).collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+/// One applicable rewrite, located against current node ids.
+struct Found {
+    /// The filter node to eliminate.
+    filter: NodeId,
+    /// Its producer (join / reduceByKey / distinct).
+    producer: NodeId,
+    /// Input indices of `producer` to interpose a pushed filter on, with
+    /// the UDF for each.
+    pushes: Vec<(usize, Udf1)>,
+}
+
+fn find(g: &DataflowGraph) -> Option<Found> {
+    for f in &g.nodes {
+        let Rhs::Filter { udf, .. } = &f.op else { continue };
+        if f.cond.is_some() || f.inputs.len() != 1 || f.inputs[0].conditional {
+            continue;
+        }
+        let up = f.inputs[0].src;
+        let producer = &g.nodes[up];
+        if producer.block != f.block || producer.cond.is_some() {
+            continue;
+        }
+        if g.consumers(up).len() != 1 {
+            continue; // someone else observes the unfiltered output
+        }
+        let pushes: Vec<(usize, Udf1)> = match &producer.op {
+            Rhs::Distinct { .. } => {
+                // Dedup commutes with any element predicate — move it
+                // verbatim (works for opaque builder closures too).
+                vec![(0, udf.clone())]
+            }
+            Rhs::Join { .. } | Rhs::ReduceByKey { .. } => {
+                let Some(lambda) = &udf.expr else { continue };
+                let (params, body) = (&lambda.0, &lambda.1);
+                let param = &params[0];
+                let mut uses = Uses::default();
+                scan(body, param, &mut uses);
+                if uses.whole {
+                    continue;
+                }
+                // Below the join/aggregation the predicate evaluates on
+                // elements that never produced an output — it must not be
+                // able to fail on them.
+                if !is_push_total(body, param) {
+                    continue;
+                }
+                let is_join = matches!(producer.op, Rhs::Join { .. });
+                let compiled = |target: Proj, tag: &str| -> Option<Udf1> {
+                    interp_expr::compile_udf1(
+                        params.clone(),
+                        rewrite(body, param, target),
+                        format!("{}@{tag}", udf.name),
+                    )
+                    .ok()
+                };
+                if is_join {
+                    match (uses.left, uses.right) {
+                        (true, true) => continue, // reads both payloads
+                        (true, false) => match compiled(Proj::Left, "left") {
+                            Some(u) => vec![(0, u)],
+                            None => continue,
+                        },
+                        (false, true) => match compiled(Proj::Right, "right") {
+                            Some(u) => vec![(1, u)],
+                            None => continue,
+                        },
+                        (false, false) => {
+                            if !uses.key {
+                                // Constant predicate: leave it alone.
+                                continue;
+                            }
+                            // Key-only: clone onto both inputs.
+                            match (compiled(Proj::Key, "left"), compiled(Proj::Key, "right")) {
+                                (Some(a), Some(b)) => vec![(0, a), (1, b)],
+                                _ => continue,
+                            }
+                        }
+                    }
+                } else {
+                    // reduceByKey: only key predicates survive pushing
+                    // below the aggregation (payloads are aggregates).
+                    if uses.left || uses.right || !uses.key {
+                        continue;
+                    }
+                    match compiled(Proj::Key, "key") {
+                        Some(u) => vec![(0, u)],
+                        None => continue,
+                    }
+                }
+            }
+            _ => continue,
+        };
+        return Some(Found { filter: f.id, producer: up, pushes });
+    }
+    None
+}
+
+fn apply(g: &mut DataflowGraph, found: Found, out: &mut PassOutcome) {
+    let Found { filter, producer, pushes } = found;
+    let mut fresh_var = g.nodes.iter().map(|n| n.var).max().unwrap_or(0);
+    let mut detail_sides = Vec::new();
+
+    for (side, udf) in pushes {
+        let edge = g.nodes[producer].inputs[side].clone();
+        let src = &g.nodes[edge.src];
+        let (src_var, src_block, src_par, src_singleton, src_id) =
+            (src.var, src.block, src.par, src.singleton, src.id);
+        fresh_var += 1;
+        let nid = g.nodes.len();
+        let name = format!("{}_pd{}", g.nodes[filter].name, side);
+        g.nodes.push(Node {
+            id: nid,
+            name,
+            var: fresh_var,
+            block: src_block,
+            op: Rhs::Filter { input: src_var, udf },
+            par: src_par,
+            inputs: vec![InputSpec {
+                src: src_id,
+                src_block,
+                route: Route::Forward,
+                conditional: false,
+            }],
+            cond: None,
+            singleton: src_singleton,
+            hoisted_from: None,
+            size_hint: None,
+            build_side: None,
+        });
+        g.node_of_var.insert(fresh_var, nid);
+        // Re-point the producer's input at the interposed filter. The
+        // edge keeps its route (the producer's partitioning requirement
+        // did not change); src/src_block/conditional are refreshed.
+        let producer_block = g.nodes[producer].block;
+        let inp = &mut g.nodes[producer].inputs[side];
+        inp.src = nid;
+        inp.src_block = src_block;
+        inp.conditional = src_block != producer_block;
+        match &mut g.nodes[producer].op {
+            Rhs::Join { left, right } => {
+                if side == 0 {
+                    *left = fresh_var;
+                } else {
+                    *right = fresh_var;
+                }
+            }
+            Rhs::ReduceByKey { input, .. } | Rhs::Distinct { input } => *input = fresh_var,
+            other => unreachable!("pushdown producer {}", other.mnemonic()),
+        }
+        detail_sides.push(side.to_string());
+    }
+
+    // Splice the original filter out: its consumers read the (now
+    // filtered) producer directly. Same block ⇒ identical §6.3.3 bag
+    // selection for every consumer.
+    let f_var = g.nodes[filter].var;
+    let p_var = g.nodes[producer].var;
+    let p_block = g.nodes[producer].block;
+    let consumers = g.consumers(filter);
+    let mut seen: Vec<NodeId> = Vec::new();
+    for (c, k) in consumers {
+        let c_block = g.nodes[c].block;
+        let inp = &mut g.nodes[c].inputs[k];
+        inp.src = producer;
+        inp.src_block = p_block;
+        inp.conditional = p_block != c_block;
+        if !seen.contains(&c) {
+            seen.push(c);
+            g.nodes[c].op.map_inputs(|v| if v == f_var { p_var } else { v });
+        }
+    }
+    out.details.push(format!(
+        "{} [{}] pushed below {} (input {})",
+        g.nodes[filter].name,
+        g.nodes[filter].op.mnemonic(),
+        g.nodes[producer].op.mnemonic(),
+        detail_sides.join(","),
+    ));
+    out.changed += 1;
+
+    let mut keep = vec![true; g.nodes.len()];
+    keep[filter] = false;
+    compact(g, &keep);
+}
+
+impl Pass for PushdownPass {
+    fn name(&self) -> &'static str {
+        "pushdown"
+    }
+
+    fn run(&self, g: &mut DataflowGraph, _a: &PlanAnalysis) -> Result<PassOutcome> {
+        let mut out = PassOutcome::default();
+        // Rewrites cascade (a pushed filter may sit above another join),
+        // so fix-point locally; each rewrite deletes one filter node, so
+        // the node count bounds the iteration.
+        let mut guard = g.nodes.len() + 1;
+        while let Some(found) = find(g) {
+            apply(g, found, &mut out);
+            guard -= 1;
+            if guard == 0 {
+                break;
+            }
+        }
+        if out.changed > 0 {
+            refresh_edges(g);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::single_thread;
+    use crate::exec::{run, ExecConfig};
+    use crate::frontend::parse_and_lower;
+    use crate::opt::{verify_integrity, OptConfig};
+    use crate::value::Value;
+
+    fn pushed(src: &str) -> (DataflowGraph, PassOutcome) {
+        let p = parse_and_lower(src).unwrap();
+        let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        let a = PlanAnalysis::compute(&g);
+        let out = PushdownPass.run(&mut g, &a).unwrap();
+        verify_integrity(&g).unwrap();
+        (g, out)
+    }
+
+    fn check_matches_oracle(src: &str) {
+        let program = parse_and_lower(src).unwrap();
+        let oracle = single_thread::run(&program, &Default::default()).unwrap();
+        let (g, out) = {
+            let (mut g, _) = crate::compile_with(&program, &OptConfig::none()).unwrap();
+            let a = PlanAnalysis::compute(&g);
+            let out = PushdownPass.run(&mut g, &a).unwrap();
+            (g, out)
+        };
+        assert!(out.changed > 0, "pushdown should fire on:\n{src}");
+        let res = run(&g, &ExecConfig::default()).unwrap();
+        let mut got = res.collected("f").to_vec();
+        let mut want = oracle.collected("f").to_vec();
+        got.sort();
+        want.sort();
+        assert_eq!(got, want, "{src}");
+    }
+
+    #[test]
+    fn probe_side_predicate_moves_below_join() {
+        // a.join(b): b is the build (left) side, a the probe (right).
+        // The predicate reads only the probe payload.
+        let (g, out) = pushed(
+            "a = bag(1, 2, 3, 4).map(|v| pair(v % 2, v)); b = bag(1, 2, 3).map(|v| pair(v % 2, v * 10)); j = a.join(b); f = j.filter(|p| snd(snd(p)) > 2); collect(f, \"f\");",
+        );
+        assert_eq!(out.changed, 1, "{:?}", out.details);
+        let join = g.nodes.iter().find(|n| matches!(n.op, Rhs::Join { .. })).unwrap();
+        // The join's right input is now a filter.
+        let right_src = join.inputs[1].src;
+        assert!(
+            matches!(g.nodes[right_src].op, Rhs::Filter { .. }),
+            "right input should be the pushed filter"
+        );
+        // The collect reads the join directly (original filter removed).
+        let col = g.nodes.iter().find(|n| matches!(n.op, Rhs::Collect { .. })).unwrap();
+        assert_eq!(col.inputs[0].src, join.id);
+    }
+
+    #[test]
+    fn key_only_predicate_moves_to_both_sides() {
+        let (g, _) = pushed(
+            "a = bag(1, 2, 3, 4).map(|v| pair(v % 2, v)); b = bag(1, 2, 3).map(|v| pair(v % 2, v * 10)); j = a.join(b); f = j.filter(|p| fst(p) == 1); collect(f, \"f\");",
+        );
+        let join = g.nodes.iter().find(|n| matches!(n.op, Rhs::Join { .. })).unwrap();
+        for inp in &join.inputs {
+            assert!(
+                matches!(g.nodes[inp.src].op, Rhs::Filter { .. }),
+                "both join inputs should be pushed filters"
+            );
+        }
+    }
+
+    #[test]
+    fn whole_element_predicate_stays_put() {
+        let (g, out) = pushed(
+            "a = bag(1, 2).map(|v| pair(v, v)); b = bag(1, 2).map(|v| pair(v, v)); j = a.join(b); f = j.filter(|p| hash(snd(p)) % 2 == 0); collect(f, \"f\");",
+        );
+        assert_eq!(out.changed, 0, "{:?}", out.details);
+        let col = g.nodes.iter().find(|n| matches!(n.op, Rhs::Collect { .. })).unwrap();
+        assert!(matches!(g.nodes[col.inputs[0].src].op, Rhs::Filter { .. }));
+    }
+
+    #[test]
+    fn key_predicate_cascades_through_stacked_joins() {
+        // fst(p) == 1 above j2 pushes onto both j2 inputs; the copy that
+        // lands above j1 (rewritten to `key(p) == 1`) then pushes again
+        // through j1. End state: every join input is a filter (or the
+        // inner join), nothing filters above j2.
+        let (g, out) = pushed(
+            "a = bag(1, 2).map(|v| pair(v, v)); b = bag(1, 2).map(|v| pair(v, v * 10)); c = bag(1, 2).map(|v| pair(v, v * 100)); j1 = a.join(b); j2 = j1.join(c); f = j2.filter(|p| fst(p) == 1); collect(f, \"f\");",
+        );
+        assert_eq!(out.changed, 2, "push below j2, then cascade below j1: {:?}", out.details);
+        for n in &g.nodes {
+            if !matches!(n.op, Rhs::Join { .. }) {
+                continue;
+            }
+            for inp in &n.inputs {
+                assert!(
+                    matches!(g.nodes[inp.src].op, Rhs::Filter { .. } | Rhs::Join { .. }),
+                    "join input should be a pushed filter (or the inner join): {}",
+                    g.nodes[inp.src].name
+                );
+            }
+        }
+        // Execution still matches the oracle.
+        check_matches_oracle(
+            "a = bag(1, 2).map(|v| pair(v, v)); b = bag(1, 2).map(|v| pair(v, v * 10)); c = bag(1, 2).map(|v| pair(v, v * 100)); j1 = a.join(b); j2 = j1.join(c); f = j2.filter(|p| fst(p) == 1); collect(f, \"f\");",
+        );
+    }
+
+    #[test]
+    fn nested_projection_into_payload_blocks_pushdown() {
+        // `fst(snd(snd(p)))` digs into the probe payload's structure; a
+        // non-matching probe element may carry a non-pair payload the
+        // original predicate never saw — must stay above the join.
+        let (_, out) = pushed(
+            "x = bag(1).map(|v| pair(v, pair(v, v))); y = bag(9).map(|v| pair(v, v)); s = x.union(y); a = bag(1).map(|v| pair(v, v)); j = a.join(s); f = j.filter(|p| fst(snd(snd(p))) > 0); collect(f, \"f\");",
+        );
+        assert_eq!(out.changed, 0, "{:?}", out.details);
+    }
+
+    #[test]
+    fn partial_division_blocks_pushdown() {
+        // `10 / snd(snd(p))` can divide by zero on a non-matching probe
+        // element the original program never evaluated — must stay put.
+        let (_, out) = pushed(
+            "a = bag(1, 2).map(|v| pair(v, v)); b = bag(1, 9).map(|v| pair(v, v - 1)); j = a.join(b); f = j.filter(|p| 10 / snd(snd(p)) > 1); collect(f, \"f\");",
+        );
+        assert_eq!(out.changed, 0, "{:?}", out.details);
+        // Literal divisors are total and still push.
+        let (_, out) = pushed(
+            "a = bag(1, 2).map(|v| pair(v, v)); b = bag(1, 9).map(|v| pair(v, v)); j = a.join(b); f = j.filter(|p| snd(snd(p)) % 2 == 0); collect(f, \"f\");",
+        );
+        assert_eq!(out.changed, 1, "{:?}", out.details);
+    }
+
+    #[test]
+    fn shared_join_output_blocks_pushdown() {
+        // The join has a second consumer — pushing would filter its view.
+        let (_, out) = pushed(
+            "a = bag(1, 2).map(|v| pair(v, v)); b = bag(1, 2).map(|v| pair(v, v)); j = a.join(b); f = j.filter(|p| fst(p) == 1); collect(f, \"f\"); collect(j, \"j\");",
+        );
+        assert_eq!(out.changed, 0, "{:?}", out.details);
+    }
+
+    #[test]
+    fn key_predicate_moves_below_reduce_by_key() {
+        let (g, out) = pushed(
+            "a = bag(1, 2, 3, 4, 5, 6).map(|v| pair(v % 3, v)); r = a.reduceByKey(|x, y| x + y); f = r.filter(|p| fst(p) != 0); collect(f, \"f\");",
+        );
+        assert_eq!(out.changed, 1, "{:?}", out.details);
+        let rbk = g.nodes.iter().find(|n| matches!(n.op, Rhs::ReduceByKey { .. })).unwrap();
+        assert!(matches!(g.nodes[rbk.inputs[0].src].op, Rhs::Filter { .. }));
+    }
+
+    #[test]
+    fn any_predicate_moves_below_distinct() {
+        let (g, out) = pushed(
+            "a = bag(1, 1, 2, 3, 3, 4); d = a.distinct(); f = d.filter(|v| v > 1); collect(f, \"f\");",
+        );
+        assert_eq!(out.changed, 1, "{:?}", out.details);
+        let d = g.nodes.iter().find(|n| matches!(n.op, Rhs::Distinct { .. })).unwrap();
+        assert!(matches!(g.nodes[d.inputs[0].src].op, Rhs::Filter { .. }));
+    }
+
+    #[test]
+    fn pushed_plans_match_the_oracle() {
+        for src in [
+            "a = bag(1, 2, 3, 4).map(|v| pair(v % 2, v)); b = bag(1, 2, 3).map(|v| pair(v % 2, v * 10)); j = a.join(b); f = j.filter(|p| snd(snd(p)) > 2); collect(f, \"f\");",
+            "a = bag(1, 2, 3, 4).map(|v| pair(v % 2, v)); b = bag(1, 2, 3).map(|v| pair(v % 2, v * 10)); j = a.join(b); f = j.filter(|p| fst(snd(p)) >= 10); collect(f, \"f\");",
+            "a = bag(1, 2, 3, 4).map(|v| pair(v % 2, v)); b = bag(1, 2, 3).map(|v| pair(v % 2, v * 10)); j = a.join(b); f = j.filter(|p| fst(p) == 1 && snd(snd(p)) > 1); collect(f, \"f\");",
+            "a = bag(1, 2, 3, 4, 5, 6).map(|v| pair(v % 3, v)); r = a.reduceByKey(|x, y| x + y); f = r.filter(|p| fst(p) != 0); collect(f, \"f\");",
+            "a = bag(1, 1, 2, 3, 3, 4); d = a.distinct(); f = d.filter(|v| v > 1); collect(f, \"f\");",
+            // Scalar (non-pair) join elements: `key`/`payload` must match
+            // the join's own shape handling.
+            "a = bag(1, 2, 3, 5); b = bag(2, 3, 4); j = a.join(b); f = j.filter(|p| fst(p) > 2); collect(f, \"f\");",
+        ] {
+            check_matches_oracle(src);
+        }
+    }
+
+    #[test]
+    fn pushdown_preserves_loop_program_semantics() {
+        // Filter above an in-loop join; the pushed filter lands on the
+        // loop-varying probe side inside the loop body.
+        let src = r#"
+            lookup = bag(0, 1, 2, 3, 4).map(|v| pair(v, v * 100));
+            i = 0;
+            while (i < 4) {
+                kv = bag(3, 4, 5, 6, 7).map(|v| pair((v + i) % 5, v));
+                j = kv.join(lookup);
+                f = j.filter(|p| snd(snd(p)) % 2 == 1);
+                collect(f, "f");
+                i = i + 1;
+            }
+        "#;
+        let program = parse_and_lower(src).unwrap();
+        let oracle = single_thread::run(&program, &Default::default()).unwrap();
+        let (mut g, _) = crate::compile_with(&program, &OptConfig::none()).unwrap();
+        let a = PlanAnalysis::compute(&g);
+        let out = PushdownPass.run(&mut g, &a).unwrap();
+        verify_integrity(&g).unwrap();
+        assert!(out.changed > 0, "{:?}", out.details);
+        for workers in [1usize, 3] {
+            let res = run(&g, &ExecConfig { workers, ..Default::default() }).unwrap();
+            let mut got = res.collected("f").to_vec();
+            let mut want = oracle.collected("f").to_vec();
+            got.sort();
+            want.sort();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn expr_metadata_survives_roundtrip() {
+        // The pushed predicate itself carries an expr (compile_udf1
+        // attaches it), so cascaded pushes through stacked joins work.
+        let (g, _) = pushed(
+            "a = bag(1, 2).map(|v| pair(v, v)); b = bag(1, 2).map(|v| pair(v, v)); j = a.join(b); f = j.filter(|p| fst(p) == 1); collect(f, \"f\");",
+        );
+        let pushed_filter = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Rhs::Filter { .. }))
+            .expect("pushed filter exists");
+        let Rhs::Filter { udf, .. } = &pushed_filter.op else { unreachable!() };
+        assert!(udf.expr.is_some(), "pushed predicate keeps its lambda expr");
+        // key(pair(1, 9)) == 1 → predicate `fst(p) == 1` holds.
+        assert_eq!(
+            udf.call(&Value::pair(Value::I64(1), Value::I64(9))),
+            Value::Bool(true)
+        );
+    }
+}

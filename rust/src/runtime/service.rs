@@ -6,6 +6,9 @@
 //! single runtime thread per device.
 
 use crate::error::{Error, Result};
+// The in-repo PJRT API stand-in (the real `xla` crate is unavailable
+// offline); every `xla::` path below resolves against it.
+use crate::runtime::xla;
 use once_cell::sync::OnceCell;
 use rustc_hash::FxHashMap;
 use std::sync::mpsc::{channel, Sender};

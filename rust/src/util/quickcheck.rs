@@ -127,9 +127,11 @@ impl Gen<Vec<i64>> {
 /// Generate a random-but-well-formed LabyLang program from a seed. The
 /// family covers: loops with data-dependent trip counts, if/else over
 /// loop parity and bag aggregates, loop-carried bags, invariant joins
-/// (`lookup` — hoisting fodder), element-wise map/filter chains (fusion
-/// fodder), keyed aggregation, scalar capture desugaring, and
-/// unstructured control flow (`break`/`continue`).
+/// (`lookup` — hoisting and build-side-selection fodder, via both `join`
+/// and the build-side-flipped `joinBuild`), post-join filters on single
+/// sides / keys (predicate-pushdown fodder), element-wise map/filter
+/// chains (fusion fodder), keyed aggregation, scalar capture desugaring,
+/// and unstructured control flow (`break`/`continue`).
 ///
 /// Shared by the differential tests (`baseline_equivalence.rs`) and the
 /// optimizer-semantics property test (`opt_semantics.rs`).
@@ -155,9 +157,24 @@ pub fn random_laby_program(seed: u64) -> String {
         );
     }
     if use_join {
-        body.push_str(
-            "    kv = cur.map(|v| pair(v % 7, v));\n     j = kv.join(lookup).map(|p| fst(snd(p)) + snd(snd(p)));\n     collect(j, \"joined\");\n",
-        );
+        // `join` makes the invariant lookup the build side; `joinBuild`
+        // makes the loop-varying receiver the build side — fodder for the
+        // cost model's build-side flip.
+        let join_method = if r.gen_bool(0.5) { "join" } else { "joinBuild" };
+        body.push_str(&format!(
+            "    kv = cur.map(|v| pair(v % 7, v));\n     j0 = kv.{join_method}(lookup);\n"
+        ));
+        // A filter above the join reading only the key or only one side's
+        // payload — pushdown fodder (side meaning depends on the method:
+        // left is `lookup` under `join`, `kv` under `joinBuild`).
+        let pred = match r.gen_range(3) {
+            0 => "fst(p) <= 4",
+            1 => "fst(snd(p)) % 2 == 0",
+            _ => "snd(snd(p)) % 3 != 1",
+        };
+        body.push_str(&format!(
+            "    jf = j0.filter(|p| {pred});\n     j = jf.map(|p| fst(snd(p)) + snd(snd(p)));\n     collect(j, \"joined\");\n"
+        ));
     }
     match branch_kind {
         0 => body.push_str(

@@ -60,6 +60,11 @@ fn each_pass_alone_preserves_semantics() {
         ("hoist", OptConfig { hoist: true, ..none }),
         ("fuse", OptConfig { fuse: true, ..none }),
         ("dce", OptConfig { dce: true, ..none }),
+        ("pushdown", OptConfig { pushdown: true, ..none }),
+        ("joinside", OptConfig { join_sides: true, ..none }),
+        // Pushdown + joinside interact (a pushed filter changes the side
+        // estimates) — cover the pair as well as the full default stack.
+        ("pushdown+joinside", OptConfig { pushdown: true, join_sides: true, ..none }),
     ];
     for seed in 100..110u64 {
         let src = random_laby_program(seed);
@@ -73,15 +78,66 @@ fn each_pass_alone_preserves_semantics() {
 fn optimizer_actually_fires_on_the_family() {
     // The property above would pass vacuously if the passes never
     // triggered; make sure the program family exercises them.
-    let (mut hoisted, mut fused) = (0usize, 0usize);
+    let (mut hoisted, mut fused, mut pushed) = (0usize, 0usize, 0usize);
     for seed in 0..16u64 {
         let program = parse_and_lower(&random_laby_program(seed)).unwrap();
         let (_, report) = labyrinth::compile_with(&program, &OptConfig::default()).unwrap();
         hoisted += report.hoisted;
         fused += report.fused_chains;
+        pushed += report.pushed_filters;
     }
     assert!(hoisted > 0, "no seed produced a hoistable node");
     assert!(fused > 0, "no seed produced a fusible chain");
+    assert!(pushed > 0, "no seed produced a pushable post-join filter");
+    // Build-side flips need a clear size skew; use a deterministic
+    // program (the random family's sides are too close to call).
+    labyrinth::workload::registry::global()
+        .put("opt_sem_big", (0..256).map(Value::I64).collect());
+    labyrinth::workload::registry::global()
+        .put("opt_sem_small", (0..8).map(Value::I64).collect());
+    let program = parse_and_lower(
+        "big = source(\"opt_sem_big\").map(|v| pair(v % 8, v)); small = source(\"opt_sem_small\").map(|v| pair(v % 8, v)); j = big.joinBuild(small); collect(j, \"j\");",
+    )
+    .unwrap();
+    let (_, report) = labyrinth::compile_with(&program, &OptConfig::default()).unwrap();
+    assert!(report.join_flips > 0, "skewed joinBuild must flip:\n{}", report.render());
+    labyrinth::workload::registry::global().clear_prefix("opt_sem_");
+}
+
+#[test]
+fn zero_trip_loop_over_unregistered_source_runs_under_default_config() {
+    // Regression for the always-on speculation contract: hoisting the
+    // NamedSource out of a loop that provably never runs used to execute
+    // it at loop entry and panic on the unregistered name. The cost gate
+    // (trips = Exact(0) → below threshold) must keep it lazy, and the run
+    // must complete cleanly under the DEFAULT optimizer configuration.
+    let src = r#"
+        d = 9;
+        while (d < 3) {
+            v = source("opt_sem_never_registered").map(|x| pair(x, x));
+            collect(v, "v");
+            d = d + 1;
+        }
+        collect(bag(1, 2), "ok");
+    "#;
+    let program = parse_and_lower(src).unwrap();
+    let (graph, report) =
+        labyrinth::compile_with(&program, &OptConfig::default()).unwrap();
+    assert!(
+        graph.nodes.iter().all(|n| !(matches!(
+            n.op,
+            labyrinth::frontend::Rhs::NamedSource(_)
+        ) && n.hoisted_from.is_some())),
+        "zero-trip source must stay in the loop:\n{}",
+        report.render()
+    );
+    let out = run(&graph, &ExecConfig { workers: 2, ..Default::default() })
+        .expect("zero-trip loop over an unregistered source must not fail");
+    assert!(out.collected("v").is_empty());
+    assert_eq!(
+        multiset(out.collected("ok").to_vec()),
+        vec![Value::I64(1), Value::I64(2)]
+    );
 }
 
 #[test]
