@@ -13,7 +13,7 @@
 //! Labyrinth). The reproduction target is that gap and the near-constant
 //! per-step cost of the in-dataflow implementations.
 
-use labyrinth::baselines::{fixpoint, separate_jobs};
+use labyrinth::baselines::{fixpoint, graph_jobs, separate_jobs};
 use labyrinth::bench_harness::{Bencher, Table};
 use labyrinth::exec::{ExecConfig, ExecMode};
 use labyrinth::programs;
@@ -38,6 +38,7 @@ fn main() {
         "fixpoint-superstep".to_string(),
         "labyrinth".to_string(),
         "labyrinth-barrier".to_string(),
+        "spark-sep-opt".to_string(),
     ];
     let mut table = Table::new(
         "Fig 5: time per run vs iteration steps (200-element bag, 4 workers)",
@@ -104,6 +105,17 @@ fn main() {
         });
         cells.push(Some(m.median()));
         firsts[4].push(m.median());
+
+        // Separate jobs over the OPTIMIZED dataflow graph (graph_jobs):
+        // same per-step job submission model, but fused chains / DCE /
+        // hoisted preambles from `opt::optimize` apply — the optimizer's
+        // wins are visible inside the separate-jobs regime too.
+        let m = bench.run(format!("spark-sep-opt steps={steps}"), || {
+            let cfg = separate_jobs::SeparateJobsConfig::spark(WORKERS);
+            graph_jobs::run_graph(&graph, &cfg).unwrap();
+        });
+        cells.push(Some(m.median()));
+        firsts[5].push(m.median());
 
         table.push_row(steps.to_string(), cells);
     }

@@ -1,0 +1,15 @@
+//! Fig. 9 (ours — the paper has no serving figure): job-service
+//! throughput. Per-job submission latency under three control-plane
+//! regimes — cold compile+spawn per job, cached plan template with a
+//! fresh worker pool per job, and the full `serve::JobService` path
+//! (cached template + persistent warm pool) — plus jobs/sec under N
+//! concurrent clients as the slot count grows.
+//!
+//! Acceptance target: cached-template + warm-pool submission at least
+//! 10x lower latency than cold compile+spawn, and throughput scaling
+//! with job slots. `LABY_BENCH_QUICK=1` shrinks all counts (CI smoke).
+
+fn main() {
+    let smoke = std::env::var("LABY_BENCH_QUICK").ok().as_deref() == Some("1");
+    labyrinth::serve::bench::serving_benchmark(smoke);
+}

@@ -1,12 +1,16 @@
 //! Baseline executors reproducing the systems Labyrinth is evaluated
 //! against (§9): client-side control flow with one dataflow job per step
-//! (Spark/Flink batch style), in-dataflow *fixpoint-only* iteration
-//! (Flink iterate / Naiad style), and the single-threaded COST baseline
-//! [McSherry et al.]. All run the same IR over the same workloads as the
-//! Labyrinth engine, so cross-executor results are directly comparable
-//! (and `single_thread` doubles as the correctness oracle).
+//! (Spark/Flink batch style — over the raw pre-SSA IR in
+//! [`separate_jobs`], over the **optimized dataflow graph** in
+//! [`graph_jobs`] so optimizer wins show in the comparisons),
+//! in-dataflow *fixpoint-only* iteration (Flink iterate / Naiad style),
+//! and the single-threaded COST baseline [McSherry et al.]. All run the
+//! same IR over the same workloads as the Labyrinth engine, so
+//! cross-executor results are directly comparable (and `single_thread`
+//! doubles as the correctness oracle).
 
 pub mod fixpoint;
+pub mod graph_jobs;
 pub mod separate_jobs;
 pub mod single_thread;
 

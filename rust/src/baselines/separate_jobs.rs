@@ -69,7 +69,7 @@ impl SeparateJobsConfig {
 }
 
 /// A partitioned (cached) dataset.
-type Partitions = Arc<Vec<Vec<Value>>>;
+pub(crate) type Partitions = Arc<Vec<Vec<Value>>>;
 
 #[derive(Clone, Debug)]
 enum Binding {
@@ -157,7 +157,7 @@ fn partitions_of(b: &Binding, w: usize) -> Result<Partitions> {
     }
 }
 
-fn scatter(items: &[Value], w: usize) -> Vec<Vec<Value>> {
+pub(crate) fn scatter(items: &[Value], w: usize) -> Vec<Vec<Value>> {
     let mut parts = vec![Vec::with_capacity(items.len() / w + 1); w];
     for (i, v) in items.iter().enumerate() {
         parts[i % w].push(v.clone());
@@ -165,7 +165,7 @@ fn scatter(items: &[Value], w: usize) -> Vec<Vec<Value>> {
     parts
 }
 
-fn hash_repartition(parts: &[Vec<Value>], w: usize) -> Vec<Vec<Value>> {
+pub(crate) fn hash_repartition(parts: &[Vec<Value>], w: usize) -> Vec<Vec<Value>> {
     let mut out = vec![Vec::new(); w];
     for p in parts {
         for v in p {
@@ -176,7 +176,7 @@ fn hash_repartition(parts: &[Vec<Value>], w: usize) -> Vec<Vec<Value>> {
 }
 
 /// Run `f` over partitions in parallel (one thread per worker).
-fn par_map_partitions(
+pub(crate) fn par_map_partitions(
     parts: &[Vec<Value>],
     f: impl Fn(&[Value]) -> Vec<Value> + Sync,
 ) -> Vec<Vec<Value>> {

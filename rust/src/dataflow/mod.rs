@@ -232,8 +232,19 @@ fn singleton_out(op: &Rhs, input_singleton: &[bool]) -> bool {
     }
 }
 
-/// Build the logical dataflow graph from lifted SSA.
+/// Build the logical dataflow graph from lifted SSA, resolving
+/// `source("name")` size hints against the process-global registry.
 pub fn build(ssa: &SsaProgram) -> Result<DataflowGraph> {
+    build_with(ssa, &crate::workload::registry::global())
+}
+
+/// [`build`] with an explicit named-source registry for size hints. The
+/// `serve::` job service passes the request's registry overlay here so
+/// per-request datasets inform the cost model of the compiled template.
+pub fn build_with(
+    ssa: &SsaProgram,
+    registry: &crate::workload::registry::Registry,
+) -> Result<DataflowGraph> {
     let cfg = ssa.cfg.clone();
     let mut nodes: Vec<Node> = Vec::new();
     let mut node_of_var: FxHashMap<VarId, NodeId> = FxHashMap::default();
@@ -252,9 +263,7 @@ pub fn build(ssa: &SsaProgram) -> Result<DataflowGraph> {
             // register datasets before compiling), else unknown.
             let size_hint = match &instr.rhs {
                 Rhs::BagLit(items) => Some(items.len()),
-                Rhs::NamedSource(name) => {
-                    crate::workload::registry::global().get(name).map(|d| d.len())
-                }
+                Rhs::NamedSource(name) => registry.get(name).map(|d| d.len()),
                 _ => None,
             };
             nodes.push(Node {

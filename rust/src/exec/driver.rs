@@ -1,15 +1,24 @@
-//! The driver (leader): spawns workers, relays condition-node decisions as
-//! execution-path broadcasts (§6.3.1), tracks completion for barrier mode
-//! and termination, and gathers `collect` outputs.
+//! The driver (leader): dispatches worker epochs, relays condition-node
+//! decisions as execution-path broadcasts (§6.3.1), tracks completion for
+//! barrier mode and termination, and gathers `collect` outputs.
 //!
 //! Centralizing the path *relay* in the driver (the paper broadcasts from
 //! condition nodes directly) keeps the global block order trivially
 //! consistent; the cost per decision is one extra hop and remains O(1)
 //! per appended block.
+//!
+//! A job runs as one **epoch** on a [`WorkerPool`]: per-job channels are
+//! created here, each pooled thread processes its receiver until the
+//! driver's `Shutdown`, and the driver waits for every epoch-done report
+//! before returning so the pool is immediately reusable. [`run_plan`] is
+//! the one-shot wrapper that spins up a temporary pool (the historical
+//! spawn-per-run behavior); `serve::JobService` keeps pools warm across
+//! jobs instead.
 
 use super::message::{DriverMsg, WorkerMsg};
 use super::plan::ExecPlan;
-use super::{ExecConfig, ExecMode, RunOutput};
+use super::pool::WorkerPool;
+use super::{ExecConfig, ExecMode, NodeRows, RunOutput};
 use crate::coord::ExecPath;
 use crate::error::{Error, Result};
 use crate::frontend::{BlockId, Terminator};
@@ -23,8 +32,31 @@ use std::time::{Duration, Instant};
 /// is declared deadlocked (a coordination bug) instead of hanging forever.
 const STALL_TIMEOUT: Duration = Duration::from_secs(120);
 
-/// Execute a physical plan.
+/// Execute a physical plan on a temporary pool (one-shot: spawn, run one
+/// epoch, join). Kept as the plain-API entry point; repeated jobs should
+/// share a [`WorkerPool`] via [`run_plan_on_pool`] (or the `serve::`
+/// job service, which also caches compiled plans).
 pub fn run_plan(plan: Arc<ExecPlan>, cfg: &ExecConfig) -> Result<RunOutput> {
+    let pool = WorkerPool::new(plan.workers);
+    run_plan_on_pool(plan, cfg, &pool)
+}
+
+/// Execute a physical plan as one epoch of a resident [`WorkerPool`].
+/// The plan must have been instantiated for exactly `pool.size()`
+/// workers. On return — success, error, or deadline abort — every pool
+/// thread has finished the epoch and the pool is ready for the next job.
+pub fn run_plan_on_pool(
+    plan: Arc<ExecPlan>,
+    cfg: &ExecConfig,
+    pool: &WorkerPool,
+) -> Result<RunOutput> {
+    if plan.workers != pool.size() {
+        return Err(Error::exec(format!(
+            "plan instantiated for {} workers but the pool has {}",
+            plan.workers,
+            pool.size()
+        )));
+    }
     // Optional scheduler substrate: Labyrinth schedules ONCE per program
     // (vs once per step for the separate-jobs baselines — Fig. 4/5).
     let sched_overhead = match &cfg.sched {
@@ -50,6 +82,9 @@ pub fn run_plan(plan: Arc<ExecPlan>, cfg: &ExecConfig) -> Result<RunOutput> {
     }
     let (driver_tx, driver_rx) = channel::<DriverMsg>();
 
+    let node_counters: Arc<Vec<super::worker::NodeCounters>> = Arc::new(
+        (0..plan.graph.num_nodes()).map(|_| super::worker::NodeCounters::default()).collect(),
+    );
     let shared = Arc::new(super::worker::WorkerShared {
         plan: plan.clone(),
         workers: worker_txs.clone(),
@@ -60,26 +95,16 @@ pub fn run_plan(plan: Arc<ExecPlan>, cfg: &ExecConfig) -> Result<RunOutput> {
         metrics: metrics.clone(),
         report_bag_done: cfg.mode == ExecMode::Barrier,
         io_dir: cfg.io_dir.clone(),
+        registry: cfg.registry.clone(),
+        node_counters: node_counters.clone(),
     });
 
-    let mut handles = Vec::with_capacity(plan.workers);
+    // Start the epoch on every pooled worker.
+    let (done_tx, done_rx) = channel::<usize>();
     for (w, rx) in worker_rxs.into_iter().enumerate() {
-        let shared = shared.clone();
-        let dtx = driver_tx.clone();
-        handles.push(std::thread::spawn(move || {
-            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                super::worker::run_worker(w, shared, rx);
-            }));
-            if let Err(p) = result {
-                let msg = p
-                    .downcast_ref::<String>()
-                    .cloned()
-                    .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
-                    .unwrap_or_else(|| "worker panic".into());
-                let _ = dtx.send(DriverMsg::Panic { msg: format!("worker {w}: {msg}") });
-            }
-        }));
+        pool.dispatch(w, shared.clone(), rx, done_tx.clone())?;
     }
+    drop(done_tx);
     drop(driver_tx);
 
     // Driver state.
@@ -140,9 +165,26 @@ pub fn run_plan(plan: Arc<ExecPlan>, cfg: &ExecConfig) -> Result<RunOutput> {
 
     let mut error: Option<Error> = None;
     loop {
-        let msg = match driver_rx.recv_timeout(STALL_TIMEOUT) {
+        // Per-job deadlines (serve:: admission queue) bound the wait; a
+        // stall past STALL_TIMEOUT is a coordination bug either way.
+        let timeout = match cfg.deadline {
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    error = Some(Error::exec("job deadline exceeded"));
+                    break;
+                }
+                STALL_TIMEOUT.min(d - now)
+            }
+            None => STALL_TIMEOUT,
+        };
+        let msg = match driver_rx.recv_timeout(timeout) {
             Ok(m) => m,
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if cfg.deadline.map_or(false, |d| Instant::now() >= d) {
+                    error = Some(Error::exec("job deadline exceeded"));
+                    break;
+                }
                 let done_ref = &done_who;
                 let stuck: Vec<String> = graph
                     .nodes
@@ -233,15 +275,26 @@ pub fn run_plan(plan: Arc<ExecPlan>, cfg: &ExecConfig) -> Result<RunOutput> {
         }
     }
 
+    // End the epoch: workers drain their queues, see Shutdown, and report
+    // done to the pool. Waiting for every report keeps the pool reusable
+    // (the next job must not race a straggler from this one).
     for tx in &worker_txs {
         let _ = tx.send(WorkerMsg::Shutdown);
     }
-    for h in handles {
-        let _ = h.join();
+    for _ in 0..pool.size() {
+        let _ = done_rx.recv();
     }
     if let Some(e) = error {
         return Err(e);
     }
+
+    let node_rows: Vec<NodeRows> = node_counters
+        .iter()
+        .map(|c| NodeRows {
+            rows: c.rows.load(std::sync::atomic::Ordering::Relaxed),
+            bags: c.bags.load(std::sync::atomic::Ordering::Relaxed),
+        })
+        .collect();
 
     Ok(RunOutput {
         collected,
@@ -250,5 +303,6 @@ pub fn run_plan(plan: Arc<ExecPlan>, cfg: &ExecConfig) -> Result<RunOutput> {
         sched_overhead,
         metrics,
         path_len: path.len() as usize,
+        node_rows,
     })
 }

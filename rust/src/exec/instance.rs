@@ -32,6 +32,8 @@ pub struct Env<'a> {
     pub reuse: bool,
     /// Pre-resolved hot-path counters (see `worker::EngineCounters`).
     pub counters: &'a super::worker::EngineCounters,
+    /// Per-node observed output counters (see `worker::NodeCounters`).
+    pub node_counters: &'a [super::worker::NodeCounters],
     /// Report per-bag completions to the driver (barrier mode only).
     pub report_bag_done: bool,
 }
@@ -87,12 +89,18 @@ pub struct Instance {
 
 impl Instance {
     /// Create the instance for `(node, inst)`.
-    pub fn new(plan: &ExecPlan, node: NodeId, inst: usize, io_dir: &std::path::Path) -> Instance {
+    pub fn new(
+        plan: &ExecPlan,
+        node: NodeId,
+        inst: usize,
+        io_dir: &std::path::Path,
+        registry: std::sync::Arc<crate::workload::registry::Registry>,
+    ) -> Instance {
         let n = &plan.graph.nodes[node];
         let ctx = crate::ops::MakeCtx {
             inst,
             insts: plan.num_insts[node],
-            registry: crate::workload::registry::global(),
+            registry,
             io_dir: io_dir.to_path_buf(),
         };
         let transform = crate::ops::make_with_join_build(&n.op, plan.join_build[node], &ctx)
@@ -429,6 +437,7 @@ impl Instance {
             });
         }
         env.counters.bags_completed.fetch_add(1, Ordering::Relaxed);
+        env.node_counters[self.node].bags.fetch_add(1, Ordering::Relaxed);
     }
 
     // ---- emission routing -------------------------------------------------
@@ -438,6 +447,7 @@ impl Instance {
             return;
         }
         let items = std::mem::take(&mut self.staging.items);
+        env.node_counters[self.node].rows.fetch_add(items.len() as u64, Ordering::Relaxed);
         let cur = self.cur.as_mut().expect("emission outside a bag");
         let len = cur.len;
         if self.is_cond {

@@ -8,6 +8,7 @@ pub mod driver;
 pub mod instance;
 pub mod message;
 pub mod plan;
+pub mod pool;
 pub mod worker;
 
 use crate::dataflow::DataflowGraph;
@@ -19,6 +20,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 pub use plan::ExecPlan;
+pub use pool::WorkerPool;
 
 /// Execution mode.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -48,6 +50,15 @@ pub struct ExecConfig {
     /// Optional scheduler substrate: simulate the one-time job submission
     /// cost (`sched::LatencyModel`) before execution starts.
     pub sched: Option<crate::sched::LatencyModel>,
+    /// Named-source registry for this run. Defaults to the process-global
+    /// registry; the `serve::` job service passes a per-request
+    /// [`crate::workload::registry::Registry::overlay`] here so requests
+    /// bind their own datasets without touching global state.
+    pub registry: Arc<crate::workload::registry::Registry>,
+    /// Optional absolute deadline: the driver aborts the run (shutting the
+    /// epoch down cleanly) once this instant passes. Used by the `serve::`
+    /// admission queue's per-job deadlines.
+    pub deadline: Option<std::time::Instant>,
 }
 
 impl Default for ExecConfig {
@@ -59,8 +70,22 @@ impl Default for ExecConfig {
             reuse_state: true,
             io_dir: std::path::PathBuf::from("."),
             sched: None,
+            registry: crate::workload::registry::global(),
+            deadline: None,
         }
     }
+}
+
+/// Observed output cardinality of one logical node over a whole run
+/// (summed across instances and iteration steps). Recorded cheaply on the
+/// emission path and fed back into the `opt::cost` model by the `serve::`
+/// job service (adaptive re-optimization of cached plan templates).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeRows {
+    /// Elements emitted by all instances of the node, all steps summed.
+    pub rows: u64,
+    /// Output bags completed (one per instance per step).
+    pub bags: u64,
 }
 
 /// Result of a run.
@@ -78,6 +103,8 @@ pub struct RunOutput {
     pub metrics: Arc<Metrics>,
     /// Number of control-flow steps (path length).
     pub path_len: usize,
+    /// Observed per-node output cardinalities (indexed by `NodeId`).
+    pub node_rows: Vec<NodeRows>,
 }
 
 impl RunOutput {
@@ -189,6 +216,22 @@ mod tests {
             2,
         );
         assert_eq!(out.collected("y"), &[Value::I64(3)]);
+    }
+
+    #[test]
+    fn node_rows_record_emitted_cardinalities() {
+        let out = run_src("a = bag(1, 2, 3); b = a.map(|x| x * 10); collect(b, \"b\");", 2);
+        let g = crate::compile_source("a = bag(1, 2, 3); b = a.map(|x| x * 10); collect(b, \"b\");")
+            .unwrap();
+        assert_eq!(out.node_rows.len(), g.num_nodes());
+        // Every live node completed at least one bag; the map emitted 3 rows.
+        let map = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, crate::frontend::Rhs::Map { .. } | crate::frontend::Rhs::Fused { .. }))
+            .unwrap();
+        assert_eq!(out.node_rows[map.id].rows, 3);
+        assert!(out.node_rows[map.id].bags >= 1);
     }
 
     #[test]

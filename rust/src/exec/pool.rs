@@ -1,0 +1,191 @@
+//! The persistent worker pool: simulated-cluster worker threads that
+//! survive across jobs.
+//!
+//! `run_plan` historically spawned one OS thread per worker per run and
+//! joined them at the end — fine for a single benchmark run, but a real
+//! per-job cost (thread spawn + stack + teardown) that dominates short
+//! jobs under high submission rates. A [`WorkerPool`] keeps the threads
+//! resident; a job becomes a message-delimited **epoch**: the driver
+//! hands each pooled thread an [`Arc<WorkerShared>`] (plan + per-job
+//! channels) plus that worker's job receiver, the thread runs
+//! [`run_worker`] to `Shutdown` exactly as before, reports the epoch
+//! complete, and parks waiting for the next job.
+//!
+//! Isolation between epochs is structural: `run_worker` builds every
+//! piece of per-job state (path replica, operator instances, §7 reuse
+//! tables) on entry and drops it on return, so consecutive jobs — even
+//! from different tenants of the `serve::` job service — cannot observe
+//! each other's state. A worker panic is caught per epoch, reported to
+//! that job's driver, and the thread stays usable for the next job.
+
+use super::message::{DriverMsg, WorkerMsg};
+use super::worker::{run_worker, WorkerShared};
+use crate::error::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+enum PoolCmd {
+    /// Run one job epoch: process `rx` until `Shutdown`, then report on
+    /// `done`.
+    Run {
+        shared: Arc<WorkerShared>,
+        rx: Receiver<WorkerMsg>,
+        done: Sender<usize>,
+    },
+    /// Terminate the pool thread.
+    Shutdown,
+}
+
+/// A set of resident worker threads, reused across job epochs.
+///
+/// The pool runs ONE job at a time (every thread participates in each
+/// epoch); concurrency across jobs comes from multiple pools — the
+/// `serve::JobService` owns one pool per job slot.
+pub struct WorkerPool {
+    ctrl: Vec<Sender<PoolCmd>>,
+    handles: Vec<JoinHandle<()>>,
+    epochs: Arc<AtomicU64>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers` resident threads (min 1).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let epochs = Arc::new(AtomicU64::new(0));
+        let mut ctrl = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<PoolCmd>();
+            let epochs = epochs.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("laby-pool-{w}"))
+                    .spawn(move || pool_main(w, rx, epochs))
+                    .expect("spawn pool worker"),
+            );
+            ctrl.push(tx);
+        }
+        WorkerPool { ctrl, handles, epochs }
+    }
+
+    /// Number of resident worker threads.
+    pub fn size(&self) -> usize {
+        self.ctrl.len()
+    }
+
+    /// Total worker epochs completed (each job contributes `size()`).
+    pub fn epochs(&self) -> u64 {
+        self.epochs.load(Ordering::Relaxed)
+    }
+
+    /// Thread ids of the resident workers (stable across epochs — used by
+    /// the reuse tests to prove no thread churn).
+    pub fn thread_ids(&self) -> Vec<std::thread::ThreadId> {
+        self.handles.iter().map(|h| h.thread().id()).collect()
+    }
+
+    /// Hand worker `w` its share of a job epoch.
+    pub(crate) fn dispatch(
+        &self,
+        w: usize,
+        shared: Arc<WorkerShared>,
+        rx: Receiver<WorkerMsg>,
+        done: Sender<usize>,
+    ) -> Result<()> {
+        self.ctrl[w]
+            .send(PoolCmd::Run { shared, rx, done })
+            .map_err(|_| crate::Error::exec(format!("pool worker {w} is gone")))
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for tx in &self.ctrl {
+            let _ = tx.send(PoolCmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn pool_main(w: usize, ctrl: Receiver<PoolCmd>, epochs: Arc<AtomicU64>) {
+    while let Ok(cmd) = ctrl.recv() {
+        match cmd {
+            PoolCmd::Shutdown => break,
+            PoolCmd::Run { shared, rx, done } => {
+                // Keep a driver handle past the move so a panic can still
+                // be reported to THIS job's driver.
+                let driver = shared.driver.clone();
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_worker(w, shared, rx);
+                }));
+                if let Err(p) = result {
+                    let msg = p
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "worker panic".into());
+                    let _ = driver.send(DriverMsg::Panic { msg: format!("worker {w}: {msg}") });
+                }
+                epochs.fetch_add(1, Ordering::Relaxed);
+                let _ = done.send(w);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{driver, ExecConfig, ExecPlan};
+    use crate::frontend::parse_and_lower;
+
+    fn plan(src: &str, workers: usize) -> Arc<ExecPlan> {
+        let g = crate::compile(&parse_and_lower(src).unwrap()).unwrap();
+        Arc::new(ExecPlan::new(Arc::new(g), workers))
+    }
+
+    #[test]
+    fn pool_reuses_threads_across_epochs() {
+        let pool = WorkerPool::new(3);
+        let ids_before = pool.thread_ids();
+        let p = plan("a = bag(1, 2, 3); b = a.map(|x| x + 1); collect(b, \"b\");", 3);
+        let cfg = ExecConfig { workers: 3, ..Default::default() };
+        for _ in 0..5 {
+            let out = driver::run_plan_on_pool(p.clone(), &cfg, &pool).unwrap();
+            let mut got = out.collected("b").to_vec();
+            got.sort();
+            assert_eq!(got.len(), 3);
+        }
+        assert_eq!(pool.epochs(), 5 * 3, "every job runs one epoch per worker");
+        assert_eq!(pool.thread_ids(), ids_before, "no thread churn across jobs");
+    }
+
+    #[test]
+    fn pool_survives_a_worker_panic() {
+        let pool = WorkerPool::new(2);
+        // `source` of an unregistered name panics inside the worker.
+        let bad = plan(
+            "s = source(\"pool_test_definitely_unregistered\"); collect(s, \"s\");",
+            2,
+        );
+        let cfg = ExecConfig { workers: 2, ..Default::default() };
+        let err = driver::run_plan_on_pool(bad.clone(), &cfg, &pool).unwrap_err();
+        assert!(err.to_string().contains("not registered"), "{err}");
+        // The pool remains usable.
+        let good = plan("a = bag(7); collect(a, \"a\");", 2);
+        let out = driver::run_plan_on_pool(good, &cfg, &pool).unwrap();
+        assert_eq!(out.collected("a").len(), 1);
+    }
+
+    #[test]
+    fn pool_rejects_mismatched_plan_width() {
+        let pool = WorkerPool::new(2);
+        let p = plan("a = bag(1); collect(a, \"a\");", 4);
+        let cfg = ExecConfig { workers: 4, ..Default::default() };
+        assert!(driver::run_plan_on_pool(p, &cfg, &pool).is_err());
+    }
+}

@@ -51,6 +51,18 @@ impl EngineCounters {
     }
 }
 
+/// Per-logical-node observed output counters (indexed by `NodeId`),
+/// shared by all workers of a run and folded into
+/// [`super::RunOutput::node_rows`] by the driver. One atomic add per
+/// staging flush / completed bag — off the per-element hot path.
+#[derive(Default)]
+pub struct NodeCounters {
+    /// Elements emitted (all instances, all steps).
+    pub rows: AtomicU64,
+    /// Output bags completed (per instance per step).
+    pub bags: AtomicU64,
+}
+
 /// Parameters shared by all workers of a run.
 pub struct WorkerShared {
     /// The physical plan.
@@ -72,10 +84,20 @@ pub struct WorkerShared {
     pub report_bag_done: bool,
     /// I/O base directory.
     pub io_dir: std::path::PathBuf,
+    /// Named-source registry for this run (per-request overlay under the
+    /// `serve::` job service, the process-global registry otherwise).
+    pub registry: Arc<crate::workload::registry::Registry>,
+    /// Observed per-node output cardinalities (indexed by `NodeId`).
+    pub node_counters: Arc<Vec<NodeCounters>>,
 }
 
-/// Run one worker until `Shutdown`. Instances hosted: instance `w` of
-/// every `Par::All` node, instance 0 of `Par::One` nodes when `w == 0`.
+/// Run one worker for one job **epoch**: process messages until
+/// `Shutdown`. Instances hosted: instance `w` of every `Par::All` node,
+/// instance 0 of `Par::One` nodes when `w == 0`. All per-job state (the
+/// path replica and every operator instance, including §7 reuse state) is
+/// created here and dropped on return, so a pooled thread running
+/// back-to-back epochs (`exec::pool`) starts every job clean — nothing
+/// bleeds between jobs or tenants.
 pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) {
     let plan = shared.plan.clone();
     let mut path = ExecPath::new(plan.graph.cfg.num_blocks());
@@ -87,7 +109,7 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
         .map(|n| {
             let insts = plan.num_insts[n.id];
             if w < insts {
-                Some(Instance::new(&plan, n.id, w, &shared.io_dir))
+                Some(Instance::new(&plan, n.id, w, &shared.io_dir, shared.registry.clone()))
             } else {
                 None
             }
@@ -109,6 +131,7 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
                             batch: shared.batch,
                             reuse: shared.reuse,
                             counters: &shared.counters,
+                            node_counters: &shared.node_counters,
                             report_bag_done: shared.report_bag_done,
                         };
                         inst.on_append(start, &blocks, &mut env);
@@ -129,6 +152,7 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
                     batch: shared.batch,
                     reuse: shared.reuse,
                     counters: &shared.counters,
+                    node_counters: &shared.node_counters,
                     report_bag_done: shared.report_bag_done,
                 };
                 inst.on_data(input, bag_len, items, close, &mut env);
@@ -146,6 +170,7 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
                     batch: shared.batch,
                     reuse: shared.reuse,
                     counters: &shared.counters,
+                    node_counters: &shared.node_counters,
                     report_bag_done: shared.report_bag_done,
                 };
                 inst.on_close(input, bag_len, &mut env);

@@ -9,6 +9,7 @@
 
 pub mod ast;
 pub mod builder;
+pub mod dsl;
 pub mod interp_expr;
 pub mod lexer;
 pub mod lower;
@@ -16,6 +17,7 @@ pub mod parser;
 
 use crate::value::Value;
 use std::fmt;
+use std::hash::{Hash, Hasher};
 use std::sync::Arc;
 
 /// Index of a basic block.
@@ -555,6 +557,209 @@ pub fn parse_and_lower(src: &str) -> crate::Result<Program> {
     lower::lower(&ast)
 }
 
+// ---- program identity (serve:: plan-template cache keys) ----------------
+
+fn hash_udf1(u: &Udf1, h: &mut impl Hasher) {
+    u.name.hash(h);
+    match &u.expr {
+        // Expression-carrying UDFs (parser path, `frontend::dsl`) hash
+        // structurally: the same lambda source always fingerprints the
+        // same, so re-parsed programs share a cache entry.
+        Some(e) => {
+            1u8.hash(h);
+            e.0.hash(h);
+            format!("{:?}", e.1).hash(h);
+        }
+        // Opaque native closures hash by identity (the Arc pointer): two
+        // separately constructed closures never collide, at the cost of
+        // re-built programs missing the cache. Conservative, never wrong.
+        None => {
+            0u8.hash(h);
+            (Arc::as_ptr(&u.f).cast::<()>() as usize).hash(h);
+        }
+    }
+}
+
+fn hash_udf2(u: &Udf2, h: &mut impl Hasher) {
+    u.name.hash(h);
+    (Arc::as_ptr(&u.f).cast::<()>() as usize).hash(h);
+}
+
+fn hash_udfn(u: &UdfN, h: &mut impl Hasher) {
+    u.name.hash(h);
+    (Arc::as_ptr(&u.f).cast::<()>() as usize).hash(h);
+}
+
+fn hash_rhs(rhs: &Rhs, h: &mut impl Hasher) {
+    match rhs {
+        Rhs::Const(v) => {
+            0u8.hash(h);
+            v.hash(h);
+        }
+        Rhs::BagLit(items) => {
+            1u8.hash(h);
+            items.hash(h);
+        }
+        Rhs::NamedSource(name) => {
+            2u8.hash(h);
+            name.hash(h);
+        }
+        Rhs::ReadFile { name } => {
+            3u8.hash(h);
+            name.hash(h);
+        }
+        Rhs::WriteFile { data, name } => {
+            4u8.hash(h);
+            data.hash(h);
+            name.hash(h);
+        }
+        Rhs::Collect { input, label } => {
+            5u8.hash(h);
+            input.hash(h);
+            label.hash(h);
+        }
+        Rhs::Map { input, udf } => {
+            6u8.hash(h);
+            input.hash(h);
+            hash_udf1(udf, h);
+        }
+        Rhs::Filter { input, udf } => {
+            7u8.hash(h);
+            input.hash(h);
+            hash_udf1(udf, h);
+        }
+        Rhs::FlatMap { input, udf } => {
+            8u8.hash(h);
+            input.hash(h);
+            hash_udfn(udf, h);
+        }
+        Rhs::Join { left, right } => {
+            9u8.hash(h);
+            left.hash(h);
+            right.hash(h);
+        }
+        Rhs::ReduceByKey { input, udf } => {
+            10u8.hash(h);
+            input.hash(h);
+            hash_udf2(udf, h);
+        }
+        Rhs::Reduce { input, udf } => {
+            11u8.hash(h);
+            input.hash(h);
+            hash_udf2(udf, h);
+        }
+        Rhs::Count { input } => {
+            12u8.hash(h);
+            input.hash(h);
+        }
+        Rhs::Distinct { input } => {
+            13u8.hash(h);
+            input.hash(h);
+        }
+        Rhs::Union { left, right } => {
+            14u8.hash(h);
+            left.hash(h);
+            right.hash(h);
+        }
+        Rhs::Cross { left, right } => {
+            15u8.hash(h);
+            left.hash(h);
+            right.hash(h);
+        }
+        Rhs::ScalarUn { input, udf } => {
+            16u8.hash(h);
+            input.hash(h);
+            hash_udf1(udf, h);
+        }
+        Rhs::ScalarBin { left, right, udf } => {
+            17u8.hash(h);
+            left.hash(h);
+            right.hash(h);
+            hash_udf2(udf, h);
+        }
+        Rhs::Copy(v) => {
+            18u8.hash(h);
+            v.hash(h);
+        }
+        Rhs::XlaCall { inputs, spec } => {
+            19u8.hash(h);
+            inputs.hash(h);
+            format!("{spec:?}").hash(h);
+        }
+        Rhs::Fused { input, stages } => {
+            20u8.hash(h);
+            input.hash(h);
+            for s in stages {
+                match s {
+                    FusedStage::Map(u) => {
+                        0u8.hash(h);
+                        hash_udf1(u, h);
+                    }
+                    FusedStage::Filter(u) => {
+                        1u8.hash(h);
+                        hash_udf1(u, h);
+                    }
+                    FusedStage::FlatMap(u) => {
+                        2u8.hash(h);
+                        hash_udfn(u, h);
+                    }
+                }
+            }
+        }
+        Rhs::Phi(args) => {
+            21u8.hash(h);
+            args.hash(h);
+        }
+    }
+}
+
+/// Structural identity of a pre-SSA [`Program`] — the **hashable program
+/// identity** used by the `serve::` job service as the plan-template
+/// cache key for `Program`-based submissions (source-text submissions
+/// hash the text itself).
+///
+/// Two programs fingerprint equal iff their block structure, variable
+/// tables, operations, constants, and UDFs agree. UDFs compiled from
+/// LabyLang lambdas (or the [`dsl`] combinators) carry their expression
+/// and hash *structurally* — re-lowering identical source yields the same
+/// fingerprint. Opaque builder closures hash by closure identity, so a
+/// re-built program misses the cache rather than ever sharing a template
+/// with a different function.
+pub fn fingerprint(p: &Program) -> u64 {
+    let mut h = rustc_hash::FxHasher::default();
+    p.entry.hash(&mut h);
+    p.vars.len().hash(&mut h);
+    for v in &p.vars {
+        v.name.hash(&mut h);
+        match v.ty {
+            Ty::Bag => 0u8.hash(&mut h),
+            Ty::Scalar => 1u8.hash(&mut h),
+        }
+    }
+    p.blocks.len().hash(&mut h);
+    for b in &p.blocks {
+        b.instrs.len().hash(&mut h);
+        for i in &b.instrs {
+            i.var.hash(&mut h);
+            hash_rhs(&i.rhs, &mut h);
+        }
+        match &b.term {
+            Terminator::Jump(t) => {
+                0u8.hash(&mut h);
+                t.hash(&mut h);
+            }
+            Terminator::Branch { cond, then_b, else_b } => {
+                1u8.hash(&mut h);
+                cond.hash(&mut h);
+                then_b.hash(&mut h);
+                else_b.hash(&mut h);
+            }
+            Terminator::End => 2u8.hash(&mut h),
+        }
+    }
+    h.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -583,6 +788,39 @@ mod tests {
         };
         r2.map_inputs(|v| v + 10);
         assert_eq!(r2.input_vars(), vec![11, 12]);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_for_reparsed_source() {
+        let src = "a = bag(1, 2); b = a.map(|x| x + 1); collect(b, \"b\");";
+        let p1 = parse_and_lower(src).unwrap();
+        let p2 = parse_and_lower(src).unwrap();
+        assert_eq!(fingerprint(&p1), fingerprint(&p2));
+        let other =
+            parse_and_lower("a = bag(1, 2); b = a.map(|x| x + 2); collect(b, \"b\");").unwrap();
+        assert_ne!(fingerprint(&p1), fingerprint(&other), "different lambda body");
+        let other_label =
+            parse_and_lower("a = bag(1, 2); b = a.map(|x| x + 1); collect(b, \"c\");").unwrap();
+        assert_ne!(fingerprint(&p1), fingerprint(&other_label), "different collect label");
+    }
+
+    #[test]
+    fn fingerprint_separates_distinct_native_closures() {
+        use builder::{udf1, ProgramBuilder};
+        let build = || {
+            let mut b = ProgramBuilder::new();
+            let bag = b.bag_lit(vec![Value::I64(1)]);
+            let m = b.map(bag, udf1(|v| Value::I64(v.as_i64() * 2)));
+            b.collect(m, "m");
+            b.finish()
+        };
+        // Same structure but separately constructed opaque closures —
+        // identity hashing must keep them apart.
+        assert_ne!(fingerprint(&build()), fingerprint(&build()));
+        // The same Program instance is stable with itself.
+        let p = build();
+        assert_eq!(fingerprint(&p), fingerprint(&p));
+        assert_eq!(fingerprint(&p), fingerprint(&p.clone()), "clones share closures");
     }
 
     #[test]

@@ -36,6 +36,12 @@
 //!    · baselines::       separate-jobs (Spark-/Flink-like, via the
 //!                        sched:: scheduler substrate), fixpoint-only
 //!                        in-dataflow (Flink/Naiad-like), single-threaded
+//!    · serve::           resident JobService for high-throughput repeated
+//!                        jobs — plan-template cache keyed by program +
+//!                        config fingerprints, persistent worker pools
+//!                        (jobs are message-delimited epochs), bounded
+//!                        admission queue with per-request parameter
+//!                        binding and adaptive re-optimization
 //! ```
 //!
 //! ## Layers
@@ -62,6 +68,7 @@ pub mod ops;
 pub mod programs;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod ssa;
 pub mod util;
 pub mod value;
@@ -75,6 +82,7 @@ pub mod prelude {
     pub use crate::dataflow::DataflowGraph;
     pub use crate::exec::{run, ExecConfig, ExecMode};
     pub use crate::frontend::builder::{udf1, udf2, BagHandle, ProgramBuilder, ScalarHandle};
+    pub use crate::serve::{JobRequest, JobService, ServeConfig};
     pub use crate::value::Value;
     pub use crate::{compile, compile_source};
 }
@@ -109,11 +117,48 @@ pub fn compile_with(
     program: &frontend::Program,
     opt_cfg: &opt::OptConfig,
 ) -> Result<(dataflow::DataflowGraph, opt::ExplainReport)> {
+    compile_pipeline(program, opt_cfg, &workload::registry::global(), None)
+}
+
+/// [`compile_with`] against an explicit named-source registry (size
+/// hints for `source("name")` resolve here instead of the process-global
+/// registry). Used by the `serve::` job service so a request's dataset
+/// bindings inform the cost model of the compiled plan template.
+pub fn compile_with_registry(
+    program: &frontend::Program,
+    opt_cfg: &opt::OptConfig,
+    registry: &workload::registry::Registry,
+) -> Result<(dataflow::DataflowGraph, opt::ExplainReport)> {
+    compile_pipeline(program, opt_cfg, registry, None)
+}
+
+/// [`compile_with_registry`] plus observed-cardinality feedback: row
+/// estimates of nodes named in `feedback` are pinned to runtime-measured
+/// values (see [`opt::optimize_with_feedback`]). The `serve::` service
+/// uses this to re-optimize a cached template from its own statistics.
+pub fn compile_with_feedback(
+    program: &frontend::Program,
+    opt_cfg: &opt::OptConfig,
+    registry: &workload::registry::Registry,
+    feedback: &opt::RowFeedback,
+) -> Result<(dataflow::DataflowGraph, opt::ExplainReport)> {
+    compile_pipeline(program, opt_cfg, registry, Some(feedback))
+}
+
+fn compile_pipeline(
+    program: &frontend::Program,
+    opt_cfg: &opt::OptConfig,
+    registry: &workload::registry::Registry,
+    feedback: Option<&opt::RowFeedback>,
+) -> Result<(dataflow::DataflowGraph, opt::ExplainReport)> {
     let cfg = cfg::Cfg::from_program(program)?;
     let ssa = ssa::construct(&cfg)?;
     let lifted = ssa::lift::lift(ssa)?;
-    let mut graph = dataflow::build(&lifted)?;
-    let report = opt::optimize(&mut graph, opt_cfg)?;
+    let mut graph = dataflow::build_with(&lifted, registry)?;
+    let report = match feedback {
+        Some(f) => opt::optimize_with_feedback(&mut graph, opt_cfg, f)?,
+        None => opt::optimize(&mut graph, opt_cfg)?,
+    };
     Ok((graph, report))
 }
 

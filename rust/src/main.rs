@@ -7,6 +7,9 @@
 //!               [--no-pushdown] [--no-join-sides] [--speculate auto|always|never]
 //!               [--explain] [--io-dir DIR] [--config FILE] [--sched] [--metrics]
 //! labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]
+//! labyrinth serve <program.laby> [--workers N] [--slots S] [--requests R]
+//!               [--param name=value]... [--no-adaptive] [--metrics]
+//! labyrinth bench-serve [--smoke]
 //! labyrinth generate visitcount --days N --visits M --pages P --out DIR
 //! labyrinth config --dump [--config FILE]
 //! ```
@@ -42,6 +45,9 @@ const VALUE_OPTS: &[&str] = &[
     "--visits", "--pages", "--out", "--batch", "--scale",
     // Speculative-hoist policy (config key opt.speculate): auto|always|never.
     "--speculate",
+    // serve / bench-serve: job slots, request count, per-request scalar
+    // parameters (repeatable `--param name=value`).
+    "--slots", "--requests", "--param",
 ];
 const FLAG_OPTS: &[&str] = &[
     "--no-reuse", "--metrics", "--sched", "--dump-plan",
@@ -49,6 +55,8 @@ const FLAG_OPTS: &[&str] = &[
     // opt.pushdown / opt.join_sides).
     "--no-opt", "--no-hoist", "--no-fuse", "--no-dce", "--no-pushdown",
     "--no-join-sides", "--explain",
+    // bench-serve CI mode; serve adaptive-reoptimization toggle.
+    "--smoke", "--no-adaptive",
 ];
 
 fn parse_opts(args: &[String]) -> Result<Opts> {
@@ -87,6 +95,14 @@ impl Opts {
     fn has(&self, key: &str) -> bool {
         self.options.iter().any(|(k, _)| k == key)
     }
+    /// Every value given for a repeatable option, in order.
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.options
+            .iter()
+            .filter(|(k, _)| k == key)
+            .filter_map(|(_, v)| v.as_deref())
+            .collect()
+    }
 }
 
 /// Merge config file + CLI into one [`Config`] namespace.
@@ -114,6 +130,11 @@ fn dispatch(args: &[String]) -> Result<()> {
         "compile" => cmd_compile(&opts),
         "generate" => cmd_generate(&opts),
         "config" => cmd_config(&opts),
+        "serve" => cmd_serve(&opts),
+        "bench-serve" => {
+            labyrinth::serve::bench::serving_benchmark(opts.has("--smoke"));
+            Ok(())
+        }
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -133,6 +154,9 @@ fn print_usage() {
          \x20            [--no-pushdown] [--no-join-sides] [--speculate auto|always|never]\n\
          \x20            [--explain] [--io-dir DIR] [--config FILE] [--sched] [--metrics]\n\
          \x20 labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]\n\
+         \x20 labyrinth serve <program.laby> [--workers N] [--slots S] [--requests R]\n\
+         \x20            [--param name=value]... [--no-adaptive] [--metrics]\n\
+         \x20 labyrinth bench-serve [--smoke]\n\
          \x20 labyrinth generate visitcount --days N [--visits M] [--pages P] --out DIR\n\
          \x20 labyrinth config --dump [--config FILE]"
     );
@@ -205,6 +229,7 @@ fn cmd_run(opts: &Opts) -> Result<()> {
                 reuse_state: !opts.has("--no-reuse"),
                 io_dir,
                 sched: opts.has("--sched").then(labyrinth::sched::LatencyModel::flink_like),
+                ..Default::default()
             };
             let out = labyrinth::exec::run(&graph, &run_cfg)?;
             report_collected(out.collected.iter().map(|(k, v)| (k.as_str(), v.as_slice())));
@@ -322,6 +347,76 @@ fn cmd_compile(opts: &Opts) -> Result<()> {
                 "unknown dump '{other}' (ir|ssa|dataflow|dot|opt)"
             )))
         }
+    }
+    Ok(())
+}
+
+/// `labyrinth serve <program.laby>`: start a resident `JobService`, feed
+/// it `--requests` submissions of the program (with optional per-request
+/// `--param name=value` bindings as singleton named sources), and print
+/// per-request latencies plus the service report. A demonstration driver
+/// for the `serve::` API — real deployments embed `JobService` directly.
+fn cmd_serve(opts: &Opts) -> Result<()> {
+    let cfg = load_config(opts)?;
+    let path = opts
+        .positional
+        .first()
+        .ok_or_else(|| labyrinth::Error::Config("expected a <program.laby> path".into()))?;
+    let src = std::fs::read_to_string(path)?;
+    let workers = cfg.get_usize("cli.workers", cfg.get_usize("serve.workers", 2)?)?;
+    let slots = cfg.get_usize("cli.slots", cfg.get_usize("serve.slots", 2)?)?;
+    let requests = cfg.get_usize("cli.requests", cfg.get_usize("serve.requests", 8)?)?;
+    let io_dir = std::path::PathBuf::from(
+        cfg.get("cli.io-dir").or(cfg.get("exec.io_dir")).unwrap_or("."),
+    );
+
+    let mut params: Vec<(String, labyrinth::Value)> = Vec::new();
+    for kv in opts.get_all("--param") {
+        let (k, v) = kv.split_once('=').ok_or_else(|| {
+            labyrinth::Error::Config(format!("--param expects name=value, got {kv:?}"))
+        })?;
+        let value = match v.parse::<i64>() {
+            Ok(i) => labyrinth::Value::I64(i),
+            Err(_) => match v.parse::<f64>() {
+                Ok(f) => labyrinth::Value::F64(f),
+                Err(_) => labyrinth::Value::str(v),
+            },
+        };
+        params.push((k.to_string(), value));
+    }
+
+    let svc = labyrinth::serve::JobService::new(labyrinth::serve::ServeConfig {
+        slots,
+        workers,
+        io_dir,
+        opt: opt_config(opts, &cfg)?,
+        adaptive: !opts.has("--no-adaptive"),
+        ..Default::default()
+    });
+    println!("serving {path} on {slots} slot(s) x {workers} worker(s), {requests} request(s)");
+    for i in 0..requests {
+        let mut req = labyrinth::serve::JobRequest::source(src.clone());
+        for (k, v) in &params {
+            req = req.param(k.clone(), v.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let res = svc.run(req)?;
+        println!(
+            "request {i}: {:?} rev{} in {} (queued {}, compile {})",
+            res.cache,
+            res.revision,
+            labyrinth::util::fmt_duration(t0.elapsed()),
+            labyrinth::util::fmt_duration(res.queued),
+            labyrinth::util::fmt_duration(res.compile),
+        );
+        if i == requests.saturating_sub(1) {
+            report_collected(
+                res.output.collected.iter().map(|(k, v)| (k.as_str(), v.as_slice())),
+            );
+        }
+    }
+    if opts.has("--metrics") {
+        print!("{}", svc.report());
     }
     Ok(())
 }

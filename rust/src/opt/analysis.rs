@@ -96,7 +96,7 @@ impl PlanAnalysis {
 
     /// Compute the analysis with explicit cost-model parameters.
     pub fn compute_with(g: &DataflowGraph, params: &CostParams) -> PlanAnalysis {
-        PlanAnalysis::compute_inner(g, params, None)
+        PlanAnalysis::compute_inner(g, params, None, None)
     }
 
     /// Like [`compute_with`](Self::compute_with), but reuse previously
@@ -111,13 +111,28 @@ impl PlanAnalysis {
         params: &CostParams,
         trips: Vec<TripCount>,
     ) -> PlanAnalysis {
-        PlanAnalysis::compute_inner(g, params, Some(trips))
+        PlanAnalysis::compute_inner(g, params, Some(trips), None)
+    }
+
+    /// [`compute_with_trips`](Self::compute_with_trips) with an
+    /// observed-cardinality seed: nodes named in `seed` have their row
+    /// estimates pinned ([`cost::estimate_rows_seeded`]) in the single
+    /// fixpoint this analysis runs. Used by the pass manager under
+    /// `opt::optimize_with_feedback`.
+    pub fn compute_with_trips_seeded(
+        g: &DataflowGraph,
+        params: &CostParams,
+        trips: Vec<TripCount>,
+        seed: Option<&rustc_hash::FxHashMap<String, f64>>,
+    ) -> PlanAnalysis {
+        PlanAnalysis::compute_inner(g, params, Some(trips), seed)
     }
 
     fn compute_inner(
         g: &DataflowGraph,
         params: &CostParams,
         trips: Option<Vec<TripCount>>,
+        seed: Option<&rustc_hash::FxHashMap<String, f64>>,
     ) -> PlanAnalysis {
         let dt = dom::dominators(&g.cfg);
         let li = loops::find_loops(&g.cfg, &dt);
@@ -147,9 +162,20 @@ impl PlanAnalysis {
             }
         }
 
+        let rows = match seed {
+            Some(s) => cost::estimate_rows_seeded(g, params, s),
+            None => cost::estimate_rows(g, params),
+        };
         let est = match trips {
-            Some(trips) => CostEstimates { rows: cost::estimate_rows(g, params), trips },
-            None => cost::estimate(g, &li, params),
+            Some(trips) => CostEstimates { rows, trips },
+            None => CostEstimates {
+                rows,
+                trips: li
+                    .loops
+                    .iter()
+                    .map(|l| cost::estimate_trips(g, l, params.sim_trip_cap))
+                    .collect(),
+            },
         };
         PlanAnalysis { dom: dt, loops: li, consumers, live, cost: est }
     }

@@ -117,6 +117,30 @@ pub fn estimate(g: &DataflowGraph, loops: &LoopInfo, p: &CostParams) -> CostEsti
 /// (Φ cycles are iterated a few sweeps and clamped, which is plenty for
 /// an order-of-magnitude signal).
 pub fn estimate_rows(g: &DataflowGraph, p: &CostParams) -> Vec<f64> {
+    estimate_rows_inner(g, p, None)
+}
+
+/// [`estimate_rows`] with **observed-cardinality feedback**: nodes whose
+/// SSA name appears in `seed` are pinned to the observed mean rows per
+/// output bag (recorded by the engine in `RunOutput::node_rows`) instead
+/// of the model's guess, and the fixpoint propagates the pinned values
+/// through everything downstream. Singletons stay pinned to 1 row (their
+/// observed mean is 1 by construction; a noisy measurement must not
+/// perturb the lifted scalar chains). Used by `serve::` when it
+/// re-optimizes a cached plan template from its own runtime stats.
+pub fn estimate_rows_seeded(
+    g: &DataflowGraph,
+    p: &CostParams,
+    seed: &FxHashMap<String, f64>,
+) -> Vec<f64> {
+    estimate_rows_inner(g, p, Some(seed))
+}
+
+fn estimate_rows_inner(
+    g: &DataflowGraph,
+    p: &CostParams,
+    seed: Option<&FxHashMap<String, f64>>,
+) -> Vec<f64> {
     const SWEEPS: usize = 8;
     const CLAMP: f64 = 1e12;
     let mut rows = vec![0.0f64; g.nodes.len()];
@@ -126,6 +150,8 @@ pub fn estimate_rows(g: &DataflowGraph, p: &CostParams) -> Vec<f64> {
             let r = |i: usize| rows[n.inputs[i].src];
             let est = if n.singleton {
                 1.0
+            } else if let Some(&observed) = seed.and_then(|s| s.get(&n.name)) {
+                observed
             } else {
                 match &n.op {
                     Rhs::BagLit(items) => items.len() as f64,
@@ -402,6 +428,31 @@ mod tests {
         assert_eq!(s.size_hint, Some(37));
         assert!((rows[s.id] - 37.0).abs() < 1e-9);
         reg.clear_prefix("cost_test_src");
+    }
+
+    #[test]
+    fn seeded_rows_override_and_propagate() {
+        let g = raw(
+            "a = bag(1, 2, 3, 4); b = a.filter(|x| x > 1); c = b.distinct(); collect(c, \"c\");",
+        );
+        let p = CostParams::default();
+        let f = g.nodes.iter().find(|n| matches!(n.op, Rhs::Filter { .. })).unwrap();
+        let d = g.nodes.iter().find(|n| matches!(n.op, Rhs::Distinct { .. })).unwrap();
+        let mut seed = FxHashMap::default();
+        // Runtime observed the filter keeping far more than the default
+        // 25% selectivity guess.
+        seed.insert(f.name.clone(), 1000.0);
+        let rows = estimate_rows_seeded(&g, &p, &seed);
+        assert!((rows[f.id] - 1000.0).abs() < 1e-9);
+        // The pinned value propagates downstream.
+        assert!((rows[d.id] - 1000.0 * p.key_ratio).abs() < 1e-9);
+        // Unseeded nodes keep the model estimate.
+        let lit = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Rhs::BagLit(ref v) if v.len() == 4))
+            .unwrap();
+        assert!((rows[lit.id] - 4.0).abs() < 1e-9);
     }
 
     #[test]

@@ -49,6 +49,12 @@ use crate::error::{Error, Result};
 use analysis::PlanAnalysis;
 use rustc_hash::FxHashMap;
 
+/// Observed-cardinality feedback: SSA variable name → mean rows per
+/// output bag, measured by the engine (`RunOutput::node_rows`). Handed to
+/// [`optimize_with_feedback`] by the `serve::` job service when it
+/// re-optimizes a cached plan template from its own runtime statistics.
+pub type RowFeedback = FxHashMap<String, f64>;
+
 /// Speculation policy for hoisting `NamedSource` / `XlaCall` chains out
 /// of loops (config key `opt.speculate`, CLI `--speculate`). See
 /// [`analysis::is_hoistable_op`] for the contract.
@@ -224,6 +230,9 @@ pub struct ExplainReport {
     /// Speculative nodes the hoist cost gate kept in their loop (as of
     /// the last hoist run — a state count, not a sum of per-round events).
     pub hoist_gated: usize,
+    /// Nodes whose row estimate was pinned to observed runtime
+    /// cardinalities ([`RowFeedback`]); 0 on plain compiles.
+    pub feedback_nodes: usize,
     /// Per-pass statistics, in execution order.
     pub passes: Vec<PassStats>,
 }
@@ -248,6 +257,7 @@ impl ExplainReport {
             ("opt.pushdown_filters".into(), self.pushed_filters as u64),
             ("opt.join_flips".into(), self.join_flips as u64),
             ("opt.hoist_gated_skips".into(), self.hoist_gated as u64),
+            ("opt.feedback_rows_pinned".into(), self.feedback_nodes as u64),
         ]
     }
 
@@ -269,6 +279,12 @@ impl ExplainReport {
             self.pushed_filters,
             self.join_flips,
         ));
+        if self.feedback_nodes > 0 {
+            s.push_str(&format!(
+                "  adaptive: {} node row estimate(s) pinned to observed runtime cardinalities\n",
+                self.feedback_nodes
+            ));
+        }
         for p in &self.passes {
             s.push_str(&format!(
                 "  round {} {:<6} changed {:>3}  nodes {}\n",
@@ -288,6 +304,10 @@ impl ExplainReport {
 pub struct PassManager {
     passes: Vec<Box<dyn Pass>>,
     max_rounds: usize,
+    /// Observed-cardinality seed: when set, per-node row estimates for
+    /// named nodes are pinned to these values before every pass (see
+    /// [`cost::estimate_rows_seeded`]).
+    row_seed: Option<RowFeedback>,
 }
 
 impl PassManager {
@@ -317,7 +337,14 @@ impl PassManager {
         if cfg.dce {
             passes.push(Box::new(dce::DcePass));
         }
-        PassManager { passes, max_rounds: cfg.max_rounds }
+        PassManager { passes, max_rounds: cfg.max_rounds, row_seed: None }
+    }
+
+    /// Pin row estimates of named nodes to observed runtime cardinalities
+    /// for every analysis this manager computes.
+    pub fn with_row_feedback(mut self, feedback: RowFeedback) -> PassManager {
+        self.row_seed = Some(feedback);
+        self
     }
 
     /// Run the pipeline on a graph.
@@ -336,13 +363,22 @@ impl PassManager {
             let li = crate::cfg::loops::find_loops(&g.cfg, &dt);
             li.loops.iter().map(|l| cost::estimate_trips(g, l, params.sim_trip_cap)).collect()
         };
+        if let Some(seed) = &self.row_seed {
+            report.feedback_nodes =
+                g.nodes.iter().filter(|n| !n.singleton && seed.contains_key(&n.name)).count();
+        }
         for round in 1..=self.max_rounds {
             if self.passes.is_empty() {
                 break;
             }
             let mut round_changed = 0usize;
             for pass in &self.passes {
-                let a = PlanAnalysis::compute_with_trips(g, &params, trips.clone());
+                let a = PlanAnalysis::compute_with_trips_seeded(
+                    g,
+                    &params,
+                    trips.clone(),
+                    self.row_seed.as_ref(),
+                );
                 let out = pass.run(g, &a)?;
                 verify_integrity(g).map_err(|e| {
                     Error::Dataflow(format!("opt pass '{}' broke the graph: {e}", pass.name()))
@@ -386,6 +422,19 @@ impl PassManager {
 /// inside [`crate::compile`].
 pub fn optimize(g: &mut DataflowGraph, cfg: &OptConfig) -> Result<ExplainReport> {
     PassManager::from_config(cfg).run(g)
+}
+
+/// Optimize with observed-cardinality feedback: row estimates of nodes
+/// named in `feedback` are pinned to the measured values, so cost-driven
+/// decisions (join sides, speculative hoists, pushdown ordering) reflect
+/// what the engine actually saw instead of the static guesses. Entry
+/// point for the `serve::` adaptive template re-optimization.
+pub fn optimize_with_feedback(
+    g: &mut DataflowGraph,
+    cfg: &OptConfig,
+    feedback: &RowFeedback,
+) -> Result<ExplainReport> {
+    PassManager::from_config(cfg).with_row_feedback(feedback.clone()).run(g)
 }
 
 /// Recompute `src_block` / `conditional` on every edge from the current
@@ -547,6 +596,31 @@ mod tests {
         assert!(rep.nodes_after < rep.nodes_before, "{}", rep.render());
         assert!(!g.opt_summary.is_empty());
         assert!(rep.render().contains("optimizer:"));
+        verify_integrity(&g).unwrap();
+    }
+
+    #[test]
+    fn feedback_pins_rows_and_reports() {
+        // Build-side choice flips when feedback says the left input is
+        // actually the huge one: join(left=small-estimate, right) with
+        // observed left ≫ right should build on the right.
+        let src = "a = bag(1, 2).map(|v| pair(v, v)); b = bag(1, 2, 3).map(|v| pair(v, v)); j = a.join(b); collect(j, \"j\");";
+        let p = parse_and_lower(src).unwrap();
+        let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        let left_map = {
+            let join =
+                g.nodes.iter().find(|n| matches!(n.op, crate::frontend::Rhs::Join { .. })).unwrap();
+            g.nodes[join.inputs[0].src].name.clone()
+        };
+        let mut fb = RowFeedback::default();
+        fb.insert(left_map, 1_000_000.0);
+        let cfg = OptConfig { join_sides: true, ..OptConfig::none() };
+        let rep = optimize_with_feedback(&mut g, &cfg, &fb).unwrap();
+        assert_eq!(rep.feedback_nodes, 1, "{}", rep.render());
+        assert!(rep.render().contains("adaptive:"), "{}", rep.render());
+        let join =
+            g.nodes.iter().find(|n| matches!(n.op, crate::frontend::Rhs::Join { .. })).unwrap();
+        assert_eq!(join.build_side, Some(1), "feedback flips the build to the smaller side");
         verify_integrity(&g).unwrap();
     }
 

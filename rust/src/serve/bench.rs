@@ -1,0 +1,149 @@
+//! The serving benchmark behind `labyrinth bench-serve` and
+//! `benches/fig9_serving.rs` (Fig. 9 — ours; the paper has no serving
+//! figure): per-job submission latency under three control-plane
+//! regimes, and throughput scaling with job slots.
+//!
+//! * **cold** — the historical path: every job re-parses + re-compiles +
+//!   re-optimizes the program AND spawns a fresh worker pool.
+//! * **cached** — the plan template is compiled once and shared, but
+//!   each job still spawns (and joins) its own worker threads.
+//! * **warm** — the full `serve::JobService` path: cached template +
+//!   persistent worker pool; a job is a pool epoch.
+//!
+//! The interesting number is the cold/warm ratio: how much per-job
+//! control-plane cost the template cache and the pool remove together.
+
+use super::{JobRequest, JobService, ServeConfig};
+use crate::bench_harness::{Bencher, Table};
+use crate::exec::{driver, ExecConfig, ExecPlan};
+use crate::value::Value;
+use crate::workload::registry;
+use std::sync::Arc;
+use std::time::Instant;
+
+const WORKERS: usize = 2;
+
+/// The benchmark program: a counter loop around a join against an
+/// invariant lookup side — enough frontend + optimizer work to make the
+/// compile measurable, over data small enough that execution does not
+/// drown the control-plane difference.
+fn bench_source() -> &'static str {
+    r#"
+    lookup = source("fig9_attrs");
+    d = 1;
+    s = bag();
+    while (d <= 3) {
+        v = source("fig9_visits").map(|x| pair(x % 32, x));
+        j = v.join(lookup);
+        t = j.map(|q| fst(snd(q)) + snd(snd(q)));
+        f = t.filter(|x| x >= 0);
+        s = f;
+        d = d + 1;
+    }
+    collect(s, "out");
+    "#
+}
+
+/// Register the benchmark datasets in the global registry.
+pub fn register_data() {
+    let reg = registry::global();
+    reg.put("fig9_attrs", (0..32i64).map(|k| Value::pair(Value::I64(k), Value::I64(k * 10))).collect());
+    reg.put("fig9_visits", (0..128i64).map(Value::I64).collect());
+}
+
+/// Run the full serving benchmark; `smoke` shrinks every count to a CI-
+/// friendly size (it still exercises compile, cache, pool, queue, and
+/// concurrent submission paths end to end).
+pub fn serving_benchmark(smoke: bool) {
+    register_data();
+    let src = bench_source();
+    let (warmup, reps) = if smoke { (1, 3) } else { (3, 25) };
+    let bench = Bencher::new(warmup, reps);
+
+    // --- per-job submission latency -----------------------------------
+    let mut table = Table::new(
+        "Fig 9: per-job latency — control-plane regimes (1 slot)",
+        "regime",
+        vec!["median".into()],
+    );
+
+    let cold = bench.run("cold: compile + spawn per job", || {
+        let g = crate::compile_source(src).unwrap();
+        let plan = Arc::new(ExecPlan::new(Arc::new(g), WORKERS));
+        driver::run_plan(plan, &ExecConfig { workers: WORKERS, ..Default::default() })
+            .unwrap();
+    });
+    table.push_row("cold compile+spawn", vec![Some(cold.median())]);
+
+    let shared_graph = crate::compile_source(src).unwrap();
+    let shared_plan = Arc::new(ExecPlan::new(Arc::new(shared_graph), WORKERS));
+    let cached = bench.run("cached template, fresh pool per job", || {
+        driver::run_plan(
+            shared_plan.clone(),
+            &ExecConfig { workers: WORKERS, ..Default::default() },
+        )
+        .unwrap();
+    });
+    table.push_row("cached template", vec![Some(cached.median())]);
+
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: WORKERS,
+        ..Default::default()
+    });
+    let warm = bench.run("warm: cached template + warm pool", || {
+        svc.run(JobRequest::source(src)).unwrap();
+    });
+    table.push_row("cached + warm pool", vec![Some(warm.median())]);
+    table.print();
+
+    let ratio = cold.median().as_secs_f64() / warm.median().as_secs_f64().max(1e-9);
+    println!(
+        "cold / warm submission-latency ratio: {ratio:.1}x (acceptance target: >= 10x)\n"
+    );
+    println!("{}", svc.report());
+    drop(svc);
+
+    // --- throughput vs job slots --------------------------------------
+    let jobs = if smoke { 8 } else { 200 };
+    let slot_sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let mut tput = Table::new(
+        format!("Fig 9b: throughput — {jobs} jobs, N concurrent clients"),
+        "slots",
+        vec!["per-job".into()],
+    );
+    for &slots in slot_sweep {
+        let svc = Arc::new(JobService::new(ServeConfig {
+            slots,
+            workers: WORKERS,
+            ..Default::default()
+        }));
+        // Prime the template cache so throughput measures serving, not
+        // the first compile.
+        svc.run(JobRequest::source(src)).unwrap();
+        let clients = slots * 2;
+        let per_client = jobs / clients.max(1);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..clients {
+                let svc = svc.clone();
+                s.spawn(move || {
+                    for _ in 0..per_client {
+                        svc.run(JobRequest::source(src)).unwrap();
+                    }
+                });
+            }
+        });
+        let elapsed = t0.elapsed();
+        let done = (per_client * clients) as f64;
+        let rate = done / elapsed.as_secs_f64().max(1e-9);
+        println!(
+            "  slots={slots}: {done:.0} jobs in {} -> {rate:.0} jobs/s",
+            crate::util::fmt_duration(elapsed)
+        );
+        tput.push_row(slots.to_string(), vec![Some(elapsed.div_f64(done.max(1.0)))]);
+    }
+    tput.print();
+
+    registry::global().clear_prefix("fig9_");
+}

@@ -1,0 +1,619 @@
+//! `serve::` — a resident **job service** for high-throughput repeated
+//! jobs.
+//!
+//! Labyrinth's core result is that per-job control-plane work dominates
+//! iterative analytics — yet the engine itself still paid a per-*run*
+//! control plane: every `exec::run_plan` re-spawned worker threads, and
+//! every caller re-lexed / re-compiled / re-optimized the program. Under
+//! a serving workload (the same parameterized programs submitted over
+//! and over, "Execution Templates" style) that cost is pure overhead.
+//! This module removes it:
+//!
+//! * **Plan-template cache** ([`template`]): compile → SSA → dataflow →
+//!   `opt::optimize` → `ExecPlan` exactly once per (program, optimizer
+//!   config, executor config); later requests instantiate the cached
+//!   `Arc<ExecPlan>`. Completed runs feed observed cardinalities back,
+//!   and drifted templates are **re-optimized in place** (a cache
+//!   *revision*, not an invalidation).
+//! * **Persistent worker pools** (`exec::pool`): one [`WorkerPool`] per
+//!   job slot, threads resident across jobs; a job is a
+//!   message-delimited epoch, so per-job state isolation is structural
+//!   (nothing — including §7 `reuse_state` hash tables — survives an
+//!   epoch boundary).
+//! * **Admission queue**: `slots` concurrent lanes pull from a bounded
+//!   FIFO; overflow submissions are rejected immediately; jobs carry
+//!   optional deadlines (enforced while queued AND while running) and
+//!   can be canceled before they start.
+//! * **Per-request parameter binding**: requests attach named datasets
+//!   and scalar parameters through a [`Registry::overlay`] — the cached
+//!   template is untouched; only the data the sources resolve changes.
+//!
+//! ```no_run
+//! use labyrinth::serve::{JobRequest, JobService, ServeConfig};
+//! use labyrinth::value::Value;
+//!
+//! let svc = JobService::new(ServeConfig::default());
+//! let out = svc
+//!     .run(
+//!         JobRequest::source("v = source(\"visits\"); c = v.count(); collect(v, \"v\");")
+//!             .bind("visits", (0..100).map(Value::I64).collect()),
+//!     )
+//!     .unwrap();
+//! assert_eq!(out.output.collected("v").len(), 100);
+//! ```
+
+pub mod bench;
+pub mod template;
+
+use crate::error::{Error, Result};
+use crate::exec::{driver, ExecConfig, ExecMode, RunOutput, WorkerPool};
+use crate::frontend::{self, Program};
+use crate::metrics::Metrics;
+use crate::opt::OptConfig;
+use crate::value::Value;
+use crate::workload::registry::{self, Registry};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+pub use template::{CacheOutcome, PlanTemplate, TemplateCache, TemplateKey};
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Concurrent job slots (one persistent worker pool each).
+    pub slots: usize,
+    /// Simulated workers per slot (plans are instantiated at this width).
+    pub workers: usize,
+    /// Maximum queued (not-yet-running) jobs before submissions are
+    /// rejected.
+    pub queue_cap: usize,
+    /// Element-batch size on engine channels.
+    pub batch: usize,
+    /// Pipelined vs barrier execution.
+    pub mode: ExecMode,
+    /// §7 build-side state reuse (within a job; never across jobs).
+    pub reuse_state: bool,
+    /// Base directory for file I/O operators.
+    pub io_dir: std::path::PathBuf,
+    /// Default optimizer configuration (requests may override).
+    pub opt: OptConfig,
+    /// Re-optimize cached templates from observed runtime statistics.
+    pub adaptive: bool,
+    /// Plan-template cache capacity.
+    pub max_templates: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            slots: 2,
+            workers: 2,
+            queue_cap: 256,
+            batch: 256,
+            mode: ExecMode::Pipelined,
+            reuse_state: true,
+            io_dir: std::path::PathBuf::from("."),
+            opt: OptConfig::default(),
+            adaptive: true,
+            max_templates: 64,
+        }
+    }
+}
+
+/// What program a request runs.
+#[derive(Clone)]
+pub enum JobSpec {
+    /// LabyLang source text (cache identity: text hash; parsed only on a
+    /// cache miss).
+    Source(String),
+    /// A pre-lowered IR program (cache identity:
+    /// [`frontend::fingerprint`]).
+    Program(Arc<Program>),
+}
+
+/// One job submission.
+#[derive(Clone)]
+pub struct JobRequest {
+    /// The program.
+    pub spec: JobSpec,
+    /// Named datasets bound for this request only (registry overlay).
+    pub bindings: Vec<(String, Arc<Vec<Value>>)>,
+    /// Scalar parameters, bound as singleton named sources — read them
+    /// with `source("name")` (+ `.reduce(..)` to scalarize).
+    pub params: Vec<(String, Value)>,
+    /// Optimizer override (`None` = the service default; a different
+    /// config is a different cache key, never a shared template).
+    pub opt: Option<OptConfig>,
+    /// Deadline relative to submission: expired-in-queue jobs fail
+    /// without running; running jobs are aborted by the driver.
+    pub deadline: Option<Duration>,
+}
+
+impl JobRequest {
+    /// Request running LabyLang source.
+    pub fn source(src: impl Into<String>) -> JobRequest {
+        JobRequest {
+            spec: JobSpec::Source(src.into()),
+            bindings: Vec::new(),
+            params: Vec::new(),
+            opt: None,
+            deadline: None,
+        }
+    }
+
+    /// Request running a pre-lowered program.
+    pub fn program(p: Program) -> JobRequest {
+        JobRequest {
+            spec: JobSpec::Program(Arc::new(p)),
+            bindings: Vec::new(),
+            params: Vec::new(),
+            opt: None,
+            deadline: None,
+        }
+    }
+
+    /// Bind a named dataset for this request.
+    pub fn bind(mut self, name: impl Into<String>, items: Vec<Value>) -> JobRequest {
+        self.bindings.push((name.into(), Arc::new(items)));
+        self
+    }
+
+    /// Bind an already-shared dataset without copying.
+    pub fn bind_shared(mut self, name: impl Into<String>, items: Arc<Vec<Value>>) -> JobRequest {
+        self.bindings.push((name.into(), items));
+        self
+    }
+
+    /// Bind a scalar parameter (a singleton named source).
+    pub fn param(mut self, name: impl Into<String>, v: Value) -> JobRequest {
+        self.params.push((name.into(), v));
+        self
+    }
+
+    /// Override the optimizer configuration.
+    pub fn opt(mut self, cfg: OptConfig) -> JobRequest {
+        self.opt = Some(cfg);
+        self
+    }
+
+    /// Set a deadline relative to submission.
+    pub fn deadline(mut self, d: Duration) -> JobRequest {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// A completed job.
+pub struct JobResult {
+    /// The engine's run output (collected bags, metrics, timings).
+    pub output: RunOutput,
+    /// What the template cache did for this request.
+    pub cache: CacheOutcome,
+    /// Adaptive revision of the template that ran.
+    pub revision: u32,
+    /// Time spent waiting in the admission queue.
+    pub queued: Duration,
+    /// Compile time paid by THIS request (zero on cache hits).
+    pub compile: Duration,
+}
+
+/// Handle to a submitted job.
+pub struct JobTicket {
+    id: u64,
+    rx: Receiver<Result<JobResult>>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl JobTicket {
+    /// The job's service-assigned id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request cancellation. Takes effect only while the job is still
+    /// queued; a running epoch completes (use deadlines to bound those).
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the job completes (or fails / is canceled).
+    pub fn wait(self) -> Result<JobResult> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::exec("job service dropped the job (shut down?)"))?
+    }
+
+    /// [`JobTicket::wait`] with a timeout; `Ok(None)` on timeout (the
+    /// ticket is consumed — pair with a deadline for hard bounds).
+    pub fn wait_timeout(self, d: Duration) -> Result<Option<JobResult>> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => r.map(Some),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::exec("job service dropped the job (shut down?)"))
+            }
+        }
+    }
+}
+
+struct Queued {
+    id: u64,
+    req: JobRequest,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    cancel: Arc<AtomicBool>,
+    reply: Sender<Result<JobResult>>,
+}
+
+struct QueueState {
+    queue: VecDeque<Queued>,
+    shutdown: bool,
+}
+
+struct Inner {
+    cfg: ServeConfig,
+    cache: TemplateCache,
+    metrics: Arc<Metrics>,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    next_id: AtomicU64,
+    busy: AtomicUsize,
+    base_registry: Arc<Registry>,
+}
+
+/// The resident job service: template cache + persistent worker pools +
+/// admission queue. Cheap to share (`&self` submission API); dropping it
+/// drains queued jobs and joins every lane.
+pub struct JobService {
+    inner: Arc<Inner>,
+    lanes: Vec<JoinHandle<()>>,
+}
+
+impl JobService {
+    /// Start the service: spawns `cfg.slots` executor lanes, each owning
+    /// a persistent [`WorkerPool`] of `cfg.workers` threads.
+    pub fn new(cfg: ServeConfig) -> JobService {
+        JobService::with_registry(cfg, registry::global())
+    }
+
+    /// [`JobService::new`] over an explicit base registry (request
+    /// overlays stack on top of it).
+    pub fn with_registry(cfg: ServeConfig, base: Arc<Registry>) -> JobService {
+        let slots = cfg.slots.max(1);
+        let inner = Arc::new(Inner {
+            cache: TemplateCache::new(cfg.max_templates),
+            metrics: Arc::new(Metrics::new()),
+            state: Mutex::new(QueueState { queue: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+            next_id: AtomicU64::new(1),
+            busy: AtomicUsize::new(0),
+            base_registry: base,
+            cfg,
+        });
+        let lanes = (0..slots)
+            .map(|lane| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("laby-serve-{lane}"))
+                    .spawn(move || lane_main(inner))
+                    .expect("spawn serve lane")
+            })
+            .collect();
+        JobService { inner, lanes }
+    }
+
+    /// Enqueue a job; returns immediately with a ticket. Fails fast when
+    /// the admission queue is full or the service is shut down.
+    pub fn submit(&self, req: JobRequest) -> Result<JobTicket> {
+        let inner = &self.inner;
+        let mut st = inner.state.lock().unwrap();
+        if st.shutdown {
+            return Err(Error::exec("job service is shut down"));
+        }
+        if st.queue.len() >= inner.cfg.queue_cap {
+            inner.metrics.add("serve.jobs_rejected", 1);
+            return Err(Error::exec(format!(
+                "admission queue full ({} jobs queued)",
+                st.queue.len()
+            )));
+        }
+        let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let cancel = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = channel();
+        let deadline = req.deadline.map(|d| Instant::now() + d);
+        st.queue.push_back(Queued {
+            id,
+            req,
+            enqueued: Instant::now(),
+            deadline,
+            cancel: cancel.clone(),
+            reply: tx,
+        });
+        let depth = st.queue.len() as u64;
+        drop(st);
+        inner.metrics.add("serve.jobs_submitted", 1);
+        inner.metrics.counter("serve.queue_depth_max").fetch_max(depth, Ordering::Relaxed);
+        inner.cv.notify_one();
+        Ok(JobTicket { id, rx, cancel })
+    }
+
+    /// Submit and wait — the synchronous convenience path.
+    pub fn run(&self, req: JobRequest) -> Result<JobResult> {
+        self.submit(req)?.wait()
+    }
+
+    /// Jobs currently executing (≤ `slots`).
+    pub fn busy_slots(&self) -> usize {
+        self.inner.busy.load(Ordering::SeqCst)
+    }
+
+    /// Jobs waiting in the admission queue.
+    pub fn queue_depth(&self) -> usize {
+        self.inner.state.lock().unwrap().queue.len()
+    }
+
+    /// The service's metrics sink (`serve.*` counters; cache counters are
+    /// refreshed on export).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.inner.cache.export(&self.inner.metrics);
+        self.inner.metrics.clone()
+    }
+
+    /// The template cache (hit/miss/revision counters, capacity).
+    pub fn cache(&self) -> &TemplateCache {
+        &self.inner.cache
+    }
+
+    /// Render a service status report (cache, queue, pool counters).
+    pub fn report(&self) -> String {
+        let m = self.metrics();
+        format!(
+            "== serve status ==\nslots: {} x {} workers, busy {}, queued {}\n{}",
+            self.inner.cfg.slots.max(1),
+            self.inner.cfg.workers,
+            self.busy_slots(),
+            self.queue_depth(),
+            m.report()
+        )
+    }
+
+    /// Stop accepting submissions, drain queued jobs, and join the lanes
+    /// (their worker pools shut down with them).
+    pub fn shutdown(mut self) {
+        self.begin_shutdown();
+        for h in self.lanes.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn begin_shutdown(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.shutdown = true;
+        drop(st);
+        self.inner.cv.notify_all();
+    }
+}
+
+impl Drop for JobService {
+    fn drop(&mut self) {
+        self.begin_shutdown();
+        for h in self.lanes.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One executor lane: owns a persistent worker pool, pulls jobs FIFO.
+fn lane_main(inner: Arc<Inner>) {
+    let pool = WorkerPool::new(inner.cfg.workers);
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.queue.pop_front() {
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = inner.cv.wait(st).unwrap();
+            }
+        };
+        inner.busy.fetch_add(1, Ordering::SeqCst);
+        execute_one(&inner, &pool, job);
+        inner.busy.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
+    let queued_for = job.enqueued.elapsed();
+    inner.metrics.record_time("serve.queue_wait", queued_for);
+    if job.cancel.load(Ordering::SeqCst) {
+        inner.metrics.add("serve.jobs_canceled", 1);
+        let _ = job.reply.send(Err(Error::exec(format!("job {} canceled", job.id))));
+        return;
+    }
+    if let Some(d) = job.deadline {
+        if Instant::now() >= d {
+            inner.metrics.add("serve.jobs_deadline_expired", 1);
+            let _ = job
+                .reply
+                .send(Err(Error::exec(format!("job {} deadline expired in queue", job.id))));
+            return;
+        }
+    }
+
+    // Per-request registry overlay: datasets + scalar params stack over
+    // the service base without mutating it.
+    let overlay = Arc::new(Registry::overlay(inner.base_registry.clone()));
+    for (name, items) in &job.req.bindings {
+        overlay.put_shared(name.clone(), items.clone());
+    }
+    for (name, v) in &job.req.params {
+        overlay.put(name.clone(), vec![v.clone()]);
+    }
+
+    // Resolve the plan template (compile at most once per key).
+    let opt = job.req.opt.unwrap_or(inner.cfg.opt);
+    let key = TemplateKey {
+        program: match &job.req.spec {
+            JobSpec::Source(src) => template::source_fingerprint(src),
+            JobSpec::Program(p) => frontend::fingerprint(p),
+        },
+        opt: template::opt_fingerprint(&opt),
+        exec: template::exec_fingerprint(
+            inner.cfg.workers,
+            inner.cfg.mode,
+            inner.cfg.batch,
+            inner.cfg.reuse_state,
+        ),
+    };
+    let source_text = match &job.req.spec {
+        JobSpec::Source(src) => Some(src.as_str()),
+        JobSpec::Program(_) => None,
+    };
+    let spec = job.req.spec.clone();
+    let resolved = inner.cache.get_or_compile(
+        key,
+        source_text,
+        &opt,
+        inner.cfg.workers.max(1),
+        &overlay,
+        inner.cfg.adaptive,
+        move || match spec {
+            JobSpec::Source(src) => frontend::parse_and_lower(&src),
+            JobSpec::Program(p) => Ok((*p).clone()),
+        },
+    );
+    let (tpl, outcome) = match resolved {
+        Ok(x) => x,
+        Err(e) => {
+            inner.metrics.add("serve.jobs_failed", 1);
+            let _ = job.reply.send(Err(e));
+            return;
+        }
+    };
+    let compile = match outcome {
+        CacheOutcome::Hit => Duration::ZERO,
+        _ => tpl.compile_time,
+    };
+
+    // Run the cached plan as one epoch on this lane's warm pool.
+    let run_cfg = ExecConfig {
+        workers: inner.cfg.workers.max(1),
+        mode: inner.cfg.mode,
+        batch: inner.cfg.batch,
+        reuse_state: inner.cfg.reuse_state,
+        io_dir: inner.cfg.io_dir.clone(),
+        sched: None,
+        registry: overlay,
+        deadline: job.deadline,
+    };
+    let epochs_before = pool.epochs();
+    let result = driver::run_plan_on_pool(tpl.plan.clone(), &run_cfg, pool);
+    inner.metrics.add("serve.pool_epochs", pool.epochs() - epochs_before);
+    match result {
+        Ok(output) => {
+            // Stats only feed adaptive revisions; skip the per-node map
+            // build entirely when the service never revises.
+            if inner.cfg.adaptive {
+                tpl.record_observed(&output);
+            }
+            inner.metrics.add("serve.jobs_completed", 1);
+            inner.metrics.record_time("serve.job_time", output.elapsed);
+            let _ = job.reply.send(Ok(JobResult {
+                output,
+                cache: outcome,
+                revision: tpl.revision,
+                queued: queued_for,
+                compile,
+            }));
+        }
+        Err(e) => {
+            inner.metrics.add("serve.jobs_failed", 1);
+            let _ = job.reply.send(Err(e));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_runs_a_source_job_with_bindings_and_params() {
+        let svc = JobService::new(ServeConfig {
+            slots: 1,
+            workers: 2,
+            ..Default::default()
+        });
+        let res = svc
+            .run(
+                JobRequest::source(
+                    "v = source(\"svc_data\"); t = source(\"svc_thresh\"); \
+                     k = t.reduce(|a, b| a + b); f = v.map(|x| x * 2); collect(f, \"f\");",
+                )
+                .bind("svc_data", (1..=4).map(Value::I64).collect())
+                .param("svc_thresh", Value::I64(3)),
+            )
+            .unwrap();
+        assert_eq!(res.cache, CacheOutcome::Miss);
+        let mut got = res.output.collected("f").to_vec();
+        got.sort();
+        assert_eq!(
+            got,
+            vec![Value::I64(2), Value::I64(4), Value::I64(6), Value::I64(8)]
+        );
+        // Nothing leaked into the global registry.
+        assert!(registry::global().get("svc_data").is_none());
+        assert!(registry::global().get("svc_thresh").is_none());
+    }
+
+    #[test]
+    fn repeated_submissions_hit_the_template_cache() {
+        let svc = JobService::new(ServeConfig { slots: 1, adaptive: false, ..Default::default() });
+        let req = || JobRequest::source("a = bag(1, 2, 3); collect(a, \"a\");");
+        let first = svc.run(req()).unwrap();
+        assert_eq!(first.cache, CacheOutcome::Miss);
+        assert!(first.compile > Duration::ZERO);
+        for _ in 0..3 {
+            let r = svc.run(req()).unwrap();
+            assert_eq!(r.cache, CacheOutcome::Hit);
+            assert_eq!(r.compile, Duration::ZERO);
+            assert_eq!(r.output.collected("a").len(), 3);
+        }
+        assert_eq!(svc.cache().hits(), 3);
+        assert_eq!(svc.cache().misses(), 1);
+    }
+
+    #[test]
+    fn queue_cap_rejects_and_metrics_count_it() {
+        let svc = JobService::new(ServeConfig { slots: 1, queue_cap: 0, ..Default::default() });
+        let err = svc.submit(JobRequest::source("collect(bag(1), \"x\");")).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err}");
+        assert_eq!(svc.metrics().get("serve.jobs_rejected"), 1);
+    }
+
+    #[test]
+    fn zero_deadline_expires_in_queue() {
+        let svc = JobService::new(ServeConfig { slots: 1, ..Default::default() });
+        let err = svc
+            .run(
+                JobRequest::source("collect(bag(1), \"x\");").deadline(Duration::ZERO),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("deadline"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_rejects_new_submissions() {
+        let svc = JobService::new(ServeConfig { slots: 1, ..Default::default() });
+        let ok = svc.run(JobRequest::source("collect(bag(1), \"x\");"));
+        assert!(ok.is_ok());
+        svc.shutdown();
+    }
+}

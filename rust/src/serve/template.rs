@@ -1,0 +1,498 @@
+//! The plan-template cache: compile once, instantiate per request.
+//!
+//! A **template** is a fully compiled execution plan — lex/parse (source
+//! submissions), CFG, SSA, dataflow build, `opt::optimize`, and
+//! `ExecPlan` physical instantiation — cached under a [`TemplateKey`]:
+//! the program's identity hash plus fingerprints of the optimizer and
+//! executor configurations (differing opt flags MUST NOT share a
+//! template; a plan is only valid for the worker count / mode it was
+//! instantiated for). Requests then run the shared `Arc<ExecPlan>`
+//! directly, binding their datasets through a registry overlay — the
+//! whole per-job control-plane cost collapses to a hash lookup.
+//!
+//! **Adaptive re-optimization**: each completed run records per-node
+//! observed output cardinalities (`RunOutput::node_rows`). When the
+//! observations drift from what the current plan was optimized with, the
+//! next instantiation recompiles the template with the measured rows
+//! pinned into the cost model (`opt::optimize_with_feedback`). This is a
+//! cache **revision** — the entry stays resident, its revision counter
+//! increments — not an invalidation.
+
+use crate::error::Result;
+use crate::exec::{ExecMode, ExecPlan, RunOutput};
+use crate::frontend::Program;
+use crate::metrics::Metrics;
+use crate::opt::{OptConfig, RowFeedback, Speculate};
+use crate::workload::registry::Registry;
+use rustc_hash::FxHashMap;
+use std::collections::VecDeque;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Cap on adaptive revisions per template (feedback is deterministic per
+/// workload, so this is a safety bound, not an expected ceiling).
+const MAX_REVISIONS: u32 = 8;
+
+/// Relative drift between an observed mean and the value the current
+/// revision was optimized with before a re-optimization is worth it.
+const DRIFT_THRESHOLD: f64 = 0.5;
+
+/// The cache key: program identity × optimizer config × executor config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TemplateKey {
+    /// Program identity: source-text hash or `frontend::fingerprint`.
+    pub program: u64,
+    /// Optimizer configuration fingerprint.
+    pub opt: u64,
+    /// Executor configuration fingerprint (workers, mode, batch, reuse).
+    pub exec: u64,
+}
+
+/// Fingerprint an optimizer configuration for the cache key.
+pub fn opt_fingerprint(cfg: &OptConfig) -> u64 {
+    let mut h = rustc_hash::FxHasher::default();
+    cfg.hoist.hash(&mut h);
+    cfg.fuse.hash(&mut h);
+    cfg.dce.hash(&mut h);
+    cfg.pushdown.hash(&mut h);
+    cfg.join_sides.hash(&mut h);
+    match cfg.speculate {
+        Speculate::Auto => 0u8.hash(&mut h),
+        Speculate::Always => 1u8.hash(&mut h),
+        Speculate::Never => 2u8.hash(&mut h),
+    }
+    cfg.speculate_threshold.to_bits().hash(&mut h);
+    cfg.default_trips.hash(&mut h);
+    cfg.max_rounds.hash(&mut h);
+    h.finish()
+}
+
+/// Fingerprint the executor-relevant configuration for the cache key.
+pub fn exec_fingerprint(workers: usize, mode: ExecMode, batch: usize, reuse: bool) -> u64 {
+    let mut h = rustc_hash::FxHasher::default();
+    workers.hash(&mut h);
+    matches!(mode, ExecMode::Barrier).hash(&mut h);
+    batch.hash(&mut h);
+    reuse.hash(&mut h);
+    h.finish()
+}
+
+/// Hash LabyLang source text for the cache key.
+pub fn source_fingerprint(src: &str) -> u64 {
+    let mut h = rustc_hash::FxHasher::default();
+    src.hash(&mut h);
+    h.finish()
+}
+
+#[derive(Default)]
+struct ObservedStats {
+    /// name → mean rows per logical output bag, from the latest run.
+    latest: Option<RowFeedback>,
+    /// The feedback the CURRENT revision was optimized from.
+    based_on: Option<RowFeedback>,
+}
+
+/// One cached, instantiated plan.
+pub struct PlanTemplate {
+    /// The cache key this template lives under.
+    pub key: TemplateKey,
+    /// The source text this template was lowered from (`None` for
+    /// pre-lowered `Program` submissions). Checked on every cache hit so
+    /// a 64-bit key collision between different source texts can never
+    /// serve one tenant another tenant's compiled plan — the collision
+    /// degrades to a recompile, not to wrong results. (Program
+    /// submissions hash opaque closure identities, which are not
+    /// attacker-choosable; the residual 2⁻⁶⁴ accidental risk is
+    /// documented.)
+    pub source: Option<Arc<str>>,
+    /// The lowered program (kept for adaptive recompiles).
+    pub program: Arc<Program>,
+    /// Optimizer configuration the template was compiled with.
+    pub opt: OptConfig,
+    /// The shared physical plan requests execute.
+    pub plan: Arc<ExecPlan>,
+    /// Adaptive revision counter (0 = as first compiled).
+    pub revision: u32,
+    /// Wall time of the compile that produced this revision.
+    pub compile_time: Duration,
+    observed: Mutex<ObservedStats>,
+}
+
+impl PlanTemplate {
+    /// Record observed per-node output cardinalities from a completed run
+    /// (mean rows per **logical** bag: totals are summed across
+    /// instances, bag counts are per instance).
+    pub fn record_observed(&self, out: &RunOutput) {
+        let g = &self.plan.graph;
+        let mut m: RowFeedback = FxHashMap::default();
+        for n in &g.nodes {
+            let Some(s) = out.node_rows.get(n.id) else { continue };
+            if s.bags == 0 || n.singleton {
+                continue;
+            }
+            let insts = self.plan.num_insts[n.id] as f64;
+            m.insert(n.name.clone(), (s.rows as f64) * insts / (s.bags as f64));
+        }
+        if !m.is_empty() {
+            self.observed.lock().unwrap().latest = Some(m);
+        }
+    }
+
+    /// Mean observed rows recorded for a node name (tests/debugging).
+    pub fn observed_rows(&self, name: &str) -> Option<f64> {
+        self.observed.lock().unwrap().latest.as_ref().and_then(|m| m.get(name).copied())
+    }
+}
+
+fn drifted(latest: &RowFeedback, based_on: Option<&RowFeedback>) -> bool {
+    let Some(base) = based_on else { return true };
+    for (k, &v) in latest {
+        let Some(&b) = base.get(k) else { return true };
+        if (v - b).abs() / b.abs().max(1.0) > DRIFT_THRESHOLD {
+            return true;
+        }
+    }
+    false
+}
+
+/// What the cache did for a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Compiled fresh (first request under this key, or evicted).
+    Miss,
+    /// Served the cached template unchanged.
+    Hit,
+    /// Served the cached entry re-optimized from observed statistics
+    /// (counts as a hit *and* a revision).
+    Revised,
+}
+
+struct CacheMap {
+    map: FxHashMap<TemplateKey, Arc<PlanTemplate>>,
+    /// Insertion order for FIFO eviction.
+    order: VecDeque<TemplateKey>,
+}
+
+/// The template cache: bounded, thread-safe, revision-aware.
+pub struct TemplateCache {
+    inner: Mutex<CacheMap>,
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    revisions: AtomicU64,
+}
+
+impl TemplateCache {
+    /// Create a cache holding at most `cap` templates (min 1).
+    pub fn new(cap: usize) -> TemplateCache {
+        TemplateCache {
+            inner: Mutex::new(CacheMap { map: FxHashMap::default(), order: VecDeque::new() }),
+            cap: cap.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            revisions: AtomicU64::new(0),
+        }
+    }
+
+    /// Cache hits so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+    /// Cache misses (fresh compiles) so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+    /// Adaptive revisions so far.
+    pub fn revisions(&self) -> u64 {
+        self.revisions.load(Ordering::Relaxed)
+    }
+    /// Resident templates.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+    /// True when no template is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy the cache counters into a metrics sink (`serve.cache_*`).
+    pub fn export(&self, m: &Metrics) {
+        m.counter("serve.cache_hits").store(self.hits(), Ordering::Relaxed);
+        m.counter("serve.cache_misses").store(self.misses(), Ordering::Relaxed);
+        m.counter("serve.cache_revisions").store(self.revisions(), Ordering::Relaxed);
+        m.counter("serve.cache_templates").store(self.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Look up (or compile) the template for `key`. `source` is the
+    /// submission's source text when it has one — verified against the
+    /// cached entry on hits (hash-collision guard). `lower` produces the
+    /// program on a miss (source submissions parse here — never on a
+    /// hit); `registry` feeds compile-time size hints; `adaptive` enables
+    /// feedback revisions. Compilation happens OUTSIDE the cache lock so
+    /// lanes never serialize on each other's compiles.
+    pub fn get_or_compile(
+        &self,
+        key: TemplateKey,
+        source: Option<&str>,
+        opt: &OptConfig,
+        workers: usize,
+        registry: &Registry,
+        adaptive: bool,
+        lower: impl FnOnce() -> Result<Program>,
+    ) -> Result<(Arc<PlanTemplate>, CacheOutcome)> {
+        // Bind the lookup BEFORE the branch: an `if let` scrutinee keeps
+        // its temporaries (the lock guard) alive for the whole body, and
+        // `maybe_revise` re-locks the cache to swap the entry.
+        let cached = {
+            let inner = self.inner.lock().unwrap();
+            inner.map.get(&key).cloned()
+        };
+        // A hit must be the SAME program, not merely the same 64-bit
+        // hash: on a source-text mismatch fall through and recompile
+        // (last-writer-wins overwrite) instead of serving another
+        // tenant's plan.
+        let collided = |tpl: &PlanTemplate| -> bool {
+            matches!((&tpl.source, source), (Some(a), Some(b)) if a.as_ref() != b)
+        };
+        if let Some(tpl) = cached {
+            if !collided(&tpl) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                if adaptive {
+                    if let Some(revised) = self.maybe_revise(&tpl, workers, registry) {
+                        return Ok((revised, CacheOutcome::Revised));
+                    }
+                }
+                return Ok((tpl, CacheOutcome::Hit));
+            }
+        }
+
+        // Miss: compile outside the lock, then insert (first wins on a
+        // race — both compiles are identical by construction; the loser
+        // counts as a hit so hits + misses always equals lookups).
+        let t0 = Instant::now();
+        let program = Arc::new(lower()?);
+        let (graph, _report) = crate::compile_with_registry(&program, opt, registry)?;
+        // Baseline for drift detection: the model's own row estimates for
+        // the optimized graph. The first adaptive revision then fires
+        // only when reality disagrees with the estimates — not merely
+        // because stats exist.
+        let baseline = {
+            let rows =
+                crate::opt::cost::estimate_rows(&graph, &crate::opt::cost::CostParams::default());
+            let mut m: RowFeedback = FxHashMap::default();
+            for n in &graph.nodes {
+                if !n.singleton {
+                    m.insert(n.name.clone(), rows[n.id]);
+                }
+            }
+            m
+        };
+        let plan = Arc::new(ExecPlan::new(Arc::new(graph), workers));
+        let tpl = Arc::new(PlanTemplate {
+            key,
+            source: source.map(Arc::from),
+            program,
+            opt: *opt,
+            plan,
+            revision: 0,
+            compile_time: t0.elapsed(),
+            observed: Mutex::new(ObservedStats { latest: None, based_on: Some(baseline) }),
+        });
+        let mut inner = self.inner.lock().unwrap();
+        match inner.map.get(&key).cloned() {
+            // Raced: someone else compiled the same program meanwhile.
+            Some(existing) if !collided(&existing) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((existing, CacheOutcome::Hit));
+            }
+            // Collision overwrite: the key stays in `order` exactly once.
+            Some(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                inner.map.insert(key, tpl.clone());
+                return Ok((tpl, CacheOutcome::Miss));
+            }
+            None => {}
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if inner.map.len() >= self.cap {
+            if let Some(victim) = inner.order.pop_front() {
+                inner.map.remove(&victim);
+            }
+        }
+        inner.map.insert(key, tpl.clone());
+        inner.order.push_back(key);
+        Ok((tpl, CacheOutcome::Miss))
+    }
+
+    /// Re-optimize a cached template from its observed statistics when
+    /// they drifted from what the current revision was built with.
+    /// Returns the revised template (already swapped into the cache), or
+    /// `None` when no revision is warranted — including when the
+    /// feedback compile FAILS: a revision is an optimization, so an
+    /// error must neither fail the request (the resident plan is valid)
+    /// nor retry forever (the triggering stats are retired). The
+    /// template's stats mutex is held across the compile so concurrent
+    /// lanes cannot duplicate a revision.
+    fn maybe_revise(
+        &self,
+        tpl: &Arc<PlanTemplate>,
+        workers: usize,
+        registry: &Registry,
+    ) -> Option<Arc<PlanTemplate>> {
+        let mut obs = tpl.observed.lock().unwrap();
+        let latest = obs.latest.clone()?;
+        if tpl.revision >= MAX_REVISIONS || !drifted(&latest, obs.based_on.as_ref()) {
+            return None;
+        }
+        let t0 = Instant::now();
+        let (graph, _report) =
+            match crate::compile_with_feedback(&tpl.program, &tpl.opt, registry, &latest) {
+                Ok(x) => x,
+                Err(_) => {
+                    obs.based_on = obs.latest.take();
+                    return None;
+                }
+            };
+        let revised = Arc::new(PlanTemplate {
+            key: tpl.key,
+            source: tpl.source.clone(),
+            program: tpl.program.clone(),
+            opt: tpl.opt,
+            plan: Arc::new(ExecPlan::new(Arc::new(graph), workers)),
+            revision: tpl.revision + 1,
+            compile_time: t0.elapsed(),
+            observed: Mutex::new(ObservedStats { latest: None, based_on: Some(latest) }),
+        });
+        // Mark the old entry as revised-from so a racing lane that still
+        // holds it does not immediately revise again.
+        obs.based_on = obs.latest.take();
+        drop(obs);
+        self.revisions.fetch_add(1, Ordering::Relaxed);
+        // Swap the cache entry in place — but only if the key is still
+        // resident. Re-inserting after a concurrent eviction would create
+        // an entry with no `order` slot: unevictable forever, silently
+        // breaking the capacity bound. An evicted template's revision
+        // still serves THIS request; the next one recompiles.
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.contains_key(&tpl.key) {
+            inner.map.insert(tpl.key, revised.clone());
+        }
+        Some(revised)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_lower;
+
+    const SRC: &str = "a = bag(1, 2, 3); b = a.map(|x| x * 2); collect(b, \"b\");";
+
+    fn key_for(src: &str, opt: &OptConfig) -> TemplateKey {
+        TemplateKey {
+            program: source_fingerprint(src),
+            opt: opt_fingerprint(opt),
+            exec: exec_fingerprint(2, ExecMode::Pipelined, 256, true),
+        }
+    }
+
+    #[test]
+    fn differing_opt_flags_do_not_share_a_template() {
+        let on = OptConfig::default();
+        let off = OptConfig::none();
+        assert_ne!(opt_fingerprint(&on), opt_fingerprint(&off));
+        assert_ne!(key_for(SRC, &on), key_for(SRC, &off));
+        // Exec dimensions separate too.
+        assert_ne!(
+            exec_fingerprint(2, ExecMode::Pipelined, 256, true),
+            exec_fingerprint(4, ExecMode::Pipelined, 256, true)
+        );
+        assert_ne!(
+            exec_fingerprint(2, ExecMode::Pipelined, 256, true),
+            exec_fingerprint(2, ExecMode::Barrier, 256, true)
+        );
+    }
+
+    #[test]
+    fn second_lookup_hits_without_lowering() {
+        let cache = TemplateCache::new(8);
+        let reg = Registry::new();
+        let opt = OptConfig::default();
+        let key = key_for(SRC, &opt);
+        let (t1, o1) = cache
+            .get_or_compile(key, Some(SRC), &opt, 2, &reg, false, || parse_and_lower(SRC))
+            .unwrap();
+        assert_eq!(o1, CacheOutcome::Miss);
+        let (t2, o2) = cache
+            .get_or_compile(key, Some(SRC), &opt, 2, &reg, false, || {
+                panic!("hit must not re-lower the program")
+            })
+            .unwrap();
+        assert_eq!(o2, CacheOutcome::Hit);
+        assert!(Arc::ptr_eq(&t1.plan, &t2.plan), "the physical plan is shared");
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn capacity_evicts_fifo() {
+        let cache = TemplateCache::new(1);
+        let reg = Registry::new();
+        let opt = OptConfig::default();
+        let src2 = "a = bag(9); collect(a, \"a\");";
+        cache
+            .get_or_compile(key_for(SRC, &opt), Some(SRC), &opt, 2, &reg, false, || {
+                parse_and_lower(SRC)
+            })
+            .unwrap();
+        cache
+            .get_or_compile(key_for(src2, &opt), Some(src2), &opt, 2, &reg, false, || {
+                parse_and_lower(src2)
+            })
+            .unwrap();
+        assert_eq!(cache.len(), 1, "capacity 1 evicts the older entry");
+        // The evicted key misses again.
+        let (_, o) = cache
+            .get_or_compile(key_for(SRC, &opt), Some(SRC), &opt, 2, &reg, false, || {
+                parse_and_lower(SRC)
+            })
+            .unwrap();
+        assert_eq!(o, CacheOutcome::Miss);
+    }
+
+    #[test]
+    fn key_collision_recompiles_instead_of_serving_wrong_plan() {
+        // Simulate a 64-bit key collision: a DIFFERENT source arriving
+        // under an already-cached key must recompile (Miss + overwrite),
+        // never serve the resident tenant's plan.
+        let cache = TemplateCache::new(4);
+        let reg = Registry::new();
+        let opt = OptConfig::default();
+        let key = key_for(SRC, &opt);
+        cache
+            .get_or_compile(key, Some(SRC), &opt, 2, &reg, false, || parse_and_lower(SRC))
+            .unwrap();
+        let other = "z = bag(7, 8, 9, 10); collect(z, \"z\");";
+        let (tpl, o) = cache
+            .get_or_compile(key, Some(other), &opt, 2, &reg, false, || parse_and_lower(other))
+            .unwrap();
+        assert_eq!(o, CacheOutcome::Miss, "collision must not be a hit");
+        assert_eq!(tpl.source.as_deref(), Some(other));
+        assert_eq!(cache.len(), 1, "overwrite, not a duplicate entry");
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn drift_detection_thresholds() {
+        let mut latest = RowFeedback::default();
+        latest.insert("n".into(), 100.0);
+        assert!(drifted(&latest, None), "no baseline → revise");
+        let mut base = RowFeedback::default();
+        base.insert("n".into(), 95.0);
+        assert!(!drifted(&latest, Some(&base)), "5% drift is noise");
+        base.insert("n".into(), 10.0);
+        assert!(drifted(&latest, Some(&base)), "10 → 100 is real drift");
+    }
+}

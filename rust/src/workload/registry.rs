@@ -1,16 +1,26 @@
 //! Named in-memory dataset registry backing `source("name")` /
 //! `Rhs::NamedSource`. Shared by all executors so every implementation of
 //! an experiment reads identical data.
+//!
+//! A registry can be stacked on top of a **parent** ([`Registry::overlay`]):
+//! lookups fall through to the parent when the local map has no entry.
+//! The `serve::` job service uses this for per-request parameter binding —
+//! each request gets a throwaway overlay over the service's base registry,
+//! so requests can supply their own datasets (and scalar parameters as
+//! singleton datasets) without mutating global state or invalidating the
+//! cached plan template.
 
 use crate::value::Value;
 use once_cell::sync::Lazy;
 use rustc_hash::FxHashMap;
+use std::fmt;
 use std::sync::{Arc, Mutex};
 
-/// Thread-safe name → dataset map.
+/// Thread-safe name → dataset map, optionally layered over a parent.
 #[derive(Default)]
 pub struct Registry {
     map: Mutex<FxHashMap<String, Arc<Vec<Value>>>>,
+    parent: Option<Arc<Registry>>,
 }
 
 impl Registry {
@@ -19,19 +29,47 @@ impl Registry {
         Registry::default()
     }
 
+    /// Create an empty overlay whose lookups fall through to `parent`.
+    pub fn overlay(parent: Arc<Registry>) -> Registry {
+        Registry { map: Mutex::new(FxHashMap::default()), parent: Some(parent) }
+    }
+
     /// Insert (or replace) a dataset.
     pub fn put(&self, name: impl Into<String>, items: Vec<Value>) {
         self.map.lock().unwrap().insert(name.into(), Arc::new(items));
     }
 
-    /// Fetch a dataset.
-    pub fn get(&self, name: &str) -> Option<Arc<Vec<Value>>> {
-        self.map.lock().unwrap().get(name).cloned()
+    /// Insert (or replace) an already-shared dataset without copying.
+    pub fn put_shared(&self, name: impl Into<String>, items: Arc<Vec<Value>>) {
+        self.map.lock().unwrap().insert(name.into(), items);
     }
 
-    /// Remove datasets whose names start with `prefix` (bench cleanup).
+    /// Fetch a dataset (local map first, then the parent chain).
+    pub fn get(&self, name: &str) -> Option<Arc<Vec<Value>>> {
+        if let Some(d) = self.map.lock().unwrap().get(name).cloned() {
+            return Some(d);
+        }
+        self.parent.as_ref().and_then(|p| p.get(name))
+    }
+
+    /// Remove LOCAL datasets whose names start with `prefix` (bench
+    /// cleanup). Parent entries are untouched.
     pub fn clear_prefix(&self, prefix: &str) {
         self.map.lock().unwrap().retain(|k, _| !k.starts_with(prefix));
+    }
+
+    /// Number of locally registered datasets (excludes the parent).
+    pub fn local_len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+}
+
+impl fmt::Debug for Registry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Registry")
+            .field("local", &self.local_len())
+            .field("overlay", &self.parent.is_some())
+            .finish()
     }
 }
 
@@ -68,5 +106,29 @@ mod tests {
     fn global_is_shared() {
         global().put("registry_shared_test", vec![Value::I64(9)]);
         assert!(global().get("registry_shared_test").is_some());
+    }
+
+    #[test]
+    fn overlay_shadows_and_falls_through() {
+        let base = Arc::new(Registry::new());
+        base.put("shared", vec![Value::I64(1)]);
+        base.put("shadowed", vec![Value::I64(2)]);
+        let ov = Registry::overlay(base.clone());
+        ov.put("shadowed", vec![Value::I64(20), Value::I64(21)]);
+        ov.put("own", vec![Value::I64(3)]);
+        // Fall-through, shadowing, and locality.
+        assert_eq!(ov.get("shared").unwrap().len(), 1);
+        assert_eq!(ov.get("shadowed").unwrap().len(), 2);
+        assert_eq!(ov.get("own").unwrap().len(), 1);
+        assert!(base.get("own").is_none(), "overlay writes never leak to the parent");
+        assert_eq!(base.get("shadowed").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn put_shared_avoids_copies() {
+        let data = Arc::new(vec![Value::I64(7)]);
+        let r = Registry::new();
+        r.put_shared("s", data.clone());
+        assert!(Arc::ptr_eq(&r.get("s").unwrap(), &data));
     }
 }

@@ -1,0 +1,302 @@
+//! Integration tests for the `serve::` job service: concurrent
+//! submission correctness against one-shot `run_plan`, cache-key
+//! separation, worker-pool reuse across epochs, clean state between
+//! jobs (no §7 `reuse_state` bleed across tenants), and adaptive
+//! template revision.
+
+use labyrinth::exec::{ExecConfig, ExecMode};
+use labyrinth::serve::{CacheOutcome, JobRequest, JobService, ServeConfig};
+use labyrinth::value::Value;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The distinct programs the stress test serves. Each collects under
+/// label "out" and depends on a per-request dataset named `stress_data`.
+const PROGRAMS: &[&str] = &[
+    "v = source(\"stress_data\"); o = v.map(|x| x * 2); collect(o, \"out\");",
+    "v = source(\"stress_data\"); k = v.map(|x| pair(x % 4, x)); o = k.reduceByKey(|a, b| a + b); collect(o, \"out\");",
+    "v = source(\"stress_data\"); d = 1; s = bag(); while (d <= 3) { s = v.map(|x| x + d); d = d + 1; } collect(s, \"out\");",
+];
+
+fn dataset(seed: i64, len: i64) -> Vec<Value> {
+    (0..len).map(|i| Value::I64(seed + i)).collect()
+}
+
+/// One-shot oracle: compile + run with the dataset registered in an
+/// isolated overlay registry (never the global one).
+fn one_shot(src: &str, data: Vec<Value>, workers: usize) -> Vec<Value> {
+    let reg = Arc::new(labyrinth::workload::registry::Registry::new());
+    reg.put("stress_data", data);
+    let program = labyrinth::frontend::parse_and_lower(src).unwrap();
+    let (graph, _) = labyrinth::compile_with_registry(
+        &program,
+        &labyrinth::opt::OptConfig::default(),
+        &reg,
+    )
+    .unwrap();
+    let out = labyrinth::exec::run(
+        &graph,
+        &ExecConfig { workers, registry: reg, ..Default::default() },
+    )
+    .unwrap();
+    let mut got = out.collected("out").to_vec();
+    got.sort();
+    got
+}
+
+#[test]
+fn concurrent_stress_matches_single_shot() {
+    const CLIENTS: usize = 4;
+    const JOBS_PER_CLIENT: usize = 6;
+    let svc = Arc::new(JobService::new(ServeConfig {
+        slots: 2,
+        workers: 2,
+        ..Default::default()
+    }));
+    // Expected outputs per (program, seed) pair, computed one-shot.
+    let expected: Vec<Vec<Vec<Value>>> = (0..CLIENTS)
+        .map(|c| {
+            (0..JOBS_PER_CLIENT)
+                .map(|j| {
+                    let src = PROGRAMS[(c + j) % PROGRAMS.len()];
+                    one_shot(src, dataset((c * 100 + j) as i64, 16), 2)
+                })
+                .collect()
+        })
+        .collect();
+
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let svc = svc.clone();
+            let expected = &expected;
+            s.spawn(move || {
+                for j in 0..JOBS_PER_CLIENT {
+                    let src = PROGRAMS[(c + j) % PROGRAMS.len()];
+                    let res = svc
+                        .run(
+                            JobRequest::source(src)
+                                .bind("stress_data", dataset((c * 100 + j) as i64, 16)),
+                        )
+                        .unwrap();
+                    let mut got = res.output.collected("out").to_vec();
+                    got.sort();
+                    assert_eq!(got, expected[c][j], "client {c} job {j} ({src})");
+                }
+            });
+        }
+    });
+
+    let m = svc.metrics();
+    assert_eq!(m.get("serve.jobs_completed"), (CLIENTS * JOBS_PER_CLIENT) as u64);
+    assert_eq!(m.get("serve.jobs_failed"), 0);
+    // K distinct programs -> exactly K templates compiled (revisions are
+    // not misses); everything else hit the cache.
+    assert_eq!(m.get("serve.cache_misses"), PROGRAMS.len() as u64);
+    assert!(
+        m.get("serve.cache_hits") + m.get("serve.cache_revisions")
+            >= (CLIENTS * JOBS_PER_CLIENT - PROGRAMS.len()) as u64
+    );
+}
+
+#[test]
+fn cache_key_separates_opt_configs_and_results_agree() {
+    let svc = JobService::new(ServeConfig { slots: 1, adaptive: false, ..Default::default() });
+    let src = "v = source(\"stress_data\"); d = 1; s = bag(); while (d <= 3) { s = v.map(|x| x + d); d = d + 1; } collect(s, \"out\");";
+    let data = || dataset(7, 12);
+
+    let optimized = svc.run(JobRequest::source(src).bind("stress_data", data())).unwrap();
+    assert_eq!(optimized.cache, CacheOutcome::Miss);
+    let unoptimized = svc
+        .run(
+            JobRequest::source(src)
+                .bind("stress_data", data())
+                .opt(labyrinth::opt::OptConfig::none()),
+        )
+        .unwrap();
+    assert_eq!(
+        unoptimized.cache,
+        CacheOutcome::Miss,
+        "differing opt flags must not share a template"
+    );
+    assert_eq!(svc.cache().misses(), 2);
+
+    // Same answers from both templates.
+    let mut a = optimized.output.collected("out").to_vec();
+    let mut b = unoptimized.output.collected("out").to_vec();
+    a.sort();
+    b.sort();
+    assert_eq!(a, b);
+
+    // Resubmitting each hits its own entry.
+    let r1 = svc.run(JobRequest::source(src).bind("stress_data", data())).unwrap();
+    assert_eq!(r1.cache, CacheOutcome::Hit);
+    let r2 = svc
+        .run(
+            JobRequest::source(src)
+                .bind("stress_data", data())
+                .opt(labyrinth::opt::OptConfig::none()),
+        )
+        .unwrap();
+    assert_eq!(r2.cache, CacheOutcome::Hit);
+    assert_eq!(svc.cache().misses(), 2, "no recompiles on the hit path");
+}
+
+#[test]
+fn pool_threads_are_reused_across_jobs() {
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 3,
+        adaptive: false,
+        ..Default::default()
+    });
+    const JOBS: usize = 8;
+    for i in 0..JOBS {
+        let res = svc
+            .run(
+                JobRequest::source(
+                    "v = source(\"stress_data\"); o = v.map(|x| x + 1); collect(o, \"out\");",
+                )
+                .bind("stress_data", dataset(i as i64, 8)),
+            )
+            .unwrap();
+        assert_eq!(res.output.collected("out").len(), 8);
+    }
+    // Every job ran as ONE epoch per resident worker — no thread churn
+    // (thread-identity stability is asserted in exec::pool's unit tests;
+    // the epoch count proves the service reuses one pool).
+    assert_eq!(svc.metrics().get("serve.pool_epochs"), (JOBS * 3) as u64);
+}
+
+#[test]
+fn no_state_bleeds_between_jobs_with_reuse_on() {
+    // A loop-invariant hash-join build side is kept across STEPS within
+    // a job (§7 reuse). Two tenants submit the same cached template with
+    // different build-side data; the second result must reflect ONLY the
+    // second tenant's data — a stale hash table from the first epoch
+    // would join against tenant A's attributes.
+    let src = r#"
+        attrs = source("tenant_attrs");
+        d = 1;
+        while (d <= 3) {
+            v = source("tenant_probe").map(|x| pair(x, d));
+            j = attrs.join(v);
+            t = j.map(|p| fst(snd(p)));
+            collect(t, "out");
+            d = d + 1;
+        }
+    "#;
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        reuse_state: true,
+        ..Default::default()
+    });
+    let attrs_a: Vec<Value> = (0..8).map(|k| Value::pair(Value::I64(k), Value::I64(k))).collect();
+    let attrs_b: Vec<Value> =
+        (0..8).map(|k| Value::pair(Value::I64(k), Value::I64(k + 1000))).collect();
+    let probe: Vec<Value> = (0..8).map(Value::I64).collect();
+
+    let run_with = |attrs: &[Value]| -> i64 {
+        let res = svc
+            .run(
+                JobRequest::source(src)
+                    .bind("tenant_attrs", attrs.to_vec())
+                    .bind("tenant_probe", probe.clone()),
+            )
+            .unwrap();
+        res.output.collected("out").iter().map(|v| v.as_i64()).sum()
+    };
+    let sum_a = run_with(&attrs_a);
+    let sum_b = run_with(&attrs_b);
+    // A: payloads 0..8 summed over 3 steps; B: payloads 1000..1008.
+    assert_eq!(sum_a, 3 * (0..8).sum::<i64>());
+    assert_eq!(sum_b, 3 * (1000..1008).sum::<i64>(), "tenant B saw tenant A's build table");
+}
+
+#[test]
+fn adaptive_revision_fires_and_stays_correct() {
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        adaptive: true,
+        ..Default::default()
+    });
+    // The filter keeps everything at runtime (observed selectivity 1.0
+    // vs the static 0.25 guess), so recorded stats drift from the
+    // estimates the first compile used.
+    let src = "v = source(\"adapt_data\"); f = v.filter(|x| x >= 0); k = f.map(|x| pair(x % 4, x)); o = k.reduceByKey(|a, b| a + b); collect(o, \"out\");";
+    let data = || dataset(0, 64);
+    let want = one_shot(src, data(), 2);
+
+    let r1 = svc.run(JobRequest::source(src).bind("adapt_data", data())).unwrap();
+    assert_eq!(r1.cache, CacheOutcome::Miss);
+    let r2 = svc.run(JobRequest::source(src).bind("adapt_data", data())).unwrap();
+    assert_eq!(r2.cache, CacheOutcome::Revised, "observed stats trigger a revision");
+    assert_eq!(r2.revision, 1);
+    assert_eq!(svc.cache().revisions(), 1);
+    for r in [r1, r2] {
+        let mut got = r.output.collected("out").to_vec();
+        got.sort();
+        assert_eq!(got, want, "revisions preserve semantics");
+    }
+    // The revision converges: stats from the revised plan match what it
+    // was optimized with, so the third submission is a plain hit.
+    let r3 = svc.run(JobRequest::source(src).bind("adapt_data", data())).unwrap();
+    assert_eq!(r3.cache, CacheOutcome::Hit, "no oscillating re-optimization");
+}
+
+#[test]
+fn barrier_mode_service_matches_pipelined() {
+    let src = "v = source(\"stress_data\"); d = 1; s = bag(); while (d <= 4) { s = v.map(|x| x * d); d = d + 1; } collect(s, \"out\");";
+    let pipelined = JobService::new(ServeConfig { slots: 1, ..Default::default() });
+    let barrier =
+        JobService::new(ServeConfig { slots: 1, mode: ExecMode::Barrier, ..Default::default() });
+    let a = pipelined
+        .run(JobRequest::source(src).bind("stress_data", dataset(1, 10)))
+        .unwrap();
+    let b = barrier
+        .run(JobRequest::source(src).bind("stress_data", dataset(1, 10)))
+        .unwrap();
+    let mut av = a.output.collected("out").to_vec();
+    let mut bv = b.output.collected("out").to_vec();
+    av.sort();
+    bv.sort();
+    assert_eq!(av, bv);
+}
+
+#[test]
+fn canceled_queued_job_never_runs() {
+    // One slot busy with a slow job; a queued job canceled before the
+    // lane reaches it must fail with a cancellation error.
+    let svc = JobService::new(ServeConfig { slots: 1, workers: 2, ..Default::default() });
+    let slow = svc
+        .submit(JobRequest::source(
+            "d = 1; while (d <= 3000) { d = d + 1; } collect(bag(1), \"x\");",
+        ))
+        .unwrap();
+    let victim = svc.submit(JobRequest::source("collect(bag(2), \"y\");")).unwrap();
+    victim.cancel();
+    let err = victim.wait().unwrap_err();
+    assert!(err.to_string().contains("canceled"), "{err}");
+    assert!(slow.wait().is_ok());
+    assert_eq!(svc.metrics().get("serve.jobs_canceled"), 1);
+}
+
+#[test]
+fn deadline_bounds_a_running_job() {
+    let svc = JobService::new(ServeConfig { slots: 1, workers: 2, ..Default::default() });
+    // A genuinely long job (tens of thousands of coordination steps)
+    // with a tight running deadline must abort rather than run to
+    // completion — and the lane must stay usable afterwards.
+    let err = svc
+        .run(
+            JobRequest::source(
+                "d = 1; while (d <= 2000000) { d = d + 1; } collect(bag(1), \"x\");",
+            )
+            .deadline(Duration::from_millis(150)),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("deadline"), "{err}");
+    let ok = svc.run(JobRequest::source("collect(bag(3), \"z\");")).unwrap();
+    assert_eq!(ok.output.collected("z"), &[Value::I64(3)]);
+}
