@@ -384,7 +384,7 @@ fn eval(
             let res = crate::ops::run_once(&mut t, &slices);
             Binding::Cached(Arc::new(scatter(&res, w)))
         }
-        Rhs::Fused { input, stages } => {
+        Rhs::Fused { input, stages, .. } => {
             // Produced only by `opt::fuse`; supported for completeness.
             let parts = getb(env, input)?;
             let stages = stages.clone();

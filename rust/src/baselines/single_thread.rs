@@ -251,7 +251,7 @@ fn eval_rhs(
             let slices: Vec<&[Value]> = in_bags.iter().map(|b| b.as_slice()).collect();
             Binding::Bag(Arc::new(crate::ops::run_once(&mut t, &slices)))
         }
-        Rhs::Fused { input, stages } => {
+        Rhs::Fused { input, stages, .. } => {
             // Only `opt::fuse` emits Fused, and the baselines interpret the
             // pre-optimizer IR — but the semantics are well-defined, so
             // support it anyway (differential tests may feed either form).

@@ -41,6 +41,18 @@ pub enum Error {
     #[error("execution error: {0}")]
     Exec(String),
 
+    /// Run aborted by its cooperative cancel token (`ExecConfig::cancel`)
+    /// — an expected outcome, not a failure. Typed so callers (the
+    /// `serve::` metrics classification) never probe message text, which
+    /// could collide with user-chosen names embedded in diagnostics.
+    #[error("job canceled mid-run")]
+    Canceled,
+
+    /// Run aborted by its deadline (`ExecConfig::deadline`). Typed for
+    /// the same reason as [`Error::Canceled`].
+    #[error("job deadline exceeded")]
+    DeadlineExceeded,
+
     /// Errors from the baseline executors.
     #[error("baseline error: {0}")]
     Baseline(String),

@@ -32,6 +32,13 @@ use std::time::{Duration, Instant};
 /// is declared deadlocked (a coordination bug) instead of hanging forever.
 const STALL_TIMEOUT: Duration = Duration::from_secs(120);
 
+/// Poll interval for the cooperative cancellation token while the driver
+/// is blocked in `recv` (only applied when a token is configured): the
+/// worst-case latency from `JobTicket::cancel` to the driver noticing on
+/// a fully idle channel. Busy epochs notice faster — every worker checks
+/// the token between messages and reports `DriverMsg::Canceled`.
+const CANCEL_POLL: Duration = Duration::from_millis(10);
+
 /// Execute a physical plan on a temporary pool (one-shot: spawn, run one
 /// epoch, join). Kept as the plain-API entry point; repeated jobs should
 /// share a [`WorkerPool`] via [`run_plan_on_pool`] (or the `serve::`
@@ -97,7 +104,12 @@ pub fn run_plan_on_pool(
         io_dir: cfg.io_dir.clone(),
         registry: cfg.registry.clone(),
         node_counters: node_counters.clone(),
+        cancel: cfg.cancel.clone(),
+        preamble: cfg.preamble.clone(),
     });
+    if let Some(replay) = cfg.preamble.as_ref().and_then(|p| p.replay.as_ref()) {
+        metrics.add("exec.preamble_replay_nodes", replay.len() as u64);
+    }
 
     // Start the epoch on every pooled worker.
     let (done_tx, done_rx) = channel::<usize>();
@@ -164,48 +176,62 @@ pub fn run_plan_on_pool(
         };
 
     let mut error: Option<Error> = None;
+    // Stall detection is measured from the last received message, not per
+    // recv call: the cancel poll shortens individual recv timeouts far
+    // below STALL_TIMEOUT, so a bare recv timeout no longer implies a
+    // stall.
+    let mut last_msg = Instant::now();
     loop {
-        // Per-job deadlines (serve:: admission queue) bound the wait; a
-        // stall past STALL_TIMEOUT is a coordination bug either way.
-        let timeout = match cfg.deadline {
-            Some(d) => {
-                let now = Instant::now();
-                if now >= d {
-                    error = Some(Error::exec("job deadline exceeded"));
-                    break;
-                }
-                STALL_TIMEOUT.min(d - now)
-            }
-            None => STALL_TIMEOUT,
-        };
-        let msg = match driver_rx.recv_timeout(timeout) {
-            Ok(m) => m,
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                if cfg.deadline.map_or(false, |d| Instant::now() >= d) {
-                    error = Some(Error::exec("job deadline exceeded"));
-                    break;
-                }
-                let done_ref = &done_who;
-                let stuck: Vec<String> = graph
-                    .nodes
-                    .iter()
-                    .flat_map(|n| {
-                        (0..plan.num_insts[n.id]).filter_map(move |i| {
-                            if done_ref.contains(&(n.id, i)) {
-                                None
-                            } else {
-                                Some(format!("{}[{i}]", n.name))
-                            }
-                        })
+        // Cooperative cancel (serve:: JobTicket) and per-job deadlines
+        // (serve:: admission queue) bound the wait; a stall past
+        // STALL_TIMEOUT is a coordination bug either way.
+        if cfg.cancel.as_ref().map_or(false, |c| c.load(std::sync::atomic::Ordering::SeqCst)) {
+            error = Some(Error::Canceled);
+            break;
+        }
+        let now = Instant::now();
+        if cfg.deadline.map_or(false, |d| now >= d) {
+            error = Some(Error::DeadlineExceeded);
+            break;
+        }
+        let stall_left = STALL_TIMEOUT.saturating_sub(now.duration_since(last_msg));
+        if stall_left.is_zero() {
+            let done_ref = &done_who;
+            let stuck: Vec<String> = graph
+                .nodes
+                .iter()
+                .flat_map(|n| {
+                    (0..plan.num_insts[n.id]).filter_map(move |i| {
+                        if done_ref.contains(&(n.id, i)) {
+                            None
+                        } else {
+                            Some(format!("{}[{i}]", n.name))
+                        }
                     })
-                    .collect();
-                error = Some(Error::coord(format!(
-                    "driver stalled: path len {}, {dones}/{} instances done; stuck: {}",
-                    path.len(),
-                    plan.total_instances,
-                    stuck.join(", ")
-                )));
-                break;
+                })
+                .collect();
+            error = Some(Error::coord(format!(
+                "driver stalled: path len {}, {dones}/{} instances done; stuck: {}",
+                path.len(),
+                plan.total_instances,
+                stuck.join(", ")
+            )));
+            break;
+        }
+        let mut timeout = stall_left;
+        if let Some(d) = cfg.deadline {
+            timeout = timeout.min(d.saturating_duration_since(now));
+        }
+        if cfg.cancel.is_some() {
+            timeout = timeout.min(CANCEL_POLL);
+        }
+        let msg = match driver_rx.recv_timeout(timeout) {
+            Ok(m) => {
+                last_msg = Instant::now();
+                m
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                continue; // loop head re-checks cancel / deadline / stall
             }
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                 error = Some(Error::exec("all workers disconnected"));
@@ -272,12 +298,20 @@ pub fn run_plan_on_pool(
                 error = Some(Error::exec(msg));
                 break;
             }
+            DriverMsg::Canceled { worker: _ } => {
+                // A worker saw the token before the driver's own poll; it
+                // is already draining. Abort and tear the epoch down.
+                error = Some(Error::Canceled);
+                break;
+            }
         }
     }
 
     // End the epoch: workers drain their queues, see Shutdown, and report
     // done to the pool. Waiting for every report keeps the pool reusable
-    // (the next job must not race a straggler from this one).
+    // (the next job must not race a straggler from this one). This runs
+    // on EVERY exit — success, deadline, stall, panic, or cancel — so an
+    // aborted epoch can never poison the pool for the next job.
     for tx in &worker_txs {
         let _ = tx.send(WorkerMsg::Shutdown);
     }

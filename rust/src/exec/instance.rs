@@ -36,6 +36,9 @@ pub struct Env<'a> {
     pub node_counters: &'a [super::worker::NodeCounters],
     /// Report per-bag completions to the driver (barrier mode only).
     pub report_bag_done: bool,
+    /// Cross-job invariant-preamble sharing (replay source / capture
+    /// sink) for this epoch, if active (`serve::`).
+    pub preamble: Option<&'a super::PreambleSharing>,
 }
 
 use std::sync::atomic::Ordering;
@@ -85,6 +88,13 @@ pub struct Instance {
     is_phi: bool,
     is_cond: bool,
     collect_label: Option<String>,
+    /// The current bag was replayed from a cached preamble result: the
+    /// transform was never opened and must not be closed. Sticky, which
+    /// is sound because a shareable node produces exactly one bag per run.
+    replayed: bool,
+    /// Items emitted for the current bag, accumulated for the cross-job
+    /// preamble capture sink (`None` when not capturing).
+    capture: Option<Vec<Value>>,
 }
 
 impl Instance {
@@ -128,6 +138,8 @@ impl Instance {
                 Rhs::Collect { label, .. } => Some(label.clone()),
                 _ => None,
             },
+            replayed: false,
+            capture: None,
         }
     }
 
@@ -245,7 +257,32 @@ impl Instance {
     fn start_bag(&mut self, len: u32, env: &mut Env) {
         let n = &env.plan.graph.nodes[self.node];
         debug_assert_eq!(env.path.at(len), n.block, "output bag at foreign block");
-        self.transform.open_out_bag();
+        // Cross-job preamble sharing (`serve::`): a shareable invariant
+        // node whose output a previous epoch materialized under a
+        // matching binding signature REPLAYS the cached bag — the
+        // transform is never touched, inputs are ignored (the cached
+        // items already embody them), and downstream coordination is
+        // indistinguishable from a recompute.
+        let replay: Option<Vec<Value>> = if env.plan.shareable[self.node] {
+            env.preamble
+                .and_then(|p| p.replay.as_ref())
+                .and_then(|r| r.get(&self.node))
+                .and_then(|per_inst| per_inst.get(self.inst))
+                .cloned()
+        } else {
+            None
+        };
+        let replaying = replay.is_some();
+        if !replaying {
+            self.transform.open_out_bag();
+            // Capture the bag we are about to compute so later epochs
+            // with a matching binding signature can replay it.
+            if env.plan.shareable[self.node]
+                && env.preamble.map_or(false, |p| p.capture.is_some())
+            {
+                self.capture = Some(Vec::new());
+            }
+        }
 
         // §6.3.4: retained entry with one watcher per conditional out-edge.
         let cond_edges: Vec<usize> = env.plan.out_edges[self.node]
@@ -303,6 +340,19 @@ impl Instance {
                             n.name
                         )
                     });
+                if replaying {
+                    // Inputs satisfied without feeding: the replayed bag
+                    // already embodies them. Data that still arrives is
+                    // buffered, ignored, and reclaimed at run end.
+                    self.prev_req[i] = Some(req);
+                    active[i] = Some(ActiveIn {
+                        required: req,
+                        fed: 0,
+                        closed_delivered: true,
+                        reused: true,
+                    });
+                    continue;
+                }
                 let keeps = self.transform.keeps_input_state(i);
                 let mut reused = false;
                 if keeps {
@@ -320,8 +370,33 @@ impl Instance {
         }
         self.cur = Some(CurOut { len, active, cond_value: None, collect_items: Vec::new() });
 
-        // Sources generate immediately.
-        if n_inputs == 0 {
+        if let Some(items) = replay {
+            // Emit the cached bag; `feed` sees every input satisfied and
+            // `finish_bag` closes without running the transform.
+            self.replayed = true;
+            env.counters.preamble_replays.fetch_add(1, Ordering::Relaxed);
+            // Interior shareable node — every consumer replays its OWN
+            // cached bag, so nobody reads this one: skip the emission
+            // (and its clones/sends) entirely. Only the row counter is
+            // kept, so adaptive feedback sees identical statistics on
+            // replayed and computed epochs. Frontier nodes (any consumer
+            // outside the replay set, e.g. in-loop operators) still emit.
+            let interior = !env.plan.out_edges[self.node].is_empty()
+                && env.plan.out_edges[self.node].iter().all(|oe| {
+                    env.preamble
+                        .and_then(|p| p.replay.as_ref())
+                        .map_or(false, |r| r.contains_key(&oe.dst_node))
+                });
+            if interior {
+                env.node_counters[self.node]
+                    .rows
+                    .fetch_add(items.len() as u64, Ordering::Relaxed);
+            } else {
+                self.staging.items.extend(items);
+                self.route_staging(env);
+            }
+        } else if n_inputs == 0 {
+            // Sources generate immediately.
             self.transform.generate(&mut self.staging);
             self.route_staging(env);
         }
@@ -363,10 +438,21 @@ impl Instance {
     }
 
     fn finish_bag(&mut self, env: &mut Env) {
-        self.transform.close_out_bag(&mut self.staging);
-        self.route_staging(env);
+        if !self.replayed {
+            // A replayed bag's transform was never opened; everything it
+            // emits was already routed in `start_bag`.
+            self.transform.close_out_bag(&mut self.staging);
+            self.route_staging(env);
+        }
         let cur = self.cur.take().expect("finish without current bag");
         let len = cur.len;
+
+        // Hand the completed bag to the cross-job preamble capture sink.
+        if let Some(items) = self.capture.take() {
+            if let Some(sink) = env.preamble.and_then(|p| p.capture.as_ref()) {
+                sink.lock().unwrap().push((self.node, self.inst, items));
+            }
+        }
 
         // Flush unconditional sends, piggybacking close markers on the
         // final batch per destination; destinations with no buffered data
@@ -448,6 +534,9 @@ impl Instance {
         }
         let items = std::mem::take(&mut self.staging.items);
         env.node_counters[self.node].rows.fetch_add(items.len() as u64, Ordering::Relaxed);
+        if let Some(cap) = self.capture.as_mut() {
+            cap.extend(items.iter().cloned());
+        }
         let cur = self.cur.as_mut().expect("emission outside a bag");
         let len = cur.len;
         if self.is_cond {

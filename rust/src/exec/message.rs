@@ -91,4 +91,12 @@ pub enum DriverMsg {
         /// Panic payload rendered to a string.
         msg: String,
     },
+    /// A worker observed the epoch's cancellation token set
+    /// (`ExecConfig::cancel`). The reporting worker keeps draining its
+    /// queue without processing further work; the driver aborts the run
+    /// and tears the epoch down cleanly. Sent at most once per worker.
+    Canceled {
+        /// Reporting worker id.
+        worker: usize,
+    },
 }

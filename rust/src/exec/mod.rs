@@ -11,12 +11,13 @@ pub mod plan;
 pub mod pool;
 pub mod worker;
 
-use crate::dataflow::DataflowGraph;
+use crate::dataflow::{DataflowGraph, NodeId};
 use crate::error::Result;
 use crate::metrics::Metrics;
 use crate::value::Value;
 use rustc_hash::FxHashMap;
-use std::sync::Arc;
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 pub use plan::ExecPlan;
@@ -59,6 +60,38 @@ pub struct ExecConfig {
     /// epoch down cleanly) once this instant passes. Used by the `serve::`
     /// admission queue's per-job deadlines.
     pub deadline: Option<std::time::Instant>,
+    /// Optional cooperative cancellation token. The driver polls it in its
+    /// recv loop (alongside the deadline check) and every worker checks it
+    /// between messages — superstep/batch boundaries — so a set token
+    /// aborts a running epoch within one superstep, with the same clean
+    /// teardown as a deadline abort (queues drained, pool threads back to
+    /// resident idle). `serve::JobTicket::cancel` sets it.
+    pub cancel: Option<Arc<AtomicBool>>,
+    /// Cross-job sharing of materialized loop-invariant preamble bags
+    /// (`serve::` only; `None` = every epoch recomputes its preambles).
+    pub preamble: Option<PreambleSharing>,
+}
+
+/// Materialized invariant-preamble outputs: shareable node id → the items
+/// each physical instance emitted for its (single) output bag, in
+/// emission order. Which nodes are shareable is decided at plan build
+/// time ([`ExecPlan::shareable`]: hoisted into a depth-0 preamble — or
+/// consumed ONLY by such nodes — with a deterministic, Φ-free input
+/// closure).
+pub type PreambleBags = FxHashMap<NodeId, Vec<Vec<Value>>>;
+
+/// Cross-job invariant-preamble sharing for one epoch (see
+/// `serve::template`). At most one of the two sides is normally set:
+/// `replay` feeds instances the bags a previous epoch with a matching
+/// binding signature materialized (the invariant subgraph is skipped
+/// entirely — transforms never run); `capture` collects this epoch's
+/// preamble bags so the service can store them for later epochs.
+#[derive(Clone, Debug, Default)]
+pub struct PreambleSharing {
+    /// Bags to replay instead of recomputing.
+    pub replay: Option<Arc<PreambleBags>>,
+    /// Sink filled with `(node, instance, items)` at bag completion.
+    pub capture: Option<Arc<Mutex<Vec<(NodeId, usize, Vec<Value>)>>>>,
 }
 
 impl Default for ExecConfig {
@@ -72,6 +105,8 @@ impl Default for ExecConfig {
             sched: None,
             registry: crate::workload::registry::global(),
             deadline: None,
+            cancel: None,
+            preamble: None,
         }
     }
 }

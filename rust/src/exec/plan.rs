@@ -75,6 +75,15 @@ pub struct ExecPlan {
     /// non-joins and unannotated joins; 1 when `opt::joinside` flipped
     /// it). `Instance::new` hands this to `ops::join::HashJoinT`.
     pub join_build: Vec<usize>,
+    /// Per node: is its (single, depth-0 preamble) output bag fully
+    /// determined by the template plus its named-source bindings, so the
+    /// `serve::` service may replay a previous epoch's materialized bag
+    /// instead of recomputing it? See
+    /// [`crate::opt::analysis::binding_determined_preamble`].
+    pub shareable: Vec<bool>,
+    /// Named-source names the shareable closure reads (sorted, deduped) —
+    /// the inputs a preamble binding signature must cover.
+    pub shareable_sources: Vec<String>,
 }
 
 impl ExecPlan {
@@ -143,7 +152,9 @@ impl ExecPlan {
             insts_per_block[n.block] += num_insts[n.id];
         }
 
-        let hoisted = graph.nodes.iter().map(|n| n.hoisted_from.is_some()).collect();
+        let hoisted: Vec<bool> = graph.nodes.iter().map(|n| n.hoisted_from.is_some()).collect();
+        let shareable = crate::opt::analysis::binding_determined_preamble(&graph, &loop_depth);
+        let shareable_sources = crate::opt::analysis::preamble_source_names(&graph, &shareable);
         let join_build = graph
             .nodes
             .iter()
@@ -162,6 +173,8 @@ impl ExecPlan {
             insts_per_block,
             hoisted,
             join_build,
+            shareable,
+            shareable_sources,
         }
     }
 
@@ -268,6 +281,27 @@ mod tests {
         let phi = g.nodes.iter().find(|n| matches!(n.op, Rhs::Phi(_))).unwrap();
         for e in &p.in_edges[phi.id] {
             assert!(!e.invariant);
+        }
+    }
+
+    #[test]
+    fn shareable_marks_binding_determined_preamble_nodes() {
+        crate::workload::registry::global()
+            .put("plan_share_src", vec![crate::value::Value::I64(3), crate::value::Value::I64(4)]);
+        let p = plan(
+            "d = 1; while (d <= 3) { v = source(\"plan_share_src\").map(|x| x * 2); collect(v, \"v\"); d = d + 1; }",
+            2,
+        );
+        crate::workload::registry::global().clear_prefix("plan_share_src");
+        let g = &p.graph;
+        let src = g.nodes.iter().find(|n| matches!(n.op, Rhs::NamedSource(_))).unwrap();
+        assert!(p.shareable[src.id], "hoisted source is shareable");
+        assert_eq!(p.shareable_sources, vec!["plan_share_src".to_string()]);
+        // The in-loop collect, the Φ, and the condition node never share.
+        for n in &g.nodes {
+            if matches!(n.op, Rhs::Phi(_) | Rhs::Collect { .. }) || n.cond.is_some() {
+                assert!(!p.shareable[n.id], "{} must not be shareable", n.name);
+            }
         }
     }
 

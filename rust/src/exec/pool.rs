@@ -17,6 +17,10 @@
 //! from different tenants of the `serve::` job service — cannot observe
 //! each other's state. A worker panic is caught per epoch, reported to
 //! that job's driver, and the thread stays usable for the next job.
+//! Aborted epochs (deadline, mid-run cancel via `ExecConfig::cancel`)
+//! end the same way as successful ones: the driver still sends
+//! `Shutdown`, the thread still drains its queue and reports done, so
+//! an abort can never poison the pool for the job that follows it.
 
 use super::message::{DriverMsg, WorkerMsg};
 use super::worker::{run_worker, WorkerShared};
@@ -178,6 +182,36 @@ mod tests {
         // The pool remains usable.
         let good = plan("a = bag(7); collect(a, \"a\");", 2);
         let out = driver::run_plan_on_pool(good, &cfg, &pool).unwrap();
+        assert_eq!(out.collected("a").len(), 1);
+    }
+
+    #[test]
+    fn pool_survives_a_mid_run_cancel() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let pool = WorkerPool::new(2);
+        // Without the cancel this loop runs for a very long time.
+        let long =
+            plan("d = 1; while (d <= 20000000) { d = d + 1; } collect(bag(1), \"x\");", 2);
+        let cancel = Arc::new(AtomicBool::new(false));
+        let cfg = ExecConfig { workers: 2, cancel: Some(cancel.clone()), ..Default::default() };
+        let setter = {
+            let cancel = cancel.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                cancel.store(true, Ordering::SeqCst);
+            })
+        };
+        let err = driver::run_plan_on_pool(long, &cfg, &pool).unwrap_err();
+        setter.join().unwrap();
+        assert!(err.to_string().contains("canceled"), "{err}");
+        // Clean teardown: the SAME pool serves the next epoch.
+        let good = plan("a = bag(7); collect(a, \"a\");", 2);
+        let out = driver::run_plan_on_pool(
+            good,
+            &ExecConfig { workers: 2, ..Default::default() },
+            &pool,
+        )
+        .unwrap();
         assert_eq!(out.collected("a").len(), 1);
     }
 

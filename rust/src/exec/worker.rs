@@ -7,7 +7,7 @@ use super::message::{DriverMsg, WorkerMsg};
 use super::plan::ExecPlan;
 use crate::coord::ExecPath;
 use crate::metrics::Metrics;
-use std::sync::atomic::AtomicU64;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
@@ -32,6 +32,9 @@ pub struct EngineCounters {
     pub retained_dropped: Arc<AtomicU64>,
     /// GC scans skipped on pinned invariant edges (loop preamble bags).
     pub invariant_gc_skips: Arc<AtomicU64>,
+    /// Invariant-preamble bags replayed from a previous epoch instead of
+    /// recomputed (cross-job sharing, `serve::`).
+    pub preamble_replays: Arc<AtomicU64>,
 }
 
 impl EngineCounters {
@@ -47,6 +50,7 @@ impl EngineCounters {
             conditional_sends: m.counter("coord.conditional_sends"),
             retained_dropped: m.counter("coord.retained_dropped"),
             invariant_gc_skips: m.counter("coord.invariant_gc_skips"),
+            preamble_replays: m.counter("coord.preamble_replays"),
         }
     }
 }
@@ -89,6 +93,12 @@ pub struct WorkerShared {
     pub registry: Arc<crate::workload::registry::Registry>,
     /// Observed per-node output cardinalities (indexed by `NodeId`).
     pub node_counters: Arc<Vec<NodeCounters>>,
+    /// Cooperative cancellation token for this epoch (see
+    /// [`super::ExecConfig::cancel`]); `None` = uncancelable.
+    pub cancel: Option<Arc<AtomicBool>>,
+    /// Cross-job invariant-preamble sharing for this epoch (replay
+    /// source and/or capture sink).
+    pub preamble: Option<super::PreambleSharing>,
 }
 
 /// Run one worker for one job **epoch**: process messages until
@@ -116,7 +126,26 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
         })
         .collect();
 
+    let mut cancel_reported = false;
     while let Ok(msg) = rx.recv() {
+        // Cooperative mid-run cancel: between messages (superstep/batch
+        // boundaries) check the token; once set, report to the driver
+        // (at most once) and drain the remaining queue WITHOUT
+        // processing it, so the epoch tears down exactly like a normal
+        // shutdown — channels emptied, per-job state dropped, thread
+        // back to resident idle for the pool's next job.
+        if let Some(c) = &shared.cancel {
+            if c.load(Ordering::Relaxed) {
+                if !cancel_reported {
+                    cancel_reported = true;
+                    let _ = shared.driver.send(DriverMsg::Canceled { worker: w });
+                }
+                if matches!(msg, WorkerMsg::Shutdown) {
+                    break;
+                }
+                continue;
+            }
+        }
         match msg {
             WorkerMsg::Shutdown => break,
             WorkerMsg::Append { start, blocks, final_ } => {
@@ -133,6 +162,7 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
                             counters: &shared.counters,
                             node_counters: &shared.node_counters,
                             report_bag_done: shared.report_bag_done,
+                            preamble: shared.preamble.as_ref(),
                         };
                         inst.on_append(start, &blocks, &mut env);
                     }
@@ -154,6 +184,7 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
                     counters: &shared.counters,
                     node_counters: &shared.node_counters,
                     report_bag_done: shared.report_bag_done,
+                    preamble: shared.preamble.as_ref(),
                 };
                 inst.on_data(input, bag_len, items, close, &mut env);
             }
@@ -172,6 +203,7 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
                     counters: &shared.counters,
                     node_counters: &shared.node_counters,
                     report_bag_done: shared.report_bag_done,
+                    preamble: shared.preamble.as_ref(),
                 };
                 inst.on_close(input, bag_len, &mut env);
             }

@@ -315,6 +315,13 @@ pub enum Rhs {
         input: VarId,
         /// Pipeline stages, in application order.
         stages: Vec<FusedStage>,
+        /// Adaptive-feedback lineage, parallel to `stages`: the SSA node
+        /// name that produced each stage's output before fusion. Observed
+        /// runtime cardinalities are recorded against the fused node but
+        /// must be pinned onto the *pre-fusion* graph on an adaptive
+        /// recompile (`opt::cost::estimate_rows_seeded` pins by SSA
+        /// name); the lineage maps them back (`serve::template`).
+        lineage: Vec<String>,
     },
     /// SSA Φ-function — introduced by the SSA pass only; each argument is
     /// (defining block of the argument at Φ-insertion time, variable).
@@ -686,7 +693,9 @@ fn hash_rhs(rhs: &Rhs, h: &mut impl Hasher) {
             inputs.hash(h);
             format!("{spec:?}").hash(h);
         }
-        Rhs::Fused { input, stages } => {
+        // Lineage is derived bookkeeping (and the frontends never emit
+        // Fused anyway) — excluded from the fingerprint.
+        Rhs::Fused { input, stages, .. } => {
             20u8.hash(h);
             input.hash(h);
             for s in stages {

@@ -55,8 +55,9 @@ const FLAG_OPTS: &[&str] = &[
     // opt.pushdown / opt.join_sides).
     "--no-opt", "--no-hoist", "--no-fuse", "--no-dce", "--no-pushdown",
     "--no-join-sides", "--explain",
-    // bench-serve CI mode; serve adaptive-reoptimization toggle.
-    "--smoke", "--no-adaptive",
+    // bench-serve CI mode; serve adaptive-reoptimization and cross-job
+    // preamble-sharing toggles.
+    "--smoke", "--no-adaptive", "--no-share-preambles",
 ];
 
 fn parse_opts(args: &[String]) -> Result<Opts> {
@@ -155,7 +156,8 @@ fn print_usage() {
          \x20            [--explain] [--io-dir DIR] [--config FILE] [--sched] [--metrics]\n\
          \x20 labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]\n\
          \x20 labyrinth serve <program.laby> [--workers N] [--slots S] [--requests R]\n\
-         \x20            [--param name=value]... [--no-adaptive] [--metrics]\n\
+         \x20            [--param name=value]... [--no-adaptive] [--no-share-preambles]\n\
+         \x20            [--metrics]\n\
          \x20 labyrinth bench-serve [--smoke]\n\
          \x20 labyrinth generate visitcount --days N [--visits M] [--pages P] --out DIR\n\
          \x20 labyrinth config --dump [--config FILE]"
@@ -391,6 +393,7 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         io_dir,
         opt: opt_config(opts, &cfg)?,
         adaptive: !opts.has("--no-adaptive"),
+        share_preambles: !opts.has("--no-share-preambles"),
         ..Default::default()
     });
     println!("serving {path} on {slots} slot(s) x {workers} worker(s), {requests} request(s)");

@@ -202,6 +202,7 @@ mod tests {
                 stages: vec![crate::frontend::FusedStage::Map(Udf1::new("id", |v: &Value| {
                     v.clone()
                 }))],
+                lineage: vec!["id".into()],
             },
         ];
         for op in &ops {

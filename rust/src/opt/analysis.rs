@@ -87,6 +87,117 @@ pub fn is_speculative_op(op: &Rhs) -> bool {
     matches!(op, Rhs::NamedSource(_) | Rhs::XlaCall { .. })
 }
 
+/// Preamble nodes whose output bags are **fully determined by the
+/// template plus its named-source bindings** — the set whose materialized
+/// results the `serve::` job service may share across jobs with a
+/// matching binding signature. The set is seeded by nodes that were
+/// hoisted into a loop preamble (`hoisted_from.is_some()`) sitting
+/// outside every loop (`loop_depth == 0`, so they compute exactly ONE
+/// bag per run), then grown **backward**: a deterministic, depth-0,
+/// non-condition node whose every consumer is already in the set joins
+/// it too — its bag is read only by nodes that replay their own cached
+/// results, so recomputing it (an entry-block source feeding only a
+/// hoisted join, say) would produce data nobody reads.
+///
+/// Every member's transitive input closure contains only deterministic
+/// in-memory ops — no `readFile`/`writeFile` (filesystem state), no
+/// `xla` calls (external artifacts), and no Φ nodes. Excluding Φs keeps
+/// the bag's value independent of the execution *path*: a Φ-fed value
+/// selects a bag by path position, which could vary across epochs
+/// through control flow the binding signature does not cover. UDFs are
+/// assumed pure, as everywhere in the optimizer.
+///
+/// `loop_depth` is per-block nesting depth (`cfg::loops::LoopInfo::depth`
+/// for the graph's CFG).
+pub fn binding_determined_preamble(g: &DataflowGraph, loop_depth: &[usize]) -> Vec<bool> {
+    let allowed = |n: &Node| {
+        !matches!(
+            n.op,
+            Rhs::ReadFile { .. } | Rhs::WriteFile { .. } | Rhs::XlaCall { .. } | Rhs::Phi(_)
+        )
+    };
+    // Deterministic closure: start from per-op admissibility and knock
+    // nodes out until a fixpoint (a node with any non-deterministic
+    // transitive input is itself non-deterministic). Cycles only exist
+    // through Φs, which start excluded, so the fixpoint is conservative.
+    let mut det: Vec<bool> = g.nodes.iter().map(allowed).collect();
+    loop {
+        let mut changed = false;
+        for n in &g.nodes {
+            if det[n.id] && n.inputs.iter().any(|i| !det[i.src]) {
+                det[n.id] = false;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let mut consumers: Vec<Vec<NodeId>> = vec![Vec::new(); g.nodes.len()];
+    for n in &g.nodes {
+        for inp in &n.inputs {
+            consumers[inp.src].push(n.id);
+        }
+    }
+    // Seed with the hoisted preamble nodes, then grow backward to the
+    // deterministic nodes they fully consume. Condition nodes never
+    // join: their decision must be recomputed and reported per epoch.
+    let mut shareable: Vec<bool> = g
+        .nodes
+        .iter()
+        .map(|n| det[n.id] && n.hoisted_from.is_some() && loop_depth[n.block] == 0)
+        .collect();
+    loop {
+        let mut changed = false;
+        for n in &g.nodes {
+            if shareable[n.id]
+                || !det[n.id]
+                || loop_depth[n.block] != 0
+                || n.cond.is_some()
+                || consumers[n.id].is_empty()
+            {
+                continue;
+            }
+            if consumers[n.id].iter().all(|&c| shareable[c]) {
+                shareable[n.id] = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    shareable
+}
+
+/// The named-source names read by the transitive input closure of the
+/// `shareable` nodes (see [`binding_determined_preamble`]) — exactly the
+/// bindings a cached preamble result depends on. Sorted and deduplicated
+/// so fingerprints are order-stable.
+pub fn preamble_source_names(g: &DataflowGraph, shareable: &[bool]) -> Vec<String> {
+    let mut seen = vec![false; g.nodes.len()];
+    let mut work: Vec<NodeId> =
+        (0..g.nodes.len()).filter(|&i| shareable.get(i).copied().unwrap_or(false)).collect();
+    for &i in &work {
+        seen[i] = true;
+    }
+    let mut names: Vec<String> = Vec::new();
+    while let Some(v) = work.pop() {
+        if let Rhs::NamedSource(name) = &g.nodes[v].op {
+            names.push(name.clone());
+        }
+        for inp in &g.nodes[v].inputs {
+            if !seen[inp.src] {
+                seen[inp.src] = true;
+                work.push(inp.src);
+            }
+        }
+    }
+    names.sort();
+    names.dedup();
+    names
+}
+
 impl PlanAnalysis {
     /// Compute the analysis for the current graph (default
     /// [`CostParams`]).
@@ -313,6 +424,13 @@ impl PlanAnalysis {
         let skipped = full.len() - gated.len();
         (gated, skipped)
     }
+
+    /// [`binding_determined_preamble`] over this analysis's loop nesting:
+    /// the nodes whose materialized preamble bags the `serve::` service
+    /// may share across jobs with matching binding signatures.
+    pub fn shareable_preamble(&self, g: &DataflowGraph) -> Vec<bool> {
+        binding_determined_preamble(g, &self.loops.depth)
+    }
 }
 
 #[cfg(test)]
@@ -380,6 +498,145 @@ mod tests {
         for &i in &inv {
             assert!(!matches!(g.nodes[i].op, Rhs::Join { .. }), "join must not be invariant");
         }
+    }
+
+    #[test]
+    fn binding_determined_preamble_finds_hoisted_source_chain() {
+        // Full default compile: the invariant source+map chain hoists to
+        // the depth-0 preamble and its closure is deterministic — it is
+        // shareable. Varying nodes and the collect are not.
+        crate::workload::registry::global()
+            .put("analysis_pre_src", vec![crate::value::Value::I64(1), crate::value::Value::I64(2)]);
+        let g = crate::compile_source(
+            r#"
+            d = 1;
+            while (d <= 3) {
+                attrs = source("analysis_pre_src").map(|v| pair(v, v));
+                probe = bag(1, 2).map(|v| pair(v + d, d));
+                j = probe.join(attrs);
+                collect(j, "j");
+                d = d + 1;
+            }
+            "#,
+        )
+        .unwrap();
+        crate::workload::registry::global().clear_prefix("analysis_pre_src");
+        let a = PlanAnalysis::compute(&g);
+        let shareable = a.shareable_preamble(&g);
+        let src = g.nodes.iter().find(|n| matches!(n.op, Rhs::NamedSource(_))).unwrap();
+        assert!(shareable[src.id], "hoisted registered source is shareable");
+        for n in &g.nodes {
+            if shareable[n.id] {
+                // Hoisted, or fully consumed by shareable nodes.
+                assert!(
+                    n.hoisted_from.is_some()
+                        || a.consumers[n.id].iter().all(|&(c, _)| shareable[c]),
+                    "{} shareable but neither hoisted nor fully consumed by the set",
+                    n.name
+                );
+                assert_eq!(a.loops.depth[n.block], 0, "{} shareable inside a loop", n.name);
+            }
+            if matches!(n.op, Rhs::Phi(_) | Rhs::Collect { .. }) || n.cond.is_some() {
+                assert!(!shareable[n.id], "{} must not be shareable", n.name);
+            }
+        }
+        let names = preamble_source_names(&g, &shareable);
+        assert_eq!(names, vec!["analysis_pre_src".to_string()]);
+    }
+
+    #[test]
+    fn entry_source_consumed_only_by_hoisted_nodes_is_shareable() {
+        // `base` is defined OUTSIDE the loop (never hoisted), but its
+        // only consumer is the hoisted map — recomputing it per epoch
+        // would produce data nobody reads, so the backward extension
+        // must pull it into the shareable set.
+        crate::workload::registry::global().put(
+            "analysis_entry_src",
+            vec![crate::value::Value::I64(4), crate::value::Value::I64(5)],
+        );
+        let g = crate::compile_source(
+            "base = source(\"analysis_entry_src\"); d = 1; while (d <= 3) { v = base.map(|x| x + 1); collect(v, \"v\"); d = d + 1; }",
+        )
+        .unwrap();
+        crate::workload::registry::global().clear_prefix("analysis_entry_src");
+        let a = PlanAnalysis::compute(&g);
+        let shareable = a.shareable_preamble(&g);
+        let base = g.nodes.iter().find(|n| matches!(n.op, Rhs::NamedSource(_))).unwrap();
+        assert!(base.hoisted_from.is_none(), "premise: the source was never hoisted");
+        let map = g
+            .nodes
+            .iter()
+            .find(|n| n.hoisted_from.is_some() && !n.singleton)
+            .expect("premise: the invariant map hoisted");
+        assert!(shareable[map.id]);
+        assert!(shareable[base.id], "fully-consumed entry source joins the shareable set");
+        assert_eq!(preamble_source_names(&g, &shareable), vec!["analysis_entry_src".to_string()]);
+    }
+
+    #[test]
+    fn read_file_closure_is_never_shareable() {
+        // readFile pulls filesystem state a binding signature cannot
+        // cover: nothing downstream of it may be shared, hoisted or not.
+        let g = crate::compile_source(
+            "f = \"nope.txt\"; d = 1; while (d <= 2) { v = readFile(f).map(|x| x); collect(v, \"v\"); d = d + 1; }",
+        )
+        .unwrap();
+        let a = PlanAnalysis::compute(&g);
+        let shareable = a.shareable_preamble(&g);
+        for n in &g.nodes {
+            if matches!(n.op, Rhs::ReadFile { .. }) || n.inputs.iter().any(|i| matches!(g.nodes[i.src].op, Rhs::ReadFile { .. })) {
+                assert!(!shareable[n.id], "{} reads the filesystem", n.name);
+            }
+        }
+    }
+
+    #[test]
+    fn phi_dependent_hoisted_chain_is_not_shareable() {
+        // The second loop's invariant chain captures `d` — the exit value
+        // of the FIRST loop's header Φ. It hoists fine, but its value is
+        // selected by execution-path position, so it must not be marked
+        // binding-determined (shareable across epochs).
+        let g = crate::compile_source(
+            r#"
+            d = 1;
+            while (d <= 2) { d = d + 1; }
+            e = 1;
+            while (e <= 2) {
+                v = bag(5, 6).map(|x| x * d);
+                collect(v, "v");
+                e = e + 1;
+            }
+            "#,
+        )
+        .unwrap();
+        let a = PlanAnalysis::compute(&g);
+        let shareable = a.shareable_preamble(&g);
+        // Transitive Φ-dependence per node, for the assertion.
+        let mut reads_phi = vec![false; g.nodes.len()];
+        loop {
+            let mut changed = false;
+            for n in &g.nodes {
+                let dep = matches!(n.op, Rhs::Phi(_))
+                    || n.inputs.iter().any(|i| reads_phi[i.src]);
+                if dep && !reads_phi[n.id] {
+                    reads_phi[n.id] = true;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        let mut phi_dependent_hoisted = 0;
+        for n in &g.nodes {
+            if reads_phi[n.id] {
+                assert!(!shareable[n.id], "{} reads a Φ and must not be shareable", n.name);
+                if n.hoisted_from.is_some() {
+                    phi_dependent_hoisted += 1;
+                }
+            }
+        }
+        assert!(phi_dependent_hoisted > 0, "test premise: a Φ-dependent chain was hoisted");
     }
 
     #[test]

@@ -44,6 +44,18 @@ fn stages_of(op: &Rhs) -> Vec<FusedStage> {
     }
 }
 
+/// Per-stage lineage a node contributes: the pre-fusion SSA node name
+/// producing each stage's output (parallel to [`stages_of`]). Adaptive
+/// feedback uses it to map observed cardinalities back onto the fresh,
+/// pre-fusion graph on a recompile.
+fn lineage_of(n: &Node) -> Vec<String> {
+    match &n.op {
+        Rhs::Map { .. } | Rhs::Filter { .. } | Rhs::FlatMap { .. } => vec![n.name.clone()],
+        Rhs::Fused { lineage, .. } => lineage.clone(),
+        other => unreachable!("non-elementwise op in chain: {}", other.mnemonic()),
+    }
+}
+
 fn fusable_edge(g: &DataflowGraph, up: NodeId, down: &Node) -> bool {
     let e = &down.inputs[0];
     e.src == up && !e.conditional && e.route == Route::Forward && g.nodes[up].block == down.block
@@ -89,6 +101,9 @@ impl Pass for FusePass {
             // downstream consumer); the other members are merged away.
             let stages: Vec<FusedStage> =
                 chain.iter().flat_map(|&id| stages_of(&g.nodes[id].op)).collect();
+            let lineage: Vec<String> =
+                chain.iter().flat_map(|&id| lineage_of(&g.nodes[id])).collect();
+            debug_assert_eq!(stages.len(), lineage.len());
             let head_id = chain[0];
             let input_var = g.nodes[head_id].op.input_vars()[0];
             let head_inputs = g.nodes[head_id].inputs.clone();
@@ -102,7 +117,7 @@ impl Pass for FusePass {
             ));
             let tail = *chain.last().unwrap();
             let t = &mut g.nodes[tail];
-            t.op = Rhs::Fused { input: input_var, stages };
+            t.op = Rhs::Fused { input: input_var, stages, lineage };
             t.inputs = head_inputs;
             t.hoisted_from = t.hoisted_from.or(head_hoisted);
             for &id in &chain[..chain.len() - 1] {
@@ -151,6 +166,39 @@ mod tests {
         assert_eq!(g.num_nodes(), 3);
         let col = g.nodes.iter().find(|n| matches!(n.op, Rhs::Collect { .. })).unwrap();
         assert_eq!(col.inputs[0].src, fused.id);
+    }
+
+    #[test]
+    fn lineage_records_pre_fusion_names_in_stage_order() {
+        let src = "a = bag(1, 2); b = a.map(|x| x + 1); c = b.filter(|x| x > 0); d = c.map(|x| x * 2); collect(d, \"d\");";
+        let p = parse_and_lower(src).unwrap();
+        let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        // Pre-fusion names of the chain, in order.
+        let want: Vec<String> = g
+            .nodes
+            .iter()
+            .filter(|n| {
+                matches!(n.op, Rhs::Map { .. } | Rhs::Filter { .. }) && !n.singleton
+            })
+            .map(|n| n.name.clone())
+            .collect();
+        assert_eq!(want.len(), 3);
+        let a = PlanAnalysis::compute(&g);
+        FusePass.run(&mut g, &a).unwrap();
+        let Rhs::Fused { ref stages, ref lineage, .. } = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Rhs::Fused { .. }))
+            .unwrap()
+            .op
+        else {
+            unreachable!()
+        };
+        assert_eq!(stages.len(), lineage.len());
+        assert_eq!(lineage, &want, "lineage is the pre-fusion names, stage-parallel");
+        // Repeated fusion splices lineage flat alongside stages.
+        let a2 = PlanAnalysis::compute(&g);
+        FusePass.run(&mut g, &a2).unwrap();
     }
 
     #[test]

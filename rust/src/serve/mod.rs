@@ -14,16 +14,31 @@
 //!   config, executor config); later requests instantiate the cached
 //!   `Arc<ExecPlan>`. Completed runs feed observed cardinalities back,
 //!   and drifted templates are **re-optimized in place** (a cache
-//!   *revision*, not an invalidation).
+//!   *revision*, not an invalidation). Eviction is cost-weighted
+//!   (decayed usage × compile cost), so hot or expensive templates
+//!   outlive cold, cheap ones.
 //! * **Persistent worker pools** (`exec::pool`): one [`WorkerPool`] per
 //!   job slot, threads resident across jobs; a job is a
 //!   message-delimited epoch, so per-job state isolation is structural
 //!   (nothing — including §7 `reuse_state` hash tables — survives an
 //!   epoch boundary).
+//! * **Cross-job preamble sharing**: the one deliberate, proven-safe
+//!   exception to absolute epoch isolation. Hoisted loop-invariant
+//!   preamble subgraphs (plus the entry-block inputs only they consume)
+//!   whose inputs are fully determined by the
+//!   template plus its bindings have their materialized bags cached per
+//!   `(template, revision, binding signature)` and **replayed** by
+//!   later identical submissions instead of recomputed
+//!   (`serve.preamble_hits`). Signatures match by exact dataset
+//!   identity/content, so any binding or registry content change
+//!   recomputes; a template revision drops the store.
 //! * **Admission queue**: `slots` concurrent lanes pull from a bounded
 //!   FIFO; overflow submissions are rejected immediately; jobs carry
 //!   optional deadlines (enforced while queued AND while running) and
-//!   can be canceled before they start.
+//!   can be canceled at any point before completion — queued jobs never
+//!   start, and a RUNNING job is aborted cooperatively within about one
+//!   superstep ([`JobTicket::cancel`]), leaving its pool clean for the
+//!   next job.
 //! * **Per-request parameter binding**: requests attach named datasets
 //!   and scalar parameters through a [`Registry::overlay`] — the cached
 //!   template is untouched; only the data the sources resolve changes.
@@ -46,7 +61,7 @@ pub mod bench;
 pub mod template;
 
 use crate::error::{Error, Result};
-use crate::exec::{driver, ExecConfig, ExecMode, RunOutput, WorkerPool};
+use crate::exec::{driver, ExecConfig, ExecMode, PreambleSharing, RunOutput, WorkerPool};
 use crate::frontend::{self, Program};
 use crate::metrics::Metrics;
 use crate::opt::OptConfig;
@@ -85,6 +100,9 @@ pub struct ServeConfig {
     pub adaptive: bool,
     /// Plan-template cache capacity.
     pub max_templates: usize,
+    /// Share materialized invariant-preamble bags across jobs whose
+    /// binding signatures match (see [`template::BindingSignature`]).
+    pub share_preambles: bool,
 }
 
 impl Default for ServeConfig {
@@ -100,6 +118,7 @@ impl Default for ServeConfig {
             opt: OptConfig::default(),
             adaptive: true,
             max_templates: 64,
+            share_preambles: true,
         }
     }
 }
@@ -214,8 +233,14 @@ impl JobTicket {
         self.id
     }
 
-    /// Request cancellation. Takes effect only while the job is still
-    /// queued; a running epoch completes (use deadlines to bound those).
+    /// Request cancellation, effective at any point before completion. A
+    /// job still in the admission queue is dropped before it starts; a
+    /// RUNNING job is aborted cooperatively — the driver polls the token
+    /// and every worker checks it at superstep/batch boundaries, so the
+    /// epoch unwinds within about one superstep and the slot's worker
+    /// pool is immediately reusable. The ticket resolves to an error
+    /// containing `"canceled"`. Canceling a job that already completed
+    /// is a no-op (its buffered result is still delivered).
     pub fn cancel(&self) {
         self.cancel.store(true, Ordering::SeqCst);
     }
@@ -502,6 +527,30 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
         _ => tpl.compile_time,
     };
 
+    // Cross-job preamble sharing: when the template has shareable
+    // invariant-preamble nodes, resolve the binding signature of the
+    // sources they read. An earlier submission with a MATCHING signature
+    // (exact — pointer or content equality, never a bare hash) has its
+    // materialized bags replayed; otherwise this epoch captures its own
+    // for later jobs. Both sides are skipped entirely for templates with
+    // nothing to share.
+    let mut preamble: Option<PreambleSharing> = None;
+    let mut capture: Option<(
+        template::BindingSignature,
+        Arc<std::sync::Mutex<Vec<(usize, usize, Vec<Value>)>>>,
+    )> = None;
+    if inner.cfg.share_preambles && tpl.has_shareable_preamble() {
+        let sig = template::BindingSignature::resolve(&tpl.plan, &overlay);
+        if let Some(bags) = tpl.preamble_for(&sig) {
+            inner.metrics.add("serve.preamble_hits", 1);
+            preamble = Some(PreambleSharing { replay: Some(bags), capture: None });
+        } else {
+            let sink = Arc::new(std::sync::Mutex::new(Vec::new()));
+            preamble = Some(PreambleSharing { replay: None, capture: Some(sink.clone()) });
+            capture = Some((sig, sink));
+        }
+    }
+
     // Run the cached plan as one epoch on this lane's warm pool.
     let run_cfg = ExecConfig {
         workers: inner.cfg.workers.max(1),
@@ -512,6 +561,8 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
         sched: None,
         registry: overlay,
         deadline: job.deadline,
+        cancel: Some(job.cancel.clone()),
+        preamble,
     };
     let epochs_before = pool.epochs();
     let result = driver::run_plan_on_pool(tpl.plan.clone(), &run_cfg, pool);
@@ -522,6 +573,14 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
             // build entirely when the service never revises.
             if inner.cfg.adaptive {
                 tpl.record_observed(&output);
+            }
+            // Store this epoch's materialized preamble bags (only a
+            // complete capture from a successful run is ever stored).
+            if let Some((sig, sink)) = capture {
+                let entries = std::mem::take(&mut *sink.lock().unwrap());
+                if let Some(bags) = template::assemble_preamble(&tpl.plan, entries) {
+                    tpl.store_preamble(sig, Arc::new(bags));
+                }
             }
             inner.metrics.add("serve.jobs_completed", 1);
             inner.metrics.record_time("serve.job_time", output.elapsed);
@@ -534,7 +593,18 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
             }));
         }
         Err(e) => {
-            inner.metrics.add("serve.jobs_failed", 1);
+            // A mid-run cancel is an expected outcome, not a failure. A
+            // cancel racing the deadline can surface under either abort
+            // reason (the driver checks the token and the clock on the
+            // same wakeup) — if the user canceled, both classify as
+            // canceled. Genuine failures (panics, compile errors) are
+            // never masked: only the TYPED abort variants qualify.
+            let aborted = matches!(e, Error::Canceled | Error::DeadlineExceeded);
+            if job.cancel.load(Ordering::SeqCst) && aborted {
+                inner.metrics.add("serve.jobs_canceled", 1);
+            } else {
+                inner.metrics.add("serve.jobs_failed", 1);
+            }
             let _ = job.reply.send(Err(e));
         }
     }

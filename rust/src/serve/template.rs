@@ -16,13 +16,32 @@
 //! next instantiation recompiles the template with the measured rows
 //! pinned into the cost model (`opt::optimize_with_feedback`). This is a
 //! cache **revision** — the entry stays resident, its revision counter
-//! increments — not an invalidation.
+//! increments — not an invalidation. Fused nodes carry a per-stage
+//! *lineage* of pre-fusion SSA names, so observations recorded against a
+//! fused operator still pin the corresponding nodes of the fresh
+//! (pre-fusion) graph on the recompile.
+//!
+//! **Cross-job preamble sharing**: templates whose plan contains
+//! binding-determined preamble nodes
+//! ([`crate::opt::analysis::binding_determined_preamble`]) keep a small
+//! per-template store of materialized preamble bags keyed by **binding
+//! signature** ([`BindingSignature`]: the datasets every named source in
+//! the preamble closure resolved to). A later job on the same template
+//! revision whose signature matches — Arc pointer equality per dataset
+//! when possible, exact content comparison otherwise, never a bare hash
+//! — replays those bags instead of recomputing the invariant subgraph.
+//! Invalidation is structural: a revision is a new `PlanTemplate` (empty
+//! store), and any registry / binding content change fails the match.
+//!
+//! **Eviction** is cost-weighted, not FIFO: see [`TemplateCache`].
 
+use crate::dataflow::{Node, NodeId};
 use crate::error::Result;
-use crate::exec::{ExecMode, ExecPlan, RunOutput};
-use crate::frontend::Program;
+use crate::exec::{ExecMode, ExecPlan, PreambleBags, RunOutput};
+use crate::frontend::{FusedStage, Program, Rhs};
 use crate::metrics::Metrics;
 use crate::opt::{OptConfig, RowFeedback, Speculate};
+use crate::value::Value;
 use crate::workload::registry::Registry;
 use rustc_hash::FxHashMap;
 use std::collections::VecDeque;
@@ -38,6 +57,16 @@ const MAX_REVISIONS: u32 = 8;
 /// Relative drift between an observed mean and the value the current
 /// revision was optimized with before a re-optimization is worth it.
 const DRIFT_THRESHOLD: f64 = 0.5;
+
+/// Half-life of the usage decay in the eviction score: a template's hit
+/// count loses half its weight per this much idle time, so a once-hot
+/// entry that went cold eventually loses to a steadily used one.
+const EVICT_HALF_LIFE: Duration = Duration::from_secs(60);
+
+/// Materialized preamble results retained per template (one per distinct
+/// binding signature). Small: the dominant serving pattern is one hot
+/// binding per template, and each entry holds full bags in memory.
+const PREAMBLE_CACHE_CAP: usize = 4;
 
 /// The cache key: program identity × optimizer config × executor config.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -118,12 +147,104 @@ pub struct PlanTemplate {
     /// Wall time of the compile that produced this revision.
     pub compile_time: Duration,
     observed: Mutex<ObservedStats>,
+    /// Requests served from this template (carried across revisions) —
+    /// the usage half of the cost-weighted eviction score.
+    uses: AtomicU64,
+    /// Last time a request resolved this template (eviction decay).
+    last_used: Mutex<Instant>,
+    /// Materialized invariant-preamble bags by binding signature
+    /// (cross-job sharing). A revision is a NEW `PlanTemplate`, so
+    /// revision invalidation is structural: this store starts empty.
+    preambles: Mutex<PreambleStore>,
+}
+
+#[derive(Default)]
+struct PreambleStore {
+    /// `(signature, bags)` in insertion order — matched by linear scan
+    /// (the bound is tiny) with exact signature comparison.
+    entries: VecDeque<(BindingSignature, Arc<PreambleBags>)>,
+}
+
+/// The resolved inputs a template's shareable preamble reads: each named
+/// source in the shareable closure paired with the dataset it resolved to
+/// through the request's registry overlay (request bindings and the
+/// service base registry both covered; `None` = unbound). Preamble
+/// results are stored and matched by **exact** signature — Arc pointer
+/// equality per dataset first (free for `bind_shared` / base-registry
+/// data), full content comparison otherwise — so, unlike a 64-bit
+/// fingerprint, a hash collision can never replay another tenant's bags;
+/// this is the same standard as the template cache's source-text
+/// collision guard. A stored signature holds `Arc`s to its datasets,
+/// keeping them alive for the (bounded) life of the store entry.
+/// Matching signatures on the same template revision imply equal
+/// preamble bags — UDFs are assumed pure, the optimizer's standing
+/// contract.
+#[derive(Clone, Debug)]
+pub struct BindingSignature {
+    sources: Vec<(String, Option<Arc<Vec<Value>>>)>,
+}
+
+impl BindingSignature {
+    /// Resolve the signature of `plan`'s shareable sources against a
+    /// request registry. O(#sources) Arc clones — no dataset content is
+    /// read here.
+    pub fn resolve(plan: &ExecPlan, registry: &Registry) -> BindingSignature {
+        BindingSignature {
+            sources: plan
+                .shareable_sources
+                .iter()
+                .map(|name| (name.clone(), registry.get(name)))
+                .collect(),
+        }
+    }
+
+    /// Exact equality, with a pointer fast path per dataset. Content
+    /// comparison only runs for datasets re-bound as fresh allocations —
+    /// the same order of work the request already paid to build them,
+    /// and it exits on the first difference.
+    fn matches(&self, other: &BindingSignature) -> bool {
+        self.sources.len() == other.sources.len()
+            && self.sources.iter().zip(&other.sources).all(|((an, ad), (bn, bd))| {
+                an == bn
+                    && match (ad, bd) {
+                        (None, None) => true,
+                        (Some(a), Some(b)) => Arc::ptr_eq(a, b) || a == b,
+                        _ => false,
+                    }
+            })
+    }
+}
+
+/// Insert `rows` for `n` into a feedback map — and, for fused chains, map
+/// the value back onto the **pre-fusion** SSA names via the stage
+/// lineage. Only 1:1 (`Map`) stages can be inverted: walking backward
+/// from the output, a `Map` stage's input cardinality equals its output
+/// cardinality, so every lineage name from the tail back to (and
+/// including) the first non-`Map` boundary gets the same row count; past
+/// that the walk stops (filter/flatMap cardinalities are not invertible).
+/// Without this, interior chain members would reach an adaptive recompile
+/// (whose fresh graph is pre-fusion) with only model guesses.
+fn insert_with_fused_lineage(m: &mut RowFeedback, n: &Node, rows: f64) {
+    m.insert(n.name.clone(), rows);
+    if let Rhs::Fused { stages, lineage, .. } = &n.op {
+        for i in (0..stages.len()).rev() {
+            if let Some(name) = lineage.get(i) {
+                m.insert(name.clone(), rows);
+            }
+            if !matches!(stages[i], FusedStage::Map(_)) {
+                break;
+            }
+        }
+    }
 }
 
 impl PlanTemplate {
     /// Record observed per-node output cardinalities from a completed run
     /// (mean rows per **logical** bag: totals are summed across
-    /// instances, bag counts are per instance).
+    /// instances, bag counts are per instance). Fused nodes additionally
+    /// record under their pre-fusion lineage names (see
+    /// `insert_with_fused_lineage`) so the stats survive fusion into
+    /// the next recompile.
     pub fn record_observed(&self, out: &RunOutput) {
         let g = &self.plan.graph;
         let mut m: RowFeedback = FxHashMap::default();
@@ -133,7 +254,7 @@ impl PlanTemplate {
                 continue;
             }
             let insts = self.plan.num_insts[n.id] as f64;
-            m.insert(n.name.clone(), (s.rows as f64) * insts / (s.bags as f64));
+            insert_with_fused_lineage(&mut m, n, (s.rows as f64) * insts / (s.bags as f64));
         }
         if !m.is_empty() {
             self.observed.lock().unwrap().latest = Some(m);
@@ -144,6 +265,94 @@ impl PlanTemplate {
     pub fn observed_rows(&self, name: &str) -> Option<f64> {
         self.observed.lock().unwrap().latest.as_ref().and_then(|m| m.get(name).copied())
     }
+
+    /// Does this template's plan contain any node whose preamble bag may
+    /// be shared across jobs?
+    pub fn has_shareable_preamble(&self) -> bool {
+        self.plan.shareable.iter().any(|&s| s)
+    }
+
+    /// Materialized preamble bags whose binding signature exactly
+    /// matches, if cached. A hit promotes the entry to most-recent, so
+    /// eviction is LRU: rotating through more than `PREAMBLE_CACHE_CAP`
+    /// distinct bindings cannot starve a steadily-hit one.
+    pub fn preamble_for(&self, sig: &BindingSignature) -> Option<Arc<PreambleBags>> {
+        let mut st = self.preambles.lock().unwrap();
+        let idx = st.entries.iter().position(|(s, _)| s.matches(sig))?;
+        let entry = st.entries.remove(idx).expect("matched index is in bounds");
+        let bags = entry.1.clone();
+        st.entries.push_back(entry);
+        Some(bags)
+    }
+
+    /// Store materialized preamble bags under a binding signature
+    /// (bounded at `PREAMBLE_CACHE_CAP` entries, least-recently-matched
+    /// out first; a matching signature is replaced in place).
+    pub fn store_preamble(&self, sig: BindingSignature, bags: Arc<PreambleBags>) {
+        let mut st = self.preambles.lock().unwrap();
+        if let Some(entry) = st.entries.iter_mut().find(|(s, _)| s.matches(&sig)) {
+            entry.1 = bags;
+            return;
+        }
+        st.entries.push_back((sig, bags));
+        if st.entries.len() > PREAMBLE_CACHE_CAP {
+            st.entries.pop_front();
+        }
+    }
+
+    /// Cached preamble results resident for this template (tests).
+    pub fn preamble_entries(&self) -> usize {
+        self.preambles.lock().unwrap().entries.len()
+    }
+
+    /// Bump the usage counters consulted by cost-weighted eviction.
+    fn touch(&self) {
+        self.uses.fetch_add(1, Ordering::Relaxed);
+        *self.last_used.lock().unwrap() = Instant::now();
+    }
+}
+
+/// Assemble per-instance capture-sink entries into [`PreambleBags`],
+/// validating completeness: every shareable node must have every physical
+/// instance's bag reported exactly once (an epoch whose control flow
+/// skipped a preamble, or a partial capture, yields `None` and nothing is
+/// stored). Exposed to `serve::execute_one`.
+pub(crate) fn assemble_preamble(
+    plan: &ExecPlan,
+    entries: Vec<(NodeId, usize, Vec<Value>)>,
+) -> Option<PreambleBags> {
+    let mut slots: FxHashMap<NodeId, Vec<Option<Vec<Value>>>> = FxHashMap::default();
+    for (node, inst, items) in entries {
+        if node >= plan.shareable.len() || !plan.shareable[node] {
+            return None;
+        }
+        let per = slots.entry(node).or_insert_with(|| vec![None; plan.num_insts[node]]);
+        if inst >= per.len() || per[inst].is_some() {
+            return None;
+        }
+        per[inst] = Some(items);
+    }
+    for (id, &s) in plan.shareable.iter().enumerate() {
+        if s && !slots.get(&id).map_or(false, |per| per.iter().all(|o| o.is_some())) {
+            return None;
+        }
+    }
+    Some(
+        slots
+            .into_iter()
+            .map(|(id, per)| (id, per.into_iter().map(|o| o.unwrap_or_default()).collect()))
+            .collect(),
+    )
+}
+
+/// The cost-weighted eviction score: decayed usage × compile cost. Low
+/// score = cheap to lose — rarely used, long idle, or trivial to
+/// recompile. Floors keep a never-hit or instant-compile entry from
+/// scoring exactly zero (ties then still order by the other factor).
+fn eviction_score(uses: u64, idle: Duration, compile: Duration) -> f64 {
+    let decayed = (uses as f64)
+        * 0.5_f64.powf(idle.as_secs_f64() / EVICT_HALF_LIFE.as_secs_f64());
+    decayed.max(1e-3) * compile.as_secs_f64().max(1e-6)
 }
 
 fn drifted(latest: &RowFeedback, based_on: Option<&RowFeedback>) -> bool {
@@ -171,28 +380,32 @@ pub enum CacheOutcome {
 
 struct CacheMap {
     map: FxHashMap<TemplateKey, Arc<PlanTemplate>>,
-    /// Insertion order for FIFO eviction.
-    order: VecDeque<TemplateKey>,
 }
 
-/// The template cache: bounded, thread-safe, revision-aware.
+/// The template cache: bounded, thread-safe, revision-aware. Eviction is
+/// **cost-weighted** (not FIFO): when full, the entry with the lowest
+/// `eviction_score` — time-decayed hit count × measured compile
+/// latency — is dropped, so a hot or expensive-to-rebuild template
+/// outlives a cold, cheap one regardless of insertion order.
 pub struct TemplateCache {
     inner: Mutex<CacheMap>,
     cap: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     revisions: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl TemplateCache {
     /// Create a cache holding at most `cap` templates (min 1).
     pub fn new(cap: usize) -> TemplateCache {
         TemplateCache {
-            inner: Mutex::new(CacheMap { map: FxHashMap::default(), order: VecDeque::new() }),
+            inner: Mutex::new(CacheMap { map: FxHashMap::default() }),
             cap: cap.max(1),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             revisions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
     }
 
@@ -207,6 +420,10 @@ impl TemplateCache {
     /// Adaptive revisions so far.
     pub fn revisions(&self) -> u64 {
         self.revisions.load(Ordering::Relaxed)
+    }
+    /// Cost-weighted evictions so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
     /// Resident templates.
     pub fn len(&self) -> usize {
@@ -223,6 +440,7 @@ impl TemplateCache {
         m.counter("serve.cache_misses").store(self.misses(), Ordering::Relaxed);
         m.counter("serve.cache_revisions").store(self.revisions(), Ordering::Relaxed);
         m.counter("serve.cache_templates").store(self.len() as u64, Ordering::Relaxed);
+        m.counter("serve.evictions_cost_weighted").store(self.evictions(), Ordering::Relaxed);
     }
 
     /// Look up (or compile) the template for `key`. `source` is the
@@ -259,6 +477,7 @@ impl TemplateCache {
         if let Some(tpl) = cached {
             if !collided(&tpl) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                tpl.touch();
                 if adaptive {
                     if let Some(revised) = self.maybe_revise(&tpl, workers, registry) {
                         return Ok((revised, CacheOutcome::Revised));
@@ -284,7 +503,10 @@ impl TemplateCache {
             let mut m: RowFeedback = FxHashMap::default();
             for n in &graph.nodes {
                 if !n.singleton {
-                    m.insert(n.name.clone(), rows[n.id]);
+                    // Lineage names get the same backward-walk attribution
+                    // as `record_observed`, so observed-vs-baseline drift
+                    // comparison stays symmetric for fused chains.
+                    insert_with_fused_lineage(&mut m, n, rows[n.id]);
                 }
             }
             m
@@ -299,15 +521,19 @@ impl TemplateCache {
             revision: 0,
             compile_time: t0.elapsed(),
             observed: Mutex::new(ObservedStats { latest: None, based_on: Some(baseline) }),
+            uses: AtomicU64::new(1),
+            last_used: Mutex::new(Instant::now()),
+            preambles: Mutex::new(PreambleStore::default()),
         });
         let mut inner = self.inner.lock().unwrap();
         match inner.map.get(&key).cloned() {
             // Raced: someone else compiled the same program meanwhile.
             Some(existing) if !collided(&existing) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                existing.touch();
                 return Ok((existing, CacheOutcome::Hit));
             }
-            // Collision overwrite: the key stays in `order` exactly once.
+            // Collision overwrite: replaces the resident entry in place.
             Some(_) => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 inner.map.insert(key, tpl.clone());
@@ -317,12 +543,25 @@ impl TemplateCache {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         if inner.map.len() >= self.cap {
-            if let Some(victim) = inner.order.pop_front() {
-                inner.map.remove(&victim);
+            // Cost-weighted eviction: drop the entry with the lowest
+            // decayed-usage × compile-cost score. O(cap) scan — the cap
+            // is small and eviction is off the hit path.
+            let now = Instant::now();
+            let victim = inner
+                .map
+                .iter()
+                .map(|(k, t)| {
+                    let idle = now.saturating_duration_since(*t.last_used.lock().unwrap());
+                    (eviction_score(t.uses.load(Ordering::Relaxed), idle, t.compile_time), *k)
+                })
+                .min_by(|a, b| a.0.total_cmp(&b.0))
+                .map(|(_, k)| k);
+            if let Some(v) = victim {
+                inner.map.remove(&v);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
         inner.map.insert(key, tpl.clone());
-        inner.order.push_back(key);
         Ok((tpl, CacheOutcome::Miss))
     }
 
@@ -364,6 +603,14 @@ impl TemplateCache {
             revision: tpl.revision + 1,
             compile_time: t0.elapsed(),
             observed: Mutex::new(ObservedStats { latest: None, based_on: Some(latest) }),
+            // Usage history survives the revision (the entry is the same
+            // logical template for eviction purposes)...
+            uses: AtomicU64::new(tpl.uses.load(Ordering::Relaxed)),
+            last_used: Mutex::new(*tpl.last_used.lock().unwrap()),
+            // ...but materialized preamble results do NOT: the revised
+            // plan may partition, hoist, or fuse differently, so every
+            // cached bag is invalid for it.
+            preambles: Mutex::new(PreambleStore::default()),
         });
         // Mark the old entry as revised-from so a racing lane that still
         // holds it does not immediately revise again.
@@ -371,10 +618,10 @@ impl TemplateCache {
         drop(obs);
         self.revisions.fetch_add(1, Ordering::Relaxed);
         // Swap the cache entry in place — but only if the key is still
-        // resident. Re-inserting after a concurrent eviction would create
-        // an entry with no `order` slot: unevictable forever, silently
-        // breaking the capacity bound. An evicted template's revision
-        // still serves THIS request; the next one recompiles.
+        // resident. Re-inserting after a concurrent eviction would exceed
+        // the capacity bound (the insert path only evicts on misses). An
+        // evicted template's revision still serves THIS request; the next
+        // one recompiles.
         let mut inner = self.inner.lock().unwrap();
         if inner.map.contains_key(&tpl.key) {
             inner.map.insert(tpl.key, revised.clone());
@@ -437,7 +684,7 @@ mod tests {
     }
 
     #[test]
-    fn capacity_evicts_fifo() {
+    fn capacity_bound_holds_and_evictions_are_counted() {
         let cache = TemplateCache::new(1);
         let reg = Registry::new();
         let opt = OptConfig::default();
@@ -452,7 +699,8 @@ mod tests {
                 parse_and_lower(src2)
             })
             .unwrap();
-        assert_eq!(cache.len(), 1, "capacity 1 evicts the older entry");
+        assert_eq!(cache.len(), 1, "capacity 1 keeps exactly one entry");
+        assert_eq!(cache.evictions(), 1);
         // The evicted key misses again.
         let (_, o) = cache
             .get_or_compile(key_for(SRC, &opt), Some(SRC), &opt, 2, &reg, false, || {
@@ -460,6 +708,58 @@ mod tests {
             })
             .unwrap();
         assert_eq!(o, CacheOutcome::Miss);
+    }
+
+    #[test]
+    fn eviction_prefers_cold_entries_over_hot_ones() {
+        // FIFO would evict the OLDEST entry; the cost-weighted policy
+        // must instead evict the entry with the least (decayed) usage.
+        let cache = TemplateCache::new(2);
+        let reg = Registry::new();
+        let opt = OptConfig::default();
+        let hot = SRC;
+        let cold = "a = bag(9); collect(a, \"a\");";
+        let newer = "z = bag(4, 5); collect(z, \"z\");";
+        let compile = |src: &str| {
+            cache
+                .get_or_compile(key_for(src, &opt), Some(src), &opt, 2, &reg, false, || {
+                    parse_and_lower(src)
+                })
+                .unwrap()
+        };
+        compile(hot); // oldest entry...
+        for _ in 0..10 {
+            let (_, o) = compile(hot); // ...but heavily used
+            assert_eq!(o, CacheOutcome::Hit);
+        }
+        compile(cold);
+        compile(newer); // cache full: someone must go
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        let (_, o) = compile(hot);
+        assert_eq!(o, CacheOutcome::Hit, "the hot entry survived despite being oldest");
+        let (_, o) = compile(cold);
+        assert_eq!(o, CacheOutcome::Miss, "the cold entry was the victim");
+    }
+
+    #[test]
+    fn eviction_score_orders_by_usage_decay_and_compile_cost() {
+        let c = Duration::from_millis(10);
+        // More usage, same idle/compile → higher score.
+        assert!(eviction_score(10, Duration::ZERO, c) > eviction_score(1, Duration::ZERO, c));
+        // Longer idle decays the same usage.
+        assert!(
+            eviction_score(8, Duration::from_secs(600), c) < eviction_score(8, Duration::ZERO, c)
+        );
+        // A compile 100x more expensive outweighs equal usage.
+        assert!(
+            eviction_score(2, Duration::ZERO, Duration::from_millis(1000))
+                > eviction_score(2, Duration::ZERO, c)
+        );
+        // Decay is a half-life: one half-life halves the weight.
+        let full = eviction_score(4, Duration::ZERO, c);
+        let halved = eviction_score(4, EVICT_HALF_LIFE, c);
+        assert!((halved / full - 0.5).abs() < 1e-6);
     }
 
     #[test]
@@ -482,6 +782,137 @@ mod tests {
         assert_eq!(tpl.source.as_deref(), Some(other));
         assert_eq!(cache.len(), 1, "overwrite, not a duplicate entry");
         assert_eq!(cache.misses(), 2);
+    }
+
+    fn sig_of(n: i64) -> BindingSignature {
+        use crate::value::Value;
+        BindingSignature {
+            sources: vec![("k".to_string(), Some(Arc::new(vec![Value::I64(n)])))],
+        }
+    }
+
+    #[test]
+    fn preamble_store_is_bounded_and_replaces_matching_signatures() {
+        let cache = TemplateCache::new(4);
+        let reg = Registry::new();
+        let opt = OptConfig::default();
+        let (tpl, _) = cache
+            .get_or_compile(key_for(SRC, &opt), Some(SRC), &opt, 2, &reg, false, || {
+                parse_and_lower(SRC)
+            })
+            .unwrap();
+        assert!(tpl.preamble_for(&sig_of(1)).is_none());
+        let n_sigs = PREAMBLE_CACHE_CAP as i64 + 3;
+        for b in 0..n_sigs {
+            tpl.store_preamble(sig_of(b), Arc::new(PreambleBags::default()));
+        }
+        assert!(tpl.preamble_entries() <= PREAMBLE_CACHE_CAP, "store stays bounded");
+        assert!(tpl.preamble_for(&sig_of(n_sigs - 1)).is_some(), "latest entry resident");
+        assert!(tpl.preamble_for(&sig_of(0)).is_none(), "oldest entry evicted");
+        // Re-storing a matching signature replaces in place, no growth.
+        let before = tpl.preamble_entries();
+        tpl.store_preamble(sig_of(n_sigs - 1), Arc::new(PreambleBags::default()));
+        assert_eq!(tpl.preamble_entries(), before);
+        // LRU promotion: matching the oldest resident entry makes it the
+        // most recent, so the NEXT insertion evicts its neighbor instead.
+        let oldest_resident = n_sigs - PREAMBLE_CACHE_CAP as i64;
+        assert!(tpl.preamble_for(&sig_of(oldest_resident)).is_some());
+        tpl.store_preamble(sig_of(n_sigs), Arc::new(PreambleBags::default()));
+        assert!(
+            tpl.preamble_for(&sig_of(oldest_resident)).is_some(),
+            "a steadily-hit signature survives rotation"
+        );
+        assert!(
+            tpl.preamble_for(&sig_of(oldest_resident + 1)).is_none(),
+            "the least-recently-matched entry was the victim"
+        );
+    }
+
+    #[test]
+    fn binding_signature_matches_content_not_allocation_identity() {
+        use crate::value::Value;
+        crate::workload::registry::global().put(
+            "tplfp_src",
+            vec![Value::I64(1), Value::I64(2)],
+        );
+        let g = crate::compile_source(
+            "d = 1; while (d <= 3) { v = source(\"tplfp_src\").map(|x| x + 1); collect(v, \"v\"); d = d + 1; }",
+        )
+        .unwrap();
+        crate::workload::registry::global().clear_prefix("tplfp_src");
+        let plan = ExecPlan::new(Arc::new(g), 2);
+        assert!(plan.shareable.iter().any(|&s| s), "premise: chain hoisted + shareable");
+        let reg_a = Registry::new();
+        reg_a.put("tplfp_src", vec![Value::I64(1), Value::I64(2)]);
+        let reg_a2 = Registry::new();
+        reg_a2.put("tplfp_src", vec![Value::I64(1), Value::I64(2)]);
+        let reg_b = Registry::new();
+        reg_b.put("tplfp_src", vec![Value::I64(1), Value::I64(3)]);
+        let reg_missing = Registry::new();
+        let sig_a = BindingSignature::resolve(&plan, &reg_a);
+        assert!(
+            sig_a.matches(&BindingSignature::resolve(&plan, &reg_a)),
+            "same registry (pointer-equal datasets) matches"
+        );
+        assert!(
+            sig_a.matches(&BindingSignature::resolve(&plan, &reg_a2)),
+            "equal content in a different allocation matches"
+        );
+        assert!(
+            !sig_a.matches(&BindingSignature::resolve(&plan, &reg_b)),
+            "content change must not match"
+        );
+        assert!(
+            !sig_a.matches(&BindingSignature::resolve(&plan, &reg_missing)),
+            "unbound source must not match a bound one"
+        );
+    }
+
+    #[test]
+    fn observed_rows_map_back_through_fused_lineage() {
+        // filter → map fuses into one node (named after the tail). After
+        // a real run, the recorded feedback must contain the PRE-fusion
+        // names too: the tail's observed output attributed to the map,
+        // and — via the 1:1 backward walk — to the filter as well.
+        let src = "a = bag(1, 2, 3, 4); f = a.filter(|x| x >= 0); m = f.map(|x| x * 2); k = m.map(|x| pair(x % 3, x)); o = k.reduceByKey(|p, q| p + q); collect(o, \"o\");";
+        // Pre-fusion names of the chain members.
+        let (raw, _) =
+            crate::compile_with(&parse_and_lower(src).unwrap(), &OptConfig::none()).unwrap();
+        let f_name = raw
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, crate::frontend::Rhs::Filter { .. }))
+            .unwrap()
+            .name
+            .clone();
+        let cache = TemplateCache::new(4);
+        let reg = Registry::new();
+        let opt = OptConfig::default();
+        let (tpl, _) = cache
+            .get_or_compile(key_for(src, &opt), Some(src), &opt, 2, &reg, false, || {
+                parse_and_lower(src)
+            })
+            .unwrap();
+        let fused = tpl
+            .plan
+            .graph
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, crate::frontend::Rhs::Fused { .. }))
+            .expect("filter/map chain fused");
+        let out = crate::exec::driver::run_plan(
+            tpl.plan.clone(),
+            &crate::exec::ExecConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert!(!out.collected("o").is_empty());
+        tpl.record_observed(&out);
+        let fused_rows = tpl.observed_rows(&fused.name).expect("fused node observed");
+        assert_eq!(
+            tpl.observed_rows(&f_name),
+            Some(fused_rows),
+            "filter's pre-fusion name carries the fused observation (maps are 1:1)"
+        );
     }
 
     #[test]

@@ -282,6 +282,85 @@ fn canceled_queued_job_never_runs() {
     assert_eq!(svc.metrics().get("serve.jobs_canceled"), 1);
 }
 
+/// A program that runs for tens of seconds if nothing aborts it (the
+/// deadline test's 2M-iteration loop already exceeds 150ms by orders of
+/// magnitude; 20M bounds the no-abort runtime well past every assertion
+/// window below).
+const VERY_LONG: &str = "d = 1; while (d <= 20000000) { d = d + 1; } collect(bag(1), \"x\");";
+
+/// Wait (bounded) until the service has picked the job up off the queue.
+fn wait_until_running(svc: &JobService) {
+    let t0 = std::time::Instant::now();
+    while svc.busy_slots() == 0 || svc.queue_depth() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "job never started running");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn cancel_mid_run_aborts_promptly_and_pool_is_reusable() {
+    let svc = JobService::new(ServeConfig { slots: 1, workers: 2, ..Default::default() });
+    let ticket = svc.submit(JobRequest::source(VERY_LONG)).unwrap();
+    wait_until_running(&svc);
+    // Give the epoch a moment of real execution before pulling the plug.
+    std::thread::sleep(Duration::from_millis(50));
+    let t0 = std::time::Instant::now();
+    ticket.cancel();
+    let err = ticket.wait().unwrap_err();
+    let abort_latency = t0.elapsed();
+    assert!(err.to_string().contains("canceled"), "{err}");
+    // Cooperative abort is bounded by a superstep + the driver's cancel
+    // poll — far below the tens of seconds the loop would otherwise run.
+    assert!(
+        abort_latency < Duration::from_secs(5),
+        "cancel took {abort_latency:?}; mid-run cancel is not taking effect"
+    );
+    assert_eq!(svc.metrics().get("serve.jobs_canceled"), 1);
+    // The same slot (and its resident pool) serves the next job cleanly.
+    let ok = svc.run(JobRequest::source("collect(bag(3), \"z\");")).unwrap();
+    assert_eq!(ok.output.collected("z"), &[Value::I64(3)]);
+}
+
+#[test]
+fn cancel_after_completion_is_a_noop() {
+    let svc = JobService::new(ServeConfig { slots: 1, workers: 2, ..Default::default() });
+    let ticket = svc.submit(JobRequest::source("collect(bag(4), \"done\");")).unwrap();
+    // Let the job finish (result parked in the ticket's channel).
+    let t0 = std::time::Instant::now();
+    while svc.busy_slots() > 0 || svc.queue_depth() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "quick job never finished");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    ticket.cancel();
+    let res = ticket.wait().expect("cancel after completion must not void the result");
+    assert_eq!(res.output.collected("done"), &[Value::I64(4)]);
+    assert_eq!(svc.metrics().get("serve.jobs_canceled"), 0);
+    // Service unaffected.
+    assert!(svc.run(JobRequest::source("collect(bag(5), \"ok\");")).is_ok());
+}
+
+#[test]
+fn deadline_firing_while_canceling_still_tears_down_cleanly() {
+    let svc = JobService::new(ServeConfig { slots: 1, workers: 2, ..Default::default() });
+    let ticket = svc
+        .submit(JobRequest::source(VERY_LONG).deadline(Duration::from_millis(120)))
+        .unwrap();
+    wait_until_running(&svc);
+    // Cancel right around when the deadline fires: whichever path wins,
+    // the job must abort with a clean teardown.
+    std::thread::sleep(Duration::from_millis(100));
+    ticket.cancel();
+    let err = ticket.wait().unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("canceled") || msg.contains("deadline"),
+        "unexpected abort reason: {msg}"
+    );
+    // The pool survived the racing aborts and serves the next job.
+    let ok = svc.run(JobRequest::source("collect(bag(6), \"after\");")).unwrap();
+    assert_eq!(ok.output.collected("after"), &[Value::I64(6)]);
+}
+
 #[test]
 fn deadline_bounds_a_running_job() {
     let svc = JobService::new(ServeConfig { slots: 1, workers: 2, ..Default::default() });
@@ -299,4 +378,176 @@ fn deadline_bounds_a_running_job() {
     assert!(err.to_string().contains("deadline"), "{err}");
     let ok = svc.run(JobRequest::source("collect(bag(3), \"z\");")).unwrap();
     assert_eq!(ok.output.collected("z"), &[Value::I64(3)]);
+}
+
+/// Loop with an invariant (hoistable, binding-determined) lookup chain
+/// and a varying probe side — the cross-job preamble-sharing shape.
+const PREAMBLE_SRC: &str = r#"
+    d = 1;
+    while (d <= 3) {
+        attrs = source("pre_attrs").map(|x| pair(x % 8, x));
+        v = source("pre_probe").map(|x| pair(x % 8, d));
+        j = v.join(attrs);
+        t = j.map(|p| snd(snd(p)));
+        collect(t, "out");
+        d = d + 1;
+    }
+"#;
+
+fn preamble_oracle(attrs: Vec<Value>, probe: Vec<Value>) -> Vec<Value> {
+    let reg = Arc::new(labyrinth::workload::registry::Registry::new());
+    reg.put("pre_attrs", attrs);
+    reg.put("pre_probe", probe);
+    let program = labyrinth::frontend::parse_and_lower(PREAMBLE_SRC).unwrap();
+    let (graph, _) = labyrinth::compile_with_registry(
+        &program,
+        &labyrinth::opt::OptConfig::default(),
+        &reg,
+    )
+    .unwrap();
+    let out = labyrinth::exec::run(
+        &graph,
+        &ExecConfig { workers: 2, registry: reg, ..Default::default() },
+    )
+    .unwrap();
+    let mut got = out.collected("out").to_vec();
+    got.sort();
+    got
+}
+
+#[test]
+fn preamble_sharing_replays_identical_bindings_and_recomputes_changed_ones() {
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        adaptive: false, // keep the template at revision 0 for this test
+        ..Default::default()
+    });
+    // Same join keys (x % 8) under both bindings, different payloads —
+    // a stale replay of tenant A's bags would be VISIBLE in B's output.
+    let attrs_a: Vec<Value> = (0..8).map(Value::I64).collect();
+    let attrs_b: Vec<Value> = (96..104).map(Value::I64).collect();
+    let probe: Vec<Value> = (0..16).map(Value::I64).collect();
+    let run_with = |attrs: &[Value]| -> Vec<Value> {
+        let res = svc
+            .run(
+                JobRequest::source(PREAMBLE_SRC)
+                    .bind("pre_attrs", attrs.to_vec())
+                    .bind("pre_probe", probe.clone()),
+            )
+            .unwrap();
+        let mut got = res.output.collected("out").to_vec();
+        got.sort();
+        got
+    };
+    let want_a = preamble_oracle(attrs_a.clone(), probe.clone());
+    let want_b = preamble_oracle(attrs_b.clone(), probe.clone());
+    assert_ne!(want_a, want_b, "test premise: the binding change is observable");
+
+    // First submission materializes; the identical second one replays.
+    assert_eq!(run_with(&attrs_a), want_a);
+    assert_eq!(svc.metrics().get("serve.preamble_hits"), 0);
+    assert_eq!(run_with(&attrs_a), want_a, "replayed run must be byte-identical");
+    assert_eq!(svc.metrics().get("serve.preamble_hits"), 1);
+
+    // A changed binding signature must NOT replay tenant A's bags.
+    assert_eq!(run_with(&attrs_b), want_b, "changed bindings must recompute");
+    assert_eq!(svc.metrics().get("serve.preamble_hits"), 1);
+
+    // Both fingerprints are now materialized; each replays its own.
+    assert_eq!(run_with(&attrs_a), want_a);
+    assert_eq!(run_with(&attrs_b), want_b);
+    assert_eq!(svc.metrics().get("serve.preamble_hits"), 3);
+}
+
+#[test]
+fn preamble_sharing_can_be_disabled() {
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        adaptive: false,
+        share_preambles: false,
+        ..Default::default()
+    });
+    let attrs: Vec<Value> = (0..8).map(Value::I64).collect();
+    let probe: Vec<Value> = (0..16).map(Value::I64).collect();
+    for _ in 0..2 {
+        let res = svc
+            .run(
+                JobRequest::source(PREAMBLE_SRC)
+                    .bind("pre_attrs", attrs.clone())
+                    .bind("pre_probe", probe.clone()),
+            )
+            .unwrap();
+        assert!(!res.output.collected("out").is_empty());
+    }
+    assert_eq!(svc.metrics().get("serve.preamble_hits"), 0);
+}
+
+#[test]
+fn adaptive_revision_invalidates_shared_preambles() {
+    // With adaptive on, the second identical submission usually revises
+    // (observed rows vs model guesses). A revision is a NEW template —
+    // its preamble store must start empty, so the run after a revision
+    // re-materializes instead of replaying a stale plan's bags (node ids
+    // shift under re-optimization).
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        adaptive: true,
+        ..Default::default()
+    });
+    let attrs: Vec<Value> = (0..8).map(Value::I64).collect();
+    let probe: Vec<Value> = (0..16).map(Value::I64).collect();
+    let want = preamble_oracle(attrs.clone(), probe.clone());
+    for i in 0..4 {
+        let res = svc
+            .run(
+                JobRequest::source(PREAMBLE_SRC)
+                    .bind("pre_attrs", attrs.clone())
+                    .bind("pre_probe", probe.clone()),
+            )
+            .unwrap();
+        let mut got = res.output.collected("out").to_vec();
+        got.sort();
+        assert_eq!(got, want, "submission {i} (cache {:?})", res.cache);
+    }
+}
+
+#[test]
+fn fused_feedback_reaches_recompile_and_converges() {
+    // The filter keeps everything (vs the 0.25 static guess) and fuses
+    // with the downstream map. The revision must see the observed rows
+    // pinned onto BOTH pre-fusion nodes (lineage back-mapping), and the
+    // revised template must converge — no revision oscillation.
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        adaptive: true,
+        ..Default::default()
+    });
+    let src = "v = source(\"fusefb_data\"); f = v.filter(|x| x >= 0); k = f.map(|x| pair(x % 4, x)); o = k.reduceByKey(|a, b| a + b); collect(o, \"out\");";
+    let data = || dataset(0, 64);
+    let want = one_shot(src, data(), 2);
+
+    let r1 = svc.run(JobRequest::source(src).bind("fusefb_data", data())).unwrap();
+    assert_eq!(r1.cache, CacheOutcome::Miss);
+    let r2 = svc.run(JobRequest::source(src).bind("fusefb_data", data())).unwrap();
+    assert_eq!(r2.cache, CacheOutcome::Revised, "drifted stats trigger a revision");
+    // The revised compile ran with feedback: the fused chain's observed
+    // rows were pinned under the pre-fusion names (filter AND map), not
+    // just the surviving tail — `opt.feedback_rows_pinned` counts pinned
+    // nodes on the FRESH (pre-fusion) graph.
+    assert!(
+        r2.output.metrics.get("opt.feedback_rows_pinned") >= 2,
+        "interior chain members' stats must survive fusion into the recompile (got {})",
+        r2.output.metrics.get("opt.feedback_rows_pinned")
+    );
+    for r in [r1, r2] {
+        let mut got = r.output.collected("out").to_vec();
+        got.sort();
+        assert_eq!(got, want, "revisions preserve semantics");
+    }
+    let r3 = svc.run(JobRequest::source(src).bind("fusefb_data", data())).unwrap();
+    assert_eq!(r3.cache, CacheOutcome::Hit, "fused template converges under feedback");
 }
