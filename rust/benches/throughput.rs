@@ -1,0 +1,13 @@
+//! Data-plane throughput: elements/sec for map, the fused map/filter
+//! chain, flatMap, hash-join probe, and reduceByKey at workers ∈
+//! {1, 2, 4}, plus the batched-vs-element-path before/after series.
+//!
+//! Acceptance target: the batched fused chain sustains ≥ 2x the
+//! elements/sec of the legacy element-at-a-time path (recorded in
+//! `BENCH_throughput.json`). `LABY_BENCH_QUICK=1` shrinks all counts
+//! (CI smoke).
+
+fn main() {
+    let smoke = std::env::var("LABY_BENCH_QUICK").ok().as_deref() == Some("1");
+    labyrinth::bench_throughput::throughput_benchmark(smoke);
+}

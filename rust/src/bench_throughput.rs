@@ -1,0 +1,248 @@
+//! `bench-throughput` — data-plane throughput in **elements per second**
+//! for the hot operator kernels (map, fused map/filter chain, hash-join
+//! probe, reduceByKey) at worker counts {1, 2, 4}, plus a before/after
+//! series pitting the batched `Transformation` interface against the
+//! legacy element-at-a-time path (`ExecConfig::element_path`).
+//!
+//! Programs are built with the Rust builder frontend (native-closure
+//! UDFs), so the numbers measure the data plane — per-element dispatch,
+//! cloning, routing — rather than LabyLang expression interpretation.
+//!
+//! Results print as a paper-style table and are recorded in
+//! `BENCH_throughput.json` (the perf trajectory's seed file). Run via
+//! `labyrinth bench-throughput [--smoke]` or
+//! `cargo bench --bench throughput` (`LABY_BENCH_QUICK=1` for CI smoke).
+
+use crate::bench_harness::{Bencher, Table};
+use crate::exec::{run, ExecConfig};
+use crate::frontend::builder::{udf1, udf2, ProgramBuilder};
+use crate::frontend::{Program, UdfN};
+use crate::opt::OptConfig;
+use crate::value::Value;
+use crate::workload::registry::Registry;
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+/// One measured point.
+struct Point {
+    workload: &'static str,
+    workers: usize,
+    /// Median wall time of one full run, nanoseconds.
+    median_ns: u128,
+    /// Source elements processed per second (input cardinality / median).
+    elems_per_sec: f64,
+    /// Legacy element-at-a-time data plane?
+    element_path: bool,
+}
+
+fn map_program() -> Program {
+    let mut b = ProgramBuilder::new();
+    let v = b.named_source("tp_data");
+    let m = b.map(v, udf1(|x| Value::I64(x.as_i64().wrapping_mul(3))));
+    let n = b.count(m);
+    let nb = b.lift_scalar(n);
+    b.collect(nb, "n");
+    b.finish()
+}
+
+fn fused_chain_program() -> Program {
+    let mut b = ProgramBuilder::new();
+    let v = b.named_source("tp_data");
+    let m1 = b.map(v, udf1(|x| Value::I64(x.as_i64() + 1)));
+    let f = b.filter(m1, udf1(|x| Value::Bool(x.as_i64() % 2 == 0)));
+    let m2 = b.map(f, udf1(|x| Value::I64(x.as_i64().wrapping_mul(10))));
+    let n = b.count(m2);
+    let nb = b.lift_scalar(n);
+    b.collect(nb, "n");
+    b.finish()
+}
+
+fn flatmap_program() -> Program {
+    let mut b = ProgramBuilder::new();
+    let v = b.named_source("tp_data");
+    let fm = b.flat_map(
+        v,
+        UdfN::new("span2", |x: &Value| {
+            let k = x.as_i64();
+            vec![Value::I64(k), Value::I64(k + 1)]
+        }),
+    );
+    let n = b.count(fm);
+    let nb = b.lift_scalar(n);
+    b.collect(nb, "n");
+    b.finish()
+}
+
+fn join_probe_program() -> Program {
+    let mut b = ProgramBuilder::new();
+    let attrs = b.named_source("tp_attrs");
+    let probe = b.named_source("tp_pairs");
+    let j = b.join(attrs, probe);
+    let n = b.count(j);
+    let nb = b.lift_scalar(n);
+    b.collect(nb, "n");
+    b.finish()
+}
+
+fn reduce_by_key_program() -> Program {
+    let mut b = ProgramBuilder::new();
+    let v = b.named_source("tp_data");
+    let k = b.map(
+        v,
+        udf1(|x| Value::pair(Value::I64(x.as_i64() % 64), x.clone())),
+    );
+    let r = b.reduce_by_key(
+        k,
+        udf2(|a, b| Value::I64(a.as_i64().wrapping_add(b.as_i64()))),
+    );
+    let n = b.count(r);
+    let nb = b.lift_scalar(n);
+    b.collect(nb, "n");
+    b.finish()
+}
+
+fn measure(
+    bench: &Bencher,
+    reg: &Arc<Registry>,
+    program: &Program,
+    workload: &'static str,
+    workers: usize,
+    elements: usize,
+    element_path: bool,
+) -> Point {
+    let (graph, _) = crate::compile_with_registry(program, &OptConfig::default(), reg)
+        .unwrap_or_else(|e| panic!("{workload}: compile failed: {e}"));
+    let cfg = ExecConfig {
+        workers,
+        registry: reg.clone(),
+        element_path,
+        ..Default::default()
+    };
+    let label = format!(
+        "{workload} w={workers}{}",
+        if element_path { " (element path)" } else { "" }
+    );
+    let m = bench.run(label, || {
+        let out = run(&graph, &cfg).unwrap_or_else(|e| panic!("{workload}: {e}"));
+        assert!(!out.collected("n").is_empty(), "{workload}: sink produced nothing");
+    });
+    let median_ns = m.median().as_nanos().max(1);
+    Point {
+        workload,
+        workers,
+        median_ns,
+        elems_per_sec: elements as f64 * 1e9 / median_ns as f64,
+        element_path,
+    }
+}
+
+/// Render the measured points as JSON (handwritten — serde is not in the
+/// offline registry; see DESIGN.md §2).
+fn to_json(elements: usize, points: &[Point], speedup: Option<f64>) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"bench\": \"throughput\",");
+    let _ = writeln!(s, "  \"elements\": {elements},");
+    if let Some(x) = speedup {
+        let _ = writeln!(
+            s,
+            "  \"fused_chain_speedup_vs_element_path\": {x:.3},"
+        );
+    }
+    s.push_str("  \"series\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"workload\": \"{}\", \"workers\": {}, \"element_path\": {}, \"median_ns\": {}, \"elems_per_sec\": {:.1}}}",
+            p.workload, p.workers, p.element_path, p.median_ns, p.elems_per_sec
+        );
+        s.push_str(if i + 1 < points.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Run the throughput benchmark; `smoke` shrinks dataset and repetition
+/// counts for CI. Writes `BENCH_throughput.json` to the working
+/// directory.
+pub fn throughput_benchmark(smoke: bool) {
+    let elements: usize = if smoke { 20_000 } else { 200_000 };
+    let bench = if smoke { Bencher::new(1, 3) } else { Bencher::new(2, 7) };
+
+    // Datasets live in an isolated registry threaded through ExecConfig —
+    // nothing leaks into the process-global one.
+    let reg = Arc::new(Registry::new());
+    reg.put("tp_data", (0..elements as i64).map(Value::I64).collect());
+    // Join: a small invariant build side against a full-size probe.
+    reg.put(
+        "tp_attrs",
+        (0..256i64)
+            .map(|k| Value::pair(Value::I64(k), Value::I64(k * 100)))
+            .collect(),
+    );
+    reg.put(
+        "tp_pairs",
+        (0..elements as i64)
+            .map(|x| Value::pair(Value::I64(x % 256), Value::I64(x)))
+            .collect(),
+    );
+
+    let workloads: [(&'static str, Program); 5] = [
+        ("map", map_program()),
+        ("fused-chain", fused_chain_program()),
+        ("flatmap", flatmap_program()),
+        ("join-probe", join_probe_program()),
+        ("reduceByKey", reduce_by_key_program()),
+    ];
+
+    eprintln!("== bench-throughput: {elements} elements/run ==");
+    let mut points: Vec<Point> = Vec::new();
+    let workers_sweep = [1usize, 2, 4];
+    for (name, program) in &workloads {
+        for &w in &workers_sweep {
+            points.push(measure(&bench, &reg, program, name, w, elements, false));
+        }
+    }
+
+    // Before/after: the fused map/filter chain through the legacy
+    // element-at-a-time data plane (per-element clone + dispatch +
+    // routing) vs the batched kernels, single worker — the acceptance
+    // series for the batching refactor.
+    let (_, fused) = &workloads[1];
+    let legacy = measure(&bench, &reg, fused, "fused-chain", 1, elements, true);
+    let batched = points
+        .iter()
+        .find(|p| p.workload == "fused-chain" && p.workers == 1 && !p.element_path)
+        .expect("fused-chain w=1 measured");
+    let speedup = batched.elems_per_sec / legacy.elems_per_sec.max(1e-9);
+    eprintln!(
+        "fused-chain w=1: batched {:.0} elems/s vs element-path {:.0} elems/s — {speedup:.2}x",
+        batched.elems_per_sec, legacy.elems_per_sec
+    );
+    points.push(legacy);
+
+    // Paper-style table: workloads × worker counts (median run time).
+    let mut table = Table::new(
+        "Data-plane throughput (median run time; see BENCH_throughput.json for elems/sec)",
+        "workload",
+        workers_sweep.iter().map(|w| format!("w={w}")).collect(),
+    );
+    for (name, _) in &workloads {
+        let cells = workers_sweep
+            .iter()
+            .map(|&w| {
+                points
+                    .iter()
+                    .find(|p| p.workload == *name && p.workers == w && !p.element_path)
+                    .map(|p| std::time::Duration::from_nanos(p.median_ns as u64))
+            })
+            .collect();
+        table.push_row(*name, cells);
+    }
+    table.print();
+
+    let json = to_json(elements, &points, Some(speedup));
+    let path = "BENCH_throughput.json";
+    std::fs::write(path, &json).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("wrote {path}");
+}

@@ -90,7 +90,7 @@ pub fn run_plan_on_pool(
     let (driver_tx, driver_rx) = channel::<DriverMsg>();
 
     let node_counters: Arc<Vec<super::worker::NodeCounters>> = Arc::new(
-        (0..plan.graph.num_nodes()).map(|_| super::worker::NodeCounters::default()).collect(),
+        plan.graph.nodes.iter().map(super::worker::NodeCounters::for_node).collect(),
     );
     let shared = Arc::new(super::worker::WorkerShared {
         plan: plan.clone(),
@@ -106,6 +106,7 @@ pub fn run_plan_on_pool(
         node_counters: node_counters.clone(),
         cancel: cfg.cancel.clone(),
         preamble: cfg.preamble.clone(),
+        element_path: cfg.element_path,
     });
     if let Some(replay) = cfg.preamble.as_ref().and_then(|p| p.replay.as_ref()) {
         metrics.add("exec.preamble_replay_nodes", replay.len() as u64);
@@ -327,6 +328,11 @@ pub fn run_plan_on_pool(
         .map(|c| NodeRows {
             rows: c.rows.load(std::sync::atomic::Ordering::Relaxed),
             bags: c.bags.load(std::sync::atomic::Ordering::Relaxed),
+            stage_rows: c
+                .stage_rows
+                .iter()
+                .map(|s| s.load(std::sync::atomic::Ordering::Relaxed))
+                .collect(),
         })
         .collect();
 

@@ -39,6 +39,9 @@ pub struct Env<'a> {
     /// Cross-job invariant-preamble sharing (replay source / capture
     /// sink) for this epoch, if active (`serve::`).
     pub preamble: Option<&'a super::PreambleSharing>,
+    /// Legacy element-at-a-time data plane (see
+    /// [`super::ExecConfig::element_path`]).
+    pub element_path: bool,
 }
 
 use std::sync::atomic::Ordering;
@@ -84,6 +87,9 @@ pub struct Instance {
     retained: FxHashMap<u32, Retained>,
     send_bufs: Vec<Vec<Vec<Value>>>,
     staging: VecCollector,
+    /// Per-batch key hashes, computed once per emission batch and shared
+    /// by every hash-routed out edge (reused across batches).
+    hash_buf: Vec<u64>,
     done_sent: bool,
     is_phi: bool,
     is_cond: bool,
@@ -131,6 +137,7 @@ impl Instance {
             retained: FxHashMap::default(),
             send_bufs,
             staging: VecCollector::default(),
+            hash_buf: Vec::new(),
             done_sent: false,
             is_phi: matches!(n.op, Rhs::Phi(_)),
             is_cond: n.cond.is_some(),
@@ -405,9 +412,14 @@ impl Instance {
 
     /// Feed buffered input to the transformation. Returns true when the
     /// output bag is complete.
+    ///
+    /// New items are handed over as ONE `push_in_batch` slice per arrival
+    /// — no per-element clone, no per-element virtual dispatch (the
+    /// pre-batching loop cloned every element and crossed the trait
+    /// boundary once each; `element_path` keeps that behavior available
+    /// for differential runs).
     fn feed(&mut self, env: &mut Env) -> bool {
         let Some(cur) = &mut self.cur else { return false };
-        let len = cur.len;
         let mut all_done = true;
         for i in 0..self.bufs.len() {
             let Some(a) = &mut cur.active[i] else { continue };
@@ -415,11 +427,20 @@ impl Instance {
                 continue;
             }
             if let Some(buf) = self.bufs[i].get(&a.required) {
-                // Feed new items.
-                while a.fed < buf.items.len() {
-                    let v = buf.items[a.fed].clone();
-                    a.fed += 1;
-                    self.transform.push_in_element(i, &v, &mut self.staging);
+                if a.fed < buf.items.len() {
+                    let new = &buf.items[a.fed..];
+                    a.fed = buf.items.len();
+                    if env.element_path {
+                        for v in new {
+                            // Faithful legacy cost profile: one clone +
+                            // one trait crossing per element.
+                            let v = v.clone();
+                            self.transform.push_in_element(i, &v, &mut self.staging);
+                        }
+                    } else {
+                        env.counters.batch_pushes.fetch_add(1, Ordering::Relaxed);
+                        self.transform.push_in_batch(i, new, &mut self.staging);
+                    }
                 }
                 let expected = env.plan.in_edges[self.node][i].expected_closes;
                 if buf.closes >= expected && !a.closed_delivered {
@@ -432,7 +453,6 @@ impl Instance {
             }
         }
         // Route whatever was emitted so far (pipelining).
-        let _ = len;
         self.route_staging(env);
         all_done
     }
@@ -446,6 +466,19 @@ impl Instance {
         }
         let cur = self.cur.take().expect("finish without current bag");
         let len = cur.len;
+
+        // Fold the fused chain's interior per-stage row counts into the
+        // shared node counters — once per completed bag, never per
+        // element. Adaptive feedback reads these through
+        // `RunOutput::node_rows[..].stage_rows`.
+        if let Some(rows) = self.transform.take_stage_rows() {
+            let slots = &env.node_counters[self.node].stage_rows;
+            for (i, r) in rows.into_iter().enumerate() {
+                if let Some(slot) = slots.get(i) {
+                    slot.fetch_add(r, Ordering::Relaxed);
+                }
+            }
+        }
 
         // Hand the completed bag to the cross-job preamble capture sink.
         if let Some(items) = self.capture.take() {
@@ -528,11 +561,17 @@ impl Instance {
 
     // ---- emission routing -------------------------------------------------
 
+    /// Route one emission batch to the send buffers. The batched path is
+    /// a per-batch **scatter**: `Value::key_hash` is computed once per
+    /// element for the whole batch (shared by every hash-routed edge,
+    /// instead of per element per edge), destinations are bucketed with
+    /// tight per-edge loops, and a batch with a single unconditional
+    /// consumer is MOVED into its send buffer without cloning.
     fn route_staging(&mut self, env: &mut Env) {
         if self.staging.items.is_empty() {
             return;
         }
-        let items = std::mem::take(&mut self.staging.items);
+        let mut items = std::mem::take(&mut self.staging.items);
         env.node_counters[self.node].rows.fetch_add(items.len() as u64, Ordering::Relaxed);
         if let Some(cap) = self.capture.as_mut() {
             cap.extend(items.iter().cloned());
@@ -550,25 +589,104 @@ impl Instance {
         }
         let has_conditional = self.retained.contains_key(&len);
         let out_edges = &env.plan.out_edges[self.node];
-        for v in items {
-            for (ei, oe) in out_edges.iter().enumerate() {
-                if oe.conditional {
-                    continue;
+
+        if env.element_path {
+            // Legacy per-element routing (reference implementation).
+            for v in items {
+                for (ei, oe) in out_edges.iter().enumerate() {
+                    if oe.conditional {
+                        continue;
+                    }
+                    match route_target(oe.route, &v, self.inst, oe.dst_insts) {
+                        Target::One(d) => self.send_bufs[ei][d].push(v.clone()),
+                        Target::All => {
+                            for d in 0..oe.dst_insts {
+                                self.send_bufs[ei][d].push(v.clone());
+                            }
+                        }
+                    }
                 }
-                let dst = route_target(oe.route, &v, self.inst, oe.dst_insts);
-                match dst {
-                    Target::One(d) => self.send_bufs[ei][d].push(v.clone()),
-                    Target::All => {
-                        for d in 0..oe.dst_insts {
-                            self.send_bufs[ei][d].push(v.clone());
+                if has_conditional {
+                    self.retained.get_mut(&len).unwrap().items.push(v);
+                }
+            }
+            self.flush_large_send_bufs(len, env);
+            return;
+        }
+
+        // Hash the batch once if any unconditional edge routes by key to
+        // more than one destination.
+        let needs_hash = out_edges
+            .iter()
+            .any(|oe| !oe.conditional && oe.route == Route::HashKey && oe.dst_insts > 1);
+        let mut hashes = std::mem::take(&mut self.hash_buf);
+        if needs_hash {
+            hashes.clear();
+            hashes.extend(items.iter().map(|v| v.key_hash()));
+        }
+
+        // Clone-scatter into every unconditional consumer but the last;
+        // the last takes the batch by move when no retained copy needs it.
+        let last_uncond = out_edges.iter().rposition(|oe| !oe.conditional);
+        for (ei, oe) in out_edges.iter().enumerate() {
+            if oe.conditional {
+                continue;
+            }
+            let take = !has_conditional && Some(ei) == last_uncond;
+            match oe.route {
+                Route::Forward | Route::Gather => {
+                    let d = if oe.route == Route::Gather {
+                        0
+                    } else {
+                        forward_dest(self.inst, oe.dst_insts)
+                    };
+                    if take {
+                        env.counters.scatter_moves.fetch_add(1, Ordering::Relaxed);
+                        self.send_bufs[ei][d].append(&mut items);
+                    } else {
+                        self.send_bufs[ei][d].extend(items.iter().cloned());
+                    }
+                }
+                Route::Broadcast => {
+                    // All but the final destination clone; the final one
+                    // takes the batch by move when nothing else needs it.
+                    let last_d = oe.dst_insts - 1;
+                    for d in 0..last_d {
+                        self.send_bufs[ei][d].extend(items.iter().cloned());
+                    }
+                    if take {
+                        env.counters.scatter_moves.fetch_add(1, Ordering::Relaxed);
+                        self.send_bufs[ei][last_d].append(&mut items);
+                    } else {
+                        self.send_bufs[ei][last_d].extend(items.iter().cloned());
+                    }
+                }
+                Route::HashKey => {
+                    if oe.dst_insts == 1 {
+                        if take {
+                            env.counters.scatter_moves.fetch_add(1, Ordering::Relaxed);
+                            self.send_bufs[ei][0].append(&mut items);
+                        } else {
+                            self.send_bufs[ei][0].extend(items.iter().cloned());
+                        }
+                    } else if take {
+                        env.counters.scatter_moves.fetch_add(1, Ordering::Relaxed);
+                        for (v, &h) in items.drain(..).zip(&hashes) {
+                            self.send_bufs[ei][hash_dest(h, oe.dst_insts)].push(v);
+                        }
+                    } else {
+                        for (v, &h) in items.iter().zip(&hashes) {
+                            self.send_bufs[ei][hash_dest(h, oe.dst_insts)].push(v.clone());
                         }
                     }
                 }
             }
-            if has_conditional {
-                self.retained.get_mut(&len).unwrap().items.push(v);
-            }
         }
+        if has_conditional {
+            // §6.3.4 retained copy takes the originals (edges above cloned).
+            self.retained.get_mut(&len).unwrap().items.append(&mut items);
+        }
+        self.hash_buf = hashes;
         // Flush large buffers eagerly (pipelined transfer).
         self.flush_large_send_bufs(len, env);
     }
@@ -749,10 +867,25 @@ enum Target {
     All,
 }
 
+/// `Route::Forward` destination — shared by the per-element
+/// `route_target` and the batched scatter so the two paths can never
+/// partition differently.
+#[inline]
+fn forward_dest(self_inst: usize, dst_insts: usize) -> usize {
+    self_inst.min(dst_insts - 1)
+}
+
+/// `Route::HashKey` destination for a precomputed key hash (shared by
+/// both routing paths, see [`forward_dest`]).
+#[inline]
+fn hash_dest(hash: u64, dst_insts: usize) -> usize {
+    (hash as usize) % dst_insts
+}
+
 fn route_target(route: Route, v: &Value, self_inst: usize, dst_insts: usize) -> Target {
     match route {
-        Route::Forward => Target::One(self_inst.min(dst_insts - 1)),
-        Route::HashKey => Target::One((v.key_hash() as usize) % dst_insts),
+        Route::Forward => Target::One(forward_dest(self_inst, dst_insts)),
+        Route::HashKey => Target::One(hash_dest(v.key_hash(), dst_insts)),
         Route::Broadcast => Target::All,
         Route::Gather => Target::One(0),
     }

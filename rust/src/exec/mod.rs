@@ -70,6 +70,14 @@ pub struct ExecConfig {
     /// Cross-job sharing of materialized loop-invariant preamble bags
     /// (`serve::` only; `None` = every epoch recomputes its preambles).
     pub preamble: Option<PreambleSharing>,
+    /// Force the legacy element-at-a-time data plane: instances feed
+    /// transformations through `push_in_element` (cloning each value) and
+    /// route emissions one element at a time, instead of the batched
+    /// `push_in_batch` + per-batch scatter path. Kept as a reference
+    /// implementation for differential testing and the throughput
+    /// benchmark's before/after series; `LABY_ELEMENT_PATH=1` sets it
+    /// process-wide through [`ExecConfig::default`].
+    pub element_path: bool,
 }
 
 /// Materialized invariant-preamble outputs: shareable node id → the items
@@ -94,12 +102,36 @@ pub struct PreambleSharing {
     pub capture: Option<Arc<Mutex<Vec<(NodeId, usize, Vec<Value>)>>>>,
 }
 
+/// Process-default channel batch size: 256, overridable once per process
+/// via `LABY_BATCH=N` (CI runs the whole tier-1 suite at `LABY_BATCH=1`
+/// to pin that batched and element-wise execution agree). Read once and
+/// cached — `Default` construction sits on the serving submit path.
+pub fn default_batch() -> usize {
+    static BATCH: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *BATCH.get_or_init(|| {
+        std::env::var("LABY_BATCH")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&b| b > 0)
+            .unwrap_or(256)
+    })
+}
+
+/// Process-default data-plane selection: batched, unless
+/// `LABY_ELEMENT_PATH=1` forces the legacy element-at-a-time path
+/// (cached like [`default_batch`]).
+pub fn default_element_path() -> bool {
+    static ELEMENT: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ELEMENT
+        .get_or_init(|| std::env::var("LABY_ELEMENT_PATH").ok().as_deref() == Some("1"))
+}
+
 impl Default for ExecConfig {
     fn default() -> Self {
         ExecConfig {
             workers: 2,
             mode: ExecMode::Pipelined,
-            batch: 256,
+            batch: default_batch(),
             reuse_state: true,
             io_dir: std::path::PathBuf::from("."),
             sched: None,
@@ -107,20 +139,28 @@ impl Default for ExecConfig {
             deadline: None,
             cancel: None,
             preamble: None,
+            element_path: default_element_path(),
         }
     }
 }
 
 /// Observed output cardinality of one logical node over a whole run
 /// (summed across instances and iteration steps). Recorded cheaply on the
-/// emission path and fed back into the `opt::cost` model by the `serve::`
-/// job service (adaptive re-optimization of cached plan templates).
-#[derive(Clone, Copy, Debug, Default)]
+/// emission path — per batch, never per element — and fed back into the
+/// `opt::cost` model by the `serve::` job service (adaptive
+/// re-optimization of cached plan templates).
+#[derive(Clone, Debug, Default)]
 pub struct NodeRows {
     /// Elements emitted by all instances of the node, all steps summed.
     pub rows: u64,
     /// Output bags completed (one per instance per step).
     pub bags: u64,
+    /// For `Rhs::Fused` nodes: output rows per interior stage
+    /// (stage-parallel with the node's `stages`/`lineage`), summed like
+    /// `rows`. Interior filter/flatMap cardinalities are invisible from
+    /// the tail's output count; these counters let adaptive
+    /// re-optimization pin every pre-fusion stage. Empty for other ops.
+    pub stage_rows: Vec<u64>,
 }
 
 /// Result of a run.

@@ -35,6 +35,12 @@ pub struct EngineCounters {
     /// Invariant-preamble bags replayed from a previous epoch instead of
     /// recomputed (cross-job sharing, `serve::`).
     pub preamble_replays: Arc<AtomicU64>,
+    /// `push_in_batch` calls on the engine feed path (one per newly
+    /// arrived input slice — the data plane's unit of work).
+    pub batch_pushes: Arc<AtomicU64>,
+    /// Emission batches moved into a send buffer without cloning (the
+    /// single-consumer scatter fast path).
+    pub scatter_moves: Arc<AtomicU64>,
 }
 
 impl EngineCounters {
@@ -51,6 +57,8 @@ impl EngineCounters {
             retained_dropped: m.counter("coord.retained_dropped"),
             invariant_gc_skips: m.counter("coord.invariant_gc_skips"),
             preamble_replays: m.counter("coord.preamble_replays"),
+            batch_pushes: m.counter("exec.batch_pushes"),
+            scatter_moves: m.counter("exec.scatter_moves"),
         }
     }
 }
@@ -65,6 +73,26 @@ pub struct NodeCounters {
     pub rows: AtomicU64,
     /// Output bags completed (per instance per step).
     pub bags: AtomicU64,
+    /// Fused nodes only: output rows per interior stage (sized to the
+    /// stage count at creation, empty otherwise). Accumulated once per
+    /// completed bag from [`crate::ops::Transformation::take_stage_rows`].
+    pub stage_rows: Vec<AtomicU64>,
+}
+
+impl NodeCounters {
+    /// Create the counters for one logical node, sizing the per-stage
+    /// slots for fused chains.
+    pub fn for_node(n: &crate::dataflow::Node) -> NodeCounters {
+        let stages = match &n.op {
+            crate::frontend::Rhs::Fused { stages, .. } => stages.len(),
+            _ => 0,
+        };
+        NodeCounters {
+            rows: AtomicU64::new(0),
+            bags: AtomicU64::new(0),
+            stage_rows: (0..stages).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
 }
 
 /// Parameters shared by all workers of a run.
@@ -99,6 +127,9 @@ pub struct WorkerShared {
     /// Cross-job invariant-preamble sharing for this epoch (replay
     /// source and/or capture sink).
     pub preamble: Option<super::PreambleSharing>,
+    /// Legacy element-at-a-time data plane (see
+    /// [`super::ExecConfig::element_path`]).
+    pub element_path: bool,
 }
 
 /// Run one worker for one job **epoch**: process messages until
@@ -163,6 +194,7 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
                             node_counters: &shared.node_counters,
                             report_bag_done: shared.report_bag_done,
                             preamble: shared.preamble.as_ref(),
+                            element_path: shared.element_path,
                         };
                         inst.on_append(start, &blocks, &mut env);
                     }
@@ -185,6 +217,7 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
                     node_counters: &shared.node_counters,
                     report_bag_done: shared.report_bag_done,
                     preamble: shared.preamble.as_ref(),
+                    element_path: shared.element_path,
                 };
                 inst.on_data(input, bag_len, items, close, &mut env);
             }
@@ -204,6 +237,7 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
                     node_counters: &shared.node_counters,
                     report_bag_done: shared.report_bag_done,
                     preamble: shared.preamble.as_ref(),
+                    element_path: shared.element_path,
                 };
                 inst.on_close(input, bag_len, &mut env);
             }

@@ -55,6 +55,7 @@
 pub mod bag;
 pub mod baselines;
 pub mod bench_harness;
+pub mod bench_throughput;
 pub mod cfg;
 pub mod config;
 pub mod coord;

@@ -10,6 +10,7 @@
 //! labyrinth serve <program.laby> [--workers N] [--slots S] [--requests R]
 //!               [--param name=value]... [--no-adaptive] [--metrics]
 //! labyrinth bench-serve [--smoke]
+//! labyrinth bench-throughput [--smoke]
 //! labyrinth generate visitcount --days N --visits M --pages P --out DIR
 //! labyrinth config --dump [--config FILE]
 //! ```
@@ -136,6 +137,10 @@ fn dispatch(args: &[String]) -> Result<()> {
             labyrinth::serve::bench::serving_benchmark(opts.has("--smoke"));
             Ok(())
         }
+        "bench-throughput" => {
+            labyrinth::bench_throughput::throughput_benchmark(opts.has("--smoke"));
+            Ok(())
+        }
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -159,6 +164,7 @@ fn print_usage() {
          \x20            [--param name=value]... [--no-adaptive] [--no-share-preambles]\n\
          \x20            [--metrics]\n\
          \x20 labyrinth bench-serve [--smoke]\n\
+         \x20 labyrinth bench-throughput [--smoke]\n\
          \x20 labyrinth generate visitcount --days N [--visits M] [--pages P] --out DIR\n\
          \x20 labyrinth config --dump [--config FILE]"
     );

@@ -21,11 +21,8 @@ impl ReduceByKeyT {
     }
 }
 
-impl Transformation for ReduceByKeyT {
-    fn open_out_bag(&mut self) {
-        self.acc.clear();
-    }
-    fn push_in_element(&mut self, _input: usize, v: &Value, _out: &mut dyn Collector) {
+impl ReduceByKeyT {
+    fn ingest(&mut self, v: &Value) {
         let (k, pv) = match v {
             Value::Pair(p) => (p.0.clone(), p.1.clone()),
             other => panic!("reduceByKey expects pairs, got {other:?}"),
@@ -35,6 +32,20 @@ impl Transformation for ReduceByKeyT {
             None => {
                 self.acc.insert(k, pv);
             }
+        }
+    }
+}
+
+impl Transformation for ReduceByKeyT {
+    fn open_out_bag(&mut self) {
+        self.acc.clear();
+    }
+    fn push_in_element(&mut self, _input: usize, v: &Value, _out: &mut dyn Collector) {
+        self.ingest(v);
+    }
+    fn push_in_batch(&mut self, _input: usize, vs: &[Value], _out: &mut dyn Collector) {
+        for v in vs {
+            self.ingest(v);
         }
     }
     fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
@@ -70,6 +81,16 @@ impl Transformation for ReduceT {
             None => v.clone(),
         });
     }
+    fn push_in_batch(&mut self, _input: usize, vs: &[Value], _out: &mut dyn Collector) {
+        let mut acc = self.acc.take();
+        for v in vs {
+            acc = Some(match acc {
+                Some(a) => self.udf.call(&a, v),
+                None => v.clone(),
+            });
+        }
+        self.acc = acc;
+    }
     fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
     fn close_out_bag(&mut self, out: &mut dyn Collector) {
         if let Some(a) = self.acc.take() {
@@ -103,6 +124,10 @@ impl Transformation for CountT {
     fn push_in_element(&mut self, _input: usize, _v: &Value, _out: &mut dyn Collector) {
         self.n += 1;
     }
+    fn push_in_batch(&mut self, _input: usize, vs: &[Value], _out: &mut dyn Collector) {
+        // The batch interface at its best: counting costs O(1) per batch.
+        self.n += vs.len() as i64;
+    }
     fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
     fn close_out_bag(&mut self, out: &mut dyn Collector) {
         out.emit(Value::I64(self.n));
@@ -113,12 +138,14 @@ impl Transformation for CountT {
 /// hash partitioning to co-locate duplicates).
 pub struct DistinctT {
     seen: FxHashSet<Value>,
+    /// First-occurrence staging buffer reused across batches.
+    buf: Vec<Value>,
 }
 
 impl DistinctT {
     /// Create an empty set.
     pub fn new() -> DistinctT {
-        DistinctT { seen: FxHashSet::default() }
+        DistinctT { seen: FxHashSet::default(), buf: Vec::new() }
     }
 }
 
@@ -136,6 +163,14 @@ impl Transformation for DistinctT {
         if self.seen.insert(v.clone()) {
             out.emit(v.clone());
         }
+    }
+    fn push_in_batch(&mut self, _input: usize, vs: &[Value], out: &mut dyn Collector) {
+        for v in vs {
+            if self.seen.insert(v.clone()) {
+                self.buf.push(v.clone());
+            }
+        }
+        out.emit_batch(&mut self.buf);
     }
     fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
     fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
@@ -202,5 +237,29 @@ mod tests {
         let _ = run_once(&mut t, &[&[kv(1, 10)]]);
         let out = run_once(&mut t, &[&[kv(1, 1)]]);
         assert_eq!(out, vec![kv(1, 1)]);
+    }
+
+    #[test]
+    fn batch_ingest_agrees_with_element_delivery() {
+        // Every aggregation's batch kernel must match `run_once`'s
+        // element-at-a-time delivery at every chunk size.
+        let input: Vec<Value> = (0..23).map(|x| kv(x % 5, x)).collect();
+        let scalars: Vec<Value> = (0..23).map(|x| Value::I64(x % 5)).collect();
+        let make: [(&str, fn() -> Box<dyn crate::ops::Transformation>, bool); 4] = [
+            ("reduceByKey", || Box::new(ReduceByKeyT::new(sum_udf())), true),
+            ("reduce", || Box::new(ReduceT::new(sum_udf())), false),
+            ("count", || Box::new(CountT::new()), false),
+            ("distinct", || Box::new(DistinctT::new()), false),
+        ];
+        for (name, mk, keyed) in make {
+            let bag: &[Value] = if keyed { &input } else { &scalars };
+            let mut element = run_once(mk().as_mut(), &[bag]);
+            element.sort();
+            for chunk in [1usize, 2, 7, 256] {
+                let mut got = crate::ops::run_once_chunked(mk().as_mut(), &[bag], chunk);
+                got.sort();
+                assert_eq!(got, element, "{name} chunk={chunk}");
+            }
+        }
     }
 }

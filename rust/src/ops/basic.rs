@@ -1,5 +1,9 @@
 //! Element-wise and structural transformations: map, filter, flatMap,
 //! union, cross, Φ, and the pass-through used by collect sinks.
+//!
+//! The element-wise operators override `push_in_batch` with tight loops
+//! staging into a reusable buffer — one collector call per batch instead
+//! of per element.
 
 use super::{Collector, Transformation};
 use crate::frontend::{Udf1, UdfN};
@@ -8,12 +12,14 @@ use crate::value::Value;
 /// `map`: apply a UDF to every element (fully pipelined).
 pub struct MapT {
     udf: Udf1,
+    /// Staging buffer reused across batches.
+    buf: Vec<Value>,
 }
 
 impl MapT {
     /// Create from a UDF.
     pub fn new(udf: Udf1) -> MapT {
-        MapT { udf }
+        MapT { udf, buf: Vec::new() }
     }
 }
 
@@ -22,6 +28,13 @@ impl Transformation for MapT {
     fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
         out.emit(self.udf.call(v));
     }
+    fn push_in_batch(&mut self, _input: usize, vs: &[Value], out: &mut dyn Collector) {
+        self.buf.reserve(vs.len());
+        for v in vs {
+            self.buf.push(self.udf.call(v));
+        }
+        out.emit_batch(&mut self.buf);
+    }
     fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
     fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
 }
@@ -29,12 +42,14 @@ impl Transformation for MapT {
 /// `filter`: keep elements whose predicate returns `Bool(true)`.
 pub struct FilterT {
     udf: Udf1,
+    /// Staging buffer reused across batches.
+    buf: Vec<Value>,
 }
 
 impl FilterT {
     /// Create from a predicate UDF.
     pub fn new(udf: Udf1) -> FilterT {
-        FilterT { udf }
+        FilterT { udf, buf: Vec::new() }
     }
 }
 
@@ -45,6 +60,14 @@ impl Transformation for FilterT {
             out.emit(v.clone());
         }
     }
+    fn push_in_batch(&mut self, _input: usize, vs: &[Value], out: &mut dyn Collector) {
+        for v in vs {
+            if self.udf.call(v).as_bool() {
+                self.buf.push(v.clone());
+            }
+        }
+        out.emit_batch(&mut self.buf);
+    }
     fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
     fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
 }
@@ -52,12 +75,14 @@ impl Transformation for FilterT {
 /// `flatMap`: one-to-many map (fully pipelined).
 pub struct FlatMapT {
     udf: UdfN,
+    /// Staging buffer reused across batches.
+    buf: Vec<Value>,
 }
 
 impl FlatMapT {
     /// Create from an expansion UDF.
     pub fn new(udf: UdfN) -> FlatMapT {
-        FlatMapT { udf }
+        FlatMapT { udf, buf: Vec::new() }
     }
 }
 
@@ -68,17 +93,38 @@ impl Transformation for FlatMapT {
             out.emit(x);
         }
     }
+    fn push_in_batch(&mut self, _input: usize, vs: &[Value], out: &mut dyn Collector) {
+        for v in vs {
+            self.buf.extend(self.udf.call(v));
+        }
+        out.emit_batch(&mut self.buf);
+    }
     fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
     fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
 }
 
+/// Clone a whole borrowed batch into a reusable staging buffer and hand
+/// it to the collector in one call (the pass-through operators' batch
+/// kernel; `buf` comes back empty with its allocation intact).
+fn pass_batch(buf: &mut Vec<Value>, vs: &[Value], out: &mut dyn Collector) {
+    buf.extend_from_slice(vs);
+    out.emit_batch(buf);
+}
+
 /// `union`: multiset union — pass through both inputs.
-pub struct UnionT;
+#[derive(Default)]
+pub struct UnionT {
+    /// Staging buffer reused across batches.
+    buf: Vec<Value>,
+}
 
 impl Transformation for UnionT {
     fn open_out_bag(&mut self) {}
     fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
         out.emit(v.clone());
+    }
+    fn push_in_batch(&mut self, _input: usize, vs: &[Value], out: &mut dyn Collector) {
+        pass_batch(&mut self.buf, vs, out);
     }
     fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
     fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
@@ -86,12 +132,19 @@ impl Transformation for UnionT {
 
 /// Φ-node: for each output bag the runtime feeds exactly one input (the
 /// one selected by §6.3.3's longest-prefix rule); elements pass through.
-pub struct PhiT;
+#[derive(Default)]
+pub struct PhiT {
+    /// Staging buffer reused across batches.
+    buf: Vec<Value>,
+}
 
 impl Transformation for PhiT {
     fn open_out_bag(&mut self) {}
     fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
         out.emit(v.clone());
+    }
+    fn push_in_batch(&mut self, _input: usize, vs: &[Value], out: &mut dyn Collector) {
+        pass_batch(&mut self.buf, vs, out);
     }
     fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
     fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
@@ -99,12 +152,19 @@ impl Transformation for PhiT {
 
 /// Pass-through for `collect` sinks (the engine captures the emitted bag
 /// and forwards it to the driver).
-pub struct PassThroughT;
+#[derive(Default)]
+pub struct PassThroughT {
+    /// Staging buffer reused across batches.
+    buf: Vec<Value>,
+}
 
 impl Transformation for PassThroughT {
     fn open_out_bag(&mut self) {}
     fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
         out.emit(v.clone());
+    }
+    fn push_in_batch(&mut self, _input: usize, vs: &[Value], out: &mut dyn Collector) {
+        pass_batch(&mut self.buf, vs, out);
     }
     fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
     fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
@@ -208,7 +268,7 @@ mod tests {
 
     #[test]
     fn union_merges_inputs() {
-        let mut t = UnionT;
+        let mut t = UnionT::default();
         let out = run_once(&mut t, &[&[i(1)], &[i(2), i(3)]]);
         assert_eq!(out.len(), 3);
     }
@@ -262,8 +322,37 @@ mod tests {
 
     #[test]
     fn phi_passes_through() {
-        let mut t = PhiT;
+        let mut t = PhiT::default();
         let out = run_once(&mut t, &[&[i(42)]]);
         assert_eq!(out, vec![i(42)]);
+    }
+
+    #[test]
+    fn batch_kernels_agree_with_element_delivery() {
+        // Whole-bag, chunked, and element-at-a-time delivery must produce
+        // identical output bags (order included).
+        let input: Vec<Value> = (0..23).map(i).collect();
+        let make: [fn() -> Box<dyn crate::ops::Transformation>; 3] = [
+            || Box::new(MapT::new(Udf1::new("x*3", |v: &Value| i(v.as_i64() * 3)))),
+            || {
+                Box::new(FilterT::new(Udf1::new("odd", |v: &Value| {
+                    Value::Bool(v.as_i64() % 2 == 1)
+                })))
+            },
+            || {
+                Box::new(FlatMapT::new(crate::frontend::UdfN::new("dup", |v: &Value| {
+                    vec![v.clone(), v.clone()]
+                })))
+            },
+        ];
+        for mk in make {
+            // `run_once` IS element-at-a-time delivery — the batch
+            // kernels must agree with it at every chunk size.
+            let element = run_once(mk().as_mut(), &[&input]);
+            for chunk in [1usize, 2, 7, 256] {
+                let got = crate::ops::run_once_chunked(mk().as_mut(), &[&input], chunk);
+                assert_eq!(got, element, "chunk={chunk}");
+            }
+        }
     }
 }

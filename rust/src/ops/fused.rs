@@ -1,10 +1,22 @@
 //! The fused element-wise operator produced by `opt::fuse`: a maximal
 //! linear chain of map/filter/flatMap stages executed inside one physical
-//! operator instance. Each input element runs through the whole pipeline
-//! before the next is touched, so fusing a k-stage chain removes k-1
-//! per-element dispatches, k-1 intermediate bags per step, and all the
-//! coordination messages (closes, conditional-output watchers) the
-//! intermediate nodes would have cost.
+//! operator instance. Fusing a k-stage chain removes k-1 per-element
+//! dispatches, k-1 intermediate bags per step, and all the coordination
+//! messages (closes, conditional-output watchers) the intermediate nodes
+//! would have cost.
+//!
+//! The batch kernel (`push_in_batch`) runs the pipeline **stage-at-a-time
+//! over the whole batch** through two ping-pong buffers — an iterative,
+//! non-recursive loop with no per-element virtual dispatch. Because every
+//! stage preserves the per-element order of its input (flatMap expansions
+//! stay contiguous), the breadth-first batch order is identical to the
+//! depth-first element order of `apply_stages`.
+//!
+//! The kernel also counts each stage's output rows (`stage_rows`),
+//! which the engine folds into per-node metrics: interior filter/flatMap
+//! cardinalities — invisible from the fused tail's output count — become
+//! observable to adaptive re-optimization via the stage-parallel lineage
+//! recorded by `opt::fuse`.
 
 use super::{Collector, Transformation};
 use crate::frontend::FusedStage;
@@ -37,32 +49,97 @@ pub fn apply_stages(stages: &[FusedStage], v: &Value, emit: &mut dyn FnMut(Value
     run_stages(stages, 0, v, emit);
 }
 
-/// Fused chain transformation (fully pipelined, stateless).
+/// Fused chain transformation (fully pipelined; the only state is the
+/// reusable batch buffers and the per-stage row counters).
 pub struct FusedT {
     stages: Vec<FusedStage>,
+    /// Ping-pong buffers for the stage-at-a-time batch loop.
+    cur: Vec<Value>,
+    next: Vec<Value>,
+    /// Output rows per stage since the last [`Transformation::take_stage_rows`]
+    /// (stage-parallel with `stages`).
+    stage_rows: Vec<u64>,
 }
 
 impl FusedT {
     /// Create from the chain's stages, in application order.
     pub fn new(stages: Vec<FusedStage>) -> FusedT {
-        FusedT { stages }
+        let n = stages.len();
+        FusedT { stages, cur: Vec::new(), next: Vec::new(), stage_rows: vec![0; n] }
+    }
+
+    /// Per-stage output rows accumulated so far (tests).
+    pub fn stage_rows(&self) -> &[u64] {
+        &self.stage_rows
     }
 }
 
 impl Transformation for FusedT {
     fn open_out_bag(&mut self) {}
+
     fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
+        // The pre-batching execution, kept verbatim as the element-path
+        // reference: depth-first recursion, direct emits, NO per-stage
+        // counting (the batch kernel is the counting path —
+        // `record_observed` detects incomplete stage counts and falls
+        // back to the lineage walk).
         run_stages(&self.stages, 0, v, &mut |x| out.emit(x));
     }
+
+    fn push_in_batch(&mut self, _input: usize, vs: &[Value], out: &mut dyn Collector) {
+        if self.stages.is_empty() {
+            let mut buf = vs.to_vec();
+            out.emit_batch(&mut buf);
+            return;
+        }
+        self.cur.clear();
+        self.cur.extend_from_slice(vs);
+        for (i, stage) in self.stages.iter().enumerate() {
+            self.next.clear();
+            match stage {
+                FusedStage::Map(udf) => {
+                    self.next.reserve(self.cur.len());
+                    for v in &self.cur {
+                        self.next.push(udf.call(v));
+                    }
+                }
+                FusedStage::Filter(udf) => {
+                    // Survivors are MOVED, not cloned (the element path
+                    // clones every survivor out of the borrowed input).
+                    for v in self.cur.drain(..) {
+                        if udf.call(&v).as_bool() {
+                            self.next.push(v);
+                        }
+                    }
+                }
+                FusedStage::FlatMap(udf) => {
+                    for v in &self.cur {
+                        self.next.extend(udf.call(v));
+                    }
+                }
+            }
+            self.stage_rows[i] += self.next.len() as u64;
+            std::mem::swap(&mut self.cur, &mut self.next);
+        }
+        out.emit_batch(&mut self.cur);
+    }
+
     fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
     fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+
+    fn take_stage_rows(&mut self) -> Option<Vec<u64>> {
+        if self.stages.is_empty() {
+            return None;
+        }
+        Some(std::mem::replace(&mut self.stage_rows, vec![0; self.stages.len()]))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::frontend::{Udf1, UdfN};
-    use crate::ops::run_once;
+    use crate::ops::{run_once, run_once_chunked};
 
     fn i(v: i64) -> Value {
         Value::I64(v)
@@ -107,5 +184,50 @@ mod tests {
         let mut got = Vec::new();
         apply_stages(&chain(), &i(3), &mut |x| got.push(x));
         assert_eq!(got, vec![i(40)]);
+    }
+
+    #[test]
+    fn batch_order_matches_depth_first_element_order() {
+        // flatMap mid-chain: the batch loop runs breadth-first, the
+        // apply_stages helper depth-first — outputs must align exactly.
+        let stages = vec![
+            FusedStage::Map(Udf1::new("x*2", |v: &Value| i(v.as_i64() * 2))),
+            FusedStage::FlatMap(UdfN::new("span", |v: &Value| {
+                vec![v.clone(), i(v.as_i64() + 1)]
+            })),
+            FusedStage::Filter(Udf1::new("not3", |v: &Value| Value::Bool(v.as_i64() % 3 != 0))),
+        ];
+        let input: Vec<Value> = (0..9).map(i).collect();
+        let mut want = Vec::new();
+        for v in &input {
+            apply_stages(&stages, v, &mut |x| want.push(x));
+        }
+        let whole = run_once(&mut FusedT::new(stages.clone()), &[&input]);
+        assert_eq!(whole, want);
+        for chunk in [1usize, 2, 7] {
+            let got = run_once_chunked(&mut FusedT::new(stages.clone()), &[&input], chunk);
+            assert_eq!(got, want, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn stage_rows_count_interior_cardinalities() {
+        let input = [i(1), i(2), i(3), i(4)];
+        // Batch delivery: +1 -> 4 rows; keep even -> 2 rows; *10 -> 2.
+        let mut t = FusedT::new(chain());
+        let batched = run_once_chunked(&mut t, &[&input], 256);
+        assert_eq!(t.stage_rows(), &[4, 2, 2]);
+        // take_stage_rows drains the counters.
+        assert_eq!(t.take_stage_rows(), Some(vec![4, 2, 2]));
+        assert_eq!(t.stage_rows(), &[0, 0, 0]);
+        // Element-at-a-time delivery is the UNCOUNTED legacy reference:
+        // identical output, zero stage counts (`record_observed` detects
+        // the incomplete counts and uses the lineage-walk fallback).
+        let mut e = FusedT::new(chain());
+        let element = run_once(&mut e, &[&input]);
+        assert_eq!(element, batched);
+        assert_eq!(e.stage_rows(), &[0, 0, 0]);
+        // An empty chain has nothing to report.
+        assert_eq!(FusedT::new(Vec::new()).take_stage_rows(), None);
     }
 }

@@ -163,6 +163,15 @@ impl Transformation for WriteFileT {
             self.name = Some(v.as_str().to_string());
         }
     }
+    fn push_in_batch(&mut self, input: usize, vs: &[Value], out: &mut dyn Collector) {
+        if input == 0 {
+            self.data.extend_from_slice(vs);
+        } else {
+            for v in vs {
+                self.push_in_element(input, v, out);
+            }
+        }
+    }
     fn close_in_bag(&mut self, input: usize, _out: &mut dyn Collector) {
         if input == 0 {
             self.data_closed = true;

@@ -38,6 +38,8 @@ pub struct HashJoinT {
     pending_probe: Vec<Value>,
     /// Which logical input builds the hash table (0 = left, 1 = right).
     build: usize,
+    /// Join-result staging buffer reused across probe batches.
+    buf: Vec<Value>,
     /// Number of probes served from a retained (reused) build table —
     /// reported by the engine's metrics to validate Fig. 8.
     pub reuse_probes: u64,
@@ -57,11 +59,30 @@ impl HashJoinT {
             build_done: false,
             pending_probe: Vec::new(),
             build,
+            buf: Vec::new(),
             reuse_probes: 0,
         }
     }
 
+    fn probe_into(&self, v: &Value, dst: &mut Vec<Value>) {
+        let (k, pv) = key_and_payload(v);
+        if let Some(matches) = self.table.get(&k) {
+            for bv in matches {
+                // Emit in (left, right) order whichever side built.
+                let (lv, rv) = if self.build == 0 {
+                    (bv.clone(), pv.clone())
+                } else {
+                    (pv.clone(), bv.clone())
+                };
+                dst.push(Value::pair(k.clone(), Value::pair(lv, rv)));
+            }
+        }
+    }
+
     fn probe(&self, v: &Value, out: &mut dyn Collector) {
+        // Element-delivery twin of `probe_into`: emits matches directly
+        // (no staging buffer — this path predates batching and must keep
+        // its original cost profile).
         let (k, pv) = key_and_payload(v);
         if let Some(matches) = self.table.get(&k) {
             for bv in matches {
@@ -74,6 +95,25 @@ impl HashJoinT {
                 out.emit(Value::pair(k.clone(), Value::pair(lv, rv)));
             }
         }
+    }
+
+    /// Probe everything buffered in `pending_probe` as one batch.
+    fn flush_pending(&mut self, out: &mut dyn Collector) {
+        if self.pending_probe.is_empty() {
+            return;
+        }
+        let pending = std::mem::take(&mut self.pending_probe);
+        let mut buf = std::mem::take(&mut self.buf);
+        for v in &pending {
+            self.probe_into(v, &mut buf);
+        }
+        out.emit_batch(&mut buf);
+        self.buf = buf;
+    }
+
+    fn ingest_build(&mut self, v: &Value) {
+        let (k, bv) = key_and_payload(v);
+        self.table.entry(k).or_default().push(bv);
     }
 }
 
@@ -93,8 +133,7 @@ impl Transformation for HashJoinT {
 
     fn push_in_element(&mut self, input: usize, v: &Value, out: &mut dyn Collector) {
         if input == self.build {
-            let (k, bv) = key_and_payload(v);
-            self.table.entry(k).or_default().push(bv);
+            self.ingest_build(v);
         } else if self.build_done {
             self.probe(v, out);
         } else {
@@ -102,12 +141,28 @@ impl Transformation for HashJoinT {
         }
     }
 
+    fn push_in_batch(&mut self, input: usize, vs: &[Value], out: &mut dyn Collector) {
+        if input == self.build {
+            for v in vs {
+                self.ingest_build(v);
+            }
+        } else if self.build_done {
+            // Probe the whole batch into the staging buffer, emit once.
+            let mut buf = std::mem::take(&mut self.buf);
+            for v in vs {
+                self.probe_into(v, &mut buf);
+            }
+            out.emit_batch(&mut buf);
+            self.buf = buf;
+        } else {
+            self.pending_probe.extend_from_slice(vs);
+        }
+    }
+
     fn close_in_bag(&mut self, input: usize, out: &mut dyn Collector) {
         if input == self.build {
             self.build_done = true;
-            for v in std::mem::take(&mut self.pending_probe) {
-                self.probe(&v, out);
-            }
+            self.flush_pending(out);
         }
     }
 
@@ -115,9 +170,7 @@ impl Transformation for HashJoinT {
         // If the probe side closed before the build side (possible under
         // adverse scheduling), flush now.
         if self.build_done {
-            for v in std::mem::take(&mut self.pending_probe) {
-                self.probe(&v, out);
-            }
+            self.flush_pending(out);
         }
     }
 
@@ -245,6 +298,20 @@ mod tests {
         j.drop_state(1);
         let out3 = run_once(&mut j, &[&[kv(1, 30)], &[]]);
         assert!(out3.is_empty());
+    }
+
+    #[test]
+    fn batch_probe_agrees_with_element_delivery() {
+        let build: Vec<Value> = (0..8).map(|k| kv(k, k * 10)).collect();
+        let probe: Vec<Value> = (0..32).map(|x| kv(x % 8, x)).collect();
+        let mut j = HashJoinT::new();
+        let whole = run_once(&mut j, &[&build, &probe]);
+        assert_eq!(whole.len(), 32);
+        for chunk in [1usize, 3, 256] {
+            let mut j = HashJoinT::new();
+            let got = crate::ops::run_once_chunked(&mut j, &[&build, &probe], chunk);
+            assert_eq!(got, whole, "chunk={chunk}");
+        }
     }
 
     #[test]

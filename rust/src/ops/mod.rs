@@ -10,6 +10,11 @@
 //!   state);
 //! * `push_in_element(input, v, out)` — one element of the current input
 //!   bag on logical input `input`;
+//! * `push_in_batch(input, vs, out)` — a whole batch of elements at once.
+//!   The engine's hot path: the default forwards to the element method
+//!   (so exotic operators stay correct with zero changes), and the hot
+//!   operators override it with tight loops that stage into reusable
+//!   buffers and emit once per batch instead of once per element;
 //! * `close_in_bag(input, out)` — no more elements on that input;
 //! * `close_out_bag(out)` — all inputs closed; emit any finals;
 //! * `drop_state(input)` — §7 extension: the runtime announces that the
@@ -17,6 +22,11 @@
 //!   for it (e.g. a hash-join build table) must be dropped. Absent this
 //!   call, a transformation with `keeps_input_state(input) == true` may
 //!   assume the same input bag is reused and will NOT be re-pushed.
+//!
+//! Batch and element delivery are interchangeable: pushing a bag as one
+//! batch, element by element, or any split in between must produce the
+//! same output bag (the property suite runs the engine at batch sizes
+//! {1, 2, 7, 256} to pin this).
 
 pub mod agg;
 pub mod basic;
@@ -35,6 +45,14 @@ use std::sync::Arc;
 pub trait Collector {
     /// Emit one element of the current output bag.
     fn emit(&mut self, v: Value);
+    /// Emit a whole batch, draining `vs` (its allocation stays with the
+    /// caller for reuse across batches). One virtual call per batch
+    /// instead of one per element; the default loops over [`Collector::emit`].
+    fn emit_batch(&mut self, vs: &mut Vec<Value>) {
+        for v in vs.drain(..) {
+            self.emit(v);
+        }
+    }
 }
 
 /// A growable vector collector (tests, single-threaded baseline, and the
@@ -49,6 +67,9 @@ impl Collector for VecCollector {
     fn emit(&mut self, v: Value) {
         self.items.push(v);
     }
+    fn emit_batch(&mut self, vs: &mut Vec<Value>) {
+        self.items.append(vs);
+    }
 }
 
 /// A bag-transformation (one physical instance's compute logic).
@@ -57,6 +78,16 @@ pub trait Transformation: Send {
     fn open_out_bag(&mut self);
     /// Receive one input element on logical input `input`.
     fn push_in_element(&mut self, input: usize, v: &Value, out: &mut dyn Collector);
+    /// Receive a batch of input elements on logical input `input`. The
+    /// engine's data plane delivers everything through this method;
+    /// splitting a bag into batches differently must not change the
+    /// output. Default: the element loop (correct for every operator);
+    /// hot operators override it with vectorized kernels.
+    fn push_in_batch(&mut self, input: usize, vs: &[Value], out: &mut dyn Collector) {
+        for v in vs {
+            self.push_in_element(input, v, out);
+        }
+    }
     /// The current bag on logical input `input` is complete.
     fn close_in_bag(&mut self, input: usize, out: &mut dyn Collector);
     /// All inputs are complete: emit any remaining output.
@@ -71,6 +102,16 @@ pub trait Transformation: Send {
     /// 0-input sources generate their output here (called between open and
     /// close by the runtime).
     fn generate(&mut self, _out: &mut dyn Collector) {}
+    /// Per-stage output row counts accumulated since the last call, for
+    /// operators that run an interior pipeline ([`fused::FusedT`]).
+    /// `None` for everything else. The engine polls this once per
+    /// completed bag and folds the counts into the per-node metrics
+    /// (`stage_rows`), which is what lets adaptive re-optimization pin
+    /// interior filter/flatMap cardinalities that the fused tail's own
+    /// output count cannot reveal.
+    fn take_stage_rows(&mut self) -> Option<Vec<u64>> {
+        None
+    }
 }
 
 /// Instance context given to the factory: which physical instance this is
@@ -120,7 +161,7 @@ pub fn make(op: &Rhs, ctx: &MakeCtx) -> Result<Box<dyn Transformation>> {
         Rhs::NamedSource(name) => Box::new(io::NamedSourceT::new(name.clone(), ctx)),
         Rhs::ReadFile { .. } => Box::new(io::ReadFileT::new(ctx)),
         Rhs::WriteFile { .. } => Box::new(io::WriteFileT::new(ctx)),
-        Rhs::Collect { .. } => Box::new(basic::PassThroughT),
+        Rhs::Collect { .. } => Box::new(basic::PassThroughT::default()),
         Rhs::Map { udf, .. } => Box::new(basic::MapT::new(udf.clone())),
         Rhs::Filter { udf, .. } => Box::new(basic::FilterT::new(udf.clone())),
         Rhs::FlatMap { udf, .. } => Box::new(basic::FlatMapT::new(udf.clone())),
@@ -129,9 +170,9 @@ pub fn make(op: &Rhs, ctx: &MakeCtx) -> Result<Box<dyn Transformation>> {
         Rhs::Reduce { udf, .. } => Box::new(agg::ReduceT::new(udf.clone())),
         Rhs::Count { .. } => Box::new(agg::CountT::new()),
         Rhs::Distinct { .. } => Box::new(agg::DistinctT::new()),
-        Rhs::Union { .. } => Box::new(basic::UnionT),
+        Rhs::Union { .. } => Box::new(basic::UnionT::default()),
         Rhs::Cross { .. } => Box::new(basic::CrossT::new()),
-        Rhs::Phi(_) => Box::new(basic::PhiT),
+        Rhs::Phi(_) => Box::new(basic::PhiT::default()),
         Rhs::Fused { stages, .. } => Box::new(fused::FusedT::new(stages.clone())),
         Rhs::XlaCall { spec, .. } => Box::new(xla::XlaCallT::new(spec.clone())),
         Rhs::Const(_) | Rhs::Copy(_) | Rhs::ScalarUn { .. } | Rhs::ScalarBin { .. } => {
@@ -144,7 +185,11 @@ pub fn make(op: &Rhs, ctx: &MakeCtx) -> Result<Box<dyn Transformation>> {
 }
 
 /// Test/baseline helper: run a transformation over fully materialized
-/// input bags and return the output bag.
+/// input bags and return the output bag. Delivery is deliberately
+/// **element-at-a-time**: the baseline interpreters built on this stay an
+/// independent implementation of operator semantics, so every
+/// engine-vs-oracle differential test doubles as a batched-vs-element
+/// agreement check (the engine's data plane uses `push_in_batch`).
 pub fn run_once(t: &mut dyn Transformation, inputs: &[&[Value]]) -> Vec<Value> {
     let mut out = VecCollector::default();
     t.open_out_bag();
@@ -154,6 +199,32 @@ pub fn run_once(t: &mut dyn Transformation, inputs: &[&[Value]]) -> Vec<Value> {
         for (i, bag) in inputs.iter().enumerate() {
             for v in bag.iter() {
                 t.push_in_element(i, v, &mut out);
+            }
+            t.close_in_bag(i, &mut out);
+        }
+    }
+    t.close_out_bag(&mut out);
+    out.items
+}
+
+/// [`run_once`] delivering every bag through `push_in_batch` in chunks of
+/// `chunk` elements — exercises the batch kernels and their boundaries
+/// (tests assert it agrees with [`run_once`]'s element delivery at every
+/// chunk size).
+pub fn run_once_chunked(
+    t: &mut dyn Transformation,
+    inputs: &[&[Value]],
+    chunk: usize,
+) -> Vec<Value> {
+    let chunk = chunk.max(1);
+    let mut out = VecCollector::default();
+    t.open_out_bag();
+    if inputs.is_empty() {
+        t.generate(&mut out);
+    } else {
+        for (i, bag) in inputs.iter().enumerate() {
+            for part in bag.chunks(chunk) {
+                t.push_in_batch(i, part, &mut out);
             }
             t.close_in_bag(i, &mut out);
         }

@@ -136,6 +136,28 @@ pub fn estimate_rows_seeded(
     estimate_rows_inner(g, p, Some(seed))
 }
 
+/// Model estimates for every interior stage of a fused chain, given the
+/// chain input's estimated rows: element `i` is the estimated output
+/// cardinality of pre-fusion stage `i` (stage-parallel with the chain's
+/// `lineage`). Used to seed the adaptive-feedback drift baseline with
+/// per-stage values symmetric to the engine's observed
+/// `NodeRows::stage_rows`, so interior filter/flatMap drift is detected
+/// per stage rather than only at the fused tail.
+pub fn fused_stage_rows(stages: &[FusedStage], input_rows: f64, p: &CostParams) -> Vec<f64> {
+    let mut acc = input_rows;
+    stages
+        .iter()
+        .map(|s| {
+            acc = match s {
+                FusedStage::Map(_) => acc,
+                FusedStage::Filter(_) => acc * p.filter_selectivity,
+                FusedStage::FlatMap(_) => acc * p.flatmap_expansion,
+            };
+            acc
+        })
+        .collect()
+}
+
 fn estimate_rows_inner(
     g: &DataflowGraph,
     p: &CostParams,
@@ -168,11 +190,9 @@ fn estimate_rows_inner(
                     }
                     Rhs::Filter { .. } => r(0) * p.filter_selectivity,
                     Rhs::FlatMap { .. } => r(0) * p.flatmap_expansion,
-                    Rhs::Fused { stages, .. } => stages.iter().fold(r(0), |acc, s| match s {
-                        FusedStage::Map(_) => acc,
-                        FusedStage::Filter(_) => acc * p.filter_selectivity,
-                        FusedStage::FlatMap(_) => acc * p.flatmap_expansion,
-                    }),
+                    Rhs::Fused { stages, .. } => {
+                        fused_stage_rows(stages, r(0), p).last().copied().unwrap_or_else(|| r(0))
+                    }
                     Rhs::Join { .. } => p.join_selectivity * r(0).max(r(1)),
                     Rhs::ReduceByKey { .. } | Rhs::Distinct { .. } => r(0) * p.key_ratio,
                     Rhs::Union { .. } => r(0) + r(1),

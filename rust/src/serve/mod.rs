@@ -103,6 +103,9 @@ pub struct ServeConfig {
     /// Share materialized invariant-preamble bags across jobs whose
     /// binding signatures match (see [`template::BindingSignature`]).
     pub share_preambles: bool,
+    /// Run jobs on the legacy element-at-a-time data plane (see
+    /// [`ExecConfig::element_path`]); defaults from `LABY_ELEMENT_PATH`.
+    pub element_path: bool,
 }
 
 impl Default for ServeConfig {
@@ -111,7 +114,9 @@ impl Default for ServeConfig {
             slots: 2,
             workers: 2,
             queue_cap: 256,
-            batch: 256,
+            // Inherits the engine default (honors LABY_BATCH, so the
+            // batch=1 CI suite covers the serving path too).
+            batch: crate::exec::default_batch(),
             mode: ExecMode::Pipelined,
             reuse_state: true,
             io_dir: std::path::PathBuf::from("."),
@@ -119,6 +124,7 @@ impl Default for ServeConfig {
             adaptive: true,
             max_templates: 64,
             share_preambles: true,
+            element_path: crate::exec::default_element_path(),
         }
     }
 }
@@ -563,6 +569,7 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
         deadline: job.deadline,
         cancel: Some(job.cancel.clone()),
         preamble,
+        element_path: inner.cfg.element_path,
     };
     let epochs_before = pool.epochs();
     let result = driver::run_plan_on_pool(tpl.plan.clone(), &run_cfg, pool);

@@ -30,8 +30,11 @@
 //! revision whose signature matches — Arc pointer equality per dataset
 //! when possible, exact content comparison otherwise, never a bare hash
 //! — replays those bags instead of recomputing the invariant subgraph.
-//! Invalidation is structural: a revision is a new `PlanTemplate` (empty
-//! store), and any registry / binding content change fails the match.
+//! Invalidation is structural: any registry / binding content change
+//! fails the match, and a revision carries the store over **only** when
+//! the revised plan leaves the preamble subgraph structurally unchanged
+//! (same nodes / ops / instance counts / wiring — `NodeId`s are remapped
+//! by SSA name; see `carry_preambles`); any difference starts it empty.
 //!
 //! **Eviction** is cost-weighted, not FIFO: see [`TemplateCache`].
 
@@ -153,8 +156,10 @@ pub struct PlanTemplate {
     /// Last time a request resolved this template (eviction decay).
     last_used: Mutex<Instant>,
     /// Materialized invariant-preamble bags by binding signature
-    /// (cross-job sharing). A revision is a NEW `PlanTemplate`, so
-    /// revision invalidation is structural: this store starts empty.
+    /// (cross-job sharing). A revision is a NEW `PlanTemplate`; the store
+    /// starts empty UNLESS the revised plan's preamble subgraph is
+    /// structurally identical, in which case the entries are carried
+    /// over with their `NodeId` keys remapped (see `carry_preambles`).
     preambles: Mutex<PreambleStore>,
 }
 
@@ -215,15 +220,20 @@ impl BindingSignature {
     }
 }
 
-/// Insert `rows` for `n` into a feedback map — and, for fused chains, map
-/// the value back onto the **pre-fusion** SSA names via the stage
-/// lineage. Only 1:1 (`Map`) stages can be inverted: walking backward
-/// from the output, a `Map` stage's input cardinality equals its output
-/// cardinality, so every lineage name from the tail back to (and
-/// including) the first non-`Map` boundary gets the same row count; past
-/// that the walk stops (filter/flatMap cardinalities are not invertible).
-/// Without this, interior chain members would reach an adaptive recompile
-/// (whose fresh graph is pre-fusion) with only model guesses.
+/// Fallback: insert `rows` for `n` into a feedback map — and, for fused
+/// chains, map the value back onto the **pre-fusion** SSA names via the
+/// stage lineage. Only 1:1 (`Map`) stages can be inverted this way:
+/// walking backward from the output, a `Map` stage's input cardinality
+/// equals its output cardinality, so every lineage name from the tail
+/// back to (and including) the first non-`Map` boundary gets the same
+/// row count; past that the walk stops.
+///
+/// The primary path no longer needs the inversion: `FusedT` counts every
+/// interior stage's output at runtime (`NodeRows::stage_rows`), so
+/// filter/flatMap interiors reach the recompile with MEASURED rows (see
+/// [`PlanTemplate::record_observed`]). This walk remains for runs whose
+/// stage counters are absent or incomplete (e.g. a bag replayed from the
+/// cross-job preamble store never runs the transform).
 fn insert_with_fused_lineage(m: &mut RowFeedback, n: &Node, rows: f64) {
     m.insert(n.name.clone(), rows);
     if let Rhs::Fused { stages, lineage, .. } = &n.op {
@@ -242,9 +252,13 @@ impl PlanTemplate {
     /// Record observed per-node output cardinalities from a completed run
     /// (mean rows per **logical** bag: totals are summed across
     /// instances, bag counts are per instance). Fused nodes additionally
-    /// record under their pre-fusion lineage names (see
-    /// `insert_with_fused_lineage`) so the stats survive fusion into
-    /// the next recompile.
+    /// record under their pre-fusion lineage names: preferentially from
+    /// the engine's per-stage runtime counters (`NodeRows::stage_rows` —
+    /// exact for EVERY stage, filter/flatMap interiors included), falling
+    /// back to the 1:1 backward walk of `insert_with_fused_lineage` when
+    /// the counters are absent (stage counts can undercount `rows` when
+    /// bags were replayed from the preamble store without running the
+    /// transform — detected by comparing the tail count to `rows`).
     pub fn record_observed(&self, out: &RunOutput) {
         let g = &self.plan.graph;
         let mut m: RowFeedback = FxHashMap::default();
@@ -254,7 +268,27 @@ impl PlanTemplate {
                 continue;
             }
             let insts = self.plan.num_insts[n.id] as f64;
-            insert_with_fused_lineage(&mut m, n, (s.rows as f64) * insts / (s.bags as f64));
+            let scale = insts / (s.bags as f64);
+            if let Rhs::Fused { stages, lineage, .. } = &n.op {
+                // Counted runs satisfy tail == rows; an UNCOUNTED run
+                // (element-path reference, replayed bags) leaves every
+                // stage counter zero, which is indistinguishable from a
+                // measured all-zero chain only when nothing flowed at
+                // all — so additionally require that something was
+                // counted somewhere before trusting the stage values.
+                let complete = s.stage_rows.len() == stages.len()
+                    && lineage.len() == stages.len()
+                    && s.stage_rows.last() == Some(&s.rows)
+                    && (s.rows > 0 || s.stage_rows.iter().any(|&r| r > 0));
+                if complete {
+                    m.insert(n.name.clone(), (s.rows as f64) * scale);
+                    for (name, &rows) in lineage.iter().zip(&s.stage_rows) {
+                        m.insert(name.clone(), (rows as f64) * scale);
+                    }
+                    continue;
+                }
+            }
+            insert_with_fused_lineage(&mut m, n, (s.rows as f64) * scale);
         }
         if !m.is_empty() {
             self.observed.lock().unwrap().latest = Some(m);
@@ -310,6 +344,79 @@ impl PlanTemplate {
         self.uses.fetch_add(1, Ordering::Relaxed);
         *self.last_used.lock().unwrap() = Instant::now();
     }
+}
+
+/// Structural signature of a plan's shareable preamble subgraph: one row
+/// per shareable node — SSA name, op mnemonic, condition-freeness,
+/// instance count, and every input as `(producer name, route)` — sorted
+/// by name. Two plans of the SAME program with equal signatures (and
+/// equal [`ExecPlan::shareable_sources`]) compute identical preamble bags
+/// for identical bindings: node names are SSA values, so an equal name in
+/// both plans denotes the same program value, and equal instance counts +
+/// routes mean the per-instance partitioning matches too. The name
+/// correspondence doubles as the `NodeId` remap for carried bags.
+fn preamble_shape(plan: &ExecPlan) -> Vec<(String, String, usize, Vec<String>)> {
+    let g = &plan.graph;
+    let mut shape: Vec<(String, String, usize, Vec<String>)> = g
+        .nodes
+        .iter()
+        .filter(|n| plan.shareable[n.id])
+        .map(|n| {
+            let inputs: Vec<String> = n
+                .inputs
+                .iter()
+                .map(|e| format!("{}:{:?}", g.nodes[e.src].name, e.route))
+                .collect();
+            let op = format!("{}{}", n.op.mnemonic(), if n.cond.is_some() { "?" } else { "" });
+            (n.name.clone(), op, plan.num_insts[n.id], inputs)
+        })
+        .collect();
+    shape.sort();
+    shape
+}
+
+/// Carry a template's materialized preamble store across a **revision**
+/// when the revised plan leaves the shareable preamble subgraph
+/// structurally unchanged (see [`preamble_shape`]): the cached bags are
+/// still byte-valid, only the `NodeId`s they are keyed by may have
+/// shifted — remap them by SSA name instead of dropping the store.
+/// Returns an empty store when anything about the subgraph differs (the
+/// previous, always-safe behavior).
+fn carry_preambles(old: &ExecPlan, new: &ExecPlan, store: &PreambleStore) -> PreambleStore {
+    if store.entries.is_empty()
+        || old.shareable_sources != new.shareable_sources
+        || preamble_shape(old) != preamble_shape(new)
+    {
+        return PreambleStore::default();
+    }
+    let new_ids: FxHashMap<&str, NodeId> = new
+        .graph
+        .nodes
+        .iter()
+        .filter(|n| new.shareable[n.id])
+        .map(|n| (n.name.as_str(), n.id))
+        .collect();
+    let mut out = PreambleStore::default();
+    for (sig, bags) in &store.entries {
+        let mut remapped = PreambleBags::default();
+        let mut ok = true;
+        for (&id, per_inst) in bags.iter() {
+            let Some(&nid) = old
+                .graph
+                .nodes
+                .get(id)
+                .and_then(|n| new_ids.get(n.name.as_str()))
+            else {
+                ok = false;
+                break;
+            };
+            remapped.insert(nid, per_inst.clone());
+        }
+        if ok {
+            out.entries.push_back((sig.clone(), Arc::new(remapped)));
+        }
+    }
+    out
 }
 
 /// Assemble per-instance capture-sink entries into [`PreambleBags`],
@@ -394,6 +501,9 @@ pub struct TemplateCache {
     misses: AtomicU64,
     revisions: AtomicU64,
     evictions: AtomicU64,
+    /// Preamble-store entries carried across revisions (structurally
+    /// unchanged preamble subgraphs; see `carry_preambles`).
+    preambles_carried: AtomicU64,
 }
 
 impl TemplateCache {
@@ -406,6 +516,7 @@ impl TemplateCache {
             misses: AtomicU64::new(0),
             revisions: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            preambles_carried: AtomicU64::new(0),
         }
     }
 
@@ -425,6 +536,10 @@ impl TemplateCache {
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
     }
+    /// Preamble-store entries carried across revisions so far.
+    pub fn preambles_carried(&self) -> u64 {
+        self.preambles_carried.load(Ordering::Relaxed)
+    }
     /// Resident templates.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().map.len()
@@ -441,6 +556,7 @@ impl TemplateCache {
         m.counter("serve.cache_revisions").store(self.revisions(), Ordering::Relaxed);
         m.counter("serve.cache_templates").store(self.len() as u64, Ordering::Relaxed);
         m.counter("serve.evictions_cost_weighted").store(self.evictions(), Ordering::Relaxed);
+        m.counter("serve.preambles_carried").store(self.preambles_carried(), Ordering::Relaxed);
     }
 
     /// Look up (or compile) the template for `key`. `source` is the
@@ -498,15 +614,26 @@ impl TemplateCache {
         // only when reality disagrees with the estimates — not merely
         // because stats exist.
         let baseline = {
-            let rows =
-                crate::opt::cost::estimate_rows(&graph, &crate::opt::cost::CostParams::default());
+            let params = crate::opt::cost::CostParams::default();
+            let rows = crate::opt::cost::estimate_rows(&graph, &params);
             let mut m: RowFeedback = FxHashMap::default();
             for n in &graph.nodes {
-                if !n.singleton {
-                    // Lineage names get the same backward-walk attribution
-                    // as `record_observed`, so observed-vs-baseline drift
-                    // comparison stays symmetric for fused chains.
-                    insert_with_fused_lineage(&mut m, n, rows[n.id]);
+                if n.singleton {
+                    continue;
+                }
+                m.insert(n.name.clone(), rows[n.id]);
+                // Lineage names get per-stage MODEL estimates, symmetric
+                // with the per-stage runtime counters `record_observed`
+                // reads — so observed-vs-baseline drift is compared
+                // stage by stage for fused chains (interior filter /
+                // flatMap stages included).
+                if let Rhs::Fused { stages, lineage, .. } = &n.op {
+                    let input_rows =
+                        n.inputs.first().map(|e| rows[e.src]).unwrap_or(0.0);
+                    let per = crate::opt::cost::fused_stage_rows(stages, input_rows, &params);
+                    for (name, est) in lineage.iter().zip(per) {
+                        m.insert(name.clone(), est);
+                    }
                 }
             }
             m
@@ -594,24 +721,35 @@ impl TemplateCache {
                     return None;
                 }
             };
+        let new_plan = Arc::new(ExecPlan::new(Arc::new(graph), workers));
+        // Materialized preamble results survive the revision ONLY when
+        // the binding-determined preamble subgraph is structurally
+        // unchanged (same nodes, ops, instance counts, wiring): the
+        // cached bags are then still exact, and only their NodeId keys
+        // need remapping. Any structural difference — re-partitioning,
+        // different hoisting or fusion inside the preamble — drops the
+        // store (the previous, always-safe behavior).
+        let carried = {
+            let store = tpl.preambles.lock().unwrap();
+            carry_preambles(&tpl.plan, &new_plan, &store)
+        };
+        let carried_entries = carried.entries.len() as u64;
         let revised = Arc::new(PlanTemplate {
             key: tpl.key,
             source: tpl.source.clone(),
             program: tpl.program.clone(),
             opt: tpl.opt,
-            plan: Arc::new(ExecPlan::new(Arc::new(graph), workers)),
+            plan: new_plan,
             revision: tpl.revision + 1,
             compile_time: t0.elapsed(),
             observed: Mutex::new(ObservedStats { latest: None, based_on: Some(latest) }),
             // Usage history survives the revision (the entry is the same
-            // logical template for eviction purposes)...
+            // logical template for eviction purposes).
             uses: AtomicU64::new(tpl.uses.load(Ordering::Relaxed)),
             last_used: Mutex::new(*tpl.last_used.lock().unwrap()),
-            // ...but materialized preamble results do NOT: the revised
-            // plan may partition, hoist, or fuse differently, so every
-            // cached bag is invalid for it.
-            preambles: Mutex::new(PreambleStore::default()),
+            preambles: Mutex::new(carried),
         });
+        self.preambles_carried.fetch_add(carried_entries, Ordering::Relaxed);
         // Mark the old entry as revised-from so a racing lane that still
         // holds it does not immediately revise again.
         obs.based_on = obs.latest.take();
@@ -829,6 +967,45 @@ mod tests {
     }
 
     #[test]
+    fn preamble_store_carries_only_across_structurally_unchanged_plans() {
+        use crate::value::Value;
+        crate::workload::registry::global()
+            .put("tplcarry_src", vec![Value::I64(1), Value::I64(2)]);
+        let g = crate::compile_source(
+            "d = 1; while (d <= 3) { v = source(\"tplcarry_src\").map(|x| x + 1); collect(v, \"v\"); d = d + 1; }",
+        )
+        .unwrap();
+        crate::workload::registry::global().clear_prefix("tplcarry_src");
+        let plan_a = ExecPlan::new(Arc::new(g.clone()), 2);
+        let plan_b = ExecPlan::new(Arc::new(g.clone()), 2);
+        let plan_w4 = ExecPlan::new(Arc::new(g), 4);
+        assert!(plan_a.shareable.iter().any(|&s| s), "premise: shareable preamble");
+
+        let mut store = PreambleStore::default();
+        let bags: PreambleBags = plan_a
+            .shareable
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s)
+            .map(|(id, _)| (id, vec![Vec::new(); plan_a.num_insts[id]]))
+            .collect();
+        store.entries.push_back((sig_of(1), Arc::new(bags)));
+
+        // Identical structure: the entry is carried, keys land on the
+        // same shareable node set.
+        let carried = carry_preambles(&plan_a, &plan_b, &store);
+        assert_eq!(carried.entries.len(), 1, "structurally unchanged plan keeps the store");
+        let (_, carried_bags) = &carried.entries[0];
+        for (id, &s) in plan_b.shareable.iter().enumerate() {
+            assert_eq!(s, carried_bags.contains_key(&id), "node {id} remap");
+        }
+
+        // Different worker count changes instance counts: dropped.
+        let dropped = carry_preambles(&plan_a, &plan_w4, &store);
+        assert!(dropped.entries.is_empty(), "re-partitioned preamble must drop the store");
+    }
+
+    #[test]
     fn binding_signature_matches_content_not_allocation_identity() {
         use crate::value::Value;
         crate::workload::registry::global().put(
@@ -912,6 +1089,71 @@ mod tests {
             tpl.observed_rows(&f_name),
             Some(fused_rows),
             "filter's pre-fusion name carries the fused observation (maps are 1:1)"
+        );
+    }
+
+    #[test]
+    fn interior_stage_observations_use_measured_rows() {
+        // map(+1) → filter(even) → map(pair) fuses into one chain. The
+        // HEAD map's cardinality (all 64 input rows) is invisible from
+        // the fused tail's output (32 rows) — the old 1:1 backward walk
+        // stopped at the filter. The per-stage runtime counters must pin
+        // the MEASURED value for every interior stage.
+        let lit = (0..64).map(|i| i.to_string()).collect::<Vec<_>>().join(", ");
+        let owned = format!(
+            "v = bag({lit}); a = v.map(|x| x + 1); f = a.filter(|x| x % 2 == 0); t = f.map(|x| pair(x % 4, x)); o = t.reduceByKey(|p, q| p + q); collect(o, \"out\");"
+        );
+        let src: &str = &owned;
+        // Pre-fusion names of the chain members.
+        let (raw, _) =
+            crate::compile_with(&parse_and_lower(src).unwrap(), &OptConfig::none()).unwrap();
+        let head_map = raw
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, crate::frontend::Rhs::Map { .. }) && !n.singleton)
+            .unwrap()
+            .name
+            .clone();
+        let filt = raw
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, crate::frontend::Rhs::Filter { .. }))
+            .unwrap()
+            .name
+            .clone();
+        let cache = TemplateCache::new(4);
+        let reg = Registry::new();
+        let opt = OptConfig::default();
+        let (tpl, _) = cache
+            .get_or_compile(key_for(src, &opt), Some(src), &opt, 2, &reg, false, || {
+                parse_and_lower(src)
+            })
+            .unwrap();
+        assert!(
+            tpl.plan
+                .graph
+                .nodes
+                .iter()
+                .any(|n| matches!(n.op, crate::frontend::Rhs::Fused { .. })),
+            "premise: the chain fused"
+        );
+        let out = crate::exec::driver::run_plan(
+            tpl.plan.clone(),
+            &crate::exec::ExecConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        tpl.record_observed(&out);
+        // Mean rows per logical bag: totals × insts / bags; one logical
+        // bag over 2 instances gives exactly the element totals.
+        assert_eq!(
+            tpl.observed_rows(&head_map),
+            Some(64.0),
+            "head map's measured interior cardinality"
+        );
+        assert_eq!(
+            tpl.observed_rows(&filt),
+            Some(32.0),
+            "filter's measured output cardinality (even survivors)"
         );
     }
 

@@ -215,6 +215,19 @@ collect(acc, "acc");
 /// The collect labels [`random_laby_program`] may emit.
 pub const RANDOM_PROGRAM_LABELS: &[&str] = &["acc", "joined", "counts"];
 
+/// Channel batch sizes the property suites sweep: 1 turns every element
+/// into a batch boundary (close-marker piggybacking on singleton
+/// batches), 2 and 7 produce partial final flushes at odd offsets, 256
+/// is the production default.
+pub const BATCH_SIZES: &[usize] = &[1, 2, 7, 256];
+
+/// Deterministic "random" batch size for a property seed — the seeded
+/// families run each program at one of [`BATCH_SIZES`], so the whole
+/// sweep covers every size without multiplying the suite's runtime.
+pub fn batch_for_seed(seed: u64) -> usize {
+    BATCH_SIZES[(seed % BATCH_SIZES.len() as u64) as usize]
+}
+
 /// Outcome of a property run.
 #[derive(Debug)]
 pub enum PropResult<T> {

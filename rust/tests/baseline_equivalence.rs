@@ -6,7 +6,9 @@
 use labyrinth::baselines::{separate_jobs, single_thread};
 use labyrinth::exec::{run, ExecConfig, ExecMode};
 use labyrinth::frontend::parse_and_lower;
-use labyrinth::util::quickcheck::{random_laby_program as random_program, RANDOM_PROGRAM_LABELS};
+use labyrinth::util::quickcheck::{
+    batch_for_seed, random_laby_program as random_program, RANDOM_PROGRAM_LABELS,
+};
 use labyrinth::value::Value;
 
 fn multiset(mut v: Vec<Value>) -> Vec<Value> {
@@ -27,13 +29,17 @@ fn random_programs_agree_across_all_executors() {
         // Labyrinth: multiple worker counts + both modes.
         let graph = labyrinth::compile(&program)
             .unwrap_or_else(|e| panic!("seed {seed}: compile failed: {e}\n{src}"));
+        // Batch size randomized per seed (batch-boundary coverage).
+        let batch = batch_for_seed(seed);
         for workers in [1usize, 3] {
             for mode in [ExecMode::Pipelined, ExecMode::Barrier] {
                 let out = run(
                     &graph,
-                    &ExecConfig { workers, mode, ..Default::default() },
+                    &ExecConfig { workers, mode, batch, ..Default::default() },
                 )
-                .unwrap_or_else(|e| panic!("seed {seed} w={workers} {mode:?}: {e}\n{src}"));
+                .unwrap_or_else(|e| {
+                    panic!("seed {seed} w={workers} {mode:?} batch={batch}: {e}\n{src}")
+                });
                 for label in labels {
                     assert_eq!(
                         multiset(out.collected(label).to_vec()),

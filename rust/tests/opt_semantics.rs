@@ -9,7 +9,9 @@ use labyrinth::baselines::single_thread;
 use labyrinth::exec::{run, ExecConfig, ExecMode};
 use labyrinth::frontend::parse_and_lower;
 use labyrinth::opt::OptConfig;
-use labyrinth::util::quickcheck::{random_laby_program, RANDOM_PROGRAM_LABELS};
+use labyrinth::util::quickcheck::{
+    batch_for_seed, random_laby_program, BATCH_SIZES, RANDOM_PROGRAM_LABELS,
+};
 use labyrinth::value::Value;
 
 fn multiset(mut v: Vec<Value>) -> Vec<Value> {
@@ -18,6 +20,10 @@ fn multiset(mut v: Vec<Value>) -> Vec<Value> {
 }
 
 fn check_config(seed: u64, src: &str, ocfg: &OptConfig, what: &str) {
+    // The channel batch size is randomized per seed over {1, 2, 7, 256}
+    // so batch-boundary bugs (close-marker piggybacking on singleton
+    // batches, partial final flushes) surface across the family.
+    let batch = batch_for_seed(seed);
     let program = parse_and_lower(src)
         .unwrap_or_else(|e| panic!("seed {seed}: parse/lower failed: {e}\n{src}"));
     let oracle = single_thread::run(&program, &Default::default())
@@ -26,10 +32,10 @@ fn check_config(seed: u64, src: &str, ocfg: &OptConfig, what: &str) {
         .unwrap_or_else(|e| panic!("seed {seed} [{what}]: compile failed: {e}\n{src}"));
     for workers in [1usize, 3] {
         for mode in [ExecMode::Pipelined, ExecMode::Barrier] {
-            let out = run(&graph, &ExecConfig { workers, mode, ..Default::default() })
+            let out = run(&graph, &ExecConfig { workers, mode, batch, ..Default::default() })
                 .unwrap_or_else(|e| {
                     panic!(
-                        "seed {seed} [{what}] w={workers} {mode:?}: {e}\n{src}\n{}",
+                        "seed {seed} [{what}] w={workers} {mode:?} batch={batch}: {e}\n{src}\n{}",
                         report.render()
                     )
                 });
@@ -37,7 +43,7 @@ fn check_config(seed: u64, src: &str, ocfg: &OptConfig, what: &str) {
                 assert_eq!(
                     multiset(out.collected(label).to_vec()),
                     multiset(oracle.collected(label).to_vec()),
-                    "seed {seed} [{what}] label {label} workers {workers} {mode:?}\n{src}\n{}",
+                    "seed {seed} [{what}] label {label} workers {workers} {mode:?} batch={batch}\n{src}\n{}",
                     report.render()
                 );
             }
@@ -138,6 +144,41 @@ fn zero_trip_loop_over_unregistered_source_runs_under_default_config() {
         multiset(out.collected("ok").to_vec()),
         vec![Value::I64(1), Value::I64(2)]
     );
+}
+
+#[test]
+fn every_batch_size_agrees_on_the_same_program() {
+    // The same optimized graph run at batch ∈ {1, 2, 7, 256} AND through
+    // the legacy element-at-a-time data plane must produce identical
+    // multisets — batched and element-wise execution agree exactly.
+    for seed in [0u64, 5, 11] {
+        let src = random_laby_program(seed);
+        let program = parse_and_lower(&src).unwrap();
+        let (graph, _) = labyrinth::compile_with(&program, &OptConfig::default()).unwrap();
+        let reference = run(
+            &graph,
+            &ExecConfig { workers: 2, element_path: true, ..Default::default() },
+        )
+        .unwrap_or_else(|e| panic!("seed {seed} element path: {e}\n{src}"));
+        for &batch in BATCH_SIZES {
+            // element_path pinned false: the batched side must stay
+            // batched even when LABY_ELEMENT_PATH=1 is set process-wide
+            // (the CI element-path leg), or this agreement test would
+            // compare the element path against itself.
+            let out = run(
+                &graph,
+                &ExecConfig { workers: 2, batch, element_path: false, ..Default::default() },
+            )
+            .unwrap_or_else(|e| panic!("seed {seed} batch={batch}: {e}\n{src}"));
+            for label in RANDOM_PROGRAM_LABELS {
+                assert_eq!(
+                    multiset(out.collected(label).to_vec()),
+                    multiset(reference.collected(label).to_vec()),
+                    "seed {seed} label {label} batch={batch}\n{src}"
+                );
+            }
+        }
+    }
 }
 
 #[test]

@@ -487,10 +487,11 @@ fn preamble_sharing_can_be_disabled() {
 #[test]
 fn adaptive_revision_invalidates_shared_preambles() {
     // With adaptive on, the second identical submission usually revises
-    // (observed rows vs model guesses). A revision is a NEW template —
-    // its preamble store must start empty, so the run after a revision
-    // re-materializes instead of replaying a stale plan's bags (node ids
-    // shift under re-optimization).
+    // (observed rows vs model guesses). A revision is a NEW template:
+    // its preamble store either starts empty or — when the preamble
+    // subgraph is structurally unchanged — carries remapped entries.
+    // Either way, every post-revision run must produce exact results
+    // (a stale replay of the wrong plan's node ids would not).
     let svc = JobService::new(ServeConfig {
         slots: 1,
         workers: 2,
@@ -512,6 +513,63 @@ fn adaptive_revision_invalidates_shared_preambles() {
         got.sort();
         assert_eq!(got, want, "submission {i} (cache {:?})", res.cache);
     }
+}
+
+#[test]
+fn revision_with_unchanged_preamble_still_replays() {
+    // An adaptive revision driven by IN-LOOP drift (a filter that keeps
+    // everything vs the model's 0.25 guess) leaves the hoisted,
+    // binding-determined preamble subgraph structurally unchanged. The
+    // materialized preamble bags must be CARRIED across the revision and
+    // replayed by later identical submissions — not recomputed (the
+    // pre-carry behavior dropped the store on every revision).
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        adaptive: true,
+        ..Default::default()
+    });
+    let src = r#"
+        d = 1;
+        while (d <= 3) {
+            attrs = source("xrev_attrs").map(|x| pair(x % 8, x));
+            v = source("xrev_probe").map(|x| pair(x % 8, d)).filter(|p| fst(p) >= 0);
+            j = v.join(attrs);
+            t = j.map(|p| snd(snd(p)));
+            collect(t, "out");
+            d = d + 1;
+        }
+    "#;
+    let attrs: Vec<Value> = (0..8).map(Value::I64).collect();
+    let probe: Vec<Value> = (0..16).map(Value::I64).collect();
+    let run = || -> Vec<Value> {
+        let res = svc
+            .run(
+                JobRequest::source(src)
+                    .bind("xrev_attrs", attrs.clone())
+                    .bind("xrev_probe", probe.clone()),
+            )
+            .unwrap();
+        let mut got = res.output.collected("out").to_vec();
+        got.sort();
+        got
+    };
+    let want = run(); // Miss: materializes + stores the preamble bags.
+    for i in 0..3 {
+        assert_eq!(run(), want, "submission {}", i + 1);
+    }
+    assert!(
+        svc.cache().revisions() >= 1,
+        "test premise: the in-loop filter's drift forces a revision"
+    );
+    assert!(
+        svc.cache().preambles_carried() >= 1,
+        "structurally unchanged preamble store must survive the revision"
+    );
+    assert!(
+        svc.metrics().get("serve.preamble_hits") >= 1,
+        "carried preamble bags must replay after the revision"
+    );
 }
 
 #[test]
@@ -550,4 +608,61 @@ fn fused_feedback_reaches_recompile_and_converges() {
     }
     let r3 = svc.run(JobRequest::source(src).bind("fusefb_data", data())).unwrap();
     assert_eq!(r3.cache, CacheOutcome::Hit, "fused template converges under feedback");
+}
+
+#[test]
+fn interior_stage_counters_reach_recompile_and_converge() {
+    // map → filter → map fuses into one chain whose HEAD map sits beyond
+    // the filter boundary: its cardinality cannot be recovered from the
+    // fused tail's output count (the old lineage walk stopped at the
+    // filter). The per-stage runtime counters in `FusedT` carry measured
+    // rows for every interior stage into the recompile; the revised
+    // template must converge — no revision oscillation — and preserve
+    // semantics throughout.
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        adaptive: true,
+        ..Default::default()
+    });
+    let src = "v = source(\"intfb_data\"); a = v.map(|x| x + 1); f = a.filter(|x| x % 2 == 0); t = f.map(|x| pair(x % 4, x)); o = t.reduceByKey(|p, q| p + q); collect(o, \"out\");";
+    let data = || dataset(0, 64);
+    let want = {
+        let reg = Arc::new(labyrinth::workload::registry::Registry::new());
+        reg.put("intfb_data", data());
+        let program = labyrinth::frontend::parse_and_lower(src).unwrap();
+        let (graph, _) = labyrinth::compile_with_registry(
+            &program,
+            &labyrinth::opt::OptConfig::default(),
+            &reg,
+        )
+        .unwrap();
+        let out = labyrinth::exec::run(
+            &graph,
+            &ExecConfig { workers: 2, registry: reg, ..Default::default() },
+        )
+        .unwrap();
+        let mut got = out.collected("out").to_vec();
+        got.sort();
+        got
+    };
+
+    let r1 = svc.run(JobRequest::source(src).bind("intfb_data", data())).unwrap();
+    assert_eq!(r1.cache, CacheOutcome::Miss);
+    let r2 = svc.run(JobRequest::source(src).bind("intfb_data", data())).unwrap();
+    assert_eq!(r2.cache, CacheOutcome::Revised, "drifted interior stats trigger a revision");
+    // The recompile saw measured rows pinned for the whole pre-fusion
+    // chain — head map AND filter AND tail — not just the surviving tail.
+    assert!(
+        r2.output.metrics.get("opt.feedback_rows_pinned") >= 3,
+        "interior stages beyond the filter boundary must reach the recompile (got {})",
+        r2.output.metrics.get("opt.feedback_rows_pinned")
+    );
+    for r in [r1, r2] {
+        let mut got = r.output.collected("out").to_vec();
+        got.sort();
+        assert_eq!(got, want, "revisions preserve semantics");
+    }
+    let r3 = svc.run(JobRequest::source(src).bind("intfb_data", data())).unwrap();
+    assert_eq!(r3.cache, CacheOutcome::Hit, "per-stage pins converge");
 }
