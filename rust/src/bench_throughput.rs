@@ -138,7 +138,12 @@ fn measure(
 
 /// Render the measured points as JSON (handwritten — serde is not in the
 /// offline registry; see DESIGN.md §2).
-fn to_json(elements: usize, points: &[Point], speedup: Option<f64>) -> String {
+fn to_json(
+    elements: usize,
+    points: &[Point],
+    speedup: Option<f64>,
+    trace_gate_overhead: Option<f64>,
+) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     let _ = writeln!(s, "  \"bench\": \"throughput\",");
@@ -148,6 +153,11 @@ fn to_json(elements: usize, points: &[Point], speedup: Option<f64>) -> String {
             s,
             "  \"fused_chain_speedup_vs_element_path\": {x:.3},"
         );
+    }
+    if let Some(x) = trace_gate_overhead {
+        // Fractional slowdown of the disabled-tracer path vs no tracer
+        // (acceptance budget: <= 0.02).
+        let _ = writeln!(s, "  \"trace_gate_overhead\": {x:.4},");
     }
     s.push_str("  \"series\": [\n");
     for (i, p) in points.iter().enumerate() {
@@ -215,11 +225,39 @@ pub fn throughput_benchmark(smoke: bool) {
         .find(|p| p.workload == "fused-chain" && p.workers == 1 && !p.element_path)
         .expect("fused-chain w=1 measured");
     let speedup = batched.elems_per_sec / legacy.elems_per_sec.max(1e-9);
+    let batched_ns = batched.median_ns;
     eprintln!(
         "fused-chain w=1: batched {:.0} elems/s vs element-path {:.0} elems/s — {speedup:.2}x",
         batched.elems_per_sec, legacy.elems_per_sec
     );
     points.push(legacy);
+
+    // Trace-gate overhead: the same fused chain with a PRESENT but
+    // switched-off tracer (one gate load per epoch, a never-taken branch
+    // per batch) vs the no-tracer series above. Budget: <= 2%. Reported
+    // here and in the JSON rather than hard-asserted — wall-clock ratios
+    // on shared CI machines are too noisy for a test gate.
+    let trace_gate_overhead = {
+        let (graph, _) = crate::compile_with_registry(fused, &OptConfig::default(), &reg)
+            .expect("fused-chain compiles");
+        let cfg = ExecConfig {
+            workers: 1,
+            registry: reg.clone(),
+            trace: Some(Arc::new(crate::obs::Tracer::new(false))),
+            ..Default::default()
+        };
+        let m = bench.run("fused-chain w=1 (trace gate off)", || {
+            let out = run(&graph, &cfg).unwrap_or_else(|e| panic!("trace-gate: {e}"));
+            assert!(!out.collected("n").is_empty());
+        });
+        let gated_ns = m.median().as_nanos().max(1);
+        let overhead = gated_ns as f64 / batched_ns as f64 - 1.0;
+        eprintln!(
+            "trace-gate overhead (disabled tracer vs none), fused-chain w=1: {:+.2}%",
+            overhead * 100.0
+        );
+        overhead
+    };
 
     // Paper-style table: workloads × worker counts (median run time).
     let mut table = Table::new(
@@ -241,7 +279,7 @@ pub fn throughput_benchmark(smoke: bool) {
     }
     table.print();
 
-    let json = to_json(elements, &points, Some(speedup));
+    let json = to_json(elements, &points, Some(speedup), Some(trace_gate_overhead));
     let path = "BENCH_throughput.json";
     std::fs::write(path, &json).unwrap_or_else(|e| panic!("writing {path}: {e}"));
     println!("wrote {path}");

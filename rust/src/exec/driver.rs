@@ -80,6 +80,24 @@ pub fn run_plan_on_pool(
     metrics.add("exec.hoisted_nodes", plan.hoisted.iter().filter(|&&h| h).count() as u64);
     let start = Instant::now();
 
+    // Tracing: gate-checked ONCE per epoch. A `None` (or switched-off)
+    // tracer costs nothing past this point — workers get `trace: None`
+    // and every instrument site below is a never-taken branch.
+    let tracer = cfg.trace.as_ref().filter(|t| t.on()).cloned();
+    let mut dspans = tracer.as_ref().map(|t| {
+        let lane = t.lane("driver");
+        t.local(lane)
+    });
+    let trace_lanes: Vec<u32> = tracer
+        .as_ref()
+        .map(|t| (0..plan.workers).map(|w| t.lane(&format!("worker {w}"))).collect())
+        .unwrap_or_default();
+    // Epoch span opens here (covers dispatch → teardown done); each
+    // control-path append is marked and lowered to `Superstep` spans at
+    // epoch end (a superstep lasts until the next append).
+    let epoch_t0 = dspans.as_ref().map(|sp| sp.now());
+    let mut chain_marks: Vec<(u32, BlockId, u32, u64)> = Vec::new();
+
     let mut worker_txs: Vec<Sender<WorkerMsg>> = Vec::with_capacity(plan.workers);
     let mut worker_rxs = Vec::with_capacity(plan.workers);
     for _ in 0..plan.workers {
@@ -107,6 +125,8 @@ pub fn run_plan_on_pool(
         cancel: cfg.cancel.clone(),
         preamble: cfg.preamble.clone(),
         element_path: cfg.element_path,
+        trace: tracer.clone(),
+        trace_lanes,
     });
     if let Some(replay) = cfg.preamble.as_ref().and_then(|p| p.replay.as_ref()) {
         metrics.add("exec.preamble_replay_nodes", replay.len() as u64);
@@ -119,6 +139,9 @@ pub fn run_plan_on_pool(
     }
     drop(done_tx);
     drop(driver_tx);
+    if let (Some(sp), Some(t0)) = (dspans.as_mut(), epoch_t0) {
+        sp.record(crate::obs::SpanKind::Dispatch, t0);
+    }
 
     // Driver state.
     let graph = &plan.graph;
@@ -156,12 +179,22 @@ pub fn run_plan_on_pool(
         }
     };
 
+    // Driver-loop counters, resolved once: the recv loop bumps these per
+    // message, and `Metrics::add`'s name-map lock per event would sit on
+    // the decision-relay critical path.
+    let d_appends = metrics.handle("driver.appends");
+    let d_decisions = metrics.handle("driver.decisions");
+    let d_bag_dones = metrics.handle("driver.bag_dones");
+
     // Kick off with the entry chain.
     {
         let entry = graph.entry_chain.clone();
         let final_ = chain_is_final(&entry);
+        if let Some(t) = &tracer {
+            chain_marks.push((path.len() + 1, entry[0], entry.len() as u32, t.now_ns()));
+        }
         broadcast(&mut path, &mut done_at, &entry, final_, &worker_txs);
-        metrics.add("driver.appends", entry.len() as u64);
+        d_appends.add(entry.len() as u64);
     }
 
     let advance_frontier =
@@ -253,10 +286,18 @@ pub fn run_plan_on_pool(
                 let chain =
                     if value { spec.then_chain.clone() } else { spec.else_chain.clone() };
                 let final_ = chain_is_final(&chain);
-                metrics.add("driver.decisions", 1);
-                metrics.add("driver.appends", chain.len() as u64);
+                d_decisions.incr();
+                d_appends.add(chain.len() as u64);
                 match cfg.mode {
                     ExecMode::Pipelined => {
+                        if let Some(t) = &tracer {
+                            chain_marks.push((
+                                path.len() + 1,
+                                chain[0],
+                                chain.len() as u32,
+                                t.now_ns(),
+                            ));
+                        }
                         broadcast(&mut path, &mut done_at, &chain, final_, &worker_txs)
                     }
                     ExecMode::Barrier => {
@@ -264,6 +305,14 @@ pub fn run_plan_on_pool(
                         // complete (per-step synchronization barrier).
                         advance_frontier(&mut frontier, &done_at, &path, &plan);
                         if frontier >= path.len() as usize {
+                            if let Some(t) = &tracer {
+                                chain_marks.push((
+                                    path.len() + 1,
+                                    chain[0],
+                                    chain.len() as u32,
+                                    t.now_ns(),
+                                ));
+                            }
                             broadcast(&mut path, &mut done_at, &chain, final_, &worker_txs);
                         } else {
                             pending_decision = Some((chain, final_));
@@ -274,11 +323,19 @@ pub fn run_plan_on_pool(
             DriverMsg::BagDone { node: _, inst: _, bag_len } => {
                 let idx = (bag_len - 1) as usize;
                 done_at[idx] += 1;
-                metrics.add("driver.bag_dones", 1);
+                d_bag_dones.incr();
                 if cfg.mode == ExecMode::Barrier {
                     advance_frontier(&mut frontier, &done_at, &path, &plan);
                     if frontier >= path.len() as usize {
                         if let Some((chain, final_)) = pending_decision.take() {
+                            if let Some(t) = &tracer {
+                                chain_marks.push((
+                                    path.len() + 1,
+                                    chain[0],
+                                    chain.len() as u32,
+                                    t.now_ns(),
+                                ));
+                            }
                             broadcast(&mut path, &mut done_at, &chain, final_, &worker_txs);
                         }
                     }
@@ -313,12 +370,39 @@ pub fn run_plan_on_pool(
     // (the next job must not race a straggler from this one). This runs
     // on EVERY exit — success, deadline, stall, panic, or cancel — so an
     // aborted epoch can never poison the pool for the next job.
+    let drain_t0 = dspans.as_ref().map(|sp| sp.now());
     for tx in &worker_txs {
         let _ = tx.send(WorkerMsg::Shutdown);
     }
     for _ in 0..pool.size() {
         let _ = done_rx.recv();
     }
+
+    // Close out the driver lane (workers absorbed their own rings on
+    // shutdown): drain span, the superstep spans derived from the chain
+    // marks, and the whole-epoch span. Runs on error exits too, so a
+    // canceled or deadlined epoch still leaves a coherent trace.
+    if let Some(sp) = dspans.as_mut() {
+        if let Some(t0) = drain_t0 {
+            sp.record(crate::obs::SpanKind::Drain, t0);
+        }
+        let end = sp.now();
+        for (i, &(pos, block, blocks, ts)) in chain_marks.iter().enumerate() {
+            let until = chain_marks.get(i + 1).map_or(end, |m| m.3);
+            sp.record_span(
+                crate::obs::SpanKind::Superstep { pos, block, blocks },
+                ts,
+                until.saturating_sub(ts),
+            );
+        }
+        if let Some(t0) = epoch_t0 {
+            sp.record_span(crate::obs::SpanKind::Epoch, t0, end.saturating_sub(t0));
+        }
+    }
+    if let (Some(t), Some(sp)) = (tracer.as_ref(), dspans) {
+        t.absorb(sp);
+    }
+
     if let Some(e) = error {
         return Err(e);
     }
@@ -333,6 +417,7 @@ pub fn run_plan_on_pool(
                 .iter()
                 .map(|s| s.load(std::sync::atomic::Ordering::Relaxed))
                 .collect(),
+            self_time_ns: c.self_ns.load(std::sync::atomic::Ordering::Relaxed),
         })
         .collect();
 

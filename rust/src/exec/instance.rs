@@ -42,6 +42,9 @@ pub struct Env<'a> {
     /// Legacy element-at-a-time data plane (see
     /// [`super::ExecConfig::element_path`]).
     pub element_path: bool,
+    /// This worker's span ring when the epoch is traced (`None` on
+    /// untraced runs — the instrument sites below reduce to a branch).
+    pub spans: Option<&'a mut crate::obs::SpanBuf>,
 }
 
 use std::sync::atomic::Ordering;
@@ -404,7 +407,13 @@ impl Instance {
             }
         } else if n_inputs == 0 {
             // Sources generate immediately.
+            let t0 = env.spans.as_ref().map(|sp| sp.now());
             self.transform.generate(&mut self.staging);
+            if let (Some(sp), Some(t0)) = (env.spans.as_mut(), t0) {
+                let kind = crate::obs::SpanKind::Generate { node: self.node as u32, step: len };
+                let dur = sp.record(kind, t0);
+                env.node_counters[self.node].self_ns.fetch_add(dur, Ordering::Relaxed);
+            }
             self.route_staging(env);
         }
         env.counters.bags_started.fetch_add(1, Ordering::Relaxed);
@@ -420,6 +429,7 @@ impl Instance {
     /// for differential runs).
     fn feed(&mut self, env: &mut Env) -> bool {
         let Some(cur) = &mut self.cur else { return false };
+        let step = cur.len;
         let mut all_done = true;
         for i in 0..self.bufs.len() {
             let Some(a) = &mut cur.active[i] else { continue };
@@ -430,6 +440,7 @@ impl Instance {
                 if a.fed < buf.items.len() {
                     let new = &buf.items[a.fed..];
                     a.fed = buf.items.len();
+                    let t0 = env.spans.as_ref().map(|sp| sp.now());
                     if env.element_path {
                         for v in new {
                             // Faithful legacy cost profile: one clone +
@@ -441,11 +452,24 @@ impl Instance {
                         env.counters.batch_pushes.fetch_add(1, Ordering::Relaxed);
                         self.transform.push_in_batch(i, new, &mut self.staging);
                     }
+                    if let (Some(sp), Some(t0)) = (env.spans.as_mut(), t0) {
+                        let kind =
+                            crate::obs::SpanKind::NodeBatch { node: self.node as u32, step };
+                        let dur = sp.record(kind, t0);
+                        env.node_counters[self.node].self_ns.fetch_add(dur, Ordering::Relaxed);
+                    }
                 }
                 let expected = env.plan.in_edges[self.node][i].expected_closes;
                 if buf.closes >= expected && !a.closed_delivered {
                     a.closed_delivered = true;
+                    let t0 = env.spans.as_ref().map(|sp| sp.now());
                     self.transform.close_in_bag(i, &mut self.staging);
+                    if let (Some(sp), Some(t0)) = (env.spans.as_mut(), t0) {
+                        let kind =
+                            crate::obs::SpanKind::NodeClose { node: self.node as u32, step };
+                        let dur = sp.record(kind, t0);
+                        env.node_counters[self.node].self_ns.fetch_add(dur, Ordering::Relaxed);
+                    }
                 }
             }
             if !a.closed_delivered {
@@ -461,7 +485,14 @@ impl Instance {
         if !self.replayed {
             // A replayed bag's transform was never opened; everything it
             // emits was already routed in `start_bag`.
+            let step = self.cur.as_ref().map_or(0, |c| c.len);
+            let t0 = env.spans.as_ref().map(|sp| sp.now());
             self.transform.close_out_bag(&mut self.staging);
+            if let (Some(sp), Some(t0)) = (env.spans.as_mut(), t0) {
+                let kind = crate::obs::SpanKind::NodeClose { node: self.node as u32, step };
+                let dur = sp.record(kind, t0);
+                env.node_counters[self.node].self_ns.fetch_add(dur, Ordering::Relaxed);
+            }
             self.route_staging(env);
         }
         let cur = self.cur.take().expect("finish without current bag");

@@ -78,6 +78,13 @@ pub struct ExecConfig {
     /// benchmark's before/after series; `LABY_ELEMENT_PATH=1` sets it
     /// process-wide through [`ExecConfig::default`].
     pub element_path: bool,
+    /// Optional span tracer (`obs::`). `None` — the default unless
+    /// `LABY_TRACE=1` — keeps the data plane free of any timing calls;
+    /// with a tracer whose gate is on, the driver and every worker
+    /// record epoch/superstep/per-node spans into per-thread ring
+    /// buffers. The gate is re-checked once per epoch, so one tracer
+    /// can be toggled across the runs of a resident `serve::` pool.
+    pub trace: Option<Arc<crate::obs::Tracer>>,
 }
 
 /// Materialized invariant-preamble outputs: shareable node id → the items
@@ -140,6 +147,7 @@ impl Default for ExecConfig {
             cancel: None,
             preamble: None,
             element_path: default_element_path(),
+            trace: crate::obs::default_tracer(),
         }
     }
 }
@@ -161,6 +169,12 @@ pub struct NodeRows {
     /// the tail's output count; these counters let adaptive
     /// re-optimization pin every pre-fusion stage. Empty for other ops.
     pub stage_rows: Vec<u64>,
+    /// Measured self-time (ns) spent inside this node's transformation
+    /// across all instances and steps — batch pushes, bag closes, and
+    /// generator runs. Zero unless the run was traced
+    /// ([`ExecConfig::trace`]): cardinality counters are always on, but
+    /// timing is only collected behind the tracer gate.
+    pub self_time_ns: u64,
 }
 
 /// Result of a run.

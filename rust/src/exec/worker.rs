@@ -77,6 +77,10 @@ pub struct NodeCounters {
     /// stage count at creation, empty otherwise). Accumulated once per
     /// completed bag from [`crate::ops::Transformation::take_stage_rows`].
     pub stage_rows: Vec<AtomicU64>,
+    /// Measured transformation self-time in nanoseconds (batch pushes +
+    /// bag closes + generator runs). Only written on traced runs — one
+    /// atomic add per traced span, zero cost otherwise.
+    pub self_ns: AtomicU64,
 }
 
 impl NodeCounters {
@@ -91,6 +95,7 @@ impl NodeCounters {
             rows: AtomicU64::new(0),
             bags: AtomicU64::new(0),
             stage_rows: (0..stages).map(|_| AtomicU64::new(0)).collect(),
+            self_ns: AtomicU64::new(0),
         }
     }
 }
@@ -130,6 +135,11 @@ pub struct WorkerShared {
     /// Legacy element-at-a-time data plane (see
     /// [`super::ExecConfig::element_path`]).
     pub element_path: bool,
+    /// Span tracer for this epoch, already gate-checked by the driver
+    /// (`Some` only when tracing is enabled right now).
+    pub trace: Option<Arc<crate::obs::Tracer>>,
+    /// Pre-allocated trace lane per worker index (empty when untraced).
+    pub trace_lanes: Vec<u32>,
 }
 
 /// Run one worker for one job **epoch**: process messages until
@@ -141,6 +151,10 @@ pub struct WorkerShared {
 /// bleeds between jobs or tenants.
 pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) {
     let plan = shared.plan.clone();
+    // Traced epochs get a thread-owned span ring; absorbed into the
+    // tracer sink once, on epoch teardown. `None` on untraced runs, so
+    // the data plane's only cost is the `Option` branch per batch.
+    let mut spans = shared.trace.as_ref().map(|t| t.local(shared.trace_lanes[w]));
     let mut path = ExecPath::new(plan.graph.cfg.num_blocks());
     // node id -> hosted instance (if any).
     let mut instances: Vec<Option<Instance>> = plan
@@ -195,6 +209,7 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
                             report_bag_done: shared.report_bag_done,
                             preamble: shared.preamble.as_ref(),
                             element_path: shared.element_path,
+                            spans: spans.as_mut(),
                         };
                         inst.on_append(start, &blocks, &mut env);
                     }
@@ -218,6 +233,7 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
                     report_bag_done: shared.report_bag_done,
                     preamble: shared.preamble.as_ref(),
                     element_path: shared.element_path,
+                    spans: spans.as_mut(),
                 };
                 inst.on_data(input, bag_len, items, close, &mut env);
             }
@@ -238,9 +254,13 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
                     report_bag_done: shared.report_bag_done,
                     preamble: shared.preamble.as_ref(),
                     element_path: shared.element_path,
+                    spans: spans.as_mut(),
                 };
                 inst.on_close(input, bag_len, &mut env);
             }
         }
+    }
+    if let (Some(t), Some(buf)) = (shared.trace.as_ref(), spans) {
+        t.absorb(buf);
     }
 }

@@ -64,6 +64,7 @@ pub mod error;
 pub mod exec;
 pub mod frontend;
 pub mod metrics;
+pub mod obs;
 pub mod opt;
 pub mod ops;
 pub mod programs;

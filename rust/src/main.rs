@@ -7,6 +7,8 @@
 //!               [--no-pushdown] [--no-join-sides] [--speculate auto|always|never]
 //!               [--explain] [--io-dir DIR] [--config FILE] [--sched] [--metrics]
 //! labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]
+//! labyrinth trace <program.laby> [--workers N] [--mode pipelined|barrier]
+//!               [--out trace.json] [--metrics]
 //! labyrinth serve <program.laby> [--workers N] [--slots S] [--requests R]
 //!               [--param name=value]... [--no-adaptive] [--metrics]
 //! labyrinth bench-serve [--smoke]
@@ -130,6 +132,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(&opts),
         "compile" => cmd_compile(&opts),
+        "trace" => cmd_trace(&opts),
         "generate" => cmd_generate(&opts),
         "config" => cmd_config(&opts),
         "serve" => cmd_serve(&opts),
@@ -160,6 +163,8 @@ fn print_usage() {
          \x20            [--no-pushdown] [--no-join-sides] [--speculate auto|always|never]\n\
          \x20            [--explain] [--io-dir DIR] [--config FILE] [--sched] [--metrics]\n\
          \x20 labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]\n\
+         \x20 labyrinth trace <program.laby> [--workers N] [--mode pipelined|barrier]\n\
+         \x20            [--out trace.json] [--metrics]\n\
          \x20 labyrinth serve <program.laby> [--workers N] [--slots S] [--requests R]\n\
          \x20            [--param name=value]... [--no-adaptive] [--no-share-preambles]\n\
          \x20            [--metrics]\n\
@@ -359,6 +364,57 @@ fn cmd_compile(opts: &Opts) -> Result<()> {
     Ok(())
 }
 
+/// `labyrinth trace <program.laby>`: run the program once with the span
+/// tracer enabled, print the per-superstep / per-operator breakdown, and
+/// write a Chrome-trace (Perfetto) JSON timeline to `--out`.
+fn cmd_trace(opts: &Opts) -> Result<()> {
+    let cfg = load_config(opts)?;
+    let program = read_program(opts)?;
+    let workers = cfg.get_usize("cli.workers", cfg.get_usize("exec.workers", 2)?)?;
+    let mode = match cfg.get_or("cli.mode", &cfg.get_or("exec.mode", "pipelined")).as_str() {
+        "barrier" => ExecMode::Barrier,
+        _ => ExecMode::Pipelined,
+    };
+    let io_dir = std::path::PathBuf::from(
+        cfg.get("cli.io-dir").or(cfg.get("exec.io_dir")).unwrap_or("."),
+    );
+    let (graph, explain) = labyrinth::compile_with(&program, &opt_config(opts, &cfg)?)?;
+    if opts.has("--explain") {
+        print!("{}", explain.render());
+    }
+
+    let tracer = std::sync::Arc::new(labyrinth::obs::Tracer::new(true));
+    let run_cfg = ExecConfig {
+        workers,
+        mode,
+        batch: cfg.get_usize("cli.batch", cfg.get_usize("exec.batch", 256)?)?,
+        io_dir,
+        trace: Some(tracer.clone()),
+        ..Default::default()
+    };
+    let out = labyrinth::exec::run(&graph, &run_cfg)?;
+    let trace = tracer.take();
+
+    print!("{}", labyrinth::obs::report::render_breakdown(&trace, &graph, &out));
+
+    let events = labyrinth::obs::chrome::chrome_events(&trace, Some(&graph));
+    if let Err(e) = labyrinth::obs::chrome::validate(&events) {
+        eprintln!("warning: trace failed structural validation: {e}");
+    }
+    let path = opts.get("--out").unwrap_or("trace.json");
+    std::fs::write(path, labyrinth::obs::chrome::render(&events))?;
+    println!(
+        "wrote {path}: {} events ({} dropped) — open in https://ui.perfetto.dev \
+         or chrome://tracing",
+        events.len(),
+        trace.dropped,
+    );
+    if opts.has("--metrics") {
+        print!("{}", out.metrics.report());
+    }
+    Ok(())
+}
+
 /// `labyrinth serve <program.laby>`: start a resident `JobService`, feed
 /// it `--requests` submissions of the program (with optional per-request
 /// `--param name=value` bindings as singleton named sources), and print
@@ -424,9 +480,10 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
             );
         }
     }
-    if opts.has("--metrics") {
-        print!("{}", svc.report());
-    }
+    // Shutdown snapshot: the full metrics report (counters + latency
+    // histograms) always prints — a resident service's operational record
+    // should not hide behind a flag. `--metrics` is still accepted.
+    print!("{}", svc.report());
     Ok(())
 }
 

@@ -1,16 +1,186 @@
-//! Execution metrics: counters and timers collected by the engine and the
-//! baselines, reported by the CLI and recorded in EXPERIMENTS.md.
+//! Execution metrics: counters and latency histograms collected by the
+//! engine, the serving tier, and the baselines; reported by the CLI and
+//! recorded in EXPERIMENTS.md.
+//!
+//! ## Name convention
+//!
+//! Every metric name is `<prefix>.<snake_case>`; the prefix states the
+//! subsystem that emits it (one prefix per subsystem, documented in the
+//! `docs/observability.md` glossary):
+//!
+//! | prefix    | emitted by                                            |
+//! |-----------|-------------------------------------------------------|
+//! | `exec.*`  | data plane (batches, elements, scatter, hoisting)     |
+//! | `coord.*` | §6.3 coordination (bags, state reuse, watchers)       |
+//! | `driver.*`| the driver loop (appends, decisions, bag-dones)       |
+//! | `opt.*`   | optimizer pass summary (forwarded at plan build)      |
+//! | `serve.*` | job service (queue, cache, jobs, preambles)           |
+//!
+//! ## Counters vs histograms
+//!
+//! Counters are monotonic `u64`s. Durations recorded through
+//! [`Metrics::record_time`] land in **log-bucketed histograms** (powers
+//! of two over nanoseconds), so the report can state p50/p90/p99 — not
+//! just a mean — for queue waits, compiles, and epoch latencies.
+//!
+//! Hot paths never call the name-keyed API per event: resolve once with
+//! [`Metrics::counter`] / [`Metrics::handle`] and bump the returned
+//! handle (see `exec::worker::EngineCounters`).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// A shareable metrics sink. All counters are lock-free; the name map is
-/// append-mostly and guarded by a mutex.
+/// Histogram bucket count: bucket `i` holds durations in
+/// `[2^i, 2^(i+1))` nanoseconds; 48 buckets cover ~3 days.
+pub const HIST_BUCKETS: usize = 48;
+
+/// A pre-resolved counter: one atomic add per bump, no name lookup, no
+/// lock. Obtain with [`Metrics::handle`]; clones share the counter.
+#[derive(Clone, Debug)]
+pub struct CounterHandle(Arc<AtomicU64>);
+
+impl CounterHandle {
+    /// Add `v`.
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Add 1.
+    pub fn incr(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A log-bucketed latency histogram: lock-free recording (one atomic
+/// add into a power-of-two bucket plus count/sum), quantiles estimated
+/// by linear interpolation inside the selected bucket — the estimate is
+/// always within the bucket holding the true quantile, i.e. within 2×.
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Bucket index for a nanosecond value: `floor(log2(ns))`, clamped.
+#[inline]
+fn bucket_of(ns: u64) -> usize {
+    (63 - (ns | 1).leading_zeros() as usize).min(HIST_BUCKETS - 1)
+}
+
+impl Histogram {
+    /// Record one duration.
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    /// Record one duration in nanoseconds.
+    pub fn record_ns(&self, ns: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations, nanoseconds.
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// Mean observation (zero when empty).
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns() / c)
+    }
+
+    /// Estimated quantile `q` in `[0, 1]`: walk the buckets to the one
+    /// holding rank `ceil(q * count)`, then interpolate linearly
+    /// between the bucket's bounds by rank position.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let count = self.count();
+        if count == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * count as f64).ceil() as u64).clamp(1, count);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let in_bucket = b.load(Ordering::Relaxed);
+            if in_bucket == 0 {
+                continue;
+            }
+            if seen + in_bucket >= rank {
+                let lo = 1u64 << i;
+                let hi = if i + 1 >= 64 { u64::MAX } else { (1u64 << (i + 1)) - 1 };
+                let frac = (rank - seen) as f64 / in_bucket as f64;
+                let est = lo as f64 + (hi - lo) as f64 * frac;
+                return Duration::from_nanos(est as u64);
+            }
+            seen += in_bucket;
+        }
+        Duration::ZERO
+    }
+
+    /// Snapshot the digest most reports want.
+    pub fn stats(&self) -> TimeStats {
+        TimeStats {
+            count: self.count(),
+            total: Duration::from_nanos(self.sum_ns()),
+            mean: self.mean(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+        }
+    }
+}
+
+/// Digest of one latency histogram.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TimeStats {
+    /// Observations recorded.
+    pub count: u64,
+    /// Sum of all observations.
+    pub total: Duration,
+    /// Mean observation.
+    pub mean: Duration,
+    /// Estimated median.
+    pub p50: Duration,
+    /// Estimated 90th percentile.
+    pub p90: Duration,
+    /// Estimated 99th percentile.
+    pub p99: Duration,
+}
+
+/// A shareable metrics sink. All counters and histogram cells are
+/// lock-free; the name maps are append-mostly and guarded by mutexes
+/// (resolve handles once — never per event — on hot paths).
 #[derive(Default, Debug)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, std::sync::Arc<AtomicU64>>>,
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
 }
 
 impl Metrics {
@@ -20,21 +190,40 @@ impl Metrics {
     }
 
     /// Get (or create) the counter handle for `name`.
-    pub fn counter(&self, name: &str) -> std::sync::Arc<AtomicU64> {
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
         let mut m = self.counters.lock().unwrap();
         m.entry(name.to_string()).or_default().clone()
     }
 
-    /// Add `v` to counter `name`.
+    /// Get (or create) a pre-resolved [`CounterHandle`] for `name` —
+    /// the hot-path API: resolve once, bump lock-free forever after.
+    pub fn handle(&self, name: &str) -> CounterHandle {
+        CounterHandle(self.counter(name))
+    }
+
+    /// Add `v` to counter `name` (locks the name map — fine for
+    /// low-rate events; use [`Metrics::handle`] in loops).
     pub fn add(&self, name: &str, v: u64) {
         self.counter(name).fetch_add(v, Ordering::Relaxed);
     }
 
-    /// Record a duration in nanoseconds under `name` (sum) and bump
-    /// `name.count`, enabling mean computation at report time.
+    /// Get (or create) the latency histogram for `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.hists.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Record a duration under `name` into its log-bucketed histogram
+    /// (count, sum, and p50/p90/p99 all derive from it at report time).
     pub fn record_time(&self, name: &str, d: Duration) {
-        self.add(&format!("{name}.ns"), d.as_nanos() as u64);
-        self.add(&format!("{name}.count"), 1);
+        self.histogram(name).record(d);
+    }
+
+    /// Digest of the histogram under `name` (`None` when absent/empty).
+    pub fn time_stats(&self, name: &str) -> Option<TimeStats> {
+        let h = self.hists.lock().unwrap().get(name).cloned()?;
+        let s = h.stats();
+        (s.count > 0).then_some(s)
     }
 
     /// Snapshot all counters.
@@ -57,29 +246,36 @@ impl Metrics {
             .unwrap_or(0)
     }
 
-    /// Render a human-readable report.
+    /// Render a human-readable report: counters first, then one line
+    /// per latency histogram with count, mean, and tail quantiles.
     pub fn report(&self) -> String {
         let snap = self.snapshot();
         let mut out = String::new();
         for (k, v) in &snap {
-            if let Some(base) = k.strip_suffix(".ns") {
-                let count = snap.get(&format!("{base}.count")).copied().unwrap_or(0);
-                if count > 0 {
-                    out.push_str(&format!(
-                        "{base}: total {} over {count} events (mean {})\n",
-                        crate::util::fmt_duration(Duration::from_nanos(*v)),
-                        crate::util::fmt_duration(Duration::from_nanos(v / count)),
-                    ));
-                    continue;
-                }
-            }
-            if k.ends_with(".count") && snap.contains_key(&format!(
-                "{}.ns",
-                k.trim_end_matches(".count")
-            )) {
-                continue; // folded into the .ns line above
-            }
             out.push_str(&format!("{k}: {v}\n"));
+        }
+        let hists: Vec<(String, Arc<Histogram>)> = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| (k.clone(), h.clone()))
+            .collect();
+        for (k, h) in hists {
+            let s = h.stats();
+            if s.count == 0 {
+                continue;
+            }
+            let f = crate::util::fmt_duration;
+            out.push_str(&format!(
+                "{k}: total {} over {} events (mean {}, p50 {}, p90 {}, p99 {})\n",
+                f(s.total),
+                s.count,
+                f(s.mean),
+                f(s.p50),
+                f(s.p90),
+                f(s.p99),
+            ));
         }
         out
     }
@@ -107,6 +303,7 @@ mod tests {
         assert!(rep.contains("step"), "{rep}");
         assert!(rep.contains("2 events"), "{rep}");
         assert!(rep.contains("20.00µs"), "{rep}");
+        assert!(rep.contains("p99"), "{rep}");
     }
 
     #[test]
@@ -115,5 +312,67 @@ mod tests {
         let c = m.counter("x");
         c.fetch_add(5, Ordering::Relaxed);
         assert_eq!(m.get("x"), 5);
+        let h = m.handle("x");
+        h.incr();
+        h.add(4);
+        assert_eq!(m.get("x"), 10);
+        assert_eq!(h.get(), 10);
+    }
+
+    #[test]
+    fn bucket_bounds() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_constant_distribution_land_in_bucket() {
+        let h = Histogram::default();
+        for _ in 0..1000 {
+            h.record(Duration::from_millis(5));
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.sum_ns(), 5_000_000 * 1000);
+        // 5ms sits in bucket [2^22, 2^23) ns = [4.19ms, 8.39ms).
+        for q in [0.5, 0.9, 0.99] {
+            let v = h.quantile(q);
+            assert!(
+                v >= Duration::from_nanos(1 << 22) && v < Duration::from_nanos(1 << 23),
+                "q{q}: {v:?}"
+            );
+        }
+        assert!(h.quantile(0.5) <= h.quantile(0.9));
+        assert!(h.quantile(0.9) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn quantiles_uniform_distribution_within_2x() {
+        let h = Histogram::default();
+        // Uniform 1..=1024 µs: true p50 = 512µs, p90 ≈ 922µs, p99 ≈ 1014µs.
+        for us in 1..=1024u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let checks = [(0.50, 512_000u64), (0.90, 921_600), (0.99, 1_013_760)];
+        for (q, truth_ns) in checks {
+            let est = h.quantile(q).as_nanos() as u64;
+            assert!(
+                est >= truth_ns / 2 && est <= truth_ns * 2,
+                "q{q}: est {est}ns vs true {truth_ns}ns"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_histogram_digest_is_none() {
+        let m = Metrics::new();
+        assert!(m.time_stats("nope").is_none());
+        m.record_time("t", Duration::from_micros(7));
+        let s = m.time_stats("t").unwrap();
+        assert_eq!(s.count, 1);
+        assert!(s.p50 > Duration::ZERO);
     }
 }

@@ -1,0 +1,316 @@
+//! Chrome-trace (Perfetto / `chrome://tracing`) JSON export.
+//!
+//! The tracer records **complete spans** (`ts`, `dur`); this module
+//! lowers them to the Trace Event Format's duration events — balanced
+//! `B`/`E` pairs per lane — plus `M` metadata events naming each lane.
+//! JSON is handwritten (serde is not in the offline registry; see
+//! DESIGN.md §2), and [`validate`] checks the structural invariants the
+//! CI `trace-smoke` leg also enforces on the written file: every `B`
+//! has a matching `E` on the same lane with the same name, timestamps
+//! are monotonic per lane, and durations are non-negative.
+//!
+//! Within one lane spans are naturally nested or disjoint (each lane is
+//! one thread recording sequential work, and enclosing spans — epoch
+//! around supersteps — start earlier and end later). The lowering is
+//! still defensive: a child that outlives its parent is clipped to the
+//! parent's end, so the output is balanced even on malformed input.
+
+use super::{SpanKind, Trace, TraceEvent};
+use crate::dataflow::DataflowGraph;
+use std::fmt::Write as _;
+
+/// One lowered Trace-Event-Format record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChromeEvent {
+    /// Phase: `'B'` (begin), `'E'` (end), or `'M'` (metadata).
+    pub ph: char,
+    /// Event name (operator mnemonic, `superstep 3`, `epoch`, …).
+    pub name: String,
+    /// Category: `engine`, `node`, or `serve`.
+    pub cat: &'static str,
+    /// Timestamp in nanoseconds since the tracer origin (serialized as
+    /// fractional microseconds, the format's native unit).
+    pub ts_ns: u64,
+    /// Lane (serialized as `tid`).
+    pub lane: u32,
+    /// Extra `args` rendered as `"k":v` pairs (numbers only).
+    pub args: Vec<(&'static str, u64)>,
+}
+
+/// Resolve a span kind to `(category, name, args)`. Node names come
+/// from the graph when one is supplied, raw ids otherwise.
+pub fn span_label(kind: &SpanKind, graph: Option<&DataflowGraph>) -> (&'static str, String, Vec<(&'static str, u64)>) {
+    let node_name = |id: u32| -> String {
+        match graph.and_then(|g| g.nodes.get(id as usize)) {
+            Some(n) => format!("{} {}", n.name, n.op.mnemonic()),
+            None => format!("node {id}"),
+        }
+    };
+    match *kind {
+        SpanKind::Epoch => ("engine", "epoch".into(), vec![]),
+        SpanKind::Dispatch => ("engine", "dispatch".into(), vec![]),
+        SpanKind::Drain => ("engine", "drain".into(), vec![]),
+        SpanKind::Superstep { pos, block, blocks } => (
+            "engine",
+            if blocks > 1 {
+                format!("steps {pos}..{} (bb{block}..)", pos + blocks - 1)
+            } else {
+                format!("step {pos} (bb{block})")
+            },
+            vec![("pos", pos as u64), ("blocks", blocks as u64)],
+        ),
+        SpanKind::NodeBatch { node, step } => {
+            ("node", node_name(node), vec![("node", node as u64), ("step", step as u64)])
+        }
+        SpanKind::NodeClose { node, step } => (
+            "node",
+            format!("{} close", node_name(node)),
+            vec![("node", node as u64), ("step", step as u64)],
+        ),
+        SpanKind::Generate { node, step } => (
+            "node",
+            format!("{} generate", node_name(node)),
+            vec![("node", node as u64), ("step", step as u64)],
+        ),
+        SpanKind::Queue { job } => ("serve", format!("queue job {job}"), vec![("job", job)]),
+        SpanKind::Compile { job } => ("serve", format!("compile job {job}"), vec![("job", job)]),
+        SpanKind::Bind { job } => ("serve", format!("bind job {job}"), vec![("job", job)]),
+        SpanKind::JobRun { job } => ("serve", format!("run job {job}"), vec![("job", job)]),
+        SpanKind::Request { job } => ("serve", format!("request {job}"), vec![("job", job)]),
+    }
+}
+
+/// Lower a trace to balanced `B`/`E` (+ lane-name `M`) events.
+pub fn chrome_events(trace: &Trace, graph: Option<&DataflowGraph>) -> Vec<ChromeEvent> {
+    let mut out: Vec<ChromeEvent> = Vec::with_capacity(trace.events.len() * 2 + trace.lanes.len());
+    for (lane, name) in &trace.lanes {
+        out.push(ChromeEvent {
+            ph: 'M',
+            name: "thread_name".into(),
+            cat: "__metadata",
+            ts_ns: 0,
+            lane: *lane,
+            args: vec![],
+        });
+        // Metadata args carry the lane name; stash it through the name
+        // field of a paired record instead of widening `args` to
+        // strings: the serializer special-cases `M` events.
+        let last = out.last_mut().unwrap();
+        last.name = format!("thread_name\u{0}{name}");
+    }
+
+    // Per lane: sort by (ts, longest-first) so parents precede children,
+    // then emit with an open-span stack, clipping children to parents.
+    let mut lanes: Vec<u32> = trace.events.iter().map(|e| e.lane).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    for lane in lanes {
+        let mut evs: Vec<&TraceEvent> =
+            trace.events.iter().filter(|e| e.lane == lane).collect();
+        evs.sort_by(|a, b| a.ts.cmp(&b.ts).then(b.dur.cmp(&a.dur)));
+        // Stack of (end_ts, name, cat) for spans currently open.
+        let mut open: Vec<(u64, String, &'static str)> = Vec::new();
+        for e in evs {
+            // Close every open span that ends at or before this start.
+            while open.last().map_or(false, |(end, _, _)| *end <= e.ts) {
+                let (end, name, cat) = open.pop().unwrap();
+                out.push(ChromeEvent { ph: 'E', name, cat, ts_ns: end, lane, args: vec![] });
+            }
+            let (cat, name, args) = span_label(&e.kind, graph);
+            // Clip to the innermost open parent so nesting stays proper.
+            let mut end = e.ts.saturating_add(e.dur);
+            if let Some((parent_end, _, _)) = open.last() {
+                end = end.min(*parent_end);
+            }
+            out.push(ChromeEvent { ph: 'B', name: name.clone(), cat, ts_ns: e.ts, lane, args });
+            open.push((end, name, cat));
+        }
+        while let Some((end, name, cat)) = open.pop() {
+            out.push(ChromeEvent { ph: 'E', name, cat, ts_ns: end, lane, args: vec![] });
+        }
+    }
+    out
+}
+
+/// Serialize lowered events as a Trace-Event-Format JSON object
+/// (`{"traceEvents": [...]}`), loadable in Perfetto (ui.perfetto.dev)
+/// and `chrome://tracing`.
+pub fn render(events: &[ChromeEvent]) -> String {
+    let mut s = String::with_capacity(events.len() * 96 + 64);
+    s.push_str("{\"traceEvents\":[\n");
+    for (i, e) in events.iter().enumerate() {
+        let ts_us = e.ts_ns as f64 / 1_000.0;
+        if e.ph == 'M' {
+            // `name\0lane-name` carries the lane label (see above).
+            let (name, lane_name) = e.name.split_once('\u{0}').unwrap_or((e.name.as_str(), "?"));
+            let _ = write!(
+                s,
+                "  {{\"ph\":\"M\",\"name\":\"{}\",\"pid\":0,\"tid\":{},\"args\":{{\"name\":\"{}\"}}}}",
+                escape(name),
+                e.lane,
+                escape(lane_name),
+            );
+        } else {
+            let _ = write!(
+                s,
+                "  {{\"ph\":\"{}\",\"name\":\"{}\",\"cat\":\"{}\",\"ts\":{ts_us:.3},\"pid\":0,\"tid\":{}",
+                e.ph,
+                escape(&e.name),
+                e.cat,
+                e.lane,
+            );
+            if e.ph == 'B' && !e.args.is_empty() {
+                s.push_str(",\"args\":{");
+                for (j, (k, v)) in e.args.iter().enumerate() {
+                    if j > 0 {
+                        s.push(',');
+                    }
+                    let _ = write!(s, "\"{k}\":{v}");
+                }
+                s.push('}');
+            }
+            s.push('}');
+        }
+        s.push_str(if i + 1 < events.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("],\"displayTimeUnit\":\"ms\"}\n");
+    s
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Structural validation of lowered events: per lane, `B`/`E` balance
+/// with matching names (proper nesting), monotonic non-decreasing
+/// timestamps, and no unmatched end. Returns the offending reason.
+pub fn validate(events: &[ChromeEvent]) -> Result<(), String> {
+    use std::collections::HashMap;
+    let mut last_ts: HashMap<u32, u64> = HashMap::new();
+    let mut stacks: HashMap<u32, Vec<&str>> = HashMap::new();
+    for e in events {
+        if e.ph == 'M' {
+            continue;
+        }
+        let last = last_ts.entry(e.lane).or_insert(0);
+        if e.ts_ns < *last {
+            return Err(format!(
+                "lane {}: timestamp went backwards ({} -> {})",
+                e.lane, last, e.ts_ns
+            ));
+        }
+        *last = e.ts_ns;
+        let stack = stacks.entry(e.lane).or_default();
+        match e.ph {
+            'B' => stack.push(&e.name),
+            'E' => match stack.pop() {
+                Some(open) if open == e.name => {}
+                Some(open) => {
+                    return Err(format!(
+                        "lane {}: E \"{}\" does not match open B \"{}\"",
+                        e.lane, e.name, open
+                    ))
+                }
+                None => return Err(format!("lane {}: E \"{}\" with no open B", e.lane, e.name)),
+            },
+            other => return Err(format!("unexpected phase '{other}'")),
+        }
+    }
+    for (lane, stack) in stacks {
+        if !stack.is_empty() {
+            return Err(format!("lane {lane}: {} unclosed B events", stack.len()));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{SpanKind, Trace, TraceEvent};
+
+    fn ev(ts: u64, dur: u64, lane: u32, kind: SpanKind) -> TraceEvent {
+        TraceEvent { ts, dur, lane, kind }
+    }
+
+    #[test]
+    fn nested_spans_lower_to_balanced_pairs() {
+        let trace = Trace {
+            events: vec![
+                ev(0, 100, 0, SpanKind::Epoch),
+                ev(10, 20, 0, SpanKind::Superstep { pos: 1, block: 0, blocks: 1 }),
+                ev(40, 20, 0, SpanKind::Superstep { pos: 2, block: 1, blocks: 1 }),
+            ],
+            lanes: vec![(0, "driver".into())],
+            dropped: 0,
+        };
+        let evs = chrome_events(&trace, None);
+        validate(&evs).unwrap();
+        let b = evs.iter().filter(|e| e.ph == 'B').count();
+        let e = evs.iter().filter(|e| e.ph == 'E').count();
+        assert_eq!(b, 3);
+        assert_eq!(b, e);
+        let json = render(&evs);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"ph\":\"M\""), "lane metadata present");
+        assert!(json.contains("driver"));
+    }
+
+    #[test]
+    fn overlong_child_is_clipped_to_parent() {
+        // Child claims to end after its parent — lowering must clip.
+        let trace = Trace {
+            events: vec![
+                ev(0, 50, 3, SpanKind::Epoch),
+                ev(40, 100, 3, SpanKind::NodeBatch { node: 1, step: 2 }),
+            ],
+            lanes: vec![],
+            dropped: 0,
+        };
+        let evs = chrome_events(&trace, None);
+        validate(&evs).unwrap();
+    }
+
+    #[test]
+    fn lanes_do_not_interfere() {
+        let trace = Trace {
+            events: vec![
+                ev(0, 100, 0, SpanKind::Epoch),
+                ev(5, 200, 1, SpanKind::NodeBatch { node: 0, step: 1 }),
+            ],
+            lanes: vec![],
+            dropped: 0,
+        };
+        validate(&chrome_events(&trace, None)).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_imbalance() {
+        let bad = vec![ChromeEvent {
+            ph: 'B',
+            name: "x".into(),
+            cat: "engine",
+            ts_ns: 0,
+            lane: 0,
+            args: vec![],
+        }];
+        assert!(validate(&bad).is_err());
+    }
+
+    #[test]
+    fn escape_handles_quotes_and_control() {
+        assert_eq!(escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(escape("x\ny"), "x\\u000ay");
+    }
+}

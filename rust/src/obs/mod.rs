@@ -1,0 +1,359 @@
+//! `obs::` — low-overhead tracing for the engine and the job service:
+//! per-epoch / per-superstep / per-operator **span timelines** with
+//! Chrome-trace export and a human breakdown report.
+//!
+//! The paper's core claim is quantitative (per-iteration-step overhead
+//! orders of magnitude below a job launch per step), so time must be
+//! attributable to the places where that overhead would live: control
+//! path appends (supersteps), operator batch work, driver dispatch and
+//! teardown, and — under `serve::` — queue wait, compile, binding, and
+//! the epoch itself. This module supplies the event model and the
+//! machinery; `exec::` and `serve::` are instrumented against it.
+//!
+//! ## Design
+//!
+//! * **Disabled means free.** Tracing hangs off
+//!   [`crate::exec::ExecConfig::trace`] as an `Option<Arc<Tracer>>`.
+//!   With `None` (the default unless `LABY_TRACE=1`), every
+//!   instrumentation site is a branch on an `Option` that is never
+//!   taken — no clock reads, no allocation, no atomics. A present but
+//!   [`Tracer::set_enabled`]-off tracer is checked **once per epoch**
+//!   (a load of an `Arc<AtomicBool>`), after which the disabled epoch
+//!   runs the same no-op branches.
+//! * **Per-worker ring buffers.** Each traced thread records into its
+//!   own [`SpanBuf`] — a fixed-capacity ring owned by that thread, so
+//!   the hot path is an unsynchronized `Vec` write (oldest events are
+//!   overwritten on overflow and counted as dropped). Buffers are
+//!   absorbed into the tracer's shared sink **once per epoch**, the
+//!   only locking the data plane ever pays.
+//! * **Complete spans, not B/E pairs.** Events carry `(ts, dur)`; the
+//!   Chrome exporter ([`chrome`]) derives balanced begin/end pairs at
+//!   export time, which keeps the ring robust to overflow (dropping a
+//!   complete span can never unbalance the trace).
+//!
+//! Consume a trace with [`Tracer::take`], render it with
+//! [`report::render_breakdown`] (the `labyrinth trace` CLI) or
+//! [`chrome::render`] (Perfetto / `chrome://tracing` JSON). See
+//! `docs/observability.md` for the event model and overhead budget.
+
+pub mod chrome;
+pub mod report;
+
+use crate::frontend::BlockId;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default per-thread ring capacity (events). At one event per data
+/// batch this covers ~64k batches per worker per epoch before the ring
+/// starts overwriting its oldest events.
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 16;
+
+/// What a span measures. Node/step payloads are compact copies (ids,
+/// not names); names are resolved at export time against the graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One whole engine epoch (driver lane): dispatch → teardown done.
+    Epoch,
+    /// Worker-channel setup + epoch dispatch onto the pool (driver).
+    Dispatch,
+    /// Epoch teardown: shutdown broadcast → all worker done-reports.
+    Drain,
+    /// One control-path append: positions `pos .. pos + blocks` of the
+    /// execution path, lasting until the next append (or epoch end).
+    /// Every appended position is one superstep; appends batch the
+    /// blocks of one §6.3.1 decision.
+    Superstep { pos: u32, block: BlockId, blocks: u32 },
+    /// One `Transformation::push_in_batch` (or legacy element loop) on
+    /// a worker: node self-time at batch granularity. `step` is the
+    /// output bag id (path-prefix length).
+    NodeBatch { node: u32, step: u32 },
+    /// `close_in_bag` / `close_out_bag` work (build/reduce emission).
+    NodeClose { node: u32, step: u32 },
+    /// Source generation (`Transformation::generate`).
+    Generate { node: u32, step: u32 },
+    /// serve: admission-queue wait (submit → lane pickup).
+    Queue { job: u64 },
+    /// serve: plan-template resolution (compile on miss, ~0 on hit).
+    Compile { job: u64 },
+    /// serve: request binding — registry overlay + preamble signature.
+    Bind { job: u64 },
+    /// serve: the job's engine epoch on the lane's warm pool.
+    JobRun { job: u64 },
+    /// serve: whole request, submit → reply.
+    Request { job: u64 },
+}
+
+/// One recorded span: `dur == 0` marks an instant event.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Nanoseconds since the tracer's origin.
+    pub ts: u64,
+    /// Span length in nanoseconds.
+    pub dur: u64,
+    /// Timeline lane (exported as the Chrome-trace `tid`). Allocated
+    /// per epoch per thread via [`Tracer::lane`], so concurrent epochs
+    /// never interleave on one lane.
+    pub lane: u32,
+    /// What was measured.
+    pub kind: SpanKind,
+}
+
+/// A drained trace: events (sorted by start time), lane names, and how
+/// many events the ring buffers overwrote.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// All absorbed events, sorted by `(ts, lane)`.
+    pub events: Vec<TraceEvent>,
+    /// `(lane, name)` pairs in allocation order.
+    pub lanes: Vec<(u32, String)>,
+    /// Events lost to ring overwrites (oldest-first per ring).
+    pub dropped: u64,
+}
+
+impl Trace {
+    /// Events of one kind-predicate, in time order.
+    pub fn spans(&self, mut pred: impl FnMut(&SpanKind) -> bool) -> Vec<TraceEvent> {
+        self.events.iter().filter(|e| pred(&e.kind)).copied().collect()
+    }
+}
+
+/// The shared tracing sink: an enable gate, a time origin, lane
+/// allocation, and the per-epoch absorption target for [`SpanBuf`]s.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: AtomicBool,
+    t0: Instant,
+    capacity: usize,
+    next_lane: AtomicU32,
+    sink: Mutex<Vec<TraceEvent>>,
+    lane_names: Mutex<Vec<(u32, String)>>,
+    dropped: AtomicU64,
+}
+
+impl Tracer {
+    /// Create a tracer with the default ring capacity.
+    pub fn new(enabled: bool) -> Tracer {
+        Tracer::with_capacity(enabled, DEFAULT_RING_CAPACITY)
+    }
+
+    /// Create a tracer whose per-thread rings hold `capacity` events.
+    pub fn with_capacity(enabled: bool, capacity: usize) -> Tracer {
+        Tracer {
+            enabled: AtomicBool::new(enabled),
+            t0: Instant::now(),
+            capacity: capacity.max(16),
+            next_lane: AtomicU32::new(0),
+            sink: Mutex::new(Vec::new()),
+            lane_names: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Is tracing on? Checked once per epoch by the engine; instrument
+    /// sites gated off a dead tracer cost one atomic load per epoch.
+    pub fn on(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Flip the gate (effective at the next epoch boundary).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Nanoseconds since the tracer's origin.
+    pub fn now_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    /// Allocate a named timeline lane (unique per tracer lifetime —
+    /// concurrent epochs get disjoint lanes).
+    pub fn lane(&self, name: &str) -> u32 {
+        let id = self.next_lane.fetch_add(1, Ordering::Relaxed);
+        self.lane_names.lock().unwrap().push((id, name.to_string()));
+        id
+    }
+
+    /// Create the thread-owned ring buffer for `lane`.
+    pub fn local(&self, lane: u32) -> SpanBuf {
+        SpanBuf {
+            lane,
+            t0: self.t0,
+            cap: self.capacity,
+            buf: Vec::with_capacity(self.capacity.min(1024)),
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Absorb a ring into the shared sink (one lock per epoch per
+    /// thread; oldest-first when the ring wrapped).
+    pub fn absorb(&self, buf: SpanBuf) {
+        self.dropped.fetch_add(buf.dropped, Ordering::Relaxed);
+        let mut sink = self.sink.lock().unwrap();
+        let SpanBuf { buf, head, .. } = buf;
+        if head > 0 {
+            // Wrapped: buf[head..] is oldest.
+            sink.extend_from_slice(&buf[head..]);
+            sink.extend_from_slice(&buf[..head]);
+        } else {
+            sink.extend(buf);
+        }
+    }
+
+    /// Record one span directly into the shared sink (locks; for
+    /// low-rate control-plane spans such as the serve lifecycle, never
+    /// the data plane).
+    pub fn push(&self, lane: u32, kind: SpanKind, ts: u64, dur: u64) {
+        self.sink.lock().unwrap().push(TraceEvent { ts, dur, lane, kind });
+    }
+
+    /// Drain everything recorded so far into a [`Trace`] (events
+    /// sorted, names snapshotted, counters reset for reuse).
+    pub fn take(&self) -> Trace {
+        let mut events = std::mem::take(&mut *self.sink.lock().unwrap());
+        events.sort_by_key(|e| (e.ts, e.lane));
+        Trace {
+            events,
+            lanes: self.lane_names.lock().unwrap().clone(),
+            dropped: self.dropped.swap(0, Ordering::Relaxed),
+        }
+    }
+
+    /// Events lost to ring overwrites since the last [`Tracer::take`].
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// The process-global tracer behind `LABY_TRACE=1` (read once, like
+/// `LABY_BATCH`): `Some` and enabled when set, `None` otherwise.
+/// [`crate::exec::ExecConfig::default`] and
+/// [`crate::serve::ServeConfig::default`] attach it.
+pub fn default_tracer() -> Option<Arc<Tracer>> {
+    static T: OnceLock<Option<Arc<Tracer>>> = OnceLock::new();
+    T.get_or_init(|| {
+        (std::env::var("LABY_TRACE").ok().as_deref() == Some("1"))
+            .then(|| Arc::new(Tracer::new(true)))
+    })
+    .clone()
+}
+
+/// A thread-owned span ring: unsynchronized writes, fixed capacity,
+/// oldest events overwritten on overflow. Created by [`Tracer::local`]
+/// and given back with [`Tracer::absorb`] at the epoch boundary.
+#[derive(Debug)]
+pub struct SpanBuf {
+    lane: u32,
+    t0: Instant,
+    cap: usize,
+    buf: Vec<TraceEvent>,
+    /// Next overwrite position once the ring is full.
+    head: usize,
+    dropped: u64,
+}
+
+impl SpanBuf {
+    /// Nanoseconds since the owning tracer's origin (span start marks).
+    pub fn now(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    /// The lane this ring records on.
+    pub fn lane(&self) -> u32 {
+        self.lane
+    }
+
+    /// Close a span opened at `start` (from [`SpanBuf::now`]); returns
+    /// its duration in nanoseconds so callers can also accumulate it
+    /// (per-node self-time).
+    pub fn record(&mut self, kind: SpanKind, start: u64) -> u64 {
+        let now = self.now();
+        let dur = now.saturating_sub(start);
+        self.push(TraceEvent { ts: start, dur, lane: self.lane, kind });
+        dur
+    }
+
+    /// Record a complete span with explicit bounds.
+    pub fn record_span(&mut self, kind: SpanKind, ts: u64, dur: u64) {
+        self.push(TraceEvent { ts, dur, lane: self.lane, kind });
+    }
+
+    /// Record an instant event (zero duration).
+    pub fn instant(&mut self, kind: SpanKind) {
+        let now = self.now();
+        self.push(TraceEvent { ts: now, dur: 0, lane: self.lane, kind });
+    }
+
+    fn push(&mut self, e: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            // Ring overwrite: the oldest event gives way.
+            self.buf[self.head] = e;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// No events recorded yet?
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let t = Tracer::with_capacity(true, 16);
+        let lane = t.lane("w");
+        let mut buf = t.local(lane);
+        for i in 0..20u64 {
+            buf.record_span(SpanKind::NodeBatch { node: 0, step: i as u32 }, i, 1);
+        }
+        assert_eq!(buf.len(), 16);
+        t.absorb(buf);
+        let trace = t.take();
+        assert_eq!(trace.dropped, 4);
+        assert_eq!(trace.events.len(), 16);
+        // Oldest four (ts 0..3) were overwritten; order is by ts.
+        assert_eq!(trace.events.first().unwrap().ts, 4);
+        assert_eq!(trace.events.last().unwrap().ts, 19);
+    }
+
+    #[test]
+    fn lanes_are_unique_and_named() {
+        let t = Tracer::new(true);
+        let a = t.lane("driver");
+        let b = t.lane("worker 0");
+        assert_ne!(a, b);
+        let trace = t.take();
+        assert_eq!(trace.lanes.len(), 2);
+        assert!(trace.lanes.iter().any(|(id, n)| *id == a && n == "driver"));
+    }
+
+    #[test]
+    fn take_resets_the_sink() {
+        let t = Tracer::new(true);
+        let lane = t.lane("x");
+        t.push(lane, SpanKind::Epoch, 0, 10);
+        assert_eq!(t.take().events.len(), 1);
+        assert!(t.take().events.is_empty());
+    }
+
+    #[test]
+    fn disabled_gate_reads_false() {
+        let t = Tracer::new(false);
+        assert!(!t.on());
+        t.set_enabled(true);
+        assert!(t.on());
+    }
+}

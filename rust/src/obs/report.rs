@@ -1,0 +1,175 @@
+//! The human-readable side of a trace: the per-superstep and
+//! per-operator time breakdown printed by `labyrinth trace`.
+
+use super::{SpanKind, Trace};
+use crate::dataflow::DataflowGraph;
+use crate::exec::RunOutput;
+use crate::util::{fmt_duration, pad};
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// Cap on individually listed superstep rows (long loops aggregate).
+const MAX_STEP_ROWS: usize = 24;
+
+/// Render the per-superstep / per-operator breakdown of one epoch.
+///
+/// The superstep table attributes wall time to control-path appends
+/// (each row is one §6.3.1 decision's chain of appended blocks); the
+/// operator table attributes measured **self-time** (batch + close +
+/// generate spans) to logical nodes, alongside the row/bag counts the
+/// engine already collects. Self-time is per-thread CPU-side wall time,
+/// so with W workers the column can sum to up to W× the epoch wall.
+pub fn render_breakdown(trace: &Trace, graph: &DataflowGraph, out: &RunOutput) -> String {
+    let mut s = String::new();
+    let epoch = trace
+        .events
+        .iter()
+        .filter(|e| e.kind == SpanKind::Epoch)
+        .map(|e| e.dur)
+        .max()
+        .unwrap_or_else(|| out.elapsed.as_nanos() as u64)
+        .max(1);
+
+    let _ = writeln!(
+        s,
+        "== trace: {} control-flow steps, epoch {} ({} events{}) ==",
+        out.path_len,
+        fmt_duration(Duration::from_nanos(epoch)),
+        trace.events.len(),
+        if trace.dropped > 0 {
+            format!(", {} dropped", trace.dropped)
+        } else {
+            String::new()
+        },
+    );
+
+    // --- per-superstep ------------------------------------------------
+    let steps = trace.spans(|k| matches!(k, SpanKind::Superstep { .. }));
+    if !steps.is_empty() {
+        let _ = writeln!(s, "\nper-superstep (one row per control-path append):");
+        let _ = writeln!(s, "  {} {} {}", pad("steps", 12), pad("block", 8), pad("wall", 12));
+        let shown = steps.len().min(MAX_STEP_ROWS);
+        for e in &steps[..shown] {
+            let SpanKind::Superstep { pos, block, blocks } = e.kind else { continue };
+            let label = if blocks > 1 {
+                format!("{pos}..{}", pos + blocks - 1)
+            } else {
+                format!("{pos}")
+            };
+            let _ = writeln!(
+                s,
+                "  {} {} {}",
+                pad(&label, 12),
+                pad(&format!("bb{block}"), 8),
+                pad(&fmt_duration(Duration::from_nanos(e.dur)), 12),
+            );
+        }
+        if steps.len() > shown {
+            let rest: u64 = steps[shown..].iter().map(|e| e.dur).sum();
+            let _ = writeln!(
+                s,
+                "  {} {} {}",
+                pad(&format!("(+{} more)", steps.len() - shown), 12),
+                pad("", 8),
+                pad(&fmt_duration(Duration::from_nanos(rest)), 12),
+            );
+        }
+    }
+
+    // --- per-operator -------------------------------------------------
+    #[derive(Default, Clone)]
+    struct NodeAgg {
+        self_ns: u64,
+        batches: u64,
+    }
+    let mut agg: Vec<NodeAgg> = vec![NodeAgg::default(); graph.num_nodes()];
+    for e in &trace.events {
+        let node = match e.kind {
+            SpanKind::NodeBatch { node, .. }
+            | SpanKind::NodeClose { node, .. }
+            | SpanKind::Generate { node, .. } => node as usize,
+            _ => continue,
+        };
+        if let Some(a) = agg.get_mut(node) {
+            a.self_ns += e.dur;
+            a.batches += 1;
+        }
+    }
+    let mut order: Vec<usize> = (0..graph.num_nodes()).collect();
+    order.sort_by_key(|&n| std::cmp::Reverse(agg[n].self_ns));
+
+    let _ = writeln!(s, "\nper-operator (self-time from traced batch/close/generate spans):");
+    let _ = writeln!(
+        s,
+        "  {} {} {} {} {} {}",
+        pad("node", 22),
+        pad("bags", 7),
+        pad("rows", 10),
+        pad("spans", 7),
+        pad("self", 12),
+        pad("% epoch", 8),
+    );
+    for n in order {
+        let a = &agg[n];
+        let rows = out.node_rows.get(n);
+        if a.self_ns == 0 && rows.map_or(true, |r| r.rows == 0 && r.bags == 0) {
+            continue;
+        }
+        let name = format!("{} {}", graph.nodes[n].name, graph.nodes[n].op.mnemonic());
+        let name = if name.len() > 22 { name[..22].to_string() } else { name };
+        let _ = writeln!(
+            s,
+            "  {} {} {} {} {} {}",
+            pad(&name, 22),
+            pad(&rows.map_or(0, |r| r.bags).to_string(), 7),
+            pad(&rows.map_or(0, |r| r.rows).to_string(), 10),
+            pad(&a.batches.to_string(), 7),
+            pad(&fmt_duration(Duration::from_nanos(a.self_ns)), 12),
+            pad(&format!("{:.1}%", a.self_ns as f64 * 100.0 / epoch as f64), 8),
+        );
+    }
+
+    // --- driver/control accounting ------------------------------------
+    let dispatch: u64 =
+        trace.spans(|k| matches!(k, SpanKind::Dispatch)).iter().map(|e| e.dur).sum();
+    let drain: u64 = trace.spans(|k| matches!(k, SpanKind::Drain)).iter().map(|e| e.dur).sum();
+    let self_total: u64 = agg.iter().map(|a| a.self_ns).sum();
+    let _ = writeln!(
+        s,
+        "\ncontrol plane: dispatch {}, drain {}; operator self-time total {} \
+         (threads may overlap the epoch wall)",
+        fmt_duration(Duration::from_nanos(dispatch)),
+        fmt_duration(Duration::from_nanos(drain)),
+        fmt_duration(Duration::from_nanos(self_total)),
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{run, ExecConfig};
+    use crate::obs::Tracer;
+    use std::sync::Arc;
+
+    #[test]
+    fn breakdown_renders_steps_and_operators() {
+        let g = crate::compile_source(
+            "d = 1; s = bag(); while (d <= 3) { s = bag(1, 2, 3).map(|x| x * d); d = d + 1; } \
+             collect(s, \"s\");",
+        )
+        .unwrap();
+        let tracer = Arc::new(Tracer::new(true));
+        let out = run(
+            &g,
+            &ExecConfig { workers: 2, trace: Some(tracer.clone()), ..Default::default() },
+        )
+        .unwrap();
+        let trace = tracer.take();
+        let rep = render_breakdown(&trace, &g, &out);
+        assert!(rep.contains("per-superstep"), "{rep}");
+        assert!(rep.contains("per-operator"), "{rep}");
+        assert!(rep.contains("bb"), "{rep}");
+        assert!(rep.contains("% epoch"), "{rep}");
+    }
+}

@@ -123,6 +123,26 @@ pub fn serving_benchmark(smoke: bool) {
          ({} preamble replays)\n",
         svc_share.metrics().get("serve.preamble_hits")
     );
+    // Tail latencies from the serve histograms (log-bucketed; ~2x
+    // resolution): queue wait, engine-epoch time, end-to-end request.
+    let m = svc.metrics();
+    for (label, key) in [
+        ("queue-wait", "serve.queue_wait"),
+        ("epoch", "serve.job_time"),
+        ("request", "serve.request_time"),
+    ] {
+        if let Some(s) = m.time_stats(key) {
+            let f = crate::util::fmt_duration;
+            println!(
+                "{label:>12}: p50 {}, p90 {}, p99 {} over {} jobs",
+                f(s.p50),
+                f(s.p90),
+                f(s.p99),
+                s.count
+            );
+        }
+    }
+    println!();
     println!("{}", svc.report());
     drop(svc);
     drop(svc_share);

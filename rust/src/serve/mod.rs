@@ -106,6 +106,11 @@ pub struct ServeConfig {
     /// Run jobs on the legacy element-at-a-time data plane (see
     /// [`ExecConfig::element_path`]); defaults from `LABY_ELEMENT_PATH`.
     pub element_path: bool,
+    /// Optional span tracer shared by every lane (see
+    /// [`ExecConfig::trace`]): records the serve lifecycle
+    /// (queue → compile → bind → epoch → reply) per job and is handed to
+    /// each job's engine epoch. Defaults from `LABY_TRACE`.
+    pub trace: Option<Arc<crate::obs::Tracer>>,
 }
 
 impl Default for ServeConfig {
@@ -125,6 +130,7 @@ impl Default for ServeConfig {
             max_templates: 64,
             share_preambles: true,
             element_path: crate::exec::default_element_path(),
+            trace: crate::obs::default_tracer(),
         }
     }
 }
@@ -463,6 +469,18 @@ fn lane_main(inner: Arc<Inner>) {
 fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
     let queued_for = job.enqueued.elapsed();
     inner.metrics.record_time("serve.queue_wait", queued_for);
+    // Serve lifecycle spans: a handful per job, recorded straight into
+    // the tracer's shared sink on a per-job lane (so concurrent slots
+    // never interleave their timelines). The queue span is back-dated to
+    // the submission instant.
+    let tracer = inner.cfg.trace.as_ref().filter(|t| t.on()).cloned();
+    let tlane = tracer.as_ref().map(|t| t.lane(&format!("job {}", job.id)));
+    let jid = job.id;
+    if let (Some(t), Some(l)) = (tracer.as_ref(), tlane) {
+        let now = t.now_ns();
+        let q = queued_for.as_nanos() as u64;
+        t.push(l, crate::obs::SpanKind::Queue { job: jid }, now.saturating_sub(q), q);
+    }
     if job.cancel.load(Ordering::SeqCst) {
         inner.metrics.add("serve.jobs_canceled", 1);
         let _ = job.reply.send(Err(Error::exec(format!("job {} canceled", job.id))));
@@ -480,12 +498,17 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
 
     // Per-request registry overlay: datasets + scalar params stack over
     // the service base without mutating it.
+    let bind_t0 = tracer.as_ref().map(|t| t.now_ns());
     let overlay = Arc::new(Registry::overlay(inner.base_registry.clone()));
     for (name, items) in &job.req.bindings {
         overlay.put_shared(name.clone(), items.clone());
     }
     for (name, v) in &job.req.params {
         overlay.put(name.clone(), vec![v.clone()]);
+    }
+    if let (Some(t), Some(l), Some(t0)) = (tracer.as_ref(), tlane, bind_t0) {
+        let now = t.now_ns();
+        t.push(l, crate::obs::SpanKind::Bind { job: jid }, t0, now.saturating_sub(t0));
     }
 
     // Resolve the plan template (compile at most once per key).
@@ -508,6 +531,7 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
         JobSpec::Program(_) => None,
     };
     let spec = job.req.spec.clone();
+    let compile_t0 = tracer.as_ref().map(|t| t.now_ns());
     let resolved = inner.cache.get_or_compile(
         key,
         source_text,
@@ -532,6 +556,15 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
         CacheOutcome::Hit => Duration::ZERO,
         _ => tpl.compile_time,
     };
+    if compile > Duration::ZERO {
+        // Histogrammed and traced only when a compile actually ran
+        // (hits would flood the distribution with zero-length spans).
+        inner.metrics.record_time("serve.compile", compile);
+        if let (Some(t), Some(l), Some(t0)) = (tracer.as_ref(), tlane, compile_t0) {
+            let now = t.now_ns();
+            t.push(l, crate::obs::SpanKind::Compile { job: jid }, t0, now.saturating_sub(t0));
+        }
+    }
 
     // Cross-job preamble sharing: when the template has shareable
     // invariant-preamble nodes, resolve the binding signature of the
@@ -570,9 +603,15 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
         cancel: Some(job.cancel.clone()),
         preamble,
         element_path: inner.cfg.element_path,
+        trace: tracer.clone(),
     };
     let epochs_before = pool.epochs();
+    let run_t0 = tracer.as_ref().map(|t| t.now_ns());
     let result = driver::run_plan_on_pool(tpl.plan.clone(), &run_cfg, pool);
+    if let (Some(t), Some(l), Some(t0)) = (tracer.as_ref(), tlane, run_t0) {
+        let now = t.now_ns();
+        t.push(l, crate::obs::SpanKind::JobRun { job: jid }, t0, now.saturating_sub(t0));
+    }
     inner.metrics.add("serve.pool_epochs", pool.epochs() - epochs_before);
     match result {
         Ok(output) => {
@@ -614,6 +653,14 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
             }
             let _ = job.reply.send(Err(e));
         }
+    }
+    // End-to-end request latency (submit → reply), success or not.
+    let total = job.enqueued.elapsed();
+    inner.metrics.record_time("serve.request_time", total);
+    if let (Some(t), Some(l)) = (tracer.as_ref(), tlane) {
+        let now = t.now_ns();
+        let ns = total.as_nanos() as u64;
+        t.push(l, crate::obs::SpanKind::Request { job: jid }, now.saturating_sub(ns), ns);
     }
 }
 

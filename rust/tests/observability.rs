@@ -1,0 +1,217 @@
+//! Integration tests for the `obs::` tracing layer: the disabled path
+//! records nothing, a traced loop epoch yields a well-formed span
+//! hierarchy (supersteps and operator work nested inside the epoch),
+//! the Chrome-trace export is structurally valid, and the `serve::`
+//! lifecycle spans + latency histograms land.
+
+use labyrinth::exec::{run, ExecConfig};
+use labyrinth::obs::{chrome, SpanKind, Tracer};
+use labyrinth::serve::{JobRequest, JobService, ServeConfig};
+use labyrinth::value::Value;
+use labyrinth::workload::registry::Registry;
+use std::sync::Arc;
+
+/// A fig-6-style counter loop: three iterations of a map over a named
+/// source, final iteration's bag collected.
+const LOOP_SRC: &str = r#"
+    v = source("obs_data");
+    d = 1;
+    s = bag();
+    while (d <= 3) {
+        s = v.map(|x| x + d);
+        d = d + 1;
+    }
+    collect(s, "out");
+"#;
+
+fn compile_loop(reg: &Arc<Registry>) -> labyrinth::dataflow::DataflowGraph {
+    reg.put("obs_data", (0..64i64).map(Value::I64).collect());
+    let program = labyrinth::frontend::parse_and_lower(LOOP_SRC).unwrap();
+    let (graph, _) = labyrinth::compile_with_registry(
+        &program,
+        &labyrinth::opt::OptConfig::default(),
+        reg,
+    )
+    .unwrap();
+    graph
+}
+
+fn traced_run(workers: usize) -> (labyrinth::obs::Trace, labyrinth::exec::RunOutput) {
+    let reg = Arc::new(Registry::new());
+    let graph = compile_loop(&reg);
+    let tracer = Arc::new(Tracer::new(true));
+    let cfg = ExecConfig {
+        workers,
+        registry: reg,
+        trace: Some(tracer.clone()),
+        ..Default::default()
+    };
+    let out = run(&graph, &cfg).unwrap();
+    assert!(!out.collected("out").is_empty());
+    (tracer.take(), out)
+}
+
+#[test]
+fn disabled_tracer_records_no_events_and_no_self_time() {
+    let reg = Arc::new(Registry::new());
+    let graph = compile_loop(&reg);
+    let tracer = Arc::new(Tracer::new(false));
+    let cfg = ExecConfig {
+        workers: 2,
+        registry: reg,
+        trace: Some(tracer.clone()),
+        ..Default::default()
+    };
+    let out = run(&graph, &cfg).unwrap();
+    assert!(!out.collected("out").is_empty());
+    let trace = tracer.take();
+    assert!(
+        trace.events.is_empty(),
+        "disabled tracer must record zero events, got {}",
+        trace.events.len()
+    );
+    assert_eq!(trace.dropped, 0);
+    assert!(
+        out.node_rows.iter().all(|r| r.self_time_ns == 0),
+        "self-time stays zero when tracing is off"
+    );
+}
+
+#[test]
+fn traced_loop_yields_wellformed_span_hierarchy() {
+    // Single worker: every operator span runs on one thread, so their
+    // durations are non-overlapping and must sum to <= the epoch wall.
+    let (trace, out) = traced_run(1);
+    assert_eq!(trace.dropped, 0);
+
+    let epochs = trace.spans(|k| *k == SpanKind::Epoch);
+    assert_eq!(epochs.len(), 1, "one run = one epoch span");
+    let epoch = epochs[0];
+    let e_end = epoch.ts + epoch.dur;
+
+    // Supersteps: one per appended path position, nested in the epoch.
+    let steps = trace.spans(|k| matches!(k, SpanKind::Superstep { .. }));
+    assert!(
+        steps.len() >= out.path_len.min(3),
+        "expected superstep spans for a {}-step path, got {}",
+        out.path_len,
+        steps.len()
+    );
+    for s in &steps {
+        assert!(s.ts >= epoch.ts && s.ts + s.dur <= e_end, "superstep within epoch");
+    }
+    // Positions cover a strictly increasing path prefix.
+    let mut last_pos = 0u32;
+    for s in &steps {
+        if let SpanKind::Superstep { pos, blocks, .. } = s.kind {
+            assert!(pos > last_pos || last_pos == 0, "monotonic path positions");
+            assert!(blocks >= 1);
+            last_pos = pos;
+        }
+    }
+
+    // Operator spans: present, inside the epoch, and (w=1) summing to
+    // no more than the epoch wall time.
+    let work = trace.spans(|k| {
+        matches!(
+            k,
+            SpanKind::NodeBatch { .. } | SpanKind::NodeClose { .. } | SpanKind::Generate { .. }
+        )
+    });
+    assert!(!work.is_empty(), "a traced run records operator spans");
+    let mut total = 0u64;
+    for s in &work {
+        assert!(s.ts >= epoch.ts && s.ts + s.dur <= e_end, "operator span within epoch");
+        total += s.dur;
+    }
+    assert!(
+        total <= epoch.dur,
+        "w=1 operator self-time ({total}ns) cannot exceed the epoch wall ({}ns)",
+        epoch.dur
+    );
+
+    // Dispatch and drain bracket the epoch on the driver lane.
+    assert_eq!(trace.spans(|k| *k == SpanKind::Dispatch).len(), 1);
+    assert_eq!(trace.spans(|k| *k == SpanKind::Drain).len(), 1);
+
+    // Measured self-time feeds back into RunOutput.
+    let traced_total: u64 = out.node_rows.iter().map(|r| r.self_time_ns).sum();
+    assert!(traced_total > 0, "traced runs report per-node self-time");
+    assert_eq!(traced_total, total, "node_rows self-time mirrors the span sum");
+}
+
+#[test]
+fn chrome_export_is_balanced_and_loadable() {
+    let reg = Arc::new(Registry::new());
+    let graph = compile_loop(&reg);
+    let tracer = Arc::new(Tracer::new(true));
+    let cfg = ExecConfig {
+        workers: 2,
+        registry: reg,
+        trace: Some(tracer.clone()),
+        ..Default::default()
+    };
+    let out = run(&graph, &cfg).unwrap();
+    let trace = tracer.take();
+
+    let events = chrome::chrome_events(&trace, Some(&graph));
+    chrome::validate(&events).expect("balanced B/E pairs, monotonic timestamps");
+    let json = chrome::render(&events);
+    assert!(json.starts_with("{"));
+    assert!(json.contains("\"traceEvents\""));
+    assert!(json.contains("\"displayTimeUnit\""));
+
+    // The human breakdown renders the same trace without panicking and
+    // names the epoch + at least one operator.
+    let report = labyrinth::obs::report::render_breakdown(&trace, &graph, &out);
+    assert!(report.contains("epoch"), "breakdown mentions the epoch: {report}");
+    assert!(report.contains("superstep"), "breakdown lists supersteps: {report}");
+}
+
+#[test]
+fn serve_trace_records_job_lifecycle_spans() {
+    let tracer = Arc::new(Tracer::new(true));
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        trace: Some(tracer.clone()),
+        ..Default::default()
+    });
+    for _ in 0..2 {
+        svc.run(JobRequest::source("collect(bag(7), \"x\");")).unwrap();
+    }
+    let trace = tracer.take();
+    let queues = trace.spans(|k| matches!(k, SpanKind::Queue { .. }));
+    let runs = trace.spans(|k| matches!(k, SpanKind::JobRun { .. }));
+    let requests = trace.spans(|k| matches!(k, SpanKind::Request { .. }));
+    assert_eq!(queues.len(), 2, "one queue span per job");
+    assert_eq!(runs.len(), 2, "one engine-epoch span per job");
+    assert_eq!(requests.len(), 2, "one request span per job");
+    // A request encloses its job's engine epoch.
+    for (rq, jr) in requests.iter().zip(runs.iter()) {
+        assert!(rq.ts <= jr.ts && rq.ts + rq.dur >= jr.ts + jr.dur);
+    }
+    // Exactly one compile span: the second job is a template-cache hit.
+    let compiles = trace.spans(|k| matches!(k, SpanKind::Compile { .. }));
+    assert_eq!(compiles.len(), 1, "cache hit skips the compile span");
+}
+
+#[test]
+fn serve_histograms_report_tail_latencies() {
+    let svc = JobService::new(ServeConfig { slots: 1, workers: 2, ..Default::default() });
+    const JOBS: usize = 5;
+    for _ in 0..JOBS {
+        svc.run(JobRequest::source("collect(bag(1), \"x\");")).unwrap();
+    }
+    let m = svc.metrics();
+    for key in ["serve.queue_wait", "serve.job_time", "serve.request_time"] {
+        let s = m.time_stats(key).unwrap_or_else(|| panic!("{key} histogram missing"));
+        assert_eq!(s.count, JOBS as u64, "{key} records every job");
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99, "{key} quantiles are ordered");
+        // Log buckets estimate within 2x: p99 <= 2 * max <= 2 * total.
+        assert!(s.p99 <= s.total * 2, "{key} p99 within the bucket-resolution bound");
+    }
+    let report = svc.report();
+    assert!(report.contains("p99"), "service report shows tail latencies: {report}");
+    assert!(report.contains("serve.request_time"), "report names the histogram");
+}
