@@ -143,6 +143,8 @@ fn to_json(
     points: &[Point],
     speedup: Option<f64>,
     trace_gate_overhead: Option<f64>,
+    checkpoint_gate_overhead: Option<f64>,
+    checkpoint_on_overhead: Option<f64>,
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
@@ -158,6 +160,18 @@ fn to_json(
         // Fractional slowdown of the disabled-tracer path vs no tracer
         // (acceptance budget: <= 0.02).
         let _ = writeln!(s, "  \"trace_gate_overhead\": {x:.4},");
+    }
+    if let Some(x) = checkpoint_gate_overhead {
+        // Fractional slowdown of an ARMED-but-never-firing fault gate
+        // (empty FaultPlan through the recovery wrapper, checkpointing
+        // off) vs the plain path (acceptance budget: <= 0.02).
+        let _ = writeln!(s, "  \"checkpoint_gate_overhead\": {x:.4},");
+    }
+    if let Some(x) = checkpoint_on_overhead {
+        // Fractional slowdown with checkpoint_every = 1 (frontier
+        // tracking + per-bag done reporting + snapshot cuts) — the
+        // price of crash-safety when switched ON, not a budget.
+        let _ = writeln!(s, "  \"checkpoint_on_overhead\": {x:.4},");
     }
     s.push_str("  \"series\": [\n");
     for (i, p) in points.iter().enumerate() {
@@ -259,6 +273,59 @@ pub fn throughput_benchmark(smoke: bool) {
         overhead
     };
 
+    // Checkpoint/fault-gate overhead: the same fused chain with an ARMED
+    // but empty FaultPlan (the per-append fault check runs and the epoch
+    // routes through the recovery wrapper; checkpointing stays off) vs
+    // the plain series. This is the price every epoch pays when a
+    // process-wide LABY_FAULTS plan or a checkpoint cadence is merely
+    // configured — budget <= 2%, reported rather than hard-asserted for
+    // the same CI-noise reason as the trace gate.
+    let (graph_ck, _) = crate::compile_with_registry(fused, &OptConfig::default(), &reg)
+        .expect("fused-chain compiles");
+    let checkpoint_gate_overhead = {
+        let cfg = ExecConfig {
+            workers: 1,
+            registry: reg.clone(),
+            faults: Some(Arc::new(crate::exec::FaultPlan::new())),
+            ..Default::default()
+        };
+        let m = bench.run("fused-chain w=1 (fault gate armed, never fires)", || {
+            let out = run(&graph_ck, &cfg).unwrap_or_else(|e| panic!("ckpt-gate: {e}"));
+            assert!(!out.collected("n").is_empty());
+        });
+        let gated_ns = m.median().as_nanos().max(1);
+        let overhead = gated_ns as f64 / batched_ns as f64 - 1.0;
+        eprintln!(
+            "checkpoint-gate overhead (armed, never fires), fused-chain w=1: {:+.2}%",
+            overhead * 100.0
+        );
+        overhead
+    };
+
+    // Checkpointing switched ON at the tightest cadence: every decision
+    // boundary becomes a quiescent cut (frontier tracking, per-bag done
+    // reports, instance snapshots). This is the crash-safety price tag,
+    // not a regression budget.
+    let checkpoint_on_overhead = {
+        let cfg = ExecConfig {
+            workers: 1,
+            registry: reg.clone(),
+            checkpoint_every: Some(1),
+            ..Default::default()
+        };
+        let m = bench.run("fused-chain w=1 (checkpoint_every=1)", || {
+            let out = run(&graph_ck, &cfg).unwrap_or_else(|e| panic!("ckpt-on: {e}"));
+            assert!(!out.collected("n").is_empty());
+        });
+        let on_ns = m.median().as_nanos().max(1);
+        let overhead = on_ns as f64 / batched_ns as f64 - 1.0;
+        eprintln!(
+            "checkpointing-on overhead (checkpoint_every=1), fused-chain w=1: {:+.2}%",
+            overhead * 100.0
+        );
+        overhead
+    };
+
     // Paper-style table: workloads × worker counts (median run time).
     let mut table = Table::new(
         "Data-plane throughput (median run time; see BENCH_throughput.json for elems/sec)",
@@ -279,7 +346,14 @@ pub fn throughput_benchmark(smoke: bool) {
     }
     table.print();
 
-    let json = to_json(elements, &points, Some(speedup), Some(trace_gate_overhead));
+    let json = to_json(
+        elements,
+        &points,
+        Some(speedup),
+        Some(trace_gate_overhead),
+        Some(checkpoint_gate_overhead),
+        Some(checkpoint_on_overhead),
+    );
     let path = "BENCH_throughput.json";
     std::fs::write(path, &json).unwrap_or_else(|e| panic!("writing {path}: {e}"));
     println!("wrote {path}");

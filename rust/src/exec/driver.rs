@@ -18,6 +18,7 @@
 use super::message::{DriverMsg, WorkerMsg};
 use super::plan::ExecPlan;
 use super::pool::WorkerPool;
+use super::recovery::{EpochCheckpoint, InstanceSnapshot};
 use super::{ExecConfig, ExecMode, NodeRows, RunOutput};
 use crate::coord::ExecPath;
 use crate::error::{Error, Result};
@@ -25,12 +26,8 @@ use crate::frontend::{BlockId, Terminator};
 use crate::metrics::Metrics;
 use rustc_hash::FxHashMap;
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
-
-/// Hard stall limit: if no driver message arrives for this long, the run
-/// is declared deadlocked (a coordination bug) instead of hanging forever.
-const STALL_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Poll interval for the cooperative cancellation token while the driver
 /// is blocked in `recv` (only applied when a token is configured): the
@@ -52,10 +49,43 @@ pub fn run_plan(plan: Arc<ExecPlan>, cfg: &ExecConfig) -> Result<RunOutput> {
 /// The plan must have been instantiated for exactly `pool.size()`
 /// workers. On return — success, error, or deadline abort — every pool
 /// thread has finished the epoch and the pool is ready for the next job.
+///
+/// With fault injection armed ([`ExecConfig::faults`], e.g. via
+/// `LABY_FAULTS`) or checkpointing requested
+/// ([`ExecConfig::checkpoint_every`]), the run is routed through
+/// [`super::recovery::run_plan_with_recovery`] with the default
+/// [`super::recovery::RetryPolicy`], so injected crashes are retried —
+/// resuming from the last superstep-boundary checkpoint when one
+/// exists. Otherwise this is a single attempt with zero recovery
+/// overhead.
 pub fn run_plan_on_pool(
     plan: Arc<ExecPlan>,
     cfg: &ExecConfig,
     pool: &WorkerPool,
+) -> Result<RunOutput> {
+    if cfg.faults.is_some() || cfg.checkpoint_every.is_some() {
+        return super::recovery::run_plan_with_recovery(
+            plan,
+            cfg,
+            pool,
+            &super::recovery::RetryPolicy::default(),
+        );
+    }
+    run_plan_attempt(plan, cfg, pool, None, None)
+}
+
+/// One epoch attempt: the single-shot engine under the recovery layer.
+/// `resume` seeds the epoch from a superstep-boundary checkpoint
+/// (drivers re-seed the path and re-broadcast the withheld chain,
+/// workers restore their instances); `ckpt_sink` receives every
+/// checkpoint this attempt takes (cuts only happen when both the sink
+/// and [`ExecConfig::checkpoint_every`] are present).
+pub(crate) fn run_plan_attempt(
+    plan: Arc<ExecPlan>,
+    cfg: &ExecConfig,
+    pool: &WorkerPool,
+    resume: Option<Arc<EpochCheckpoint>>,
+    ckpt_sink: Option<&Arc<Mutex<Option<Arc<EpochCheckpoint>>>>>,
 ) -> Result<RunOutput> {
     if plan.workers != pool.size() {
         return Err(Error::exec(format!(
@@ -110,6 +140,25 @@ pub fn run_plan_on_pool(
     let node_counters: Arc<Vec<super::worker::NodeCounters>> = Arc::new(
         plan.graph.nodes.iter().map(super::worker::NodeCounters::for_node).collect(),
     );
+    // Resumed epoch: restore the observed cardinalities captured at the
+    // cut BEFORE workers start adding to them, so adaptive feedback
+    // sees one epoch's worth of rows rather than a partial recount.
+    if let Some(ck) = &resume {
+        for (n, r) in ck.node_rows.iter().enumerate() {
+            let c = &node_counters[n];
+            c.rows.store(r.rows, std::sync::atomic::Ordering::Relaxed);
+            c.bags.store(r.bags, std::sync::atomic::Ordering::Relaxed);
+            for (s, v) in r.stage_rows.iter().enumerate() {
+                if let Some(slot) = c.stage_rows.get(s) {
+                    slot.store(*v, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+            c.self_ns.store(r.self_time_ns, std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+    // Bag-completion tracking: barrier mode needs it for its per-step
+    // release, checkpointing needs it to find a quiescent cut.
+    let track_frontier = cfg.mode == ExecMode::Barrier || cfg.checkpoint_every.is_some();
     let shared = Arc::new(super::worker::WorkerShared {
         plan: plan.clone(),
         workers: worker_txs.clone(),
@@ -118,7 +167,7 @@ pub fn run_plan_on_pool(
         reuse: cfg.reuse_state,
         counters: Arc::new(super::worker::EngineCounters::new(&metrics)),
         metrics: metrics.clone(),
-        report_bag_done: cfg.mode == ExecMode::Barrier,
+        report_bag_done: track_frontier,
         io_dir: cfg.io_dir.clone(),
         registry: cfg.registry.clone(),
         node_counters: node_counters.clone(),
@@ -127,6 +176,8 @@ pub fn run_plan_on_pool(
         element_path: cfg.element_path,
         trace: tracer.clone(),
         trace_lanes,
+        resume: resume.clone(),
+        faults: cfg.faults.clone(),
     });
     if let Some(replay) = cfg.preamble.as_ref().and_then(|p| p.replay.as_ref()) {
         metrics.add("exec.preamble_replay_nodes", replay.len() as u64);
@@ -186,15 +237,39 @@ pub fn run_plan_on_pool(
     let d_decisions = metrics.handle("driver.decisions");
     let d_bag_dones = metrics.handle("driver.bag_dones");
 
-    // Kick off with the entry chain.
-    {
-        let entry = graph.entry_chain.clone();
-        let final_ = chain_is_final(&entry);
-        if let Some(t) = &tracer {
-            chain_marks.push((path.len() + 1, entry[0], entry.len() as u32, t.now_ns()));
+    // Kick off: a resumed epoch re-seeds the checkpointed prefix (all
+    // of it already complete — workers restored their instances and
+    // never re-run prefix bags) and broadcasts the checkpoint's
+    // withheld decision chain; a fresh epoch broadcasts the entry
+    // chain.
+    match &resume {
+        Some(ck) => {
+            path.append(0, &ck.blocks, false);
+            done_at = plan.full_done_at(&path);
+            frontier = path.len() as usize;
+            for (label, _, items) in &ck.outputs {
+                collected.entry(label.clone()).or_default().extend(items.iter().cloned());
+            }
+            outputs = ck.outputs.clone();
+            if let Some(sp) = dspans.as_mut() {
+                sp.instant(crate::obs::SpanKind::Recover { pos: path.len() });
+            }
+            let (chain, final_) = ck.pending.clone();
+            if let Some(t) = &tracer {
+                chain_marks.push((path.len() + 1, chain[0], chain.len() as u32, t.now_ns()));
+            }
+            d_appends.add(chain.len() as u64);
+            broadcast(&mut path, &mut done_at, &chain, final_, &worker_txs);
         }
-        broadcast(&mut path, &mut done_at, &entry, final_, &worker_txs);
-        d_appends.add(entry.len() as u64);
+        None => {
+            let entry = graph.entry_chain.clone();
+            let final_ = chain_is_final(&entry);
+            if let Some(t) = &tracer {
+                chain_marks.push((path.len() + 1, entry[0], entry.len() as u32, t.now_ns()));
+            }
+            broadcast(&mut path, &mut done_at, &entry, final_, &worker_txs);
+            d_appends.add(entry.len() as u64);
+        }
     }
 
     let advance_frontier =
@@ -209,16 +284,29 @@ pub fn run_plan_on_pool(
             }
         };
 
+    // Superstep-boundary checkpointing (`recovery::`): every k-th
+    // decision chain is withheld; once all bags of the frozen prefix
+    // report done (frontier == path length — a quiescent, message-free
+    // cut), every worker snapshots its instances and the assembled
+    // checkpoint lands in `ckpt_sink` before the chain is released.
+    let checkpointing = ckpt_sink.is_some() && cfg.checkpoint_every.is_some();
+    let mut decisions_since_ckpt: u32 = 0;
+    let mut pending_ckpt: Option<(Vec<BlockId>, bool)> = None;
+    let mut snap_requested = false;
+    let mut snaps: Vec<Option<Vec<InstanceSnapshot>>> = vec![None; plan.workers];
+    let mut snaps_got = 0usize;
+    let mut ckpt_t0: Option<u64> = None;
+
     let mut error: Option<Error> = None;
     // Stall detection is measured from the last received message, not per
     // recv call: the cancel poll shortens individual recv timeouts far
-    // below STALL_TIMEOUT, so a bare recv timeout no longer implies a
+    // below the stall limit, so a bare recv timeout no longer implies a
     // stall.
     let mut last_msg = Instant::now();
     loop {
         // Cooperative cancel (serve:: JobTicket) and per-job deadlines
         // (serve:: admission queue) bound the wait; a stall past
-        // STALL_TIMEOUT is a coordination bug either way.
+        // `cfg.stall_timeout` is a coordination bug either way.
         if cfg.cancel.as_ref().map_or(false, |c| c.load(std::sync::atomic::Ordering::SeqCst)) {
             error = Some(Error::Canceled);
             break;
@@ -228,7 +316,7 @@ pub fn run_plan_on_pool(
             error = Some(Error::DeadlineExceeded);
             break;
         }
-        let stall_left = STALL_TIMEOUT.saturating_sub(now.duration_since(last_msg));
+        let stall_left = cfg.stall_timeout.saturating_sub(now.duration_since(last_msg));
         if stall_left.is_zero() {
             let done_ref = &done_who;
             let stuck: Vec<String> = graph
@@ -272,6 +360,10 @@ pub fn run_plan_on_pool(
                 break;
             }
         };
+        // A chain that became broadcastable this iteration (decision
+        // relay, or a barrier release) funnels through here so the
+        // checkpoint cut below can intercept it uniformly.
+        let mut ready_chain: Option<(Vec<BlockId>, bool)> = None;
         match msg {
             DriverMsg::Decision { node, bag_len, value } => {
                 debug_assert_eq!(
@@ -289,31 +381,13 @@ pub fn run_plan_on_pool(
                 d_decisions.incr();
                 d_appends.add(chain.len() as u64);
                 match cfg.mode {
-                    ExecMode::Pipelined => {
-                        if let Some(t) = &tracer {
-                            chain_marks.push((
-                                path.len() + 1,
-                                chain[0],
-                                chain.len() as u32,
-                                t.now_ns(),
-                            ));
-                        }
-                        broadcast(&mut path, &mut done_at, &chain, final_, &worker_txs)
-                    }
+                    ExecMode::Pipelined => ready_chain = Some((chain, final_)),
                     ExecMode::Barrier => {
                         // Withhold until every bag of the current prefix is
                         // complete (per-step synchronization barrier).
                         advance_frontier(&mut frontier, &done_at, &path, &plan);
                         if frontier >= path.len() as usize {
-                            if let Some(t) = &tracer {
-                                chain_marks.push((
-                                    path.len() + 1,
-                                    chain[0],
-                                    chain.len() as u32,
-                                    t.now_ns(),
-                                ));
-                            }
-                            broadcast(&mut path, &mut done_at, &chain, final_, &worker_txs);
+                            ready_chain = Some((chain, final_));
                         } else {
                             pending_decision = Some((chain, final_));
                         }
@@ -327,18 +401,48 @@ pub fn run_plan_on_pool(
                 if cfg.mode == ExecMode::Barrier {
                     advance_frontier(&mut frontier, &done_at, &path, &plan);
                     if frontier >= path.len() as usize {
-                        if let Some((chain, final_)) = pending_decision.take() {
-                            if let Some(t) = &tracer {
-                                chain_marks.push((
-                                    path.len() + 1,
-                                    chain[0],
-                                    chain.len() as u32,
-                                    t.now_ns(),
-                                ));
-                            }
-                            broadcast(&mut path, &mut done_at, &chain, final_, &worker_txs);
+                        if let Some(pd) = pending_decision.take() {
+                            ready_chain = Some(pd);
                         }
                     }
+                }
+            }
+            DriverMsg::Snapshot { worker, insts } => {
+                debug_assert!(snap_requested, "unsolicited snapshot from worker {worker}");
+                if snaps[worker].is_none() {
+                    snaps_got += 1;
+                }
+                snaps[worker] = Some(insts);
+                if snaps_got == plan.workers {
+                    let (chain, final_) =
+                        pending_ckpt.take().expect("snapshot without a pending checkpoint");
+                    let ck = EpochCheckpoint {
+                        blocks: path.blocks().to_vec(),
+                        pending: (chain.clone(), final_),
+                        outputs: outputs.clone(),
+                        node_rows: load_node_rows(&node_counters),
+                        insts: snaps.iter_mut().filter_map(|s| s.take()).flatten().collect(),
+                    };
+                    if let Some(sink) = ckpt_sink {
+                        *sink.lock().unwrap() = Some(Arc::new(ck));
+                    }
+                    metrics.add("exec.checkpoints_taken", 1);
+                    if let (Some(sp), Some(t0)) = (dspans.as_mut(), ckpt_t0.take()) {
+                        sp.record(crate::obs::SpanKind::Checkpoint { pos: path.len() }, t0);
+                    }
+                    snaps_got = 0;
+                    snap_requested = false;
+                    // Release the withheld chain: the epoch continues
+                    // exactly where it paused.
+                    if let Some(t) = &tracer {
+                        chain_marks.push((
+                            path.len() + 1,
+                            chain[0],
+                            chain.len() as u32,
+                            t.now_ns(),
+                        ));
+                    }
+                    broadcast(&mut path, &mut done_at, &chain, final_, &worker_txs);
                 }
             }
             DriverMsg::Output { label, bag_len, items } => {
@@ -361,6 +465,46 @@ pub fn run_plan_on_pool(
                 // is already draining. Abort and tear the epoch down.
                 error = Some(Error::Canceled);
                 break;
+            }
+        }
+
+        // Relay (or withhold) the chain that became ready this iteration.
+        // A checkpoint cut never targets a final chain: the epoch is about
+        // to finish, so snapshotting it buys nothing.
+        if let Some((chain, final_)) = ready_chain {
+            decisions_since_ckpt += 1;
+            let cut = checkpointing
+                && !final_
+                && pending_ckpt.is_none()
+                && cfg.checkpoint_every.map_or(false, |k| decisions_since_ckpt >= k);
+            if cut {
+                decisions_since_ckpt = 0;
+                ckpt_t0 = dspans.as_ref().map(|sp| sp.now());
+                pending_ckpt = Some((chain, final_));
+            } else {
+                if let Some(t) = &tracer {
+                    chain_marks.push((
+                        path.len() + 1,
+                        chain[0],
+                        chain.len() as u32,
+                        t.now_ns(),
+                    ));
+                }
+                broadcast(&mut path, &mut done_at, &chain, final_, &worker_txs);
+            }
+        }
+
+        // With the chain withheld the path is frozen, so the prefix
+        // drains to quiescence: once the frontier covers the whole path
+        // every instance is idle and the cut is consistent. Request the
+        // snapshots exactly once per cut.
+        if pending_ckpt.is_some() && !snap_requested {
+            advance_frontier(&mut frontier, &done_at, &path, &plan);
+            if frontier >= path.len() as usize {
+                snap_requested = true;
+                for tx in &worker_txs {
+                    let _ = tx.send(WorkerMsg::Checkpoint);
+                }
             }
         }
     }
@@ -407,7 +551,36 @@ pub fn run_plan_on_pool(
         return Err(e);
     }
 
-    let node_rows: Vec<NodeRows> = node_counters
+    // Recovery accounting (checked by the chaos tests): a resumed epoch
+    // skipped `supersteps_recovered` positions and only executed the
+    // remainder.
+    if let Some(ck) = &resume {
+        metrics.add("exec.supersteps_recovered", ck.blocks.len() as u64);
+        metrics.add(
+            "exec.supersteps_replayed",
+            path.len() as u64 - ck.blocks.len() as u64,
+        );
+    }
+
+    let node_rows = load_node_rows(&node_counters);
+
+    Ok(RunOutput {
+        collected,
+        outputs,
+        elapsed: start.elapsed(),
+        sched_overhead,
+        metrics,
+        path_len: path.len() as usize,
+        node_rows,
+    })
+}
+
+/// Materialize the per-node counters into plain [`NodeRows`] — used both
+/// for the final [`RunOutput`] and for embedding live totals into an
+/// [`EpochCheckpoint`] (a resumed attempt re-seeds its counters from them
+/// so per-node stats stay cumulative across the fault).
+fn load_node_rows(counters: &[super::worker::NodeCounters]) -> Vec<NodeRows> {
+    counters
         .iter()
         .map(|c| NodeRows {
             rows: c.rows.load(std::sync::atomic::Ordering::Relaxed),
@@ -419,15 +592,5 @@ pub fn run_plan_on_pool(
                 .collect(),
             self_time_ns: c.self_ns.load(std::sync::atomic::Ordering::Relaxed),
         })
-        .collect();
-
-    Ok(RunOutput {
-        collected,
-        outputs,
-        elapsed: start.elapsed(),
-        sched_overhead,
-        metrics,
-        path_len: path.len() as usize,
-        node_rows,
-    })
+        .collect()
 }

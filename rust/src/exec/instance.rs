@@ -877,6 +877,89 @@ impl Instance {
         }
     }
 
+    // ---- checkpoint / restore (recovery::) --------------------------------
+
+    /// Capture this instance's state at a superstep-boundary checkpoint
+    /// cut. The driver only requests snapshots once every bag of the
+    /// current path prefix has reported done, which makes the instance
+    /// quiescent: no open output bag, no queued bag starts, nothing
+    /// staged or buffered for send, and no retained bag still
+    /// computing. Everything else an epoch would need is either in the
+    /// snapshot (input-bag buffers — including the ones backing §7
+    /// reused state — and §6.3.4 retained conditional outputs) or
+    /// derivable from the restored path replica. Entries are sorted by
+    /// bag id so identical cuts produce identical snapshots.
+    pub fn snapshot(&self) -> super::recovery::InstanceSnapshot {
+        debug_assert!(self.cur.is_none(), "checkpoint with an open output bag");
+        debug_assert!(self.pending_out.is_empty(), "checkpoint with queued bag starts");
+        debug_assert!(self.staging.items.is_empty(), "checkpoint with staged emissions");
+        debug_assert!(
+            self.send_bufs.iter().all(|per| per.iter().all(|b| b.is_empty())),
+            "checkpoint with buffered sends"
+        );
+        let bufs = self
+            .bufs
+            .iter()
+            .map(|m| {
+                let mut v: Vec<(u32, Vec<Value>, usize)> =
+                    m.iter().map(|(&len, b)| (len, b.items.clone(), b.closes)).collect();
+                v.sort_by_key(|e| e.0);
+                v
+            })
+            .collect();
+        let mut retained: Vec<(u32, Vec<Value>, Vec<(usize, bool)>)> = self
+            .retained
+            .iter()
+            .map(|(&len, r)| {
+                debug_assert!(!r.computing, "checkpoint with a computing retained bag");
+                (
+                    len,
+                    r.items.clone(),
+                    r.watchers.iter().map(|&(e, _, sent)| (e, sent)).collect(),
+                )
+            })
+            .collect();
+        retained.sort_by_key(|e| e.0);
+        super::recovery::InstanceSnapshot { node: self.node, inst: self.inst, bufs, retained }
+    }
+
+    /// Rebuild instance state from a checkpoint snapshot, against a
+    /// path already seeded with the checkpointed prefix. Input buffers
+    /// and retained bags come back verbatim; §6.3.4 watchers are
+    /// reconstructed by replaying the restored path (never final at a
+    /// cut — final chains are not checkpointed). `prev_req` stays
+    /// `None` on purpose: the first post-resume bag of a
+    /// state-keeping input re-feeds its (restored) backing buffer into
+    /// the fresh transformation, rebuilding §7 state exactly as a
+    /// reuse-disabled step would.
+    pub fn restore(&mut self, snap: &super::recovery::InstanceSnapshot, path: &ExecPath, plan: &ExecPlan) {
+        debug_assert_eq!(self.node, snap.node, "snapshot restored into wrong node");
+        debug_assert_eq!(self.inst, snap.inst, "snapshot restored into wrong instance");
+        for (i, bags) in snap.bufs.iter().enumerate() {
+            for (len, items, closes) in bags {
+                self.bufs[i]
+                    .insert(*len, InBuf { items: items.clone(), closes: *closes });
+            }
+        }
+        for (len, items, watchers) in &snap.retained {
+            let rebuilt: Vec<(usize, OutWatcher, bool)> = watchers
+                .iter()
+                .map(|&(edge_idx, sent)| {
+                    let oe = &plan.out_edges[self.node][edge_idx];
+                    let mut w = OutWatcher::new(*len, oe.target_block, oe.blockers.clone());
+                    for pos in (*len + 1)..=path.len() {
+                        w.on_block(pos, path.at(pos));
+                    }
+                    (edge_idx, w, sent)
+                })
+                .collect();
+            self.retained.insert(
+                *len,
+                Retained { items: items.clone(), computing: false, watchers: rebuilt },
+            );
+        }
+    }
+
     fn maybe_done(&mut self, env: &mut Env) {
         if self.done_sent || !env.path.is_final() {
             return;

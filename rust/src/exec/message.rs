@@ -1,6 +1,7 @@
 //! Messages of the simulated cluster: worker-bound data/control and
 //! driver-bound coordination reports.
 
+use super::recovery::InstanceSnapshot;
 use crate::dataflow::NodeId;
 use crate::frontend::BlockId;
 use crate::value::Value;
@@ -45,6 +46,11 @@ pub enum WorkerMsg {
         /// True when the chain ends at a terminal block.
         final_: bool,
     },
+    /// Snapshot request at a superstep-boundary checkpoint cut: the
+    /// driver has verified every bag of the current path prefix is
+    /// complete (all instances quiescent), so the worker replies with a
+    /// [`DriverMsg::Snapshot`] of every instance it hosts.
+    Checkpoint,
     /// Stop the worker loop.
     Shutdown,
 }
@@ -85,6 +91,14 @@ pub enum DriverMsg {
         node: NodeId,
         /// Instance.
         inst: usize,
+    },
+    /// Reply to [`WorkerMsg::Checkpoint`]: the state of every instance
+    /// this worker hosts, captured at the quiescent cut.
+    Snapshot {
+        /// Reporting worker id.
+        worker: usize,
+        /// One snapshot per hosted instance.
+        insts: Vec<InstanceSnapshot>,
     },
     /// A worker thread panicked.
     Panic {

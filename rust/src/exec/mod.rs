@@ -9,6 +9,7 @@ pub mod instance;
 pub mod message;
 pub mod plan;
 pub mod pool;
+pub mod recovery;
 pub mod worker;
 
 use crate::dataflow::{DataflowGraph, NodeId};
@@ -22,6 +23,10 @@ use std::time::Duration;
 
 pub use plan::ExecPlan;
 pub use pool::WorkerPool;
+pub use recovery::{EpochCheckpoint, FaultKind, FaultPlan, RetryPolicy};
+
+/// Default driver stall limit (see [`ExecConfig::stall_timeout`]).
+pub const DEFAULT_STALL_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Execution mode.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -85,6 +90,26 @@ pub struct ExecConfig {
     /// buffers. The gate is re-checked once per epoch, so one tracer
     /// can be toggled across the runs of a resident `serve::` pool.
     pub trace: Option<Arc<crate::obs::Tracer>>,
+    /// Superstep-boundary checkpointing: `Some(k)` snapshots loop state
+    /// every k control-flow decisions, so a retried epoch resumes from
+    /// the last completed superstep instead of rerunning from scratch
+    /// (`recovery::`). `None` (the default) takes no checkpoints and
+    /// adds no cost — the driver never tracks the completion frontier.
+    pub checkpoint_every: Option<u32>,
+    /// Deterministic fault injection ([`recovery::FaultPlan`]): a
+    /// seeded schedule of worker-panic / message-drop / slow-worker
+    /// events keyed to `(worker, superstep)`. `None` unless
+    /// `LABY_FAULTS=<seed>` arms a process-wide seeded plan (see
+    /// [`default_faults`]). Setting this (or `checkpoint_every`) routes
+    /// `run_plan_on_pool` through `recovery::run_plan_with_recovery`,
+    /// so injected crashes are retried with the default policy.
+    pub faults: Option<Arc<recovery::FaultPlan>>,
+    /// Driver stall limit: if no coordination message arrives for this
+    /// long, the run is declared deadlocked ([`crate::Error::Coordination`])
+    /// instead of hanging. Defaults to [`DEFAULT_STALL_TIMEOUT`];
+    /// fault-injection tests that starve consumers (dropped messages)
+    /// shrink it so recovery kicks in quickly.
+    pub stall_timeout: Duration,
 }
 
 /// Materialized invariant-preamble outputs: shareable node id → the items
@@ -133,6 +158,21 @@ pub fn default_element_path() -> bool {
         .get_or_init(|| std::env::var("LABY_ELEMENT_PATH").ok().as_deref() == Some("1"))
 }
 
+/// Process-default fault plan: `None`, unless `LABY_FAULTS=<seed>`
+/// (a u64) arms chaos mode — then every [`ExecConfig::default`] gets a
+/// FRESH seeded [`recovery::FaultPlan`] (each plan carries its own
+/// one-shot/cap bookkeeping, so independent runs each see up to
+/// [`recovery::FaultPlan::seeded`]'s capped fault budget). The seed is
+/// parsed once per process; CI's chaos-smoke leg runs the whole tier-1
+/// suite this way.
+pub fn default_faults() -> Option<Arc<recovery::FaultPlan>> {
+    static SEED: std::sync::OnceLock<Option<u64>> = std::sync::OnceLock::new();
+    SEED.get_or_init(|| {
+        std::env::var("LABY_FAULTS").ok().and_then(|s| s.trim().parse::<u64>().ok())
+    })
+    .map(|seed| Arc::new(recovery::FaultPlan::seeded(seed)))
+}
+
 impl Default for ExecConfig {
     fn default() -> Self {
         ExecConfig {
@@ -148,6 +188,9 @@ impl Default for ExecConfig {
             preamble: None,
             element_path: default_element_path(),
             trace: crate::obs::default_tracer(),
+            checkpoint_every: None,
+            faults: default_faults(),
+            stall_timeout: DEFAULT_STALL_TIMEOUT,
         }
     }
 }

@@ -178,6 +178,13 @@ impl ExecPlan {
         }
     }
 
+    /// A `done_at` vector marking every position of `path` fully
+    /// complete — used when resuming from a superstep-boundary
+    /// checkpoint, whose prefix bags were all finished at the cut.
+    pub fn full_done_at(&self, path: &crate::coord::ExecPath) -> Vec<usize> {
+        (1..=path.len()).map(|p| self.insts_per_block[path.at(p)]).collect()
+    }
+
     /// Which worker hosts instance `inst` of `node`.
     pub fn worker_of(&self, node: NodeId, inst: usize) -> usize {
         if self.num_insts[node] == 1 {

@@ -164,7 +164,12 @@ mod tests {
             got.sort();
             assert_eq!(got.len(), 3);
         }
-        assert_eq!(pool.epochs(), 5 * 3, "every job runs one epoch per worker");
+        if crate::exec::default_faults().is_some() {
+            // Under `LABY_FAULTS` injected panics add retry epochs.
+            assert!(pool.epochs() >= 5 * 3, "every job runs one epoch per worker");
+        } else {
+            assert_eq!(pool.epochs(), 5 * 3, "every job runs one epoch per worker");
+        }
         assert_eq!(pool.thread_ids(), ids_before, "no thread churn across jobs");
     }
 

@@ -1,0 +1,371 @@
+//! Crash-safe epochs: superstep-boundary checkpointing + bounded retry,
+//! plus first-class **deterministic fault injection**.
+//!
+//! A compiled Labyrinth program runs as ONE cyclic dataflow job — which
+//! also makes it one failure domain: without recovery, a single worker
+//! panic throws away every completed superstep (the trade-off *Spinning
+//! Fast Iterative Data Flows* resolves with iteration-boundary
+//! recovery). This module adds exactly that recovery shape, at the
+//! natural granularity the paper's single-job loop structure provides:
+//! the **superstep boundary**.
+//!
+//! ## Checkpointing
+//!
+//! With [`super::ExecConfig::checkpoint_every`] = `Some(k)`, the driver
+//! withholds every k-th control-flow decision until all bags of the
+//! current path prefix are complete (the same frontier tracking barrier
+//! mode uses), asks every worker for an [`InstanceSnapshot`] of each
+//! hosted instance, and assembles an [`EpochCheckpoint`]: the execution
+//! path prefix, the withheld decision chain (the lifted scalar control
+//! state — Φ values live in the dataflow and are covered by the
+//! instance snapshots), collected outputs so far, observed node
+//! cardinalities, and per-instance operator state (input-bag buffers
+//! backing hash-join builds / reduceByKey partials, plus §6.3.4
+//! retained conditional outputs). The cut is consistent by
+//! construction: every instance is quiescent (no open output bag, no
+//! staged or buffered emissions) and no worker-to-worker message is in
+//! flight once every bag of the prefix has reported done.
+//!
+//! ## Retry
+//!
+//! [`run_plan_with_recovery`] wraps `driver::run_plan_attempt` in a
+//! bounded retry loop: a retryable failure (worker panic →
+//! [`Error::Exec`], stall → [`Error::Coordination`]) re-runs the epoch,
+//! resuming from the latest checkpoint when one exists (workers restore
+//! their instances, the driver re-seeds the path and re-broadcasts the
+//! withheld chain) or from scratch otherwise. The original
+//! [`super::ExecConfig::deadline`] keeps being enforced *across*
+//! attempts, and typed aborts ([`Error::Canceled`],
+//! [`Error::DeadlineExceeded`]) are never retried.
+//!
+//! ## Fault injection
+//!
+//! [`FaultPlan`] is a deterministic, seeded schedule of worker-panic /
+//! slow-worker / message-drop events keyed to `(worker, superstep)`,
+//! threaded through `exec::pool`/`worker`/`driver` via
+//! [`super::ExecConfig::faults`] — zero-cost when unset (one `Option`
+//! branch per path append). `LABY_FAULTS=<seed>` arms a seeded plan
+//! process-wide (see [`super::default_faults`]), which is how CI's
+//! chaos-smoke leg runs the whole tier-1 suite under injected panics.
+
+use super::plan::ExecPlan;
+use super::pool::WorkerPool;
+use super::{ExecConfig, NodeRows, RunOutput};
+use crate::dataflow::NodeId;
+use crate::error::{Error, Result};
+use crate::frontend::BlockId;
+use crate::util::rng::Rng;
+use crate::value::Value;
+use rustc_hash::{FxHashMap, FxHashSet};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One injected fault event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker thread panics (caught by the pool, surfaced as
+    /// [`Error::Exec`] — the retryable crash class).
+    Panic,
+    /// The worker sleeps for the given duration before processing the
+    /// superstep (straggler simulation).
+    Slow(Duration),
+    /// The worker silently drops its next `Data` message (consumer
+    /// starves → driver stall timeout → retryable
+    /// [`Error::Coordination`]). Pair with a short
+    /// [`super::ExecConfig::stall_timeout`] in tests.
+    DropData,
+}
+
+/// Cap on how many faults a *seeded* plan fires over its lifetime
+/// (explicit [`FaultPlan::panic_at`]-style events are uncapped, but
+/// one-shot each). Two fires + the default two retries means the final
+/// attempt of a default-policy run is always clean — so arming
+/// `LABY_FAULTS` over the whole test suite perturbs every epoch without
+/// ever exhausting the retry budget by itself.
+const SEEDED_CAP: u32 = 2;
+
+/// Seeded-plan fire rate: one in `SEEDED_ONE_IN` `(worker, superstep)`
+/// coordinates draws a panic.
+const SEEDED_ONE_IN: u64 = 8;
+
+#[derive(Debug, Default)]
+struct Fired {
+    /// Coordinates that already fired (every event is one-shot, so a
+    /// retried epoch does not hit the same fault forever).
+    set: FxHashSet<(usize, u32)>,
+    /// Seeded fires so far (bounded by [`SEEDED_CAP`]).
+    seeded: u32,
+}
+
+/// A deterministic schedule of fault-injection events keyed to
+/// `(worker, superstep)`. Explicit events ([`FaultPlan::panic_at`],
+/// [`FaultPlan::slow_at`], [`FaultPlan::drop_at`]) fire exactly once
+/// each; a seeded plan ([`FaultPlan::seeded`]) additionally draws
+/// pseudo-random panics from the seed — reproducibly, since the draw is
+/// a pure function of `(seed, worker, superstep)`. Share one plan
+/// across the attempts of a run (an `Arc` in
+/// [`super::ExecConfig::faults`]) so retries move *past* injected
+/// faults instead of replaying them.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    events: FxHashMap<(usize, u32), FaultKind>,
+    seed: Option<u64>,
+    fired: Mutex<Fired>,
+}
+
+impl FaultPlan {
+    /// Empty plan: the fault-injection gate is present but never fires.
+    /// (The bench-throughput `checkpoint_gate_overhead` series measures
+    /// exactly this configuration against no plan at all.)
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Add a one-shot worker panic at a 1-based superstep.
+    pub fn panic_at(mut self, worker: usize, superstep: u32) -> FaultPlan {
+        self.events.insert((worker, superstep), FaultKind::Panic);
+        self
+    }
+
+    /// Add a one-shot slow-worker stall at a 1-based superstep.
+    pub fn slow_at(mut self, worker: usize, superstep: u32, delay: Duration) -> FaultPlan {
+        self.events.insert((worker, superstep), FaultKind::Slow(delay));
+        self
+    }
+
+    /// Add a one-shot dropped `Data` message: the worker discards the
+    /// next data batch it receives after reaching the superstep.
+    pub fn drop_at(mut self, worker: usize, superstep: u32) -> FaultPlan {
+        self.events.insert((worker, superstep), FaultKind::DropData);
+        self
+    }
+
+    /// Seeded plan: pseudo-random panics (about one per
+    /// [`SEEDED_ONE_IN`] `(worker, superstep)` coordinates, at most
+    /// [`SEEDED_CAP`] total) drawn deterministically from `seed`.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan { seed: Some(seed), ..FaultPlan::default() }
+    }
+
+    /// True when the plan can never fire (no events, no seed).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.seed.is_none()
+    }
+
+    /// Total events fired over the plan's lifetime (cumulative across
+    /// the retry attempts sharing it — each attempt's own metrics die
+    /// with the attempt, so [`run_plan_with_recovery`] stamps this onto
+    /// the surviving output as `exec.faults_injected`).
+    pub fn fired_count(&self) -> u64 {
+        self.fired.lock().unwrap().set.len() as u64
+    }
+
+    /// Consult the plan for `(worker, superstep)` — called by the
+    /// worker loop at each path append. Each coordinate fires at most
+    /// once over the plan's lifetime.
+    pub(crate) fn check(&self, worker: usize, superstep: u32) -> Option<FaultKind> {
+        if self.is_empty() {
+            return None;
+        }
+        let key = (worker, superstep);
+        if let Some(&kind) = self.events.get(&key) {
+            let mut fired = self.fired.lock().unwrap();
+            if fired.set.insert(key) {
+                return Some(kind);
+            }
+            return None;
+        }
+        if let Some(seed) = self.seed {
+            // Pure function of (seed, worker, superstep): mix the
+            // coordinates into an independent stream and draw once.
+            let mut rng = Rng::new(
+                seed ^ (worker as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                    ^ (superstep as u64).rotate_left(32),
+            );
+            if rng.gen_range(SEEDED_ONE_IN) == 0 {
+                let mut fired = self.fired.lock().unwrap();
+                if fired.seeded < SEEDED_CAP && fired.set.insert(key) {
+                    fired.seeded += 1;
+                    return Some(FaultKind::Panic);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Retry policy for [`run_plan_with_recovery`]: how many times a
+/// retryable epoch failure is re-attempted (so a run makes at most
+/// `max_retries + 1` attempts).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (default 2).
+    pub max_retries: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_retries: 2 }
+    }
+}
+
+/// State of one physical operator instance at a checkpoint cut, taken
+/// while the instance is quiescent (no open output bag, nothing
+/// staged or buffered for send). What IS captured: input-bag buffers —
+/// including the bags backing §7 reused state (hash-join builds,
+/// reduceByKey partials rebuild from them on restore) — and §6.3.4
+/// retained conditional-output bags with their watcher send flags.
+/// What is NOT: transformation-internal state (rebuilt by re-feeding
+/// the buffered bags) and anything derivable from the path replica.
+#[derive(Clone, Debug)]
+pub struct InstanceSnapshot {
+    /// Logical node.
+    pub node: NodeId,
+    /// Physical instance index.
+    pub inst: usize,
+    /// Per logical input: buffered bags as `(bag_id, items, closes)`,
+    /// sorted by bag id for determinism.
+    pub bufs: Vec<Vec<(u32, Vec<Value>, usize)>>,
+    /// Retained conditional-output bags as
+    /// `(bag_id, items, [(out_edge_idx, sent)])`, sorted by bag id.
+    /// Watchers are rebuilt against the restored path on resume.
+    pub retained: Vec<(u32, Vec<Value>, Vec<(usize, bool)>)>,
+}
+
+/// A completed superstep-boundary checkpoint: everything a fresh epoch
+/// needs to resume as if the prefix had just executed.
+#[derive(Clone, Debug)]
+pub struct EpochCheckpoint {
+    /// The execution-path prefix (all blocks appended so far).
+    pub blocks: Vec<BlockId>,
+    /// The withheld decision chain `(blocks, final)` — broadcast on
+    /// resume instead of the entry chain. Never final: final chains are
+    /// not worth checkpointing (the epoch is about to end).
+    pub pending: (Vec<BlockId>, bool),
+    /// `collect` bags delivered to the driver so far, as
+    /// `(label, bag_id, items)` in completion order.
+    pub outputs: Vec<(String, u32, Vec<Value>)>,
+    /// Observed per-node output cardinalities at the cut (restored into
+    /// the resumed epoch's counters so adaptive feedback sees one
+    /// epoch's worth of rows, not a partial double-count).
+    pub node_rows: Vec<NodeRows>,
+    /// Every instance's snapshot (all workers).
+    pub insts: Vec<InstanceSnapshot>,
+}
+
+/// Execute a plan with bounded retry and (when
+/// [`ExecConfig::checkpoint_every`] is set) superstep-boundary
+/// checkpointing. Retryable failures — worker panics
+/// ([`Error::Exec`]) and coordination stalls ([`Error::Coordination`])
+/// — re-run the epoch, resuming from the latest checkpoint if one was
+/// taken; cancellation and deadline aborts are surfaced immediately,
+/// and the deadline keeps being enforced across attempts. On success
+/// the returned metrics carry `exec.epoch_retries` (attempts beyond
+/// the first), and resumed runs additionally report
+/// `exec.supersteps_recovered` / `exec.supersteps_replayed`.
+pub fn run_plan_with_recovery(
+    plan: Arc<ExecPlan>,
+    cfg: &ExecConfig,
+    pool: &WorkerPool,
+    policy: &RetryPolicy,
+) -> Result<RunOutput> {
+    let sink: Arc<Mutex<Option<Arc<EpochCheckpoint>>>> = Arc::new(Mutex::new(None));
+    let mut attempts: u32 = 0;
+    loop {
+        let resume = sink.lock().unwrap().clone();
+        match super::driver::run_plan_attempt(plan.clone(), cfg, pool, resume, Some(&sink)) {
+            Ok(out) => {
+                if attempts > 0 {
+                    out.metrics.add("exec.epoch_retries", attempts as u64);
+                }
+                // Fired events accumulate on the plan, not on any one
+                // attempt's metrics (failed attempts drop theirs).
+                if let Some(fp) = &cfg.faults {
+                    let fired = fp.fired_count();
+                    if fired > 0 {
+                        out.metrics.add("exec.faults_injected", fired);
+                    }
+                }
+                return Ok(out);
+            }
+            Err(e) => {
+                let retryable = matches!(e, Error::Exec(_) | Error::Coordination(_));
+                if !retryable || attempts >= policy.max_retries {
+                    return Err(e);
+                }
+                // The ORIGINAL deadline binds the whole recovery loop,
+                // not each attempt: no retry may start past it.
+                if cfg.deadline.map_or(false, |d| Instant::now() >= d) {
+                    return Err(Error::DeadlineExceeded);
+                }
+                attempts += 1;
+                if sink.lock().unwrap().is_none() {
+                    // From-scratch retry: drop any preamble bags the
+                    // failed attempt captured — the fresh attempt
+                    // recomputes and recaptures them, and stale entries
+                    // would collide in `serve::assemble_preamble`.
+                    // (Checkpointed retries KEEP the sink: restored
+                    // instances never recompute their preamble bags, so
+                    // the captured entries are the only copies.)
+                    if let Some(cap) = cfg.preamble.as_ref().and_then(|p| p.capture.as_ref()) {
+                        cap.lock().unwrap().clear();
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_events_fire_exactly_once() {
+        let fp = FaultPlan::new().panic_at(1, 3).slow_at(0, 2, Duration::from_millis(1));
+        assert_eq!(fp.check(0, 1), None);
+        assert_eq!(fp.check(1, 3), Some(FaultKind::Panic));
+        assert_eq!(fp.check(1, 3), None, "one-shot: a retry must get past the fault");
+        assert_eq!(fp.check(0, 2), Some(FaultKind::Slow(Duration::from_millis(1))));
+        assert_eq!(fp.check(0, 2), None);
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_capped() {
+        let a = FaultPlan::seeded(0x1AB);
+        let b = FaultPlan::seeded(0x1AB);
+        let mut fires_a = Vec::new();
+        for s in 1..10_000u32 {
+            if a.check(0, s).is_some() {
+                fires_a.push(s);
+            }
+        }
+        assert_eq!(fires_a.len() as u32, SEEDED_CAP, "cap bounds total seeded fires");
+        // Same seed, same coordinates, same draws.
+        for &s in &fires_a {
+            assert_eq!(b.check(0, s), Some(FaultKind::Panic));
+        }
+        // After the cap, nothing more fires even at would-fire coords.
+        let c = FaultPlan::seeded(0x1AB);
+        for s in 1..10_000u32 {
+            let _ = c.check(0, s);
+        }
+        assert!(c.check(0, 100_000).is_none());
+    }
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let fp = FaultPlan::new();
+        assert!(fp.is_empty());
+        for w in 0..4 {
+            for s in 1..100 {
+                assert_eq!(fp.check(w, s), None);
+            }
+        }
+    }
+
+    #[test]
+    fn retry_policy_default_allows_three_attempts() {
+        assert_eq!(RetryPolicy::default().max_retries, 2);
+    }
+}

@@ -140,6 +140,15 @@ pub struct WorkerShared {
     pub trace: Option<Arc<crate::obs::Tracer>>,
     /// Pre-allocated trace lane per worker index (empty when untraced).
     pub trace_lanes: Vec<u32>,
+    /// Checkpoint to resume from (`recovery::`): each worker seeds its
+    /// path replica with the checkpointed prefix and restores the
+    /// instances it hosts before entering the event loop. `None` for
+    /// fresh epochs.
+    pub resume: Option<Arc<super::recovery::EpochCheckpoint>>,
+    /// Deterministic fault-injection schedule for this epoch
+    /// ([`super::ExecConfig::faults`]); consulted per appended
+    /// superstep — `None` costs one branch per append.
+    pub faults: Option<Arc<super::recovery::FaultPlan>>,
 }
 
 /// Run one worker for one job **epoch**: process messages until
@@ -171,7 +180,28 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
         })
         .collect();
 
+    // Resumed epoch (`recovery::`): seed the path replica with the
+    // checkpointed prefix and restore hosted instances BEFORE any
+    // message arrives. Instances never re-run prefix bags (the replica
+    // append bypasses `on_append`, so nothing is queued), but restored
+    // buffers serve future bags and `maybe_done` still reports Done at
+    // path finalization.
+    if let Some(ck) = &shared.resume {
+        path.append(0, &ck.blocks, false);
+        for snap in &ck.insts {
+            if plan.worker_of(snap.node, snap.inst) == w {
+                if let Some(inst) = instances[snap.node].as_mut() {
+                    inst.restore(snap, &path, &plan);
+                }
+            }
+        }
+    }
+
     let mut cancel_reported = false;
+    // Set by a `FaultKind::DropData` event: the next Data message is
+    // silently discarded (its consumer starves and the driver's stall
+    // timeout converts that into a retryable coordination error).
+    let mut drop_next_data = false;
     while let Ok(msg) = rx.recv() {
         // Cooperative mid-run cancel: between messages (superstep/batch
         // boundaries) check the token; once set, report to the driver
@@ -193,7 +223,42 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
         }
         match msg {
             WorkerMsg::Shutdown => break,
+            WorkerMsg::Checkpoint => {
+                // The driver only asks once every bag of the current
+                // prefix is complete, so every hosted instance is
+                // quiescent and snapshot-able right now.
+                let insts: Vec<_> = instances
+                    .iter()
+                    .filter_map(|o| o.as_ref().map(|inst| inst.snapshot()))
+                    .collect();
+                let _ = shared.driver.send(DriverMsg::Snapshot { worker: w, insts });
+            }
             WorkerMsg::Append { start, blocks, final_ } => {
+                // Deterministic fault injection, keyed to the 1-based
+                // superstep positions this append introduces. Fires
+                // BEFORE the path replica grows, so a panicking worker
+                // dies with pre-superstep state — exactly the crash a
+                // checkpoint at the previous boundary covers.
+                // (Fires are counted on the plan itself — the recovery
+                // wrapper stamps `exec.faults_injected` on the run that
+                // survives, since a failed attempt's metrics die with it.)
+                if let Some(fp) = &shared.faults {
+                    for k in 0..blocks.len() {
+                        let pos = (start + k + 1) as u32;
+                        match fp.check(w, pos) {
+                            None => {}
+                            Some(super::recovery::FaultKind::Panic) => {
+                                panic!("injected fault: worker {w} panics at superstep {pos}");
+                            }
+                            Some(super::recovery::FaultKind::Slow(d)) => {
+                                std::thread::sleep(d);
+                            }
+                            Some(super::recovery::FaultKind::DropData) => {
+                                drop_next_data = true;
+                            }
+                        }
+                    }
+                }
                 path.append(start, &blocks, final_);
                 for node in 0..instances.len() {
                     if let Some(inst) = instances[node].as_mut() {
@@ -216,6 +281,11 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
                 }
             }
             WorkerMsg::Data { node, input, dst_inst, bag_len, items, close } => {
+                if drop_next_data {
+                    // Injected message loss (`FaultKind::DropData`).
+                    drop_next_data = false;
+                    continue;
+                }
                 debug_assert_eq!(plan.worker_of(node, dst_inst), w);
                 let inst = instances[node]
                     .as_mut()

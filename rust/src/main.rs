@@ -51,6 +51,9 @@ const VALUE_OPTS: &[&str] = &[
     // serve / bench-serve: job slots, request count, per-request scalar
     // parameters (repeatable `--param name=value`).
     "--slots", "--requests", "--param",
+    // recovery:: knobs — superstep-boundary checkpoint cadence and a
+    // seeded fault-injection plan (overrides LABY_FAULTS).
+    "--checkpoint-every", "--faults",
 ];
 const FLAG_OPTS: &[&str] = &[
     "--no-reuse", "--metrics", "--sched", "--dump-plan",
@@ -162,6 +165,7 @@ fn print_usage() {
          \x20            [--no-opt] [--no-hoist] [--no-fuse] [--no-dce]\n\
          \x20            [--no-pushdown] [--no-join-sides] [--speculate auto|always|never]\n\
          \x20            [--explain] [--io-dir DIR] [--config FILE] [--sched] [--metrics]\n\
+         \x20            [--checkpoint-every K] [--faults SEED]\n\
          \x20 labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]\n\
          \x20 labyrinth trace <program.laby> [--workers N] [--mode pipelined|barrier]\n\
          \x20            [--out trace.json] [--metrics]\n\
@@ -205,6 +209,35 @@ fn opt_config(opts: &Opts, cfg: &Config) -> Result<labyrinth::opt::OptConfig> {
     Ok(ocfg)
 }
 
+/// Recovery knobs shared by `run` and `trace`: `--checkpoint-every K`
+/// snapshots loop state every K supersteps (config key
+/// `exec.checkpoint_every`), `--faults SEED` arms a seeded
+/// fault-injection plan — absent both, the `LABY_FAULTS` env default
+/// applies.
+fn recovery_opts(
+    cfg: &Config,
+) -> Result<(Option<u32>, Option<std::sync::Arc<labyrinth::exec::FaultPlan>>)> {
+    let checkpoint_every =
+        match cfg.get("cli.checkpoint-every").or(cfg.get("exec.checkpoint_every")) {
+            Some(s) => Some(s.parse::<u32>().ok().filter(|&k| k > 0).ok_or_else(|| {
+                labyrinth::Error::Config(format!(
+                    "--checkpoint-every expects a positive integer, got {s:?}"
+                ))
+            })?),
+            None => None,
+        };
+    let faults = match cfg.get("cli.faults") {
+        Some(s) => {
+            let seed = s.parse::<u64>().map_err(|_| {
+                labyrinth::Error::Config(format!("--faults expects a u64 seed, got {s:?}"))
+            })?;
+            Some(std::sync::Arc::new(labyrinth::exec::FaultPlan::seeded(seed)))
+        }
+        None => labyrinth::exec::default_faults(),
+    };
+    Ok((checkpoint_every, faults))
+}
+
 fn read_program(opts: &Opts) -> Result<labyrinth::frontend::Program> {
     let path = opts
         .positional
@@ -235,6 +268,7 @@ fn cmd_run(opts: &Opts) -> Result<()> {
             if opts.has("--explain") {
                 print!("{}", explain.render());
             }
+            let (checkpoint_every, faults) = recovery_opts(&cfg)?;
             let run_cfg = ExecConfig {
                 workers,
                 mode,
@@ -242,6 +276,8 @@ fn cmd_run(opts: &Opts) -> Result<()> {
                 reuse_state: !opts.has("--no-reuse"),
                 io_dir,
                 sched: opts.has("--sched").then(labyrinth::sched::LatencyModel::flink_like),
+                checkpoint_every,
+                faults,
                 ..Default::default()
             };
             let out = labyrinth::exec::run(&graph, &run_cfg)?;
@@ -384,12 +420,15 @@ fn cmd_trace(opts: &Opts) -> Result<()> {
     }
 
     let tracer = std::sync::Arc::new(labyrinth::obs::Tracer::new(true));
+    let (checkpoint_every, faults) = recovery_opts(&cfg)?;
     let run_cfg = ExecConfig {
         workers,
         mode,
         batch: cfg.get_usize("cli.batch", cfg.get_usize("exec.batch", 256)?)?,
         io_dir,
         trace: Some(tracer.clone()),
+        checkpoint_every,
+        faults,
         ..Default::default()
     };
     let out = labyrinth::exec::run(&graph, &run_cfg)?;
@@ -449,6 +488,16 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         params.push((k.to_string(), value));
     }
 
+    let (checkpoint_every, fault_seed) = {
+        let (ck, _) = recovery_opts(&cfg)?;
+        let seed = match cfg.get("cli.faults") {
+            Some(s) => Some(s.parse::<u64>().map_err(|_| {
+                labyrinth::Error::Config(format!("--faults expects a u64 seed, got {s:?}"))
+            })?),
+            None => None,
+        };
+        (ck, seed)
+    };
     let svc = labyrinth::serve::JobService::new(labyrinth::serve::ServeConfig {
         slots,
         workers,
@@ -456,6 +505,7 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         opt: opt_config(opts, &cfg)?,
         adaptive: !opts.has("--no-adaptive"),
         share_preambles: !opts.has("--no-share-preambles"),
+        checkpoint_every,
         ..Default::default()
     });
     println!("serving {path} on {slots} slot(s) x {workers} worker(s), {requests} request(s)");
@@ -463,6 +513,9 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         let mut req = labyrinth::serve::JobRequest::source(src.clone());
         for (k, v) in &params {
             req = req.param(k.clone(), v.clone());
+        }
+        if let Some(seed) = fault_seed {
+            req = req.faults(labyrinth::exec::FaultPlan::seeded(seed));
         }
         let t0 = std::time::Instant::now();
         let res = svc.run(req)?;

@@ -72,6 +72,12 @@ pub fn span_label(kind: &SpanKind, graph: Option<&DataflowGraph>) -> (&'static s
             format!("{} generate", node_name(node)),
             vec![("node", node as u64), ("step", step as u64)],
         ),
+        SpanKind::Checkpoint { pos } => {
+            ("engine", format!("checkpoint @{pos}"), vec![("pos", pos as u64)])
+        }
+        SpanKind::Recover { pos } => {
+            ("engine", format!("recover @{pos}"), vec![("pos", pos as u64)])
+        }
         SpanKind::Queue { job } => ("serve", format!("queue job {job}"), vec![("job", job)]),
         SpanKind::Compile { job } => ("serve", format!("compile job {job}"), vec![("job", job)]),
         SpanKind::Bind { job } => ("serve", format!("bind job {job}"), vec![("job", job)]),

@@ -72,6 +72,15 @@ pub enum SpanKind {
     NodeClose { node: u32, step: u32 },
     /// Source generation (`Transformation::generate`).
     Generate { node: u32, step: u32 },
+    /// recovery: a superstep-boundary checkpoint cut (driver lane) —
+    /// decision chain withheld at path length `pos`, prefix drained to
+    /// quiescence, every worker snapshotted. Span covers withhold →
+    /// checkpoint stored.
+    Checkpoint { pos: u32 },
+    /// recovery: instant marker on a resumed epoch — the driver
+    /// re-seeded a checkpointed prefix of length `pos` instead of
+    /// re-running it.
+    Recover { pos: u32 },
     /// serve: admission-queue wait (submit → lane pickup).
     Queue { job: u64 },
     /// serve: plan-template resolution (compile on miss, ~0 on hit).

@@ -61,7 +61,7 @@ pub mod bench;
 pub mod template;
 
 use crate::error::{Error, Result};
-use crate::exec::{driver, ExecConfig, ExecMode, PreambleSharing, RunOutput, WorkerPool};
+use crate::exec::{ExecConfig, ExecMode, PreambleSharing, RunOutput, WorkerPool};
 use crate::frontend::{self, Program};
 use crate::metrics::Metrics;
 use crate::opt::OptConfig;
@@ -111,6 +111,16 @@ pub struct ServeConfig {
     /// (queue → compile → bind → epoch → reply) per job and is handed to
     /// each job's engine epoch. Defaults from `LABY_TRACE`.
     pub trace: Option<Arc<crate::obs::Tracer>>,
+    /// Superstep-boundary checkpoint cadence for job epochs (see
+    /// [`ExecConfig::checkpoint_every`]): `Some(k)` snapshots loop state
+    /// every k decision chains so a crashed epoch resumes instead of
+    /// rerunning. `None` (default) disables checkpointing.
+    pub checkpoint_every: Option<u32>,
+    /// Retry budget per job for retryable epoch failures (worker
+    /// panics, coordination stalls) — see [`crate::exec::RetryPolicy`].
+    /// The job's deadline is enforced across ALL attempts. Recovered
+    /// jobs count under `serve.epochs_recovered`, not `jobs_failed`.
+    pub max_retries: u32,
 }
 
 impl Default for ServeConfig {
@@ -131,6 +141,8 @@ impl Default for ServeConfig {
             share_preambles: true,
             element_path: crate::exec::default_element_path(),
             trace: crate::obs::default_tracer(),
+            checkpoint_every: None,
+            max_retries: 2,
         }
     }
 }
@@ -162,6 +174,10 @@ pub struct JobRequest {
     /// Deadline relative to submission: expired-in-queue jobs fail
     /// without running; running jobs are aborted by the driver.
     pub deadline: Option<Duration>,
+    /// Per-request deterministic fault-injection schedule (chaos
+    /// testing; see [`crate::exec::FaultPlan`]). `None` falls back to
+    /// the process-wide `LABY_FAULTS` plan when that is set.
+    pub faults: Option<Arc<crate::exec::FaultPlan>>,
 }
 
 impl JobRequest {
@@ -173,6 +189,7 @@ impl JobRequest {
             params: Vec::new(),
             opt: None,
             deadline: None,
+            faults: None,
         }
     }
 
@@ -184,6 +201,7 @@ impl JobRequest {
             params: Vec::new(),
             opt: None,
             deadline: None,
+            faults: None,
         }
     }
 
@@ -214,6 +232,14 @@ impl JobRequest {
     /// Set a deadline relative to submission.
     pub fn deadline(mut self, d: Duration) -> JobRequest {
         self.deadline = Some(d);
+        self
+    }
+
+    /// Attach a deterministic fault-injection schedule to this request
+    /// (chaos testing): the job's epoch(s) fire the plan's events and
+    /// recover via the service's retry policy.
+    pub fn faults(mut self, plan: crate::exec::FaultPlan) -> JobRequest {
+        self.faults = Some(Arc::new(plan));
         self
     }
 }
@@ -604,10 +630,23 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
         preamble,
         element_path: inner.cfg.element_path,
         trace: tracer.clone(),
+        checkpoint_every: inner.cfg.checkpoint_every,
+        faults: job.req.faults.clone().or_else(crate::exec::default_faults),
+        stall_timeout: crate::exec::DEFAULT_STALL_TIMEOUT,
     };
     let epochs_before = pool.epochs();
     let run_t0 = tracer.as_ref().map(|t| t.now_ns());
-    let result = driver::run_plan_on_pool(tpl.plan.clone(), &run_cfg, pool);
+    // Always route through the recovery layer: retryable epoch failures
+    // (injected or genuine worker panics, coordination stalls) burn the
+    // service's retry budget, resuming from the last superstep-boundary
+    // checkpoint when one was taken. The job's absolute deadline spans
+    // every attempt; cancel and deadline aborts are never retried.
+    let result = crate::exec::recovery::run_plan_with_recovery(
+        tpl.plan.clone(),
+        &run_cfg,
+        pool,
+        &crate::exec::RetryPolicy { max_retries: inner.cfg.max_retries },
+    );
     if let (Some(t), Some(l), Some(t0)) = (tracer.as_ref(), tlane, run_t0) {
         let now = t.now_ns();
         t.push(l, crate::obs::SpanKind::JobRun { job: jid }, t0, now.saturating_sub(t0));
@@ -627,6 +666,13 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
                 if let Some(bags) = template::assemble_preamble(&tpl.plan, entries) {
                     tpl.store_preamble(sig, Arc::new(bags));
                 }
+            }
+            // An epoch that crashed and recovered still completes — count
+            // the recovery separately so dashboards see fault pressure
+            // without inflating `jobs_failed`.
+            let retries = output.metrics.get("exec.epoch_retries");
+            if retries > 0 {
+                inner.metrics.add("serve.epochs_recovered", retries);
             }
             inner.metrics.add("serve.jobs_completed", 1);
             inner.metrics.record_time("serve.job_time", output.elapsed);

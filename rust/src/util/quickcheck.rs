@@ -228,6 +228,18 @@ pub fn batch_for_seed(seed: u64) -> usize {
     BATCH_SIZES[(seed % BATCH_SIZES.len() as u64) as usize]
 }
 
+/// Checkpoint cadences the chaos property suite sweeps
+/// (`ExecConfig::checkpoint_every`): every superstep, every third, and
+/// never (retry-from-scratch).
+pub const CHECKPOINT_CADENCES: &[Option<u32>] = &[Some(1), Some(3), None];
+
+/// Deterministic "random" checkpoint cadence for a property seed
+/// (decorrelated from [`batch_for_seed`] so the (batch, cadence) grid
+/// is covered across seeds, like the batch sweep itself).
+pub fn checkpoint_for_seed(seed: u64) -> Option<u32> {
+    CHECKPOINT_CADENCES[((seed / 7) % CHECKPOINT_CADENCES.len() as u64) as usize]
+}
+
 /// Outcome of a property run.
 #[derive(Debug)]
 pub enum PropResult<T> {

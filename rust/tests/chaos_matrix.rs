@@ -1,0 +1,232 @@
+//! Chaos matrix: a worker panic injected at EVERY superstep index, for
+//! loop programs across worker counts. Every faulted run must recover
+//! (bounded retry, resuming from the last superstep-boundary checkpoint
+//! when one exists) and complete **byte-identical** to the fault-free
+//! run and to the single-threaded oracle — and the recovery itself is
+//! verified through the engine's own accounting
+//! (`exec.supersteps_recovered` / `exec.supersteps_replayed` and the
+//! obs:: Checkpoint/Recover spans), not just the outputs.
+
+use labyrinth::baselines::single_thread;
+use labyrinth::exec::{run, ExecConfig, FaultPlan};
+use labyrinth::frontend::parse_and_lower;
+use labyrinth::obs::{SpanKind, Tracer};
+use labyrinth::value::Value;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn multiset(mut v: Vec<Value>) -> Vec<Value> {
+    v.sort();
+    v
+}
+
+/// The fig6-style counted loop (per-step collect) and a fig7-style loop
+/// with an invariant hash-join build side — the state shapes the
+/// checkpoint must cover (Φ chain on the driver, reused build state +
+/// retained conditional outputs on workers).
+fn programs() -> Vec<(&'static str, &'static str, Vec<&'static str>)> {
+    vec![
+        (
+            "counted-loop",
+            r#"
+            acc = bag();
+            i = 0;
+            while (i < 5) {
+                step = bag(1, 2, 3, 4).map(|v| v * 10 + i);
+                if (i % 2 == 0) { acc = acc.union(step); } else { acc = step; }
+                collect(step, "steps");
+                i = i + 1;
+            }
+            collect(acc, "acc");
+            "#,
+            vec!["steps", "acc"],
+        ),
+        (
+            "join-in-loop",
+            r#"
+            lookup = bag(0, 1, 2, 3, 4).map(|v| pair(v, v * 100));
+            acc = bag();
+            i = 0;
+            while (i < 4) {
+                kv = bag(3, 1, 4, 1, 5, 9).map(|v| pair((v + i) % 5, v));
+                j = kv.join(lookup).map(|p| fst(snd(p)) + snd(snd(p)));
+                acc = acc.union(j);
+                i = i + 1;
+            }
+            collect(acc, "acc");
+            "#,
+            vec!["acc"],
+        ),
+    ]
+}
+
+#[test]
+fn panic_at_every_superstep_recovers_identically() {
+    for (name, src, labels) in programs() {
+        let program = parse_and_lower(src).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let oracle = single_thread::run(&program, &Default::default())
+            .unwrap_or_else(|e| panic!("{name} oracle: {e}"));
+        let graph = labyrinth::compile(&program).unwrap_or_else(|e| panic!("{name}: {e}"));
+
+        for workers in [1usize, 2, 4] {
+            // Fault-free reference (explicitly unfaulted so the matrix is
+            // deterministic even under a LABY_FAULTS chaos-smoke leg).
+            let clean = run(
+                &graph,
+                &ExecConfig { workers, faults: None, ..Default::default() },
+            )
+            .unwrap_or_else(|e| panic!("{name} w={workers} clean: {e}"));
+            let path_len = clean.path_len as u32;
+            assert!(path_len > 1, "{name}: loop program must take multiple supersteps");
+
+            let mut recoveries = 0u32;
+            for k in 1..=path_len {
+                let victim = (k as usize) % workers;
+                let tracer = Arc::new(Tracer::new(true));
+                let cfg = ExecConfig {
+                    workers,
+                    checkpoint_every: Some(1),
+                    faults: Some(Arc::new(FaultPlan::new().panic_at(victim, k))),
+                    trace: Some(tracer.clone()),
+                    // Keep a wedged retry from hanging the suite.
+                    stall_timeout: Duration::from_secs(30),
+                    ..Default::default()
+                };
+                let out = run(&graph, &cfg)
+                    .unwrap_or_else(|e| panic!("{name} w={workers} panic@{k}: {e}"));
+
+                // Byte-identical results vs the fault-free run AND the
+                // single-thread spec.
+                for label in &labels {
+                    let got = multiset(out.collected(label).to_vec());
+                    assert_eq!(
+                        got,
+                        multiset(clean.collected(label).to_vec()),
+                        "{name} w={workers} panic@{k} label {label}: diverged from fault-free"
+                    );
+                    assert_eq!(
+                        got,
+                        multiset(oracle.collected(label).to_vec()),
+                        "{name} w={workers} panic@{k} label {label}: diverged from oracle"
+                    );
+                }
+                assert_eq!(out.path_len as u32, path_len, "{name} w={workers} panic@{k}");
+
+                // The injected fault really fired and was really retried.
+                assert_eq!(
+                    out.metrics.get("exec.faults_injected"),
+                    1,
+                    "{name} w={workers} panic@{k}: fault did not fire"
+                );
+                assert_eq!(
+                    out.metrics.get("exec.epoch_retries"),
+                    1,
+                    "{name} w={workers} panic@{k}: expected exactly one retry"
+                );
+
+                // Recovery accounting: a resumed attempt skipped the
+                // checkpointed prefix and executed only the rest.
+                let recovered = out.metrics.get("exec.supersteps_recovered");
+                let replayed = out.metrics.get("exec.supersteps_replayed");
+                if recovered > 0 {
+                    recoveries += 1;
+                    assert_eq!(
+                        recovered + replayed,
+                        path_len as u64,
+                        "{name} w={workers} panic@{k}: prefix + replay must cover the path"
+                    );
+                    // (`exec.checkpoints_taken` is per-attempt and the
+                    // surviving attempt may take none — the resume itself,
+                    // plus the Checkpoint span from the faulted attempt
+                    // below, prove a checkpoint was cut.)
+                    // The resumed attempt announces itself in the trace.
+                    let trace = tracer.take();
+                    assert!(
+                        trace
+                            .events
+                            .iter()
+                            .any(|e| matches!(e.kind, SpanKind::Recover { pos } if pos as u64 == recovered)),
+                        "{name} w={workers} panic@{k}: no Recover span at pos {recovered}"
+                    );
+                    assert!(
+                        trace.events.iter().any(|e| matches!(e.kind, SpanKind::Checkpoint { .. })),
+                        "{name} w={workers} panic@{k}: no Checkpoint span"
+                    );
+                }
+            }
+            // With checkpoint_every=1 every decision boundary is cut, so
+            // any panic past the first cut resumes from a checkpoint —
+            // the matrix must exercise genuine resume, not only
+            // retry-from-scratch.
+            assert!(
+                recoveries > 0,
+                "{name} w={workers}: no superstep index led to a checkpoint resume"
+            );
+        }
+    }
+}
+
+#[test]
+fn dropped_message_stalls_then_recovers() {
+    // A DropData fault starves a consumer; the driver's stall timeout
+    // converts the hang into a retryable coordination error and the
+    // retry completes with correct output.
+    let src = r#"
+        acc = bag();
+        i = 0;
+        while (i < 3) {
+            acc = acc.union(bag(1, 2, 3).map(|v| v + i));
+            i = i + 1;
+        }
+        collect(acc, "acc");
+    "#;
+    let program = parse_and_lower(src).unwrap();
+    let oracle = single_thread::run(&program, &Default::default()).unwrap();
+    let graph = labyrinth::compile(&program).unwrap();
+    let cfg = ExecConfig {
+        workers: 2,
+        checkpoint_every: Some(1),
+        faults: Some(Arc::new(FaultPlan::new().drop_at(0, 2))),
+        stall_timeout: Duration::from_millis(400),
+        ..Default::default()
+    };
+    let out = run(&graph, &cfg).unwrap();
+    assert_eq!(
+        multiset(out.collected("acc").to_vec()),
+        multiset(oracle.collected("acc").to_vec())
+    );
+    assert_eq!(out.metrics.get("exec.faults_injected"), 1);
+    assert!(out.metrics.get("exec.epoch_retries") >= 1);
+}
+
+#[test]
+fn slow_worker_is_not_an_error() {
+    // A straggler delays but never fails the epoch: no retry, same
+    // output.
+    let src = r#"
+        acc = bag();
+        i = 0;
+        while (i < 3) {
+            acc = acc.union(bag(7, 8).map(|v| v * (i + 1)));
+            i = i + 1;
+        }
+        collect(acc, "acc");
+    "#;
+    let program = parse_and_lower(src).unwrap();
+    let oracle = single_thread::run(&program, &Default::default()).unwrap();
+    let graph = labyrinth::compile(&program).unwrap();
+    let cfg = ExecConfig {
+        workers: 2,
+        faults: Some(Arc::new(
+            FaultPlan::new().slow_at(1, 2, Duration::from_millis(50)),
+        )),
+        ..Default::default()
+    };
+    let out = run(&graph, &cfg).unwrap();
+    assert_eq!(
+        multiset(out.collected("acc").to_vec()),
+        multiset(oracle.collected("acc").to_vec())
+    );
+    assert_eq!(out.metrics.get("exec.faults_injected"), 1);
+    assert_eq!(out.metrics.get("exec.epoch_retries"), 0);
+}

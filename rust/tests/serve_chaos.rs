@@ -1,0 +1,304 @@
+//! Serve-tier chaos: deterministic fault plans injected through
+//! `JobRequest::faults` against a live `JobService`. Faulted jobs must
+//! recover (counted under `serve.epochs_recovered`, never
+//! `serve.jobs_failed`), the resident pools must survive a concurrent
+//! fault storm mixed with cancellations, cross-job preamble sharing
+//! must keep hitting after a faulted run, recovered epochs must not
+//! leak one tenant's state into another's, and the job deadline must
+//! bound ALL retry attempts together.
+
+use labyrinth::exec::{ExecConfig, FaultPlan};
+use labyrinth::serve::{JobRequest, JobService, ServeConfig};
+use labyrinth::value::Value;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Loop program: several supersteps, so a panic at superstep 2 lands
+/// mid-epoch and (with `checkpoint_every: 1`) resumes from a cut.
+const LOOP_SRC: &str = "v = source(\"chaos_data\"); d = 1; s = bag(); while (d <= 3) { s = v.map(|x| x + d); d = d + 1; } collect(s, \"out\");";
+
+fn dataset(seed: i64, len: i64) -> Vec<Value> {
+    (0..len).map(|i| Value::I64(seed + i)).collect()
+}
+
+/// One-shot oracle on an isolated registry (never the global one).
+fn one_shot(src: &str, binds: &[(&str, Vec<Value>)], workers: usize) -> Vec<Value> {
+    let reg = Arc::new(labyrinth::workload::registry::Registry::new());
+    for (name, data) in binds {
+        reg.put(name, data.clone());
+    }
+    let program = labyrinth::frontend::parse_and_lower(src).unwrap();
+    let (graph, _) = labyrinth::compile_with_registry(
+        &program,
+        &labyrinth::opt::OptConfig::default(),
+        &reg,
+    )
+    .unwrap();
+    let out = labyrinth::exec::run(
+        &graph,
+        &ExecConfig { workers, registry: reg, ..Default::default() },
+    )
+    .unwrap();
+    let mut got = out.collected("out").to_vec();
+    got.sort();
+    got
+}
+
+#[test]
+fn faulted_job_recovers_and_is_not_counted_failed() {
+    // Regression for the recovery/accounting split: a job whose epoch
+    // panics mid-run completes via retry, lands in `jobs_completed` +
+    // `epochs_recovered`, and `jobs_failed` stays untouched.
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        checkpoint_every: Some(1),
+        adaptive: false,
+        ..Default::default()
+    });
+    let want = one_shot(LOOP_SRC, &[("chaos_data", dataset(5, 12))], 2);
+    let res = svc
+        .run(
+            JobRequest::source(LOOP_SRC)
+                .bind("chaos_data", dataset(5, 12))
+                .faults(FaultPlan::new().panic_at(0, 2)),
+        )
+        .expect("faulted job must recover, not fail");
+    let mut got = res.output.collected("out").to_vec();
+    got.sort();
+    assert_eq!(got, want);
+    // The fault really fired and was retried inside the service.
+    assert_eq!(res.output.metrics.get("exec.faults_injected"), 1);
+    assert_eq!(res.output.metrics.get("exec.epoch_retries"), 1);
+    let m = svc.metrics();
+    assert_eq!(m.get("serve.jobs_completed"), 1);
+    assert_eq!(m.get("serve.jobs_failed"), 0, "recovered epoch counted as a failure");
+    assert_eq!(m.get("serve.epochs_recovered"), 1);
+}
+
+#[test]
+fn fault_storm_over_concurrent_burst_keeps_pool_live() {
+    // Mixed burst: faulted jobs (explicit panic plans, distinct victims
+    // and supersteps), clean jobs, and one canceled long-runner — all
+    // racing over two lanes. Everything not canceled completes with
+    // exact output, and the lanes serve a fresh job afterwards.
+    const FAULTED: usize = 4;
+    const CLEAN: usize = 4;
+    let svc = Arc::new(JobService::new(ServeConfig {
+        slots: 2,
+        workers: 2,
+        checkpoint_every: Some(1),
+        adaptive: false,
+        ..Default::default()
+    }));
+    let expected: Vec<Vec<Value>> = (0..FAULTED + CLEAN)
+        .map(|i| one_shot(LOOP_SRC, &[("chaos_data", dataset(i as i64 * 10, 12))], 2))
+        .collect();
+
+    // Cancellation victim: long enough that the cancel always lands
+    // before completion, queued or running.
+    let canceled = svc
+        .submit(JobRequest::source(
+            "d = 1; while (d <= 20000000) { d = d + 1; } collect(bag(1), \"x\");",
+        ))
+        .unwrap();
+
+    std::thread::scope(|s| {
+        for i in 0..FAULTED + CLEAN {
+            let svc = svc.clone();
+            let expected = &expected;
+            s.spawn(move || {
+                let mut req = JobRequest::source(LOOP_SRC)
+                    .bind("chaos_data", dataset(i as i64 * 10, 12));
+                if i < FAULTED {
+                    // Vary victim and superstep across the storm.
+                    req = req.faults(
+                        FaultPlan::new().panic_at(i % 2, 1 + (i % 3) as u32),
+                    );
+                }
+                let res = svc.run(req).unwrap_or_else(|e| panic!("job {i}: {e}"));
+                let mut got = res.output.collected("out").to_vec();
+                got.sort();
+                assert_eq!(got, expected[i], "job {i} diverged");
+            });
+        }
+        canceled.cancel();
+    });
+    let err = canceled.wait().unwrap_err();
+    assert!(err.to_string().contains("canceled"), "{err}");
+
+    let m = svc.metrics();
+    assert_eq!(m.get("serve.jobs_completed"), (FAULTED + CLEAN) as u64);
+    assert_eq!(m.get("serve.jobs_canceled"), 1);
+    assert_eq!(m.get("serve.jobs_failed"), 0, "a recovered or canceled job leaked into jobs_failed");
+    // Every faulted job recovered at least once (clean jobs may add more
+    // under a process-wide LABY_FAULTS chaos leg).
+    assert!(
+        m.get("serve.epochs_recovered") >= FAULTED as u64,
+        "expected >= {FAULTED} recoveries, got {}",
+        m.get("serve.epochs_recovered")
+    );
+    // The storm left both lanes (and their resident pools) serviceable.
+    let ok = svc.run(JobRequest::source("collect(bag(9), \"alive\");")).unwrap();
+    assert_eq!(ok.output.collected("alive"), &[Value::I64(9)]);
+}
+
+/// Loop with an invariant (hoistable, binding-determined) lookup chain —
+/// the cross-job preamble-sharing shape from `serve_service.rs`.
+const PREAMBLE_SRC: &str = r#"
+    d = 1;
+    while (d <= 3) {
+        attrs = source("pre_attrs").map(|x| pair(x % 8, x));
+        v = source("pre_probe").map(|x| pair(x % 8, d));
+        j = v.join(attrs);
+        t = j.map(|p| snd(snd(p)));
+        collect(t, "out");
+        d = d + 1;
+    }
+"#;
+
+#[test]
+fn preamble_sharing_still_hits_after_faulted_runs() {
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        checkpoint_every: Some(1),
+        adaptive: false,
+        ..Default::default()
+    });
+    let attrs: Vec<Value> = (0..8).map(Value::I64).collect();
+    let probe: Vec<Value> = (0..16).map(Value::I64).collect();
+    let want = one_shot(
+        PREAMBLE_SRC,
+        &[("pre_attrs", attrs.clone()), ("pre_probe", probe.clone())],
+        2,
+    );
+    let run_with = |faults: Option<FaultPlan>| -> Vec<Value> {
+        let mut req = JobRequest::source(PREAMBLE_SRC)
+            .bind("pre_attrs", attrs.clone())
+            .bind("pre_probe", probe.clone());
+        if let Some(plan) = faults {
+            req = req.faults(plan);
+        }
+        let res = svc.run(req).unwrap();
+        let mut got = res.output.collected("out").to_vec();
+        got.sort();
+        got
+    };
+
+    // Miss materializes the preamble bags.
+    assert_eq!(run_with(None), want);
+    assert_eq!(svc.metrics().get("serve.preamble_hits"), 0);
+    // A faulted identical submission replays them, crashes mid-epoch,
+    // recovers — and must still produce the exact result.
+    assert_eq!(run_with(Some(FaultPlan::new().panic_at(1, 2))), want);
+    assert_eq!(
+        svc.metrics().get("serve.preamble_hits"),
+        1,
+        "faulted run must still resolve through the shared preamble"
+    );
+    assert!(svc.metrics().get("serve.epochs_recovered") >= 1);
+    // The store survived the crashed epoch: later identical submissions
+    // keep replaying.
+    assert_eq!(run_with(None), want);
+    assert_eq!(svc.metrics().get("serve.preamble_hits"), 2);
+}
+
+#[test]
+fn recovered_epochs_do_not_bleed_state_across_tenants() {
+    // §7 reuse keeps a loop-invariant hash-join build side across steps
+    // WITHIN a job. Tenant A's epoch crashes and recovers (restoring
+    // instance state from A's checkpoint); tenant B then submits the
+    // same cached template with different build data. Any checkpoint
+    // residue surviving into B's epoch would join against A's table.
+    let src = r#"
+        attrs = source("tenant_attrs");
+        d = 1;
+        while (d <= 3) {
+            v = source("tenant_probe").map(|x| pair(x, d));
+            j = attrs.join(v);
+            t = j.map(|p| fst(snd(p)));
+            collect(t, "out");
+            d = d + 1;
+        }
+    "#;
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        reuse_state: true,
+        checkpoint_every: Some(1),
+        adaptive: false,
+        ..Default::default()
+    });
+    let attrs_a: Vec<Value> = (0..8).map(|k| Value::pair(Value::I64(k), Value::I64(k))).collect();
+    let attrs_b: Vec<Value> =
+        (0..8).map(|k| Value::pair(Value::I64(k), Value::I64(k + 1000))).collect();
+    let probe: Vec<Value> = (0..8).map(Value::I64).collect();
+    let run_with = |attrs: &[Value], faults: Option<FaultPlan>| -> i64 {
+        let mut req = JobRequest::source(src)
+            .bind("tenant_attrs", attrs.to_vec())
+            .bind("tenant_probe", probe.clone());
+        if let Some(plan) = faults {
+            req = req.faults(plan);
+        }
+        let res = svc.run(req).unwrap();
+        res.output.collected("out").iter().map(|v| v.as_i64()).sum()
+    };
+    // Tenant A crashes at superstep 2 and recovers from A's checkpoint.
+    let sum_a = run_with(&attrs_a, Some(FaultPlan::new().panic_at(0, 2)));
+    assert_eq!(sum_a, 3 * (0..8).sum::<i64>(), "tenant A's recovered run is wrong");
+    assert!(svc.metrics().get("serve.epochs_recovered") >= 1);
+    // Tenant B (clean) must see ONLY B's build side.
+    let sum_b = run_with(&attrs_b, None);
+    assert_eq!(
+        sum_b,
+        3 * (1000..1008).sum::<i64>(),
+        "tenant B saw tenant A's checkpointed build table"
+    );
+    // And a faulted B run restores B's checkpoint, not A's.
+    let sum_b2 = run_with(&attrs_b, Some(FaultPlan::new().panic_at(1, 3)));
+    assert_eq!(sum_b2, 3 * (1000..1008).sum::<i64>(), "recovered tenant B joined A's table");
+}
+
+#[test]
+fn deadline_spans_all_retry_attempts() {
+    // The straggler burns most of the budget, then the panic makes the
+    // attempt retryable — but the ORIGINAL deadline has passed, so the
+    // service must answer DeadlineExceeded instead of quietly rerunning
+    // the epoch on a fresh clock. (Depending on scheduling the driver's
+    // own deadline poll may win the race first; both paths must converge
+    // on the same error.)
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        checkpoint_every: Some(1),
+        adaptive: false,
+        ..Default::default()
+    });
+    let t0 = std::time::Instant::now();
+    let err = svc
+        .run(
+            JobRequest::source(LOOP_SRC)
+                .bind("chaos_data", dataset(0, 8))
+                .faults(
+                    FaultPlan::new()
+                        .slow_at(0, 1, Duration::from_millis(400))
+                        .panic_at(0, 2),
+                )
+                .deadline(Duration::from_millis(150)),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("deadline"), "{err}");
+    // No fresh-clock retry marathon: well under a second even with the
+    // injected 400ms straggle.
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "deadline did not bound the retry sequence ({:?})",
+        t0.elapsed()
+    );
+    assert_eq!(svc.metrics().get("serve.epochs_recovered"), 0);
+    assert_eq!(svc.metrics().get("serve.jobs_completed"), 0);
+    // The lane survives and serves the next job.
+    let ok = svc.run(JobRequest::source("collect(bag(7), \"after\");")).unwrap();
+    assert_eq!(ok.output.collected("after"), &[Value::I64(7)]);
+}

@@ -163,8 +163,14 @@ fn pool_threads_are_reused_across_jobs() {
     }
     // Every job ran as ONE epoch per resident worker — no thread churn
     // (thread-identity stability is asserted in exec::pool's unit tests;
-    // the epoch count proves the service reuses one pool).
-    assert_eq!(svc.metrics().get("serve.pool_epochs"), (JOBS * 3) as u64);
+    // the epoch count proves the service reuses one pool). Under a
+    // LABY_FAULTS chaos leg injected panics add retry epochs on the SAME
+    // pool, so the count becomes a floor instead of an exact match.
+    if labyrinth::exec::default_faults().is_some() {
+        assert!(svc.metrics().get("serve.pool_epochs") >= (JOBS * 3) as u64);
+    } else {
+        assert_eq!(svc.metrics().get("serve.pool_epochs"), (JOBS * 3) as u64);
+    }
 }
 
 #[test]
