@@ -98,6 +98,62 @@ impl Bag {
     }
 }
 
+/// A delta against a bag: elements added, plus — where the operator
+/// algebra supports them (keyed upserts, where a changed key's new rows
+/// supersede its old ones) — elements retracted.
+///
+/// This is the materialized form of what the delta-incremental
+/// iteration engine circulates per superstep: on the wire only the
+/// additions travel (a changed key *implies* retraction of its previous
+/// rows at the consumer's indexed store, see `ops::state`), but tests
+/// and baselines use the explicit form to state and check the algebra.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Delta {
+    /// Elements added (with multiplicity).
+    pub adds: Vec<Value>,
+    /// Elements retracted (with multiplicity); must be present in the
+    /// bag the delta is applied to.
+    pub retracts: Vec<Value>,
+}
+
+impl Delta {
+    /// A pure-additions delta (the frontier/semi-naive case).
+    pub fn additions(adds: Vec<Value>) -> Delta {
+        Delta { adds, retracts: Vec::new() }
+    }
+
+    /// True when applying the delta would not change any bag.
+    pub fn is_empty(&self) -> bool {
+        self.adds.is_empty() && self.retracts.is_empty()
+    }
+
+    /// Number of changed rows the delta carries.
+    pub fn len(&self) -> usize {
+        self.adds.len() + self.retracts.len()
+    }
+
+    /// Apply to a materialized bag: remove one occurrence per
+    /// retraction, then append the additions. Multiset semantics —
+    /// internal order is unspecified.
+    pub fn apply_to(&self, bag: &mut Bag) {
+        if !self.retracts.is_empty() {
+            let mut dec: FxHashMap<&Value, usize> = FxHashMap::default();
+            for r in &self.retracts {
+                *dec.entry(r).or_insert(0) += 1;
+            }
+            let mut kept = Vec::with_capacity(bag.items.len());
+            for v in bag.items.drain(..) {
+                match dec.get_mut(&v) {
+                    Some(c) if *c > 0 => *c -= 1,
+                    _ => kept.push(v),
+                }
+            }
+            bag.items = kept;
+        }
+        bag.items.extend(self.adds.iter().cloned());
+    }
+}
+
 impl FromIterator<Value> for Bag {
     fn from_iter<T: IntoIterator<Item = Value>>(iter: T) -> Self {
         Bag { items: iter.into_iter().collect() }
@@ -148,6 +204,22 @@ mod tests {
         assert!(Bag::from_vec(vec![Value::I64(1), Value::I64(2)])
             .expect_singleton()
             .is_err());
+    }
+
+    #[test]
+    fn delta_applies_retractions_then_additions() {
+        let mut b = Bag::from_vec(vec![Value::I64(1), Value::I64(1), Value::I64(2)]);
+        let d = Delta { adds: vec![Value::I64(3)], retracts: vec![Value::I64(1)] };
+        d.apply_to(&mut b);
+        // One occurrence of 1 retracted, the other kept; 3 added.
+        assert!(b.multiset_eq(&Bag::from_vec(vec![
+            Value::I64(1),
+            Value::I64(2),
+            Value::I64(3)
+        ])));
+        assert!(!d.is_empty());
+        assert_eq!(d.len(), 2);
+        assert!(Delta::additions(Vec::new()).is_empty());
     }
 
     #[test]

@@ -112,9 +112,10 @@ pub fn run_graph(g: &DataflowGraph, cfg: &SeparateJobsConfig) -> Result<Baseline
         // interpreter's scalar blocks. Sinks always count (collecting to
         // the driver is a job in the modeled systems even when the data
         // is a lifted scalar).
-        let bag_ops = by_block[block]
+        let job_ops: Vec<NodeId> = by_block[block]
             .iter()
-            .filter(|&&nid| {
+            .copied()
+            .filter(|&nid| {
                 let n = &g.nodes[nid];
                 match n.op {
                     Rhs::Phi(_) => false,
@@ -122,10 +123,20 @@ pub fn run_graph(g: &DataflowGraph, cfg: &SeparateJobsConfig) -> Result<Baseline
                     _ => !n.singleton,
                 }
             })
-            .count();
+            .collect();
+        let bag_ops = job_ops.len();
         if bag_ops > 0 {
             out.jobs_launched += 1;
             out.sched_time += cfg.model.simulate_job_launch(bag_ops, w);
+            // Per-operator task accounting (real Spark stages dispatch
+            // `slots × tasks_per_slot` tasks per operator, every job):
+            // this is where hoisting/DCE/fusion wins become visible as
+            // fewer tasks, operator by operator.
+            let tasks_per_op = (w * cfg.model.tasks_per_slot.max(1)) as u64;
+            for &nid in &job_ops {
+                *out.tasks_by_op.entry(op_kind(&g.nodes[nid].op)).or_insert(0) +=
+                    tasks_per_op;
+            }
         }
         for &nid in &by_block[block] {
             let v = eval_node(g, nid, &vals, &def_time, cfg, &registry, &mut out, w)?;
@@ -164,6 +175,34 @@ pub fn run_graph(g: &DataflowGraph, cfg: &SeparateJobsConfig) -> Result<Baseline
     }
     out.elapsed = start.elapsed();
     Ok(out)
+}
+
+/// Operator-kind label for task accounting (stable across UDF names and
+/// literal sizes, unlike [`Rhs::mnemonic`]).
+fn op_kind(op: &Rhs) -> &'static str {
+    match op {
+        Rhs::BagLit(_) => "bagLit",
+        Rhs::NamedSource(_) => "source",
+        Rhs::ReadFile { .. } => "readFile",
+        Rhs::WriteFile { .. } => "writeFile",
+        Rhs::Collect { .. } => "collect",
+        Rhs::Map { .. } => "map",
+        Rhs::Filter { .. } => "filter",
+        Rhs::FlatMap { .. } => "flatMap",
+        Rhs::Fused { .. } => "fused",
+        Rhs::Join { .. } => "join",
+        Rhs::ReduceByKey { .. } => "reduceByKey",
+        Rhs::Distinct { .. } => "distinct",
+        Rhs::Reduce { .. } => "reduce",
+        Rhs::Count { .. } => "count",
+        Rhs::Union { .. } => "union",
+        Rhs::Cross { .. } => "cross",
+        Rhs::XlaCall { .. } => "xlaCall",
+        Rhs::Phi(_) => "phi",
+        Rhs::Const(_) | Rhs::Copy(_) | Rhs::ScalarUn { .. } | Rhs::ScalarBin { .. } => {
+            "scalar"
+        }
+    }
 }
 
 /// The single element of a singleton dataset.
@@ -471,6 +510,42 @@ mod tests {
             "optimized per-step jobs must not be more expensive: {:?} vs {:?}",
             opt.sched_time,
             raw.sched_time
+        );
+    }
+
+    #[test]
+    fn per_operator_task_accounting_reflects_the_executed_plan() {
+        // 4 iterations, one bagLit + map + reduceByKey + collect per
+        // step with hoisting OFF: every operator dispatches
+        // workers × tasks_per_slot tasks per job it appears in. The map
+        // reads `d`, so only the literal is loop-invariant.
+        let src = r#"
+            d = 1;
+            while (d <= 4) {
+                v = bag(1, 2, 3, 4).map(|x| pair(x % 2, x + d));
+                r = v.reduceByKey(|a, b| a + b);
+                collect(r, "r");
+                d = d + 1;
+            }
+            "#;
+        let program = parse_and_lower(src).unwrap();
+        let cfg = quick_cfg(PersistStyle::SparkCache);
+        let per_op = (cfg.workers * cfg.model.tasks_per_slot) as u64;
+        let raw = run_optimized(&program, &cfg, &OptConfig::none()).unwrap();
+        assert_eq!(raw.tasks_by_op["reduceByKey"], 4 * per_op, "{:?}", raw.tasks_by_op);
+        assert_eq!(raw.tasks_by_op["map"], 4 * per_op, "{:?}", raw.tasks_by_op);
+        assert!(raw.tasks_launched() >= 16 * per_op, "{:?}", raw.tasks_by_op);
+        // With the optimizer on, the invariant bagLit+map chain hoists
+        // into the preamble: those operators' task counts drop from
+        // once-per-step to once-per-loop-entry while the per-step
+        // reduceByKey stays — visible operator by operator.
+        let opt = run_optimized(&program, &cfg, &OptConfig::default()).unwrap();
+        assert_eq!(opt.tasks_by_op["reduceByKey"], 4 * per_op, "{:?}", opt.tasks_by_op);
+        assert!(
+            opt.tasks_launched() < raw.tasks_launched(),
+            "optimized plan should dispatch fewer tasks: {:?} vs {:?}",
+            opt.tasks_by_op,
+            raw.tasks_by_op
         );
     }
 

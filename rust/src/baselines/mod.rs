@@ -29,11 +29,21 @@ pub struct BaselineRun {
     pub sched_time: Duration,
     /// Number of dataflow jobs launched (separate-jobs only).
     pub jobs_launched: usize,
+    /// Tasks dispatched per operator mnemonic across all jobs
+    /// (`graph_jobs` only — Spark-stage-style accounting: every bag
+    /// operator in a job fans out `workers × tasks_per_slot` tasks).
+    pub tasks_by_op: FxHashMap<&'static str, u64>,
 }
 
 impl BaselineRun {
     /// Collected bag for a label.
     pub fn collected(&self, label: &str) -> &[Value] {
         self.collected.get(label).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Total tasks dispatched across all operators (0 for executors
+    /// that do not account tasks).
+    pub fn tasks_launched(&self) -> u64 {
+        self.tasks_by_op.values().sum()
     }
 }

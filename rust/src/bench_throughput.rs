@@ -8,6 +8,12 @@
 //! UDFs), so the numbers measure the data plane — per-element dispatch,
 //! cloning, routing — rather than LabyLang expression interpretation.
 //!
+//! An `iter_cost` section charts per-iteration marginal cost for
+//! loop-carried workloads under `opt::delta` vs full recompute:
+//! incremental visit-count (delta-eligible; steady-state cost tracks the
+//! day's changed rows) and dense PageRank (structurally ineligible; the
+//! pass falls back and both curves coincide, `delta_loops == 0`).
+//!
 //! Results print as a paper-style table and are recorded in
 //! `BENCH_throughput.json` (the perf trajectory's seed file). Run via
 //! `labyrinth bench-throughput [--smoke]` or
@@ -136,6 +142,151 @@ fn measure(
     }
 }
 
+/// One workload's per-iteration cost curve, delta vs full recompute
+/// (the `opt::delta` acceptance series).
+struct IterCost {
+    workload: &'static str,
+    /// `ExplainReport::delta_loops` under `DeltaGate::Always` — 0 means
+    /// the safety analysis (correctly) fell back to full recompute and
+    /// the two curves should coincide.
+    delta_loops: usize,
+    /// Iteration counts measured (total wall time per count; the
+    /// marginal series below differences consecutive windows).
+    iters: Vec<i64>,
+    /// Marginal nanoseconds per iteration in window `k`
+    /// (`(t[k+1]-t[k]) / (iters[k+1]-iters[k])`), full recompute.
+    marginal_full_ns: Vec<u128>,
+    /// Same, with the delta pass enabled.
+    marginal_delta_ns: Vec<u128>,
+    /// Last-window full/delta marginal ratio — steady-state speedup.
+    steady_speedup: f64,
+}
+
+/// Difference consecutive total-time measurements into per-iteration
+/// marginal costs.
+fn marginals(iters: &[i64], totals: &[u128]) -> Vec<u128> {
+    iters
+        .windows(2)
+        .zip(totals.windows(2))
+        .map(|(iw, tw)| tw[1].saturating_sub(tw[0]) / (iw[1] - iw[0]).max(1) as u128)
+        .collect()
+}
+
+/// Per-iteration cost curves: incremental visit-count (delta-eligible —
+/// steady-state iteration cost tracks the day's changed rows, not the
+/// accumulated history) and dense power-iteration PageRank (structurally
+/// delta-INeligible — the carried ranks feed a join probe, so the pass
+/// proves nothing and honestly falls back; both curves coincide).
+fn iter_cost_bench(bench: &Bencher, smoke: bool) -> Vec<IterCost> {
+    use crate::opt::DeltaGate;
+    let reg = Arc::new(Registry::new());
+    let (per_day, iters): (usize, Vec<i64>) = if smoke {
+        (10_000, vec![2, 4, 6, 8, 10])
+    } else {
+        (20_000, vec![2, 4, 6, 8, 10, 12])
+    };
+    // Each day visits a fresh key range, so the solution set grows
+    // linearly while the per-day change stays constant.
+    let max_days = *iters.last().unwrap();
+    for d in 1..=max_days {
+        let base = (d - 1) * per_day as i64;
+        reg.put(
+            format!("it_visits{d}"),
+            (base..base + per_day as i64).map(Value::I64).collect(),
+        );
+    }
+    // Dense PageRank adjacency: (src, (dst, 1/outdeg)) with a
+    // deterministic LCG edge sample.
+    let pages: i64 = if smoke { 2_000 } else { 10_000 };
+    let edges_n: usize = if smoke { 20_000 } else { 100_000 };
+    let mut outdeg = vec![0usize; pages as usize];
+    let mut raw = Vec::with_capacity(edges_n);
+    let mut x = 0x9E37_79B9_7F4A_7C15u64;
+    let mut step = || {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (x >> 33) % pages as u64
+    };
+    for _ in 0..edges_n {
+        let (s, t) = (step() as usize, step() as usize);
+        raw.push((s, t));
+        outdeg[s] += 1;
+    }
+    let adj: Vec<Value> = raw
+        .iter()
+        .map(|&(s, t)| {
+            Value::pair(
+                Value::I64(s as i64),
+                Value::pair(Value::I64(t as i64), Value::F64(1.0 / outdeg[s] as f64)),
+            )
+        })
+        .collect();
+    reg.put("it_adj1", adj);
+
+    let curve = |mk: &dyn Fn(i64) -> Program, gate: DeltaGate, label: &str| -> (usize, Vec<u128>) {
+        let mut totals = Vec::new();
+        let mut delta_loops = 0;
+        for &d in &iters {
+            let p = mk(d);
+            let ocfg = OptConfig { delta: gate, ..Default::default() };
+            let (graph, report) = crate::compile_with_registry(&p, &ocfg, &reg)
+                .unwrap_or_else(|e| panic!("{label}: compile failed: {e}"));
+            delta_loops = report.delta_loops;
+            let cfg = ExecConfig { workers: 2, registry: reg.clone(), ..Default::default() };
+            let m = bench.run(format!("{label} iters={d}"), || {
+                run(&graph, &cfg).unwrap_or_else(|e| panic!("{label}: {e}"));
+            });
+            totals.push(m.median().as_nanos().max(1));
+        }
+        (delta_loops, totals)
+    };
+
+    let vc = |d: i64| crate::programs::visit_count_incremental(d, "it_");
+    let (vc_loops, vc_delta) = curve(&vc, DeltaGate::Always, "iter-cost visit-count (delta)");
+    let (_, vc_full) = curve(&vc, DeltaGate::Never, "iter-cost visit-count (full)");
+    let vc_md = marginals(&iters, &vc_delta);
+    let vc_mf = marginals(&iters, &vc_full);
+    let vc_speedup =
+        *vc_mf.last().unwrap() as f64 / (*vc_md.last().unwrap()).max(1) as f64;
+
+    let pr = |d: i64| crate::programs::pagerank_nested(1, d, pages as usize, "it_");
+    let (pr_loops, pr_delta) = curve(&pr, DeltaGate::Always, "iter-cost pagerank (delta cfg)");
+    let (_, pr_full) = curve(&pr, DeltaGate::Never, "iter-cost pagerank (full)");
+    let pr_md = marginals(&iters, &pr_delta);
+    let pr_mf = marginals(&iters, &pr_full);
+    let pr_speedup =
+        *pr_mf.last().unwrap() as f64 / (*pr_md.last().unwrap()).max(1) as f64;
+
+    eprintln!(
+        "iter-cost visit-count: delta_loops={vc_loops}, steady-state marginal {}ns (delta) vs {}ns (full) — {vc_speedup:.1}x",
+        vc_md.last().unwrap(),
+        vc_mf.last().unwrap()
+    );
+    eprintln!(
+        "iter-cost pagerank: delta_loops={pr_loops} (structural fallback), steady-state marginal {}ns (delta cfg) vs {}ns (full) — {pr_speedup:.2}x",
+        pr_md.last().unwrap(),
+        pr_mf.last().unwrap()
+    );
+
+    vec![
+        IterCost {
+            workload: "visit-count-incremental",
+            delta_loops: vc_loops,
+            iters: iters.clone(),
+            marginal_full_ns: vc_mf,
+            marginal_delta_ns: vc_md,
+            steady_speedup: vc_speedup,
+        },
+        IterCost {
+            workload: "pagerank",
+            delta_loops: pr_loops,
+            iters,
+            marginal_full_ns: pr_mf,
+            marginal_delta_ns: pr_md,
+            steady_speedup: pr_speedup,
+        },
+    ]
+}
+
 /// Render the measured points as JSON (handwritten — serde is not in the
 /// offline registry; see DESIGN.md §2).
 fn to_json(
@@ -145,6 +296,7 @@ fn to_json(
     trace_gate_overhead: Option<f64>,
     checkpoint_gate_overhead: Option<f64>,
     checkpoint_on_overhead: Option<f64>,
+    iter_cost: &[IterCost],
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
@@ -172,6 +324,25 @@ fn to_json(
         // tracking + per-bag done reporting + snapshot cuts) — the
         // price of crash-safety when switched ON, not a budget.
         let _ = writeln!(s, "  \"checkpoint_on_overhead\": {x:.4},");
+    }
+    if !iter_cost.is_empty() {
+        // Per-iteration marginal cost curves, delta vs full recompute
+        // (`opt::delta`). `delta_loops == 0` marks an honest fallback.
+        s.push_str("  \"iter_cost\": [\n");
+        for (i, c) in iter_cost.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"workload\": \"{}\", \"delta_loops\": {}, \"iters\": {:?}, \"marginal_full_ns\": {:?}, \"marginal_delta_ns\": {:?}, \"steady_speedup\": {:.2}}}",
+                c.workload,
+                c.delta_loops,
+                c.iters,
+                c.marginal_full_ns,
+                c.marginal_delta_ns,
+                c.steady_speedup
+            );
+            s.push_str(if i + 1 < iter_cost.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ],\n");
     }
     s.push_str("  \"series\": [\n");
     for (i, p) in points.iter().enumerate() {
@@ -346,6 +517,12 @@ pub fn throughput_benchmark(smoke: bool) {
     }
     table.print();
 
+    // Per-iteration cost curves for the delta-incremental engine:
+    // steady-state iteration cost should track changed rows, not the
+    // accumulated solution set (and PageRank should show the honest
+    // structural fallback).
+    let iter_cost = iter_cost_bench(&bench, smoke);
+
     let json = to_json(
         elements,
         &points,
@@ -353,6 +530,7 @@ pub fn throughput_benchmark(smoke: bool) {
         Some(trace_gate_overhead),
         Some(checkpoint_gate_overhead),
         Some(checkpoint_on_overhead),
+        &iter_cost,
     );
     let path = "BENCH_throughput.json";
     std::fs::write(path, &json).unwrap_or_else(|e| panic!("writing {path}: {e}"));

@@ -4,8 +4,9 @@
 //! results are visually distinct: nodes hoisted by `opt::hoist` sit in a
 //! nested "hoisted preamble" cluster inside their preamble block, fused
 //! chains from `opt::fuse` are filled green with their stage count, every
-//! node label carries the `opt::cost` row estimate (`~Nr`), and joins
-//! whose build side `opt::joinside` flipped are tagged `build=right`.
+//! node label carries the `opt::cost` row estimate (`~Nr`), joins
+//! whose build side `opt::joinside` flipped are tagged `build=right`,
+//! and nodes rewritten by `opt::delta` are tagged `mode=delta`.
 //! See `docs/dot.md` for the full legend.
 
 use super::{DataflowGraph, Node, Par};
@@ -16,6 +17,12 @@ fn node_attrs(n: &Node, rows: f64) -> Vec<String> {
     let mut label = format!("{}\\n{}\\n~{}r", n.name, n.op.mnemonic(), rows.round() as u64);
     if matches!(n.op, Rhs::Join { .. }) && n.build_side == Some(1) {
         label.push_str("\\nbuild=right");
+    }
+    if n.delta.is_some() {
+        // `opt::delta` put this node in delta-incremental mode: a Φ
+        // holding a solution set or a back-edge operator emitting only
+        // changed rows.
+        label.push_str("\\nmode=delta");
     }
     let mut attrs = vec![format!("label=\"{label}\"")];
     if matches!(n.op, Rhs::Phi(_)) {

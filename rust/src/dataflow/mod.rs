@@ -65,6 +65,50 @@ pub struct CondSpec {
     pub else_chain: Vec<BlockId>,
 }
 
+/// Delta-mode role assigned to a node by the `opt::delta` pass (the
+/// incremental-iteration subsystem; see `docs/incremental.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaMode {
+    /// Loop-header Φ of a re-aggregation loop: holds a keyed upsert
+    /// solution set ([`crate::ops::state::KeyedStore`]); emits arriving
+    /// rows downstream only on its init bag.
+    PhiUpsert,
+    /// Loop-header Φ of a semi-naive loop: holds a monotone frontier
+    /// store ([`crate::ops::state::FrontierStore`]); arriving rows are
+    /// the per-step frontier and are always re-emitted.
+    PhiFrontier,
+    /// Back-edge reduceByKey: retains its accumulator across supersteps
+    /// and emits only the keys whose accumulator changed.
+    AccReduce,
+    /// Back-edge distinct: retains its seen-set across supersteps and
+    /// emits only globally-new elements.
+    AccDistinct,
+}
+
+/// Delta annotation on a node (set by the `opt::delta` pass, honored by
+/// `ops::make_node` and [`crate::exec::ExecPlan`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeltaSpec {
+    /// The node's role in the delta loop.
+    pub mode: DeltaMode,
+    /// Sorted basic blocks of the natural loop this node's delta state
+    /// belongs to; the engine resets the state when the execution path
+    /// leaves these blocks (outer-loop re-entry).
+    pub loop_blocks: Vec<BlockId>,
+}
+
+impl DeltaSpec {
+    /// Whether `b` belongs to the delta loop.
+    pub fn in_loop(&self, b: BlockId) -> bool {
+        self.loop_blocks.binary_search(&b).is_ok()
+    }
+
+    /// Whether this is one of the Φ (solution-set) roles.
+    pub fn is_phi(&self) -> bool {
+        matches!(self.mode, DeltaMode::PhiUpsert | DeltaMode::PhiFrontier)
+    }
+}
+
 /// A logical dataflow node (one SSA variable).
 #[derive(Clone, Debug)]
 pub struct Node {
@@ -102,6 +146,11 @@ pub struct Node {
     /// model; honored by [`crate::exec::ExecPlan`] / `ops::join`. Output
     /// pair order is unaffected — this is a physical-plan choice only.
     pub build_side: Option<usize>,
+    /// Delta-mode annotation (`opt::delta`): `None` = full recompute
+    /// (the default); `Some` = this node participates in a
+    /// delta-incremental loop and keeps solution-set state resident
+    /// across supersteps.
+    pub delta: Option<DeltaSpec>,
 }
 
 /// The compiled logical dataflow job.
@@ -279,6 +328,7 @@ pub fn build_with(
                 hoisted_from: None,
                 size_hint,
                 build_side: None,
+                delta: None,
             });
         }
     }

@@ -154,6 +154,9 @@ pub(crate) fn run_plan_attempt(
                 }
             }
             c.self_ns.store(r.self_time_ns, std::sync::atomic::Ordering::Relaxed);
+            // `state_size` deliberately stays 0: it is a live gauge, and
+            // each restored instance re-reports the full size of its
+            // restored store on its first post-resume bag.
         }
     }
     // Bag-completion tracking: barrier mode needs it for its per-step
@@ -591,6 +594,7 @@ fn load_node_rows(counters: &[super::worker::NodeCounters]) -> Vec<NodeRows> {
                 .map(|s| s.load(std::sync::atomic::Ordering::Relaxed))
                 .collect(),
             self_time_ns: c.self_ns.load(std::sync::atomic::Ordering::Relaxed),
+            state_size: c.state_size.load(std::sync::atomic::Ordering::Relaxed),
         })
         .collect()
 }

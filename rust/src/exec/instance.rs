@@ -104,6 +104,14 @@ pub struct Instance {
     /// Items emitted for the current bag, accumulated for the cross-job
     /// preamble capture sink (`None` when not capturing).
     capture: Option<Vec<Value>>,
+    /// Delta-incremental role assigned by `opt::delta`, if any (Φ
+    /// solution set or back-edge changed-rows operator).
+    delta: Option<crate::dataflow::DeltaSpec>,
+    /// Last output-bag position a delta transform processed: the
+    /// loop-re-entry reset scan covers the path since this position.
+    last_delta_bag: u32,
+    /// Solution-set size last folded into the `state_size` gauge.
+    last_state_size: u64,
 }
 
 impl Instance {
@@ -122,7 +130,7 @@ impl Instance {
             registry,
             io_dir: io_dir.to_path_buf(),
         };
-        let transform = crate::ops::make_with_join_build(&n.op, plan.join_build[node], &ctx)
+        let transform = crate::ops::make_node(n, plan.join_build[node], &ctx)
             .unwrap_or_else(|e| panic!("instantiating {}: {e}", n.name));
         let n_inputs = n.inputs.len();
         let send_bufs = plan.out_edges[node]
@@ -150,6 +158,9 @@ impl Instance {
             },
             replayed: false,
             capture: None,
+            delta: n.delta.clone(),
+            last_delta_bag: 0,
+            last_state_size: 0,
         }
     }
 
@@ -226,7 +237,19 @@ impl Instance {
                 let st = f(w);
                 if st == SendDecision::Send && !*sent && !computing {
                     *sent = true;
-                    to_send.push((len, *edge_idx, r.items.clone()));
+                    // A loop-exit edge of a delta Φ receives the
+                    // materialized solution set, not the per-superstep
+                    // delta the retained bag holds. Sound here because
+                    // the bag is no longer computing: its delta was
+                    // already merged into the store.
+                    let items = if env.plan.out_edges[self.node][*edge_idx].wants_full {
+                        let mut full = Vec::new();
+                        self.transform.materialize_state(&mut full);
+                        full
+                    } else {
+                        r.items.clone()
+                    };
+                    to_send.push((len, *edge_idx, items));
                 }
             }
         }
@@ -267,6 +290,17 @@ impl Instance {
     fn start_bag(&mut self, len: u32, env: &mut Env) {
         let n = &env.plan.graph.nodes[self.node];
         debug_assert_eq!(env.path.at(len), n.block, "output bag at foreign block");
+        // Delta state is loop-scoped: if the path left the loop since
+        // this node's previous bag (outer-loop re-entry runs the loop
+        // again from scratch), the retained solution set belongs to a
+        // finished loop execution — drop it before opening the bag.
+        if let Some(spec) = &self.delta {
+            let prev = self.last_delta_bag;
+            if (prev + 1..len).any(|p| !spec.in_loop(env.path.at(p))) {
+                self.transform.reset_state();
+            }
+            self.last_delta_bag = len;
+        }
         // Cross-job preamble sharing (`serve::`): a shareable invariant
         // node whose output a previous epoch materialized under a
         // matching binding signature REPLAYS the cached bag — the
@@ -511,6 +545,17 @@ impl Instance {
             }
         }
 
+        // Fold the solution-set (or retained-build) size into the gauge:
+        // signed diff vs the last report, so concurrent instances of one
+        // node sum to the node's total current size.
+        if let Some(sz) = self.transform.state_size() {
+            let d = sz.wrapping_sub(self.last_state_size);
+            if d != 0 {
+                env.node_counters[self.node].state_size.fetch_add(d, Ordering::Relaxed);
+            }
+            self.last_state_size = sz;
+        }
+
         // Hand the completed bag to the cross-job preamble capture sink.
         if let Some(items) = self.capture.take() {
             if let Some(sink) = env.preamble.and_then(|p| p.capture.as_ref()) {
@@ -548,7 +593,17 @@ impl Instance {
             for (e, w, sent) in r.watchers.iter_mut() {
                 if w.state() == SendDecision::Send && !*sent {
                     *sent = true;
-                    latched.push((*e, r.items.clone()));
+                    // Loop-exit edges of a delta Φ get the materialized
+                    // solution set (see `process_watchers`); the bag just
+                    // finished, so the store is fully merged.
+                    let items = if env.plan.out_edges[self.node][*e].wants_full {
+                        let mut full = Vec::new();
+                        self.transform.materialize_state(&mut full);
+                        full
+                    } else {
+                        r.items.clone()
+                    };
+                    latched.push((*e, items));
                 }
             }
             resolved = r.watchers.iter().all(|(_, w, sent)| match w.state() {
@@ -920,7 +975,17 @@ impl Instance {
             })
             .collect();
         retained.sort_by_key(|e| e.0);
-        super::recovery::InstanceSnapshot { node: self.node, inst: self.inst, bufs, retained }
+        super::recovery::InstanceSnapshot {
+            node: self.node,
+            inst: self.inst,
+            bufs,
+            retained,
+            // Delta solution sets (and retained accumulators) cannot be
+            // rebuilt from input buffers — the deltas that built them
+            // were GC'd long ago — so they checkpoint as first-class
+            // state. `None` for every non-delta transform.
+            op_state: self.transform.snapshot_state(),
+        }
     }
 
     /// Rebuild instance state from a checkpoint snapshot, against a
@@ -957,6 +1022,15 @@ impl Instance {
                 *len,
                 Retained { items: items.clone(), computing: false, watchers: rebuilt },
             );
+        }
+        if let Some(st) = &snap.op_state {
+            self.transform.restore_state(st);
+            // The restored store covers the checkpointed prefix; the
+            // re-entry reset scan resumes past it. `last_state_size`
+            // stays 0: the gauge is live (not re-seeded from the
+            // checkpoint), so the first post-resume bag re-reports the
+            // full size.
+            self.last_delta_bag = path.len();
         }
     }
 

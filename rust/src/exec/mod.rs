@@ -218,6 +218,13 @@ pub struct NodeRows {
     /// ([`ExecConfig::trace`]): cardinality counters are always on, but
     /// timing is only collected behind the tracer gate.
     pub self_time_ns: u64,
+    /// Indexed-state rows the node holds at run end (delta solution
+    /// sets, retained accumulators, reused hash-join builds), summed
+    /// across instances. Kept separate from `rows` so delta loops stay
+    /// honest: `rows` counts the per-superstep delta traffic, this
+    /// gauge the solution-set size — adaptive re-optimization must read
+    /// `rows` as cardinality, never this.
+    pub state_size: u64,
 }
 
 /// Result of a run.

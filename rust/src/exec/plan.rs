@@ -24,6 +24,10 @@ pub struct OutEdgeMeta {
     /// §6.3.4 blockers: producer's block, plus sibling-input blocks when
     /// the consumer is a Φ.
     pub blockers: Vec<BlockId>,
+    /// The producer is a delta-mode Φ and this edge leaves its loop: the
+    /// consumer must receive the materialized solution set, not the
+    /// per-superstep delta the Φ circulates in-loop (see `ops::delta`).
+    pub wants_full: bool,
 }
 
 /// One input edge of a node, precomputed for the receive path.
@@ -121,6 +125,10 @@ impl ExecPlan {
                 }
                 // Producer's own block is always a §6.3.4 blocker: a newer
                 // bag supersedes. (It is blockers[0] == src_block already.)
+                let wants_full = graph.nodes[inp.src]
+                    .delta
+                    .as_ref()
+                    .is_some_and(|d| d.is_phi() && !d.in_loop(node.block));
                 out_edges[inp.src].push(OutEdgeMeta {
                     dst_node: node.id,
                     dst_input: i,
@@ -129,6 +137,7 @@ impl ExecPlan {
                     conditional: inp.conditional,
                     target_block: node.block,
                     blockers,
+                    wants_full,
                 });
                 let expected_closes = match inp.route {
                     Route::Forward => 1,

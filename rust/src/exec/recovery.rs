@@ -215,8 +215,11 @@ impl Default for RetryPolicy {
 /// including the bags backing §7 reused state (hash-join builds,
 /// reduceByKey partials rebuild from them on restore) — and §6.3.4
 /// retained conditional-output bags with their watcher send flags.
-/// What is NOT: transformation-internal state (rebuilt by re-feeding
-/// the buffered bags) and anything derivable from the path replica.
+/// What is NOT: transformation-internal state rebuildable by re-feeding
+/// the buffered bags, and anything derivable from the path replica.
+/// The exception is `op_state`: delta-incremental solution sets
+/// (`ops::state`) accumulate across supersteps from deltas the GC
+/// discarded long ago, so they checkpoint as first-class state.
 #[derive(Clone, Debug)]
 pub struct InstanceSnapshot {
     /// Logical node.
@@ -230,6 +233,10 @@ pub struct InstanceSnapshot {
     /// `(bag_id, items, [(out_edge_idx, sent)])`, sorted by bag id.
     /// Watchers are rebuilt against the restored path on resume.
     pub retained: Vec<(u32, Vec<Value>, Vec<(usize, bool)>)>,
+    /// Delta-incremental operator state (solution set / retained
+    /// accumulator), canonically sorted; `None` for non-delta
+    /// transforms.
+    pub op_state: Option<crate::ops::state::StateSnapshot>,
 }
 
 /// A completed superstep-boundary checkpoint: everything a fresh epoch

@@ -81,6 +81,13 @@ pub struct NodeCounters {
     /// bag closes + generator runs). Only written on traced runs — one
     /// atomic add per traced span, zero cost otherwise.
     pub self_ns: AtomicU64,
+    /// Current indexed-state size in rows (delta solution sets, retained
+    /// accumulators, reused hash-join builds). A gauge, not a counter:
+    /// each instance folds in the *signed* size change once per
+    /// completed bag (two's-complement wrapping, so concurrent
+    /// instances sum correctly), keeping `rows` an honest delta-rows
+    /// count distinct from how much state the node holds.
+    pub state_size: AtomicU64,
 }
 
 impl NodeCounters {
@@ -96,6 +103,7 @@ impl NodeCounters {
             bags: AtomicU64::new(0),
             stage_rows: (0..stages).map(|_| AtomicU64::new(0)).collect(),
             self_ns: AtomicU64::new(0),
+            state_size: AtomicU64::new(0),
         }
     }
 }

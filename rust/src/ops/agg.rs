@@ -2,22 +2,37 @@
 //! pipeline breakers (§9.1.2): they can only emit once their input bag is
 //! complete (except `distinct`, which emits on first sight).
 
+use super::state::{KeyedAcc, SetStore, StateSnapshot};
 use super::{Collector, Transformation};
 use crate::frontend::Udf2;
 use crate::value::Value;
-use rustc_hash::{FxHashMap, FxHashSet};
 
 /// `reduceByKey`: combine `Pair(k, v)` values per key; emits
 /// `Pair(k, acc)` at close (the grouped-aggregation example from §6.1).
+///
+/// In **delta mode** (`opt::delta`, `DeltaMode::AccReduce`) the
+/// accumulator map persists across output bags — each superstep ingests
+/// only the workset rows and emits only the keys whose accumulator
+/// changed, the O(|changed|) circulation the incremental-iteration
+/// engine is built on.
 pub struct ReduceByKeyT {
     udf: Udf2,
-    acc: FxHashMap<Value, Value>,
+    acc: KeyedAcc,
+    delta: bool,
+    /// Per-close emission staging buffer.
+    buf: Vec<Value>,
 }
 
 impl ReduceByKeyT {
-    /// Create from a combiner.
+    /// Create from a combiner (full recompute per bag).
     pub fn new(udf: Udf2) -> ReduceByKeyT {
-        ReduceByKeyT { udf, acc: FxHashMap::default() }
+        ReduceByKeyT { udf, acc: KeyedAcc::new(), delta: false, buf: Vec::new() }
+    }
+
+    /// Create in delta mode: the accumulator persists across bags and
+    /// only changed keys are emitted.
+    pub fn new_delta(udf: Udf2) -> ReduceByKeyT {
+        ReduceByKeyT { udf, acc: KeyedAcc::new(), delta: true, buf: Vec::new() }
     }
 }
 
@@ -27,18 +42,20 @@ impl ReduceByKeyT {
             Value::Pair(p) => (p.0.clone(), p.1.clone()),
             other => panic!("reduceByKey expects pairs, got {other:?}"),
         };
-        match self.acc.get_mut(&k) {
-            Some(a) => *a = self.udf.call(a, &pv),
-            None => {
-                self.acc.insert(k, pv);
-            }
+        let udf = &self.udf;
+        if self.delta {
+            self.acc.merge_tracked(k, pv, |a, b| udf.call(a, b));
+        } else {
+            self.acc.merge(k, pv, |a, b| udf.call(a, b));
         }
     }
 }
 
 impl Transformation for ReduceByKeyT {
     fn open_out_bag(&mut self) {
-        self.acc.clear();
+        if !self.delta {
+            self.acc.clear();
+        }
     }
     fn push_in_element(&mut self, _input: usize, v: &Value, _out: &mut dyn Collector) {
         self.ingest(v);
@@ -50,9 +67,26 @@ impl Transformation for ReduceByKeyT {
     }
     fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
     fn close_out_bag(&mut self, out: &mut dyn Collector) {
-        for (k, a) in self.acc.drain() {
-            out.emit(Value::pair(k, a));
+        if self.delta {
+            self.acc.take_changed(&mut self.buf);
+        } else {
+            self.acc.drain_all(&mut self.buf);
         }
+        out.emit_batch(&mut self.buf);
+    }
+    fn state_size(&self) -> Option<u64> {
+        self.delta.then(|| self.acc.len() as u64)
+    }
+    fn snapshot_state(&self) -> Option<StateSnapshot> {
+        self.delta.then(|| self.acc.snapshot())
+    }
+    fn restore_state(&mut self, snap: &StateSnapshot) {
+        if self.delta {
+            self.acc.restore(snap);
+        }
+    }
+    fn reset_state(&mut self) {
+        self.acc.clear();
     }
 }
 
@@ -136,16 +170,26 @@ impl Transformation for CountT {
 
 /// `distinct`: emit each element on first occurrence (pipelined; relies on
 /// hash partitioning to co-locate duplicates).
+///
+/// In **delta mode** (`opt::delta`, `DeltaMode::AccDistinct`) the
+/// seen-set persists across output bags, so only *globally*-new
+/// elements pass — the semi-naive frontier of the loop.
 pub struct DistinctT {
-    seen: FxHashSet<Value>,
+    seen: SetStore,
+    delta: bool,
     /// First-occurrence staging buffer reused across batches.
     buf: Vec<Value>,
 }
 
 impl DistinctT {
-    /// Create an empty set.
+    /// Create an empty set (per-bag dedup).
     pub fn new() -> DistinctT {
-        DistinctT { seen: FxHashSet::default(), buf: Vec::new() }
+        DistinctT { seen: SetStore::new(), delta: false, buf: Vec::new() }
+    }
+
+    /// Create in delta mode: the seen-set persists across bags.
+    pub fn new_delta() -> DistinctT {
+        DistinctT { seen: SetStore::new(), delta: true, buf: Vec::new() }
     }
 }
 
@@ -157,16 +201,18 @@ impl Default for DistinctT {
 
 impl Transformation for DistinctT {
     fn open_out_bag(&mut self) {
-        self.seen.clear();
+        if !self.delta {
+            self.seen.clear();
+        }
     }
     fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
-        if self.seen.insert(v.clone()) {
+        if self.seen.insert(v) {
             out.emit(v.clone());
         }
     }
     fn push_in_batch(&mut self, _input: usize, vs: &[Value], out: &mut dyn Collector) {
         for v in vs {
-            if self.seen.insert(v.clone()) {
+            if self.seen.insert(v) {
                 self.buf.push(v.clone());
             }
         }
@@ -174,6 +220,20 @@ impl Transformation for DistinctT {
     }
     fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
     fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+    fn state_size(&self) -> Option<u64> {
+        self.delta.then(|| self.seen.len() as u64)
+    }
+    fn snapshot_state(&self) -> Option<StateSnapshot> {
+        self.delta.then(|| self.seen.snapshot())
+    }
+    fn restore_state(&mut self, snap: &StateSnapshot) {
+        if self.delta {
+            self.seen.restore(snap);
+        }
+    }
+    fn reset_state(&mut self) {
+        self.seen.clear();
+    }
 }
 
 #[cfg(test)]
@@ -237,6 +297,43 @@ mod tests {
         let _ = run_once(&mut t, &[&[kv(1, 10)]]);
         let out = run_once(&mut t, &[&[kv(1, 1)]]);
         assert_eq!(out, vec![kv(1, 1)]);
+    }
+
+    #[test]
+    fn delta_reduce_by_key_persists_and_emits_changed_only() {
+        let mut t = ReduceByKeyT::new_delta(sum_udf());
+        // First bag: everything is new, everything is emitted.
+        let mut out = run_once(&mut t, &[&[kv(1, 1), kv(2, 5)]]);
+        out.sort();
+        assert_eq!(out, vec![kv(1, 1), kv(2, 5)]);
+        // Second bag: accumulator persisted; only key 1 changes.
+        let out2 = run_once(&mut t, &[&[kv(1, 2), kv(2, 0)]]);
+        assert_eq!(out2, vec![kv(1, 3)]);
+        assert_eq!(t.state_size(), Some(2));
+        // Snapshot/restore reproduces the retained accumulator.
+        let snap = t.snapshot_state().unwrap();
+        let mut r = ReduceByKeyT::new_delta(sum_udf());
+        r.restore_state(&snap);
+        assert_eq!(r.snapshot_state().unwrap(), snap);
+        // Reset drops it.
+        t.reset_state();
+        assert_eq!(t.state_size(), Some(0));
+    }
+
+    #[test]
+    fn delta_distinct_emits_globally_new_only() {
+        let mut t = DistinctT::new_delta();
+        let out = run_once(&mut t, &[&[Value::I64(1), Value::I64(2), Value::I64(1)]]);
+        assert_eq!(out.len(), 2);
+        // Second bag: 1 and 2 were seen in the previous bag.
+        let out2 = run_once(&mut t, &[&[Value::I64(1), Value::I64(2), Value::I64(3)]]);
+        assert_eq!(out2, vec![Value::I64(3)]);
+        assert_eq!(t.state_size(), Some(3));
+        let snap = t.snapshot_state().unwrap();
+        let mut r = DistinctT::new_delta();
+        r.restore_state(&snap);
+        let out3 = run_once(&mut r, &[&[Value::I64(3), Value::I64(4)]]);
+        assert_eq!(out3, vec![Value::I64(4)]);
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! The delta-Φ transformation: the solution-set anchor of a
+//! delta-incremental loop (see `docs/incremental.md`).
+//!
+//! A loop-header Φ in delta mode no longer passes full bags through.
+//! Each arriving bag is a *delta* (the init bag on loop entry, then the
+//! back-edge operator's changed rows per superstep) merged into an
+//! indexed solution set held across supersteps:
+//!
+//! * **Upsert** (re-aggregation loops, back edge = reduceByKey): the
+//!   store keys rows by `Value::key()`; a changed key's arriving rows
+//!   replace its previous rows. Downstream (in-loop) consumers receive
+//!   the arriving rows only on the *init* bag — afterwards the
+//!   reduceByKey's retained accumulator already contains them, and
+//!   re-circulating would double-count.
+//! * **Frontier** (semi-naive loops, back edge = distinct): arriving
+//!   rows are the per-step frontier, always re-emitted downstream; the
+//!   store accumulates their union.
+//!
+//! Exit edges (consumers outside the loop) are handled by the engine:
+//! it calls [`crate::ops::Transformation::materialize_state`] at
+//! send-decision time instead of forwarding the per-step delta.
+
+use super::state::{FrontierStore, KeyedStore, StateSnapshot};
+use super::{Collector, Transformation};
+use crate::value::Value;
+
+enum Store {
+    Upsert(KeyedStore),
+    Frontier(FrontierStore),
+}
+
+/// Loop-header Φ holding an indexed solution set across supersteps.
+pub struct DeltaPhiT {
+    store: Store,
+    /// Whether the current bag's elements are re-emitted downstream.
+    emit: bool,
+    /// Frontier only: whether the current bag is the raw init bag.
+    init_bag: bool,
+    /// Emission staging buffer reused across batches.
+    buf: Vec<Value>,
+}
+
+impl DeltaPhiT {
+    /// Upsert-store Φ (re-aggregation loops).
+    pub fn upsert() -> DeltaPhiT {
+        DeltaPhiT {
+            store: Store::Upsert(KeyedStore::new()),
+            emit: false,
+            init_bag: false,
+            buf: Vec::new(),
+        }
+    }
+
+    /// Frontier-store Φ (semi-naive loops).
+    pub fn frontier() -> DeltaPhiT {
+        DeltaPhiT {
+            store: Store::Frontier(FrontierStore::new()),
+            emit: true,
+            init_bag: false,
+            buf: Vec::new(),
+        }
+    }
+
+    fn absorb(&mut self, v: &Value) {
+        match &mut self.store {
+            Store::Upsert(s) => s.upsert(v),
+            Store::Frontier(f) => {
+                if self.init_bag {
+                    f.push_raw(v);
+                } else {
+                    f.insert(v);
+                }
+            }
+        }
+    }
+}
+
+impl Transformation for DeltaPhiT {
+    fn open_out_bag(&mut self) {
+        match &mut self.store {
+            Store::Upsert(s) => {
+                // Re-emit only the init bag: afterwards the loop's
+                // retained accumulator supersedes re-ingestion.
+                self.emit = s.begin_bag();
+                self.init_bag = self.emit;
+            }
+            Store::Frontier(f) => {
+                self.init_bag = f.begin_bag();
+                self.emit = true;
+            }
+        }
+    }
+
+    fn push_in_element(&mut self, _input: usize, v: &Value, out: &mut dyn Collector) {
+        self.absorb(v);
+        if self.emit {
+            out.emit(v.clone());
+        }
+    }
+
+    fn push_in_batch(&mut self, _input: usize, vs: &[Value], out: &mut dyn Collector) {
+        for v in vs {
+            self.absorb(v);
+        }
+        if self.emit {
+            self.buf.extend_from_slice(vs);
+            out.emit_batch(&mut self.buf);
+        }
+    }
+
+    fn close_in_bag(&mut self, _input: usize, _out: &mut dyn Collector) {}
+    fn close_out_bag(&mut self, _out: &mut dyn Collector) {}
+
+    fn state_size(&self) -> Option<u64> {
+        Some(match &self.store {
+            Store::Upsert(s) => s.rows(),
+            Store::Frontier(f) => f.rows(),
+        })
+    }
+
+    fn snapshot_state(&self) -> Option<StateSnapshot> {
+        Some(match &self.store {
+            Store::Upsert(s) => s.snapshot(),
+            Store::Frontier(f) => f.snapshot(),
+        })
+    }
+
+    fn restore_state(&mut self, snap: &StateSnapshot) {
+        match &mut self.store {
+            Store::Upsert(s) => s.restore(snap),
+            Store::Frontier(f) => f.restore(snap),
+        }
+    }
+
+    fn reset_state(&mut self) {
+        match &mut self.store {
+            Store::Upsert(s) => s.reset(),
+            Store::Frontier(f) => f.reset(),
+        }
+    }
+
+    fn materialize_state(&self, out: &mut Vec<Value>) {
+        match &self.store {
+            Store::Upsert(s) => s.materialize(out),
+            Store::Frontier(f) => f.materialize(out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::VecCollector;
+
+    fn kv(k: i64, v: i64) -> Value {
+        Value::pair(Value::I64(k), Value::I64(v))
+    }
+
+    fn feed(t: &mut DeltaPhiT, items: &[Value]) -> Vec<Value> {
+        let mut out = VecCollector::default();
+        t.open_out_bag();
+        t.push_in_batch(0, items, &mut out);
+        t.close_in_bag(0, &mut out);
+        t.close_out_bag(&mut out);
+        out.items
+    }
+
+    #[test]
+    fn upsert_phi_emits_init_bag_only_and_upserts_later_deltas() {
+        let mut t = DeltaPhiT::upsert();
+        // Init bag re-emitted (the loop's accumulator is still empty).
+        let e1 = feed(&mut t, &[kv(1, 10), kv(2, 20)]);
+        assert_eq!(e1, vec![kv(1, 10), kv(2, 20)]);
+        // Later deltas are merged silently.
+        let e2 = feed(&mut t, &[kv(1, 11)]);
+        assert!(e2.is_empty());
+        let mut full = Vec::new();
+        t.materialize_state(&mut full);
+        full.sort();
+        assert_eq!(full, vec![kv(1, 11), kv(2, 20)]);
+        assert_eq!(t.state_size(), Some(2));
+    }
+
+    #[test]
+    fn frontier_phi_always_emits_and_accumulates_union() {
+        let mut t = DeltaPhiT::frontier();
+        let e1 = feed(&mut t, &[Value::I64(1)]);
+        assert_eq!(e1, vec![Value::I64(1)]);
+        // The next frontier re-includes 1 (the back-edge distinct sees
+        // init elements for the first time); the store dedups it.
+        let e2 = feed(&mut t, &[Value::I64(1), Value::I64(2)]);
+        assert_eq!(e2, vec![Value::I64(1), Value::I64(2)]);
+        let mut full = Vec::new();
+        t.materialize_state(&mut full);
+        full.sort();
+        assert_eq!(full, vec![Value::I64(1), Value::I64(2)]);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_mid_loop() {
+        let mut t = DeltaPhiT::upsert();
+        feed(&mut t, &[kv(1, 10)]);
+        feed(&mut t, &[kv(1, 12)]);
+        let snap = t.snapshot_state().unwrap();
+        let mut r = DeltaPhiT::upsert();
+        r.restore_state(&snap);
+        assert_eq!(r.snapshot_state().unwrap(), snap);
+        // Restored Φ is past its init bag: deltas stay silent.
+        let e = feed(&mut r, &[kv(1, 13)]);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn reset_rearms_init_emission() {
+        let mut t = DeltaPhiT::upsert();
+        feed(&mut t, &[kv(1, 10)]);
+        feed(&mut t, &[kv(1, 12)]);
+        t.reset_state();
+        assert_eq!(t.state_size(), Some(0));
+        let e = feed(&mut t, &[kv(5, 50)]);
+        assert_eq!(e, vec![kv(5, 50)]);
+    }
+}

@@ -14,9 +14,9 @@
 //! hash table built once is probed by every iteration step — the paper's
 //! headline optimization over Spark-style per-step jobs (§3.2.2, Fig. 8).
 
+use super::state::MultiMap;
 use super::{Collector, Transformation};
 use crate::value::Value;
-use rustc_hash::FxHashMap;
 
 /// Split an element into its join key and payload: pairs key on their
 /// first component, anything else keys on the whole value with a `Unit`
@@ -32,7 +32,10 @@ pub fn key_and_payload(v: &Value) -> (Value, Value) {
 /// Streaming hash join (build side buffered, probe side pipelined once the
 /// build is complete).
 pub struct HashJoinT {
-    table: FxHashMap<Value, Vec<Value>>,
+    /// The build table — [`MultiMap`] from the shared solution-set
+    /// state vocabulary (`ops::state`). Not checkpointed: recovery
+    /// rebuilds it from retained input buffers.
+    table: MultiMap,
     build_done: bool,
     /// Probe elements that arrived before the build side closed.
     pending_probe: Vec<Value>,
@@ -55,7 +58,7 @@ impl HashJoinT {
     pub fn with_build(build: usize) -> HashJoinT {
         assert!(build <= 1, "join has two inputs");
         HashJoinT {
-            table: FxHashMap::default(),
+            table: MultiMap::new(),
             build_done: false,
             pending_probe: Vec::new(),
             build,
@@ -113,7 +116,7 @@ impl HashJoinT {
 
     fn ingest_build(&mut self, v: &Value) {
         let (k, bv) = key_and_payload(v);
-        self.table.entry(k).or_default().push(bv);
+        self.table.push(k, bv);
     }
 }
 
@@ -183,6 +186,13 @@ impl Transformation for HashJoinT {
 
     fn keeps_input_state(&self, input: usize) -> bool {
         input == self.build
+    }
+
+    fn state_size(&self) -> Option<u64> {
+        // Report the retained build table only once it is cross-bag
+        // state (a reused build); a per-bag build is not solution-set
+        // state and would distort the adaptive feedback.
+        (self.build_done && self.reuse_probes > 0).then(|| self.table.rows())
     }
 }
 

@@ -30,11 +30,14 @@
 
 pub mod agg;
 pub mod basic;
+pub mod delta;
 pub mod fused;
 pub mod io;
 pub mod join;
+pub mod state;
 pub mod xla;
 
+use crate::dataflow::{DeltaMode, Node};
 use crate::error::Result;
 use crate::frontend::Rhs;
 use crate::value::Value;
@@ -112,6 +115,30 @@ pub trait Transformation: Send {
     fn take_stage_rows(&mut self) -> Option<Vec<u64>> {
         None
     }
+    /// Rows of cross-superstep solution-set state currently held
+    /// (delta-mode operators); `None` for stateless / full-recompute
+    /// operators. Folded into `NodeRows::state_size` so adaptive
+    /// re-optimization and `obs::` spans see solution-set size, not
+    /// just the (small) per-step delta row counts.
+    fn state_size(&self) -> Option<u64> {
+        None
+    }
+    /// Canonical snapshot of cross-superstep state for
+    /// `exec::recovery` checkpoints. `None` for operators whose state
+    /// is rebuilt from retained input buffers (e.g. hash-join builds)
+    /// or who hold none.
+    fn snapshot_state(&self) -> Option<state::StateSnapshot> {
+        None
+    }
+    /// Restore cross-superstep state from a checkpoint snapshot.
+    fn restore_state(&mut self, _snap: &state::StateSnapshot) {}
+    /// Drop cross-superstep state (the execution path left the delta
+    /// loop; a later re-entry starts fresh).
+    fn reset_state(&mut self) {}
+    /// Append the full materialized solution set to `out` (delta-Φ
+    /// exit edges: consumers outside the loop receive the solution
+    /// set, not the per-step delta).
+    fn materialize_state(&self, _out: &mut Vec<Value>) {}
 }
 
 /// Instance context given to the factory: which physical instance this is
@@ -139,10 +166,45 @@ impl Default for MakeCtx {
     }
 }
 
+/// Instantiate the transformation for a dataflow node, honoring both
+/// the plan's hash-join build-side choice and the `opt::delta`
+/// annotation. The entry point for operator construction on the
+/// engine's path.
+pub fn make_node(
+    node: &Node,
+    join_build: usize,
+    ctx: &MakeCtx,
+) -> Result<Box<dyn Transformation>> {
+    if let Some(spec) = &node.delta {
+        match spec.mode {
+            DeltaMode::PhiUpsert => return Ok(Box::new(delta::DeltaPhiT::upsert())),
+            DeltaMode::PhiFrontier => return Ok(Box::new(delta::DeltaPhiT::frontier())),
+            DeltaMode::AccReduce => {
+                if let Rhs::ReduceByKey { udf, .. } = &node.op {
+                    return Ok(Box::new(agg::ReduceByKeyT::new_delta(udf.clone())));
+                }
+                return Err(crate::Error::Dataflow(format!(
+                    "AccReduce delta mode on non-reduceByKey node '{}'",
+                    node.name
+                )));
+            }
+            DeltaMode::AccDistinct => {
+                if !matches!(node.op, Rhs::Distinct { .. }) {
+                    return Err(crate::Error::Dataflow(format!(
+                        "AccDistinct delta mode on non-distinct node '{}'",
+                        node.name
+                    )));
+                }
+                return Ok(Box::new(agg::DistinctT::new_delta()));
+            }
+        }
+    }
+    make_with_join_build(&node.op, join_build, ctx)
+}
+
 /// Instantiate the transformation for a logical operation, honoring the
 /// plan's choice of hash-join build input (`opt::joinside` annotation;
-/// 0 — the left input — is the §5.3 default). The single entry point for
-/// operator construction on the engine's path.
+/// 0 — the left input — is the §5.3 default).
 pub fn make_with_join_build(
     op: &Rhs,
     join_build: usize,

@@ -1,0 +1,557 @@
+//! First-class indexed solution-set state for stateful operators.
+//!
+//! The delta-incremental iteration engine (see `docs/incremental.md`)
+//! keeps per-operator state *resident across supersteps* instead of
+//! recomputing it from full bags each iteration. This module is the
+//! shared vocabulary for that state, generalizing what used to be ad-hoc
+//! inside individual operators (the hash-join build table in
+//! `ops::join`, the reduceByKey partial map in `ops::agg`):
+//!
+//! * [`KeyedAcc`] — a key → accumulator map with *emit-changed*
+//!   tracking (delta reduceByKey: only keys whose accumulator changed
+//!   this superstep are re-circulated);
+//! * [`KeyedStore`] — a key → rows solution set with per-bag *upsert*
+//!   semantics (the delta-Φ store for re-aggregation loops: a changed
+//!   key's arriving rows replace that key's previous rows);
+//! * [`FrontierStore`] — a monotone element set (the delta-Φ store for
+//!   semi-naive loops: arriving elements are the frontier, the store is
+//!   the union of every frontier seen);
+//! * [`SetStore`] — a plain membership set (delta distinct: the
+//!   seen-set persists across supersteps so only globally-new elements
+//!   pass);
+//! * [`MultiMap`] — a key → rows multimap (the hash-join build table,
+//!   now expressed in the shared vocabulary);
+//! * [`StateSnapshot`] — the serializable form all of the above reduce
+//!   to, carried by `exec::recovery` checkpoints so recovery replays a
+//!   delta loop to an identical solution set.
+
+use crate::value::Value;
+use rustc_hash::{FxHashMap, FxHashSet};
+
+/// Serializable snapshot of one operator's cross-superstep state.
+///
+/// Entries are canonically sorted so snapshots of equal logical state
+/// compare equal byte-for-byte regardless of hash-map iteration order —
+/// the chaos suites rely on this to assert recovery restored solution
+/// sets exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StateSnapshot {
+    /// [`KeyedAcc`]: sorted `(key, accumulator)` pairs.
+    Keyed(Vec<(Value, Value)>),
+    /// [`KeyedStore`]: sorted `(key, rows)` entries plus the
+    /// first-bag flag (whether the Φ has merged its init bag yet).
+    KeyedMulti {
+        /// Sorted `(key, rows)` entries.
+        entries: Vec<(Value, Vec<Value>)>,
+        /// True until the first bag of the current loop entry is merged.
+        first: bool,
+    },
+    /// [`FrontierStore`]: sorted elements plus flags.
+    Frontier {
+        /// Stored elements, sorted (duplicates possible while `raw`).
+        items: Vec<Value>,
+        /// True until the first bag of the current loop entry is merged.
+        first: bool,
+        /// True while the store still holds the raw (possibly
+        /// duplicate-bearing) init bag, before the first delta merge
+        /// canonicalizes it into a set.
+        raw: bool,
+    },
+    /// [`SetStore`]: sorted members.
+    Set(Vec<Value>),
+}
+
+impl StateSnapshot {
+    /// Number of stored rows (solution-set size) in the snapshot.
+    pub fn rows(&self) -> u64 {
+        match self {
+            StateSnapshot::Keyed(kv) => kv.len() as u64,
+            StateSnapshot::KeyedMulti { entries, .. } => {
+                entries.iter().map(|(_, rows)| rows.len() as u64).sum()
+            }
+            StateSnapshot::Frontier { items, .. } => items.len() as u64,
+            StateSnapshot::Set(items) => items.len() as u64,
+        }
+    }
+}
+
+/// Key → accumulator map with emit-changed tracking (delta reduceByKey).
+///
+/// In full-recompute mode the caller clears it per bag and drains all
+/// pairs at close; in delta mode the map persists across supersteps and
+/// only the keys touched *with a different resulting accumulator* are
+/// emitted — the changed set is the delta the loop circulates.
+#[derive(Default)]
+pub struct KeyedAcc {
+    map: FxHashMap<Value, Value>,
+    changed: FxHashSet<Value>,
+}
+
+impl KeyedAcc {
+    /// Empty accumulator.
+    pub fn new() -> KeyedAcc {
+        KeyedAcc::default()
+    }
+
+    /// Drop all state (full-recompute open, or loop re-entry reset).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.changed.clear();
+    }
+
+    /// Number of keys held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True if no keys are held.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fold `v` into the accumulator for `k` (no change tracking — the
+    /// full-recompute path, where every key is emitted anyway).
+    pub fn merge(&mut self, k: Value, v: Value, f: impl FnOnce(&Value, &Value) -> Value) {
+        match self.map.get_mut(&k) {
+            Some(a) => *a = f(a, &v),
+            None => {
+                self.map.insert(k, v);
+            }
+        }
+    }
+
+    /// Fold `v` into the accumulator for `k`, recording `k` as changed
+    /// when the resulting accumulator differs from the previous one (or
+    /// the key is new).
+    pub fn merge_tracked(
+        &mut self,
+        k: Value,
+        v: Value,
+        f: impl FnOnce(&Value, &Value) -> Value,
+    ) {
+        match self.map.get_mut(&k) {
+            Some(a) => {
+                let nv = f(a, &v);
+                if *a != nv {
+                    *a = nv;
+                    self.changed.insert(k);
+                }
+            }
+            None => {
+                self.changed.insert(k.clone());
+                self.map.insert(k, v);
+            }
+        }
+    }
+
+    /// Emit every `(key, acc)` pair and drop them (full-recompute close).
+    pub fn drain_all(&mut self, out: &mut Vec<Value>) {
+        for (k, a) in self.map.drain() {
+            out.push(Value::pair(k, a));
+        }
+        self.changed.clear();
+    }
+
+    /// Emit the `(key, acc)` pairs whose accumulator changed since the
+    /// last call, keeping the map intact (delta close).
+    pub fn take_changed(&mut self, out: &mut Vec<Value>) {
+        for k in self.changed.drain() {
+            if let Some(a) = self.map.get(&k) {
+                out.push(Value::pair(k, a.clone()));
+            }
+        }
+    }
+
+    /// Canonical snapshot of the retained map. The per-bag changed set
+    /// is always empty at a quiescent checkpoint cut and is not carried.
+    pub fn snapshot(&self) -> StateSnapshot {
+        let mut kv: Vec<(Value, Value)> =
+            self.map.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        kv.sort();
+        StateSnapshot::Keyed(kv)
+    }
+
+    /// Restore from a snapshot produced by [`KeyedAcc::snapshot`].
+    pub fn restore(&mut self, snap: &StateSnapshot) {
+        if let StateSnapshot::Keyed(kv) = snap {
+            self.map = kv.iter().cloned().collect();
+            self.changed.clear();
+        }
+    }
+}
+
+/// Key → rows solution set with per-bag upsert semantics (the delta-Φ
+/// store for re-aggregation loops).
+///
+/// Within one bag, the *first* arrival of a key replaces that key's
+/// previous rows and later arrivals of the same key append — so a bag
+/// carrying duplicate keys (e.g. a raw init bag) is stored with its
+/// multiplicities, while a changed-key delta from a later superstep
+/// cleanly supersedes the stale rows.
+#[derive(Default)]
+pub struct KeyedStore {
+    map: FxHashMap<Value, Vec<Value>>,
+    touched: FxHashSet<Value>,
+    first: bool,
+}
+
+impl KeyedStore {
+    /// Empty store, positioned before its first bag.
+    pub fn new() -> KeyedStore {
+        KeyedStore { map: FxHashMap::default(), touched: FxHashSet::default(), first: true }
+    }
+
+    /// Start a new arriving bag: resets per-bag touch tracking. Returns
+    /// true iff this is the first bag since construction or
+    /// [`KeyedStore::reset`] — the Φ re-emits arriving items downstream
+    /// only on that first (init) bag, when the loop's retained
+    /// accumulators are still empty.
+    pub fn begin_bag(&mut self) -> bool {
+        self.touched.clear();
+        std::mem::take(&mut self.first)
+    }
+
+    /// Upsert one arriving row (keyed by `v.key()`).
+    pub fn upsert(&mut self, v: &Value) {
+        let k = v.key().clone();
+        if self.touched.insert(k.clone()) {
+            self.map.insert(k, vec![v.clone()]);
+        } else if let Some(rows) = self.map.get_mut(&k) {
+            rows.push(v.clone());
+        }
+    }
+
+    /// Total stored rows (with multiplicity).
+    pub fn rows(&self) -> u64 {
+        self.map.values().map(|r| r.len() as u64).sum()
+    }
+
+    /// Append the full solution set to `out` (exit-edge materialization).
+    pub fn materialize(&self, out: &mut Vec<Value>) {
+        for rows in self.map.values() {
+            out.extend(rows.iter().cloned());
+        }
+    }
+
+    /// Drop all state and rearm the first-bag flag (loop re-entry).
+    pub fn reset(&mut self) {
+        self.map.clear();
+        self.touched.clear();
+        self.first = true;
+    }
+
+    /// Canonical snapshot.
+    pub fn snapshot(&self) -> StateSnapshot {
+        let mut entries: Vec<(Value, Vec<Value>)> =
+            self.map.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        entries.sort();
+        StateSnapshot::KeyedMulti { entries, first: self.first }
+    }
+
+    /// Restore from a snapshot produced by [`KeyedStore::snapshot`].
+    pub fn restore(&mut self, snap: &StateSnapshot) {
+        if let StateSnapshot::KeyedMulti { entries, first } = snap {
+            self.map = entries.iter().cloned().collect();
+            self.touched.clear();
+            self.first = *first;
+        }
+    }
+}
+
+/// Monotone element set for semi-naive loops (the delta-Φ store for
+/// frontier iteration).
+///
+/// The first bag (the init bag) is stored *raw*, duplicates and all, so
+/// a zero-trip loop materializes exactly the init multiset. The first
+/// delta merge canonicalizes the store into a set — matching the full
+/// recompute, where one pass through `distinct` collapses duplicates.
+#[derive(Default)]
+pub struct FrontierStore {
+    items: Vec<Value>,
+    seen: FxHashSet<Value>,
+    first: bool,
+    raw: bool,
+}
+
+impl FrontierStore {
+    /// Empty store, positioned before its first bag.
+    pub fn new() -> FrontierStore {
+        FrontierStore {
+            items: Vec::new(),
+            seen: FxHashSet::default(),
+            first: true,
+            raw: true,
+        }
+    }
+
+    /// Start a new arriving bag. Returns true iff this is the init bag.
+    /// On the first non-init bag, collapses raw init duplicates.
+    pub fn begin_bag(&mut self) -> bool {
+        if self.first {
+            self.first = false;
+            return true;
+        }
+        if self.raw {
+            let mut seen = FxHashSet::default();
+            self.items.retain(|v| seen.insert(v.clone()));
+            self.raw = false;
+        }
+        false
+    }
+
+    /// Store one element of the raw init bag (keeps duplicates).
+    pub fn push_raw(&mut self, v: &Value) {
+        self.seen.insert(v.clone());
+        self.items.push(v.clone());
+    }
+
+    /// Insert one frontier element; no-op if already present.
+    pub fn insert(&mut self, v: &Value) {
+        if self.seen.insert(v.clone()) {
+            self.items.push(v.clone());
+        }
+    }
+
+    /// Total stored rows (with init multiplicity while raw).
+    pub fn rows(&self) -> u64 {
+        self.items.len() as u64
+    }
+
+    /// Append the full solution set to `out` (exit-edge materialization).
+    pub fn materialize(&self, out: &mut Vec<Value>) {
+        out.extend(self.items.iter().cloned());
+    }
+
+    /// Drop all state and rearm the first-bag flag (loop re-entry).
+    pub fn reset(&mut self) {
+        self.items.clear();
+        self.seen.clear();
+        self.first = true;
+        self.raw = true;
+    }
+
+    /// Canonical snapshot (items sorted; multiset order is irrelevant).
+    pub fn snapshot(&self) -> StateSnapshot {
+        let mut items = self.items.clone();
+        items.sort();
+        StateSnapshot::Frontier { items, first: self.first, raw: self.raw }
+    }
+
+    /// Restore from a snapshot produced by [`FrontierStore::snapshot`].
+    pub fn restore(&mut self, snap: &StateSnapshot) {
+        if let StateSnapshot::Frontier { items, first, raw } = snap {
+            self.items = items.clone();
+            self.seen = items.iter().cloned().collect();
+            self.first = *first;
+            self.raw = *raw;
+        }
+    }
+}
+
+/// Plain membership set (the distinct seen-set, persisted across
+/// supersteps in delta mode).
+#[derive(Default)]
+pub struct SetStore {
+    seen: FxHashSet<Value>,
+}
+
+impl SetStore {
+    /// Empty set.
+    pub fn new() -> SetStore {
+        SetStore::default()
+    }
+
+    /// Insert; true iff the element was new.
+    pub fn insert(&mut self, v: &Value) -> bool {
+        self.seen.insert(v.clone())
+    }
+
+    /// Drop all members.
+    pub fn clear(&mut self) {
+        self.seen.clear();
+    }
+
+    /// Number of members.
+    pub fn len(&self) -> usize {
+        self.seen.len()
+    }
+
+    /// True if no members are held.
+    pub fn is_empty(&self) -> bool {
+        self.seen.is_empty()
+    }
+
+    /// Canonical snapshot.
+    pub fn snapshot(&self) -> StateSnapshot {
+        let mut items: Vec<Value> = self.seen.iter().cloned().collect();
+        items.sort();
+        StateSnapshot::Set(items)
+    }
+
+    /// Restore from a snapshot produced by [`SetStore::snapshot`].
+    pub fn restore(&mut self, snap: &StateSnapshot) {
+        if let StateSnapshot::Set(items) = snap {
+            self.seen = items.iter().cloned().collect();
+        }
+    }
+}
+
+/// Key → rows multimap — the hash-join build table, shared vocabulary
+/// form. (The build side is rebuilt from retained input buffers on
+/// recovery, so it does not flow through [`StateSnapshot`]; it lives
+/// here so *all* cross-bag operator state speaks one interface.)
+#[derive(Default)]
+pub struct MultiMap {
+    map: FxHashMap<Value, Vec<Value>>,
+}
+
+impl MultiMap {
+    /// Empty multimap.
+    pub fn new() -> MultiMap {
+        MultiMap::default()
+    }
+
+    /// Append one row under `k`.
+    pub fn push(&mut self, k: Value, v: Value) {
+        self.map.entry(k).or_default().push(v);
+    }
+
+    /// Rows stored under `k`, if any.
+    pub fn get(&self, k: &Value) -> Option<&[Value]> {
+        self.map.get(k).map(|v| v.as_slice())
+    }
+
+    /// Drop all rows.
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    /// Total stored rows (with multiplicity).
+    pub fn rows(&self) -> u64 {
+        self.map.values().map(|r| r.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(k: i64, v: i64) -> Value {
+        Value::pair(Value::I64(k), Value::I64(v))
+    }
+
+    #[test]
+    fn keyed_acc_tracks_changed_keys_only() {
+        let mut acc = KeyedAcc::new();
+        let sum = |a: &Value, b: &Value| Value::I64(a.as_i64() + b.as_i64());
+        acc.merge_tracked(Value::I64(1), Value::I64(5), sum);
+        acc.merge_tracked(Value::I64(2), Value::I64(7), sum);
+        let mut out = Vec::new();
+        acc.take_changed(&mut out);
+        out.sort();
+        assert_eq!(out, vec![kv(1, 5), kv(2, 7)]);
+        // Second step: only key 1 changes; adding zero to key 2 is not a change.
+        acc.merge_tracked(Value::I64(1), Value::I64(3), sum);
+        acc.merge_tracked(Value::I64(2), Value::I64(0), sum);
+        let mut out2 = Vec::new();
+        acc.take_changed(&mut out2);
+        assert_eq!(out2, vec![kv(1, 8)]);
+        assert_eq!(acc.len(), 2);
+    }
+
+    #[test]
+    fn keyed_acc_snapshot_roundtrip_is_canonical() {
+        let mut acc = KeyedAcc::new();
+        let sum = |a: &Value, b: &Value| Value::I64(a.as_i64() + b.as_i64());
+        for i in 0..10 {
+            acc.merge_tracked(Value::I64(i % 3), Value::I64(i), sum);
+        }
+        let snap = acc.snapshot();
+        let mut acc2 = KeyedAcc::new();
+        acc2.restore(&snap);
+        assert_eq!(snap, acc2.snapshot());
+        assert_eq!(snap.rows(), 3);
+    }
+
+    #[test]
+    fn keyed_store_upsert_replaces_then_appends_within_bag() {
+        let mut s = KeyedStore::new();
+        assert!(s.begin_bag(), "first bag");
+        // Init bag with a duplicate key: both rows kept.
+        s.upsert(&kv(1, 10));
+        s.upsert(&kv(1, 20));
+        assert_eq!(s.rows(), 2);
+        // Next bag: first arrival of key 1 replaces both rows.
+        assert!(!s.begin_bag());
+        s.upsert(&kv(1, 30));
+        assert_eq!(s.rows(), 1);
+        let mut out = Vec::new();
+        s.materialize(&mut out);
+        assert_eq!(out, vec![kv(1, 30)]);
+    }
+
+    #[test]
+    fn keyed_store_reset_rearms_first() {
+        let mut s = KeyedStore::new();
+        s.begin_bag();
+        s.upsert(&kv(1, 1));
+        s.reset();
+        assert_eq!(s.rows(), 0);
+        assert!(s.begin_bag());
+    }
+
+    #[test]
+    fn frontier_store_keeps_raw_init_until_first_merge() {
+        let mut f = FrontierStore::new();
+        assert!(f.begin_bag());
+        f.push_raw(&Value::I64(1));
+        f.push_raw(&Value::I64(1)); // zero-trip exit must keep the duplicate
+        assert_eq!(f.rows(), 2);
+        // First merge collapses the raw duplicates, then dedups inserts.
+        assert!(!f.begin_bag());
+        f.insert(&Value::I64(1));
+        f.insert(&Value::I64(2));
+        assert_eq!(f.rows(), 2);
+        let mut out = Vec::new();
+        f.materialize(&mut out);
+        out.sort();
+        assert_eq!(out, vec![Value::I64(1), Value::I64(2)]);
+    }
+
+    #[test]
+    fn frontier_snapshot_roundtrip() {
+        let mut f = FrontierStore::new();
+        f.begin_bag();
+        f.push_raw(&Value::I64(3));
+        f.push_raw(&Value::I64(3));
+        let snap = f.snapshot();
+        let mut f2 = FrontierStore::new();
+        f2.restore(&snap);
+        assert_eq!(f2.snapshot(), snap);
+        // Restored raw store still canonicalizes on first merge.
+        assert!(!f2.begin_bag());
+        assert_eq!(f2.rows(), 1);
+    }
+
+    #[test]
+    fn set_store_roundtrip() {
+        let mut s = SetStore::new();
+        assert!(s.insert(&Value::I64(1)));
+        assert!(!s.insert(&Value::I64(1)));
+        let snap = s.snapshot();
+        let mut s2 = SetStore::new();
+        s2.restore(&snap);
+        assert!(!s2.insert(&Value::I64(1)));
+        assert!(s2.insert(&Value::I64(2)));
+    }
+
+    #[test]
+    fn multimap_appends_per_key() {
+        let mut m = MultiMap::new();
+        m.push(Value::I64(1), Value::str("a"));
+        m.push(Value::I64(1), Value::str("b"));
+        assert_eq!(m.get(&Value::I64(1)).unwrap().len(), 2);
+        assert!(m.get(&Value::I64(2)).is_none());
+        assert_eq!(m.rows(), 2);
+    }
+}

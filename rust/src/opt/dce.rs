@@ -84,6 +84,7 @@ mod tests {
             hoisted_from: None,
             size_hint: None,
             build_side: None,
+            delta: None,
         });
         g.node_of_var.insert(dead_var, id);
         verify_integrity(&g).unwrap();

@@ -1,0 +1,495 @@
+//! Delta-incremental loop analysis + rewrite (`opt.delta`).
+//!
+//! Proves loop bodies *delta-safe* and annotates the qualifying nodes
+//! ([`crate::dataflow::DeltaSpec`]) so the engine circulates only
+//! changed rows per superstep and merges them into indexed solution
+//! sets (`ops::state`). Two loop shapes are proven today; anything else
+//! falls back to full recompute (annotation simply absent):
+//!
+//! **Upsert / re-aggregation** (`total = reduceByKey(total ∪ fresh)`):
+//! the loop-header Φ's in-loop consumers reach the back-edge
+//! `reduceByKey` through `union` nodes ONLY, and the `reduceByKey`
+//! feeds nothing but the Φ. The reduceByKey then retains its
+//! accumulator across supersteps (ingesting only fresh rows) and emits
+//! only changed keys; the Φ holds a keyed upsert store and re-emits
+//! arriving rows downstream only on its init bag. Correct because the
+//! combiner is associative/commutative — already an engine-wide
+//! assumption for `reduceByKey`.
+//!
+//! **Frontier / semi-naive** (`reached = distinct(reached ∪
+//! f(reached))`): the Φ's in-loop consumers form a DAG of
+//! element-local operators (map/filter/flatMap/fused/union, plus joins
+//! probing with the Φ-derived side against a loop-invariant build)
+//! terminating at the back-edge `distinct`, which feeds nothing but
+//! the Φ. The distinct retains its seen-set, so per step only
+//! globally-new elements circulate — textbook semi-naive evaluation.
+//! Correct because every operator on the path is element-local
+//! (`f(S ∪ T) = f(S) ∪ f(T)`) and the accumulation is monotone.
+//!
+//! Shared safety rules: exactly one back-edge arm; the back-edge
+//! operator's only consumer is the Φ; no in-loop observation of the Φ
+//! outside the proven paths (in particular, a loop condition derived
+//! from the carried bag — e.g. `count`ing it — disqualifies the loop,
+//! since the per-step delta would change what the condition sees).
+//! Consumers *outside* the loop are always fine: the engine
+//! materializes the full solution set on exit edges.
+//!
+//! The pass also rewrites every input edge of a delta-Φ to
+//! [`Route::HashKey`]: the solution set is partitioned by key across
+//! instances, and the init arm arrives with arbitrary partitioning —
+//! without co-partitioning, a stale init row for key *k* on the wrong
+//! instance would never be superseded. (For the back-edge arm this is
+//! a no-op: its rows are already key-partitioned, and re-hashing maps
+//! instance-compatibly.)
+//!
+//! Gating: under [`DeltaGate::Auto`] the `opt::cost` trip model must
+//! predict ≥ 2 iterations — delta state only pays off when it
+//! amortizes across supersteps. `Always` skips the gate (differential
+//! tests force tiny literal loops into delta mode); `Never` uninstalls
+//! the pass.
+
+use super::analysis::PlanAnalysis;
+use super::cost::TripCount;
+use super::{Pass, PassOutcome};
+use crate::cfg::loops::NaturalLoop;
+use crate::dataflow::{DataflowGraph, DeltaMode, DeltaSpec, NodeId, Route};
+use crate::error::Result;
+use crate::frontend::Rhs;
+
+/// Policy for the delta-incremental rewrite (config key `opt.delta`,
+/// CLI `--no-delta`, env default `LABY_DELTA`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaGate {
+    /// Cost-gated (default): rewrite proven loops whose estimated trip
+    /// count is at least 2.
+    Auto,
+    /// Rewrite every proven loop regardless of the trip estimate.
+    Always,
+    /// Never rewrite (full recompute everywhere).
+    Never,
+}
+
+impl DeltaGate {
+    /// Parse a config/CLI/env value.
+    pub fn parse(s: &str) -> Result<DeltaGate> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(DeltaGate::Auto),
+            "always" => Ok(DeltaGate::Always),
+            "never" => Ok(DeltaGate::Never),
+            other => Err(crate::Error::Config(format!(
+                "opt.delta: expected auto|always|never, got {other:?}"
+            ))),
+        }
+    }
+
+    /// The process-wide default: `LABY_DELTA` if set (invalid values
+    /// fall back with a warning — a bad env var must not fail every
+    /// compile), else [`DeltaGate::Auto`]. Read once.
+    pub fn default_from_env() -> DeltaGate {
+        static GATE: std::sync::OnceLock<DeltaGate> = std::sync::OnceLock::new();
+        *GATE.get_or_init(|| match std::env::var("LABY_DELTA") {
+            Err(_) => DeltaGate::Auto,
+            Ok(s) => DeltaGate::parse(&s).unwrap_or_else(|e| {
+                eprintln!("warning: LABY_DELTA ignored: {e}");
+                DeltaGate::Auto
+            }),
+        })
+    }
+}
+
+/// Number of loops currently in delta mode (counted by their Φ
+/// anchors). Reported as `opt.delta_loops` — a state count, not a sum
+/// of per-round rewrite events.
+pub fn annotated_loops(g: &DataflowGraph) -> usize {
+    g.nodes
+        .iter()
+        .filter(|n| n.delta.as_ref().is_some_and(|d| d.is_phi()))
+        .count()
+}
+
+/// A proven delta loop: the Φ, its back-edge operator, and the mode pair.
+struct Proven {
+    phi: NodeId,
+    back: NodeId,
+    phi_mode: DeltaMode,
+    back_mode: DeltaMode,
+    kind: &'static str,
+}
+
+/// The pass. Recomputes annotations from scratch every run (so a graph
+/// reshaped by earlier passes — e.g. a flipped join build side — never
+/// keeps a stale delta annotation it no longer qualifies for).
+pub struct DeltaPass {
+    /// Gating policy ([`DeltaGate::Never`] is handled by not
+    /// installing the pass at all).
+    pub gate: DeltaGate,
+    /// Trip count assumed for loops the cost model cannot bound.
+    pub default_trips: u64,
+}
+
+impl Pass for DeltaPass {
+    fn name(&self) -> &'static str {
+        "delta"
+    }
+
+    fn run(&self, g: &mut DataflowGraph, a: &PlanAnalysis) -> Result<PassOutcome> {
+        let before: Vec<Option<DeltaSpec>> =
+            g.nodes.iter().map(|n| n.delta.clone()).collect();
+        for n in &mut g.nodes {
+            n.delta = None;
+        }
+        let mut out = PassOutcome::default();
+        for (li, l) in a.loops.loops.iter().enumerate() {
+            let trips = a
+                .cost
+                .trips
+                .get(li)
+                .copied()
+                .unwrap_or(TripCount::Unknown)
+                .or_default(self.default_trips);
+            let phis: Vec<NodeId> = g
+                .nodes
+                .iter()
+                .filter(|n| {
+                    n.block == l.header && matches!(n.op, Rhs::Phi(_)) && !n.singleton
+                })
+                .map(|n| n.id)
+                .collect();
+            for phi in phis {
+                let Some(p) = classify(g, a, l, phi) else { continue };
+                if self.gate == DeltaGate::Auto && trips < 2 {
+                    out.skipped += 1;
+                    out.details.push(format!(
+                        "loop@b{}: Φ '{}' is {}-eligible but trip estimate {} < 2 — kept full",
+                        l.header, g.nodes[p.phi].name, p.kind, trips
+                    ));
+                    continue;
+                }
+                let spec = |mode| DeltaSpec { mode, loop_blocks: l.body.clone() };
+                g.nodes[p.phi].delta = Some(spec(p.phi_mode));
+                g.nodes[p.back].delta = Some(spec(p.back_mode));
+                // Co-partition the solution set: every Φ arm becomes
+                // key-hashed (see module docs).
+                for inp in &mut g.nodes[p.phi].inputs {
+                    inp.route = Route::HashKey;
+                }
+                out.details.push(format!(
+                    "loop@b{}: Φ '{}' → {} solution set; '{}' retains state, emits changed rows (trips≈{})",
+                    l.header, g.nodes[p.phi].name, p.kind, g.nodes[p.back].name, trips
+                ));
+            }
+        }
+        out.changed =
+            g.nodes.iter().filter(|n| n.delta != before[n.id]).count();
+        Ok(out)
+    }
+}
+
+/// Try to prove `phi` (a non-singleton Φ at the header of `l`) anchors
+/// a delta-safe loop.
+fn classify(
+    g: &DataflowGraph,
+    a: &PlanAnalysis,
+    l: &NaturalLoop,
+    phi: NodeId,
+) -> Option<Proven> {
+    let in_body = |b: usize| l.body.binary_search(&b).is_ok();
+    let n = &g.nodes[phi];
+    // Exactly one back-edge arm and one entry arm (self-arguments from
+    // `continue`, and multi-latch headers, fall back to full recompute).
+    if n.inputs.len() != 2 {
+        return None;
+    }
+    let back_arms: Vec<usize> =
+        (0..2).filter(|&i| in_body(n.inputs[i].src_block)).collect();
+    if back_arms.len() != 1 {
+        return None;
+    }
+    let back = n.inputs[back_arms[0]].src;
+    if back == phi || g.nodes[back].cond.is_some() || g.nodes[back].singleton {
+        return None;
+    }
+    // The back-edge operator must feed nothing but the Φ (its retained
+    // state changes what it emits; any other consumer would observe
+    // deltas instead of full per-step results).
+    if a.consumers[back].is_empty() || a.consumers[back].iter().any(|&(c, _)| c != phi) {
+        return None;
+    }
+    match g.nodes[back].op {
+        Rhs::ReduceByKey { .. } => classify_upsert(g, a, l, phi, back),
+        Rhs::Distinct { .. } => classify_frontier(g, a, l, phi, back),
+        _ => None,
+    }
+}
+
+/// Upsert class: Φ's in-loop consumers reach the back-edge reduceByKey
+/// through union nodes only.
+fn classify_upsert(
+    g: &DataflowGraph,
+    a: &PlanAnalysis,
+    l: &NaturalLoop,
+    phi: NodeId,
+    back: NodeId,
+) -> Option<Proven> {
+    let in_body = |b: usize| l.body.binary_search(&b).is_ok();
+    let mut dag: Vec<NodeId> = Vec::new();
+    let mut work: Vec<NodeId> = Vec::new();
+    let mut reached_back = false;
+    for &(c, _) in &a.consumers[phi] {
+        if !in_body(g.nodes[c].block) {
+            continue; // exit consumer: materialized full set, always safe
+        }
+        if !matches!(g.nodes[c].op, Rhs::Union { .. }) || g.nodes[c].cond.is_some() {
+            return None;
+        }
+        if !dag.contains(&c) {
+            dag.push(c);
+            work.push(c);
+        }
+    }
+    while let Some(u) = work.pop() {
+        if a.consumers[u].is_empty() {
+            return None; // dead branch — cannot prove all rows reach the fold
+        }
+        for &(c, _) in &a.consumers[u] {
+            if c == back {
+                reached_back = true;
+                continue;
+            }
+            if !in_body(g.nodes[c].block)
+                || !matches!(g.nodes[c].op, Rhs::Union { .. })
+                || g.nodes[c].cond.is_some()
+            {
+                return None;
+            }
+            if !dag.contains(&c) {
+                dag.push(c);
+                work.push(c);
+            }
+        }
+    }
+    reached_back.then_some(Proven {
+        phi,
+        back,
+        phi_mode: DeltaMode::PhiUpsert,
+        back_mode: DeltaMode::AccReduce,
+        kind: "upsert",
+    })
+}
+
+/// Frontier class: Φ's in-loop consumers form a DAG of element-local
+/// operators terminating at the back-edge distinct.
+fn classify_frontier(
+    g: &DataflowGraph,
+    a: &PlanAnalysis,
+    l: &NaturalLoop,
+    phi: NodeId,
+    back: NodeId,
+) -> Option<Proven> {
+    let in_body = |b: usize| l.body.binary_search(&b).is_ok();
+    let mut dag: Vec<NodeId> = Vec::new();
+    let mut work: Vec<(NodeId, usize)> = Vec::new();
+    let mut reached_back = false;
+    // Admit `c` (discovered via its Φ-derived input `idx`) into the DAG.
+    let admit = |c: NodeId, idx: usize, dag: &mut Vec<NodeId>, work: &mut Vec<(NodeId, usize)>| -> bool {
+        let node = &g.nodes[c];
+        if !in_body(node.block) || node.cond.is_some() {
+            return false;
+        }
+        match node.op {
+            Rhs::Map { .. }
+            | Rhs::Filter { .. }
+            | Rhs::FlatMap { .. }
+            | Rhs::Fused { .. }
+            | Rhs::Union { .. } => {}
+            Rhs::Join { .. } => {
+                // The Φ-derived side must probe; the build side must be
+                // loop-invariant. A join discovered on both inputs
+                // (frontier self-join) fails here on the second visit.
+                let build = node.build_side.unwrap_or(0);
+                if idx == build {
+                    return false;
+                }
+                if in_body(node.inputs[build].src_block) {
+                    return false;
+                }
+            }
+            _ => return false,
+        }
+        if !dag.contains(&c) {
+            dag.push(c);
+            work.push((c, idx));
+        }
+        true
+    };
+    for &(c, idx) in &a.consumers[phi] {
+        if !in_body(g.nodes[c].block) {
+            continue; // exit consumer
+        }
+        if c == back {
+            // Φ feeding the distinct directly carries no new work into
+            // the loop — fall back rather than model the degenerate shape.
+            return None;
+        }
+        if !admit(c, idx, &mut dag, &mut work) {
+            return None;
+        }
+    }
+    let mut i = 0;
+    while i < work.len() {
+        let (u, _) = work[i];
+        i += 1;
+        if a.consumers[u].is_empty() {
+            return None; // dead branch
+        }
+        for &(c, idx) in &a.consumers[u] {
+            if c == back {
+                reached_back = true;
+                continue;
+            }
+            if !admit(c, idx, &mut dag, &mut work) {
+                return None;
+            }
+        }
+    }
+    reached_back.then_some(Proven {
+        phi,
+        back,
+        phi_mode: DeltaMode::PhiFrontier,
+        back_mode: DeltaMode::AccDistinct,
+        kind: "frontier",
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_lower;
+    use crate::opt::OptConfig;
+
+    fn annotated(src: &str, gate: DeltaGate) -> (DataflowGraph, usize) {
+        let p = parse_and_lower(src).unwrap();
+        let cfg = OptConfig { delta: gate, ..OptConfig::none() };
+        let (g, rep) = crate::compile_with(&p, &cfg).unwrap();
+        (g, rep.delta_loops)
+    }
+
+    const UPSERT_SRC: &str = "total = bag(); d = 1; while (d <= 4) { \
+         day = bag(1, 2, 1).map(|x| pair(x, 1)); \
+         total = total.union(day).reduceByKey(|a, b| a + b); \
+         d = d + 1; } collect(total, \"total\");";
+
+    const FRONTIER_SRC: &str = "reach = bag(1); d = 1; while (d <= 4) { \
+         reach = reach.union(reach.map(|x| x + 1)).distinct(); \
+         d = d + 1; } collect(reach, \"reach\");";
+
+    #[test]
+    fn upsert_loop_is_annotated() {
+        let (g, loops) = annotated(UPSERT_SRC, DeltaGate::Always);
+        assert_eq!(loops, 1);
+        let phi = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.delta, Some(DeltaSpec { mode: DeltaMode::PhiUpsert, .. })))
+            .expect("upsert Φ");
+        assert!(phi.inputs.iter().all(|i| i.route == Route::HashKey));
+        assert!(g
+            .nodes
+            .iter()
+            .any(|n| matches!(n.delta, Some(DeltaSpec { mode: DeltaMode::AccReduce, .. }))));
+    }
+
+    #[test]
+    fn frontier_loop_is_annotated() {
+        let (g, loops) = annotated(FRONTIER_SRC, DeltaGate::Always);
+        assert_eq!(loops, 1);
+        assert!(g
+            .nodes
+            .iter()
+            .any(|n| matches!(n.delta, Some(DeltaSpec { mode: DeltaMode::PhiFrontier, .. }))));
+        assert!(g
+            .nodes
+            .iter()
+            .any(|n| matches!(n.delta, Some(DeltaSpec { mode: DeltaMode::AccDistinct, .. }))));
+    }
+
+    #[test]
+    fn observed_carried_bag_disqualifies() {
+        // The carried bag is count()ed inside the loop: it is observed
+        // outside the proven union→reduceByKey path — must fall back
+        // (in delta mode the Φ circulates per-step deltas, so an
+        // in-loop count would see delta rows, not the full set).
+        let src = "total = bag(); d = 1; while (d <= 4) { \
+             n = total.count(); \
+             day = bag(1).map(|x| pair(x, 1)); \
+             total = total.union(day).reduceByKey(|a, b| a + b); \
+             d = d + n - n + 1; } collect(total, \"total\");";
+        let (_, loops) = annotated(src, DeltaGate::Always);
+        assert_eq!(loops, 0);
+    }
+
+    #[test]
+    fn map_on_carried_bag_into_fold_disqualifies_upsert() {
+        // total flows through a map before the reduceByKey: re-applying
+        // the map to deltas is not proven for the upsert class.
+        let src = "total = bag(); d = 1; while (d <= 4) { \
+             total = total.map(|p| p).reduceByKey(|a, b| a + b); \
+             d = d + 1; } collect(total, \"total\");";
+        let (_, loops) = annotated(src, DeltaGate::Always);
+        assert_eq!(loops, 0);
+    }
+
+    #[test]
+    fn auto_gate_declines_single_trip_loops() {
+        let one_trip = UPSERT_SRC.replace("d <= 4", "d <= 1");
+        let (g, loops) = annotated(&one_trip, DeltaGate::Auto);
+        assert_eq!(loops, 0, "1-trip loop must not pay for delta state");
+        assert!(g.nodes.iter().all(|n| n.delta.is_none()));
+        // The eligible-but-gated loop is surfaced in the report details.
+        let p = parse_and_lower(&one_trip).unwrap();
+        let cfg = OptConfig { delta: DeltaGate::Auto, ..OptConfig::none() };
+        let (_, rep) = crate::compile_with(&p, &cfg).unwrap();
+        assert!(rep.render().contains("kept full"), "{}", rep.render());
+    }
+
+    #[test]
+    fn never_gate_uninstalls_the_pass() {
+        let (g, loops) = annotated(UPSERT_SRC, DeltaGate::Never);
+        assert_eq!(loops, 0);
+        assert!(g.nodes.iter().all(|n| n.delta.is_none()));
+    }
+
+    #[test]
+    fn frontier_with_invariant_join_probe_qualifies() {
+        // Semi-naive reachability: probe the invariant adjacency with
+        // the frontier. In `a.join(b)` the ARGUMENT is the build side,
+        // so adj (defined in the preamble) builds once and the
+        // Φ-derived side probes — exactly the admitted join shape.
+        let src = "adj = bag(1, 2, 3).map(|x| pair(x, x + 1)); reach = bag(1); d = 1; \
+             while (d <= 4) { \
+             next = reach.map(|x| pair(x, x)).join(adj).map(|p| key(payload(p))); \
+             reach = reach.union(next).distinct(); \
+             d = d + 1; } collect(reach, \"reach\");";
+        let p = parse_and_lower(src).unwrap();
+        let cfg = OptConfig { delta: DeltaGate::Always, hoist: true, ..OptConfig::none() };
+        let (g, rep) = crate::compile_with(&p, &cfg).unwrap();
+        assert_eq!(rep.delta_loops, 1, "{}", rep.render());
+        assert!(g
+            .nodes
+            .iter()
+            .any(|n| matches!(n.delta, Some(DeltaSpec { mode: DeltaMode::PhiFrontier, .. }))));
+    }
+
+    #[test]
+    fn delta_report_counts_and_tags() {
+        let p = parse_and_lower(UPSERT_SRC).unwrap();
+        let cfg = OptConfig { delta: DeltaGate::Always, ..OptConfig::none() };
+        let (g, rep) = crate::compile_with(&p, &cfg).unwrap();
+        assert_eq!(rep.delta_loops, 1);
+        assert!(rep.render().contains("solution set"), "{}", rep.render());
+        assert!(g.opt_summary.iter().any(|(k, v)| k == "opt.delta_loops" && *v == 1));
+        // DOT render carries the mode=delta tag.
+        let dot = crate::dataflow::dot::to_dot(&g);
+        assert!(dot.contains("mode=delta"), "{dot}");
+    }
+}

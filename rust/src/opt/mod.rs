@@ -26,6 +26,13 @@
 //!   picks the cheaper hash-join build side (smaller estimated rows,
 //!   strongly preferring a loop-invariant side so the §7 cross-step
 //!   build reuse keeps firing); `ExecPlan`/`ops::join` honor the choice.
+//! * [`delta`] — **delta-incremental loop rewriting**: loop-carried bags
+//!   whose bodies are proven delta-safe (upsert/re-aggregation or
+//!   semi-naive frontier shapes) switch to workset/solution-set
+//!   execution — per superstep only changed rows circulate and stateful
+//!   operators merge them into indexed solution sets (`ops::state`).
+//!   Runs last (on the fully optimized shape), gated by the [`cost`]
+//!   trip model under `opt.delta = auto`.
 //!
 //! Passes share a [`analysis::PlanAnalysis`] (loop membership, invariance
 //! fixpoint, liveness, and the [`cost`] row/trip estimates) and run in
@@ -39,10 +46,13 @@
 pub mod analysis;
 pub mod cost;
 pub mod dce;
+pub mod delta;
 pub mod fuse;
 pub mod hoist;
 pub mod joinside;
 pub mod pushdown;
+
+pub use delta::DeltaGate;
 
 use crate::dataflow::DataflowGraph;
 use crate::error::{Error, Result};
@@ -102,6 +112,9 @@ pub struct OptConfig {
     pub join_sides: bool,
     /// Speculative-hoist policy (gates `NamedSource`/`XlaCall` chains).
     pub speculate: Speculate,
+    /// Delta-incremental loop rewriting policy (config key `opt.delta`,
+    /// CLI `--no-delta`, env default `LABY_DELTA`).
+    pub delta: DeltaGate,
     /// Minimum estimated `trips × rows` for a speculative hoist under
     /// [`Speculate::Auto`].
     pub speculate_threshold: f64,
@@ -122,6 +135,7 @@ impl Default for OptConfig {
             pushdown: true,
             join_sides: true,
             speculate: Speculate::Auto,
+            delta: DeltaGate::default_from_env(),
             speculate_threshold: 1.0,
             default_trips: 4,
             max_rounds: 3,
@@ -141,6 +155,7 @@ impl OptConfig {
             dce: false,
             pushdown: false,
             join_sides: false,
+            delta: DeltaGate::Never,
             ..OptConfig::default()
         }
     }
@@ -153,6 +168,10 @@ impl OptConfig {
             None => d.speculate,
             Some(s) => Speculate::parse(s)?,
         };
+        let delta = match cfg.get("opt.delta") {
+            None => d.delta,
+            Some(s) => DeltaGate::parse(s)?,
+        };
         Ok(OptConfig {
             hoist: cfg.get_bool("opt.hoist", d.hoist)?,
             fuse: cfg.get_bool("opt.fuse", d.fuse)?,
@@ -160,6 +179,7 @@ impl OptConfig {
             pushdown: cfg.get_bool("opt.pushdown", d.pushdown)?,
             join_sides: cfg.get_bool("opt.join_sides", d.join_sides)?,
             speculate,
+            delta,
             speculate_threshold: cfg
                 .get_f64("opt.speculate_threshold", d.speculate_threshold)?,
             default_trips: cfg.get_u64("opt.default_trips", d.default_trips)?,
@@ -233,6 +253,10 @@ pub struct ExplainReport {
     /// Nodes whose row estimate was pinned to observed runtime
     /// cardinalities ([`RowFeedback`]); 0 on plain compiles.
     pub feedback_nodes: usize,
+    /// Loops rewritten to delta-incremental (workset/solution-set)
+    /// execution, as of the last delta run — a state count, not a sum
+    /// of per-round events.
+    pub delta_loops: usize,
     /// Per-pass statistics, in execution order.
     pub passes: Vec<PassStats>,
 }
@@ -258,6 +282,7 @@ impl ExplainReport {
             ("opt.join_flips".into(), self.join_flips as u64),
             ("opt.hoist_gated_skips".into(), self.hoist_gated as u64),
             ("opt.feedback_rows_pinned".into(), self.feedback_nodes as u64),
+            ("opt.delta_loops".into(), self.delta_loops as u64),
         ]
     }
 
@@ -283,6 +308,12 @@ impl ExplainReport {
             s.push_str(&format!(
                 "  adaptive: {} node row estimate(s) pinned to observed runtime cardinalities\n",
                 self.feedback_nodes
+            ));
+        }
+        if self.delta_loops > 0 {
+            s.push_str(&format!(
+                "  delta: {} loop(s) rewritten to workset/solution-set execution\n",
+                self.delta_loops
             ));
         }
         for p in &self.passes {
@@ -336,6 +367,17 @@ impl PassManager {
         }
         if cfg.dce {
             passes.push(Box::new(dce::DcePass));
+        }
+        // Delta rewriting runs last so it proves safety on the final
+        // shape of each round (post-hoist invariance, post-DCE liveness,
+        // settled join build sides). The pass recomputes its annotations
+        // from scratch every run, so an earlier round's decision never
+        // outlives the shape it was proven on.
+        if cfg.delta != DeltaGate::Never {
+            passes.push(Box::new(delta::DeltaPass {
+                gate: cfg.delta,
+                default_trips: cfg.default_trips,
+            }));
         }
         PassManager { passes, max_rounds: cfg.max_rounds, row_seed: None }
     }
@@ -396,6 +438,10 @@ impl PassManager {
                     // chain kept in its loop is re-skipped every round, so
                     // take the latest run's count instead of summing.
                     "hoist" => report.hoist_gated = out.skipped,
+                    // Same state-not-events convention: the pass
+                    // re-annotates from scratch, so count the loops
+                    // currently in delta mode.
+                    "delta" => report.delta_loops = delta::annotated_loops(g),
                     _ => {}
                 }
                 report.passes.push(PassStats {

@@ -328,6 +328,7 @@ fn apply(g: &mut DataflowGraph, found: Found, out: &mut PassOutcome) {
             hoisted_from: None,
             size_hint: None,
             build_side: None,
+            delta: None,
         });
         g.node_of_var.insert(fresh_var, nid);
         // Re-point the producer's input at the interposed filter. The

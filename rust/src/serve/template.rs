@@ -267,6 +267,14 @@ impl PlanTemplate {
             if s.bags == 0 || n.singleton {
                 continue;
             }
+            // Delta-mode nodes circulate per-superstep changed rows, so
+            // their `rows` counter is delta traffic — not the operator's
+            // logical cardinality. Pinning it would convince the cost
+            // model the loop is near-empty; skip (the solution-set size
+            // is reported separately as `NodeRows::state_size`).
+            if n.delta.is_some() {
+                continue;
+            }
             let insts = self.plan.num_insts[n.id] as f64;
             let scale = insts / (s.bags as f64);
             if let Rhs::Fused { stages, lineage, .. } = &n.op {

@@ -215,6 +215,79 @@ collect(acc, "acc");
 /// The collect labels [`random_laby_program`] may emit.
 pub const RANDOM_PROGRAM_LABELS: &[&str] = &["acc", "joined", "counts"];
 
+/// Generate a random LabyLang program whose loop carries a bag in one of
+/// the two shapes `opt::delta` targets: **upsert** (`total =
+/// total.union(day).reduceByKey(+)`) or **frontier** (`reach =
+/// reach.union(step(reach)).distinct()`). Knobs vary literal bags, union
+/// arity, element-wise steps on the frontier (including a join probing
+/// an invariant lookup), and — about a quarter of the time — an in-loop
+/// observer of the carried bag (`count`), which makes the loop
+/// delta-INeligible and exercises the analysis' full-recompute fallback
+/// rather than the rewrite. Differential suites run each program with
+/// the pass forced on, forced off, and against the single-threaded
+/// oracle; outputs must agree as multisets either way.
+///
+/// Shared by `delta_equivalence.rs` and the delta chaos leg in
+/// `chaos_property.rs`.
+pub fn random_delta_program(seed: u64) -> String {
+    let mut r = Rng::new(seed);
+    let steps = 2 + r.gen_range(5); // 2..=6
+    let observe = r.gen_bool(0.25);
+    // An observer consumes the carried bag inside the loop via a scalar
+    // that must survive DCE — fold it into the counter increment.
+    let bump = if observe { "n - n + 1" } else { "1" };
+    if r.gen_bool(0.5) {
+        // Upsert: per-key totals over a shifting day bag.
+        let lit: Vec<String> =
+            (0..(3 + r.gen_range(6))).map(|_| r.gen_range(50).to_string()).collect();
+        let lit = lit.join(", ");
+        let k = 3 + r.gen_range(6);
+        let init = if r.gen_bool(0.5) {
+            format!("bag({lit}).map(|v| pair(v % {k}, 1))")
+        } else {
+            "bag()".to_string()
+        };
+        let second_union = if r.gen_bool(0.4) {
+            format!(
+                "    day2 = bag({lit}).map(|v| pair((v + i) % {k}, 1));\n    merged = merged.union(day2);\n"
+            )
+        } else {
+            String::new()
+        };
+        let observer = if observe { "    n = total.count();\n" } else { "" };
+        format!(
+            "total = {init};\ni = 0;\nwhile (i < {steps}) {{\n{observer}    day = bag({lit}).map(|v| pair((v + i * {k}) % {mod_keys}, 1));\n    merged = total.union(day);\n{second_union}    total = merged.reduceByKey(|a, b| a + b);\n    i = i + {bump};\n}}\ncollect(total, \"total\");\n",
+            mod_keys = k * 3
+        )
+    } else {
+        // Frontier: bounded closure of a functional step, optionally
+        // through a filter or an invariant join probe.
+        let n = 16 + r.gen_range(48); // vertex space
+        let a = 1 + r.gen_range(5);
+        let c = r.gen_range(7);
+        let seeds: Vec<String> =
+            (0..(1 + r.gen_range(3))).map(|_| r.gen_range(n).to_string()).collect();
+        let seeds = seeds.join(", ");
+        let step = match r.gen_range(3) {
+            0 => format!("reach.map(|x| (x * {a} + {c}) % {n})"),
+            1 => format!(
+                "reach.map(|x| (x * {a} + {c}) % {n}).filter(|x| x % 3 != 1)"
+            ),
+            // `a.join(b)`: the argument is the invariant build side.
+            _ => format!(
+                "reach.map(|x| pair(x % 7, x)).join(lookup).map(|p| (snd(snd(p)) * {a} + fst(snd(p))) % {n})"
+            ),
+        };
+        let observer = if observe { "    n = reach.count();\n" } else { "" };
+        format!(
+            "lookup = bag(0, 1, 2, 3, 4, 5, 6).map(|v| pair(v, v * 3));\nreach = bag({seeds});\ni = 0;\nwhile (i < {steps}) {{\n{observer}    next = {step};\n    reach = reach.union(next).distinct();\n    i = i + {bump};\n}}\ncollect(reach, \"reach\");\n"
+        )
+    }
+}
+
+/// The collect labels [`random_delta_program`] may emit.
+pub const DELTA_PROGRAM_LABELS: &[&str] = &["total", "reach"];
+
 /// Channel batch sizes the property suites sweep: 1 turns every element
 /// into a batch boundary (close-marker piggybacking on singleton
 /// batches), 2 and 7 produce partial final flushes at odd offsets, 256
