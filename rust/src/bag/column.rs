@@ -1,0 +1,308 @@
+//! SoA (structure-of-arrays) column batches for the typed data plane.
+//!
+//! The batched engine moves `&[Value]` slices between operators; every
+//! hot kernel pays one enum dispatch (and often an `Arc` clone) per
+//! element. When `opt::types` proves an edge's element type, kernels
+//! decode the arriving slice ONCE into a [`ColumnBatch`] — flat machine
+//! vectors — run their monomorphic loops over raw `i64`/`f64` lanes, and
+//! encode back to `Value`s only at the operator boundary.
+//!
+//! The decode is *verified*: [`ColumnBatch::from_values`] checks every
+//! element against the expected layout and returns `None` on the first
+//! mismatch, so an optimistic inference result degrades to the dynamic
+//! path instead of corrupting data. The `Dyn` variant wraps a dynamic
+//! buffer without copying, which is what makes the typed/dynamic
+//! boundary free when inference gave up (`docs/columnar.md`).
+
+use crate::value::{f64_key_hash, i64_key_hash, ElemType, Value};
+
+/// One decoded batch in SoA layout. Key/value pair shapes keep two
+/// parallel columns so keyed kernels (`reduceByKey`, join probes, hash
+/// scatter) read keys without touching payloads.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ColumnBatch {
+    /// `i64` scalars.
+    I64(Vec<i64>),
+    /// `f64` scalars.
+    F64(Vec<f64>),
+    /// Booleans.
+    Bool(Vec<bool>),
+    /// `pair(i64, i64)` elements as parallel key/value columns.
+    PairII {
+        /// Keys (first pair component).
+        k: Vec<i64>,
+        /// Values (second pair component).
+        v: Vec<i64>,
+    },
+    /// `pair(i64, f64)` elements as parallel key/value columns.
+    PairIF {
+        /// Keys (first pair component).
+        k: Vec<i64>,
+        /// Values (second pair component).
+        v: Vec<f64>,
+    },
+    /// Fallback: the dynamic representation, wrapped without copying.
+    Dyn(Vec<Value>),
+}
+
+impl ColumnBatch {
+    /// Does `t` have a dedicated SoA layout (anything else rides the
+    /// `Dyn` fallback)?
+    pub fn supports(t: &ElemType) -> bool {
+        match t {
+            ElemType::I64 | ElemType::F64 | ElemType::Bool => true,
+            ElemType::Pair(k, v) => {
+                matches!(
+                    (k.as_ref(), v.as_ref()),
+                    (ElemType::I64, ElemType::I64) | (ElemType::I64, ElemType::F64)
+                )
+            }
+            _ => false,
+        }
+    }
+
+    /// An empty batch with the layout of `t` (`Dyn` layout when `t` has
+    /// no SoA representation).
+    pub fn empty_for(t: &ElemType) -> ColumnBatch {
+        match t {
+            ElemType::I64 => ColumnBatch::I64(Vec::new()),
+            ElemType::F64 => ColumnBatch::F64(Vec::new()),
+            ElemType::Bool => ColumnBatch::Bool(Vec::new()),
+            ElemType::Pair(k, v) => match (k.as_ref(), v.as_ref()) {
+                (ElemType::I64, ElemType::I64) => {
+                    ColumnBatch::PairII { k: Vec::new(), v: Vec::new() }
+                }
+                (ElemType::I64, ElemType::F64) => {
+                    ColumnBatch::PairIF { k: Vec::new(), v: Vec::new() }
+                }
+                _ => ColumnBatch::Dyn(Vec::new()),
+            },
+            _ => ColumnBatch::Dyn(Vec::new()),
+        }
+    }
+
+    /// Verified decode: every element of `vs` must match the layout of
+    /// `want`, otherwise `None` (the caller keeps the dynamic path; no
+    /// partial state escapes). `want = Dyn` clones into the `Dyn`
+    /// wrapper — callers on the hot path avoid that by not decoding at
+    /// all when inference gave up.
+    pub fn from_values(vs: &[Value], want: &ElemType) -> Option<ColumnBatch> {
+        match want {
+            ElemType::I64 => {
+                let mut col = Vec::with_capacity(vs.len());
+                for v in vs {
+                    match v {
+                        Value::I64(x) => col.push(*x),
+                        _ => return None,
+                    }
+                }
+                Some(ColumnBatch::I64(col))
+            }
+            ElemType::F64 => {
+                let mut col = Vec::with_capacity(vs.len());
+                for v in vs {
+                    match v {
+                        Value::F64(x) => col.push(*x),
+                        _ => return None,
+                    }
+                }
+                Some(ColumnBatch::F64(col))
+            }
+            ElemType::Bool => {
+                let mut col = Vec::with_capacity(vs.len());
+                for v in vs {
+                    match v {
+                        Value::Bool(x) => col.push(*x),
+                        _ => return None,
+                    }
+                }
+                Some(ColumnBatch::Bool(col))
+            }
+            ElemType::Pair(kt, vt) => match (kt.as_ref(), vt.as_ref()) {
+                (ElemType::I64, ElemType::I64) => {
+                    let mut k = Vec::with_capacity(vs.len());
+                    let mut pv = Vec::with_capacity(vs.len());
+                    for v in vs {
+                        match v {
+                            Value::Pair(p) => match (&p.0, &p.1) {
+                                (Value::I64(a), Value::I64(b)) => {
+                                    k.push(*a);
+                                    pv.push(*b);
+                                }
+                                _ => return None,
+                            },
+                            _ => return None,
+                        }
+                    }
+                    Some(ColumnBatch::PairII { k, v: pv })
+                }
+                (ElemType::I64, ElemType::F64) => {
+                    let mut k = Vec::with_capacity(vs.len());
+                    let mut pv = Vec::with_capacity(vs.len());
+                    for v in vs {
+                        match v {
+                            Value::Pair(p) => match (&p.0, &p.1) {
+                                (Value::I64(a), Value::F64(b)) => {
+                                    k.push(*a);
+                                    pv.push(*b);
+                                }
+                                _ => return None,
+                            },
+                            _ => return None,
+                        }
+                    }
+                    Some(ColumnBatch::PairIF { k, v: pv })
+                }
+                _ => Some(ColumnBatch::Dyn(vs.to_vec())),
+            },
+            _ => Some(ColumnBatch::Dyn(vs.to_vec())),
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            ColumnBatch::I64(c) => c.len(),
+            ColumnBatch::F64(c) => c.len(),
+            ColumnBatch::Bool(c) => c.len(),
+            ColumnBatch::PairII { k, .. } => k.len(),
+            ColumnBatch::PairIF { k, .. } => k.len(),
+            ColumnBatch::Dyn(c) => c.len(),
+        }
+    }
+
+    /// True when the batch holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Encode back to the dynamic representation, appending to `out`
+    /// (consumes the batch; the `Dyn` variant moves without re-allocating
+    /// when `out` is empty).
+    pub fn append_to_values(self, out: &mut Vec<Value>) {
+        match self {
+            ColumnBatch::I64(c) => out.extend(c.into_iter().map(Value::I64)),
+            ColumnBatch::F64(c) => out.extend(c.into_iter().map(Value::F64)),
+            ColumnBatch::Bool(c) => out.extend(c.into_iter().map(Value::Bool)),
+            ColumnBatch::PairII { k, v } => out.extend(
+                k.into_iter().zip(v).map(|(a, b)| Value::pair(Value::I64(a), Value::I64(b))),
+            ),
+            ColumnBatch::PairIF { k, v } => out.extend(
+                k.into_iter().zip(v).map(|(a, b)| Value::pair(Value::I64(a), Value::F64(b))),
+            ),
+            ColumnBatch::Dyn(mut c) => {
+                if out.is_empty() {
+                    // Zero-copy at the typed/dynamic boundary.
+                    std::mem::swap(out, &mut c);
+                } else {
+                    out.append(&mut c);
+                }
+            }
+        }
+    }
+
+    /// Encode to a fresh dynamic vector (consumes the batch).
+    pub fn into_values(self) -> Vec<Value> {
+        let mut out = Vec::new();
+        self.append_to_values(&mut out);
+        out
+    }
+
+    /// Append the partitioning-key hash of every element to `out`, in
+    /// element order — bit-identical to [`Value::key_hash`] on the
+    /// encoded form, so the engine's scatter can route whole columns
+    /// through its existing shared hash buffer.
+    pub fn key_hashes_into(&self, out: &mut Vec<u64>) {
+        match self {
+            ColumnBatch::I64(c) => out.extend(c.iter().map(|&x| i64_key_hash(x))),
+            ColumnBatch::F64(c) => out.extend(c.iter().map(|&x| f64_key_hash(x))),
+            ColumnBatch::Bool(c) => {
+                out.extend(c.iter().map(|&b| Value::Bool(b).key_hash()))
+            }
+            ColumnBatch::PairII { k, .. } | ColumnBatch::PairIF { k, .. } => {
+                out.extend(k.iter().map(|&x| i64_key_hash(x)))
+            }
+            ColumnBatch::Dyn(c) => out.extend(c.iter().map(Value::key_hash)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ii(k: i64, v: i64) -> Value {
+        Value::pair(Value::I64(k), Value::I64(v))
+    }
+
+    #[test]
+    fn verified_decode_roundtrips() {
+        let vs: Vec<Value> = (0..5).map(Value::I64).collect();
+        let col = ColumnBatch::from_values(&vs, &ElemType::I64).unwrap();
+        assert_eq!(col, ColumnBatch::I64(vec![0, 1, 2, 3, 4]));
+        assert_eq!(col.len(), 5);
+        assert_eq!(col.into_values(), vs);
+
+        let pairs: Vec<Value> = (0..3).map(|x| ii(x % 2, x)).collect();
+        let t = ElemType::Pair(Box::new(ElemType::I64), Box::new(ElemType::I64));
+        let col = ColumnBatch::from_values(&pairs, &t).unwrap();
+        assert_eq!(col.into_values(), pairs);
+
+        let fs = vec![Value::F64(1.5), Value::F64(f64::NAN)];
+        let col = ColumnBatch::from_values(&fs, &ElemType::F64).unwrap();
+        assert_eq!(col.len(), 2);
+        // NaN round-trips through the column (total-order equality).
+        assert_eq!(col.into_values(), fs);
+    }
+
+    #[test]
+    fn decode_rejects_shape_mismatch() {
+        let vs = vec![Value::I64(1), Value::F64(2.0)];
+        assert!(ColumnBatch::from_values(&vs, &ElemType::I64).is_none());
+        let t = ElemType::Pair(Box::new(ElemType::I64), Box::new(ElemType::I64));
+        assert!(ColumnBatch::from_values(&[ii(1, 2), Value::I64(3)], &t).is_none());
+        assert!(ColumnBatch::from_values(
+            &[Value::pair(Value::I64(1), Value::F64(0.5))],
+            &t
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn unsupported_types_fall_back_to_dyn() {
+        assert!(!ColumnBatch::supports(&ElemType::Str));
+        assert!(!ColumnBatch::supports(&ElemType::Dyn));
+        assert!(ColumnBatch::supports(&ElemType::Pair(
+            Box::new(ElemType::I64),
+            Box::new(ElemType::F64)
+        )));
+        let vs = vec![Value::str("a"), Value::str("b")];
+        let col = ColumnBatch::from_values(&vs, &ElemType::Str).unwrap();
+        assert!(matches!(col, ColumnBatch::Dyn(_)));
+        assert_eq!(col.into_values(), vs);
+        assert!(ColumnBatch::empty_for(&ElemType::I64).is_empty());
+    }
+
+    #[test]
+    fn key_hashes_match_dynamic_key_hash() {
+        let pairs: Vec<Value> = (0..7).map(|x| ii(x % 3, x * 10)).collect();
+        let t = ElemType::Pair(Box::new(ElemType::I64), Box::new(ElemType::I64));
+        let col = ColumnBatch::from_values(&pairs, &t).unwrap();
+        let mut got = Vec::new();
+        col.key_hashes_into(&mut got);
+        let want: Vec<u64> = pairs.iter().map(Value::key_hash).collect();
+        assert_eq!(got, want);
+
+        let scalars: Vec<Value> = (-3..3).map(Value::I64).collect();
+        let col = ColumnBatch::from_values(&scalars, &ElemType::I64).unwrap();
+        let mut got = Vec::new();
+        col.key_hashes_into(&mut got);
+        assert_eq!(got, scalars.iter().map(Value::key_hash).collect::<Vec<_>>());
+
+        let bools = vec![Value::Bool(true), Value::Bool(false)];
+        let col = ColumnBatch::from_values(&bools, &ElemType::Bool).unwrap();
+        let mut got = Vec::new();
+        col.key_hashes_into(&mut got);
+        assert_eq!(got, bools.iter().map(Value::key_hash).collect::<Vec<_>>());
+    }
+}

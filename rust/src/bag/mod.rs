@@ -5,6 +5,10 @@
 //! instances; this materialized form is used by sources, sinks, the
 //! single-threaded baseline, tests, and the tensor bridge.
 
+pub mod column;
+
+pub use column::ColumnBatch;
+
 use crate::value::Value;
 use rustc_hash::FxHashMap;
 

@@ -7,6 +7,12 @@
 //! Programs are built with the Rust builder frontend (native-closure
 //! UDFs), so the numbers measure the data plane — per-element dispatch,
 //! cloning, routing — rather than LabyLang expression interpretation.
+//! The exception is the `typed_kernels` A/B series, which uses parsed
+//! (expr-carrying) UDFs on purpose: those are the only UDFs the
+//! `opt::types` inference can compile into monomorphic columnar kernels,
+//! so the series pits the typed columnar plane (`--columnar always`)
+//! against the dynamic `Value` path (`--columnar never`) on the same
+//! programs a LabyLang user would write.
 //!
 //! An `iter_cost` section charts per-iteration marginal cost for
 //! loop-carried workloads under `opt::delta` vs full recompute:
@@ -105,6 +111,115 @@ fn reduce_by_key_program() -> Program {
     let nb = b.lift_scalar(n);
     b.collect(nb, "n");
     b.finish()
+}
+
+/// Parse a LabyLang lambda into an expr-carrying UDF — the form
+/// `opt::types::compile_udf1` can monomorphize. Builder native closures
+/// deliberately carry no expr, so they can never take the typed path.
+fn parsed_udf1(src: &str) -> crate::frontend::Udf1 {
+    use crate::frontend::{ast, interp_expr, lexer::lex, parser};
+    let ast = parser::parse(&lex(&format!("x = {src};")).unwrap()).unwrap();
+    match &ast.stmts[0] {
+        ast::Stmt::Assign(_, ast::Expr::Lambda(ps, body)) => {
+            interp_expr::compile_udf1(ps.clone(), (**body).clone(), "benchλ".into()).unwrap()
+        }
+        other => panic!("not a lambda: {other:?}"),
+    }
+}
+
+fn parsed_udf2(src: &str) -> crate::frontend::Udf2 {
+    use crate::frontend::{ast, interp_expr, lexer::lex, parser};
+    let ast = parser::parse(&lex(&format!("x = {src};")).unwrap()).unwrap();
+    match &ast.stmts[0] {
+        ast::Stmt::Assign(_, ast::Expr::Lambda(ps, body)) => {
+            interp_expr::compile_udf2(ps.clone(), (**body).clone(), "benchλ".into()).unwrap()
+        }
+        other => panic!("not a lambda: {other:?}"),
+    }
+}
+
+fn typed_map_program() -> Program {
+    let mut b = ProgramBuilder::new();
+    let v = b.named_source("tp_data");
+    let m = b.map(v, parsed_udf1("|x| x * 3"));
+    let n = b.count(m);
+    let nb = b.lift_scalar(n);
+    b.collect(nb, "n");
+    b.finish()
+}
+
+fn typed_fused_chain_program() -> Program {
+    let mut b = ProgramBuilder::new();
+    let v = b.named_source("tp_data");
+    let m1 = b.map(v, parsed_udf1("|x| x + 1"));
+    let f = b.filter(m1, parsed_udf1("|x| x % 2 == 0"));
+    let m2 = b.map(f, parsed_udf1("|x| x * 10"));
+    let n = b.count(m2);
+    let nb = b.lift_scalar(n);
+    b.collect(nb, "n");
+    b.finish()
+}
+
+fn typed_reduce_by_key_program() -> Program {
+    let mut b = ProgramBuilder::new();
+    let v = b.named_source("tp_data");
+    let k = b.map(v, parsed_udf1("|x| pair(x % 64, x)"));
+    let r = b.reduce_by_key(k, parsed_udf2("|a, b| a + b"));
+    let n = b.count(r);
+    let nb = b.lift_scalar(n);
+    b.collect(nb, "n");
+    b.finish()
+}
+
+/// One typed-vs-dynamic A/B point (`opt.columnar` forced on vs off).
+struct TypedPoint {
+    workload: &'static str,
+    /// Edges with a concrete inferred `ElemType` in the columnar plan —
+    /// asserted nonzero so the A leg can't silently measure the B path.
+    typed_edges: usize,
+    columnar_ns: u128,
+    dynamic_ns: u128,
+    /// dynamic / columnar median — the typed-kernel speedup.
+    speedup: f64,
+}
+
+/// Columnar vs dynamic on expr-carrying map / fused-chain / reduceByKey:
+/// the same compiled plan shape, single worker, with only the
+/// `opt.columnar` gate flipped. The acceptance target for the typed data
+/// plane is >= 1.5x on the fused numeric chain.
+fn typed_kernels_bench(bench: &Bencher, reg: &Arc<Registry>) -> Vec<TypedPoint> {
+    use crate::opt::ColumnarGate;
+    let workloads: [(&'static str, Program); 3] = [
+        ("map", typed_map_program()),
+        ("fused-chain", typed_fused_chain_program()),
+        ("reduceByKey", typed_reduce_by_key_program()),
+    ];
+    let mut out = Vec::new();
+    for (name, program) in &workloads {
+        let leg = |gate: ColumnarGate, tag: &str| -> (u128, usize) {
+            let ocfg = OptConfig { columnar: gate, ..Default::default() };
+            let (graph, report) = crate::compile_with_registry(program, &ocfg, reg)
+                .unwrap_or_else(|e| panic!("typed {name}: compile failed: {e}"));
+            let cfg = ExecConfig { workers: 1, registry: reg.clone(), ..Default::default() };
+            let m = bench.run(format!("typed {name} w=1 ({tag})"), || {
+                let res = run(&graph, &cfg).unwrap_or_else(|e| panic!("typed {name}: {e}"));
+                assert!(!res.collected("n").is_empty(), "typed {name}: sink produced nothing");
+            });
+            (m.median().as_nanos().max(1), report.typed_edges)
+        };
+        let (columnar_ns, typed_edges) = leg(ColumnarGate::Always, "columnar");
+        let (dynamic_ns, _) = leg(ColumnarGate::Never, "dynamic");
+        assert!(
+            typed_edges > 0,
+            "typed {name}: inference typed no edges — the columnar leg would measure the dynamic path"
+        );
+        let speedup = dynamic_ns as f64 / columnar_ns as f64;
+        eprintln!(
+            "typed-kernels {name} w=1: columnar {columnar_ns}ns vs dynamic {dynamic_ns}ns — {speedup:.2}x ({typed_edges} typed edges)"
+        );
+        out.push(TypedPoint { workload: *name, typed_edges, columnar_ns, dynamic_ns, speedup });
+    }
+    out
 }
 
 fn measure(
@@ -296,6 +411,7 @@ fn to_json(
     trace_gate_overhead: Option<f64>,
     checkpoint_gate_overhead: Option<f64>,
     checkpoint_on_overhead: Option<f64>,
+    typed_kernels: &[TypedPoint],
     iter_cost: &[IterCost],
 ) -> String {
     let mut s = String::new();
@@ -324,6 +440,20 @@ fn to_json(
         // tracking + per-bag done reporting + snapshot cuts) — the
         // price of crash-safety when switched ON, not a budget.
         let _ = writeln!(s, "  \"checkpoint_on_overhead\": {x:.4},");
+    }
+    if !typed_kernels.is_empty() {
+        // Typed columnar kernels vs the dynamic Value path on
+        // expr-carrying UDFs (`opt.columnar` always vs never), w=1.
+        s.push_str("  \"typed_kernels\": [\n");
+        for (i, t) in typed_kernels.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"workload\": \"{}\", \"typed_edges\": {}, \"columnar_ns\": {}, \"dynamic_ns\": {}, \"speedup\": {:.3}}}",
+                t.workload, t.typed_edges, t.columnar_ns, t.dynamic_ns, t.speedup
+            );
+            s.push_str(if i + 1 < typed_kernels.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ],\n");
     }
     if !iter_cost.is_empty() {
         // Per-iteration marginal cost curves, delta vs full recompute
@@ -523,6 +653,10 @@ pub fn throughput_benchmark(smoke: bool) {
     // structural fallback).
     let iter_cost = iter_cost_bench(&bench, smoke);
 
+    // Typed columnar vs dynamic A/B on the expr-carrying variants of the
+    // hot chains (the `opt::types` acceptance series).
+    let typed_kernels = typed_kernels_bench(&bench, &reg);
+
     let json = to_json(
         elements,
         &points,
@@ -530,6 +664,7 @@ pub fn throughput_benchmark(smoke: bool) {
         Some(trace_gate_overhead),
         Some(checkpoint_gate_overhead),
         Some(checkpoint_on_overhead),
+        &typed_kernels,
         &iter_cost,
     );
     let path = "BENCH_throughput.json";

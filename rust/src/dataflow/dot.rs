@@ -94,10 +94,15 @@ pub fn to_dot(g: &DataflowGraph) -> String {
     for n in &g.nodes {
         for inp in &n.inputs {
             let style = if inp.conditional { "dashed" } else { "solid" };
+            // Inferred element type of the edge (`opt::types`): `type=dyn`
+            // marks edges where inference gave up — the dynamic path.
             let _ = writeln!(
                 s,
-                "  n{} -> n{} [style={style}, label=\"{:?}\"];",
-                inp.src, n.id, inp.route
+                "  n{} -> n{} [style={style}, label=\"{:?}\\ntype={}\"];",
+                inp.src,
+                n.id,
+                inp.route,
+                g.elem_type(inp.src)
             );
         }
     }
@@ -169,6 +174,28 @@ mod tests {
         let dot = super::to_dot(&g);
         assert!(dot.contains("build=right"), "{dot}");
         crate::workload::registry::global().clear_prefix("dot_");
+    }
+
+    #[test]
+    fn edges_render_inferred_types() {
+        let g = crate::compile(
+            &parse_and_lower("a = bag(1, 2, 3); b = a.map(|x| x + 1); collect(b, \"b\");")
+                .unwrap(),
+        )
+        .unwrap();
+        let dot = super::to_dot(&g);
+        // The bag(1,2,3) source edge types as i64; every edge carries a
+        // type label (dyn where inference gave up).
+        assert!(dot.contains("type=i64"), "{dot}");
+        let g2 = crate::compile(
+            &parse_and_lower(
+                "a = bag(1, \"s\"); b = a.map(|x| x); collect(b, \"b\");",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let dot2 = super::to_dot(&g2);
+        assert!(dot2.contains("type=dyn"), "{dot2}");
     }
 
     #[test]

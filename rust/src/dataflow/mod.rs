@@ -9,6 +9,7 @@ use crate::cfg::Cfg;
 use crate::error::{Error, Result};
 use crate::frontend::{BlockId, Rhs, Terminator, VarId};
 use crate::ssa::SsaProgram;
+use crate::value::ElemType;
 use rustc_hash::FxHashMap;
 
 /// Index of a dataflow node.
@@ -140,6 +141,14 @@ pub struct Node {
     /// and consumed by the `opt::cost` cardinality model. `None` when the
     /// size is unknowable at compile time (e.g. `readFile`).
     pub size_hint: Option<usize>,
+    /// Known element type for source nodes (joined over a sample of a
+    /// `bag(...)` literal or registered dataset), filled by [`build`] and
+    /// consumed by the `opt::types` inference pass. Hints are advisory —
+    /// the columnar runtime re-verifies every batch it decodes — so a
+    /// sampled hint that misses a late heterogeneous element costs only
+    /// the fast path, never correctness. `None` when nothing is known
+    /// (e.g. `readFile` before reading, empty literals).
+    pub elem_hint: Option<ElemType>,
     /// For `Rhs::Join` nodes: which logical input the hash join should use
     /// as its build side (`None` / `Some(0)` = left, the §5.3 default;
     /// `Some(1)` = right). Set by the `opt::joinside` pass from the cost
@@ -171,9 +180,26 @@ pub struct DataflowGraph {
     /// `opt::optimize`); the engine copies them into the run's metrics so
     /// per-pass effects are visible next to runtime counters.
     pub opt_summary: Vec<(String, u64)>,
+    /// Inferred output element type per node (indexed by [`NodeId`]),
+    /// filled by the `opt::types` inference pass after the plan shape is
+    /// final. Empty until inference runs; [`DataflowGraph::elem_type`]
+    /// degrades to [`ElemType::Dyn`] in that case.
+    pub elem_types: Vec<ElemType>,
+    /// Columnar-plane gate copied from `OptConfig` by `opt::optimize`;
+    /// `ops::make_node` consults it (together with the inferred types)
+    /// when deciding whether to install typed kernels. Defaults to
+    /// `Never` so a graph that skipped the optimizer runs the dynamic
+    /// `Value` path exactly as before.
+    pub columnar: crate::opt::ColumnarGate,
 }
 
 impl DataflowGraph {
+    /// Inferred output element type of a node; [`ElemType::Dyn`] when the
+    /// `opt::types` pass has not run (or gave up on the node).
+    pub fn elem_type(&self, n: NodeId) -> ElemType {
+        self.elem_types.get(n).cloned().unwrap_or(ElemType::Dyn)
+    }
+
     /// Downstream consumers of a node: `(consumer, input index)`.
     pub fn consumers(&self, n: NodeId) -> Vec<(NodeId, usize)> {
         let mut out = Vec::new();
@@ -309,11 +335,16 @@ pub fn build_with(
             node_of_var.insert(instr.var, id);
             // Source size hints for the cost model: literal lengths are
             // exact; named sources resolve against the registry (benches
-            // register datasets before compiling), else unknown.
-            let size_hint = match &instr.rhs {
-                Rhs::BagLit(items) => Some(items.len()),
-                Rhs::NamedSource(name) => registry.get(name).map(|d| d.len()),
-                _ => None,
+            // register datasets before compiling), else unknown. Element
+            // types for `opt::types` come from the same data (a bounded
+            // sample — hints are runtime-verified, see `Node::elem_hint`).
+            let (size_hint, elem_hint) = match &instr.rhs {
+                Rhs::BagLit(items) => (Some(items.len()), sample_elem_type(items)),
+                Rhs::NamedSource(name) => match registry.get(name) {
+                    Some(d) => (Some(d.len()), sample_elem_type(&d)),
+                    None => (None, None),
+                },
+                _ => (None, None),
             };
             nodes.push(Node {
                 id,
@@ -327,6 +358,7 @@ pub fn build_with(
                 singleton: false,
                 hoisted_from: None,
                 size_hint,
+                elem_hint,
                 build_side: None,
                 delta: None,
             });
@@ -433,7 +465,23 @@ pub fn build_with(
         entry_chain,
         ssa_listing: ssa.listing(),
         opt_summary: Vec::new(),
+        elem_types: Vec::new(),
+        columnar: crate::opt::ColumnarGate::Never,
     })
+}
+
+/// Join the element types of a bounded sample of a source dataset. The
+/// cap keeps compile time flat for large registered datasets; a sample
+/// that misses a heterogeneous tail yields an optimistic hint, which the
+/// columnar runtime's verified decode demotes to the dynamic path at the
+/// first non-conforming batch.
+fn sample_elem_type(items: &[Value]) -> Option<ElemType> {
+    const SAMPLE: usize = 256;
+    items
+        .iter()
+        .take(SAMPLE)
+        .map(ElemType::of_value)
+        .reduce(|a, b| a.join(&b))
 }
 
 #[cfg(test)]

@@ -10,7 +10,8 @@ use crate::coord::{
 };
 use crate::dataflow::{NodeId, Route};
 use crate::frontend::Rhs;
-use crate::ops::{Transformation, VecCollector};
+use crate::bag::ColumnBatch;
+use crate::ops::{Collector, Transformation};
 use crate::value::Value;
 use rustc_hash::FxHashMap;
 use std::collections::VecDeque;
@@ -48,6 +49,39 @@ pub struct Env<'a> {
 }
 
 use std::sync::atomic::Ordering;
+
+/// Per-bag staging sink between the transformation and `route_staging`.
+/// Typed kernels deliver whole [`ColumnBatch`]es; the override derives
+/// the routing key hashes column-at-a-time *before* decoding to
+/// `Value`s, so hash-routed edges skip the per-`Value` hash walk.
+/// Invariant: `hashes` is either exactly aligned with `items`
+/// (`hashes[i] == items[i].key_hash()`) or empty — any dynamic emission
+/// invalidates it, and `route_staging` only consumes it when aligned.
+#[derive(Default)]
+struct StagingCollector {
+    items: Vec<Value>,
+    hashes: Vec<u64>,
+}
+
+impl Collector for StagingCollector {
+    fn emit(&mut self, v: Value) {
+        self.hashes.clear();
+        self.items.push(v);
+    }
+    fn emit_batch(&mut self, vs: &mut Vec<Value>) {
+        self.hashes.clear();
+        self.items.append(vs);
+    }
+    fn emit_columns(&mut self, cols: ColumnBatch) {
+        if self.hashes.len() == self.items.len() {
+            cols.key_hashes_into(&mut self.hashes);
+        } else {
+            self.hashes.clear();
+        }
+        let mut vs = cols.into_values();
+        self.items.append(&mut vs);
+    }
+}
 
 struct InBuf {
     items: Vec<Value>,
@@ -89,7 +123,7 @@ pub struct Instance {
     prev_req: Vec<Option<u32>>,
     retained: FxHashMap<u32, Retained>,
     send_bufs: Vec<Vec<Vec<Value>>>,
-    staging: VecCollector,
+    staging: StagingCollector,
     /// Per-batch key hashes, computed once per emission batch and shared
     /// by every hash-routed out edge (reused across batches).
     hash_buf: Vec<u64>,
@@ -122,6 +156,7 @@ impl Instance {
         inst: usize,
         io_dir: &std::path::Path,
         registry: std::sync::Arc<crate::workload::registry::Registry>,
+        columnar: bool,
     ) -> Instance {
         let n = &plan.graph.nodes[node];
         let ctx = crate::ops::MakeCtx {
@@ -129,6 +164,9 @@ impl Instance {
             insts: plan.num_insts[node],
             registry,
             io_dir: io_dir.to_path_buf(),
+            in_types: n.inputs.iter().map(|i| plan.edge_types[i.src].clone()).collect(),
+            out_type: plan.edge_types[node].clone(),
+            columnar,
         };
         let transform = crate::ops::make_node(n, plan.join_build[node], &ctx)
             .unwrap_or_else(|e| panic!("instantiating {}: {e}", n.name));
@@ -147,7 +185,7 @@ impl Instance {
             prev_req: vec![None; n_inputs],
             retained: FxHashMap::default(),
             send_bufs,
-            staging: VecCollector::default(),
+            staging: StagingCollector::default(),
             hash_buf: Vec::new(),
             done_sent: false,
             is_phi: matches!(n.op, Rhs::Phi(_)),
@@ -545,6 +583,14 @@ impl Instance {
             }
         }
 
+        // Rows a batch kernel consumed straight from the borrowed input
+        // (fused stage-0 borrow / columnar pipelines) — the move-not-clone
+        // evidence the batch-path tests pin.
+        let borrowed = self.transform.take_borrowed_rows();
+        if borrowed != 0 {
+            env.counters.fused_borrowed_rows.fetch_add(borrowed, Ordering::Relaxed);
+        }
+
         // Fold the solution-set (or retained-build) size into the gauge:
         // signed diff vs the last report, so concurrent instances of one
         // node sum to the node's total current size.
@@ -658,6 +704,10 @@ impl Instance {
             return;
         }
         let mut items = std::mem::take(&mut self.staging.items);
+        // Column-derived key hashes, valid only when they cover the whole
+        // staged batch (see `StagingCollector`).
+        let mut staged_hashes = std::mem::take(&mut self.staging.hashes);
+        let precomputed = staged_hashes.len() == items.len();
         env.node_counters[self.node].rows.fetch_add(items.len() as u64, Ordering::Relaxed);
         if let Some(cap) = self.capture.as_mut() {
             cap.extend(items.iter().cloned());
@@ -708,8 +758,16 @@ impl Instance {
         let mut hashes = std::mem::take(&mut self.hash_buf);
         if needs_hash {
             hashes.clear();
-            hashes.extend(items.iter().map(|v| v.key_hash()));
+            if precomputed {
+                // Typed kernels already derived the hashes column-at-a-time.
+                env.counters.columnar_hash_reuse.fetch_add(1, Ordering::Relaxed);
+                hashes.append(&mut staged_hashes);
+            } else {
+                hashes.extend(items.iter().map(|v| v.key_hash()));
+            }
         }
+        staged_hashes.clear();
+        self.staging.hashes = staged_hashes;
 
         // Clone-scatter into every unconditional consumer but the last;
         // the last takes the batch by move when no retained copy needs it.

@@ -88,6 +88,13 @@ pub struct ExecPlan {
     /// Named-source names the shareable closure reads (sorted, deduped) —
     /// the inputs a preamble binding signature must cover.
     pub shareable_sources: Vec<String>,
+    /// Per node: inferred output element type (`opt::types::infer`) —
+    /// the type every out-edge of the node carries. `Dyn` when the
+    /// optimizer did not run or inference gave up. `Instance::new` reads
+    /// this (together with `graph.columnar`) to install monomorphic
+    /// columnar kernels; a wrong entry costs the fast path, never
+    /// correctness (kernels re-verify batch layouts at runtime).
+    pub edge_types: Vec<crate::value::ElemType>,
 }
 
 impl ExecPlan {
@@ -172,6 +179,7 @@ impl ExecPlan {
                 _ => 0,
             })
             .collect();
+        let edge_types = (0..graph.nodes.len()).map(|i| graph.elem_type(i)).collect();
         ExecPlan {
             graph,
             workers,
@@ -184,6 +192,7 @@ impl ExecPlan {
             join_build,
             shareable,
             shareable_sources,
+            edge_types,
         }
     }
 

@@ -41,6 +41,13 @@ pub struct EngineCounters {
     /// Emission batches moved into a send buffer without cloning (the
     /// single-consumer scatter fast path).
     pub scatter_moves: Arc<AtomicU64>,
+    /// Rows batch kernels consumed straight from the borrowed input
+    /// slice — no upfront clone (fused stage-0 borrow and the typed
+    /// columnar pipelines).
+    pub fused_borrowed_rows: Arc<AtomicU64>,
+    /// Emission batches whose routing key hashes were derived
+    /// column-at-a-time by a typed kernel instead of per-`Value`.
+    pub columnar_hash_reuse: Arc<AtomicU64>,
 }
 
 impl EngineCounters {
@@ -59,6 +66,8 @@ impl EngineCounters {
             preamble_replays: m.counter("coord.preamble_replays"),
             batch_pushes: m.counter("exec.batch_pushes"),
             scatter_moves: m.counter("exec.scatter_moves"),
+            fused_borrowed_rows: m.counter("exec.fused_borrowed_rows"),
+            columnar_hash_reuse: m.counter("exec.columnar_hash_reuse"),
         }
     }
 }
@@ -174,6 +183,9 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
     let mut spans = shared.trace.as_ref().map(|t| t.local(shared.trace_lanes[w]));
     let mut path = ExecPath::new(plan.graph.cfg.num_blocks());
     // node id -> hosted instance (if any).
+    // Resolve the graph's columnar gate against the engine's batch size
+    // once: it decides whether `Instance::new` installs typed kernels.
+    let columnar = plan.graph.columnar.enabled(shared.batch);
     let mut instances: Vec<Option<Instance>> = plan
         .graph
         .nodes
@@ -181,7 +193,14 @@ pub fn run_worker(w: usize, shared: Arc<WorkerShared>, rx: Receiver<WorkerMsg>) 
         .map(|n| {
             let insts = plan.num_insts[n.id];
             if w < insts {
-                Some(Instance::new(&plan, n.id, w, &shared.io_dir, shared.registry.clone()))
+                Some(Instance::new(
+                    &plan,
+                    n.id,
+                    w,
+                    &shared.io_dir,
+                    shared.registry.clone(),
+                    columnar,
+                ))
             } else {
                 None
             }

@@ -179,17 +179,22 @@ pub fn compile_udf1(params: Vec<String>, body: Expr, name: String) -> Result<sup
     .with_expr(expr_params, expr_body))
 }
 
-/// Compile a 2-parameter lambda into a [`super::Udf2`].
+/// Compile a 2-parameter lambda into a [`super::Udf2`]. As with
+/// [`compile_udf1`], the source expression rides along (`Udf2::expr`) so
+/// `opt::types` can compile monomorphic columnar combiners from it.
 pub fn compile_udf2(params: Vec<String>, body: Expr, name: String) -> Result<super::Udf2> {
     if params.len() != 2 {
         return Err(Error::Type(format!("expected 2-parameter lambda, got {}", params.len())));
     }
     check_closed(&body, &params)?;
+    let expr_params = params.clone();
+    let expr_body = body.clone();
     let body = Arc::new(body);
     let params = Arc::new(params);
     Ok(super::Udf2::new(name, move |a: &Value, b: &Value| {
         eval(&body, &params, &[a.clone(), b.clone()])
-    }))
+    })
+    .with_expr(expr_params, expr_body))
 }
 
 #[cfg(test)]

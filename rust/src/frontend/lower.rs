@@ -177,10 +177,9 @@ impl Lowerer {
         if defined_here {
             v
         } else {
-            self.emit_tmp(
-                Rhs::ScalarUn { input: v, udf: Udf1::new("id", |x: &Value| x.clone()) },
-                Ty::Scalar,
-            )
+            let udf = Udf1::new("id", |x: &Value| x.clone())
+                .with_expr(vec!["x".into()], Expr::Var("x".into()));
+            self.emit_tmp(Rhs::ScalarUn { input: v, udf }, Ty::Scalar)
         }
     }
 
@@ -220,7 +219,10 @@ impl Lowerer {
                         other => panic!("neg on {other:?}"),
                     },
                     UnOp::Not => Value::Bool(!v.as_bool()),
-                });
+                })
+                // Expression metadata so `opt::types` can type the lifted
+                // scalar op (loop counters, branch conditions).
+                .with_expr(vec!["x".into()], Expr::Un(op, Box::new(Expr::Var("x".into()))));
                 Ok((self.emit_tmp(Rhs::ScalarUn { input: xv, udf }, Ty::Scalar), Ty::Scalar))
             }
             Expr::Bin(op, l, r) => {
@@ -234,7 +236,11 @@ impl Lowerer {
                 let op = *op;
                 let udf = Udf2::new(format!("{op:?}"), move |a: &Value, b: &Value| {
                     interp_expr::bin(op, a, b)
-                });
+                })
+                .with_expr(
+                    vec!["a".into(), "b".into()],
+                    Expr::Bin(op, Box::new(Expr::Var("a".into())), Box::new(Expr::Var("b".into()))),
+                );
                 Ok((
                     self.emit_tmp(Rhs::ScalarBin { left: lv, right: rv, udf }, Ty::Scalar),
                     Ty::Scalar,
@@ -408,18 +414,25 @@ impl Lowerer {
             (b, 1) => {
                 let x = self.expect_scalar(&args[0], b)?;
                 let bname = b.to_string();
+                let ename = bname.clone();
                 let udf = Udf1::new(bname.clone(), move |v: &Value| {
                     interp_expr::builtin(&bname, std::slice::from_ref(v))
-                });
+                })
+                .with_expr(vec!["x".into()], Expr::Call(ename, vec![Expr::Var("x".into())]));
                 Ok((self.emit_tmp(Rhs::ScalarUn { input: x, udf }, Ty::Scalar), Ty::Scalar))
             }
             (b, 2) => {
                 let x = self.expect_scalar(&args[0], b)?;
                 let y = self.expect_scalar(&args[1], b)?;
                 let bname = b.to_string();
+                let ename = bname.clone();
                 let udf = Udf2::new(bname.clone(), move |a: &Value, v: &Value| {
                     interp_expr::builtin(&bname, &[a.clone(), v.clone()])
-                });
+                })
+                .with_expr(
+                    vec!["a".into(), "b".into()],
+                    Expr::Call(ename, vec![Expr::Var("a".into()), Expr::Var("b".into())]),
+                );
                 Ok((
                     self.emit_tmp(Rhs::ScalarBin { left: x, right: y, udf }, Ty::Scalar),
                     Ty::Scalar,

@@ -47,6 +47,11 @@ pub struct Udf2 {
     pub name: Arc<str>,
     /// The function itself.
     pub f: Arc<dyn Fn(&Value, &Value) -> Value + Send + Sync>,
+    /// The LabyLang lambda this closure was compiled from, when it came
+    /// from the parser (`(params, body)`). Rust-builder UDFs are opaque
+    /// closures and carry `None`. `opt::types` compiles this into
+    /// monomorphic columnar combiners; everything else ignores it.
+    pub expr: Option<Arc<(Vec<String>, ast::Expr)>>,
 }
 
 /// A unary function producing multiple elements (flatMap UDFs).
@@ -80,7 +85,13 @@ impl Udf2 {
         name: impl Into<String>,
         f: impl Fn(&Value, &Value) -> Value + Send + Sync + 'static,
     ) -> Udf2 {
-        Udf2 { name: Arc::from(name.into().as_str()), f: Arc::new(f) }
+        Udf2 { name: Arc::from(name.into().as_str()), f: Arc::new(f), expr: None }
+    }
+    /// Attach the lambda expression this UDF was compiled from (parser
+    /// path only; enables typed-kernel compilation, see `opt::types`).
+    pub fn with_expr(mut self, params: Vec<String>, body: ast::Expr) -> Udf2 {
+        self.expr = Some(Arc::new((params, body)));
+        self
     }
     /// Apply.
     pub fn call(&self, a: &Value, b: &Value) -> Value {
@@ -589,7 +600,20 @@ fn hash_udf1(u: &Udf1, h: &mut impl Hasher) {
 
 fn hash_udf2(u: &Udf2, h: &mut impl Hasher) {
     u.name.hash(h);
-    (Arc::as_ptr(&u.f).cast::<()>() as usize).hash(h);
+    match &u.expr {
+        // Same discriminated scheme as `hash_udf1`: parser-built
+        // combiners hash structurally so re-parsed programs share a
+        // cache entry; opaque closures hash by identity.
+        Some(e) => {
+            1u8.hash(h);
+            e.0.hash(h);
+            format!("{:?}", e.1).hash(h);
+        }
+        None => {
+            0u8.hash(h);
+            (Arc::as_ptr(&u.f).cast::<()>() as usize).hash(h);
+        }
+    }
 }
 
 fn hash_udfn(u: &UdfN, h: &mut impl Hasher) {

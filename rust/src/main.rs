@@ -4,8 +4,8 @@
 //! labyrinth run <program.laby> [--workers N] [--mode pipelined|barrier]
 //!               [--executor labyrinth|spark|flink|single] [--no-reuse]
 //!               [--no-opt] [--no-hoist] [--no-fuse] [--no-dce]
-//!               [--no-pushdown] [--no-join-sides] [--no-delta]
-//!               [--speculate auto|always|never]
+//!               [--no-pushdown] [--no-join-sides] [--no-delta] [--no-columnar]
+//!               [--speculate auto|always|never] [--columnar auto|always|never]
 //!               [--explain] [--io-dir DIR] [--config FILE] [--sched] [--metrics]
 //! labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]
 //! labyrinth trace <program.laby> [--workers N] [--mode pipelined|barrier]
@@ -49,6 +49,8 @@ const VALUE_OPTS: &[&str] = &[
     "--visits", "--pages", "--out", "--batch", "--scale",
     // Speculative-hoist policy (config key opt.speculate): auto|always|never.
     "--speculate",
+    // Typed columnar data plane (config key opt.columnar): auto|always|never.
+    "--columnar",
     // serve / bench-serve: job slots, request count, per-request scalar
     // parameters (repeatable `--param name=value`).
     "--slots", "--requests", "--param",
@@ -61,7 +63,7 @@ const FLAG_OPTS: &[&str] = &[
     // Optimizer toggles (config keys opt.hoist / opt.fuse / opt.dce /
     // opt.pushdown / opt.join_sides).
     "--no-opt", "--no-hoist", "--no-fuse", "--no-dce", "--no-pushdown",
-    "--no-join-sides", "--no-delta", "--explain",
+    "--no-join-sides", "--no-delta", "--no-columnar", "--explain",
     // bench-serve CI mode; serve adaptive-reoptimization and cross-job
     // preamble-sharing toggles.
     "--smoke", "--no-adaptive", "--no-share-preambles",
@@ -164,8 +166,8 @@ fn print_usage() {
          \x20 labyrinth run <program.laby> [--workers N] [--mode pipelined|barrier]\n\
          \x20            [--executor labyrinth|spark|flink|single] [--no-reuse]\n\
          \x20            [--no-opt] [--no-hoist] [--no-fuse] [--no-dce]\n\
-         \x20            [--no-pushdown] [--no-join-sides] [--no-delta]\n\
-         \x20            [--speculate auto|always|never]\n\
+         \x20            [--no-pushdown] [--no-join-sides] [--no-delta] [--no-columnar]\n\
+         \x20            [--speculate auto|always|never] [--columnar auto|always|never]\n\
          \x20            [--explain] [--io-dir DIR] [--config FILE] [--sched] [--metrics]\n\
          \x20            [--checkpoint-every K] [--faults SEED]\n\
          \x20 labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]\n\
@@ -183,9 +185,10 @@ fn print_usage() {
 
 /// Optimizer configuration: config file `opt.*` keys overridden by CLI
 /// flags (`--no-opt` disables every pass; `--no-hoist` / `--no-fuse` /
-/// `--no-dce` / `--no-pushdown` / `--no-join-sides` / `--no-delta`
-/// disable one each;
-/// `--speculate auto|always|never` sets the hoist speculation policy).
+/// `--no-dce` / `--no-pushdown` / `--no-join-sides` / `--no-delta` /
+/// `--no-columnar` disable one each;
+/// `--speculate auto|always|never` sets the hoist speculation policy and
+/// `--columnar auto|always|never` gates the typed columnar data plane).
 fn opt_config(opts: &Opts, cfg: &Config) -> Result<labyrinth::opt::OptConfig> {
     let mut ocfg = labyrinth::opt::OptConfig::from_config(cfg)?;
     if opts.has("--no-opt") {
@@ -208,6 +211,12 @@ fn opt_config(opts: &Opts, cfg: &Config) -> Result<labyrinth::opt::OptConfig> {
     }
     if opts.has("--no-delta") {
         ocfg.delta = labyrinth::opt::DeltaGate::Never;
+    }
+    if let Some(s) = opts.get("--columnar") {
+        ocfg.columnar = labyrinth::opt::ColumnarGate::parse(s)?;
+    }
+    if opts.has("--no-columnar") {
+        ocfg.columnar = labyrinth::opt::ColumnarGate::Never;
     }
     if let Some(s) = opts.get("--speculate") {
         ocfg.speculate = labyrinth::opt::Speculate::parse(s)?;

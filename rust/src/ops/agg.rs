@@ -5,7 +5,19 @@
 use super::state::{KeyedAcc, SetStore, StateSnapshot};
 use super::{Collector, Transformation};
 use crate::frontend::Udf2;
+use crate::opt::types::TypedUdf2;
 use crate::value::Value;
+
+/// Combine two accumulator values through the compiled monomorphic
+/// combiner when one is installed and the runtime variants match, else
+/// through the dynamic UDF. The typed path skips the `Arc<dyn Fn>`
+/// dispatch and the interpreter's environment bookkeeping per merge.
+fn combine(typed: Option<&TypedUdf2>, udf: &Udf2, a: &Value, b: &Value) -> Value {
+    match typed {
+        Some(t) => t.combine(a, b).unwrap_or_else(|| udf.call(a, b)),
+        None => udf.call(a, b),
+    }
+}
 
 /// `reduceByKey`: combine `Pair(k, v)` values per key; emits
 /// `Pair(k, acc)` at close (the grouped-aggregation example from §6.1).
@@ -17,6 +29,10 @@ use crate::value::Value;
 /// engine is built on.
 pub struct ReduceByKeyT {
     udf: Udf2,
+    /// Compiled monomorphic combiner ([`crate::opt::types::compile_udf2`])
+    /// for the inferred value type; per-merge variant checks fall back to
+    /// `udf` so a wrong inference can only cost the fast path.
+    typed: Option<TypedUdf2>,
     acc: KeyedAcc,
     delta: bool,
     /// Per-close emission staging buffer.
@@ -26,13 +42,19 @@ pub struct ReduceByKeyT {
 impl ReduceByKeyT {
     /// Create from a combiner (full recompute per bag).
     pub fn new(udf: Udf2) -> ReduceByKeyT {
-        ReduceByKeyT { udf, acc: KeyedAcc::new(), delta: false, buf: Vec::new() }
+        ReduceByKeyT::with_typed(udf, None, false)
     }
 
     /// Create in delta mode: the accumulator persists across bags and
     /// only changed keys are emitted.
     pub fn new_delta(udf: Udf2) -> ReduceByKeyT {
-        ReduceByKeyT { udf, acc: KeyedAcc::new(), delta: true, buf: Vec::new() }
+        ReduceByKeyT::with_typed(udf, None, true)
+    }
+
+    /// Create with an optional compiled combiner (engine path, gated by
+    /// `opt.columnar`); `delta` selects the persistent-accumulator mode.
+    pub fn with_typed(udf: Udf2, typed: Option<TypedUdf2>, delta: bool) -> ReduceByKeyT {
+        ReduceByKeyT { udf, typed, acc: KeyedAcc::new(), delta, buf: Vec::new() }
     }
 }
 
@@ -42,11 +64,11 @@ impl ReduceByKeyT {
             Value::Pair(p) => (p.0.clone(), p.1.clone()),
             other => panic!("reduceByKey expects pairs, got {other:?}"),
         };
-        let udf = &self.udf;
+        let (udf, typed) = (&self.udf, self.typed.as_ref());
         if self.delta {
-            self.acc.merge_tracked(k, pv, |a, b| udf.call(a, b));
+            self.acc.merge_tracked(k, pv, |a, b| combine(typed, udf, a, b));
         } else {
-            self.acc.merge(k, pv, |a, b| udf.call(a, b));
+            self.acc.merge(k, pv, |a, b| combine(typed, udf, a, b));
         }
     }
 }
@@ -95,13 +117,22 @@ impl Transformation for ReduceByKeyT {
 /// loudly rather than fabricate a value.
 pub struct ReduceT {
     udf: Udf2,
+    /// Compiled monomorphic combiner; same contract as
+    /// [`ReduceByKeyT::typed`].
+    typed: Option<TypedUdf2>,
     acc: Option<Value>,
 }
 
 impl ReduceT {
     /// Create from a combiner.
     pub fn new(udf: Udf2) -> ReduceT {
-        ReduceT { udf, acc: None }
+        ReduceT { udf, typed: None, acc: None }
+    }
+
+    /// Create with an optional compiled combiner (engine path, gated by
+    /// `opt.columnar`).
+    pub fn with_typed(udf: Udf2, typed: Option<TypedUdf2>) -> ReduceT {
+        ReduceT { udf, typed, acc: None }
     }
 }
 
@@ -111,7 +142,7 @@ impl Transformation for ReduceT {
     }
     fn push_in_element(&mut self, _input: usize, v: &Value, _out: &mut dyn Collector) {
         self.acc = Some(match self.acc.take() {
-            Some(a) => self.udf.call(&a, v),
+            Some(a) => combine(self.typed.as_ref(), &self.udf, &a, v),
             None => v.clone(),
         });
     }
@@ -119,7 +150,7 @@ impl Transformation for ReduceT {
         let mut acc = self.acc.take();
         for v in vs {
             acc = Some(match acc {
-                Some(a) => self.udf.call(&a, v),
+                Some(a) => combine(self.typed.as_ref(), &self.udf, &a, v),
                 None => v.clone(),
             });
         }
@@ -133,7 +164,9 @@ impl Transformation for ReduceT {
     }
 }
 
-/// `count`: number of elements, as a one-element `I64` bag.
+/// `count`: number of elements, as a one-element `I64` bag. Already the
+/// ideal columnar citizen: the batch kernel reads only lengths, so the
+/// typed data plane has nothing to add (no decode, no per-element work).
 pub struct CountT {
     n: i64,
 }
@@ -334,6 +367,52 @@ mod tests {
         r.restore_state(&snap);
         let out3 = run_once(&mut r, &[&[Value::I64(3), Value::I64(4)]]);
         assert_eq!(out3, vec![Value::I64(4)]);
+    }
+
+    fn parsed_udf2(src: &str) -> Udf2 {
+        use crate::frontend::{ast, interp_expr, lexer::lex, parser};
+        let ast = parser::parse(&lex(&format!("x = {src};")).unwrap()).unwrap();
+        match &ast.stmts[0] {
+            ast::Stmt::Assign(_, ast::Expr::Lambda(ps, body)) => {
+                interp_expr::compile_udf2(ps.clone(), (**body).clone(), "t".into()).unwrap()
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn typed_combiner_agrees_with_dynamic_and_falls_back() {
+        use crate::opt::types::compile_udf2;
+        use crate::value::ElemType;
+        let udf = parsed_udf2("|a, b| a + b");
+        let typed = compile_udf2(&udf, &ElemType::I64);
+        assert!(typed.is_some(), "i64 sum compiles");
+        let input: Vec<Value> = (0..17).map(|x| kv(x % 3, x)).collect();
+        let mut dynamic = run_once(&mut ReduceByKeyT::new(udf.clone()), &[&input]);
+        dynamic.sort();
+        let mut typed_out =
+            run_once(&mut ReduceByKeyT::with_typed(udf.clone(), typed.clone(), false), &[&input]);
+        typed_out.sort();
+        assert_eq!(typed_out, dynamic);
+        // Delta mode threads the same compiled combiner.
+        let mut d = ReduceByKeyT::with_typed(udf.clone(), typed.clone(), true);
+        let mut first = run_once(&mut d, &[&input]);
+        first.sort();
+        assert_eq!(first, dynamic);
+        // Runtime values defeating the compiled type (strings) fall back
+        // to the dynamic UDF — `+` concatenates, nothing panics.
+        let strs = [
+            Value::pair(Value::I64(1), Value::str("a")),
+            Value::pair(Value::I64(1), Value::str("b")),
+        ];
+        let out = run_once(&mut ReduceByKeyT::with_typed(udf.clone(), typed.clone(), false), &[&strs]);
+        assert_eq!(out, vec![Value::pair(Value::I64(1), Value::str("ab"))]);
+        // ReduceT threads it too.
+        let nums: Vec<Value> = (0..9).map(Value::I64).collect();
+        assert_eq!(
+            run_once(&mut ReduceT::with_typed(udf.clone(), typed), &[&nums]),
+            run_once(&mut ReduceT::new(udf), &[&nums]),
+        );
     }
 
     #[test]

@@ -6,20 +6,33 @@
 //! of per element.
 
 use super::{Collector, Transformation};
+use crate::bag::ColumnBatch;
 use crate::frontend::{Udf1, UdfN};
+use crate::opt::types::TypedUdf1;
 use crate::value::Value;
 
 /// `map`: apply a UDF to every element (fully pipelined).
 pub struct MapT {
     udf: Udf1,
+    /// Monomorphic columnar kernel ([`crate::opt::types::compile_udf1`])
+    /// installed by `ops::make` when the inferred input type and the
+    /// lambda body allow. Advisory: every batch re-verifies its layout
+    /// during decode, falling back to the dynamic loop on mismatch.
+    typed: Option<TypedUdf1>,
     /// Staging buffer reused across batches.
     buf: Vec<Value>,
 }
 
 impl MapT {
-    /// Create from a UDF.
+    /// Create from a UDF (dynamic path only).
     pub fn new(udf: Udf1) -> MapT {
-        MapT { udf, buf: Vec::new() }
+        MapT { udf, typed: None, buf: Vec::new() }
+    }
+
+    /// Create with an optional compiled columnar kernel (engine path,
+    /// gated by `opt.columnar`).
+    pub fn with_typed(udf: Udf1, typed: Option<TypedUdf1>) -> MapT {
+        MapT { udf, typed, buf: Vec::new() }
     }
 }
 
@@ -29,6 +42,14 @@ impl Transformation for MapT {
         out.emit(self.udf.call(v));
     }
     fn push_in_batch(&mut self, _input: usize, vs: &[Value], out: &mut dyn Collector) {
+        if let Some(t) = &self.typed {
+            if let Some(cols) = ColumnBatch::from_values(vs, t.input_type()) {
+                if let Some(mapped) = t.map_batch(&cols) {
+                    out.emit_columns(mapped);
+                    return;
+                }
+            }
+        }
         self.buf.reserve(vs.len());
         for v in vs {
             self.buf.push(self.udf.call(v));
@@ -42,14 +63,23 @@ impl Transformation for MapT {
 /// `filter`: keep elements whose predicate returns `Bool(true)`.
 pub struct FilterT {
     udf: Udf1,
+    /// Compiled columnar predicate; same advisory contract as
+    /// [`MapT::typed`].
+    typed: Option<TypedUdf1>,
     /// Staging buffer reused across batches.
     buf: Vec<Value>,
 }
 
 impl FilterT {
-    /// Create from a predicate UDF.
+    /// Create from a predicate UDF (dynamic path only).
     pub fn new(udf: Udf1) -> FilterT {
-        FilterT { udf, buf: Vec::new() }
+        FilterT { udf, typed: None, buf: Vec::new() }
+    }
+
+    /// Create with an optional compiled columnar predicate (engine path,
+    /// gated by `opt.columnar`).
+    pub fn with_typed(udf: Udf1, typed: Option<TypedUdf1>) -> FilterT {
+        FilterT { udf, typed, buf: Vec::new() }
     }
 }
 
@@ -61,6 +91,14 @@ impl Transformation for FilterT {
         }
     }
     fn push_in_batch(&mut self, _input: usize, vs: &[Value], out: &mut dyn Collector) {
+        if let Some(t) = &self.typed {
+            if let Some(mut cols) = ColumnBatch::from_values(vs, t.input_type()) {
+                if t.filter_batch(&mut cols).is_some() {
+                    out.emit_columns(cols);
+                    return;
+                }
+            }
+        }
         for v in vs {
             if self.udf.call(v).as_bool() {
                 self.buf.push(v.clone());

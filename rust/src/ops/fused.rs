@@ -19,8 +19,10 @@
 //! recorded by `opt::fuse`.
 
 use super::{Collector, Transformation};
+use crate::bag::ColumnBatch;
 use crate::frontend::FusedStage;
-use crate::value::Value;
+use crate::opt::types::TypedStage;
+use crate::value::{ElemType, Value};
 
 /// Run `v` through `stages[idx..]`, handing survivors to `emit`.
 fn run_stages(stages: &[FusedStage], idx: usize, v: &Value, emit: &mut dyn FnMut(Value)) {
@@ -49,28 +51,104 @@ pub fn apply_stages(stages: &[FusedStage], v: &Value, emit: &mut dyn FnMut(Value
     run_stages(stages, 0, v, emit);
 }
 
+/// A fully compiled columnar pipeline for the chain: the input layout to
+/// decode plus one monomorphic kernel per stage (all-or-nothing, see
+/// [`crate::opt::types::compile_chain`]).
+pub struct TypedChain {
+    /// Element type of the chain's input edge (decode layout).
+    pub in_ty: ElemType,
+    /// Compiled stages, parallel to the dynamic stage list.
+    pub stages: Vec<TypedStage>,
+}
+
 /// Fused chain transformation (fully pipelined; the only state is the
 /// reusable batch buffers and the per-stage row counters).
 pub struct FusedT {
     stages: Vec<FusedStage>,
+    /// Columnar pipeline compiled from the stages when every lambda and
+    /// the inferred input type allow; advisory — each batch re-verifies
+    /// its layout during decode and falls back to the dynamic loop.
+    typed: Option<TypedChain>,
     /// Ping-pong buffers for the stage-at-a-time batch loop.
     cur: Vec<Value>,
     next: Vec<Value>,
     /// Output rows per stage since the last [`Transformation::take_stage_rows`]
     /// (stage-parallel with `stages`).
     stage_rows: Vec<u64>,
+    /// Scratch for the typed pipeline's per-stage counts — committed into
+    /// `stage_rows` only when the whole chain succeeds, so a fallback
+    /// never double-counts.
+    typed_rows: Vec<u64>,
+    /// Rows consumed directly from the borrowed input batch — no upfront
+    /// clone of the batch (stage-0 borrow or columnar decode). Drained by
+    /// the engine into `exec.fused_borrowed_rows`.
+    borrowed_rows: u64,
 }
 
 impl FusedT {
     /// Create from the chain's stages, in application order.
     pub fn new(stages: Vec<FusedStage>) -> FusedT {
+        FusedT::with_typed(stages, None)
+    }
+
+    /// Create with an optional compiled columnar pipeline (engine path,
+    /// gated by `opt.columnar`).
+    pub fn with_typed(stages: Vec<FusedStage>, typed: Option<TypedChain>) -> FusedT {
         let n = stages.len();
-        FusedT { stages, cur: Vec::new(), next: Vec::new(), stage_rows: vec![0; n] }
+        FusedT {
+            stages,
+            typed,
+            cur: Vec::new(),
+            next: Vec::new(),
+            stage_rows: vec![0; n],
+            typed_rows: Vec::new(),
+            borrowed_rows: 0,
+        }
     }
 
     /// Per-stage output rows accumulated so far (tests).
     pub fn stage_rows(&self) -> &[u64] {
         &self.stage_rows
+    }
+
+    /// Rows consumed without the upfront batch clone so far (tests; the
+    /// engine drains via [`Transformation::take_borrowed_rows`]).
+    pub fn borrowed_rows(&self) -> u64 {
+        self.borrowed_rows
+    }
+
+    /// Run the compiled columnar pipeline over one batch. Returns `false`
+    /// (with no counters touched) when the batch layout defeats the
+    /// compiled kernels — the caller then runs the dynamic loop.
+    fn push_typed(&mut self, vs: &[Value], out: &mut dyn Collector) -> bool {
+        // Destructure for disjoint borrows: the compiled chain is read
+        // while the counters are written.
+        let Self { typed, typed_rows, stage_rows, borrowed_rows, .. } = self;
+        let Some(tc) = typed else { return false };
+        let Some(mut cols) = ColumnBatch::from_values(vs, &tc.in_ty) else {
+            return false;
+        };
+        typed_rows.clear();
+        for st in &tc.stages {
+            match st {
+                TypedStage::Map(u) => match u.map_batch(&cols) {
+                    Some(next) => cols = next,
+                    None => return false,
+                },
+                TypedStage::Filter(u) => {
+                    if u.filter_batch(&mut cols).is_none() {
+                        return false;
+                    }
+                }
+            }
+            typed_rows.push(cols.len() as u64);
+        }
+        for (i, r) in typed_rows.iter().enumerate() {
+            stage_rows[i] += r;
+        }
+        *borrowed_rows += vs.len() as u64;
+        out.emit_columns(cols);
+        true
     }
 }
 
@@ -92,9 +170,37 @@ impl Transformation for FusedT {
             out.emit_batch(&mut buf);
             return;
         }
+        if self.push_typed(vs, out) {
+            return;
+        }
+        // Stage 0 runs over the BORROWED input — no upfront clone of the
+        // whole batch. Only filter survivors are cloned (everything a map
+        // or flatMap produces is freshly owned already), and from stage 1
+        // on the ping-pong loop moves owned values.
         self.cur.clear();
-        self.cur.extend_from_slice(vs);
-        for (i, stage) in self.stages.iter().enumerate() {
+        match &self.stages[0] {
+            FusedStage::Map(udf) => {
+                self.cur.reserve(vs.len());
+                for v in vs {
+                    self.cur.push(udf.call(v));
+                }
+            }
+            FusedStage::Filter(udf) => {
+                for v in vs {
+                    if udf.call(v).as_bool() {
+                        self.cur.push(v.clone());
+                    }
+                }
+            }
+            FusedStage::FlatMap(udf) => {
+                for v in vs {
+                    self.cur.extend(udf.call(v));
+                }
+            }
+        }
+        self.stage_rows[0] += self.cur.len() as u64;
+        self.borrowed_rows += vs.len() as u64;
+        for (i, stage) in self.stages.iter().enumerate().skip(1) {
             self.next.clear();
             match stage {
                 FusedStage::Map(udf) => {
@@ -132,6 +238,10 @@ impl Transformation for FusedT {
             return None;
         }
         Some(std::mem::replace(&mut self.stage_rows, vec![0; self.stages.len()]))
+    }
+
+    fn take_borrowed_rows(&mut self) -> u64 {
+        std::mem::take(&mut self.borrowed_rows)
     }
 }
 
@@ -229,5 +339,101 @@ mod tests {
         assert_eq!(e.stage_rows(), &[0, 0, 0]);
         // An empty chain has nothing to report.
         assert_eq!(FusedT::new(Vec::new()).take_stage_rows(), None);
+    }
+
+    #[test]
+    fn batch_path_borrows_input_instead_of_cloning() {
+        use crate::ops::Transformation;
+        let input = [i(1), i(2), i(3), i(4)];
+        // Batch delivery consumes the borrowed input directly: every row
+        // counts toward the borrowed counter, whatever the first stage is.
+        let mut t = FusedT::new(chain());
+        run_once_chunked(&mut t, &[&input], 256);
+        assert_eq!(t.borrowed_rows(), 4);
+        assert_eq!(t.take_borrowed_rows(), 4, "drains");
+        assert_eq!(t.borrowed_rows(), 0);
+        // A filter-first chain clones only survivors — still borrowed.
+        let stages = vec![
+            FusedStage::Filter(Udf1::new("odd", |v: &Value| Value::Bool(v.as_i64() % 2 == 1))),
+            FusedStage::Map(Udf1::new("x+1", |v: &Value| i(v.as_i64() + 1))),
+        ];
+        let mut f = FusedT::new(stages);
+        let out = run_once_chunked(&mut f, &[&input], 256);
+        assert_eq!(out, vec![i(2), i(4)]);
+        assert_eq!(f.take_borrowed_rows(), 4);
+        // The element path never engages the batch kernel.
+        let mut e = FusedT::new(chain());
+        run_once(&mut e, &[&input]);
+        assert_eq!(e.take_borrowed_rows(), 0);
+    }
+
+    fn parsed_udf1(src: &str) -> Udf1 {
+        use crate::frontend::{ast, interp_expr, lexer::lex, parser};
+        let ast = parser::parse(&lex(&format!("x = {src};")).unwrap()).unwrap();
+        match &ast.stmts[0] {
+            ast::Stmt::Assign(_, ast::Expr::Lambda(ps, body)) => {
+                interp_expr::compile_udf1(ps.clone(), (**body).clone(), "t".into()).unwrap()
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn typed_pipeline_matches_dynamic_chain() {
+        use crate::opt::types::compile_chain;
+        use crate::value::ElemType;
+        let stages = vec![
+            FusedStage::Map(parsed_udf1("|x| x + 1")),
+            FusedStage::Filter(parsed_udf1("|x| x % 2 == 0")),
+            FusedStage::Map(parsed_udf1("|x| x * 10")),
+        ];
+        let (tstages, out_ty) = compile_chain(&stages, &ElemType::I64).expect("chain compiles");
+        assert_eq!(out_ty, ElemType::I64);
+        let input: Vec<Value> = (0..23).map(i).collect();
+        let dynamic = run_once(&mut FusedT::new(stages.clone()), &[&input]);
+        for chunk in [1usize, 2, 7, 256] {
+            let mut t = FusedT::with_typed(
+                stages.clone(),
+                Some(TypedChain { in_ty: ElemType::I64, stages: tstages.clone() }),
+            );
+            let got = run_once_chunked(&mut t, &[&input], chunk);
+            assert_eq!(got, dynamic, "chunk={chunk}");
+            assert_eq!(t.stage_rows().len(), 3);
+            assert_eq!(t.take_borrowed_rows(), input.len() as u64);
+        }
+        // A layout-defeating batch (strings on an i64-compiled chain)
+        // must fall back to the dynamic loop and stay correct.
+        let mut t = FusedT::with_typed(
+            vec![FusedStage::Map(parsed_udf1("|x| x"))],
+            Some(TypedChain {
+                in_ty: ElemType::I64,
+                stages: compile_chain(&[FusedStage::Map(parsed_udf1("|x| x"))], &ElemType::I64)
+                    .unwrap()
+                    .0,
+            }),
+        );
+        let strs = [Value::str("a"), Value::str("b")];
+        let got = run_once_chunked(&mut t, &[&strs], 256);
+        assert_eq!(got, strs.to_vec(), "mismatched layout falls back, stays correct");
+    }
+
+    #[test]
+    fn typed_pipeline_counts_interior_stage_rows() {
+        use crate::opt::types::compile_chain;
+        use crate::value::ElemType;
+        let stages = vec![
+            FusedStage::Map(parsed_udf1("|x| x + 1")),
+            FusedStage::Filter(parsed_udf1("|x| x % 2 == 0")),
+            FusedStage::Map(parsed_udf1("|x| x * 10")),
+        ];
+        let (tstages, _) = compile_chain(&stages, &ElemType::I64).unwrap();
+        let mut t = FusedT::with_typed(
+            stages,
+            Some(TypedChain { in_ty: ElemType::I64, stages: tstages }),
+        );
+        let input = [i(1), i(2), i(3), i(4)];
+        let out = run_once_chunked(&mut t, &[&input], 256);
+        assert_eq!(out, vec![i(20), i(40)]);
+        assert_eq!(t.stage_rows(), &[4, 2, 2], "typed path feeds the same counters");
     }
 }

@@ -17,6 +17,7 @@
 use super::state::MultiMap;
 use super::{Collector, Transformation};
 use crate::value::Value;
+use rustc_hash::FxHashMap;
 
 /// Split an element into its join key and payload: pairs key on their
 /// first component, anything else keys on the whole value with a `Unit`
@@ -36,6 +37,18 @@ pub struct HashJoinT {
     /// state vocabulary (`ops::state`). Not checkpointed: recovery
     /// rebuilds it from retained input buffers.
     table: MultiMap,
+    /// Monomorphic i64-keyed build index, installed by [`typed_keys`]
+    /// when `opt::types` proved both join keys `I64`: raw-integer
+    /// hashing, no `Value` key clones on probe. Advisory — the first
+    /// non-`I64` build key migrates the rows into the dynamic
+    /// [`MultiMap`] and retires the fast path (invariant: while `Some`,
+    /// `table` is empty).
+    ///
+    /// [`typed_keys`]: HashJoinT::typed_keys
+    i64_table: Option<FxHashMap<i64, Vec<Value>>>,
+    /// Remembers the `typed_keys` request so `drop_state` can re-arm
+    /// the fast path for the next build bag even after a migration.
+    typed: bool,
     build_done: bool,
     /// Probe elements that arrived before the build side closed.
     pending_probe: Vec<Value>,
@@ -59,6 +72,8 @@ impl HashJoinT {
         assert!(build <= 1, "join has two inputs");
         HashJoinT {
             table: MultiMap::new(),
+            i64_table: None,
+            typed: false,
             build_done: false,
             pending_probe: Vec::new(),
             build,
@@ -67,9 +82,30 @@ impl HashJoinT {
         }
     }
 
+    /// Enable the monomorphic i64-key index. Only call when inference
+    /// proved both inputs carry `I64` join keys; a stray non-`I64` build
+    /// key still degrades gracefully to the dynamic table.
+    pub fn typed_keys(mut self) -> HashJoinT {
+        self.typed = true;
+        self.i64_table = Some(FxHashMap::default());
+        self
+    }
+
+    /// Build-table rows matching key `k`, from whichever index holds
+    /// them. While the i64 index is live an `I64` key probes it directly
+    /// and any other key rank matches nothing (the build side was proven
+    /// all-`I64`, and `Value` equality never crosses ranks).
+    fn matches_for(&self, k: &Value) -> Option<&[Value]> {
+        match (&self.i64_table, k) {
+            (Some(idx), Value::I64(ik)) => idx.get(ik).map(|r| r.as_slice()),
+            (Some(_), _) => None,
+            (None, _) => self.table.get(k),
+        }
+    }
+
     fn probe_into(&self, v: &Value, dst: &mut Vec<Value>) {
         let (k, pv) = key_and_payload(v);
-        if let Some(matches) = self.table.get(&k) {
+        if let Some(matches) = self.matches_for(&k) {
             for bv in matches {
                 // Emit in (left, right) order whichever side built.
                 let (lv, rv) = if self.build == 0 {
@@ -87,7 +123,7 @@ impl HashJoinT {
         // (no staging buffer — this path predates batching and must keep
         // its original cost profile).
         let (k, pv) = key_and_payload(v);
-        if let Some(matches) = self.table.get(&k) {
+        if let Some(matches) = self.matches_for(&k) {
             for bv in matches {
                 // Emit in (left, right) order whichever side built.
                 let (lv, rv) = if self.build == 0 {
@@ -116,6 +152,20 @@ impl HashJoinT {
 
     fn ingest_build(&mut self, v: &Value) {
         let (k, bv) = key_and_payload(v);
+        if let Some(idx) = &mut self.i64_table {
+            if let Value::I64(ik) = k {
+                idx.entry(ik).or_default().push(bv);
+                return;
+            }
+            // Inference was wrong about this bag: migrate the rows into
+            // the dynamic table and retire the fast path for this build.
+            for (mk, rows) in std::mem::take(idx) {
+                for row in rows {
+                    self.table.push(Value::I64(mk), row);
+                }
+            }
+            self.i64_table = None;
+        }
         self.table.push(k, bv);
     }
 }
@@ -180,6 +230,9 @@ impl Transformation for HashJoinT {
     fn drop_state(&mut self, input: usize) {
         if input == self.build {
             self.table.clear();
+            // Re-arm the fast path for the next build bag: even if a
+            // stray key migrated this build, the next one may be clean.
+            self.i64_table = self.typed.then(FxHashMap::default);
             self.build_done = false;
         }
     }
@@ -192,7 +245,13 @@ impl Transformation for HashJoinT {
         // Report the retained build table only once it is cross-bag
         // state (a reused build); a per-bag build is not solution-set
         // state and would distort the adaptive feedback.
-        (self.build_done && self.reuse_probes > 0).then(|| self.table.rows())
+        (self.build_done && self.reuse_probes > 0).then(|| {
+            let typed_rows: u64 = self
+                .i64_table
+                .as_ref()
+                .map_or(0, |idx| idx.values().map(|r| r.len() as u64).sum());
+            self.table.rows() + typed_rows
+        })
     }
 }
 
@@ -322,6 +381,48 @@ mod tests {
             let got = crate::ops::run_once_chunked(&mut j, &[&build, &probe], chunk);
             assert_eq!(got, whole, "chunk={chunk}");
         }
+    }
+
+    #[test]
+    fn typed_index_agrees_with_dynamic_table() {
+        let build: Vec<Value> = (0..8).map(|k| kv(k, k * 10)).collect();
+        let probe: Vec<Value> = (0..32).map(|x| kv(x % 10, x)).collect();
+        let mut dynamic = HashJoinT::new();
+        let mut want = run_once(&mut dynamic, &[&build, &probe]);
+        let mut typed = HashJoinT::new().typed_keys();
+        let mut got = run_once(&mut typed, &[&build, &probe]);
+        want.sort();
+        got.sort();
+        assert_eq!(got, want);
+        // The fast path stayed live: every build key really was i64.
+        assert!(typed.i64_table.is_some());
+        assert!(typed.state_size().is_none()); // per-bag build, not reused
+    }
+
+    #[test]
+    fn typed_index_migrates_on_non_i64_key_and_rearms() {
+        // One string-keyed build row defeats the i64 layout; the rows
+        // seen so far must migrate and the join stay exact.
+        let build = vec![
+            kv(1, 10),
+            Value::pair(Value::str("k"), Value::I64(11)),
+            kv(2, 20),
+        ];
+        let probe = vec![kv(1, 100), Value::pair(Value::str("k"), Value::I64(101))];
+        let mut typed = HashJoinT::new().typed_keys();
+        let mut got = run_once(&mut typed, &[&build, &probe]);
+        assert!(typed.i64_table.is_none(), "fast path should have retired");
+        let mut dynamic = HashJoinT::new();
+        let mut want = run_once(&mut dynamic, &[&build, &probe]);
+        got.sort();
+        want.sort();
+        assert_eq!(got, want);
+        assert_eq!(got.len(), 2);
+        // A new build bag re-arms the index.
+        typed.drop_state(0);
+        assert!(typed.i64_table.is_some());
+        let out = run_once(&mut typed, &[&[kv(3, 30)], &[kv(3, 300)]]);
+        assert_eq!(out.len(), 1);
     }
 
     #[test]

@@ -40,7 +40,7 @@ pub mod xla;
 use crate::dataflow::{DeltaMode, Node};
 use crate::error::Result;
 use crate::frontend::Rhs;
-use crate::value::Value;
+use crate::value::{ElemType, Value};
 use std::sync::Arc;
 
 /// Output collector handed to transformations (§6.1: `Emit`; bag closing
@@ -55,6 +55,14 @@ pub trait Collector {
         for v in vs.drain(..) {
             self.emit(v);
         }
+    }
+    /// Emit a whole columnar batch (typed kernels). The default decodes
+    /// to `Value`s and forwards to [`Collector::emit_batch`]; the
+    /// engine's staging collector overrides it to derive routing key
+    /// hashes column-at-a-time before decoding.
+    fn emit_columns(&mut self, cols: crate::bag::ColumnBatch) {
+        let mut vs = cols.into_values();
+        self.emit_batch(&mut vs);
     }
 }
 
@@ -115,6 +123,13 @@ pub trait Transformation: Send {
     fn take_stage_rows(&mut self) -> Option<Vec<u64>> {
         None
     }
+    /// Rows a batch kernel consumed directly from the borrowed input —
+    /// no upfront clone of the whole batch ([`fused::FusedT`]'s stage-0
+    /// borrow and its columnar pipeline). Drained (reset to 0) per call;
+    /// the engine folds it into the `exec.fused_borrowed_rows` counter.
+    fn take_borrowed_rows(&mut self) -> u64 {
+        0
+    }
     /// Rows of cross-superstep solution-set state currently held
     /// (delta-mode operators); `None` for stateless / full-recompute
     /// operators. Folded into `NodeRows::state_size` so adaptive
@@ -142,7 +157,8 @@ pub trait Transformation: Send {
 }
 
 /// Instance context given to the factory: which physical instance this is
-/// and how many exist (sources partition their data by it).
+/// and how many exist (sources partition their data by it), plus the
+/// inferred element types and columnar gate the typed kernels key off.
 #[derive(Clone)]
 pub struct MakeCtx {
     /// This instance's index within the logical node.
@@ -153,6 +169,15 @@ pub struct MakeCtx {
     pub registry: Arc<crate::workload::registry::Registry>,
     /// Base directory for `readFile` / `writeFile` paths.
     pub io_dir: std::path::PathBuf,
+    /// Inferred element type of each logical input (parallel to the
+    /// node's input edges; missing entries mean [`ElemType::Dyn`]).
+    pub in_types: Vec<ElemType>,
+    /// Inferred element type of this node's output.
+    pub out_type: ElemType,
+    /// Install typed columnar kernels? The graph's `opt.columnar` gate
+    /// resolved against the engine's batch size (`ColumnarGate::enabled`);
+    /// `false` keeps every operator on the dynamic `Value` path.
+    pub columnar: bool,
 }
 
 impl Default for MakeCtx {
@@ -162,7 +187,44 @@ impl Default for MakeCtx {
             insts: 1,
             registry: crate::workload::registry::global(),
             io_dir: std::path::PathBuf::from("."),
+            in_types: Vec::new(),
+            out_type: ElemType::Dyn,
+            columnar: false,
         }
+    }
+}
+
+impl MakeCtx {
+    /// The inferred element type of logical input `i` (`Dyn` when the
+    /// optimizer did not run or inference gave up).
+    pub fn in_type(&self, i: usize) -> ElemType {
+        self.in_types.get(i).cloned().unwrap_or(ElemType::Dyn)
+    }
+}
+
+/// Join-key type of an input element type, mirroring
+/// [`join::key_and_payload`]: pairs key on their first component,
+/// anything else keys on the whole value.
+fn join_key_type(t: &ElemType) -> ElemType {
+    match t {
+        ElemType::Pair(k, _) => (**k).clone(),
+        other => other.clone(),
+    }
+}
+
+/// Typed combiner for a keyed reduce: the operand type is the *value*
+/// component of the input pair type. `None` (dynamic path) when the
+/// columnar gate is off or the input is not a concretely typed pair.
+fn typed_combiner(
+    ctx: &MakeCtx,
+    udf: &crate::frontend::Udf2,
+) -> Option<crate::opt::types::TypedUdf2> {
+    if !ctx.columnar {
+        return None;
+    }
+    match ctx.in_type(0) {
+        ElemType::Pair(_, v) => crate::opt::types::compile_udf2(udf, &v),
+        _ => None,
     }
 }
 
@@ -181,7 +243,11 @@ pub fn make_node(
             DeltaMode::PhiFrontier => return Ok(Box::new(delta::DeltaPhiT::frontier())),
             DeltaMode::AccReduce => {
                 if let Rhs::ReduceByKey { udf, .. } = &node.op {
-                    return Ok(Box::new(agg::ReduceByKeyT::new_delta(udf.clone())));
+                    return Ok(Box::new(agg::ReduceByKeyT::with_typed(
+                        udf.clone(),
+                        typed_combiner(ctx, udf),
+                        true,
+                    )));
                 }
                 return Err(crate::Error::Dataflow(format!(
                     "AccReduce delta mode on non-reduceByKey node '{}'",
@@ -211,7 +277,16 @@ pub fn make_with_join_build(
     ctx: &MakeCtx,
 ) -> Result<Box<dyn Transformation>> {
     match op {
-        Rhs::Join { .. } => Ok(Box::new(join::HashJoinT::with_build(join_build))),
+        Rhs::Join { .. } => {
+            let mut j = join::HashJoinT::with_build(join_build);
+            if ctx.columnar
+                && join_key_type(&ctx.in_type(0)) == ElemType::I64
+                && join_key_type(&ctx.in_type(1)) == ElemType::I64
+            {
+                j = j.typed_keys();
+            }
+            Ok(Box::new(j))
+        }
         _ => make(op, ctx),
     }
 }
@@ -224,18 +299,50 @@ pub fn make(op: &Rhs, ctx: &MakeCtx) -> Result<Box<dyn Transformation>> {
         Rhs::ReadFile { .. } => Box::new(io::ReadFileT::new(ctx)),
         Rhs::WriteFile { .. } => Box::new(io::WriteFileT::new(ctx)),
         Rhs::Collect { .. } => Box::new(basic::PassThroughT::default()),
-        Rhs::Map { udf, .. } => Box::new(basic::MapT::new(udf.clone())),
-        Rhs::Filter { udf, .. } => Box::new(basic::FilterT::new(udf.clone())),
+        Rhs::Map { udf, .. } => {
+            let typed = ctx
+                .columnar
+                .then(|| crate::opt::types::compile_udf1(udf, &ctx.in_type(0)))
+                .flatten();
+            Box::new(basic::MapT::with_typed(udf.clone(), typed))
+        }
+        Rhs::Filter { udf, .. } => {
+            let typed = ctx
+                .columnar
+                .then(|| crate::opt::types::compile_udf1(udf, &ctx.in_type(0)))
+                .flatten();
+            Box::new(basic::FilterT::with_typed(udf.clone(), typed))
+        }
         Rhs::FlatMap { udf, .. } => Box::new(basic::FlatMapT::new(udf.clone())),
-        Rhs::Join { .. } => Box::new(join::HashJoinT::new()),
-        Rhs::ReduceByKey { udf, .. } => Box::new(agg::ReduceByKeyT::new(udf.clone())),
-        Rhs::Reduce { udf, .. } => Box::new(agg::ReduceT::new(udf.clone())),
+        Rhs::Join { .. } => return make_with_join_build(op, 0, ctx),
+        Rhs::ReduceByKey { udf, .. } => Box::new(agg::ReduceByKeyT::with_typed(
+            udf.clone(),
+            typed_combiner(ctx, udf),
+            false,
+        )),
+        Rhs::Reduce { udf, .. } => {
+            let typed = ctx
+                .columnar
+                .then(|| crate::opt::types::compile_udf2(udf, &ctx.in_type(0)))
+                .flatten();
+            Box::new(agg::ReduceT::with_typed(udf.clone(), typed))
+        }
         Rhs::Count { .. } => Box::new(agg::CountT::new()),
         Rhs::Distinct { .. } => Box::new(agg::DistinctT::new()),
         Rhs::Union { .. } => Box::new(basic::UnionT::default()),
         Rhs::Cross { .. } => Box::new(basic::CrossT::new()),
         Rhs::Phi(_) => Box::new(basic::PhiT::default()),
-        Rhs::Fused { stages, .. } => Box::new(fused::FusedT::new(stages.clone())),
+        Rhs::Fused { stages, .. } => {
+            let typed = ctx
+                .columnar
+                .then(|| {
+                    let in_ty = ctx.in_type(0);
+                    crate::opt::types::compile_chain(stages, &in_ty)
+                        .map(|(s, _)| fused::TypedChain { in_ty, stages: s })
+                })
+                .flatten();
+            Box::new(fused::FusedT::with_typed(stages.clone(), typed))
+        }
         Rhs::XlaCall { spec, .. } => Box::new(xla::XlaCallT::new(spec.clone())),
         Rhs::Const(_) | Rhs::Copy(_) | Rhs::ScalarUn { .. } | Rhs::ScalarBin { .. } => {
             return Err(crate::Error::Dataflow(format!(

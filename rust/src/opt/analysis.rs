@@ -28,6 +28,10 @@ pub struct PlanAnalysis {
     pub live: Vec<bool>,
     /// Cardinality / trip-count estimates (`opt::cost`).
     pub cost: CostEstimates,
+    /// Per-node inferred output element type ([`super::types::infer`]).
+    /// `Dyn` where inference gave up; advisory for rewrites the same way
+    /// it is for the engine — runtime layout checks keep it safe.
+    pub elem_types: Vec<crate::value::ElemType>,
 }
 
 /// Is this node a liveness root? Sinks and side effects, condition nodes
@@ -288,7 +292,14 @@ impl PlanAnalysis {
                     .collect(),
             },
         };
-        PlanAnalysis { dom: dt, loops: li, consumers, live, cost: est }
+        PlanAnalysis {
+            dom: dt,
+            loops: li,
+            consumers,
+            live,
+            cost: est,
+            elem_types: super::types::infer(g),
+        }
     }
 
     /// The loop's *preamble anchor*: the unique predecessor of the header

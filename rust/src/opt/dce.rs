@@ -83,6 +83,7 @@ mod tests {
             singleton: false,
             hoisted_from: None,
             size_hint: None,
+            elem_hint: None,
             build_side: None,
             delta: None,
         });

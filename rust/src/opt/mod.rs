@@ -33,6 +33,13 @@
 //!   operators merge them into indexed solution sets (`ops::state`).
 //!   Runs last (on the fully optimized shape), gated by the [`cost`]
 //!   trip model under `opt.delta = auto`.
+//! * [`types`] — **per-edge element-type inference**: a forward fixpoint
+//!   over the lattice `I64 | F64 | Bool | Str | Pair | Tuple | Dyn`
+//!   deriving every edge's static element type from source hints, UDF
+//!   expression metadata, and operator signatures. Not a rewrite: the
+//!   result (`DataflowGraph::elem_types`) selects monomorphic columnar
+//!   kernels at `ops::make_node` time, gated by `opt.columnar =
+//!   auto|always|never` ([`ColumnarGate`]).
 //!
 //! Passes share a [`analysis::PlanAnalysis`] (loop membership, invariance
 //! fixpoint, liveness, and the [`cost`] row/trip estimates) and run in
@@ -51,8 +58,10 @@ pub mod fuse;
 pub mod hoist;
 pub mod joinside;
 pub mod pushdown;
+pub mod types;
 
 pub use delta::DeltaGate;
+pub use types::ColumnarGate;
 
 use crate::dataflow::DataflowGraph;
 use crate::error::{Error, Result};
@@ -115,6 +124,9 @@ pub struct OptConfig {
     /// Delta-incremental loop rewriting policy (config key `opt.delta`,
     /// CLI `--no-delta`, env default `LABY_DELTA`).
     pub delta: DeltaGate,
+    /// Columnar (typed SoA) kernel policy (config key `opt.columnar`,
+    /// CLI `--no-columnar`, env default `LABY_COLUMNAR`).
+    pub columnar: ColumnarGate,
     /// Minimum estimated `trips × rows` for a speculative hoist under
     /// [`Speculate::Auto`].
     pub speculate_threshold: f64,
@@ -136,6 +148,7 @@ impl Default for OptConfig {
             join_sides: true,
             speculate: Speculate::Auto,
             delta: DeltaGate::default_from_env(),
+            columnar: ColumnarGate::default_from_env(),
             speculate_threshold: 1.0,
             default_trips: 4,
             max_rounds: 3,
@@ -156,6 +169,7 @@ impl OptConfig {
             pushdown: false,
             join_sides: false,
             delta: DeltaGate::Never,
+            columnar: ColumnarGate::Never,
             ..OptConfig::default()
         }
     }
@@ -172,6 +186,10 @@ impl OptConfig {
             None => d.delta,
             Some(s) => DeltaGate::parse(s)?,
         };
+        let columnar = match cfg.get("opt.columnar") {
+            None => d.columnar,
+            Some(s) => ColumnarGate::parse(s)?,
+        };
         Ok(OptConfig {
             hoist: cfg.get_bool("opt.hoist", d.hoist)?,
             fuse: cfg.get_bool("opt.fuse", d.fuse)?,
@@ -180,6 +198,7 @@ impl OptConfig {
             join_sides: cfg.get_bool("opt.join_sides", d.join_sides)?,
             speculate,
             delta,
+            columnar,
             speculate_threshold: cfg
                 .get_f64("opt.speculate_threshold", d.speculate_threshold)?,
             default_trips: cfg.get_u64("opt.default_trips", d.default_trips)?,
@@ -257,6 +276,9 @@ pub struct ExplainReport {
     /// execution, as of the last delta run — a state count, not a sum
     /// of per-round events.
     pub delta_loops: usize,
+    /// Dataflow edges whose inferred element type is concrete (not
+    /// `Dyn`) — the edges eligible for columnar kernels.
+    pub typed_edges: usize,
     /// Per-pass statistics, in execution order.
     pub passes: Vec<PassStats>,
 }
@@ -283,6 +305,7 @@ impl ExplainReport {
             ("opt.hoist_gated_skips".into(), self.hoist_gated as u64),
             ("opt.feedback_rows_pinned".into(), self.feedback_nodes as u64),
             ("opt.delta_loops".into(), self.delta_loops as u64),
+            ("opt.typed_edges".into(), self.typed_edges as u64),
         ]
     }
 
@@ -316,6 +339,12 @@ impl ExplainReport {
                 self.delta_loops
             ));
         }
+        if self.typed_edges > 0 {
+            s.push_str(&format!(
+                "  types: {} edge(s) inferred concrete (columnar-eligible)\n",
+                self.typed_edges
+            ));
+        }
         for p in &self.passes {
             s.push_str(&format!(
                 "  round {} {:<6} changed {:>3}  nodes {}\n",
@@ -339,6 +368,9 @@ pub struct PassManager {
     /// named nodes are pinned to these values before every pass (see
     /// [`cost::estimate_rows_seeded`]).
     row_seed: Option<RowFeedback>,
+    /// Columnar-kernel policy stamped onto the optimized graph, so the
+    /// engine selects typed kernels without re-reading the config.
+    columnar: ColumnarGate,
 }
 
 impl PassManager {
@@ -379,7 +411,12 @@ impl PassManager {
                 default_trips: cfg.default_trips,
             }));
         }
-        PassManager { passes, max_rounds: cfg.max_rounds, row_seed: None }
+        PassManager {
+            passes,
+            max_rounds: cfg.max_rounds,
+            row_seed: None,
+            columnar: cfg.columnar,
+        }
     }
 
     /// Pin row estimates of named nodes to observed runtime cardinalities
@@ -459,6 +496,14 @@ impl PassManager {
         }
         report.nodes_after = g.num_nodes();
         report.hoisted = g.nodes.iter().filter(|n| n.hoisted_from.is_some()).count();
+        // Element-type inference runs on the final shape (fused chains,
+        // settled join sides) — the types the engine will actually see.
+        // It is an analysis, not a rewrite: a wrong (stale) type could
+        // only cost the fast path, never correctness, but inferring last
+        // keeps the DOT/explain output faithful to the executed plan.
+        g.elem_types = types::infer(g);
+        g.columnar = self.columnar;
+        report.typed_edges = types::typed_edge_count(g, &g.elem_types);
         g.opt_summary = report.summary();
         Ok(report)
     }

@@ -327,6 +327,7 @@ fn apply(g: &mut DataflowGraph, found: Found, out: &mut PassOutcome) {
             singleton: src_singleton,
             hoisted_from: None,
             size_hint: None,
+            elem_hint: None,
             build_side: None,
             delta: None,
         });

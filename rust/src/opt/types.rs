@@ -1,0 +1,1223 @@
+//! Per-edge element-type inference + typed UDF compilation (`opt.columnar`).
+//!
+//! The dynamic engine moves uniform [`Value`]s; every hot kernel pays an
+//! enum dispatch per element. This module is the static side of the typed
+//! columnar plane (`docs/columnar.md`): it derives an [`ElemType`] for
+//! every dataflow edge and compiles LabyLang lambdas whose shapes it can
+//! prove into monomorphic scalar programs that run over raw `i64`/`f64`
+//! lanes of a [`crate::bag::ColumnBatch`] — no `Value` allocation, no
+//! parameter-name lookups, no per-element dispatch.
+//!
+//! **Inference** ([`infer`]) is a forward fixpoint over the dataflow
+//! graph: sources contribute sampled hints (`Node::elem_hint`),
+//! `readFile` is `Str`, operators transfer types per their signatures
+//! (`count → I64`, `join → pair(k, pair(l, r))`, `filter` preserves, …),
+//! `map` consults the compiled form of its UDF, and Φ-nodes join their
+//! arms — optimistically across back-edges, so loop-carried bags keep
+//! their type when every arm agrees. `Dyn` is the lattice top.
+//!
+//! **Compilation** mirrors `frontend::interp_expr` *exactly* — including
+//! its warts: `+` on two statically-`I64` operands is integer addition,
+//! mixed `I64`/`F64` arithmetic widens to `f64`, floats compare under the
+//! IEEE total order (`NaN == NaN`, `0.0 != -0.0` — the same bit trick as
+//! `Value`'s `Ord`), `&&`/`||` evaluate both sides. Anything the compiler
+//! cannot prove equivalent (strings, mixed-type comparisons, which
+//! rank-compare in the interpreter, exotic builtins) returns `None` and
+//! the kernel keeps the dynamic path. Inference is optimistic end to end:
+//! typed kernels re-verify every batch they decode
+//! ([`crate::bag::ColumnBatch::from_values`]), so a wrong type here can
+//! cost performance but never correctness.
+
+use crate::bag::ColumnBatch;
+use crate::dataflow::{DataflowGraph, Node};
+use crate::error::Result;
+use crate::frontend::ast::{BinOp, Expr, UnOp};
+use crate::frontend::{FusedStage, Rhs, Udf1, Udf2};
+use crate::value::{ElemType, Value};
+use std::cmp::Ordering;
+
+/// Policy for the typed columnar plane (config key `opt.columnar`, CLI
+/// `--no-columnar`, env default `LABY_COLUMNAR`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ColumnarGate {
+    /// Typed kernels on batched channels (default): columnar decode/encode
+    /// amortizes over a batch, so element-at-a-time channels (batch 1)
+    /// stay on the dynamic path.
+    Auto,
+    /// Typed kernels wherever the inferred type allows, even at batch 1
+    /// (differential tests force this to cover the conversion boundary).
+    Always,
+    /// Dynamic `Value` path everywhere.
+    Never,
+}
+
+impl ColumnarGate {
+    /// Parse a config/CLI/env value.
+    pub fn parse(s: &str) -> Result<ColumnarGate> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(ColumnarGate::Auto),
+            "always" => Ok(ColumnarGate::Always),
+            "never" => Ok(ColumnarGate::Never),
+            other => Err(crate::Error::Config(format!(
+                "opt.columnar: expected auto|always|never, got {other:?}"
+            ))),
+        }
+    }
+
+    /// The process-wide default: `LABY_COLUMNAR` if set (invalid values
+    /// fall back with a warning — a bad env var must not fail every
+    /// compile), else [`ColumnarGate::Auto`]. Read once.
+    pub fn default_from_env() -> ColumnarGate {
+        static GATE: std::sync::OnceLock<ColumnarGate> = std::sync::OnceLock::new();
+        *GATE.get_or_init(|| match std::env::var("LABY_COLUMNAR") {
+            Err(_) => ColumnarGate::Auto,
+            Ok(s) => ColumnarGate::parse(&s).unwrap_or_else(|e| {
+                eprintln!("warning: LABY_COLUMNAR ignored: {e}");
+                ColumnarGate::Auto
+            }),
+        })
+    }
+
+    /// Should typed kernels be installed for channel batch size `batch`?
+    pub fn enabled(&self, batch: usize) -> bool {
+        match self {
+            ColumnarGate::Always => true,
+            ColumnarGate::Never => false,
+            ColumnarGate::Auto => batch > 1,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed scalar programs
+// ---------------------------------------------------------------------------
+
+/// Slot environment a compiled expression reads its parameters from.
+/// Kernels fill only the slots the input layout defines: scalar inputs
+/// load component 0 of their lane (`i[0]`/`f[0]`/`b[0]`), pair inputs
+/// load the key into `i[0]` and the payload into component 1, and
+/// two-parameter combiners load `a` into component 0 and `b` into
+/// component 1.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Slots {
+    /// `i64` parameter lanes.
+    pub i: [i64; 2],
+    /// `f64` parameter lanes.
+    pub f: [f64; 2],
+    /// `bool` parameter lanes.
+    pub b: [bool; 2],
+}
+
+/// Comparison operator of a compiled predicate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    /// `==`
+    Eq,
+    /// `!=`
+    Ne,
+    /// `<`
+    Lt,
+    /// `<=`
+    Le,
+    /// `>`
+    Gt,
+    /// `>=`
+    Ge,
+}
+
+impl CmpOp {
+    fn of(op: BinOp) -> Option<CmpOp> {
+        match op {
+            BinOp::Eq => Some(CmpOp::Eq),
+            BinOp::Ne => Some(CmpOp::Ne),
+            BinOp::Lt => Some(CmpOp::Lt),
+            BinOp::Le => Some(CmpOp::Le),
+            BinOp::Gt => Some(CmpOp::Gt),
+            BinOp::Ge => Some(CmpOp::Ge),
+            _ => None,
+        }
+    }
+
+    fn apply(self, o: Ordering) -> bool {
+        match self {
+            CmpOp::Eq => o == Ordering::Equal,
+            CmpOp::Ne => o != Ordering::Equal,
+            CmpOp::Lt => o == Ordering::Less,
+            CmpOp::Le => o != Ordering::Greater,
+            CmpOp::Gt => o == Ordering::Greater,
+            CmpOp::Ge => o != Ordering::Less,
+        }
+    }
+}
+
+/// An `i64`-typed compiled expression.
+#[derive(Clone, Debug)]
+pub enum EI {
+    /// Integer literal.
+    Const(i64),
+    /// Parameter lane `i[n]`.
+    Var(u8),
+    /// `a + b` (same overflow behavior as the interpreter's plain `+`).
+    Add(Box<EI>, Box<EI>),
+    /// `a - b`.
+    Sub(Box<EI>, Box<EI>),
+    /// `a * b`.
+    Mul(Box<EI>, Box<EI>),
+    /// `a / b` (panics on zero, like the interpreter).
+    Div(Box<EI>, Box<EI>),
+    /// `a % b`.
+    Rem(Box<EI>, Box<EI>),
+    /// `-a`.
+    Neg(Box<EI>),
+    /// `abs(a)`.
+    Abs(Box<EI>),
+    /// `min(a, b)`.
+    Min(Box<EI>, Box<EI>),
+    /// `max(a, b)`.
+    Max(Box<EI>, Box<EI>),
+    /// `int(f)` — truncating cast, the interpreter's `F64 → I64` rule.
+    Trunc(Box<EF>),
+}
+
+/// An `f64`-typed compiled expression.
+#[derive(Clone, Debug)]
+pub enum EF {
+    /// Float literal.
+    Const(f64),
+    /// Parameter lane `f[n]`.
+    Var(u8),
+    /// `a + b`.
+    Add(Box<EF>, Box<EF>),
+    /// `a - b`.
+    Sub(Box<EF>, Box<EF>),
+    /// `a * b`.
+    Mul(Box<EF>, Box<EF>),
+    /// `a / b`.
+    Div(Box<EF>, Box<EF>),
+    /// `-a`.
+    Neg(Box<EF>),
+    /// `abs(a)`.
+    Abs(Box<EF>),
+    /// `min(a, b)` under the IEEE total order (the interpreter compares
+    /// `Value`s, which order floats by the total-order bit trick).
+    Min(Box<EF>, Box<EF>),
+    /// `max(a, b)` under the IEEE total order.
+    Max(Box<EF>, Box<EF>),
+    /// `float(i)` / implicit widening of a mixed-arithmetic operand.
+    FromI(Box<EI>),
+}
+
+/// A `bool`-typed compiled expression.
+#[derive(Clone, Debug)]
+pub enum EB {
+    /// Boolean literal.
+    Const(bool),
+    /// Parameter lane `b[n]`.
+    Var(u8),
+    /// `!a`.
+    Not(Box<EB>),
+    /// `a && b` — STRICT, both sides evaluate (interpreter semantics).
+    And(Box<EB>, Box<EB>),
+    /// `a || b` — strict.
+    Or(Box<EB>, Box<EB>),
+    /// Integer comparison.
+    CmpI(CmpOp, Box<EI>, Box<EI>),
+    /// Float comparison under the IEEE total order: `NaN == NaN` holds and
+    /// `0.0 == -0.0` does NOT — exactly `Value`'s `Ord`, deliberately not
+    /// IEEE `==`.
+    CmpF(CmpOp, Box<EF>, Box<EF>),
+    /// Boolean comparison (`false < true`).
+    CmpB(CmpOp, Box<EB>, Box<EB>),
+}
+
+impl EI {
+    /// Evaluate against a slot environment.
+    pub fn eval(&self, s: &Slots) -> i64 {
+        match self {
+            EI::Const(v) => *v,
+            EI::Var(n) => s.i[*n as usize],
+            EI::Add(a, b) => a.eval(s) + b.eval(s),
+            EI::Sub(a, b) => a.eval(s) - b.eval(s),
+            EI::Mul(a, b) => a.eval(s) * b.eval(s),
+            EI::Div(a, b) => a.eval(s) / b.eval(s),
+            EI::Rem(a, b) => a.eval(s) % b.eval(s),
+            EI::Neg(a) => -a.eval(s),
+            EI::Abs(a) => a.eval(s).abs(),
+            EI::Min(a, b) => a.eval(s).min(b.eval(s)),
+            EI::Max(a, b) => a.eval(s).max(b.eval(s)),
+            EI::Trunc(f) => f.eval(s) as i64,
+        }
+    }
+}
+
+impl EF {
+    /// Evaluate against a slot environment.
+    pub fn eval(&self, s: &Slots) -> f64 {
+        match self {
+            EF::Const(v) => *v,
+            EF::Var(n) => s.f[*n as usize],
+            EF::Add(a, b) => a.eval(s) + b.eval(s),
+            EF::Sub(a, b) => a.eval(s) - b.eval(s),
+            EF::Mul(a, b) => a.eval(s) * b.eval(s),
+            EF::Div(a, b) => a.eval(s) / b.eval(s),
+            EF::Neg(a) => -a.eval(s),
+            EF::Abs(a) => a.eval(s).abs(),
+            // `min(a, b)` in the interpreter is `if a <= b { a } else { b }`
+            // over `Value`s, i.e. total order — NOT f64::min NaN handling.
+            EF::Min(a, b) => {
+                let (x, y) = (a.eval(s), b.eval(s));
+                if x.total_cmp(&y) != Ordering::Greater { x } else { y }
+            }
+            EF::Max(a, b) => {
+                let (x, y) = (a.eval(s), b.eval(s));
+                if x.total_cmp(&y) != Ordering::Less { x } else { y }
+            }
+            EF::FromI(a) => a.eval(s) as f64,
+        }
+    }
+}
+
+impl EB {
+    /// Evaluate against a slot environment.
+    pub fn eval(&self, s: &Slots) -> bool {
+        match self {
+            EB::Const(v) => *v,
+            EB::Var(n) => s.b[*n as usize],
+            EB::Not(a) => !a.eval(s),
+            // Strict: evaluate both sides (a panicking RHS must panic here
+            // exactly as it does in the interpreter).
+            EB::And(a, b) => {
+                let (x, y) = (a.eval(s), b.eval(s));
+                x && y
+            }
+            EB::Or(a, b) => {
+                let (x, y) = (a.eval(s), b.eval(s));
+                x || y
+            }
+            EB::CmpI(c, a, b) => c.apply(a.eval(s).cmp(&b.eval(s))),
+            EB::CmpF(c, a, b) => c.apply(a.eval(s).total_cmp(&b.eval(s))),
+            EB::CmpB(c, a, b) => c.apply(a.eval(s).cmp(&b.eval(s))),
+        }
+    }
+}
+
+/// A compiled scalar expression, tagged by its static type.
+#[derive(Clone, Debug)]
+pub enum ScalarExpr {
+    /// Produces `i64`.
+    I(EI),
+    /// Produces `f64`.
+    F(EF),
+    /// Produces `bool`.
+    B(EB),
+}
+
+/// Output shape of a compiled 1-parameter UDF. Pair outputs are
+/// restricted to the SoA layouts [`ColumnBatch`] supports (`i64` key).
+#[derive(Clone, Debug)]
+pub enum OutShape {
+    /// A scalar column.
+    Scalar(ScalarExpr),
+    /// `pair(i64, i64)` key/value columns.
+    PairII(EI, EI),
+    /// `pair(i64, f64)` key/value columns.
+    PairIF(EI, EF),
+}
+
+/// A 1-parameter UDF compiled against a concrete input element type.
+/// Produced by [`compile_udf1`]; applied batch-at-a-time by the typed
+/// kernels in `ops::`.
+#[derive(Clone, Debug)]
+pub struct TypedUdf1 {
+    in_ty: ElemType,
+    shape: OutShape,
+}
+
+/// A 2-parameter combiner compiled against a concrete operand type. Only
+/// type-preserving combiners compile (`(t, t) → t`) — the accumulator of
+/// `reduceByKey`/`reduce` must keep its type across merges.
+#[derive(Clone, Debug)]
+pub enum TypedUdf2 {
+    /// `(i64, i64) → i64`.
+    I64(EI),
+    /// `(f64, f64) → f64`.
+    F64(EF),
+}
+
+impl TypedUdf1 {
+    /// The input element type this UDF was compiled against.
+    pub fn input_type(&self) -> &ElemType {
+        &self.in_ty
+    }
+
+    /// The statically-known output element type.
+    pub fn out_type(&self) -> ElemType {
+        match &self.shape {
+            OutShape::Scalar(ScalarExpr::I(_)) => ElemType::I64,
+            OutShape::Scalar(ScalarExpr::F(_)) => ElemType::F64,
+            OutShape::Scalar(ScalarExpr::B(_)) => ElemType::Bool,
+            OutShape::PairII(..) => {
+                ElemType::Pair(Box::new(ElemType::I64), Box::new(ElemType::I64))
+            }
+            OutShape::PairIF(..) => {
+                ElemType::Pair(Box::new(ElemType::I64), Box::new(ElemType::F64))
+            }
+        }
+    }
+
+    /// Whether `batch` has the column layout this UDF's slot loader
+    /// expects (the layout of [`Self::input_type`]).
+    fn layout_matches(&self, batch: &ColumnBatch) -> bool {
+        std::mem::discriminant(batch)
+            == std::mem::discriminant(&ColumnBatch::empty_for(&self.in_ty))
+            && !matches!(batch, ColumnBatch::Dyn(_))
+    }
+
+    /// Map a whole decoded batch through the compiled body. `None` when
+    /// the batch's layout does not match the compiled input type (the
+    /// caller falls back to the dynamic path).
+    pub fn map_batch(&self, input: &ColumnBatch) -> Option<ColumnBatch> {
+        if !self.layout_matches(input) {
+            return None;
+        }
+        let n = input.len();
+        let mut s = Slots::default();
+        Some(match &self.shape {
+            OutShape::Scalar(ScalarExpr::I(e)) => {
+                let mut out = Vec::with_capacity(n);
+                for r in 0..n {
+                    load_row(input, r, &mut s);
+                    out.push(e.eval(&s));
+                }
+                ColumnBatch::I64(out)
+            }
+            OutShape::Scalar(ScalarExpr::F(e)) => {
+                let mut out = Vec::with_capacity(n);
+                for r in 0..n {
+                    load_row(input, r, &mut s);
+                    out.push(e.eval(&s));
+                }
+                ColumnBatch::F64(out)
+            }
+            OutShape::Scalar(ScalarExpr::B(e)) => {
+                let mut out = Vec::with_capacity(n);
+                for r in 0..n {
+                    load_row(input, r, &mut s);
+                    out.push(e.eval(&s));
+                }
+                ColumnBatch::Bool(out)
+            }
+            OutShape::PairII(ke, ve) => {
+                let (mut k, mut v) = (Vec::with_capacity(n), Vec::with_capacity(n));
+                for r in 0..n {
+                    load_row(input, r, &mut s);
+                    k.push(ke.eval(&s));
+                    v.push(ve.eval(&s));
+                }
+                ColumnBatch::PairII { k, v }
+            }
+            OutShape::PairIF(ke, ve) => {
+                let (mut k, mut v) = (Vec::with_capacity(n), Vec::with_capacity(n));
+                for r in 0..n {
+                    load_row(input, r, &mut s);
+                    k.push(ke.eval(&s));
+                    v.push(ve.eval(&s));
+                }
+                ColumnBatch::PairIF { k, v }
+            }
+        })
+    }
+
+    /// Filter a decoded batch in place (compacting survivors to the
+    /// front, preserving order). Returns the surviving count; `None` when
+    /// this UDF is not a predicate or the layout does not match.
+    pub fn filter_batch(&self, batch: &mut ColumnBatch) -> Option<usize> {
+        let OutShape::Scalar(ScalarExpr::B(pred)) = &self.shape else {
+            return None;
+        };
+        if !self.layout_matches(batch) {
+            return None;
+        }
+        let mut s = Slots::default();
+        let n = batch.len();
+        let mut w = 0;
+        // Per-variant compaction keeps parallel columns index-synchronized.
+        match batch {
+            ColumnBatch::I64(c) => {
+                for r in 0..n {
+                    s.i[0] = c[r];
+                    if pred.eval(&s) {
+                        c[w] = c[r];
+                        w += 1;
+                    }
+                }
+                c.truncate(w);
+            }
+            ColumnBatch::F64(c) => {
+                for r in 0..n {
+                    s.f[0] = c[r];
+                    if pred.eval(&s) {
+                        c[w] = c[r];
+                        w += 1;
+                    }
+                }
+                c.truncate(w);
+            }
+            ColumnBatch::Bool(c) => {
+                for r in 0..n {
+                    s.b[0] = c[r];
+                    if pred.eval(&s) {
+                        c[w] = c[r];
+                        w += 1;
+                    }
+                }
+                c.truncate(w);
+            }
+            ColumnBatch::PairII { k, v } => {
+                for r in 0..n {
+                    s.i[0] = k[r];
+                    s.i[1] = v[r];
+                    if pred.eval(&s) {
+                        k[w] = k[r];
+                        v[w] = v[r];
+                        w += 1;
+                    }
+                }
+                k.truncate(w);
+                v.truncate(w);
+            }
+            ColumnBatch::PairIF { k, v } => {
+                for r in 0..n {
+                    s.i[0] = k[r];
+                    s.f[1] = v[r];
+                    if pred.eval(&s) {
+                        k[w] = k[r];
+                        v[w] = v[r];
+                        w += 1;
+                    }
+                }
+                k.truncate(w);
+                v.truncate(w);
+            }
+            ColumnBatch::Dyn(_) => return None,
+        }
+        Some(w)
+    }
+}
+
+/// Fill the parameter slots from row `r` of a decoded batch. The caller
+/// guarantees the variant matches the compiled layout (`layout_matches`).
+fn load_row(batch: &ColumnBatch, r: usize, s: &mut Slots) {
+    match batch {
+        ColumnBatch::I64(c) => s.i[0] = c[r],
+        ColumnBatch::F64(c) => s.f[0] = c[r],
+        ColumnBatch::Bool(c) => s.b[0] = c[r],
+        ColumnBatch::PairII { k, v } => {
+            s.i[0] = k[r];
+            s.i[1] = v[r];
+        }
+        ColumnBatch::PairIF { k, v } => {
+            s.i[0] = k[r];
+            s.f[1] = v[r];
+        }
+        ColumnBatch::Dyn(_) => unreachable!("load_row on Dyn batch"),
+    }
+}
+
+impl TypedUdf2 {
+    /// Combine two dynamic values through the compiled body. `None` when
+    /// the runtime variants do not match the compiled operand type — the
+    /// caller falls back to `Udf2::call`.
+    pub fn combine(&self, a: &Value, b: &Value) -> Option<Value> {
+        match (self, a, b) {
+            (TypedUdf2::I64(e), Value::I64(x), Value::I64(y)) => {
+                let mut s = Slots::default();
+                s.i[0] = *x;
+                s.i[1] = *y;
+                Some(Value::I64(e.eval(&s)))
+            }
+            (TypedUdf2::F64(e), Value::F64(x), Value::F64(y)) => {
+                let mut s = Slots::default();
+                s.f[0] = *x;
+                s.f[1] = *y;
+                Some(Value::F64(e.eval(&s)))
+            }
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compilation
+// ---------------------------------------------------------------------------
+
+/// Scalar lane kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Sc {
+    I,
+    F,
+    B,
+}
+
+fn scalar_sc(t: &ElemType) -> Option<Sc> {
+    match t {
+        ElemType::I64 => Some(Sc::I),
+        ElemType::F64 => Some(Sc::F),
+        ElemType::Bool => Some(Sc::B),
+        _ => None,
+    }
+}
+
+/// How a lambda parameter maps onto slot lanes.
+#[derive(Clone, Copy, Debug)]
+enum ParamShape {
+    /// A scalar parameter in lane `(kind, index)`.
+    Scalar(Sc, u8),
+    /// A pair parameter: key lane + payload lane.
+    PairKV(Sc, u8, Sc, u8),
+}
+
+struct Cx<'a> {
+    params: &'a [String],
+    shapes: Vec<ParamShape>,
+}
+
+impl Cx<'_> {
+    fn lookup(&self, name: &str) -> Option<ParamShape> {
+        let i = self.params.iter().position(|p| p == name)?;
+        self.shapes.get(i).copied()
+    }
+}
+
+fn sc_var(sc: Sc, slot: u8) -> ScalarExpr {
+    match sc {
+        Sc::I => ScalarExpr::I(EI::Var(slot)),
+        Sc::F => ScalarExpr::F(EF::Var(slot)),
+        Sc::B => ScalarExpr::B(EB::Var(slot)),
+    }
+}
+
+fn widen_f(e: ScalarExpr) -> Option<EF> {
+    match e {
+        ScalarExpr::F(e) => Some(e),
+        ScalarExpr::I(e) => Some(EF::FromI(Box::new(e))),
+        ScalarExpr::B(_) => None,
+    }
+}
+
+fn bx<T>(v: T) -> Box<T> {
+    Box::new(v)
+}
+
+/// Compile a closed lambda body to a typed scalar expression; `None`
+/// wherever the interpreter's dynamic semantics cannot be reproduced
+/// monomorphically (strings, mixed-type comparisons, coercing builtins).
+fn compile_scalar(e: &Expr, cx: &Cx) -> Option<ScalarExpr> {
+    match e {
+        Expr::Int(v) => Some(ScalarExpr::I(EI::Const(*v))),
+        Expr::Float(v) => Some(ScalarExpr::F(EF::Const(*v))),
+        Expr::Bool(v) => Some(ScalarExpr::B(EB::Const(*v))),
+        Expr::Str(_) => None,
+        Expr::Var(name) => match cx.lookup(name)? {
+            ParamShape::Scalar(sc, slot) => Some(sc_var(sc, slot)),
+            // A whole-pair reference is not a scalar (only valid as the
+            // identity output shape, handled in `compile_out`).
+            ParamShape::PairKV(..) => None,
+        },
+        Expr::Un(UnOp::Neg, x) => match compile_scalar(x, cx)? {
+            ScalarExpr::I(e) => Some(ScalarExpr::I(EI::Neg(bx(e)))),
+            ScalarExpr::F(e) => Some(ScalarExpr::F(EF::Neg(bx(e)))),
+            ScalarExpr::B(_) => None,
+        },
+        Expr::Un(UnOp::Not, x) => match compile_scalar(x, cx)? {
+            ScalarExpr::B(e) => Some(ScalarExpr::B(EB::Not(bx(e)))),
+            _ => None,
+        },
+        Expr::Bin(op, l, r) => {
+            let a = compile_scalar(l, cx)?;
+            let b = compile_scalar(r, cx)?;
+            compile_bin(*op, a, b)
+        }
+        Expr::Call(name, args) => compile_call(name, args, cx),
+        Expr::Method(..) | Expr::Lambda(..) => None,
+    }
+}
+
+fn compile_bin(op: BinOp, a: ScalarExpr, b: ScalarExpr) -> Option<ScalarExpr> {
+    use BinOp::*;
+    match op {
+        Add | Sub | Mul | Div => match (a, b) {
+            // Both statically I64: plain integer arithmetic (the
+            // interpreter's `(I64, I64)` arm).
+            (ScalarExpr::I(x), ScalarExpr::I(y)) => {
+                let c = match op {
+                    Add => EI::Add,
+                    Sub => EI::Sub,
+                    Mul => EI::Mul,
+                    Div => EI::Div,
+                    _ => unreachable!(),
+                };
+                Some(ScalarExpr::I(c(bx(x), bx(y))))
+            }
+            // Mixed numeric: widen both to f64 (the interpreter's
+            // `as_f64` fallback arm). Bool operands would panic there —
+            // bail so the dynamic path reproduces the panic.
+            (a @ (ScalarExpr::I(_) | ScalarExpr::F(_)), b @ (ScalarExpr::I(_) | ScalarExpr::F(_))) => {
+                let x = widen_f(a)?;
+                let y = widen_f(b)?;
+                let c = match op {
+                    Add => EF::Add,
+                    Sub => EF::Sub,
+                    Mul => EF::Mul,
+                    Div => EF::Div,
+                    _ => unreachable!(),
+                };
+                Some(ScalarExpr::F(c(bx(x), bx(y))))
+            }
+            _ => None,
+        },
+        // The interpreter coerces via `as_i64` (which maps Bool → 0/1 and
+        // panics on F64); only the statically-I64 case is compiled.
+        Rem => match (a, b) {
+            (ScalarExpr::I(x), ScalarExpr::I(y)) => Some(ScalarExpr::I(EI::Rem(bx(x), bx(y)))),
+            _ => None,
+        },
+        Eq | Ne | Lt | Le | Gt | Ge => {
+            let c = CmpOp::of(op)?;
+            match (a, b) {
+                (ScalarExpr::I(x), ScalarExpr::I(y)) => {
+                    Some(ScalarExpr::B(EB::CmpI(c, bx(x), bx(y))))
+                }
+                (ScalarExpr::F(x), ScalarExpr::F(y)) => {
+                    Some(ScalarExpr::B(EB::CmpF(c, bx(x), bx(y))))
+                }
+                (ScalarExpr::B(x), ScalarExpr::B(y)) => {
+                    Some(ScalarExpr::B(EB::CmpB(c, bx(x), bx(y))))
+                }
+                // Mixed static types compare by discriminant RANK in the
+                // `Value` total order (I64 < F64 always) — never compile.
+                _ => None,
+            }
+        }
+        And | Or => match (a, b) {
+            (ScalarExpr::B(x), ScalarExpr::B(y)) => {
+                let c = if op == And { EB::And } else { EB::Or };
+                Some(ScalarExpr::B(c(bx(x), bx(y))))
+            }
+            _ => None,
+        },
+    }
+}
+
+fn compile_call(name: &str, args: &[Expr], cx: &Cx) -> Option<ScalarExpr> {
+    match (name, args) {
+        // Pair component access, only on a direct parameter reference.
+        // `key` on a scalar parameter is the identity (the key of a
+        // non-pair is the whole value); `fst`/`snd` on a scalar would
+        // panic and `payload` would yield Unit — those bail.
+        ("fst" | "key" | "snd" | "payload", [Expr::Var(p)]) => match (name, cx.lookup(p)?) {
+            ("fst" | "key", ParamShape::PairKV(ks, ki, _, _)) => Some(sc_var(ks, ki)),
+            ("snd" | "payload", ParamShape::PairKV(_, _, vs, vi)) => Some(sc_var(vs, vi)),
+            ("key", ParamShape::Scalar(sc, slot)) => Some(sc_var(sc, slot)),
+            _ => None,
+        },
+        ("abs", [x]) => match compile_scalar(x, cx)? {
+            ScalarExpr::I(e) => Some(ScalarExpr::I(EI::Abs(bx(e)))),
+            ScalarExpr::F(e) => Some(ScalarExpr::F(EF::Abs(bx(e)))),
+            ScalarExpr::B(_) => None,
+        },
+        ("min" | "max", [a, b]) => {
+            let a = compile_scalar(a, cx)?;
+            let b = compile_scalar(b, cx)?;
+            let mx = name == "max";
+            match (a, b) {
+                (ScalarExpr::I(x), ScalarExpr::I(y)) => {
+                    let c = if mx { EI::Max } else { EI::Min };
+                    Some(ScalarExpr::I(c(bx(x), bx(y))))
+                }
+                (ScalarExpr::F(x), ScalarExpr::F(y)) => {
+                    let c = if mx { EF::Max } else { EF::Min };
+                    Some(ScalarExpr::F(c(bx(x), bx(y))))
+                }
+                // Mixed operands rank-compare in the interpreter.
+                _ => None,
+            }
+        }
+        ("int", [x]) => match compile_scalar(x, cx)? {
+            ScalarExpr::I(e) => Some(ScalarExpr::I(e)),
+            ScalarExpr::F(e) => Some(ScalarExpr::I(EI::Trunc(bx(e)))),
+            ScalarExpr::B(_) => None,
+        },
+        ("float", [x]) => match compile_scalar(x, cx)? {
+            ScalarExpr::I(e) => Some(ScalarExpr::F(EF::FromI(bx(e)))),
+            ScalarExpr::F(e) => Some(ScalarExpr::F(e)),
+            ScalarExpr::B(_) => None,
+        },
+        // Everything else (str/hash/field/len/tuple/nth, nested pair) is
+        // dynamic-only.
+        _ => None,
+    }
+}
+
+fn shape_of(t: &ElemType) -> Option<ParamShape> {
+    match t {
+        ElemType::I64 => Some(ParamShape::Scalar(Sc::I, 0)),
+        ElemType::F64 => Some(ParamShape::Scalar(Sc::F, 0)),
+        ElemType::Bool => Some(ParamShape::Scalar(Sc::B, 0)),
+        ElemType::Pair(k, v) => {
+            let ks = scalar_sc(k)?;
+            let vs = scalar_sc(v)?;
+            Some(ParamShape::PairKV(ks, 0, vs, 1))
+        }
+        _ => None,
+    }
+}
+
+/// Compile a 1-parameter UDF against a concrete input element type.
+/// Requires parser-attached expression metadata (`Udf1::expr`); opaque
+/// Rust closures always return `None`.
+pub fn compile_udf1(u: &Udf1, in_ty: &ElemType) -> Option<TypedUdf1> {
+    let e = u.expr.as_ref()?;
+    let (params, body) = (&e.0, &e.1);
+    if params.len() != 1 {
+        return None;
+    }
+    let cx = Cx { params, shapes: vec![shape_of(in_ty)?] };
+    let shape = compile_out(body, &cx)?;
+    Some(TypedUdf1 { in_ty: in_ty.clone(), shape })
+}
+
+fn compile_out(body: &Expr, cx: &Cx) -> Option<OutShape> {
+    // Top-level `pair(k, v)` builds key/value columns directly; only the
+    // SoA-supported layouts (i64 key) compile.
+    if let Expr::Call(name, args) = body {
+        if name == "pair" && args.len() == 2 {
+            let k = compile_scalar(&args[0], cx)?;
+            let v = compile_scalar(&args[1], cx)?;
+            return match (k, v) {
+                (ScalarExpr::I(k), ScalarExpr::I(v)) => Some(OutShape::PairII(k, v)),
+                (ScalarExpr::I(k), ScalarExpr::F(v)) => Some(OutShape::PairIF(k, v)),
+                _ => None,
+            };
+        }
+    }
+    // Identity over a pair parameter re-emits both components.
+    if let Expr::Var(name) = body {
+        if let Some(ParamShape::PairKV(ks, ki, vs, vi)) = cx.lookup(name) {
+            return match (ks, vs) {
+                (Sc::I, Sc::I) => Some(OutShape::PairII(EI::Var(ki), EI::Var(vi))),
+                (Sc::I, Sc::F) => Some(OutShape::PairIF(EI::Var(ki), EF::Var(vi))),
+                _ => None,
+            };
+        }
+    }
+    Some(OutShape::Scalar(compile_scalar(body, cx)?))
+}
+
+/// Compile a 2-parameter combiner against a concrete operand type. Only
+/// type-preserving bodies compile (see [`TypedUdf2`]).
+pub fn compile_udf2(u: &Udf2, operand: &ElemType) -> Option<TypedUdf2> {
+    let e = u.expr.as_ref()?;
+    let (params, body) = (&e.0, &e.1);
+    if params.len() != 2 {
+        return None;
+    }
+    let sc = scalar_sc(operand)?;
+    let cx = Cx {
+        params,
+        shapes: vec![ParamShape::Scalar(sc, 0), ParamShape::Scalar(sc, 1)],
+    };
+    match (sc, compile_scalar(body, &cx)?) {
+        (Sc::I, ScalarExpr::I(e)) => Some(TypedUdf2::I64(e)),
+        (Sc::F, ScalarExpr::F(e)) => Some(TypedUdf2::F64(e)),
+        _ => None,
+    }
+}
+
+/// One compiled stage of a fused chain.
+#[derive(Clone, Debug)]
+pub enum TypedStage {
+    /// A map stage.
+    Map(TypedUdf1),
+    /// A filter stage (in-place compaction).
+    Filter(TypedUdf1),
+}
+
+/// Compile an entire fused chain against its input type. `None` unless
+/// EVERY stage compiles (a flatMap stage, an opaque UDF, or an
+/// unsupported intermediate type each sink the whole chain — partial
+/// typed chains would re-encode mid-pipeline and lose the win). Returns
+/// the stages plus the chain's output element type.
+pub fn compile_chain(
+    stages: &[FusedStage],
+    in_ty: &ElemType,
+) -> Option<(Vec<TypedStage>, ElemType)> {
+    let mut t = in_ty.clone();
+    let mut out = Vec::with_capacity(stages.len());
+    for s in stages {
+        match s {
+            FusedStage::Map(u) => {
+                let c = compile_udf1(u, &t)?;
+                t = c.out_type();
+                out.push(TypedStage::Map(c));
+            }
+            FusedStage::Filter(u) => {
+                let c = compile_udf1(u, &t)?;
+                if !matches!(c.out_type(), ElemType::Bool) {
+                    return None;
+                }
+                out.push(TypedStage::Filter(c));
+            }
+            FusedStage::FlatMap(_) => return None,
+        }
+    }
+    // Intermediate and output layouts must all be decodable columns.
+    if !ColumnBatch::supports(in_ty) || !ColumnBatch::supports(&t) {
+        return None;
+    }
+    Some((out, t))
+}
+
+// ---------------------------------------------------------------------------
+// Per-edge inference
+// ---------------------------------------------------------------------------
+
+/// Derive the output element type of every node by forward fixpoint (see
+/// the module docs). The result is indexed by [`crate::dataflow::NodeId`];
+/// nodes the analysis cannot pin down get [`ElemType::Dyn`].
+pub fn infer(g: &DataflowGraph) -> Vec<ElemType> {
+    let n = g.nodes.len();
+    // `None` = not yet computed (optimistic bottom, resolved through Φ
+    // init arms before back-edges are consulted).
+    let mut ty: Vec<Option<ElemType>> = vec![None; n];
+    for _round in 0..=n {
+        let mut changed = false;
+        for node in &g.nodes {
+            let computed = node_out_type(node, &ty);
+            if computed != ty[node.id] {
+                ty[node.id] = computed;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    ty.into_iter().map(|t| t.unwrap_or(ElemType::Dyn)).collect()
+}
+
+/// Number of edges whose source type is fully static (reported as
+/// `opt.typed_edges`).
+pub fn typed_edge_count(g: &DataflowGraph, types: &[ElemType]) -> usize {
+    g.nodes
+        .iter()
+        .flat_map(|n| n.inputs.iter())
+        .filter(|i| types.get(i.src).is_some_and(ElemType::is_typed))
+        .count()
+}
+
+fn key_payload(t: &ElemType) -> (ElemType, ElemType) {
+    match t {
+        ElemType::Pair(k, v) => ((**k).clone(), (**v).clone()),
+        // `Value::key()` of a non-empty tuple is its first component; of
+        // anything else, the whole value (payload Unit → Dyn).
+        ElemType::Tuple(ts) if !ts.is_empty() => (ts[0].clone(), ElemType::Dyn),
+        ElemType::Dyn => (ElemType::Dyn, ElemType::Dyn),
+        other => (other.clone(), ElemType::Dyn),
+    }
+}
+
+fn map_out(udf: &Udf1, in_ty: &ElemType) -> ElemType {
+    match compile_udf1(udf, in_ty) {
+        Some(c) => c.out_type(),
+        None => ElemType::Dyn,
+    }
+}
+
+fn node_out_type(node: &Node, ty: &[Option<ElemType>]) -> Option<ElemType> {
+    let input = |i: usize| -> Option<ElemType> { ty[node.inputs[i].src].clone() };
+    Some(match &node.op {
+        Rhs::Const(v) => ElemType::of_value(v),
+        Rhs::BagLit(_) | Rhs::NamedSource(_) => {
+            node.elem_hint.clone().unwrap_or(ElemType::Dyn)
+        }
+        Rhs::ReadFile { .. } => ElemType::Str,
+        // Unit outputs (side-effect sinks) stay dynamic.
+        Rhs::WriteFile { .. } | Rhs::Collect { .. } => ElemType::Dyn,
+        Rhs::Map { udf, .. } => map_out(udf, &input(0)?),
+        Rhs::Filter { .. } | Rhs::Distinct { .. } => input(0)?,
+        Rhs::FlatMap { .. } => ElemType::Dyn, // UdfN carries no expr metadata
+        Rhs::Fused { stages, .. } => {
+            let mut t = input(0)?;
+            for s in stages {
+                t = match s {
+                    FusedStage::Map(u) => map_out(u, &t),
+                    FusedStage::Filter(_) => t, // predicate cannot change the type
+                    FusedStage::FlatMap(_) => ElemType::Dyn,
+                };
+            }
+            t
+        }
+        Rhs::Join { .. } => {
+            let (lk, lv) = key_payload(&input(0)?);
+            let (rk, rv) = key_payload(&input(1)?);
+            ElemType::Pair(
+                Box::new(lk.join(&rk)),
+                Box::new(ElemType::Pair(Box::new(lv), Box::new(rv))),
+            )
+        }
+        Rhs::ReduceByKey { udf, .. } => match input(0)? {
+            ElemType::Pair(k, v) => {
+                // The combiner must provably preserve the value type;
+                // otherwise merged values may drift and only the key
+                // column stays static.
+                let v = if compile_udf2(udf, &v).is_some() { v } else { Box::new(ElemType::Dyn) };
+                ElemType::Pair(k, v)
+            }
+            _ => ElemType::Dyn,
+        },
+        Rhs::Reduce { udf, .. } => {
+            let t = input(0)?;
+            if compile_udf2(udf, &t).is_some() { t } else { ElemType::Dyn }
+        }
+        Rhs::Count { .. } => ElemType::I64,
+        Rhs::Union { .. } => input(0)?.join(&input(1)?),
+        Rhs::Cross { .. } => {
+            ElemType::Pair(Box::new(input(0)?), Box::new(input(1)?))
+        }
+        Rhs::Phi(_) => {
+            // Optimistic join over the arms resolved so far; a Φ with no
+            // resolved arm stays bottom this round.
+            let resolved: Vec<ElemType> =
+                node.inputs.iter().filter_map(|i| ty[i.src].clone()).collect();
+            return resolved.into_iter().reduce(|a, b| a.join(&b));
+        }
+        Rhs::XlaCall { .. } => ElemType::Dyn,
+        Rhs::Copy(_) | Rhs::ScalarUn { .. } | Rhs::ScalarBin { .. } => ElemType::Dyn,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::interp_expr;
+    use crate::frontend::lexer::lex;
+    use crate::frontend::{ast, parser};
+
+    fn lambda(src: &str) -> (Vec<String>, ast::Expr) {
+        let ast = parser::parse(&lex(&format!("x = {src};")).unwrap()).unwrap();
+        match &ast.stmts[0] {
+            ast::Stmt::Assign(_, ast::Expr::Lambda(ps, body)) => (ps.clone(), (**body).clone()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    fn udf1(src: &str) -> Udf1 {
+        let (ps, body) = lambda(src);
+        interp_expr::compile_udf1(ps, body, "t".into()).unwrap()
+    }
+
+    fn udf2(src: &str) -> Udf2 {
+        let (ps, body) = lambda(src);
+        interp_expr::compile_udf2(ps, body, "t".into()).unwrap()
+    }
+
+    fn pair_ty(k: ElemType, v: ElemType) -> ElemType {
+        ElemType::Pair(Box::new(k), Box::new(v))
+    }
+
+    #[test]
+    fn gate_parses_and_gates() {
+        assert_eq!(ColumnarGate::parse("ALWAYS").unwrap(), ColumnarGate::Always);
+        assert!(ColumnarGate::parse("sometimes").is_err());
+        assert!(ColumnarGate::Always.enabled(1));
+        assert!(!ColumnarGate::Never.enabled(64));
+        assert!(!ColumnarGate::Auto.enabled(1));
+        assert!(ColumnarGate::Auto.enabled(64));
+    }
+
+    #[test]
+    fn compiled_maps_agree_with_interpreter() {
+        // (source, input type, inputs) triples; compiled map_batch must
+        // agree element-for-element with the dynamic udf.call.
+        let ints: Vec<Value> = (-4..8).map(Value::I64).collect();
+        for src in [
+            "|x| x * 2 + 1",
+            "|x| x % 3",
+            "|x| pair(x, x * x)",
+            "|x| float(x) / 2.0",
+            "|x| abs(x - 5)",
+            "|x| min(x, 3)",
+            "|x| max(0 - x, x)",
+            "|x| int(float(x) * 1.5)",
+            "|x| pair(x % 2, float(x))",
+        ] {
+            let u = udf1(src);
+            let c = compile_udf1(&u, &ElemType::I64).unwrap_or_else(|| panic!("{src}"));
+            let col = ColumnBatch::from_values(&ints, &ElemType::I64).unwrap();
+            let got = c.map_batch(&col).unwrap().into_values();
+            let want: Vec<Value> = ints.iter().map(|v| u.call(v)).collect();
+            assert_eq!(got, want, "{src}");
+        }
+    }
+
+    #[test]
+    fn compiled_filters_agree_with_interpreter() {
+        let ints: Vec<Value> = (-4..8).map(Value::I64).collect();
+        for src in ["|x| x % 2 == 0", "|x| x > 1 && x < 6", "|x| !(x == 3) || x < 0"] {
+            let u = udf1(src);
+            let c = compile_udf1(&u, &ElemType::I64).unwrap_or_else(|| panic!("{src}"));
+            let mut col = ColumnBatch::from_values(&ints, &ElemType::I64).unwrap();
+            let kept = c.filter_batch(&mut col).unwrap();
+            let want: Vec<Value> =
+                ints.iter().filter(|v| u.call(v) == Value::Bool(true)).cloned().collect();
+            assert_eq!(kept, want.len(), "{src}");
+            assert_eq!(col.into_values(), want, "{src}");
+        }
+    }
+
+    #[test]
+    fn pair_inputs_compile_and_agree() {
+        let t = pair_ty(ElemType::I64, ElemType::F64);
+        let pairs: Vec<Value> = (0..6)
+            .map(|x| Value::pair(Value::I64(x % 3), Value::F64(x as f64 * 0.5)))
+            .collect();
+        for src in [
+            "|p| pair(fst(p), snd(p) + 1.5)",
+            "|p| pair(key(p), payload(p) * 2.0)",
+            "|p| snd(p)",
+            "|p| p",
+        ] {
+            let u = udf1(src);
+            let c = compile_udf1(&u, &t).unwrap_or_else(|| panic!("{src}"));
+            let col = ColumnBatch::from_values(&pairs, &t).unwrap();
+            let got = c.map_batch(&col).unwrap().into_values();
+            let want: Vec<Value> = pairs.iter().map(|v| u.call(v)).collect();
+            assert_eq!(got, want, "{src}");
+        }
+    }
+
+    #[test]
+    fn float_total_order_semantics_preserved() {
+        // Value equality on floats is bit-pattern total order: NaN == NaN,
+        // 0.0 != -0.0. The compiled predicate must reproduce both.
+        let u = udf1("|x| x == x * 1.0");
+        let c = compile_udf1(&u, &ElemType::F64).unwrap();
+        let vs = vec![Value::F64(f64::NAN), Value::F64(0.0), Value::F64(-0.0)];
+        let mut col = ColumnBatch::from_values(&vs, &ElemType::F64).unwrap();
+        let got_kept = c.filter_batch(&mut col).unwrap();
+        let want: Vec<Value> = vs.iter().filter(|v| u.call(v) == Value::Bool(true)).cloned().collect();
+        assert_eq!(got_kept, want.len());
+        assert_eq!(col.into_values(), want);
+    }
+
+    #[test]
+    fn untypable_bodies_bail() {
+        // String concat, mixed-type comparison (rank compare!), unknown
+        // builtin shapes, whole-pair arithmetic: all dynamic-only.
+        for (src, t) in [
+            ("|x| x + \"s\"", ElemType::I64),
+            ("|x| x < 1.5", ElemType::I64), // I64 vs F64 rank-compares
+            ("|x| len(x)", ElemType::Str),
+            ("|p| p + 1", pair_ty(ElemType::I64, ElemType::I64)),
+            ("|x| snd(x)", ElemType::I64), // snd on scalar panics dynamically
+        ] {
+            let u = udf1(src);
+            assert!(compile_udf1(&u, &t).is_none(), "{src}");
+        }
+        // Opaque Rust closures never compile.
+        let native = Udf1::new("native", |v: &Value| v.clone());
+        assert!(compile_udf1(&native, &ElemType::I64).is_none());
+    }
+
+    #[test]
+    fn combiners_compile_and_agree() {
+        let u = udf2("|a, b| a + b");
+        let c = compile_udf2(&u, &ElemType::I64).unwrap();
+        assert_eq!(
+            c.combine(&Value::I64(3), &Value::I64(4)),
+            Some(u.call(&Value::I64(3), &Value::I64(4)))
+        );
+        // Runtime mismatch → None (caller falls back to the dynamic call).
+        assert_eq!(c.combine(&Value::I64(3), &Value::F64(4.0)), None);
+
+        let m = udf2("|a, b| max(a, b)");
+        let cf = compile_udf2(&m, &ElemType::F64).unwrap();
+        let (x, y) = (Value::F64(1.5), Value::F64(f64::NAN));
+        assert_eq!(cf.combine(&x, &y), Some(m.call(&x, &y)));
+
+        // Type-changing combiner must not compile for I64 operands.
+        let d = udf2("|a, b| float(a) + float(b)");
+        assert!(compile_udf2(&d, &ElemType::I64).is_none());
+    }
+
+    #[test]
+    fn chain_compilation_is_all_or_nothing() {
+        let stages = vec![
+            FusedStage::Map(udf1("|x| x * 3")),
+            FusedStage::Filter(udf1("|x| x % 2 == 1")),
+            FusedStage::Map(udf1("|x| pair(x, x + 1)")),
+        ];
+        let (compiled, out) = compile_chain(&stages, &ElemType::I64).unwrap();
+        assert_eq!(compiled.len(), 3);
+        assert_eq!(out, pair_ty(ElemType::I64, ElemType::I64));
+
+        let with_opaque = vec![
+            FusedStage::Map(udf1("|x| x * 3")),
+            FusedStage::Map(Udf1::new("native", |v: &Value| v.clone())),
+        ];
+        assert!(compile_chain(&with_opaque, &ElemType::I64).is_none());
+    }
+
+    #[test]
+    fn inference_types_a_straight_chain() {
+        let p = crate::frontend::parse_and_lower(
+            "a = bag(1, 2, 3); b = a.map(|x| pair(x % 2, x)); c = b.filter(|p| snd(p) > 0); \
+             n = c.count(); collect(c, \"c\");",
+        )
+        .unwrap();
+        let (g, _) = crate::compile_with(&p, &crate::opt::OptConfig::none()).unwrap();
+        let types = infer(&g);
+        let by_name = |s: &str| {
+            let n = g.nodes.iter().find(|n| n.name == s).unwrap();
+            types[n.id].clone()
+        };
+        assert_eq!(by_name("a"), ElemType::I64);
+        assert_eq!(by_name("b"), pair_ty(ElemType::I64, ElemType::I64));
+        assert_eq!(by_name("c"), pair_ty(ElemType::I64, ElemType::I64));
+        assert_eq!(by_name("n"), ElemType::I64);
+        assert!(typed_edge_count(&g, &types) >= 3);
+    }
+
+    #[test]
+    fn inference_fixpoints_across_phi_back_edges() {
+        // Loop-carried scalar keeps I64 through the Φ; the loop-carried
+        // bag of pairs keeps its type through union + reduceByKey.
+        let p = crate::frontend::parse_and_lower(
+            "total = bag(1).map(|x| pair(x, 0)); d = 1; \
+             while (d <= 3) { \
+               fresh = bag(1, 2).map(|x| pair(x, 1)); \
+               total = total.union(fresh).reduceByKey(|a, b| a + b); \
+               d = d + 1; \
+             } collect(total, \"t\");",
+        )
+        .unwrap();
+        let (g, _) = crate::compile_with(&p, &crate::opt::OptConfig::none()).unwrap();
+        let types = infer(&g);
+        // Every Φ over the loop-carried pair bag must resolve to the pair
+        // type, not Dyn — the fixpoint crossed the back-edge.
+        let phi = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Rhs::Phi(_)) && !n.singleton)
+            .expect("bag phi");
+        assert_eq!(types[phi.id], pair_ty(ElemType::I64, ElemType::I64));
+        // Scalar counter Φ is typed too.
+        let counter = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Rhs::Phi(_)) && n.singleton)
+            .expect("counter phi");
+        assert_eq!(types[counter.id], ElemType::I64);
+    }
+}

@@ -10,8 +10,31 @@
 
 use super::SsaProgram;
 use crate::error::Result;
+use crate::frontend::ast::Expr;
 use crate::frontend::{Instr, Rhs, Ty, Udf1, VarInfo};
 use crate::value::Value;
+
+/// Rewrite a two-parameter UDF body into a one-parameter body over the
+/// crossed pair: `a` becomes `fst(p$)`, `b` becomes `snd(p$)`. Returns
+/// `None` for body forms the rewrite does not cover (nested lambdas,
+/// method chains) — the lifted map then simply carries no metadata and
+/// `opt::types` treats it as opaque. `p$` cannot collide with a user
+/// identifier: the lexer rejects `$` in names.
+fn subst_pair(e: &Expr, a: &str, b: &str) -> Option<Expr> {
+    let recur = |x: &Expr| subst_pair(x, a, b);
+    Some(match e {
+        Expr::Var(n) if n == a => Expr::Call("fst".into(), vec![Expr::Var("p$".into())]),
+        Expr::Var(n) if n == b => Expr::Call("snd".into(), vec![Expr::Var("p$".into())]),
+        Expr::Int(_) | Expr::Float(_) | Expr::Str(_) | Expr::Bool(_) | Expr::Var(_) => e.clone(),
+        Expr::Bin(op, l, r) => Expr::Bin(*op, Box::new(recur(l)?), Box::new(recur(r)?)),
+        Expr::Un(op, x) => Expr::Un(*op, Box::new(recur(x)?)),
+        Expr::Call(f, args) => Expr::Call(
+            f.clone(),
+            args.iter().map(recur).collect::<Option<Vec<_>>>()?,
+        ),
+        Expr::Method(..) | Expr::Lambda(..) => return None,
+    })
+}
 
 /// Lift all scalar variables and operations to bags. After this pass every
 /// variable has `Ty::Bag` and no `ScalarUn` / `ScalarBin` / scalar `Const`
@@ -38,12 +61,23 @@ pub fn lift(mut ssa: SsaProgram) -> Result<SsaProgram> {
                     ssa.def_block.push(bi);
                     new_instrs.push(Instr { var: tmp, rhs: Rhs::Cross { left, right } });
                     // map: apply the binary function to the pair
+                    let lifted_expr = udf.expr.as_ref().and_then(|e| {
+                        let (params, body) = (&e.0, &e.1);
+                        if params.len() == 2 {
+                            subst_pair(body, &params[0], &params[1])
+                        } else {
+                            None
+                        }
+                    });
                     let inner = udf;
                     let name = format!("lift<{}>", inner.name);
-                    let udf1 = Udf1::new(name, move |p: &Value| match p {
+                    let mut udf1 = Udf1::new(name, move |p: &Value| match p {
                         Value::Pair(ab) => inner.call(&ab.0, &ab.1),
                         other => panic!("lifted binary op expects a pair, got {other:?}"),
                     });
+                    if let Some(body) = lifted_expr {
+                        udf1 = udf1.with_expr(vec!["p$".into()], body);
+                    }
                     new_instrs.push(Instr {
                         var: instr.var,
                         rhs: Rhs::Map { input: tmp, udf: udf1 },

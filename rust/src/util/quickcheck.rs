@@ -288,6 +288,65 @@ pub fn random_delta_program(seed: u64) -> String {
 /// The collect labels [`random_delta_program`] may emit.
 pub const DELTA_PROGRAM_LABELS: &[&str] = &["total", "reach"];
 
+/// Generate a random LabyLang program whose sources carry statically
+/// known element types — fodder for the `opt::types` inference pass and
+/// the typed columnar kernels. Returns `(program, clean)`: `clean`
+/// means nothing in the program *deliberately* defeats inference — its
+/// hot-chain edges (the inputs of map / filter / fused / reduceByKey /
+/// join nodes) are expected to infer concrete (non-`Dyn`) types.
+/// Roughly a quarter of programs are not clean: a string payload is
+/// threaded through the hot path, collapsing it to `dyn` — the
+/// differential suites must agree on those too, via the dynamic
+/// fallback. The non-vacuousness floor in `columnar_equivalence.rs`
+/// measures actual typedness from the compiled graph, so `clean` is a
+/// generator-side hint, not a per-program guarantee.
+///
+/// Shared by `columnar_equivalence.rs` and its chaos leg.
+pub fn random_typed_program(seed: u64) -> (String, bool) {
+    let mut r = Rng::new(seed);
+    let steps = 2 + r.gen_range(4); // 2..=5
+    let lit: Vec<String> =
+        (0..(4 + r.gen_range(6))).map(|_| r.gen_range(60).to_string()).collect();
+    let lit = lit.join(", ");
+    let a = 1 + r.gen_range(5);
+    let c = r.gen_range(9);
+    let k = 3 + r.gen_range(5);
+    let defeat = r.gen_bool(0.25);
+
+    // Fusible all-i64 element-wise chain — the columnar hot path.
+    let chain = match r.gen_range(3) {
+        0 => format!(".map(|v| v * {a} + {c}).filter(|v| v % 2 == 0)"),
+        1 => format!(".map(|v| v + i).filter(|v| v % 3 != 1).map(|v| v * {a})"),
+        _ => format!(".filter(|v| v >= {c}).map(|v| v - {c})"),
+    };
+    let mut body = format!("    cur = bag({lit}){chain};\n");
+    if defeat {
+        // Defeat inference ON the hot chain: a string element joins the
+        // union, collapsing the carried type to dyn.
+        body.push_str("    cur = cur.union(bag(\"s\").map(|v| v)).filter(|v| true);\n");
+    }
+    if r.gen_bool(0.6) {
+        // Typed keyed aggregation: pair(i64, i64) values.
+        body.push_str(&format!(
+            "    counts = cur.map(|v| pair(v % {k}, 1)).reduceByKey(|a, b| a + b);\n    collect(counts, \"counts\");\n"
+        ));
+    }
+    if r.gen_bool(0.5) {
+        // Typed i64-key join probing an invariant lookup.
+        body.push_str(&format!(
+            "    j = cur.map(|v| pair(v % 7, v)).join(lookup).map(|p| fst(snd(p)) + snd(snd(p)));\n    collect(j, \"joined\");\n"
+        ));
+    }
+    body.push_str("    acc = acc.union(cur);\n");
+    let program = format!(
+        "lookup = bag(0, 1, 2, 3, 4, 5, 6).map(|v| pair(v, v * 100));\nacc = bag();\ni = 0;\nwhile (i < {steps}) {{\n{body}    i = i + 1;\n}}\ncollect(acc, \"acc\");\n"
+    );
+    (program, !defeat)
+}
+
+/// The collect labels [`random_typed_program`] may emit.
+pub const TYPED_PROGRAM_LABELS: &[&str] = &["acc", "counts", "joined"];
+
 /// Channel batch sizes the property suites sweep: 1 turns every element
 /// into a batch boundary (close-marker piggybacking on singleton
 /// batches), 2 and 7 produce partial final flushes at odd offsets, 256

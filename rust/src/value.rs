@@ -133,6 +133,120 @@ impl Value {
     }
 }
 
+/// Static element type of a dataflow edge — the lattice the `opt::types`
+/// inference pass computes over (`docs/columnar.md`). `Dyn` is the top:
+/// anything the analysis cannot pin down (or a join of conflicting
+/// types) stays dynamic and runs on the uniform [`Value`] path. The
+/// inference is *optimistic*: typed kernels re-verify element shapes per
+/// batch and fall back to the dynamic path on mismatch, so a wrong type
+/// here can cost performance but never correctness.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum ElemType {
+    /// 64-bit signed integers.
+    I64,
+    /// 64-bit floats.
+    F64,
+    /// Booleans.
+    Bool,
+    /// Strings.
+    Str,
+    /// Pairs with statically known component types (the key/value shape
+    /// of keyed operators).
+    Pair(Box<ElemType>, Box<ElemType>),
+    /// Tuples with statically known field types.
+    Tuple(Vec<ElemType>),
+    /// Unknown / mixed — the dynamic `Value` path.
+    Dyn,
+}
+
+impl ElemType {
+    /// Least upper bound: equal types join to themselves, pairs/tuples
+    /// join componentwise, anything else collapses to [`ElemType::Dyn`].
+    pub fn join(&self, other: &ElemType) -> ElemType {
+        use ElemType::*;
+        match (self, other) {
+            (a, b) if a == b => a.clone(),
+            (Pair(ak, av), Pair(bk, bv)) => {
+                Pair(Box::new(ak.join(bk)), Box::new(av.join(bv)))
+            }
+            (Tuple(a), Tuple(b)) if a.len() == b.len() => {
+                Tuple(a.iter().zip(b).map(|(x, y)| x.join(y)).collect())
+            }
+            _ => Dyn,
+        }
+    }
+
+    /// The exact static type of one runtime value (`Unit` has no typed
+    /// column representation and maps to `Dyn`).
+    pub fn of_value(v: &Value) -> ElemType {
+        match v {
+            Value::Unit => ElemType::Dyn,
+            Value::Bool(_) => ElemType::Bool,
+            Value::I64(_) => ElemType::I64,
+            Value::F64(_) => ElemType::F64,
+            Value::Str(_) => ElemType::Str,
+            Value::Pair(p) => ElemType::Pair(
+                Box::new(ElemType::of_value(&p.0)),
+                Box::new(ElemType::of_value(&p.1)),
+            ),
+            Value::Tuple(t) => {
+                ElemType::Tuple(t.iter().map(ElemType::of_value).collect())
+            }
+        }
+    }
+
+    /// Is this type fully resolved (no `Dyn` anywhere)?
+    pub fn is_typed(&self) -> bool {
+        match self {
+            ElemType::Dyn => false,
+            ElemType::Pair(k, v) => k.is_typed() && v.is_typed(),
+            ElemType::Tuple(ts) => ts.iter().all(ElemType::is_typed),
+            _ => true,
+        }
+    }
+}
+
+impl fmt::Display for ElemType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ElemType::I64 => write!(f, "i64"),
+            ElemType::F64 => write!(f, "f64"),
+            ElemType::Bool => write!(f, "bool"),
+            ElemType::Str => write!(f, "str"),
+            ElemType::Pair(k, v) => write!(f, "pair({k},{v})"),
+            ElemType::Tuple(ts) => {
+                write!(f, "tuple(")?;
+                for (i, t) in ts.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{t}")?;
+                }
+                write!(f, ")")
+            }
+            ElemType::Dyn => write!(f, "dyn"),
+        }
+    }
+}
+
+/// [`Value::key_hash`] of a bare `I64` key, without building the `Value`:
+/// must produce bit-identical hashes (discriminant rank, then payload) so
+/// columnar kernels can fill the scatter hash buffer from raw key columns.
+pub fn i64_key_hash(k: i64) -> u64 {
+    let mut h = rustc_hash::FxHasher::default();
+    h.write_u8(2); // Value::I64 discriminant rank
+    k.hash(&mut h);
+    h.finish()
+}
+
+/// [`Value::key_hash`] of a bare `F64` key (see [`i64_key_hash`]).
+pub fn f64_key_hash(k: f64) -> u64 {
+    let mut h = rustc_hash::FxHasher::default();
+    h.write_u8(3); // Value::F64 discriminant rank
+    k.to_bits().hash(&mut h);
+    h.finish()
+}
+
 impl PartialEq for Value {
     fn eq(&self, other: &Self) -> bool {
         self.cmp(other) == Ordering::Equal
@@ -326,5 +440,51 @@ mod tests {
         let a = Value::pair(Value::I64(42), Value::F64(0.5));
         let b = Value::pair(Value::I64(42), Value::str("other"));
         assert_eq!(a.key_hash(), b.key_hash());
+    }
+
+    #[test]
+    fn raw_key_hashes_match_value_key_hash() {
+        for k in [-3i64, 0, 1, 42, i64::MAX, i64::MIN] {
+            assert_eq!(i64_key_hash(k), Value::I64(k).key_hash(), "{k}");
+            assert_eq!(
+                i64_key_hash(k),
+                Value::pair(Value::I64(k), Value::str("p")).key_hash(),
+                "pair key {k}"
+            );
+        }
+        for f in [0.0f64, -0.0, 1.5, f64::NAN, f64::INFINITY] {
+            assert_eq!(f64_key_hash(f), Value::F64(f).key_hash());
+        }
+    }
+
+    #[test]
+    fn elem_type_join_is_a_lattice() {
+        use ElemType::*;
+        assert_eq!(I64.join(&I64), I64);
+        assert_eq!(I64.join(&F64), Dyn);
+        assert_eq!(Dyn.join(&I64), Dyn);
+        let p1 = Pair(Box::new(I64), Box::new(I64));
+        let p2 = Pair(Box::new(I64), Box::new(F64));
+        assert_eq!(p1.join(&p1), p1);
+        assert_eq!(p1.join(&p2), Pair(Box::new(I64), Box::new(Dyn)));
+        assert_eq!(p1.join(&I64), Dyn);
+        assert_eq!(Tuple(vec![I64, Str]).join(&Tuple(vec![I64, Str])), Tuple(vec![I64, Str]));
+        assert_eq!(Tuple(vec![I64]).join(&Tuple(vec![I64, I64])), Dyn);
+    }
+
+    #[test]
+    fn elem_type_of_value_and_display() {
+        let v = Value::pair(Value::I64(1), Value::F64(2.0));
+        let t = ElemType::of_value(&v);
+        assert_eq!(t, ElemType::Pair(Box::new(ElemType::I64), Box::new(ElemType::F64)));
+        assert_eq!(t.to_string(), "pair(i64,f64)");
+        assert!(t.is_typed());
+        assert_eq!(ElemType::of_value(&Value::Unit), ElemType::Dyn);
+        assert!(!ElemType::Pair(Box::new(ElemType::Dyn), Box::new(ElemType::I64)).is_typed());
+        assert_eq!(
+            ElemType::of_value(&Value::tuple(vec![Value::Bool(true), Value::str("s")]))
+                .to_string(),
+            "tuple(bool,str)"
+        );
     }
 }
