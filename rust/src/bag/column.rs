@@ -176,6 +176,40 @@ impl ColumnBatch {
         self.len() == 0
     }
 
+    /// Compact the batch to only the rows `mask` selects, in place and
+    /// order-preserving. This is the single data movement of a masked
+    /// filter→map chain: interior typed filters only clear mask bits
+    /// ([`crate::opt::types::TypedUdf1::filter_mask`]) and interior maps
+    /// skip dead lanes, so survivors are moved exactly once — here, at
+    /// chain emission — instead of once per filter stage.
+    ///
+    /// `mask.len()` must equal `self.len()`.
+    pub fn compact(&mut self, mask: &[bool]) {
+        debug_assert_eq!(mask.len(), self.len(), "mask is row-parallel");
+        fn keep<T>(col: &mut Vec<T>, mask: &[bool]) {
+            let mut r = 0;
+            col.retain(|_| {
+                let k = mask[r];
+                r += 1;
+                k
+            });
+        }
+        match self {
+            ColumnBatch::I64(c) => keep(c, mask),
+            ColumnBatch::F64(c) => keep(c, mask),
+            ColumnBatch::Bool(c) => keep(c, mask),
+            ColumnBatch::PairII { k, v } => {
+                keep(k, mask);
+                keep(v, mask);
+            }
+            ColumnBatch::PairIF { k, v } => {
+                keep(k, mask);
+                keep(v, mask);
+            }
+            ColumnBatch::Dyn(c) => keep(c, mask),
+        }
+    }
+
     /// Encode back to the dynamic representation, appending to `out`
     /// (consumes the batch; the `Dyn` variant moves without re-allocating
     /// when `out` is empty).
@@ -281,6 +315,34 @@ mod tests {
         assert!(matches!(col, ColumnBatch::Dyn(_)));
         assert_eq!(col.into_values(), vs);
         assert!(ColumnBatch::empty_for(&ElemType::I64).is_empty());
+    }
+
+    #[test]
+    fn compact_with_mask_keeps_parallel_columns_aligned() {
+        let pairs: Vec<Value> = (0..6).map(|x| ii(x, x * 10)).collect();
+        let t = ElemType::Pair(Box::new(ElemType::I64), Box::new(ElemType::I64));
+        let mut col = ColumnBatch::from_values(&pairs, &t).unwrap();
+        col.compact(&[true, false, true, false, false, true]);
+        assert_eq!(col.into_values(), vec![ii(0, 0), ii(2, 20), ii(5, 50)]);
+
+        let mut scalars = ColumnBatch::from_values(
+            &(0..4).map(Value::I64).collect::<Vec<_>>(),
+            &ElemType::I64,
+        )
+        .unwrap();
+        scalars.compact(&[false, true, true, false]);
+        assert_eq!(scalars, ColumnBatch::I64(vec![1, 2]));
+
+        // All-true is a no-op; all-false empties the batch.
+        let mut b = ColumnBatch::Bool(vec![true, false]);
+        b.compact(&[true, true]);
+        assert_eq!(b.len(), 2);
+        b.compact(&[false, false]);
+        assert!(b.is_empty());
+
+        let mut d = ColumnBatch::Dyn(vec![Value::str("a"), Value::str("b")]);
+        d.compact(&[false, true]);
+        assert_eq!(d.into_values(), vec![Value::str("b")]);
     }
 
     #[test]

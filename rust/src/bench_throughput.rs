@@ -160,6 +160,23 @@ fn typed_fused_chain_program() -> Program {
     b.finish()
 }
 
+/// Filter-heavy chain: two typed filters bracketing maps. The selection
+/// bitmap makes this the series where masked execution shows up —
+/// interior filters clear bits instead of compacting, so survivors move
+/// once per batch instead of once per filter stage.
+fn typed_filter_map_program() -> Program {
+    let mut b = ProgramBuilder::new();
+    let v = b.named_source("tp_data");
+    let f1 = b.filter(v, parsed_udf1("|x| x % 2 == 0"));
+    let m1 = b.map(f1, parsed_udf1("|x| x + 100"));
+    let f2 = b.filter(m1, parsed_udf1("|x| x % 3 == 0"));
+    let m2 = b.map(f2, parsed_udf1("|x| x * 2"));
+    let n = b.count(m2);
+    let nb = b.lift_scalar(n);
+    b.collect(nb, "n");
+    b.finish()
+}
+
 fn typed_reduce_by_key_program() -> Program {
     let mut b = ProgramBuilder::new();
     let v = b.named_source("tp_data");
@@ -189,9 +206,10 @@ struct TypedPoint {
 /// plane is >= 1.5x on the fused numeric chain.
 fn typed_kernels_bench(bench: &Bencher, reg: &Arc<Registry>) -> Vec<TypedPoint> {
     use crate::opt::ColumnarGate;
-    let workloads: [(&'static str, Program); 3] = [
+    let workloads: [(&'static str, Program); 4] = [
         ("map", typed_map_program()),
         ("fused-chain", typed_fused_chain_program()),
+        ("filter-map", typed_filter_map_program()),
         ("reduceByKey", typed_reduce_by_key_program()),
     ];
     let mut out = Vec::new();

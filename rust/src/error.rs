@@ -53,6 +53,14 @@ pub enum Error {
     #[error("job deadline exceeded")]
     DeadlineExceeded,
 
+    /// Request shed at admission because the tenant's queued work already
+    /// exceeds its cost budget (`serve::TenantSpec::budget`). Carries a
+    /// retry hint so clients can back off instead of hammering the front
+    /// door. Typed for the same reason as [`Error::Canceled`]: the serve
+    /// metrics classify sheds (`serve.jobs_shed`) without probing text.
+    #[error("overloaded: tenant backlog over budget, retry after {retry_after_ms} ms")]
+    Overloaded { retry_after_ms: u64 },
+
     /// Errors from the baseline executors.
     #[error("baseline error: {0}")]
     Baseline(String),

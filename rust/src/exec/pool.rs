@@ -79,6 +79,42 @@ impl WorkerPool {
         self.ctrl.len()
     }
 
+    /// Resize the pool to `workers` resident threads (min 1).
+    ///
+    /// Grow spawns fresh `laby-pool-{w}` threads; shrink sends `Shutdown`
+    /// to the excess threads and joins them. The caller must only resize
+    /// **between** job epochs — the pool runs one job at a time and every
+    /// thread participates in each epoch, so there is never an in-flight
+    /// job to disturb as long as the owner (a `serve::` lane) resizes
+    /// from its own dispatch loop. Plan width must match `size()` at
+    /// dispatch time (`run_plan_on_pool` checks), which the serve tier
+    /// guarantees by caching one compiled template per worker width.
+    pub fn set_size(&mut self, workers: usize) {
+        let workers = workers.max(1);
+        let cur = self.ctrl.len();
+        if workers > cur {
+            for w in cur..workers {
+                let (tx, rx) = channel::<PoolCmd>();
+                let epochs = self.epochs.clone();
+                self.handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("laby-pool-{w}"))
+                        .spawn(move || pool_main(w, rx, epochs))
+                        .expect("spawn pool worker"),
+                );
+                self.ctrl.push(tx);
+            }
+        } else if workers < cur {
+            for tx in &self.ctrl[workers..] {
+                let _ = tx.send(PoolCmd::Shutdown);
+            }
+            self.ctrl.truncate(workers);
+            for h in self.handles.drain(workers..) {
+                let _ = h.join();
+            }
+        }
+    }
+
     /// Total worker epochs completed (each job contributes `size()`).
     pub fn epochs(&self) -> u64 {
         self.epochs.load(Ordering::Relaxed)
@@ -218,6 +254,32 @@ mod tests {
         )
         .unwrap();
         assert_eq!(out.collected("a").len(), 1);
+    }
+
+    #[test]
+    fn pool_grows_and_shrinks_between_epochs() {
+        let mut pool = WorkerPool::new(2);
+        let cfg2 = ExecConfig { workers: 2, ..Default::default() };
+        let p2 = plan("a = bag(1, 2); b = a.map(|x| x * 2); collect(b, \"b\");", 2);
+        assert_eq!(driver::run_plan_on_pool(p2.clone(), &cfg2, &pool).unwrap().collected("b").len(), 2);
+
+        // Grow: new threads join, a wider plan runs on the same pool.
+        pool.set_size(4);
+        assert_eq!(pool.size(), 4);
+        let p4 = plan("a = bag(1, 2); b = a.map(|x| x * 2); collect(b, \"b\");", 4);
+        let cfg4 = ExecConfig { workers: 4, ..Default::default() };
+        assert_eq!(driver::run_plan_on_pool(p4, &cfg4, &pool).unwrap().collected("b").len(), 2);
+
+        // Shrink: excess threads are joined, the narrow plan still runs.
+        pool.set_size(1);
+        assert_eq!(pool.size(), 1);
+        let p1 = plan("a = bag(1, 2); b = a.map(|x| x * 2); collect(b, \"b\");", 1);
+        let cfg1 = ExecConfig { workers: 1, ..Default::default() };
+        assert_eq!(driver::run_plan_on_pool(p1, &cfg1, &pool).unwrap().collected("b").len(), 2);
+
+        // Floor: a resize to zero clamps to one thread.
+        pool.set_size(0);
+        assert_eq!(pool.size(), 1);
     }
 
     #[test]

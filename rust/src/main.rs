@@ -10,7 +10,9 @@
 //! labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]
 //! labyrinth trace <program.laby> [--workers N] [--mode pipelined|barrier]
 //!               [--out trace.json] [--metrics]
-//! labyrinth serve <program.laby> [--workers N] [--slots S] [--requests R]
+//! labyrinth serve <program.laby> [--workers N] [--lanes S | --slots S]
+//!               [--min-workers N] [--max-workers N]
+//!               [--tenants name:weight[:budget],...] [--requests R]
 //!               [--param name=value]... [--no-adaptive] [--metrics]
 //! labyrinth bench-serve [--smoke]
 //! labyrinth bench-throughput [--smoke]
@@ -52,8 +54,12 @@ const VALUE_OPTS: &[&str] = &[
     // Typed columnar data plane (config key opt.columnar): auto|always|never.
     "--columnar",
     // serve / bench-serve: job slots, request count, per-request scalar
-    // parameters (repeatable `--param name=value`).
+    // parameters (repeatable `--param name=value`), and the sharded
+    // elastic tier: `--lanes` (alias for --slots), `--tenants`
+    // name:weight[:budget],... (DRR weights + shed budgets), and the
+    // elastic pool bounds `--min-workers` / `--max-workers`.
     "--slots", "--requests", "--param",
+    "--lanes", "--tenants", "--min-workers", "--max-workers",
     // recovery:: knobs — superstep-boundary checkpoint cadence and a
     // seeded fault-injection plan (overrides LABY_FAULTS).
     "--checkpoint-every", "--faults",
@@ -144,6 +150,26 @@ fn dispatch(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(&opts),
         "bench-serve" => {
             labyrinth::serve::bench::serving_benchmark(opts.has("--smoke"));
+            // Under LABY_TRACE=1 every service in the benchmark recorded
+            // its serve lifecycle (queue → compile → bind → epoch →
+            // reply, pool resizes) into the process-global tracer —
+            // export the timeline for the CI serve-storm artifact.
+            if let Some(tracer) = labyrinth::obs::default_tracer() {
+                let trace = tracer.take();
+                let events = labyrinth::obs::chrome::chrome_events(&trace, None);
+                if let Err(e) = labyrinth::obs::chrome::validate(&events) {
+                    eprintln!("warning: serve trace failed structural validation: {e}");
+                }
+                std::fs::write(
+                    "serve_trace.json",
+                    labyrinth::obs::chrome::render(&events),
+                )?;
+                println!(
+                    "wrote serve_trace.json: {} events ({} dropped)",
+                    events.len(),
+                    trace.dropped
+                );
+            }
             Ok(())
         }
         "bench-throughput" => {
@@ -173,7 +199,9 @@ fn print_usage() {
          \x20 labyrinth compile <program.laby> [--dump ir|ssa|dataflow|dot|opt]\n\
          \x20 labyrinth trace <program.laby> [--workers N] [--mode pipelined|barrier]\n\
          \x20            [--out trace.json] [--metrics]\n\
-         \x20 labyrinth serve <program.laby> [--workers N] [--slots S] [--requests R]\n\
+         \x20 labyrinth serve <program.laby> [--workers N] [--lanes S | --slots S]\n\
+         \x20            [--min-workers N] [--max-workers N]\n\
+         \x20            [--tenants name:weight[:budget],...] [--requests R]\n\
          \x20            [--param name=value]... [--no-adaptive] [--no-share-preambles]\n\
          \x20            [--metrics]\n\
          \x20 labyrinth bench-serve [--smoke]\n\
@@ -482,7 +510,20 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         .ok_or_else(|| labyrinth::Error::Config("expected a <program.laby> path".into()))?;
     let src = std::fs::read_to_string(path)?;
     let workers = cfg.get_usize("cli.workers", cfg.get_usize("serve.workers", 2)?)?;
-    let slots = cfg.get_usize("cli.slots", cfg.get_usize("serve.slots", 2)?)?;
+    // `--lanes` is the sharded-tier name for `--slots` (one shard-
+    // pinnable worker-pool lane each); either spelling works.
+    let slots = cfg.get_usize(
+        "cli.lanes",
+        cfg.get_usize("cli.slots", cfg.get_usize("serve.slots", 2)?)?,
+    )?;
+    let min_workers =
+        cfg.get_usize("cli.min-workers", cfg.get_usize("serve.min_workers", 0)?)?;
+    let max_workers =
+        cfg.get_usize("cli.max-workers", cfg.get_usize("serve.max_workers", 0)?)?;
+    let tenants = match cfg.get("cli.tenants").or(cfg.get("serve.tenants")) {
+        Some(spec) => parse_tenants(spec)?,
+        None => Vec::new(),
+    };
     let requests = cfg.get_usize("cli.requests", cfg.get_usize("serve.requests", 8)?)?;
     let io_dir = std::path::PathBuf::from(
         cfg.get("cli.io-dir").or(cfg.get("exec.io_dir")).unwrap_or("."),
@@ -516,6 +557,9 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     let svc = labyrinth::serve::JobService::new(labyrinth::serve::ServeConfig {
         slots,
         workers,
+        min_workers,
+        max_workers,
+        tenants,
         io_dir,
         opt: opt_config(opts, &cfg)?,
         adaptive: !opts.has("--no-adaptive"),
@@ -523,7 +567,15 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         checkpoint_every,
         ..Default::default()
     });
-    println!("serving {path} on {slots} slot(s) x {workers} worker(s), {requests} request(s)");
+    let elastic = if min_workers != 0 || max_workers != 0 {
+        format!(" (elastic {min_workers}..{max_workers})")
+    } else {
+        String::new()
+    };
+    println!(
+        "serving {path} on {slots} lane(s) x {workers} worker(s){elastic}, \
+         {requests} request(s)"
+    );
     for i in 0..requests {
         let mut req = labyrinth::serve::JobRequest::source(src.clone());
         for (k, v) in &params {
@@ -553,6 +605,48 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     // should not hide behind a flag. `--metrics` is still accepted.
     print!("{}", svc.report());
     Ok(())
+}
+
+/// Parse `--tenants name:weight[:budget],...` into
+/// [`labyrinth::serve::TenantSpec`]s —
+/// e.g. `--tenants analytics:1,interactive:8:50000` gives the
+/// interactive tenant 8× the DRR share and sheds its submissions past
+/// 50k queued estimated cost.
+fn parse_tenants(spec: &str) -> Result<Vec<labyrinth::serve::TenantSpec>> {
+    spec.split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|entry| {
+            let mut parts = entry.trim().split(':');
+            let name = parts.next().unwrap_or_default();
+            if name.is_empty() {
+                return Err(labyrinth::Error::Config(format!(
+                    "--tenants entry {entry:?} has no name (want name:weight[:budget])"
+                )));
+            }
+            let weight = match parts.next() {
+                Some(w) => w.parse::<f64>().map_err(|_| {
+                    labyrinth::Error::Config(format!(
+                        "--tenants {entry:?}: weight {w:?} is not a number"
+                    ))
+                })?,
+                None => 1.0,
+            };
+            let budget = match parts.next() {
+                Some(b) => b.parse::<f64>().map_err(|_| {
+                    labyrinth::Error::Config(format!(
+                        "--tenants {entry:?}: budget {b:?} is not a number"
+                    ))
+                })?,
+                None => 0.0,
+            };
+            if parts.next().is_some() {
+                return Err(labyrinth::Error::Config(format!(
+                    "--tenants entry {entry:?} has too many fields (want name:weight[:budget])"
+                )));
+            }
+            Ok(labyrinth::serve::TenantSpec::new(name, weight).budget(budget))
+        })
+        .collect()
 }
 
 fn cmd_generate(opts: &Opts) -> Result<()> {

@@ -83,6 +83,11 @@ pub fn span_label(kind: &SpanKind, graph: Option<&DataflowGraph>) -> (&'static s
         SpanKind::Bind { job } => ("serve", format!("bind job {job}"), vec![("job", job)]),
         SpanKind::JobRun { job } => ("serve", format!("run job {job}"), vec![("job", job)]),
         SpanKind::Request { job } => ("serve", format!("request {job}"), vec![("job", job)]),
+        SpanKind::PoolResize { lane, from, to } => (
+            "serve",
+            format!("lane {lane} pool {from} -> {to} workers"),
+            vec![("lane", lane as u64), ("from", from as u64), ("to", to as u64)],
+        ),
     }
 }
 

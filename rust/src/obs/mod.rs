@@ -91,6 +91,9 @@ pub enum SpanKind {
     JobRun { job: u64 },
     /// serve: whole request, submit → reply.
     Request { job: u64 },
+    /// serve: instant marker — an elastic lane resized its worker pool
+    /// between epochs (`from` → `to` resident threads).
+    PoolResize { lane: u32, from: u32, to: u32 },
 }
 
 /// One recorded span: `dur == 0` marks an instant event.

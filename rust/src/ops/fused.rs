@@ -129,20 +129,40 @@ impl FusedT {
             return false;
         };
         typed_rows.clear();
+        // Selection bitmap: the first filter stage allocates a
+        // row-parallel mask and from then on filters only CLEAR bits
+        // (`filter_mask`) and maps skip dead lanes (`map_batch_masked`)
+        // — zero data movement inside the chain. Survivors are compacted
+        // exactly once, at emission. `selected` tracks the live-row count
+        // (the logical cardinality every stage's row counter reports).
+        let mut mask: Option<Vec<bool>> = None;
+        let mut selected = cols.len();
         for st in &tc.stages {
             match st {
-                TypedStage::Map(u) => match u.map_batch(&cols) {
-                    Some(next) => cols = next,
-                    None => return false,
-                },
+                TypedStage::Map(u) => {
+                    let next = match &mask {
+                        Some(m) => u.map_batch_masked(&cols, m),
+                        None => u.map_batch(&cols),
+                    };
+                    match next {
+                        Some(next) => cols = next,
+                        None => return false,
+                    }
+                }
                 TypedStage::Filter(u) => {
-                    if u.filter_batch(&mut cols).is_none() {
-                        return false;
+                    let m = mask.get_or_insert_with(|| vec![true; cols.len()]);
+                    match u.filter_mask(&cols, m) {
+                        Some(kept) => selected = kept,
+                        None => return false,
                     }
                 }
             }
-            typed_rows.push(cols.len() as u64);
+            typed_rows.push(selected as u64);
         }
+        if let Some(m) = &mask {
+            cols.compact(m);
+        }
+        debug_assert_eq!(cols.len(), selected, "mask compaction matches live count");
         for (i, r) in typed_rows.iter().enumerate() {
             stage_rows[i] += r;
         }
@@ -415,6 +435,43 @@ mod tests {
         let strs = [Value::str("a"), Value::str("b")];
         let got = run_once_chunked(&mut t, &[&strs], 256);
         assert_eq!(got, strs.to_vec(), "mismatched layout falls back, stays correct");
+    }
+
+    #[test]
+    fn masked_multi_filter_chain_compacts_once_and_matches_dynamic() {
+        use crate::opt::types::compile_chain;
+        use crate::value::ElemType;
+        // filter → map → filter → map: the first filter allocates the
+        // selection mask, the interior map runs masked (dead lanes
+        // skipped), the second filter clears more bits, and survivors
+        // are compacted exactly once at emission.
+        let stages = vec![
+            FusedStage::Filter(parsed_udf1("|x| x % 2 == 0")),
+            FusedStage::Map(parsed_udf1("|x| x + 100")),
+            FusedStage::Filter(parsed_udf1("|x| x % 3 == 0")),
+            FusedStage::Map(parsed_udf1("|x| x * 2")),
+        ];
+        let (tstages, _) = compile_chain(&stages, &ElemType::I64).unwrap();
+        let input: Vec<Value> = (0..30).map(i).collect();
+        let dynamic = run_once(&mut FusedT::new(stages.clone()), &[&input]);
+        for chunk in [1usize, 7, 256] {
+            let mut t = FusedT::with_typed(
+                stages.clone(),
+                Some(TypedChain { in_ty: ElemType::I64, stages: tstages.clone() }),
+            );
+            let got = run_once_chunked(&mut t, &[&input], chunk);
+            assert_eq!(got, dynamic, "chunk={chunk}");
+        }
+        // Whole-batch delivery: 30 → 15 even → 15 mapped → 5 divisible
+        // by 3 (even x with x+100 ≡ 0 mod 3) → 5 doubled. Interior
+        // counters see the LIVE row counts, not the padded lane count.
+        let mut t = FusedT::with_typed(
+            stages,
+            Some(TypedChain { in_ty: ElemType::I64, stages: tstages }),
+        );
+        let got = run_once_chunked(&mut t, &[&input], 256);
+        assert_eq!(got.len(), 5);
+        assert_eq!(t.stage_rows(), &[15, 15, 5, 5]);
     }
 
     #[test]

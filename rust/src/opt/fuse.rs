@@ -23,7 +23,9 @@ use crate::frontend::{FusedStage, Rhs};
 /// The fusion pass.
 pub struct FusePass;
 
-fn elementwise(n: &Node) -> bool {
+/// Shared with [`super::xfuse`]: a non-condition node computing a pure
+/// per-element transformation of its single input.
+pub(crate) fn elementwise(n: &Node) -> bool {
     n.cond.is_none()
         && n.inputs.len() == 1
         && matches!(
@@ -34,7 +36,7 @@ fn elementwise(n: &Node) -> bool {
 
 /// The stages a node contributes to a fused chain (already-fused nodes
 /// splice their stages, so repeated rounds stay flat).
-fn stages_of(op: &Rhs) -> Vec<FusedStage> {
+pub(crate) fn stages_of(op: &Rhs) -> Vec<FusedStage> {
     match op {
         Rhs::Map { udf, .. } => vec![FusedStage::Map(udf.clone())],
         Rhs::Filter { udf, .. } => vec![FusedStage::Filter(udf.clone())],
@@ -48,7 +50,7 @@ fn stages_of(op: &Rhs) -> Vec<FusedStage> {
 /// producing each stage's output (parallel to [`stages_of`]). Adaptive
 /// feedback uses it to map observed cardinalities back onto the fresh,
 /// pre-fusion graph on a recompile.
-fn lineage_of(n: &Node) -> Vec<String> {
+pub(crate) fn lineage_of(n: &Node) -> Vec<String> {
     match &n.op {
         Rhs::Map { .. } | Rhs::Filter { .. } | Rhs::FlatMap { .. } => vec![n.name.clone()],
         Rhs::Fused { lineage, .. } => lineage.clone(),

@@ -16,6 +16,13 @@
 //!   parallelism, `Route::Forward`) collapse into one fused physical
 //!   operator ([`crate::ops::fused`]), cutting per-element dispatch and
 //!   per-bag coordination messages on the hot path.
+//! * [`xfuse`] — **cross-loop fusion**: lifted scalar chains (loop
+//!   counters, compound conditions, straight-line scalar code split by
+//!   loops) keep fusing where [`fuse`] must stop — literal-⨯ groups
+//!   collapse to pair-injecting maps, map-only chains fold *into* their
+//!   condition node, and singleton chains merge across dominating
+//!   same-loop-context block boundaries — removing per-iteration bag
+//!   lifecycles from the control path.
 //! * [`dce`] — **dead-operator elimination**: nodes whose outputs reach no
 //!   sink, condition node, or Φ are dropped.
 //! * [`pushdown`] — **predicate pushdown**: a `filter` whose LabyLang
@@ -59,6 +66,7 @@ pub mod hoist;
 pub mod joinside;
 pub mod pushdown;
 pub mod types;
+pub mod xfuse;
 
 pub use delta::DeltaGate;
 pub use types::ColumnarGate;
@@ -260,6 +268,9 @@ pub struct ExplainReport {
     pub fused_chains: usize,
     /// Nodes eliminated by fusion (chain members merged away).
     pub fused_away: usize,
+    /// Cross-loop fusion events ([`xfuse`]): literal-cross folds plus
+    /// chain members merged across block/condition boundaries.
+    pub cross_loop_fusions: usize,
     /// Nodes removed by dead-operator elimination.
     pub dce_removed: usize,
     /// Filters moved below a join / reduceByKey / distinct.
@@ -299,6 +310,7 @@ impl ExplainReport {
             ("opt.hoisted".into(), self.hoisted as u64),
             ("opt.fused_chains".into(), self.fused_chains as u64),
             ("opt.fused_away".into(), self.fused_away as u64),
+            ("opt.cross_loop_fusions".into(), self.cross_loop_fusions as u64),
             ("opt.dce_removed".into(), self.dce_removed as u64),
             ("opt.pushdown_filters".into(), self.pushed_filters as u64),
             ("opt.join_flips".into(), self.join_flips as u64),
@@ -327,6 +339,12 @@ impl ExplainReport {
             self.pushed_filters,
             self.join_flips,
         ));
+        if self.cross_loop_fusions > 0 {
+            s.push_str(&format!(
+                "  xfuse: {} cross-loop scalar fusion(s) (literal folds + boundary merges)\n",
+                self.cross_loop_fusions
+            ));
+        }
         if self.feedback_nodes > 0 {
             s.push_str(&format!(
                 "  adaptive: {} node row estimate(s) pinned to observed runtime cardinalities\n",
@@ -396,6 +414,11 @@ impl PassManager {
         }
         if cfg.fuse {
             passes.push(Box::new(fuse::FusePass));
+            // Cross-loop fusion rides the same gate: it extends fusion
+            // across block/condition boundaries for singleton scalar
+            // chains and relies on the fuse pass collapsing the
+            // same-block segments it exposes (next round).
+            passes.push(Box::new(xfuse::XfusePass));
         }
         if cfg.dce {
             passes.push(Box::new(dce::DcePass));
@@ -468,6 +491,7 @@ impl PassManager {
                         report.fused_chains += out.details.len();
                         report.fused_away += out.changed;
                     }
+                    "xfuse" => report.cross_loop_fusions += out.changed,
                     "dce" => report.dce_removed += out.changed,
                     "pushdown" => report.pushed_filters += out.changed,
                     "joinside" => report.join_flips += out.changed,

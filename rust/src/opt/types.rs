@@ -503,6 +503,127 @@ impl TypedUdf1 {
         }
         Some(w)
     }
+
+    /// Selection-bitmap filter: evaluate the predicate over only the rows
+    /// `mask` still selects, clearing the bits of rows it rejects —
+    /// **no data movement**. Interior filters of a fused typed chain use
+    /// this instead of [`Self::filter_batch`]; survivors are moved once,
+    /// by [`ColumnBatch::compact`] at chain emission, however many filter
+    /// stages the chain holds. Returns the surviving (selected) count;
+    /// `None` when this UDF is not a predicate or the layout mismatches
+    /// (the caller falls back to the dynamic path).
+    ///
+    /// `mask.len()` must equal `batch.len()`.
+    pub fn filter_mask(&self, batch: &ColumnBatch, mask: &mut [bool]) -> Option<usize> {
+        let OutShape::Scalar(ScalarExpr::B(pred)) = &self.shape else {
+            return None;
+        };
+        if !self.layout_matches(batch) {
+            return None;
+        }
+        debug_assert_eq!(mask.len(), batch.len(), "mask is row-parallel");
+        let mut s = Slots::default();
+        let mut kept = 0usize;
+        for (r, m) in mask.iter_mut().enumerate() {
+            if !*m {
+                continue;
+            }
+            load_row(batch, r, &mut s);
+            if pred.eval(&s) {
+                kept += 1;
+            } else {
+                *m = false;
+            }
+        }
+        Some(kept)
+    }
+
+    /// Masked map: evaluate the body only on the rows `mask` selects,
+    /// writing a placeholder (zero/false) into dead lanes so the output
+    /// column stays row-parallel with the mask. Dead lanes are never
+    /// observed — downstream masked stages skip them and
+    /// [`ColumnBatch::compact`] drops them at emission — so the
+    /// placeholder value is irrelevant (it only keeps the lanes
+    /// index-aligned without branching the writer). `None` on layout
+    /// mismatch.
+    pub fn map_batch_masked(
+        &self,
+        input: &ColumnBatch,
+        mask: &[bool],
+    ) -> Option<ColumnBatch> {
+        if !self.layout_matches(input) {
+            return None;
+        }
+        debug_assert_eq!(mask.len(), input.len(), "mask is row-parallel");
+        let n = input.len();
+        let mut s = Slots::default();
+        Some(match &self.shape {
+            OutShape::Scalar(ScalarExpr::I(e)) => {
+                let mut out = Vec::with_capacity(n);
+                for (r, &m) in mask.iter().enumerate() {
+                    out.push(if m {
+                        load_row(input, r, &mut s);
+                        e.eval(&s)
+                    } else {
+                        0
+                    });
+                }
+                ColumnBatch::I64(out)
+            }
+            OutShape::Scalar(ScalarExpr::F(e)) => {
+                let mut out = Vec::with_capacity(n);
+                for (r, &m) in mask.iter().enumerate() {
+                    out.push(if m {
+                        load_row(input, r, &mut s);
+                        e.eval(&s)
+                    } else {
+                        0.0
+                    });
+                }
+                ColumnBatch::F64(out)
+            }
+            OutShape::Scalar(ScalarExpr::B(e)) => {
+                let mut out = Vec::with_capacity(n);
+                for (r, &m) in mask.iter().enumerate() {
+                    out.push(if m {
+                        load_row(input, r, &mut s);
+                        e.eval(&s)
+                    } else {
+                        false
+                    });
+                }
+                ColumnBatch::Bool(out)
+            }
+            OutShape::PairII(ke, ve) => {
+                let (mut k, mut v) = (Vec::with_capacity(n), Vec::with_capacity(n));
+                for (r, &m) in mask.iter().enumerate() {
+                    if m {
+                        load_row(input, r, &mut s);
+                        k.push(ke.eval(&s));
+                        v.push(ve.eval(&s));
+                    } else {
+                        k.push(0);
+                        v.push(0);
+                    }
+                }
+                ColumnBatch::PairII { k, v }
+            }
+            OutShape::PairIF(ke, ve) => {
+                let (mut k, mut v) = (Vec::with_capacity(n), Vec::with_capacity(n));
+                for (r, &m) in mask.iter().enumerate() {
+                    if m {
+                        load_row(input, r, &mut s);
+                        k.push(ke.eval(&s));
+                        v.push(ve.eval(&s));
+                    } else {
+                        k.push(0);
+                        v.push(0.0);
+                    }
+                }
+                ColumnBatch::PairIF { k, v }
+            }
+        })
+    }
 }
 
 /// Fill the parameter slots from row `r` of a decoded batch. The caller
@@ -1074,6 +1195,68 @@ mod tests {
             assert_eq!(kept, want.len(), "{src}");
             assert_eq!(col.into_values(), want, "{src}");
         }
+    }
+
+    #[test]
+    fn filter_mask_agrees_with_compacting_filter() {
+        let ints: Vec<Value> = (-4..8).map(Value::I64).collect();
+        for src in ["|x| x % 2 == 0", "|x| x > 1 && x < 6", "|x| !(x == 3) || x < 0"] {
+            let u = udf1(src);
+            let c = compile_udf1(&u, &ElemType::I64).unwrap_or_else(|| panic!("{src}"));
+            let col = ColumnBatch::from_values(&ints, &ElemType::I64).unwrap();
+            let mut mask = vec![true; col.len()];
+            let kept = c.filter_mask(&col, &mut mask).unwrap();
+            // The batch itself is untouched; only the mask changed.
+            assert_eq!(col.len(), ints.len(), "{src}: no data movement");
+            let mut compacted = col.clone();
+            compacted.compact(&mask);
+            let mut reference = ColumnBatch::from_values(&ints, &ElemType::I64).unwrap();
+            let ref_kept = c.filter_batch(&mut reference).unwrap();
+            assert_eq!(kept, ref_kept, "{src}");
+            assert_eq!(compacted, reference, "{src}");
+        }
+        // A second predicate only narrows: pre-cleared bits stay cleared
+        // and their rows are never evaluated.
+        let even = compile_udf1(&udf1("|x| x % 2 == 0"), &ElemType::I64).unwrap();
+        let small = compile_udf1(&udf1("|x| x < 4"), &ElemType::I64).unwrap();
+        let col =
+            ColumnBatch::from_values(&(0..10).map(Value::I64).collect::<Vec<_>>(), &ElemType::I64)
+                .unwrap();
+        let mut mask = vec![true; 10];
+        assert_eq!(even.filter_mask(&col, &mut mask), Some(5));
+        assert_eq!(small.filter_mask(&col, &mut mask), Some(2));
+        let mut out = col.clone();
+        out.compact(&mask);
+        assert_eq!(out, ColumnBatch::I64(vec![0, 2]));
+        // Non-predicate and layout-mismatch cases bail.
+        let mapper = compile_udf1(&udf1("|x| x + 1"), &ElemType::I64).unwrap();
+        assert!(mapper.filter_mask(&col, &mut mask).is_none());
+        let f64s = ColumnBatch::F64(vec![1.0]);
+        assert!(even.filter_mask(&f64s, &mut [true]).is_none());
+    }
+
+    #[test]
+    fn masked_map_skips_dead_lanes_and_stays_row_parallel() {
+        let ints: Vec<Value> = (0..8).map(Value::I64).collect();
+        let col = ColumnBatch::from_values(&ints, &ElemType::I64).unwrap();
+        let mask: Vec<bool> = (0..8).map(|r| r % 3 != 0).collect();
+        for src in ["|x| x * 2 + 1", "|x| pair(x % 2, x)", "|x| float(x) / 2.0"] {
+            let u = udf1(src);
+            let c = compile_udf1(&u, &ElemType::I64).unwrap_or_else(|| panic!("{src}"));
+            let mut got = c.map_batch_masked(&col, &mask).unwrap();
+            assert_eq!(got.len(), 8, "{src}: row-parallel with the mask");
+            got.compact(&mask);
+            let want: Vec<Value> = ints
+                .iter()
+                .zip(&mask)
+                .filter(|(_, &m)| m)
+                .map(|(v, _)| u.call(v))
+                .collect();
+            assert_eq!(got.into_values(), want, "{src}");
+        }
+        // Layout mismatch bails.
+        let c = compile_udf1(&udf1("|x| x + 1"), &ElemType::I64).unwrap();
+        assert!(c.map_batch_masked(&ColumnBatch::Bool(vec![true]), &[true]).is_none());
     }
 
     #[test]

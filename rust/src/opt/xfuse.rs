@@ -1,0 +1,470 @@
+//! Cross-loop fusion: collapse the per-step overhead of lifted scalar
+//! chains by extending operator fusion ([`super::fuse`]) across the two
+//! boundaries it deliberately refuses — **basic blocks** and **condition
+//! nodes** — plus eliminating the `⨯`-with-a-literal nodes scalar lifting
+//! leaves behind.
+//!
+//! Scalar lifting (`ssa::lift`) turns every binary scalar op into a
+//! *three*-node group: `e = d + 100` becomes `BagLit([100])`, a `Cross`
+//! pairing `d` with it, and a `Map` applying the operator to the pair.
+//! Imperative control flow then fragments the resulting chains: every
+//! `while` splits the surrounding block, compound loop conditions
+//! (`while (d * 2 <= 10)`) feed the condition node through such groups,
+//! and the plain fuse pass — which requires same-block elementwise edges
+//! and never merges into condition nodes — cannot touch any of it. Each
+//! surviving node costs a full bag lifecycle (open, close markers to
+//! every consumer, coordination messages) per loop step — pure §6.3
+//! overhead on the hot control path.
+//!
+//! Three rewrites:
+//!
+//! 0. **Literal-cross elimination**: a singleton `Cross` with a
+//!    one-element [`Rhs::BagLit`] operand becomes a `Map` over the other
+//!    operand whose UDF injects the compile-time constant into the pair
+//!    (`|v| pair(v, c)` / `|v| pair(c, v)`). The literal's value is
+//!    static, so dropping the edge cannot change what any firing reads;
+//!    the orphaned literal is retired here (sole consumer) or by DCE.
+//!    This is what turns lifted scalar groups into plain map chains the
+//!    fuse passes can see.
+//! 1. **Condition folding** (same block): a Map-only singleton chain
+//!    that feeds only the loop's condition node merges into it — the
+//!    condition node's op becomes [`Rhs::Fused`] and keeps its `cond`
+//!    role (the runtime's condition handling keys on `Node::cond`, not
+//!    the op type). Filter/flatMap stages are excluded: the condition
+//!    bag must stay exactly a singleton boolean.
+//! 2. **Cross-block fusion**: a singleton elementwise node `u` whose
+//!    only consumer `v` sits in a *different* block fuses into `v` when
+//!    the move is provably firing-equivalent (below). The merged node
+//!    lives in `v`'s block and reads `u`'s input directly across the
+//!    block boundary.
+//!
+//! **Soundness of the cross-block move.** Fusing `u` into `v` re-targets
+//! the edge `src → u` to `src → v`, so the §6.3.3 bag selection must
+//! agree: for every firing `t` of `v.block`,
+//! `latest_src(t) == latest_src(latest_u(t))`. We require
+//! `u.block` **dominates** `v.block` and both share the **same innermost
+//! loop context** (equal loop membership, hence equal depth). Under this
+//! language's structured CFGs (syntactic `while` nesting — every block
+//! occupies one program-order position, loops are single-entry), two
+//! same-context blocks with `u.block` dominating fire in lockstep within
+//! each context iteration, and `src.block` — which dominates `u.block`
+//! because SSA defs dominate their non-Φ uses — cannot fire between
+//! `u.block`'s firing and `v.block`'s: re-firing `src.block` within the
+//! iteration would need a cycle back through it, i.e. a shared enclosing
+//! loop, whose back edge also re-fires `u.block` first. Elementwise ops
+//! commute with bag selection (`u_i = f(in_i)` bag-by-bag), so reading
+//! `src`'s selected bag and applying the stages in `v.block` yields
+//! exactly the bag `v` read before. Shapes this check rejects — and must:
+//! an if-branch producer feeding a join-block consumer (`u.block` does
+//! not dominate), a loop-body producer read after the loop (exit reads
+//! go through Φs, which are never elementwise), and an entry-block chain
+//! feeding a loop body (contexts differ — fusing would also re-execute
+//! the chain every iteration, a pessimization).
+//!
+//! All three rewrites count into `opt.cross_loop_fusions`
+//! ([`super::ExplainReport::cross_loop_fusions`]). Hoisted nodes never
+//! join a chain: merging one downstream would un-hoist it (and a
+//! condition tail must never carry `hoisted_from` — integrity forbids
+//! it); chains the hoist pass placed in preambles stay put. (Rewrite 0
+//! does fold a *hoisted literal* away — its value is compile-time
+//! constant, so where it fired never mattered.) Delta-annotated nodes
+//! (workset semantics) are excluded throughout.
+
+use super::analysis::PlanAnalysis;
+use super::fuse::{elementwise, lineage_of, stages_of};
+use super::{compact, refresh_edges, Pass, PassOutcome};
+use crate::dataflow::{DataflowGraph, Node, NodeId, Route};
+use crate::error::Result;
+use crate::frontend::{BlockId, FusedStage, Rhs, Udf1};
+use crate::value::Value;
+
+/// The cross-loop fusion pass. Runs right after [`super::fuse::FusePass`]
+/// (same `opt.fuse` gate): rewrite 0 exposes map chains, the fuse pass
+/// collapses their same-block parts on the next round, and rewrites 1–2
+/// merge across the boundaries fuse skips.
+pub struct XfusePass;
+
+/// Map-only op: its output bag always has exactly its input's length, so
+/// a singleton stays a singleton — the condition-node requirement.
+fn map_only(op: &Rhs) -> bool {
+    match op {
+        Rhs::Map { .. } => true,
+        Rhs::Fused { stages, .. } => {
+            stages.iter().all(|s| matches!(s, FusedStage::Map(_)))
+        }
+        _ => false,
+    }
+}
+
+/// Equal loop membership (and therefore equal nesting depth): the blocks
+/// fire the same number of times per enclosing-context iteration.
+fn same_loop_context(a: &PlanAnalysis, b1: BlockId, b2: BlockId) -> bool {
+    a.loops.depth[b1] == a.loops.depth[b2]
+        && a.loops.loops.iter().all(|l| {
+            l.body.binary_search(&b1).is_ok() == l.body.binary_search(&b2).is_ok()
+        })
+}
+
+/// A one-element bag literal whose single `Value` rewrite 0 may bake
+/// into a pair-injecting map UDF.
+fn foldable_literal(n: &Node) -> Option<&Value> {
+    if n.cond.is_some() || n.delta.is_some() {
+        return None;
+    }
+    match &n.op {
+        Rhs::BagLit(items) if items.len() == 1 => Some(&items[0]),
+        _ => None,
+    }
+}
+
+impl Pass for XfusePass {
+    fn name(&self) -> &'static str {
+        "xfuse"
+    }
+
+    fn run(&self, g: &mut DataflowGraph, a: &PlanAnalysis) -> Result<PassOutcome> {
+        let mut out = PassOutcome::default();
+        let n = g.nodes.len();
+        let mut removed = vec![false; n];
+
+        // ---- Rewrite 0: literal-cross elimination. ----
+        // `a` stays valid across these op swaps: consumer lists, blocks,
+        // dominators, and singleton flags are all untouched (a singleton
+        // Cross becomes a singleton Map in the same block with the same
+        // consumers), so rewrites 1–2 below may run in the same pass
+        // invocation and already see the injected maps.
+        for k in 0..n {
+            let (left, right) = match &g.nodes[k].op {
+                Rhs::Cross { left, right } => (*left, *right),
+                _ => continue,
+            };
+            let kn = &g.nodes[k];
+            if !kn.singleton
+                || kn.cond.is_some()
+                || kn.delta.is_some()
+                || kn.inputs.len() != 2
+                || kn.inputs.iter().any(|e| e.route != Route::Forward)
+            {
+                continue;
+            }
+            let (li, ri) = (kn.inputs[0].src, kn.inputs[1].src);
+            // Prefer folding the right operand, so `c ⊕ c` (both sides
+            // the same literal node) keeps its left edge intact.
+            let (lit_id, lit_is_right, keep_var, keep_idx) =
+                if foldable_literal(&g.nodes[ri]).is_some() {
+                    (ri, true, left, 0)
+                } else if foldable_literal(&g.nodes[li]).is_some() {
+                    (li, false, right, 1)
+                } else {
+                    continue;
+                };
+            let c = foldable_literal(&g.nodes[lit_id]).expect("just matched").clone();
+            let udf_name = format!("inject<{}>", g.nodes[lit_id].name);
+            let udf = if lit_is_right {
+                Udf1::new(udf_name, move |v: &Value| Value::pair(v.clone(), c.clone()))
+            } else {
+                Udf1::new(udf_name, move |v: &Value| Value::pair(c.clone(), v.clone()))
+            };
+            out.details.push(format!(
+                "{} (bb{}): literal {} folded out of cross (pair-inject map)",
+                g.nodes[k].name, g.nodes[k].block, g.nodes[lit_id].name
+            ));
+            let keep_edge = g.nodes[k].inputs[keep_idx].clone();
+            let t = &mut g.nodes[k];
+            t.op = Rhs::Map { input: keep_var, udf };
+            t.inputs = vec![keep_edge];
+            out.changed += 1;
+            if a.consumers[lit_id].len() == 1 {
+                removed[lit_id] = true; // this cross was its sole consumer
+            }
+        }
+
+        // ---- Rewrites 1 + 2: chain folding across fuse's boundaries. ----
+        for v_id in 0..n {
+            if removed[v_id] {
+                continue;
+            }
+            let (vb, cond_tail) = {
+                let vn = &g.nodes[v_id];
+                let cond_tail = vn.cond.is_some();
+                let tail_ok = vn.singleton
+                    && vn.delta.is_none()
+                    && vn.hoisted_from.is_none()
+                    && vn.inputs.len() == 1
+                    && if cond_tail {
+                        // Rewrite 1 tail: the condition node itself, when
+                        // its op is map-shaped (a singleton-preserving
+                        // transform the fused chain can legally end in).
+                        map_only(&vn.op)
+                    } else {
+                        elementwise(vn)
+                    };
+                if !tail_ok {
+                    continue;
+                }
+                (vn.block, cond_tail)
+            };
+            // Walk upstream from the tail, collecting mergeable producers
+            // (nearest first). Condition folding takes same-block,
+            // map-only hops (possibly several: rewrite 0 may have just
+            // exposed a whole injected-map chain this same run).
+            // Cross-block fusion may also take several hops (one per
+            // block boundary), each independently proven against the
+            // tail's block.
+            let mut ups: Vec<NodeId> = Vec::new();
+            let mut cur = v_id;
+            loop {
+                let e = &g.nodes[cur].inputs[0];
+                let u = &g.nodes[e.src];
+                if removed[u.id]
+                    || !elementwise(u)
+                    || !u.singleton
+                    || u.hoisted_from.is_some()
+                    || u.delta.is_some()
+                    || a.consumers[u.id].len() != 1
+                    || e.route != Route::Forward
+                {
+                    break;
+                }
+                let hop_ok = if cond_tail {
+                    !e.conditional && map_only(&u.op)
+                } else {
+                    e.conditional
+                        && a.dom.dominates(u.block, vb)
+                        && same_loop_context(a, u.block, vb)
+                };
+                if !hop_ok {
+                    break;
+                }
+                ups.push(u.id);
+                cur = u.id;
+            }
+            if ups.is_empty() {
+                continue;
+            }
+            // Tail replacement, exactly like the fuse pass — except the
+            // tail keeps its own block (the whole point) and NEVER
+            // inherits `hoisted_from` (heads with it are excluded above,
+            // and a condition tail must never carry it).
+            let chain: Vec<NodeId> =
+                ups.iter().rev().copied().chain(std::iter::once(v_id)).collect();
+            let stages: Vec<FusedStage> =
+                chain.iter().flat_map(|&id| stages_of(&g.nodes[id].op)).collect();
+            let lineage: Vec<String> =
+                chain.iter().flat_map(|&id| lineage_of(&g.nodes[id])).collect();
+            debug_assert_eq!(stages.len(), lineage.len());
+            let head_id = chain[0];
+            let input_var = g.nodes[head_id].op.input_vars()[0];
+            let head_inputs = g.nodes[head_id].inputs.clone();
+            out.details.push(format!(
+                "{} ({}, {} stages): {}",
+                g.nodes[v_id].name,
+                if cond_tail { "into cond".to_string() } else { format!("into bb{vb}") },
+                stages.len(),
+                chain
+                    .iter()
+                    .map(|&id| format!("{}@bb{}", g.nodes[id].name, g.nodes[id].block))
+                    .collect::<Vec<_>>()
+                    .join(" -> ")
+            ));
+            let t = &mut g.nodes[v_id];
+            t.op = Rhs::Fused { input: input_var, stages, lineage };
+            t.inputs = head_inputs;
+            for &id in &chain[..chain.len() - 1] {
+                removed[id] = true;
+                out.changed += 1;
+            }
+        }
+
+        if out.changed > 0 {
+            let keep: Vec<bool> = removed.iter().map(|&r| !r).collect();
+            compact(g, &keep);
+            // Moved head edges now terminate in the tail's block:
+            // recompute every edge's src_block/conditional flags.
+            refresh_edges(g);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_lower;
+    use crate::opt::fuse::FusePass;
+    use crate::opt::{verify_integrity, OptConfig};
+
+    /// Model the real pass-manager rounds for the fusion pair: fuse then
+    /// xfuse, fresh analysis before each, until neither changes anything.
+    /// Returns the xfuse outcomes summed.
+    fn xfused(src: &str) -> (DataflowGraph, PassOutcome) {
+        let p = parse_and_lower(src).unwrap();
+        let (mut g, _) = crate::compile_with(&p, &OptConfig::none()).unwrap();
+        let mut total = PassOutcome::default();
+        for _ in 0..4 {
+            let a = PlanAnalysis::compute(&g);
+            let f = FusePass.run(&mut g, &a).unwrap();
+            verify_integrity(&g).unwrap();
+            let a = PlanAnalysis::compute(&g);
+            let x = XfusePass.run(&mut g, &a).unwrap();
+            verify_integrity(&g).unwrap();
+            total.changed += x.changed;
+            total.details.extend(x.details);
+            if f.changed + x.changed == 0 {
+                break;
+            }
+        }
+        (g, total)
+    }
+
+    #[test]
+    fn literal_cross_elimination_removes_scalar_crosses() {
+        let src = "d = 1; e = d + 2; out = bag(7).map(|x| x + e); collect(out, \"out\");";
+        let program = parse_and_lower(src).unwrap();
+        let oracle =
+            crate::baselines::single_thread::run(&program, &Default::default()).unwrap();
+        let (g, out) = xfused(src);
+        assert!(out.changed > 0, "{:?}", out.details);
+        // Every cross here pairs something with a one-element literal
+        // (the lifted `+` and the captured-scalar broadcast of `e`), so
+        // none survive.
+        assert!(
+            !g.nodes.iter().any(|n| matches!(n.op, Rhs::Cross { .. })),
+            "literal crosses eliminated"
+        );
+        let run = crate::exec::run(&g, &crate::exec::ExecConfig::default()).unwrap();
+        assert_eq!(run.collected("out"), oracle.collected("out"));
+    }
+
+    #[test]
+    fn compound_condition_chain_folds_into_cond_node() {
+        let (g, out) = xfused(
+            "d = 1; while (d * 2 <= 10) { d = d + 1; } collect(bag(1), \"x\");",
+        );
+        assert!(out.changed >= 3, "{:?}", out.details);
+        let cond = g
+            .nodes
+            .iter()
+            .find(|n| n.cond.is_some())
+            .expect("condition node survives");
+        let Rhs::Fused { ref stages, .. } = cond.op else {
+            panic!("condition op folded to Fused, got {}", cond.op.mnemonic())
+        };
+        // inject<2>, lift<*>, inject<10>, lift<<=> — the whole lifted
+        // condition expression in one node.
+        assert_eq!(stages.len(), 4, "{}", cond.name);
+        assert!(stages.iter().all(|s| matches!(s, FusedStage::Map(_))));
+        assert!(cond.hoisted_from.is_none(), "cond tail never carries hoisted_from");
+        assert!(cond.singleton);
+        // Its only input is the loop Φ — zero interior chain nodes left.
+        assert!(matches!(g.nodes[cond.inputs[0].src].op, Rhs::Phi(_)));
+    }
+
+    #[test]
+    fn scalar_chain_fuses_across_a_loop_boundary() {
+        // `e` (block after loop 1) feeds only `f` (block after loop 2):
+        // same depth-0 context, e's block dominates f's, edge is
+        // conditional — the canonical straight-line-code-split-by-loops
+        // shape.
+        let (g, out) = xfused(
+            "d = 1; while (d <= 3) { d = d + 1; } \
+             e = d + 100; \
+             w = 1; while (w <= 2) { w = w + 1; } \
+             f = e * 2; \
+             out = bag(0).map(|x| x + f); collect(out, \"out\");",
+        );
+        assert!(
+            out.details.iter().any(|d| d.contains("into bb")),
+            "cross-block fusion fired: {:?}",
+            out.details
+        );
+        // The merged node carries both e's and f's stages, reads the loop
+        // Φ directly, and stays a plain (non-cond) singleton.
+        let fused = g
+            .nodes
+            .iter()
+            .find(|n| match &n.op {
+                Rhs::Fused { lineage, .. } => {
+                    lineage.iter().any(|l| l.starts_with('e'))
+                        && lineage.iter().any(|l| l.starts_with('f'))
+                }
+                _ => false,
+            })
+            .expect("cross-block fused node");
+        assert!(fused.cond.is_none() && fused.singleton);
+        assert!(matches!(g.nodes[fused.inputs[0].src].op, Rhs::Phi(_)));
+    }
+
+    #[test]
+    fn xfused_scalar_program_matches_oracle() {
+        let src = "d = 1; while (d * 3 <= 9) { d = d + 1; } \
+                   e = d + 10; \
+                   w = 1; while (w <= 2) { w = w + 1; } \
+                   f = e * 2; \
+                   out = bag(1, 2).map(|x| x + f); collect(out, \"out\");";
+        let program = parse_and_lower(src).unwrap();
+        let oracle =
+            crate::baselines::single_thread::run(&program, &Default::default()).unwrap();
+        let (g, out) = xfused(src);
+        assert!(out.changed > 0, "premise: xfuse fired");
+        let run = crate::exec::run(&g, &crate::exec::ExecConfig::default()).unwrap();
+        let mut got = run.collected("out").to_vec();
+        let mut want = oracle.collected("out").to_vec();
+        got.sort();
+        want.sort();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn entry_chain_never_fuses_into_a_loop_body() {
+        // `k` (entry block) feeds the body's update chain: merging it
+        // inward would recompute it per iteration AND change contexts —
+        // the same_loop_context gate must reject it. (It may still fuse
+        // with itself inside the entry block.)
+        let (g, _) = xfused(
+            "k = 5 * 3; d = 1; while (d <= 3) { d = d + k; } collect(bag(1), \"x\");",
+        );
+        for n in &g.nodes {
+            if let Rhs::Fused { ref lineage, .. } = n.op {
+                let has_k = lineage.iter().any(|l| l.starts_with('k'));
+                let has_d = lineage.iter().any(|l| l.starts_with('d'));
+                assert!(
+                    !(has_k && has_d),
+                    "entry chain `k` fused into the loop's `d` chain at {}",
+                    n.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn xfuse_is_idempotent() {
+        let src = "d = 1; while (d * 2 <= 10) { d = d + 1; } \
+                   e = d + 1; \
+                   w = 1; while (w <= 2) { w = w + 1; } \
+                   f = e * 2; out = bag(0).map(|x| x + f); collect(out, \"out\");";
+        let (mut g, total) = xfused(src);
+        assert!(total.changed > 0);
+        let a = PlanAnalysis::compute(&g);
+        let again = XfusePass.run(&mut g, &a).unwrap();
+        assert_eq!(again.changed, 0, "{:?}", again.details);
+        let a2 = PlanAnalysis::compute(&g);
+        let fuse_again = FusePass.run(&mut g, &a2).unwrap();
+        assert_eq!(fuse_again.changed, 0, "{:?}", fuse_again.details);
+    }
+
+    #[test]
+    fn default_pipeline_reports_cross_loop_fusions() {
+        let p = parse_and_lower(
+            "d = 1; while (d * 2 <= 10) { d = d + 1; } collect(bag(1), \"x\");",
+        )
+        .unwrap();
+        let (g, rep) = crate::compile_with(&p, &OptConfig::default()).unwrap();
+        assert!(rep.cross_loop_fusions > 0, "{}", rep.render());
+        assert!(g
+            .opt_summary
+            .iter()
+            .any(|(k, v)| k == "opt.cross_loop_fusions" && *v > 0));
+        verify_integrity(&g).unwrap();
+    }
+}

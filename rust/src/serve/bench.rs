@@ -13,13 +13,13 @@
 //! The interesting number is the cold/warm ratio: how much per-job
 //! control-plane cost the template cache and the pool remove together.
 
-use super::{JobRequest, JobService, ServeConfig};
+use super::{JobRequest, JobService, ServeConfig, TenantSpec};
 use crate::bench_harness::{Bencher, Table};
 use crate::exec::{driver, ExecConfig, ExecPlan};
 use crate::value::Value;
 use crate::workload::registry;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 const WORKERS: usize = 2;
 
@@ -190,7 +190,236 @@ pub fn serving_benchmark(smoke: bool) {
 
     registry::global().clear_prefix("fig9_");
 
+    let storm = tenant_storm(smoke);
+    write_bench_json(
+        "BENCH_serve.json",
+        smoke,
+        cold.median(),
+        cached.median(),
+        warm.median(),
+        warm_shared.median(),
+        &storm,
+    );
+    println!("wrote BENCH_serve.json\n");
+
     cancel_storm(smoke);
+}
+
+/// One regime's results from the mixed-tenant storm.
+pub struct RegimeReport {
+    pub regime: &'static str,
+    pub heavy_jobs: usize,
+    pub light_jobs: usize,
+    /// Client-observed light-tenant submit→complete latency percentiles.
+    pub light_p50: Duration,
+    pub light_p99: Duration,
+    /// First heavy submission → last heavy completion.
+    pub heavy_makespan: Duration,
+    pub jobs_shed: u64,
+    pub preamble_hits: u64,
+    /// Widest pool observed across lanes during the storm (elastic
+    /// regimes grow past the starting width under backlog).
+    pub max_pool_width: usize,
+}
+
+/// Nearest-rank percentile over an unsorted latency sample.
+fn percentile(lat: &mut [Duration], q: f64) -> Duration {
+    lat.sort_unstable();
+    if lat.is_empty() {
+        return Duration::ZERO;
+    }
+    let rank = ((q * lat.len() as f64).ceil() as usize).clamp(1, lat.len());
+    lat[rank - 1]
+}
+
+/// Mixed-tenant storm (Fig 9c — ours): two heavy "analytics" affinity
+/// groups keep both lanes under standing backlog while a light
+/// "interactive" client submits cheap jobs and measures client-side
+/// latency. Run twice over identical submission code:
+///
+/// * **fifo-fixed** — no tenants configured (every request bills the
+///   implicit default tenant: per-lane FIFO) and fixed-width pools. The
+///   light client's first jobs queue behind the whole heavy backlog on
+///   their lane.
+/// * **fair-elastic** — DRR tenants (interactive weighted 8× analytics)
+///   plus elastic pools (`min_workers=2`, `max_workers=4`). A light job
+///   waits for at most the heavy job already running, not the backlog.
+///
+/// The headline number is the light-tenant p99 ratio between the two
+/// (acceptance target: >= 3x better under fair admission).
+pub fn tenant_storm(smoke: bool) -> Vec<RegimeReport> {
+    let heavy_iters: u64 = if smoke { 60_000 } else { 400_000 };
+    let heavy_jobs: usize = if smoke { 5 } else { 6 }; // per affinity group
+    let light_jobs: usize = if smoke { 10 } else { 30 };
+    let gap = Duration::from_millis(if smoke { 2 } else { 5 });
+
+    let base = ServeConfig { slots: 2, workers: WORKERS, ..Default::default() };
+    let fifo = ServeConfig { tenants: Vec::new(), ..base.clone() };
+    let fair = ServeConfig {
+        tenants: vec![
+            TenantSpec::new("analytics", 1.0),
+            TenantSpec::new("interactive", 8.0),
+        ],
+        min_workers: 2,
+        max_workers: 4,
+        ..base
+    };
+
+    let mut reports = Vec::new();
+    for (regime, cfg) in [("fifo-fixed", fifo), ("fair-elastic", fair)] {
+        reports.push(storm_regime(regime, cfg, heavy_jobs, light_jobs, heavy_iters, gap));
+    }
+
+    let mut table = Table::new(
+        format!(
+            "Fig 9c: mixed-tenant storm — light-tenant latency \
+             ({} heavy jobs x 2 groups, {light_jobs} light jobs)",
+            heavy_jobs
+        ),
+        "regime",
+        vec!["light p50".into(), "light p99".into(), "heavy makespan".into()],
+    );
+    for r in &reports {
+        table.push_row(
+            r.regime,
+            vec![Some(r.light_p50), Some(r.light_p99), Some(r.heavy_makespan)],
+        );
+    }
+    table.print();
+    if let [fifo, fair] = &reports[..] {
+        let ratio =
+            fifo.light_p99.as_secs_f64() / fair.light_p99.as_secs_f64().max(1e-9);
+        println!(
+            "light-tenant p99 improvement under fair admission: {ratio:.1}x \
+             (acceptance target: >= 3x); fair-regime pools peaked at \
+             {} workers (start {WORKERS}), {} job(s) shed",
+            fair.max_pool_width, fair.jobs_shed
+        );
+    }
+    println!();
+    reports
+}
+
+/// One regime of [`tenant_storm`] — submission code is identical across
+/// regimes; only [`ServeConfig`] differs.
+fn storm_regime(
+    regime: &'static str,
+    cfg: ServeConfig,
+    heavy_jobs: usize,
+    light_jobs: usize,
+    heavy_iters: u64,
+    gap: Duration,
+) -> RegimeReport {
+    // Two DISTINCT heavy programs = two affinity groups: group A pins
+    // the (idle-tie) first lane; the settle sleep leaves A's backlog
+    // queued there, so group B's least-loaded fallback takes the other
+    // lane. Both lanes then hold standing heavy backlog.
+    let heavy_a = format!(
+        "d = 1; while (d <= {heavy_iters}) {{ d = d + 1; }} collect(bag(1), \"a\");"
+    );
+    let heavy_b = format!(
+        "d = 1; while (d <= {}) {{ d = d + 1; }} collect(bag(2), \"b\");",
+        heavy_iters + 1
+    );
+    let light_src =
+        "v = bag(1, 2, 3, 4); s = v.map(|x| x * 2 + 1).filter(|x| x > 0); collect(s, \"l\");";
+
+    let svc = JobService::new(cfg);
+    let t0 = Instant::now();
+    let mut heavy = Vec::with_capacity(heavy_jobs * 2);
+    for _ in 0..heavy_jobs {
+        heavy.push(
+            svc.submit(JobRequest::source(heavy_a.clone()).tenant("analytics")).unwrap(),
+        );
+    }
+    std::thread::sleep(Duration::from_millis(5)); // let lane A start draining
+    for _ in 0..heavy_jobs {
+        heavy.push(
+            svc.submit(JobRequest::source(heavy_b.clone()).tenant("analytics")).unwrap(),
+        );
+    }
+
+    let mut light_lat = Vec::with_capacity(light_jobs);
+    let mut max_pool_width = svc.lane_widths().into_iter().max().unwrap_or(0);
+    for _ in 0..light_jobs {
+        let t = Instant::now();
+        svc.run(JobRequest::source(light_src).tenant("interactive")).unwrap();
+        light_lat.push(t.elapsed());
+        max_pool_width =
+            max_pool_width.max(svc.lane_widths().into_iter().max().unwrap_or(0));
+        std::thread::sleep(gap);
+    }
+    for t in heavy {
+        t.wait().unwrap();
+    }
+    let heavy_makespan = t0.elapsed();
+    let m = svc.metrics();
+    RegimeReport {
+        regime,
+        heavy_jobs: heavy_jobs * 2,
+        light_jobs,
+        light_p50: percentile(&mut light_lat, 0.50),
+        light_p99: percentile(&mut light_lat, 0.99),
+        heavy_makespan,
+        jobs_shed: m.get("serve.jobs_shed"),
+        preamble_hits: m.get("serve.preamble_hits"),
+        max_pool_width,
+    }
+}
+
+/// Hand-rolled `BENCH_serve.json` (same no-serde idiom as
+/// `BENCH_throughput.json`): the control-plane regime medians plus one
+/// entry per storm regime. CI refreshes this file on every main push and
+/// appends the fair-regime light p99 to BENCH_TRAJECTORY.md.
+fn write_bench_json(
+    path: &str,
+    smoke: bool,
+    cold: Duration,
+    cached: Duration,
+    warm: Duration,
+    warm_shared: Duration,
+    storm: &[RegimeReport],
+) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"benchmark\": \"serve\",\n");
+    s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str(&format!("  \"cold_ns\": {},\n", cold.as_nanos()));
+    s.push_str(&format!("  \"cached_ns\": {},\n", cached.as_nanos()));
+    s.push_str(&format!("  \"warm_ns\": {},\n", warm.as_nanos()));
+    s.push_str(&format!("  \"warm_shared_ns\": {},\n", warm_shared.as_nanos()));
+    s.push_str(&format!(
+        "  \"cold_over_warm\": {:.2},\n",
+        cold.as_secs_f64() / warm.as_secs_f64().max(1e-9)
+    ));
+    if let [fifo, fair] = storm {
+        s.push_str(&format!(
+            "  \"light_p99_improvement\": {:.2},\n",
+            fifo.light_p99.as_secs_f64() / fair.light_p99.as_secs_f64().max(1e-9)
+        ));
+    }
+    s.push_str("  \"storm\": [\n");
+    for (i, r) in storm.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"regime\": \"{}\", \"heavy_jobs\": {}, \"light_jobs\": {}, \
+             \"light_p50_ns\": {}, \"light_p99_ns\": {}, \"heavy_makespan_ns\": {}, \
+             \"jobs_shed\": {}, \"preamble_hits\": {}, \"max_pool_width\": {}}}{}\n",
+            r.regime,
+            r.heavy_jobs,
+            r.light_jobs,
+            r.light_p50.as_nanos(),
+            r.light_p99.as_nanos(),
+            r.heavy_makespan.as_nanos(),
+            r.jobs_shed,
+            r.preamble_hits,
+            r.max_pool_width,
+            if i + 1 < storm.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write(path, s) {
+        eprintln!("warning: could not write {path}: {e}");
+    }
 }
 
 /// Cancel-storm stress (CI `serve-smoke`): submit a burst of long-running

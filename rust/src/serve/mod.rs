@@ -32,13 +32,34 @@
 //!   (`serve.preamble_hits`). Signatures match by exact dataset
 //!   identity/content, so any binding or registry content change
 //!   recomputes; a template revision drops the store.
-//! * **Admission queue**: `slots` concurrent lanes pull from a bounded
-//!   FIFO; overflow submissions are rejected immediately; jobs carry
-//!   optional deadlines (enforced while queued AND while running) and
-//!   can be canceled at any point before completion — queued jobs never
-//!   start, and a RUNNING job is aborted cooperatively within about one
-//!   superstep ([`JobTicket::cancel`]), leaving its pool clean for the
-//!   next job.
+//! * **Weighted-fair admission** (multi-tenant): each serve lane runs
+//!   per-tenant queues drained by deficit round-robin — every round a
+//!   tenant's deficit grows by `weight × quantum` and jobs are dequeued
+//!   while the deficit covers their **cost-model-estimated size**
+//!   ([`PlanTemplate::est_cost`]), so a burst of expensive jobs from one
+//!   tenant can no longer starve another tenant's cheap ones. A tenant
+//!   whose queued estimated cost would exceed its `budget` is **shed**
+//!   at the front door ([`crate::Error::Overloaded`] with a retry-after
+//!   hint, counted `serve.jobs_shed`, never `jobs_failed`). With no
+//!   tenants configured the single implicit tenant degenerates to the
+//!   original bounded FIFO. Global overflow past `queue_cap` is still
+//!   rejected immediately; jobs carry optional deadlines (enforced
+//!   while queued AND while running) and can be canceled at any point
+//!   before completion ([`JobTicket::cancel`]).
+//! * **Shard-pinned placement**: the front door routes each request by
+//!   **binding-signature affinity** — (program, bound names) sticks to
+//!   the lane that already holds its materialized preamble bags
+//!   (lane-pinned in the template's preamble store), falling back to
+//!   the least-loaded lane (by queued estimated cost) for new groups —
+//!   so warm state is reused instead of recaptured per lane.
+//! * **Elastic pools**: when `min_workers < max_workers`, each lane
+//!   grows its pool (doubling toward `max_workers`) after sustained
+//!   backlog — observed queue depth plus the `serve.queue_wait` /
+//!   `serve.job_time` histogram ratio — and shrinks (halving toward
+//!   `min_workers`) after consecutive idle ticks. Both directions are
+//!   hysteresis-gated and resize strictly **between** job epochs, so an
+//!   in-flight job never loses workers. Plans are cached per width, so
+//!   a resized lane compiles (once) a template at its new width.
 //! * **Per-request parameter binding**: requests attach named datasets
 //!   and scalar parameters through a [`Registry::overlay`] — the cached
 //!   template is untouched; only the data the sources resolve changes.
@@ -67,7 +88,9 @@ use crate::metrics::Metrics;
 use crate::opt::OptConfig;
 use crate::value::Value;
 use crate::workload::registry::{self, Registry};
+use rustc_hash::FxHashMap;
 use std::collections::VecDeque;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -76,13 +99,77 @@ use std::time::{Duration, Instant};
 
 pub use template::{CacheOutcome, PlanTemplate, TemplateCache, TemplateKey};
 
+/// DRR debit for a job whose program has never been compiled (no
+/// resident template to estimate from): one "typical small job" unit.
+const DEFAULT_JOB_COST: f64 = 1024.0;
+
+/// Estimated-cost quantum credited per unit weight per DRR round. Set to
+/// the default job cost so a weight-1 tenant earns about one typical job
+/// per round.
+const DRR_QUANTUM: f64 = 1024.0;
+
+/// Consecutive dequeues that must observe backlog pressure before a lane
+/// grows its pool (guards against one-off bursts).
+const GROW_HYSTERESIS: u32 = 2;
+
+/// Consecutive idle ticks before a lane shrinks its pool one step.
+const SHRINK_HYSTERESIS: u32 = 2;
+
+/// Idle-wait granularity for elastic lanes (shrink opportunities only
+/// arise this often; non-elastic lanes block indefinitely as before).
+const IDLE_TICK: Duration = Duration::from_millis(25);
+
+/// Bound on the front door's affinity table; overflowing clears it (the
+/// next request per group re-pins, possibly to a different lane).
+const AFFINITY_CAP: usize = 4096;
+
+/// One tenant's admission policy. Configure via [`ServeConfig::tenants`]
+/// and tag requests with [`JobRequest::tenant`]; untagged requests (and
+/// unknown tenant names) fall to the implicit `default` tenant
+/// (weight 1, unlimited budget).
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// Tenant name, matched against [`JobRequest::tenant`].
+    pub name: String,
+    /// Deficit-round-robin weight: relative share of estimated cost
+    /// dequeued per round. Clamped to a small positive floor.
+    pub weight: f64,
+    /// Maximum queued estimated cost before this tenant's submissions
+    /// are shed with [`Error::Overloaded`]. `<= 0` means unlimited.
+    pub budget: f64,
+}
+
+impl TenantSpec {
+    /// A tenant with the given relative weight and no budget cap.
+    pub fn new(name: impl Into<String>, weight: f64) -> TenantSpec {
+        TenantSpec { name: name.into(), weight, budget: 0.0 }
+    }
+
+    /// Set the queued-cost budget past which submissions shed.
+    pub fn budget(mut self, b: f64) -> TenantSpec {
+        self.budget = b;
+        self
+    }
+}
+
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
-    /// Concurrent job slots (one persistent worker pool each).
+    /// Concurrent serve lanes (one persistent worker pool each; the
+    /// front door shard-pins templates to lanes — CLI `--lanes`).
     pub slots: usize,
-    /// Simulated workers per slot (plans are instantiated at this width).
+    /// Simulated workers per lane pool (plans are instantiated at the
+    /// pool's CURRENT width; this is the starting width).
     pub workers: usize,
+    /// Elastic lower bound on a lane pool's width. `0` (default) means
+    /// "fixed at `workers`" — no elasticity.
+    pub min_workers: usize,
+    /// Elastic upper bound on a lane pool's width. `0` (default) means
+    /// "fixed at `workers`" — no elasticity.
+    pub max_workers: usize,
+    /// Multi-tenant admission policy: per-tenant DRR weights and shed
+    /// budgets. Empty (default) = one implicit FIFO tenant.
+    pub tenants: Vec<TenantSpec>,
     /// Maximum queued (not-yet-running) jobs before submissions are
     /// rejected.
     pub queue_cap: usize,
@@ -128,6 +215,9 @@ impl Default for ServeConfig {
         ServeConfig {
             slots: 2,
             workers: 2,
+            min_workers: 0,
+            max_workers: 0,
+            tenants: Vec::new(),
             queue_cap: 256,
             // Inherits the engine default (honors LABY_BATCH, so the
             // batch=1 CI suite covers the serving path too).
@@ -144,6 +234,18 @@ impl Default for ServeConfig {
             checkpoint_every: None,
             max_retries: 2,
         }
+    }
+}
+
+impl ServeConfig {
+    /// Effective elastic pool bounds `(min, max)`, resolving the
+    /// `0 = fixed at workers` sentinels. `min == max` means the pool
+    /// never resizes (the default — identical to the pre-elastic tier).
+    pub fn worker_bounds(&self) -> (usize, usize) {
+        let w = self.workers.max(1);
+        let min = if self.min_workers == 0 { w } else { self.min_workers.max(1) };
+        let max = if self.max_workers == 0 { w } else { self.max_workers.max(1) };
+        (min, max.max(min))
     }
 }
 
@@ -178,6 +280,9 @@ pub struct JobRequest {
     /// testing; see [`crate::exec::FaultPlan`]). `None` falls back to
     /// the process-wide `LABY_FAULTS` plan when that is set.
     pub faults: Option<Arc<crate::exec::FaultPlan>>,
+    /// Tenant this request bills against ([`ServeConfig::tenants`]).
+    /// `None` or an unconfigured name = the implicit default tenant.
+    pub tenant: Option<String>,
 }
 
 impl JobRequest {
@@ -190,6 +295,7 @@ impl JobRequest {
             opt: None,
             deadline: None,
             faults: None,
+            tenant: None,
         }
     }
 
@@ -202,7 +308,17 @@ impl JobRequest {
             opt: None,
             deadline: None,
             faults: None,
+            tenant: None,
         }
+    }
+
+    /// Bill this request against a configured tenant (weighted-fair
+    /// admission + shed budget). Unknown names fall to the default
+    /// tenant rather than erroring, so rollouts can tag requests before
+    /// the service config catches up.
+    pub fn tenant(mut self, name: impl Into<String>) -> JobRequest {
+        self.tenant = Some(name.into());
+        self
     }
 
     /// Bind a named dataset for this request.
@@ -256,6 +372,8 @@ pub struct JobResult {
     pub queued: Duration,
     /// Compile time paid by THIS request (zero on cache hits).
     pub compile: Duration,
+    /// The serve lane that executed the job (shard routing, tests).
+    pub lane: usize,
 }
 
 /// Handle to a submitted job.
@@ -310,10 +428,103 @@ struct Queued {
     deadline: Option<Instant>,
     cancel: Arc<AtomicBool>,
     reply: Sender<Result<JobResult>>,
+    /// Index into `Inner::tenants` (0 = the implicit default tenant).
+    tenant: usize,
+    /// Cost-model-estimated job size — the DRR debit and budget unit.
+    cost: f64,
 }
 
-struct QueueState {
+/// One tenant's per-lane DRR queue.
+struct TenantQueue {
     queue: VecDeque<Queued>,
+    /// DRR deficit: estimated cost this tenant may dequeue right now.
+    deficit: f64,
+    weight: f64,
+}
+
+/// One lane's admission state: per-tenant queues + the DRR cursor.
+struct LaneQueue {
+    tenants: Vec<TenantQueue>,
+    cursor: usize,
+    /// Queued jobs on this lane (all tenants).
+    len: usize,
+    /// Queued estimated cost on this lane — the front door's
+    /// least-loaded routing signal.
+    cost: f64,
+}
+
+impl LaneQueue {
+    fn new(tenants: &[TenantSpec]) -> LaneQueue {
+        LaneQueue {
+            tenants: tenants
+                .iter()
+                .map(|t| TenantQueue {
+                    queue: VecDeque::new(),
+                    deficit: 0.0,
+                    weight: t.weight.max(0.01),
+                })
+                .collect(),
+            cursor: 0,
+            len: 0,
+            cost: 0.0,
+        }
+    }
+
+    fn push(&mut self, tenant: usize, job: Queued) {
+        self.len += 1;
+        self.cost += job.cost;
+        self.tenants[tenant].queue.push_back(job);
+    }
+
+    /// Deficit-round-robin dequeue: starting at the cursor, an empty
+    /// tenant forfeits its deficit; a non-empty tenant whose deficit
+    /// covers its head job's estimated cost pops it (debiting the
+    /// deficit); otherwise the tenant is credited `weight × quantum` and
+    /// the round moves on. With one tenant this is exactly FIFO.
+    /// Terminates: some queue is non-empty and weights are positive, so
+    /// deficits grow every full round until one covers its head job.
+    fn pop(&mut self) -> Option<Queued> {
+        if self.len == 0 {
+            return None;
+        }
+        let nt = self.tenants.len();
+        loop {
+            let i = self.cursor % nt;
+            let t = &mut self.tenants[i];
+            if t.queue.is_empty() {
+                t.deficit = 0.0;
+                self.cursor = (self.cursor + 1) % nt;
+                continue;
+            }
+            let head_cost = t.queue.front().expect("non-empty").cost;
+            if t.deficit >= head_cost {
+                let job = t.queue.pop_front().expect("non-empty");
+                t.deficit -= job.cost;
+                if t.queue.is_empty() {
+                    // An idle tenant must not bank credit (standard DRR).
+                    t.deficit = 0.0;
+                }
+                self.len -= 1;
+                self.cost -= job.cost;
+                return Some(job);
+            }
+            t.deficit += t.weight * DRR_QUANTUM;
+            self.cursor = (self.cursor + 1) % nt;
+        }
+    }
+}
+
+struct ServiceState {
+    lanes: Vec<LaneQueue>,
+    /// Affinity-group key → pinned lane (sticky shard placement).
+    affinity: FxHashMap<u64, usize>,
+    /// Queued estimated cost per tenant, summed across lanes — the shed
+    /// budget is enforced against this.
+    tenant_cost: Vec<f64>,
+    /// Queued jobs per tenant (retry-after hint for sheds).
+    tenant_jobs: Vec<usize>,
+    /// Total queued jobs (global `queue_cap` enforcement).
+    total_len: usize,
     shutdown: bool,
 }
 
@@ -321,11 +532,37 @@ struct Inner {
     cfg: ServeConfig,
     cache: TemplateCache,
     metrics: Arc<Metrics>,
-    state: Mutex<QueueState>,
+    state: Mutex<ServiceState>,
     cv: Condvar,
     next_id: AtomicU64,
     busy: AtomicUsize,
+    /// Tenant 0 is the implicit default; configured tenants follow.
+    tenants: Vec<TenantSpec>,
+    /// Current pool width per lane (lanes publish after each resize).
+    lane_widths: Vec<AtomicUsize>,
     base_registry: Arc<Registry>,
+}
+
+/// The affinity-group key: program identity × the SET of names the
+/// request binds (datasets and params). Values are deliberately NOT
+/// hashed — this is a routing hint, not a correctness check (exact
+/// binding-signature matching in the preamble store stays authoritative)
+/// — so re-submissions of a workload land on the lane holding its warm
+/// state regardless of dataset re-allocation.
+fn affinity_key(program: u64, req: &JobRequest) -> u64 {
+    let mut names: Vec<&str> = req
+        .bindings
+        .iter()
+        .map(|(n, _)| n.as_str())
+        .chain(req.params.iter().map(|(n, _)| n.as_str()))
+        .collect();
+    names.sort_unstable();
+    let mut h = rustc_hash::FxHasher::default();
+    program.hash(&mut h);
+    for n in names {
+        n.hash(&mut h);
+    }
+    h.finish()
 }
 
 /// The resident job service: template cache + persistent worker pools +
@@ -347,13 +584,26 @@ impl JobService {
     /// overlays stack on top of it).
     pub fn with_registry(cfg: ServeConfig, base: Arc<Registry>) -> JobService {
         let slots = cfg.slots.max(1);
+        // Tenant 0 is the implicit default every untagged (or unknown-
+        // tagged) request bills against: weight 1, unlimited budget.
+        let mut tenants = vec![TenantSpec::new("default", 1.0)];
+        tenants.extend(cfg.tenants.iter().cloned());
         let inner = Arc::new(Inner {
             cache: TemplateCache::new(cfg.max_templates),
             metrics: Arc::new(Metrics::new()),
-            state: Mutex::new(QueueState { queue: VecDeque::new(), shutdown: false }),
+            state: Mutex::new(ServiceState {
+                lanes: (0..slots).map(|_| LaneQueue::new(&tenants)).collect(),
+                affinity: FxHashMap::default(),
+                tenant_cost: vec![0.0; tenants.len()],
+                tenant_jobs: vec![0; tenants.len()],
+                total_len: 0,
+                shutdown: false,
+            }),
             cv: Condvar::new(),
             next_id: AtomicU64::new(1),
             busy: AtomicUsize::new(0),
+            tenants,
+            lane_widths: (0..slots).map(|_| AtomicUsize::new(0)).collect(),
             base_registry: base,
             cfg,
         });
@@ -362,7 +612,7 @@ impl JobService {
                 let inner = inner.clone();
                 std::thread::Builder::new()
                     .name(format!("laby-serve-{lane}"))
-                    .spawn(move || lane_main(inner))
+                    .spawn(move || lane_main(inner, lane))
                     .expect("spawn serve lane")
             })
             .collect();
@@ -370,37 +620,97 @@ impl JobService {
     }
 
     /// Enqueue a job; returns immediately with a ticket. Fails fast when
-    /// the admission queue is full or the service is shut down.
+    /// the admission queue is globally full, the tenant's queued
+    /// estimated cost exceeds its shed budget ([`Error::Overloaded`]),
+    /// or the service is shut down.
     pub fn submit(&self, req: JobRequest) -> Result<JobTicket> {
         let inner = &self.inner;
+        // Estimated job size: the resident template's summed row
+        // estimates when this program has been compiled before, a
+        // typical-job default otherwise. Resolved before taking the
+        // state lock (the cache has its own).
+        let program_fp = match &req.spec {
+            JobSpec::Source(src) => template::source_fingerprint(src),
+            JobSpec::Program(p) => frontend::fingerprint(p),
+        };
+        let cost = inner.cache.peek_cost(program_fp).unwrap_or(DEFAULT_JOB_COST);
+        let tenant = req
+            .tenant
+            .as_deref()
+            .and_then(|name| inner.tenants.iter().position(|t| t.name == name))
+            .unwrap_or(0);
+        let akey = affinity_key(program_fp, &req);
+
         let mut st = inner.state.lock().unwrap();
         if st.shutdown {
             return Err(Error::exec("job service is shut down"));
         }
-        if st.queue.len() >= inner.cfg.queue_cap {
+        if st.total_len >= inner.cfg.queue_cap {
             inner.metrics.add("serve.jobs_rejected", 1);
             return Err(Error::exec(format!(
                 "admission queue full ({} jobs queued)",
-                st.queue.len()
+                st.total_len
             )));
         }
+        // Per-tenant overload shedding: queued estimated cost (across
+        // all lanes) past the budget rejects with a retry hint scaled by
+        // the tenant's backlog. Shed ≠ failed: the job never entered the
+        // queue, and the client is told when to come back.
+        let spec = &inner.tenants[tenant];
+        if spec.budget > 0.0 && st.tenant_cost[tenant] + cost > spec.budget {
+            let retry_after_ms = (25 * (st.tenant_jobs[tenant] as u64 + 1)).clamp(10, 2_000);
+            drop(st);
+            inner.metrics.add("serve.jobs_shed", 1);
+            inner.metrics.add(&format!("serve.tenant.{}.shed", spec.name), 1);
+            return Err(Error::Overloaded { retry_after_ms });
+        }
+        // Shard-pinned placement: sticky affinity lane when the group
+        // has one, else the least-loaded lane (queued estimated cost,
+        // ties to the shorter queue) — which the group then pins.
+        let lane = match st.affinity.get(&akey) {
+            Some(&l) if l < st.lanes.len() => l,
+            _ => {
+                let l = st
+                    .lanes
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| {
+                        a.cost.total_cmp(&b.cost).then(a.len.cmp(&b.len))
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                if st.affinity.len() >= AFFINITY_CAP {
+                    st.affinity.clear();
+                }
+                st.affinity.insert(akey, l);
+                l
+            }
+        };
         let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
         let cancel = Arc::new(AtomicBool::new(false));
         let (tx, rx) = channel();
         let deadline = req.deadline.map(|d| Instant::now() + d);
-        st.queue.push_back(Queued {
-            id,
-            req,
-            enqueued: Instant::now(),
-            deadline,
-            cancel: cancel.clone(),
-            reply: tx,
-        });
-        let depth = st.queue.len() as u64;
+        st.lanes[lane].push(
+            tenant,
+            Queued {
+                id,
+                req,
+                enqueued: Instant::now(),
+                deadline,
+                cancel: cancel.clone(),
+                reply: tx,
+                tenant,
+                cost,
+            },
+        );
+        st.tenant_cost[tenant] += cost;
+        st.tenant_jobs[tenant] += 1;
+        st.total_len += 1;
+        let depth = st.total_len as u64;
         drop(st);
         inner.metrics.add("serve.jobs_submitted", 1);
         inner.metrics.counter("serve.queue_depth_max").fetch_max(depth, Ordering::Relaxed);
-        inner.cv.notify_one();
+        inner.cv.notify_all();
         Ok(JobTicket { id, rx, cancel })
     }
 
@@ -414,9 +724,15 @@ impl JobService {
         self.inner.busy.load(Ordering::SeqCst)
     }
 
-    /// Jobs waiting in the admission queue.
+    /// Jobs waiting in the admission queues (all lanes, all tenants).
     pub fn queue_depth(&self) -> usize {
-        self.inner.state.lock().unwrap().queue.len()
+        self.inner.state.lock().unwrap().total_len
+    }
+
+    /// Current worker-pool width per lane (elastic sizing; a `0` means
+    /// that lane has not started yet).
+    pub fn lane_widths(&self) -> Vec<usize> {
+        self.inner.lane_widths.iter().map(|w| w.load(Ordering::SeqCst)).collect()
     }
 
     /// The service's metrics sink (`serve.*` counters; cache counters are
@@ -434,10 +750,17 @@ impl JobService {
     /// Render a service status report (cache, queue, pool counters).
     pub fn report(&self) -> String {
         let m = self.metrics();
+        let (min_w, max_w) = self.inner.cfg.worker_bounds();
+        let widths: Vec<String> =
+            self.lane_widths().iter().map(|w| w.to_string()).collect();
         format!(
-            "== serve status ==\nslots: {} x {} workers, busy {}, queued {}\n{}",
+            "== serve status ==\nlanes: {} (pool widths [{}], bounds {}..{}), \
+             tenants: {}, busy {}, queued {}\n{}",
             self.inner.cfg.slots.max(1),
-            self.inner.cfg.workers,
+            widths.join(", "),
+            min_w,
+            max_w,
+            self.inner.tenants.len(),
             self.busy_slots(),
             self.queue_depth(),
             m.report()
@@ -470,31 +793,132 @@ impl Drop for JobService {
     }
 }
 
-/// One executor lane: owns a persistent worker pool, pulls jobs FIFO.
-fn lane_main(inner: Arc<Inner>) {
-    let pool = WorkerPool::new(inner.cfg.workers);
+/// What a lane's wait loop woke up with.
+enum LaneWork {
+    /// A dequeued job plus the lane backlog left behind it (the elastic
+    /// grow signal, read under the same lock as the pop).
+    Job(Box<Queued>, usize),
+    /// An elastic lane's idle tick (shrink opportunity).
+    Tick,
+    Stop,
+}
+
+/// One executor lane: owns a persistent (elastic) worker pool and pulls
+/// jobs from ITS queue by deficit round-robin across tenants.
+fn lane_main(inner: Arc<Inner>, lane: usize) {
+    let (min_w, max_w) = inner.cfg.worker_bounds();
+    let mut pool = WorkerPool::new(inner.cfg.workers.max(1).clamp(min_w, max_w));
+    inner.lane_widths[lane].store(pool.size(), Ordering::SeqCst);
+    let elastic = min_w < max_w;
+    let mut grow_streak: u32 = 0;
+    let mut idle_streak: u32 = 0;
+    let mut resize_obs_lane: Option<u32> = None;
+    // Publish a pool resize: width gauge, grow/shrink counters, and an
+    // instant span on this lane's timeline when tracing is on.
+    let note_resize = |inner: &Inner, from: usize, to: usize, lane_id: &mut Option<u32>| {
+        inner.lane_widths[lane].store(to, Ordering::SeqCst);
+        inner
+            .metrics
+            .add(if to > from { "serve.pool_grows" } else { "serve.pool_shrinks" }, 1);
+        if let Some(t) = inner.cfg.trace.as_ref().filter(|t| t.on()) {
+            let l = *lane_id
+                .get_or_insert_with(|| t.lane(&format!("serve lane {lane} sizing")));
+            t.push(
+                l,
+                crate::obs::SpanKind::PoolResize {
+                    lane: lane as u32,
+                    from: from as u32,
+                    to: to as u32,
+                },
+                t.now_ns(),
+                0,
+            );
+        }
+    };
     loop {
-        let job = {
+        let work = {
             let mut st = inner.state.lock().unwrap();
             loop {
-                if let Some(j) = st.queue.pop_front() {
-                    break j;
+                if let Some(j) = st.lanes[lane].pop() {
+                    st.total_len -= 1;
+                    st.tenant_cost[j.tenant] = (st.tenant_cost[j.tenant] - j.cost).max(0.0);
+                    st.tenant_jobs[j.tenant] = st.tenant_jobs[j.tenant].saturating_sub(1);
+                    let backlog = st.lanes[lane].len;
+                    break LaneWork::Job(Box::new(j), backlog);
                 }
                 if st.shutdown {
-                    return;
+                    break LaneWork::Stop;
                 }
-                st = inner.cv.wait(st).unwrap();
+                if elastic {
+                    let (guard, timeout) = inner.cv.wait_timeout(st, IDLE_TICK).unwrap();
+                    st = guard;
+                    if timeout.timed_out() {
+                        break LaneWork::Tick;
+                    }
+                } else {
+                    st = inner.cv.wait(st).unwrap();
+                }
             }
         };
-        inner.busy.fetch_add(1, Ordering::SeqCst);
-        execute_one(&inner, &pool, job);
-        inner.busy.fetch_sub(1, Ordering::SeqCst);
+        match work {
+            LaneWork::Stop => return,
+            LaneWork::Tick => {
+                // Idle epoch boundary: nothing in flight, nothing queued.
+                // Shrink one step (halving) after consecutive idle ticks.
+                grow_streak = 0;
+                idle_streak += 1;
+                if idle_streak >= SHRINK_HYSTERESIS && pool.size() > min_w {
+                    let from = pool.size();
+                    let to = (from / 2).max(min_w);
+                    pool.set_size(to);
+                    note_resize(&inner, from, to, &mut resize_obs_lane);
+                    idle_streak = 0;
+                }
+            }
+            LaneWork::Job(job, backlog) => {
+                idle_streak = 0;
+                if elastic && pool.size() < max_w {
+                    // Grow signal: jobs queued behind this one, or queue
+                    // wait dominating service time in the histograms.
+                    let waiting_dominates = || {
+                        match (
+                            inner.metrics.time_stats("serve.queue_wait"),
+                            inner.metrics.time_stats("serve.job_time"),
+                        ) {
+                            (Some(q), Some(j)) => q.p50 > j.p50,
+                            _ => false,
+                        }
+                    };
+                    if backlog >= 2 || (backlog >= 1 && waiting_dominates()) {
+                        grow_streak += 1;
+                    } else {
+                        grow_streak = 0;
+                    }
+                    if grow_streak >= GROW_HYSTERESIS {
+                        let from = pool.size();
+                        let to = (from * 2).min(max_w);
+                        pool.set_size(to);
+                        note_resize(&inner, from, to, &mut resize_obs_lane);
+                        grow_streak = 0;
+                    }
+                }
+                inner.busy.fetch_add(1, Ordering::SeqCst);
+                execute_one(&inner, &pool, lane, *job);
+                inner.busy.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
     }
 }
 
-fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
+fn execute_one(inner: &Inner, pool: &WorkerPool, lane: usize, job: Queued) {
+    // Plans are instantiated at the pool's CURRENT width (elastic lanes
+    // resize between jobs); the width is part of the template key, so
+    // each width compiles at most once.
+    let width = pool.size().max(1);
+    let tenant_name = inner.tenants[job.tenant].name.as_str();
     let queued_for = job.enqueued.elapsed();
     inner.metrics.record_time("serve.queue_wait", queued_for);
+    inner.metrics.add(&format!("serve.lane.{lane}.jobs"), 1);
     // Serve lifecycle spans: a handful per job, recorded straight into
     // the tracer's shared sink on a per-job lane (so concurrent slots
     // never interleave their timelines). The queue span is back-dated to
@@ -546,7 +970,7 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
         },
         opt: template::opt_fingerprint(&opt),
         exec: template::exec_fingerprint(
-            inner.cfg.workers,
+            width,
             inner.cfg.mode,
             inner.cfg.batch,
             inner.cfg.reuse_state,
@@ -562,7 +986,7 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
         key,
         source_text,
         &opt,
-        inner.cfg.workers.max(1),
+        width,
         &overlay,
         inner.cfg.adaptive,
         move || match spec {
@@ -606,7 +1030,7 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
     )> = None;
     if inner.cfg.share_preambles && tpl.has_shareable_preamble() {
         let sig = template::BindingSignature::resolve(&tpl.plan, &overlay);
-        if let Some(bags) = tpl.preamble_for(&sig) {
+        if let Some(bags) = tpl.preamble_for(&sig, lane) {
             inner.metrics.add("serve.preamble_hits", 1);
             preamble = Some(PreambleSharing { replay: Some(bags), capture: None });
         } else {
@@ -618,7 +1042,7 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
 
     // Run the cached plan as one epoch on this lane's warm pool.
     let run_cfg = ExecConfig {
-        workers: inner.cfg.workers.max(1),
+        workers: width,
         mode: inner.cfg.mode,
         batch: inner.cfg.batch,
         reuse_state: inner.cfg.reuse_state,
@@ -664,7 +1088,7 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
             if let Some((sig, sink)) = capture {
                 let entries = std::mem::take(&mut *sink.lock().unwrap());
                 if let Some(bags) = template::assemble_preamble(&tpl.plan, entries) {
-                    tpl.store_preamble(sig, Arc::new(bags));
+                    tpl.store_preamble(sig, lane, Arc::new(bags));
                 }
             }
             // An epoch that crashed and recovered still completes — count
@@ -675,6 +1099,7 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
                 inner.metrics.add("serve.epochs_recovered", retries);
             }
             inner.metrics.add("serve.jobs_completed", 1);
+            inner.metrics.add(&format!("serve.tenant.{tenant_name}.completed"), 1);
             inner.metrics.record_time("serve.job_time", output.elapsed);
             let _ = job.reply.send(Ok(JobResult {
                 output,
@@ -682,6 +1107,7 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
                 revision: tpl.revision,
                 queued: queued_for,
                 compile,
+                lane,
             }));
         }
         Err(e) => {
@@ -700,9 +1126,14 @@ fn execute_one(inner: &Inner, pool: &WorkerPool, job: Queued) {
             let _ = job.reply.send(Err(e));
         }
     }
-    // End-to-end request latency (submit → reply), success or not.
+    // End-to-end request latency (submit → reply), success or not — the
+    // per-tenant series is what the fairness suite and `bench-serve`
+    // tail-latency storm read.
     let total = job.enqueued.elapsed();
     inner.metrics.record_time("serve.request_time", total);
+    inner
+        .metrics
+        .record_time(&format!("serve.tenant.{tenant_name}.request_time"), total);
     if let (Some(t), Some(l)) = (tracer.as_ref(), tlane) {
         let now = t.now_ns();
         let ns = total.as_nanos() as u64;
@@ -785,5 +1216,84 @@ mod tests {
         let ok = svc.run(JobRequest::source("collect(bag(1), \"x\");"));
         assert!(ok.is_ok());
         svc.shutdown();
+    }
+
+    fn dummy_job(tenant: usize, cost: f64, id: u64) -> Queued {
+        let (tx, _rx) = channel();
+        Queued {
+            id,
+            req: JobRequest::source("collect(bag(1), \"x\");"),
+            enqueued: Instant::now(),
+            deadline: None,
+            cancel: Arc::new(AtomicBool::new(false)),
+            reply: tx,
+            tenant,
+            cost,
+        }
+    }
+
+    #[test]
+    fn drr_dequeues_weighted_fair_across_tenants() {
+        let tenants =
+            vec![TenantSpec::new("default", 1.0), TenantSpec::new("light", 3.0)];
+        let mut q = LaneQueue::new(&tenants);
+        for i in 0..6 {
+            q.push(0, dummy_job(0, DEFAULT_JOB_COST, i));
+        }
+        for i in 0..6 {
+            q.push(1, dummy_job(1, DEFAULT_JOB_COST, 100 + i));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|j| j.id).collect();
+        assert_eq!(order.len(), 12, "every queued job dequeues");
+        // Weight 3 vs 1 with equal costs: while both tenants have
+        // backlog, the light tenant dequeues ~3 jobs per heavy one.
+        let light_in_first_8 = order.iter().take(8).filter(|&&id| id >= 100).count();
+        assert!(light_in_first_8 >= 5, "weighted share respected: {order:?}");
+        // Per-tenant order stays FIFO.
+        let light: Vec<u64> = order.iter().copied().filter(|&id| id >= 100).collect();
+        assert_eq!(light, vec![100, 101, 102, 103, 104, 105]);
+    }
+
+    #[test]
+    fn single_tenant_drr_is_fifo() {
+        let mut q = LaneQueue::new(&[TenantSpec::new("default", 1.0)]);
+        for i in 0..5 {
+            // Mixed costs must not reorder a single tenant's queue.
+            q.push(0, dummy_job(0, DEFAULT_JOB_COST * ((i % 3) + 1) as f64, i));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|j| j.id).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn tenant_budget_sheds_with_retry_after_never_failed() {
+        let svc = JobService::new(ServeConfig {
+            slots: 1,
+            tenants: vec![TenantSpec::new("capped", 1.0).budget(1.0)],
+            ..Default::default()
+        });
+        let err = svc
+            .submit(JobRequest::source("collect(bag(1), \"x\");").tenant("capped"))
+            .unwrap_err();
+        match err {
+            Error::Overloaded { retry_after_ms } => assert!(retry_after_ms >= 10),
+            other => panic!("expected Overloaded, got {other}"),
+        }
+        let m = svc.metrics();
+        assert_eq!(m.get("serve.jobs_shed"), 1);
+        assert_eq!(m.get("serve.tenant.capped.shed"), 1);
+        assert_eq!(m.get("serve.jobs_failed"), 0, "shed is not a failure");
+        // The default tenant (unlimited budget) is unaffected.
+        svc.run(JobRequest::source("collect(bag(1), \"x\");")).unwrap();
+    }
+
+    #[test]
+    fn affinity_pins_repeat_submissions_to_one_lane() {
+        let svc = JobService::new(ServeConfig { slots: 2, ..Default::default() });
+        let req = || JobRequest::source("a = bag(1, 2); collect(a, \"a\");");
+        let first = svc.run(req()).unwrap().lane;
+        for _ in 0..3 {
+            assert_eq!(svc.run(req()).unwrap().lane, first, "sticky affinity lane");
+        }
     }
 }

@@ -155,6 +155,10 @@ pub struct PlanTemplate {
     uses: AtomicU64,
     /// Last time a request resolved this template (eviction decay).
     last_used: Mutex<Instant>,
+    /// Estimated total cost of one run of this plan (the cost model's
+    /// summed row estimates) — the admission tier's DRR debit and
+    /// per-tenant budget unit. Never zero.
+    pub est_cost: f64,
     /// Materialized invariant-preamble bags by binding signature
     /// (cross-job sharing). A revision is a NEW `PlanTemplate`; the store
     /// starts empty UNLESS the revised plan's preamble subgraph is
@@ -165,9 +169,14 @@ pub struct PlanTemplate {
 
 #[derive(Default)]
 struct PreambleStore {
-    /// `(signature, bags)` in insertion order — matched by linear scan
-    /// (the bound is tiny) with exact signature comparison.
-    entries: VecDeque<(BindingSignature, Arc<PreambleBags>)>,
+    /// `(signature, lane, bags)` in insertion order — matched by linear
+    /// scan (the bound is tiny) with exact signature comparison.
+    /// Entries are **lane-pinned**: a bag materialized by lane L's pool
+    /// replays only for jobs routed back to lane L (the shard-placement
+    /// model — in a distributed deployment the bags live in that lane's
+    /// worker memory), so the front door's affinity routing is what
+    /// makes warm state reusable.
+    entries: VecDeque<(BindingSignature, usize, Arc<PreambleBags>)>,
 }
 
 /// The resolved inputs a template's shareable preamble reads: each named
@@ -315,28 +324,32 @@ impl PlanTemplate {
     }
 
     /// Materialized preamble bags whose binding signature exactly
-    /// matches, if cached. A hit promotes the entry to most-recent, so
-    /// eviction is LRU: rotating through more than `PREAMBLE_CACHE_CAP`
-    /// distinct bindings cannot starve a steadily-hit one.
-    pub fn preamble_for(&self, sig: &BindingSignature) -> Option<Arc<PreambleBags>> {
+    /// matches AND were captured on `lane` (lane-pinned shard state), if
+    /// cached. A hit promotes the entry to most-recent, so eviction is
+    /// LRU: rotating through more than `PREAMBLE_CACHE_CAP` distinct
+    /// bindings cannot starve a steadily-hit one.
+    pub fn preamble_for(&self, sig: &BindingSignature, lane: usize) -> Option<Arc<PreambleBags>> {
         let mut st = self.preambles.lock().unwrap();
-        let idx = st.entries.iter().position(|(s, _)| s.matches(sig))?;
+        let idx = st.entries.iter().position(|(s, l, _)| *l == lane && s.matches(sig))?;
         let entry = st.entries.remove(idx).expect("matched index is in bounds");
-        let bags = entry.1.clone();
+        let bags = entry.2.clone();
         st.entries.push_back(entry);
         Some(bags)
     }
 
-    /// Store materialized preamble bags under a binding signature
-    /// (bounded at `PREAMBLE_CACHE_CAP` entries, least-recently-matched
-    /// out first; a matching signature is replaced in place).
-    pub fn store_preamble(&self, sig: BindingSignature, bags: Arc<PreambleBags>) {
+    /// Store materialized preamble bags under a binding signature, pinned
+    /// to the lane whose pool materialized them (bounded at
+    /// `PREAMBLE_CACHE_CAP` entries, least-recently-matched out first; a
+    /// matching same-lane signature is replaced in place).
+    pub fn store_preamble(&self, sig: BindingSignature, lane: usize, bags: Arc<PreambleBags>) {
         let mut st = self.preambles.lock().unwrap();
-        if let Some(entry) = st.entries.iter_mut().find(|(s, _)| s.matches(&sig)) {
-            entry.1 = bags;
+        if let Some(entry) =
+            st.entries.iter_mut().find(|(s, l, _)| *l == lane && s.matches(&sig))
+        {
+            entry.2 = bags;
             return;
         }
-        st.entries.push_back((sig, bags));
+        st.entries.push_back((sig, lane, bags));
         if st.entries.len() > PREAMBLE_CACHE_CAP {
             st.entries.pop_front();
         }
@@ -405,7 +418,7 @@ fn carry_preambles(old: &ExecPlan, new: &ExecPlan, store: &PreambleStore) -> Pre
         .map(|n| (n.name.as_str(), n.id))
         .collect();
     let mut out = PreambleStore::default();
-    for (sig, bags) in &store.entries {
+    for (sig, lane, bags) in &store.entries {
         let mut remapped = PreambleBags::default();
         let mut ok = true;
         for (&id, per_inst) in bags.iter() {
@@ -421,10 +434,20 @@ fn carry_preambles(old: &ExecPlan, new: &ExecPlan, store: &PreambleStore) -> Pre
             remapped.insert(nid, per_inst.clone());
         }
         if ok {
-            out.entries.push_back((sig.clone(), Arc::new(remapped)));
+            out.entries.push_back((sig.clone(), *lane, Arc::new(remapped)));
         }
     }
     out
+}
+
+/// The cost model's summed row estimates over a compiled graph — the
+/// admission tier's estimate of "how much work is one run of this
+/// plan". Floored at 1 so DRR debits and budget arithmetic never see a
+/// zero-cost job.
+pub(crate) fn estimated_cost(g: &crate::dataflow::DataflowGraph) -> f64 {
+    let params = crate::opt::cost::CostParams::default();
+    let rows = crate::opt::cost::estimate_rows(g, &params);
+    rows.iter().filter(|r| r.is_finite()).sum::<f64>().max(1.0)
 }
 
 /// Assemble per-instance capture-sink entries into [`PreambleBags`],
@@ -557,6 +580,21 @@ impl TemplateCache {
         self.len() == 0
     }
 
+    /// Estimated run cost of any resident template compiled from the
+    /// program with fingerprint `program` (regardless of opt/exec key
+    /// dimensions — cost estimates differ little across them and the
+    /// admission tier only needs an order of magnitude). `None` when the
+    /// program has never been compiled; the caller then debits a default
+    /// cost. O(cap) scan, off every hot path (one lookup per submit).
+    pub fn peek_cost(&self, program: u64) -> Option<f64> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .map
+            .iter()
+            .find(|(k, _)| k.program == program)
+            .map(|(_, t)| t.est_cost)
+    }
+
     /// Copy the cache counters into a metrics sink (`serve.cache_*`).
     pub fn export(&self, m: &Metrics) {
         m.counter("serve.cache_hits").store(self.hits(), Ordering::Relaxed);
@@ -646,6 +684,7 @@ impl TemplateCache {
             }
             m
         };
+        let est_cost = estimated_cost(&graph);
         let plan = Arc::new(ExecPlan::new(Arc::new(graph), workers));
         let tpl = Arc::new(PlanTemplate {
             key,
@@ -655,6 +694,7 @@ impl TemplateCache {
             plan,
             revision: 0,
             compile_time: t0.elapsed(),
+            est_cost,
             observed: Mutex::new(ObservedStats { latest: None, based_on: Some(baseline) }),
             uses: AtomicU64::new(1),
             last_used: Mutex::new(Instant::now()),
@@ -729,6 +769,7 @@ impl TemplateCache {
                     return None;
                 }
             };
+        let est_cost = estimated_cost(&graph);
         let new_plan = Arc::new(ExecPlan::new(Arc::new(graph), workers));
         // Materialized preamble results survive the revision ONLY when
         // the binding-determined preamble subgraph is structurally
@@ -750,6 +791,7 @@ impl TemplateCache {
             plan: new_plan,
             revision: tpl.revision + 1,
             compile_time: t0.elapsed(),
+            est_cost,
             observed: Mutex::new(ObservedStats { latest: None, based_on: Some(latest) }),
             // Usage history survives the revision (the entry is the same
             // logical template for eviction purposes).
@@ -947,31 +989,34 @@ mod tests {
                 parse_and_lower(SRC)
             })
             .unwrap();
-        assert!(tpl.preamble_for(&sig_of(1)).is_none());
+        assert!(tpl.preamble_for(&sig_of(1), 0).is_none());
         let n_sigs = PREAMBLE_CACHE_CAP as i64 + 3;
         for b in 0..n_sigs {
-            tpl.store_preamble(sig_of(b), Arc::new(PreambleBags::default()));
+            tpl.store_preamble(sig_of(b), 0, Arc::new(PreambleBags::default()));
         }
         assert!(tpl.preamble_entries() <= PREAMBLE_CACHE_CAP, "store stays bounded");
-        assert!(tpl.preamble_for(&sig_of(n_sigs - 1)).is_some(), "latest entry resident");
-        assert!(tpl.preamble_for(&sig_of(0)).is_none(), "oldest entry evicted");
+        assert!(tpl.preamble_for(&sig_of(n_sigs - 1), 0).is_some(), "latest entry resident");
+        assert!(tpl.preamble_for(&sig_of(0), 0).is_none(), "oldest entry evicted");
         // Re-storing a matching signature replaces in place, no growth.
         let before = tpl.preamble_entries();
-        tpl.store_preamble(sig_of(n_sigs - 1), Arc::new(PreambleBags::default()));
+        tpl.store_preamble(sig_of(n_sigs - 1), 0, Arc::new(PreambleBags::default()));
         assert_eq!(tpl.preamble_entries(), before);
         // LRU promotion: matching the oldest resident entry makes it the
         // most recent, so the NEXT insertion evicts its neighbor instead.
         let oldest_resident = n_sigs - PREAMBLE_CACHE_CAP as i64;
-        assert!(tpl.preamble_for(&sig_of(oldest_resident)).is_some());
-        tpl.store_preamble(sig_of(n_sigs), Arc::new(PreambleBags::default()));
+        assert!(tpl.preamble_for(&sig_of(oldest_resident), 0).is_some());
+        tpl.store_preamble(sig_of(n_sigs), 0, Arc::new(PreambleBags::default()));
         assert!(
-            tpl.preamble_for(&sig_of(oldest_resident)).is_some(),
+            tpl.preamble_for(&sig_of(oldest_resident), 0).is_some(),
             "a steadily-hit signature survives rotation"
         );
         assert!(
-            tpl.preamble_for(&sig_of(oldest_resident + 1)).is_none(),
+            tpl.preamble_for(&sig_of(oldest_resident + 1), 0).is_none(),
             "the least-recently-matched entry was the victim"
         );
+        // Lane pinning: an entry captured on lane 0 never replays for a
+        // job routed to lane 1 — shard state does not bleed across lanes.
+        assert!(tpl.preamble_for(&sig_of(n_sigs - 1), 1).is_none(), "lane-pinned entries");
     }
 
     #[test]
@@ -997,13 +1042,13 @@ mod tests {
             .filter(|(_, &s)| s)
             .map(|(id, _)| (id, vec![Vec::new(); plan_a.num_insts[id]]))
             .collect();
-        store.entries.push_back((sig_of(1), Arc::new(bags)));
+        store.entries.push_back((sig_of(1), 0, Arc::new(bags)));
 
         // Identical structure: the entry is carried, keys land on the
         // same shareable node set.
         let carried = carry_preambles(&plan_a, &plan_b, &store);
         assert_eq!(carried.entries.len(), 1, "structurally unchanged plan keeps the store");
-        let (_, carried_bags) = &carried.entries[0];
+        let (_, _, carried_bags) = &carried.entries[0];
         for (id, &s) in plan_b.shareable.iter().enumerate() {
             assert_eq!(s, carried_bags.contains_key(&id), "node {id} remap");
         }

@@ -108,6 +108,46 @@ fn random_typed_programs_agree_on_off_and_with_oracle() {
 }
 
 #[test]
+fn masked_filter_chains_agree_with_dynamic_path() {
+    // Deterministic selection-bitmap case: multiple typed filters fused
+    // with maps, so interior filters run as mask clears and survivors
+    // compact exactly once at emission. Outputs must match the dynamic
+    // path and the oracle at every batch size — including batch=1, where
+    // single-row masks degenerate, and an all-shed batch (every row
+    // filtered) which exercises the empty-after-compact path.
+    let src = r#"
+        v = bag(0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15);
+        a = v.filter(|x| x % 2 == 0).map(|x| x + 100).filter(|x| x % 3 == 0).map(|x| x * 2);
+        collect(a, "kept");
+        none = v.filter(|x| x < 0).map(|x| x * 7);
+        collect(none, "none");
+    "#;
+    let program = parse_and_lower(src).unwrap();
+    let oracle = single_thread::run(&program, &Default::default()).unwrap();
+    let (g_on, rep) =
+        labyrinth::compile_with(&program, &gate_cfg(ColumnarGate::Always)).unwrap();
+    assert!(rep.typed_edges > 0, "premise: the chains must be typed\n{}", rep.render());
+    assert!(hot_edges_all_typed(&g_on), "premise: fully typed hot chains");
+    let (g_off, _) =
+        labyrinth::compile_with(&program, &gate_cfg(ColumnarGate::Never)).unwrap();
+    assert!(!oracle.collected("kept").is_empty());
+    assert!(oracle.collected("none").is_empty());
+    for &batch in BATCH_SIZES {
+        for (graph, mode) in [(&g_on, "columnar-on"), (&g_off, "columnar-off")] {
+            let out = run(graph, &ExecConfig { workers: 2, batch, ..Default::default() })
+                .unwrap_or_else(|e| panic!("{mode} batch={batch}: {e}"));
+            for label in ["kept", "none"] {
+                assert_eq!(
+                    multiset(out.collected(label).to_vec()),
+                    multiset(oracle.collected(label).to_vec()),
+                    "label {label} {mode} batch={batch}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn columnar_state_survives_midloop_panics() {
     for seed in 0..12u64 {
         let (src, _) = random_typed_program(seed);

@@ -199,3 +199,52 @@ fn optimizer_toggle_never_changes_results() {
         }
     }
 }
+
+#[test]
+fn cross_loop_fusion_differential_on_scalar_heavy_program() {
+    // Differential case for the xfuse pass: a deterministic program
+    // whose control path is all lifted scalar chains — a compound loop
+    // condition, a nested loop, and straight-line scalar code split by
+    // the loops — executed with and without the optimizer against the
+    // specification executor. The default pipeline must actually fold
+    // the chains (cross_loop_fusions > 0) and change nothing observable.
+    let src = r#"
+        d = 1;
+        acc = 0;
+        while (d * 2 <= 14) {
+            w = 0;
+            while (w < 2) {
+                acc = acc + d;
+                w = w + 1;
+            }
+            d = d + 1;
+        }
+        e = d + 100;
+        f = e * 2;
+        out = bag(1, 2, 3).map(|x| x * f + acc);
+        collect(out, "out");
+    "#;
+    let program = parse_and_lower(src).unwrap();
+    let oracle = single_thread::run(&program, &Default::default()).unwrap();
+    let (on, report) = labyrinth::compile_with(&program, &OptConfig::default()).unwrap();
+    assert!(
+        report.cross_loop_fusions > 0,
+        "premise: the scalar chains must trigger xfuse\n{}",
+        report.render()
+    );
+    let (off, _) = labyrinth::compile_with(&program, &OptConfig::none()).unwrap();
+    for workers in [1usize, 3] {
+        for mode in [ExecMode::Pipelined, ExecMode::Barrier] {
+            for graph in [&on, &off] {
+                let out =
+                    run(graph, &ExecConfig { workers, mode, ..Default::default() }).unwrap();
+                assert_eq!(
+                    multiset(out.collected("out").to_vec()),
+                    multiset(oracle.collected("out").to_vec()),
+                    "workers {workers} {mode:?}\n{}",
+                    report.render()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,316 @@
+//! The sharded elastic serve tier under mixed-tenant load: weighted-fair
+//! admission (a heavy tenant's burst cannot starve a light tenant),
+//! elastic pool sizing (grow under backlog, shrink when idle, observable
+//! via `lane_widths`), shard-pinned placement (affinity routing keeps
+//! preamble replay hits at the single-lane baseline), and the shed
+//! contract (`Error::Overloaded` counts `serve.jobs_shed`, never
+//! `jobs_failed`), plus cancel + recovery composing per lane under
+//! multi-tenant load.
+
+use labyrinth::exec::FaultPlan;
+use labyrinth::serve::{JobRequest, JobService, ServeConfig, TenantSpec};
+use labyrinth::value::Value;
+use labyrinth::Error;
+use std::time::{Duration, Instant};
+
+/// A CPU-heavy scalar loop: long enough that a backlog of these is the
+/// dominant timescale, short enough for CI.
+fn heavy_src(iters: u64) -> String {
+    format!("d = 1; while (d <= {iters}) {{ d = d + 1; }} collect(bag(1), \"h\");")
+}
+
+const LIGHT_SRC: &str = "v = bag(1, 2, 3); s = v.map(|x| x + 1); collect(s, \"l\");";
+
+/// Weighted-fair admission bounds the light tenant's latency by the jobs
+/// DRR actually schedules ahead of it — NOT by the heavy tenant's whole
+/// backlog. Identical submission sequence against a FIFO service (no
+/// tenants configured) and a fair one; in FIFO the light job completes
+/// strictly last, under DRR it overtakes most of the heavy backlog.
+#[test]
+fn heavy_tenant_cannot_push_light_tenant_past_fairness_bound() {
+    let heavy = heavy_src(120_000);
+    let run_regime = |tenants: Vec<TenantSpec>| -> (Duration, u64) {
+        let fair = !tenants.is_empty();
+        let svc = JobService::new(ServeConfig {
+            slots: 1,
+            workers: 2,
+            tenants,
+            ..Default::default()
+        });
+        // Burst the heavy backlog, THEN submit the light job: every job
+        // is queued before its template compiles, so all DRR debits are
+        // the deterministic default cost.
+        let heavy_tickets: Vec<_> = (0..4)
+            .map(|_| {
+                svc.submit(JobRequest::source(heavy.clone()).tenant("analytics")).unwrap()
+            })
+            .collect();
+        let t0 = Instant::now();
+        let light = svc
+            .submit(JobRequest::source(LIGHT_SRC).tenant("interactive"))
+            .unwrap();
+        light.wait().unwrap();
+        let light_latency = t0.elapsed();
+        // Heavy jobs the lane finished before the light reply (the lane
+        // thread records completions in service order).
+        let heavy_done_first = if fair {
+            svc.metrics().get("serve.tenant.analytics.completed")
+        } else {
+            // No tenants configured: everything bills the implicit
+            // default tenant; subtract the light job itself.
+            svc.metrics().get("serve.jobs_completed").saturating_sub(1)
+        };
+        for t in heavy_tickets {
+            t.wait().unwrap();
+        }
+        (light_latency, heavy_done_first)
+    };
+
+    let (fifo_latency, fifo_ahead) = run_regime(Vec::new());
+    let (fair_latency, fair_ahead) = run_regime(vec![
+        TenantSpec::new("analytics", 1.0),
+        TenantSpec::new("interactive", 8.0),
+    ]);
+
+    // FIFO: the light job waited out the entire heavy backlog.
+    assert_eq!(fifo_ahead, 4, "FIFO must drain every queued heavy job first");
+    // Fair: at most the heavy job already running plus the single job
+    // one DRR round credits ahead of the light tenant's turn.
+    assert!(
+        fair_ahead <= 2,
+        "DRR let {fair_ahead} heavy jobs ahead of the light tenant (bound: 2)"
+    );
+    assert!(
+        fair_latency < fifo_latency,
+        "fair light latency {fair_latency:?} must beat FIFO {fifo_latency:?}"
+    );
+}
+
+/// Elastic lanes double under sustained backlog (up to `max_workers`)
+/// and halve back down after consecutive idle ticks — strictly between
+/// job epochs, observable via [`JobService::lane_widths`] and the
+/// `serve.pool_grows` / `serve.pool_shrinks` counters.
+#[test]
+fn pools_grow_under_backlog_and_shrink_when_idle() {
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 1,
+        min_workers: 1,
+        max_workers: 4,
+        ..Default::default()
+    });
+    // Lanes publish their starting width asynchronously at spawn.
+    let t0 = Instant::now();
+    while svc.lane_widths() != vec![1] {
+        assert!(t0.elapsed() < Duration::from_secs(10), "lane never published width 1");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let src = heavy_src(40_000);
+    let tickets: Vec<_> = (0..8)
+        .map(|_| svc.submit(JobRequest::source(src.clone())).unwrap())
+        .collect();
+    let mut max_width = 1;
+    for t in tickets {
+        t.wait().unwrap();
+        max_width = max_width.max(svc.lane_widths()[0]);
+    }
+    assert!(
+        max_width >= 2,
+        "sustained 8-job backlog must grow the pool past 1 (saw {max_width})"
+    );
+    assert!(svc.metrics().get("serve.pool_grows") >= 1);
+
+    // Idle: consecutive 25ms ticks halve the pool back to min_workers.
+    let t0 = Instant::now();
+    while svc.lane_widths()[0] > 1 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "pool never shrank back to min_workers (width {})",
+            svc.lane_widths()[0]
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(svc.metrics().get("serve.pool_shrinks") >= 1);
+    // The resized lane still serves correctly.
+    let ok = svc.run(JobRequest::source("collect(bag(7), \"z\");")).unwrap();
+    assert_eq!(ok.output.collected("z"), &[Value::I64(7)]);
+}
+
+/// Loop with an invariant (hoistable, binding-determined) lookup chain —
+/// the cross-job preamble-sharing shape from `serve_service.rs`.
+const PREAMBLE_SRC: &str = r#"
+    d = 1;
+    while (d <= 3) {
+        attrs = source("fair_attrs").map(|x| pair(x % 8, x));
+        v = source("fair_probe").map(|x| pair(x % 8, d));
+        j = v.join(attrs);
+        t = j.map(|p| snd(snd(p)));
+        collect(t, "out");
+        d = d + 1;
+    }
+"#;
+
+/// Shard-pinned placement: with multiple lanes, affinity routing sends
+/// repeat submissions of a (program, bound names) group to the lane
+/// holding its materialized preamble bags — so the multi-lane service
+/// replays exactly as often as a single-lane one. (Before shard pinning,
+/// round-robin placement recaptured the bags on every lane.)
+#[test]
+fn shard_routing_keeps_preamble_hits_at_single_lane_baseline() {
+    let attrs: Vec<Value> = (0..8).map(Value::I64).collect();
+    let probe: Vec<Value> = (0..16).map(Value::I64).collect();
+    let reps = 4;
+    let hits_with_slots = |slots: usize| -> (u64, Vec<Value>) {
+        let svc = JobService::new(ServeConfig {
+            slots,
+            workers: 2,
+            adaptive: false, // keep revision 0: revisions drop the store
+            ..Default::default()
+        });
+        let mut last = Vec::new();
+        for _ in 0..reps {
+            let res = svc
+                .run(
+                    JobRequest::source(PREAMBLE_SRC)
+                        .bind("fair_attrs", attrs.clone())
+                        .bind("fair_probe", probe.clone()),
+                )
+                .unwrap();
+            last = res.output.collected("out").to_vec();
+            last.sort();
+        }
+        (svc.metrics().get("serve.preamble_hits"), last)
+    };
+    let (single, out_single) = hits_with_slots(1);
+    let (sharded, out_sharded) = hits_with_slots(2);
+    assert_eq!(single, reps - 1, "single lane replays every repeat");
+    assert!(
+        sharded >= single,
+        "shard routing must keep preamble hits at the single-lane \
+         baseline (sharded {sharded} < single {single})"
+    );
+    assert_eq!(out_sharded, out_single, "placement must never change results");
+    assert!(!out_single.is_empty());
+}
+
+/// A tenant over its queued-cost budget is shed at the front door:
+/// typed [`Error::Overloaded`] with a retry hint, counted under
+/// `serve.jobs_shed` (and the per-tenant counter) — never `jobs_failed`,
+/// and never entering the queue.
+#[test]
+fn shed_requests_count_jobs_shed_never_jobs_failed() {
+    let svc = JobService::new(ServeConfig {
+        slots: 1,
+        workers: 2,
+        // Budget covers one default-cost job (1024) but not two.
+        tenants: vec![TenantSpec::new("capped", 1.0).budget(1500.0)],
+        ..Default::default()
+    });
+    // Occupy the lane so the capped tenant's backlog stays queued (the
+    // budget is enforced against QUEUED cost, which drops at dequeue).
+    let blocker = svc.submit(JobRequest::source(heavy_src(150_000))).unwrap();
+    let t0 = Instant::now();
+    while svc.busy_slots() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "blocker never started");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let admitted = svc
+        .submit(JobRequest::source(LIGHT_SRC).tenant("capped"))
+        .expect("first capped job fits the budget");
+    let err = svc
+        .submit(JobRequest::source(LIGHT_SRC).tenant("capped"))
+        .expect_err("second capped job must shed");
+    match err {
+        Error::Overloaded { retry_after_ms } => {
+            assert!(retry_after_ms > 0, "shed must carry a retry hint");
+        }
+        other => panic!("expected Error::Overloaded, got: {other}"),
+    }
+    let m = svc.metrics();
+    assert_eq!(m.get("serve.jobs_shed"), 1);
+    assert_eq!(m.get("serve.tenant.capped.shed"), 1);
+    assert_eq!(m.get("serve.jobs_failed"), 0, "shed is not a failure");
+    // The admitted jobs run to completion untouched.
+    admitted.wait().unwrap();
+    blocker.wait().unwrap();
+    assert_eq!(m.get("serve.jobs_failed"), 0);
+    assert_eq!(m.get("serve.jobs_shed"), 1, "draining sheds nothing extra");
+}
+
+/// Cancellation and fault recovery compose per lane under multi-tenant
+/// load: two affinity groups across two lanes, every surviving job
+/// carrying a mid-epoch worker panic recovers (never `jobs_failed`),
+/// canceled jobs abort, and both lanes stay live.
+#[test]
+fn cancel_and_recovery_compose_per_lane() {
+    let svc = JobService::new(ServeConfig {
+        slots: 2,
+        workers: 2,
+        tenants: vec![
+            TenantSpec::new("analytics", 1.0),
+            TenantSpec::new("interactive", 4.0),
+        ],
+        checkpoint_every: Some(1),
+        ..Default::default()
+    });
+    // Two distinct loop programs = two affinity groups; burst group A
+    // first so group B's least-loaded fallback takes the other lane.
+    let src_a = "v = bag(1, 2, 3); d = 1; s = bag(); while (d <= 3) { s = v.map(|x| x + d); d = d + 1; } collect(s, \"out\");";
+    let src_b = "v = bag(4, 5, 6); d = 1; s = bag(); while (d <= 3) { s = v.map(|x| x * d); d = d + 1; } collect(s, \"out\");";
+    let mut tickets = Vec::new();
+    for (src, tenant) in [(src_a, "analytics"), (src_b, "interactive")] {
+        for i in 0..4 {
+            let mut req = JobRequest::source(src).tenant(tenant);
+            if i % 2 == 0 {
+                // Panic worker 1 at superstep 2: mid-epoch, inside the
+                // default retry budget.
+                req = req.faults(FaultPlan::new().panic_at(1, 2));
+            }
+            tickets.push((src, i, svc.submit(req).unwrap()));
+        }
+    }
+    // Cancel one job per group (a faulted one, so cancel and recovery
+    // race on the same lane). A cancel landing after completion is a
+    // no-op, so canceled jobs may legitimately resolve either way.
+    for (_, i, t) in &tickets {
+        if *i == 2 {
+            t.cancel();
+        }
+    }
+    let mut completed = 0;
+    let mut canceled = 0;
+    for (src, i, t) in tickets {
+        match t.wait() {
+            Ok(res) => {
+                completed += 1;
+                let mut got = res.output.collected("out").to_vec();
+                got.sort();
+                let expect: Vec<i64> = if src == src_a {
+                    vec![4, 5, 6] // x + 3 on the final iteration
+                } else {
+                    vec![12, 15, 18] // x * 3 on the final iteration
+                };
+                let expect: Vec<Value> = expect.into_iter().map(Value::I64).collect();
+                assert_eq!(got, expect, "job {i} of {src:?}");
+            }
+            Err(e) => {
+                assert!(
+                    i == 2 && e.to_string().contains("canceled"),
+                    "job {i} failed for a non-cancel reason: {e}"
+                );
+                canceled += 1;
+            }
+        }
+    }
+    assert_eq!(completed + canceled, 8, "every ticket resolves");
+    assert!(canceled <= 2);
+    let m = svc.metrics();
+    assert_eq!(m.get("serve.jobs_failed"), 0, "faulted jobs recover, not fail");
+    assert!(
+        m.get("serve.epochs_recovered") >= 1,
+        "at least one surviving faulted job must have recovered"
+    );
+    // The service survived cancels racing recoveries and is still live.
+    let ok = svc.run(JobRequest::source("collect(bag(1), \"z\");")).unwrap();
+    assert_eq!(ok.output.collected("z"), &[Value::I64(1)]);
+}
